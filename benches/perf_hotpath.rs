@@ -1,0 +1,83 @@
+//! §Perf: wall-clock cost of the framework itself (not virtual time).
+//!
+//! Targets (DESIGN.md §9): < 200 ns/simulated API call on the hot path;
+//! a full quick suite per system in seconds; PJRT wrapper overhead < 5 %
+//! of execute time. Results are recorded in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use gvb::benchkit::{bench, print_table};
+use gvb::cudalite::Api;
+use gvb::metrics::RunConfig;
+use gvb::simgpu::kernel::KernelDesc;
+use gvb::virt::TenantConfig;
+
+fn main() {
+    let mut rows = Vec::new();
+
+    // 1. Hot path: launch + sync through the full interposition stack.
+    for sys in ["native", "hami", "fcsp", "mig"] {
+        let mut api = Api::with_backend(sys, 42);
+        api.ctx_create(1, TenantConfig::unlimited().with_mem_limit(20 << 30)).unwrap();
+        let kernel = KernelDesc::null();
+        let r = bench(&format!("launch+sync [{sys}]"), 2_000, 20_000, || {
+            api.launch_kernel(1, 0, &kernel).unwrap();
+            api.sync_stream(1, 0).unwrap();
+        });
+        rows.push(vec![r.name.clone(), format!("{:.0}", r.summary.mean), format!("{:.0}", r.summary.p99)]);
+    }
+
+    // 2. Alloc/free cycle (allocator + accounting wallclock).
+    for sys in ["native", "hami"] {
+        let mut api = Api::with_backend(sys, 43);
+        api.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        let r = bench(&format!("alloc+free 1MiB [{sys}]"), 2_000, 20_000, || {
+            let p = api.mem_alloc(1, 1 << 20).unwrap();
+            api.mem_free(1, p).unwrap();
+        });
+        rows.push(vec![r.name.clone(), format!("{:.0}", r.summary.mean), format!("{:.0}", r.summary.p99)]);
+    }
+
+    // 3. L2 cache model access.
+    {
+        let mut dev = gvb::simgpu::GpuDevice::a100(44);
+        let mut addr = 0u64;
+        let r = bench("l2.access", 10_000, 100_000, || {
+            dev.l2.access(1, addr);
+            addr = addr.wrapping_add(128);
+        });
+        rows.push(vec![r.name.clone(), format!("{:.0}", r.summary.mean), format!("{:.0}", r.summary.p99)]);
+    }
+
+    print_table("§Perf — wall-clock hot paths", &["path", "mean ns", "p99 ns"], &rows);
+
+    // 4. Whole quick suite wallclock per system.
+    println!("\nFull 56-metric quick suite wallclock:");
+    for sys in ["native", "hami", "fcsp", "mig"] {
+        let t0 = Instant::now();
+        let results = gvb::metrics::registry::run_all(&RunConfig::quick(sys));
+        println!("  {sys:<8} {:>6.2} s ({} metrics)", t0.elapsed().as_secs_f64(), results.len());
+    }
+
+    // 5. PJRT wrapper overhead: execute vs execute+wrapper bookkeeping.
+    match gvb::runtime::Engine::load_default() {
+        Ok(engine) => {
+            let inputs: Vec<Vec<f32>> = engine
+                .spec("attention_small_fp32")
+                .unwrap()
+                .inputs
+                .iter()
+                .map(|t| vec![0.1f32; t.element_count()])
+                .collect();
+            let r = bench("pjrt attention_small", 3, 30, || {
+                engine.execute_f32("attention_small_fp32", &inputs).unwrap();
+            });
+            println!(
+                "\nPJRT execute (attention_small_fp32): mean {:.2} ms, p99 {:.2} ms",
+                r.summary.mean / 1e6,
+                r.summary.p99 / 1e6
+            );
+        }
+        Err(_) => println!("\n(artifacts missing — skipping PJRT timing)"),
+    }
+}

@@ -1,0 +1,40 @@
+//! Regenerates paper Table 5: Isolation Metrics (4 concurrent tenants)
+//! for HAMi and FCSP.
+//!
+//! Paper values: IS-001 98.2/99.1 % · IS-003 85.4/92.7 % · IS-005 Pass ·
+//! IS-008 0.87/0.94 · IS-009 24.3/12.1 % · IS-010 Pass.
+
+use gvb::benchkit::print_table;
+use gvb::metrics::{isolation, MetricResult, RunConfig};
+
+fn fmt(r: &MetricResult) -> String {
+    match r.pass {
+        Some(true) => "Pass".to_string(),
+        Some(false) => "FAIL".to_string(),
+        None => format!("{:.2}", r.value),
+    }
+}
+
+fn main() {
+    let rows_def: [(&str, fn(&RunConfig) -> MetricResult, &str); 6] = [
+        ("IS-001 (Mem Accuracy, %)", isolation::is_001, "98.2 / 99.1"),
+        ("IS-003 (SM Accuracy, %)", isolation::is_003, "85.4 / 92.7"),
+        ("IS-005 (Mem Isolation)", isolation::is_005, "Pass / Pass"),
+        ("IS-008 (Fairness Index)", isolation::is_008, "0.87 / 0.94"),
+        ("IS-009 (Noisy Neighbor, %)", isolation::is_009, "24.3 / 12.1"),
+        ("IS-010 (Fault Isolation)", isolation::is_010, "Pass / Pass"),
+    ];
+    let mut rows = Vec::new();
+    for (name, f, paper) in rows_def {
+        let h = f(&RunConfig::for_system("hami"));
+        let fc = f(&RunConfig::for_system("fcsp"));
+        rows.push(vec![name.to_string(), fmt(&h), fmt(&fc), paper.to_string()]);
+    }
+    print_table(
+        "Table 5 — Isolation Metrics (4 concurrent tenants)",
+        &["Metric", "HAMi", "FCSP", "paper (H/F)"],
+        &rows,
+    );
+    println!("\nKey findings (paper §7.4): both systems achieve memory isolation;");
+    println!("SM utilization control is approximate; FCSP is fairer under contention.");
+}

@@ -1,0 +1,53 @@
+//! Regenerates paper Table 7: Overall Benchmark Scores, running the full
+//! 56-metric suite per system against the spec-derived MIG-Ideal baseline.
+//!
+//! Paper: MIG-Ideal 100 % A+ (by construction) · Native 100 % A+ (ceiling)
+//! · BUD-FCSP 85.2 % B+ · HAMi-core 72.0 % C.
+//!
+//! Presentation matches the paper: MIG-Ideal is the baseline (100 % by
+//! construction); Native is the performance ceiling and is not graded on
+//! isolation (the paper reports it as A+ "true performance ceiling") — we
+//! print both the paper-style row and our fully-scored value.
+
+use gvb::benchkit::print_table;
+use gvb::coordinator::SuiteRunner;
+use gvb::metrics::{Category, RunConfig};
+
+fn main() {
+    let mut runner = SuiteRunner::new(RunConfig::for_system("native"));
+    let mut rows = Vec::new();
+    let mut details = Vec::new();
+    for (sys, paper) in [("mig", "100% A+"), ("native", "100% A+ (ceiling)"), ("fcsp", "85.2% B+"), ("hami", "72.0% C")] {
+        let suite = runner.run(sys);
+        let pct = suite.card.mig_parity_percent();
+        let grade = suite.card.grade().letter().to_string();
+        rows.push(vec![
+            sys.to_string(),
+            format!("{pct:.1}%"),
+            format!("{pct:.1}%"),
+            grade,
+            paper.to_string(),
+        ]);
+        details.push((sys.to_string(), suite));
+    }
+    print_table(
+        "Table 7 — Overall Benchmark Scores (full 56-metric suite)",
+        &["System", "Score", "MIG Parity", "Grade", "paper"],
+        &rows,
+    );
+    println!("\nPer-category breakdown:");
+    print!("{:<18}", "Category (weight)");
+    for (sys, _) in &details {
+        print!("{sys:>8}");
+    }
+    println!();
+    for c in Category::ALL {
+        print!("{:<18}", format!("{} ({:.2})", c.key(), c.weight()));
+        for (_, suite) in &details {
+            print!("{:>8.2}", suite.card.per_category.get(&c).copied().unwrap_or(f64::NAN));
+        }
+        println!();
+    }
+    println!("\nShape check vs paper §8: software reaches 70–85 % of MIG-Ideal;");
+    println!("FCSP > HAMi across isolation and LLM categories; HAMi grades C.");
+}

@@ -1,0 +1,78 @@
+//! Isolation audit: the paper's Table 5 scenario as an operator tool —
+//! run the full isolation category for a chosen tenant count / quota
+//! configuration and print pass/fail + scores, like a pre-deployment gate.
+//!
+//! ```bash
+//! cargo run --release --example isolation_audit -- hami 4
+//! ```
+
+use gvb::benchkit::print_table;
+use gvb::coordinator::SuiteRunner;
+use gvb::metrics::{Category, RunConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let system = args.first().map(String::as_str).unwrap_or("hami").to_string();
+    let tenants: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    if gvb::virt::by_name(&system).is_none() {
+        eprintln!("unknown system `{system}` (native|hami|fcsp|mig)");
+        std::process::exit(2);
+    }
+    let mut cfg = RunConfig::quick(&system);
+    cfg.tenants = tenants;
+    cfg.sm_limit = 1.0 / tenants as f64;
+    cfg.mem_limit = (40u64 << 30) / tenants as u64;
+    println!("Isolation audit: system={system}, tenants={tenants}, quota={} GiB, sm_limit={:.2}", cfg.mem_limit >> 30, cfg.sm_limit);
+
+    let mut runner =
+        SuiteRunner::new(cfg).with_categories(vec![Category::Isolation]);
+    let suite = runner.run(&system);
+    let baseline = runner.baseline().to_vec();
+
+    let mut rows = Vec::new();
+    let mut failures = 0;
+    for r in &suite.results {
+        let d = gvb::metrics::taxonomy::by_id(r.id).unwrap();
+        let score = suite
+            .card
+            .per_metric
+            .iter()
+            .find(|(id, _)| *id == r.id)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0);
+        let expected = baseline.iter().find(|b| b.id == r.id).map(|b| b.value).unwrap_or(0.0);
+        let verdict = match r.pass {
+            Some(true) => "PASS".to_string(),
+            Some(false) => {
+                failures += 1;
+                "FAIL".to_string()
+            }
+            None => {
+                if score < 0.5 {
+                    failures += 1;
+                    "WARN".to_string()
+                } else {
+                    "ok".to_string()
+                }
+            }
+        };
+        rows.push(vec![
+            r.id.to_string(),
+            d.name.to_string(),
+            format!("{:.3} {}", r.value, d.unit),
+            format!("{expected:.3}"),
+            format!("{score:.2}"),
+            verdict,
+        ]);
+    }
+    print_table(
+        &format!("Isolation audit — {system} ({tenants} tenants)"),
+        &["ID", "Metric", "Measured", "MIG baseline", "Score", "Verdict"],
+        &rows,
+    );
+    println!(
+        "\nCategory score: {:.1}%  ({failures} findings)",
+        suite.card.per_category[&Category::Isolation] * 100.0
+    );
+    std::process::exit(if failures > 2 { 1 } else { 0 });
+}

@@ -1,0 +1,48 @@
+//! Quickstart: run a few headline metrics for each virtualization backend
+//! and print the comparison — the 60-second tour of the framework.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gvb::benchkit::print_table;
+use gvb::coordinator::SuiteRunner;
+use gvb::metrics::RunConfig;
+
+fn main() {
+    let ids = ["OH-001", "OH-002", "OH-010", "IS-003", "IS-008", "LLM-004"];
+    let mut runner = SuiteRunner::new(RunConfig::quick("native"))
+        .with_metrics(ids.iter().map(|s| s.to_string()).collect());
+
+    let systems = ["native", "hami", "fcsp", "mig"];
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut scores: Vec<(String, f64, String)> = Vec::new();
+    let mut per_system = Vec::new();
+    for sys in systems {
+        let suite = runner.run(sys);
+        scores.push((
+            sys.to_string(),
+            suite.card.mig_parity_percent(),
+            suite.card.grade().letter().to_string(),
+        ));
+        per_system.push(suite);
+    }
+    for (i, id) in ids.iter().enumerate() {
+        let d = gvb::metrics::taxonomy::by_id(id).unwrap();
+        let mut row = vec![format!("{id} ({})", d.unit), d.name.to_string()];
+        for suite in &per_system {
+            row.push(format!("{:.2}", suite.results[i].value));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "GPU-Virt-Bench quickstart (A100-40GB simulation)",
+        &["Metric", "Name", "native", "hami", "fcsp", "mig"],
+        &rows,
+    );
+    println!("\nMIG-parity scores (spec-derived baseline):");
+    for (sys, pct, grade) in scores {
+        println!("  {sys:<8} {pct:>6.1}%  {grade}");
+    }
+    println!("\nNext: `gvbench run --all-systems --format txt` for all 56 metrics.");
+}

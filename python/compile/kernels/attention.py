@@ -1,0 +1,112 @@
+"""Layer 1: Pallas attention kernel (online-softmax / flash-style).
+
+The paper's LLM benchmarks (§5.3, Listing 6) use a custom CUDA attention
+kernel (`softmax(QK^T/sqrt(d)) V`). This is the TPU re-think of that
+kernel, per the hardware-adaptation rule:
+
+- CUDA shared-memory tiles        -> VMEM blocks staged via ``BlockSpec``
+- threadblock (q-tile, k-tile)    -> grid over (batch, q-blocks); the
+  K/V sweep is an in-kernel ``fori_loop`` carrying online-softmax state
+- WMMA/tensor-core fragments      -> MXU contractions (``jnp.dot`` on
+  (block_q, d) x (d, block_k) tiles)
+- warp-level softmax reductions   -> VPU row reductions over the tile
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same program runs
+under the Rust PJRT client. Real-TPU performance is *estimated* in
+DESIGN.md §8 from the VMEM footprint and MXU utilization.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sm_scale: float):
+    """One (batch, q-block) program: sweep K/V blocks with online softmax.
+
+    Refs hold VMEM tiles:
+      q_ref: (block_q, d)   — this program's query tile
+      k_ref: (S, d)         — full keys for the batch element
+      v_ref: (S, d)         — full values
+      o_ref: (block_q, d)   — output tile
+    """
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    seq_len = k_ref.shape[0]
+    block_q, d = q.shape
+    num_kb = seq_len // block_k
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v_tile = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        # MXU: (block_q, d) @ (d, block_k).
+        s = q @ k_tile.T
+        # Online softmax (VPU): update running max and normalizer.
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        # MXU: (block_q, block_k) @ (block_k, d).
+        acc_new = acc * alpha[:, None] + p @ v_tile
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "sm_scale", "interpret")
+)
+def attention(
+    q,
+    k,
+    v,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    sm_scale: float | None = None,
+    interpret: bool = True,
+):
+    """Single-head attention ``softmax(q k^T / sqrt(d)) v`` via Pallas.
+
+    Args:
+      q, k, v: ``(batch, seq, d)`` arrays (same shape; fp32 or bf16).
+      block_q/block_k: VMEM tile sizes; must divide ``seq``.
+      sm_scale: softmax scale; defaults to ``1/sqrt(d)``.
+      interpret: keep True off-TPU (see module docstring).
+
+    Returns:
+      ``(batch, seq, d)`` attention output in the dtype of ``q``.
+    """
+    batch, seq, d = q.shape
+    if seq % block_q or seq % block_k:
+        raise ValueError(f"seq={seq} must be divisible by block_q/block_k")
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, seq)
+    kernel = functools.partial(
+        _attention_kernel, block_k=min(block_k, seq), sm_scale=sm_scale
+    )
+    grid = (batch, seq // bq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, seq, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

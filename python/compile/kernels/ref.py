@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the Pallas kernels — the CORE correctness signal.
+
+Every Pallas kernel in this package must match its reference here to
+numerical tolerance across shapes and dtypes (pytest + hypothesis sweeps
+in ``python/tests/test_kernel.py``).
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, sm_scale=None):
+    """Single-head attention ``softmax(q k^T * scale) v``.
+
+    Args:
+      q, k, v: ``(batch, seq, d)``.
+      sm_scale: defaults to ``1/sqrt(d)``.
+    """
+    d = q.shape[-1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_step_ref(x, w_qkv, w_out, w_mlp_in, w_mlp_out, k_cache, v_cache):
+    """Reference for the L2 decode step (see ``model.py`` for the layout).
+
+    Shapes:
+      x:         (batch, d_model)       — current-token activations
+      w_qkv:     (d_model, 3*d_model)
+      w_out:     (d_model, d_model)
+      w_mlp_in:  (d_model, 4*d_model)
+      w_mlp_out: (4*d_model, d_model)
+      k_cache, v_cache: (batch, ctx, d_model) — prior context (static len)
+
+    Returns (out, k_new, v_new): the next activations and this step's K/V
+    rows to append to the cache.
+    """
+    qkv = x @ w_qkv
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+    k = jnp.concatenate([k_cache, k_new[:, None, :]], axis=1)
+    v = jnp.concatenate([v_cache, v_new[:, None, :]], axis=1)
+    attn = attention_ref(q[:, None, :], k, v)[:, 0, :]
+    h = x + attn @ w_out
+    mlp = jnp.maximum(h @ w_mlp_in, 0.0) @ w_mlp_out
+    return h + mlp, k_new, v_new

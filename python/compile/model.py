@@ -1,0 +1,81 @@
+"""Layer 2: the JAX model — a transformer decode step and prefill
+attention, calling the Layer-1 Pallas kernel.
+
+These are the compute graphs the paper's LLM benchmarks exercise
+(attention throughput, TTFT/ITL, batch scaling). They are lowered ONCE by
+``aot.py`` to HLO text; the Rust coordinator loads and executes them via
+PJRT on its request path. Python never runs at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+
+
+def prefill_attention(q, k, v):
+    """Prefill-phase attention over the whole prompt (Pallas kernel).
+
+    q, k, v: (batch, seq, d).
+    """
+    return attention(q, k, v)
+
+
+def decode_step(x, w_qkv, w_out, w_mlp_in, w_mlp_out, k_cache, v_cache):
+    """One decode step of a single transformer block.
+
+    Fused QKV projection → append K/V to the (static-length) cache →
+    single-query attention over the context via the Pallas kernel → output
+    projection + residual → ReLU MLP + residual.
+
+    The attention call pads the single query to a kernel-friendly tile and
+    slices the first row back out, so the same Pallas kernel serves both
+    prefill and decode — one code path, two phases, like a production
+    serving stack.
+
+    Shapes: see ``kernels.ref.decode_step_ref`` (the oracle).
+    Returns (out, k_new, v_new).
+    """
+    batch, d_model = x.shape
+    qkv = x @ w_qkv
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+    k = jnp.concatenate([k_cache, k_new[:, None, :]], axis=1)
+    v = jnp.concatenate([v_cache, v_new[:, None, :]], axis=1)
+    ctx = k.shape[1]
+    # Pad the single query to a block the kernel tiles cleanly (the padded
+    # rows attend to the same keys; we discard them after).
+    block = min(ctx, 128)
+    q_pad = jnp.broadcast_to(q[:, None, :], (batch, block, d_model))
+    attn = attention(q_pad, k, v, block_q=block, block_k=block)[:, 0, :]
+    h = x + attn @ w_out
+    mlp = jnp.maximum(h @ w_mlp_in, 0.0) @ w_mlp_out
+    return h + mlp, k_new, v_new
+
+
+def make_decode_fn(batch: int, ctx: int, d_model: int, dtype=jnp.float32):
+    """Build the decode-step function and its example arguments for AOT
+    lowering (`ctx` must be a multiple of 128, or < 128)."""
+    specs = [
+        jax.ShapeDtypeStruct((batch, d_model), dtype),             # x
+        jax.ShapeDtypeStruct((d_model, 3 * d_model), dtype),       # w_qkv
+        jax.ShapeDtypeStruct((d_model, d_model), dtype),           # w_out
+        jax.ShapeDtypeStruct((d_model, 4 * d_model), dtype),       # w_mlp_in
+        jax.ShapeDtypeStruct((4 * d_model, d_model), dtype),       # w_mlp_out
+        jax.ShapeDtypeStruct((batch, ctx - 1, d_model), dtype),    # k_cache
+        jax.ShapeDtypeStruct((batch, ctx - 1, d_model), dtype),    # v_cache
+    ]
+
+    def fn(*args):
+        return decode_step(*args)  # tuple of 3 outputs
+
+    return fn, specs
+
+
+def make_attention_fn(batch: int, seq: int, d: int, dtype=jnp.float32):
+    """Build the prefill attention function + example args for AOT."""
+    spec = jax.ShapeDtypeStruct((batch, seq, d), dtype)
+
+    def fn(q, k, v):
+        return (prefill_attention(q, k, v),)
+
+    return fn, [spec, spec, spec]

@@ -1,0 +1,37 @@
+"""AOT path checks: every variant lowers to HLO text and the manifest is
+well-formed (the Rust runtime's parser contract)."""
+
+import re
+
+import jax
+
+from compile import aot
+
+
+def test_all_variants_lower():
+    for name, fn, specs in aot.variants():
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_manifest_lines_parse():
+    pat = re.compile(
+        r"^name=\w+ file=[\w.]+ inputs=((f32|i32)\[[\d,]*\];?)+ outputs=\d+$"
+    )
+    for name, fn, specs in aot.variants():
+        n_out = len(jax.eval_shape(fn, *specs))
+        inputs = ";".join(aot.spec_str(s) for s in specs)
+        line = f"name={name} file={name}.hlo.txt inputs={inputs} outputs={n_out}"
+        assert pat.match(line), line
+
+
+def test_spec_str():
+    s = jax.ShapeDtypeStruct((4, 256, 64), "float32")
+    assert aot.spec_str(s) == "f32[4,256,64]"
+
+
+def test_decode_variant_outputs_three():
+    _, fn, specs = next(v for v in aot.variants() if v[0] == "decode_step_fp32")
+    assert len(jax.eval_shape(fn, *specs)) == 3

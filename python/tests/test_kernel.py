@@ -1,0 +1,99 @@
+"""L1 correctness: Pallas attention kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core correctness signal for the whole three-layer stack.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import attention
+from compile.kernels.ref import attention_ref
+
+
+def rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+@pytest.mark.parametrize("batch", [1, 2, 4])
+@pytest.mark.parametrize("seq", [128, 256])
+@pytest.mark.parametrize("d", [32, 64])
+def test_attention_matches_ref_fp32(batch, seq, d):
+    q = rand((batch, seq, d), jnp.float32, 1)
+    k = rand((batch, seq, d), jnp.float32, 2)
+    v = rand((batch, seq, d), jnp.float32, 3)
+    out = attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_bf16_tolerance():
+    q = rand((2, 256, 64), jnp.bfloat16, 4)
+    k = rand((2, 256, 64), jnp.bfloat16, 5)
+    v = rand((2, 256, 64), jnp.bfloat16, 6)
+    out = attention(q, k, v).astype(jnp.float32)
+    ref = attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(out, ref, atol=2e-2, rtol=2e-2)
+
+
+def test_attention_block_shapes_equivalent():
+    q = rand((1, 512, 64), jnp.float32, 7)
+    k = rand((1, 512, 64), jnp.float32, 8)
+    v = rand((1, 512, 64), jnp.float32, 9)
+    a = attention(q, k, v, block_q=128, block_k=128)
+    b = attention(q, k, v, block_q=64, block_k=256)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_rejects_indivisible_seq():
+    q = rand((1, 100, 32), jnp.float32, 10)
+    with pytest.raises(ValueError):
+        attention(q, q, q, block_q=128, block_k=128)
+
+
+def test_attention_rows_sum_property():
+    # With v = all-ones, softmax mixing must return exactly ones.
+    q = rand((2, 128, 32), jnp.float32, 11)
+    k = rand((2, 128, 32), jnp.float32, 12)
+    v = jnp.ones((2, 128, 32), jnp.float32)
+    out = attention(q, k, v)
+    np.testing.assert_allclose(out, np.ones_like(out), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    batch=st.integers(1, 3),
+    seq_pow=st.integers(6, 9),  # 64..512
+    d=st.sampled_from([16, 32, 64, 128]),
+    scale=st.floats(0.05, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_hypothesis_sweep(batch, seq_pow, d, scale, seed):
+    seq = 1 << seq_pow
+    q = rand((batch, seq, d), jnp.float32, seed) * scale
+    k = rand((batch, seq, d), jnp.float32, seed + 1)
+    v = rand((batch, seq, d), jnp.float32, seed + 2)
+    bq = min(128, seq)
+    out = attention(q, k, v, block_q=bq, block_k=bq, sm_scale=scale)
+    ref = attention_ref(q, k, v, sm_scale=scale)
+    np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shift=st.floats(-30.0, 30.0))
+def test_attention_online_softmax_stable_under_shift(shift):
+    # Online softmax must be invariant to large score magnitudes.
+    q = rand((1, 128, 32), jnp.float32, 21) + shift
+    k = rand((1, 128, 32), jnp.float32, 22)
+    v = rand((1, 128, 32), jnp.float32, 23)
+    out = attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)

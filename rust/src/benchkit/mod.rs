@@ -1,0 +1,84 @@
+//! Micro-benchmark harness (criterion substitute for the offline build).
+//!
+//! Used by the `benches/` targets (`harness = false`): warmup, timed
+//! iterations, outlier-trimmed statistics, and aligned table printing so
+//! each bench can regenerate its paper table verbatim.
+
+use std::time::Instant;
+
+use crate::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Wall-clock per-iteration stats, ns.
+    pub summary: Summary,
+}
+
+/// Run `f` with `warmup` + `iters` iterations, timing each.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    // Trim the top/bottom 5% (scheduler noise).
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let trim = samples.len() / 20;
+    let trimmed = &samples[trim..samples.len() - trim];
+    BenchResult { name: name.to_string(), summary: Summary::from_samples(trimmed) }
+}
+
+/// Print a fixed-width table: header row then data rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8) + 2))
+            .collect::<String>()
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Convenience: format ns as µs with 1 decimal (the paper's unit).
+pub fn us(ns: f64) -> String {
+    format!("{:.1}", ns / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_iters() {
+        let r = bench("noop", 2, 40, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.name, "noop");
+        assert!(r.summary.count >= 36); // 40 - 2*trim
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn us_format() {
+        assert_eq!(us(4200.0), "4.2");
+    }
+}

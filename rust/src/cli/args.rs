@@ -1,0 +1,237 @@
+//! Argument parsing for `gvbench`.
+
+use std::fmt;
+
+/// Usage text (also serves as the CLI reference in README).
+pub const USAGE: &str = "\
+GPU-Virt-Bench — benchmarking framework for GPU virtualization systems
+
+USAGE:
+  gvbench run [--system <native|hami|fcsp|mig>] [--all-systems]
+              [--category <key>] [--metric <ID>] [--iterations N]
+              [--warmup N] [--tenants N] [--seed N] [--quick]
+              [--config <file>] [--format <txt|json|csv>] [--out <file>]
+  gvbench list [--full | --systems | --categories]
+  gvbench compare [--quick]        # Table 7: overall scores, all systems
+  gvbench regress --baseline <csv> [--system S] [--threshold PCT] [--quick]
+  gvbench help
+
+EXAMPLES:
+  gvbench run --system hami --category overhead
+  gvbench run --all-systems --quick --format json --out results.json
+  gvbench compare --quick
+";
+
+/// Parsed command line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    Run,
+    List,
+    Compare,
+    Regress,
+    Help,
+}
+
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub command: Command,
+    pub system: String,
+    pub all_systems: bool,
+    pub category: Option<String>,
+    pub metric: Option<String>,
+    pub iterations: Option<usize>,
+    pub warmup: Option<usize>,
+    pub tenants: Option<u32>,
+    pub seed: Option<u64>,
+    pub quick: bool,
+    pub config: Option<String>,
+    pub format: String,
+    pub out: Option<String>,
+    pub list_full: bool,
+    pub list_systems: bool,
+    pub list_categories: bool,
+    pub baseline: Option<String>,
+    pub threshold: f64,
+}
+
+impl Default for Args {
+    fn default() -> Args {
+        Args {
+            command: Command::Help,
+            system: "hami".to_string(),
+            all_systems: false,
+            category: None,
+            metric: None,
+            iterations: None,
+            warmup: None,
+            tenants: None,
+            seed: None,
+            quick: false,
+            config: None,
+            format: "txt".to_string(),
+            out: None,
+            list_full: false,
+            list_systems: false,
+            list_categories: false,
+            baseline: None,
+            threshold: 10.0,
+        }
+    }
+}
+
+/// Parse failure.
+#[derive(Debug, PartialEq)]
+pub struct ParseError(pub String);
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err(msg: impl Into<String>) -> ParseError {
+    ParseError(msg.into())
+}
+
+impl Args {
+    /// Parse argv (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Args, ParseError> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.command = match it.next().map(|s| s.as_str()) {
+            Some("run") => Command::Run,
+            Some("list") => Command::List,
+            Some("compare") => Command::Compare,
+            Some("regress") => Command::Regress,
+            Some("help") | Some("--help") | Some("-h") | None => Command::Help,
+            Some(other) => return Err(err(format!("unknown command `{other}`"))),
+        };
+        let next_value = |it: &mut std::iter::Peekable<std::slice::Iter<String>>,
+                              flag: &str|
+         -> Result<String, ParseError> {
+            it.next().cloned().ok_or_else(|| err(format!("{flag} requires a value")))
+        };
+        while let Some(flag) = it.next() {
+            match flag.as_str() {
+                "--system" => args.system = next_value(&mut it, flag)?,
+                "--all-systems" => args.all_systems = true,
+                "--category" => args.category = Some(next_value(&mut it, flag)?),
+                "--metric" => args.metric = Some(next_value(&mut it, flag)?),
+                "--iterations" => {
+                    args.iterations = Some(
+                        next_value(&mut it, flag)?.parse().map_err(|_| err("bad --iterations"))?,
+                    )
+                }
+                "--warmup" => {
+                    args.warmup =
+                        Some(next_value(&mut it, flag)?.parse().map_err(|_| err("bad --warmup"))?)
+                }
+                "--tenants" => {
+                    args.tenants =
+                        Some(next_value(&mut it, flag)?.parse().map_err(|_| err("bad --tenants"))?)
+                }
+                "--seed" => {
+                    args.seed =
+                        Some(next_value(&mut it, flag)?.parse().map_err(|_| err("bad --seed"))?)
+                }
+                "--quick" => args.quick = true,
+                "--config" => args.config = Some(next_value(&mut it, flag)?),
+                "--format" => args.format = next_value(&mut it, flag)?,
+                "--out" => args.out = Some(next_value(&mut it, flag)?),
+                "--baseline" => args.baseline = Some(next_value(&mut it, flag)?),
+                "--threshold" => {
+                    args.threshold = next_value(&mut it, flag)?
+                        .parse()
+                        .map_err(|_| err("bad --threshold"))?
+                }
+                "--full" => args.list_full = true,
+                "--systems" => args.list_systems = true,
+                "--categories" => args.list_categories = true,
+                other => return Err(err(format!("unknown flag `{other}`"))),
+            }
+        }
+        // Validation.
+        if args.command == Command::Regress && args.baseline.is_none() {
+            return Err(err("regress requires --baseline <csv>"));
+        }
+        if args.command == Command::Run || args.command == Command::Regress {
+            if crate::virt::by_name(&args.system).is_none() {
+                return Err(err(format!(
+                    "unknown system `{}` (expected: native, hami, fcsp, mig, timeslice)",
+                    args.system
+                )));
+            }
+            if let Some(c) = &args.category {
+                if crate::metrics::Category::from_key(c).is_none() {
+                    return Err(err(format!("unknown category `{c}`")));
+                }
+            }
+            if let Some(m) = &args.metric {
+                if crate::metrics::taxonomy::by_id(m).is_none() {
+                    return Err(err(format!("unknown metric `{m}`")));
+                }
+            }
+            if crate::report::Format::from_key(&args.format).is_none() {
+                return Err(err(format!("unknown format `{}`", args.format)));
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args, ParseError> {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv)
+    }
+
+    #[test]
+    fn run_with_flags() {
+        let a = parse("run --system fcsp --category overhead --iterations 50 --quick").unwrap();
+        assert_eq!(a.command, Command::Run);
+        assert_eq!(a.system, "fcsp");
+        assert_eq!(a.category.as_deref(), Some("overhead"));
+        assert_eq!(a.iterations, Some(50));
+        assert!(a.quick);
+    }
+
+    #[test]
+    fn rejects_unknown_system_and_metric() {
+        assert!(parse("run --system mps").is_err());
+        assert!(parse("run --system hami --metric OH-099").is_err());
+        assert!(parse("run --system hami --category bogus").is_err());
+        assert!(parse("run --system hami --format xml").is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse("run --system").is_err());
+    }
+
+    #[test]
+    fn list_flags() {
+        let a = parse("list --full").unwrap();
+        assert_eq!(a.command, Command::List);
+        assert!(a.list_full);
+    }
+
+    #[test]
+    fn regress_requires_baseline() {
+        assert!(parse("regress").is_err());
+        let a = parse("regress --baseline b.csv --threshold 5 --system fcsp").unwrap();
+        assert_eq!(a.command, Command::Regress);
+        assert_eq!(a.baseline.as_deref(), Some("b.csv"));
+        assert_eq!(a.threshold, 5.0);
+    }
+
+    #[test]
+    fn help_default() {
+        let a = parse("").unwrap();
+        assert_eq!(a.command, Command::Help);
+    }
+}

@@ -1,0 +1,214 @@
+//! Command implementations for `gvbench`.
+
+use anyhow::{Context, Result};
+
+use crate::config::FileConfig;
+use crate::coordinator::SuiteRunner;
+use crate::metrics::{taxonomy, Category, RunConfig};
+use crate::report::{Format, Report};
+use crate::virt::ALL_SYSTEMS;
+
+use super::args::{Args, Command, USAGE};
+
+/// Dispatch the parsed command.
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command {
+        Command::Help => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Command::List => cmd_list(args),
+        Command::Run => cmd_run(args),
+        Command::Compare => cmd_compare(args),
+        Command::Regress => cmd_regress(args),
+    }
+}
+
+fn cmd_regress(args: &Args) -> Result<()> {
+    let path = args.baseline.as_ref().expect("validated");
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let baseline = super::regress::parse_baseline_csv(&text)?;
+    let cfg = build_config(args)?;
+    println!(
+        "Regression check: system={}, {} baseline metrics, threshold {:.1}%",
+        cfg.system,
+        baseline.len(),
+        args.threshold
+    );
+    let (regressions, checked) = super::regress::run_regression(&cfg, &baseline, args.threshold)?;
+    if regressions.is_empty() {
+        println!("OK — {checked} metrics within threshold.");
+        return Ok(());
+    }
+    println!("{} regressions / {checked} metrics:", regressions.len());
+    for r in &regressions {
+        let d = taxonomy::by_id(&r.id).unwrap();
+        println!(
+            "  {:<10} {:<32} {:.3} -> {:.3} {}  ({:+.1}% worse)",
+            r.id, d.name, r.baseline, r.current, d.unit, r.regression_percent
+        );
+    }
+    anyhow::bail!("{} metric(s) regressed beyond {:.1}%", regressions.len(), args.threshold)
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = if args.quick {
+        RunConfig::quick(&args.system)
+    } else {
+        RunConfig::for_system(&args.system)
+    };
+    if let Some(path) = &args.config {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        cfg = FileConfig::parse(&text)?.apply(cfg)?;
+    }
+    if let Some(v) = args.iterations {
+        cfg.iterations = v;
+    }
+    if let Some(v) = args.warmup {
+        cfg.warmup = v;
+    }
+    if let Some(v) = args.tenants {
+        cfg.tenants = v;
+    }
+    if let Some(v) = args.seed {
+        cfg.seed = v;
+    }
+    Ok(cfg)
+}
+
+fn build_runner(args: &Args, cfg: RunConfig) -> SuiteRunner {
+    let mut runner = SuiteRunner::new(cfg);
+    if let Some(m) = &args.metric {
+        runner = runner.with_metrics(vec![m.clone()]);
+    } else if let Some(c) = &args.category {
+        let cat = Category::from_key(c).expect("validated");
+        runner = runner.with_categories(vec![cat]);
+    }
+    runner
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let mut runner = build_runner(args, cfg);
+    let systems: Vec<&str> =
+        if args.all_systems { ALL_SYSTEMS.to_vec() } else { vec![args.system.as_str()] };
+    let format = Format::from_key(&args.format).expect("validated");
+    let mut rendered = String::new();
+    for system in systems {
+        let suite = runner.run(system);
+        let baseline = runner.baseline().to_vec();
+        let report = Report::new(system, &suite.results, &baseline, &suite.card);
+        rendered.push_str(&report.render(format));
+        rendered.push('\n');
+    }
+    match &args.out {
+        Some(path) => {
+            std::fs::write(path, &rendered).with_context(|| format!("writing {path}"))?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{rendered}"),
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    if args.list_systems {
+        println!("Supported systems (Table 2):");
+        println!("  native  Bare metal baseline");
+        println!("  hami    HAMi-core-like CUDA interception");
+        println!("  fcsp    BUD-FCSP-like enhanced SM partitioning");
+        println!("  mig     Simulated ideal MIG (from specs)");
+        println!("  timeslice  Kubernetes-style time slicing (no isolation; §1.2 extension)");
+        return Ok(());
+    }
+    if args.list_categories {
+        println!("{:<18} {:>6} {:>7}", "Category", "Count", "Weight");
+        for c in Category::ALL {
+            println!("{:<18} {:>6} {:>7.2}", c.name(), taxonomy::by_category(c).len(), c.weight());
+        }
+        return Ok(());
+    }
+    // Metric list (Table 1 overview, or Table 8 with --full).
+    if args.list_full {
+        for d in &taxonomy::ALL {
+            println!(
+                "{:<10} {:<34} [{:<8}] {:<16} {}",
+                d.id,
+                d.name,
+                d.unit,
+                d.category.name(),
+                d.description
+            );
+        }
+    } else {
+        println!("{:<18} {:>6}  (use --full for all 56 metrics)", "Category", "Count");
+        for c in Category::ALL {
+            println!("{:<18} {:>6}", c.name(), taxonomy::by_category(c).len());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let cfg =
+        if args.quick { RunConfig::quick("native") } else { RunConfig::for_system("native") };
+    let mut runner = SuiteRunner::new(cfg);
+    println!("Running the full 56-metric suite for all systems (this runs");
+    println!("the simulated A100 in virtual time; ~seconds per system)...\n");
+    println!("{:<12} {:>8} {:>12} {:>8}", "System", "Score", "MIG Parity", "Grade");
+    println!("{}", "-".repeat(44));
+    for system in ["mig", "native", "fcsp", "hami"] {
+        let suite = runner.run(system);
+        println!(
+            "{:<12} {:>7.1}% {:>11.1}% {:>8}",
+            system,
+            suite.card.overall * 100.0,
+            suite.card.mig_parity_percent(),
+            suite.card.grade().letter()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn list_commands_run() {
+        let mut a = Args::default();
+        a.command = Command::List;
+        assert!(dispatch(&a).is_ok());
+        a.list_full = true;
+        assert!(dispatch(&a).is_ok());
+        a.list_full = false;
+        a.list_systems = true;
+        assert!(dispatch(&a).is_ok());
+    }
+
+    #[test]
+    fn run_single_metric_txt() {
+        let mut a = Args::default();
+        a.command = Command::Run;
+        a.system = "native".into();
+        a.metric = Some("OH-009".into());
+        a.quick = true;
+        assert!(dispatch(&a).is_ok());
+    }
+
+    #[test]
+    fn run_writes_output_file() {
+        let mut a = Args::default();
+        a.command = Command::Run;
+        a.system = "hami".into();
+        a.metric = Some("OH-009".into());
+        a.quick = true;
+        a.format = "json".into();
+        let path = std::env::temp_dir().join("gvb_test_out.json");
+        a.out = Some(path.to_str().unwrap().to_string());
+        dispatch(&a).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"OH-009\""));
+        std::fs::remove_file(&path).ok();
+    }
+}

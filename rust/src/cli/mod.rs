@@ -1,0 +1,27 @@
+//! `gvbench` command-line front end (clap substitute for the offline
+//! build): subcommands `run`, `list`, `compare`, plus `--help`.
+
+pub mod args;
+pub mod commands;
+pub mod regress;
+
+pub use args::{Args, ParseError};
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn main_with_args(argv: &[String]) -> i32 {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", args::USAGE);
+            return 2;
+        }
+    };
+    match commands::dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! `gvbench regress` — automated regression testing for virtualization
+//! systems (the paper's §9 future-work item, implemented).
+//!
+//! Workflow:
+//!
+//! ```bash
+//! gvbench run --system fcsp --format csv --out baseline.csv   # pin a release
+//! ... upgrade the virtualization stack ...
+//! gvbench regress --system fcsp --baseline baseline.csv --threshold 10
+//! ```
+//!
+//! Re-runs every metric present in the baseline CSV and flags any that
+//! moved against its direction (Table 8) by more than `threshold` percent.
+//! Exit code 1 on regressions — CI-friendly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::{registry, taxonomy, Direction, RunConfig};
+
+/// A parsed baseline: metric id → recorded value.
+pub fn parse_baseline_csv(text: &str) -> Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    let mut lines = text.lines();
+    let header = lines.next().context("empty baseline file")?;
+    let cols: Vec<&str> = header.split(',').collect();
+    let id_col = cols.iter().position(|c| *c == "id").context("no `id` column")?;
+    let value_col = cols.iter().position(|c| *c == "value").context("no `value` column")?;
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        // Our CSV quotes only name/description fields; id and value never
+        // contain commas, but quoted fields may. Split carefully.
+        let fields = split_csv(line);
+        let id = fields.get(id_col).with_context(|| format!("row {}: missing id", i + 2))?;
+        let value: f64 = fields
+            .get(value_col)
+            .with_context(|| format!("row {}: missing value", i + 2))?
+            .parse()
+            .with_context(|| format!("row {}: bad value", i + 2))?;
+        if taxonomy::by_id(id).is_none() {
+            bail!("row {}: unknown metric id `{id}`", i + 2);
+        }
+        out.insert(id.to_string(), value);
+    }
+    if out.is_empty() {
+        bail!("baseline contains no metrics");
+    }
+    Ok(out)
+}
+
+/// Minimal CSV field splitter honouring double-quoted fields.
+fn split_csv(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => fields.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+/// One regression finding.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub id: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Signed change in the *bad* direction, percent.
+    pub regression_percent: f64,
+}
+
+/// Re-run the baseline's metrics on `cfg` and compare.
+pub fn run_regression(
+    cfg: &RunConfig,
+    baseline: &BTreeMap<String, f64>,
+    threshold_percent: f64,
+) -> Result<(Vec<Regression>, usize)> {
+    let mut regressions = Vec::new();
+    let mut checked = 0;
+    for (id, base) in baseline {
+        let d = taxonomy::by_id(id).context("unknown id")?;
+        let Some(result) = registry::run_metric(id, cfg) else {
+            continue;
+        };
+        checked += 1;
+        let cur = result.value;
+        // Positive = got worse, in the metric's own direction.
+        let worse_pct = match d.direction {
+            Direction::LowerBetter => {
+                if base.abs() < 1e-12 {
+                    if cur > 1e-12 { 100.0 } else { 0.0 }
+                } else {
+                    (cur - base) / base * 100.0
+                }
+            }
+            Direction::HigherBetter => {
+                if base.abs() < 1e-12 {
+                    0.0
+                } else {
+                    (base - cur) / base * 100.0
+                }
+            }
+            Direction::Boolean => {
+                if cur < *base { 100.0 } else { 0.0 }
+            }
+        };
+        if worse_pct > threshold_percent {
+            regressions.push(Regression {
+                id: id.clone(),
+                baseline: *base,
+                current: cur,
+                regression_percent: worse_pct,
+            });
+        }
+    }
+    Ok((regressions, checked))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_splitter_handles_quotes() {
+        assert_eq!(split_csv("a,\"b,c\",d"), vec!["a", "b,c", "d"]);
+        assert_eq!(split_csv("x,\"say \"\"hi\"\"\",y"), vec!["x", "say \"hi\"", "y"]);
+    }
+
+    #[test]
+    fn parses_baseline() {
+        let csv = "id,name,category,unit,system,value\nOH-001,\"Kernel Launch, x\",Overhead,µs,hami,15.3\n";
+        let b = parse_baseline_csv(csv).unwrap();
+        assert_eq!(b["OH-001"], 15.3);
+    }
+
+    #[test]
+    fn rejects_unknown_ids_and_empty() {
+        assert!(parse_baseline_csv("id,value\nXX-1,3\n").is_err());
+        assert!(parse_baseline_csv("id,value\n").is_err());
+    }
+
+    #[test]
+    fn detects_direction_aware_regressions() {
+        // OH-001 lower-better: 4.2 → 15.3 is a regression.
+        let mut base = BTreeMap::new();
+        base.insert("OH-009".to_string(), 0.001); // hami will measure 0.055
+        let cfg = RunConfig::quick("hami");
+        let (regs, checked) = run_regression(&cfg, &base, 10.0).unwrap();
+        assert_eq!(checked, 1);
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].regression_percent > 100.0);
+        // And no regression when the baseline matches.
+        let mut base = BTreeMap::new();
+        base.insert("OH-009".to_string(), 0.055);
+        let (regs, _) = run_regression(&cfg, &base, 10.0).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+    }
+}

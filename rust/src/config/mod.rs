@@ -1,0 +1,154 @@
+//! Run configuration files: a small parser for a `key = value` format
+//! (INI-like, with `#` comments) that configures iterations, tenants,
+//! quotas and custom category weights — the paper's "users can customize
+//! weights via configuration files" (§6.3).
+
+use std::collections::HashMap;
+
+use crate::metrics::{Category, RunConfig};
+
+/// Parsed configuration file.
+#[derive(Clone, Debug, Default)]
+pub struct FileConfig {
+    values: HashMap<String, String>,
+}
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ConfigError {
+    #[error("line {0}: expected `key = value`, got `{1}`")]
+    Syntax(usize, String),
+    #[error("invalid value for `{0}`: `{1}`")]
+    Value(String, String),
+    #[error("weights must sum to 1.0 (got {0})")]
+    Weights(f64),
+}
+
+impl FileConfig {
+    /// Parse `key = value` lines; `#`/`;` start comments; blanks ignored.
+    pub fn parse(text: &str) -> Result<FileConfig, ConfigError> {
+        let mut values = HashMap::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = match raw.find(['#', ';']) {
+                Some(p) => &raw[..p],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Syntax(i + 1, raw.to_string()))?;
+            values.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+        Ok(FileConfig { values })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn get_num<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, ConfigError> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| ConfigError::Value(key.to_string(), v.clone())),
+        }
+    }
+
+    /// Apply file settings over a base [`RunConfig`].
+    pub fn apply(&self, mut cfg: RunConfig) -> Result<RunConfig, ConfigError> {
+        if let Some(s) = self.get("system") {
+            cfg.system = s.to_string();
+        }
+        if let Some(v) = self.get_num::<usize>("iterations")? {
+            cfg.iterations = v;
+        }
+        if let Some(v) = self.get_num::<usize>("warmup")? {
+            cfg.warmup = v;
+        }
+        if let Some(v) = self.get_num::<u32>("tenants")? {
+            cfg.tenants = v;
+        }
+        if let Some(v) = self.get_num::<u64>("seed")? {
+            cfg.seed = v;
+        }
+        if let Some(v) = self.get_num::<u64>("mem_limit_mb")? {
+            cfg.mem_limit = v << 20;
+        }
+        if let Some(v) = self.get_num::<f64>("sm_limit")? {
+            cfg.sm_limit = v;
+        }
+        Ok(cfg)
+    }
+
+    /// Custom category weights: keys `weight.<category-key>`. Returns the
+    /// default weights overlaid with any file-provided ones; validates the
+    /// sum is 1.0 (±1e-6).
+    pub fn weights(&self) -> Result<HashMap<Category, f64>, ConfigError> {
+        let mut weights: HashMap<Category, f64> =
+            Category::ALL.iter().map(|c| (*c, c.weight())).collect();
+        for c in Category::ALL {
+            let key = format!("weight.{}", c.key());
+            if let Some(v) = self.get_num::<f64>(&key)? {
+                weights.insert(c, v);
+            }
+        }
+        let sum: f64 = weights.values().sum();
+        if (sum - 1.0).abs() > 1e-6 {
+            return Err(ConfigError::Weights(sum));
+        }
+        Ok(weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_applies() {
+        let fc = FileConfig::parse(
+            "# comment\nsystem = fcsp\niterations = 50\ntenants=8\nmem_limit_mb = 4096 ; inline\n",
+        )
+        .unwrap();
+        let cfg = fc.apply(RunConfig::default()).unwrap();
+        assert_eq!(cfg.system, "fcsp");
+        assert_eq!(cfg.iterations, 50);
+        assert_eq!(cfg.tenants, 8);
+        assert_eq!(cfg.mem_limit, 4096 << 20);
+    }
+
+    #[test]
+    fn syntax_error_reports_line() {
+        let e = FileConfig::parse("good = 1\nbad line\n").unwrap_err();
+        assert_eq!(e, ConfigError::Syntax(2, "bad line".to_string()));
+    }
+
+    #[test]
+    fn value_error() {
+        let fc = FileConfig::parse("iterations = lots\n").unwrap();
+        assert!(matches!(fc.apply(RunConfig::default()), Err(ConfigError::Value(_, _))));
+    }
+
+    #[test]
+    fn default_weights_pass_validation() {
+        let fc = FileConfig::parse("").unwrap();
+        let w = fc.weights().unwrap();
+        assert_eq!(w.len(), 10);
+    }
+
+    #[test]
+    fn custom_weights_must_sum_to_one() {
+        let fc = FileConfig::parse("weight.overhead = 0.5\n").unwrap();
+        assert!(matches!(fc.weights(), Err(ConfigError::Weights(_))));
+        // Rebalanced: shift 0.05 overhead→isolation keeps the sum at 1.
+        let fc = FileConfig::parse("weight.overhead = 0.10\nweight.isolation = 0.25\n").unwrap();
+        let w = fc.weights().unwrap();
+        assert!((w[&Category::Overhead] - 0.10).abs() < 1e-12);
+        assert!((w[&Category::Isolation] - 0.25).abs() < 1e-12);
+    }
+}

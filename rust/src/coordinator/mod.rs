@@ -1,0 +1,10 @@
+//! Multi-tenant orchestration: the suite runner ([`runner`]), workload
+//! generators ([`workload`]) and a thread-backed tenant harness
+//! ([`tenant`]) used by the examples to drive real concurrent load against
+//! the PJRT runtime.
+
+pub mod runner;
+pub mod tenant;
+pub mod workload;
+
+pub use runner::{SuiteResult, SuiteRunner};

@@ -1,0 +1,136 @@
+//! The suite runner: executes the 56-metric suite for a set of systems,
+//! always including the MIG-Ideal baseline run it scores against
+//! (paper §4.5: every metric is compared to the simulated MIG baseline).
+
+use std::collections::HashMap;
+
+use crate::metrics::{registry, Category, MetricResult, RunConfig};
+use crate::scoring::ScoreCard;
+
+/// Results for one system plus its scorecard.
+pub struct SuiteResult {
+    pub system: String,
+    pub results: Vec<MetricResult>,
+    pub card: ScoreCard,
+}
+
+/// Runs suites and keeps the shared MIG baseline.
+pub struct SuiteRunner {
+    base_cfg: RunConfig,
+    /// Restrict to these categories (None = all 56 metrics).
+    categories: Option<Vec<Category>>,
+    /// Restrict to these metric ids (takes precedence over categories).
+    metric_ids: Option<Vec<String>>,
+    baseline: Option<Vec<MetricResult>>,
+}
+
+impl SuiteRunner {
+    pub fn new(base_cfg: RunConfig) -> SuiteRunner {
+        SuiteRunner { base_cfg, categories: None, metric_ids: None, baseline: None }
+    }
+
+    pub fn with_categories(mut self, cats: Vec<Category>) -> SuiteRunner {
+        self.categories = Some(cats);
+        self
+    }
+
+    pub fn with_metrics(mut self, ids: Vec<String>) -> SuiteRunner {
+        self.metric_ids = Some(ids);
+        self
+    }
+
+    fn run_suite(&self, system: &str) -> Vec<MetricResult> {
+        let mut cfg = self.base_cfg.clone();
+        cfg.system = system.to_string();
+        if let Some(ids) = &self.metric_ids {
+            return ids.iter().filter_map(|id| registry::run_metric(id, &cfg)).collect();
+        }
+        match &self.categories {
+            Some(cats) => {
+                cats.iter().flat_map(|c| registry::run_category(*c, &cfg)).collect()
+            }
+            None => registry::run_all(&cfg),
+        }
+    }
+
+    /// The MIG-Ideal baseline: spec-derived expected values (paper §4.5),
+    /// one per metric the runner is configured to execute.
+    pub fn baseline(&mut self) -> &[MetricResult] {
+        if self.baseline.is_none() {
+            let ids: Vec<&'static str> = if let Some(ids) = &self.metric_ids {
+                ids.iter()
+                    .filter_map(|id| crate::metrics::taxonomy::by_id(id).map(|d| d.id))
+                    .collect()
+            } else if let Some(cats) = &self.categories {
+                cats.iter()
+                    .flat_map(|c| crate::metrics::taxonomy::by_category(*c))
+                    .map(|d| d.id)
+                    .collect()
+            } else {
+                crate::metrics::taxonomy::ALL.iter().map(|d| d.id).collect()
+            };
+            self.baseline = Some(
+                ids.into_iter()
+                    .map(|id| {
+                        MetricResult::from_value(
+                            id,
+                            "mig-ideal-spec",
+                            crate::metrics::taxonomy::mig_baseline(id),
+                        )
+                    })
+                    .collect(),
+            );
+        }
+        self.baseline.as_ref().unwrap()
+    }
+
+    /// The *measured* MIG suite (for Δ-vs-measured ablations).
+    pub fn measured_mig(&self) -> Vec<MetricResult> {
+        self.run_suite("mig")
+    }
+
+    /// Run one system and score it against the MIG baseline.
+    pub fn run(&mut self, system: &str) -> SuiteResult {
+        self.baseline();
+        let results = self.run_suite(system);
+        let card = ScoreCard::build(system, &results, self.baseline.as_ref().unwrap());
+        SuiteResult { system: system.to_string(), results, card }
+    }
+
+    /// Run several systems; returns results keyed by system name.
+    pub fn run_many(&mut self, systems: &[&str]) -> HashMap<String, SuiteResult> {
+        systems.iter().map(|s| (s.to_string(), self.run(s))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mig_scores_near_perfect_against_spec_baseline() {
+        let mut runner = SuiteRunner::new(RunConfig::quick("mig"))
+            .with_metrics(vec!["OH-001".into(), "IS-005".into(), "PCIE-004".into()]);
+        let mig = runner.run("mig");
+        assert!(mig.card.overall > 0.95, "mig={}", mig.card.overall);
+    }
+
+    #[test]
+    fn category_restriction() {
+        let mut runner = SuiteRunner::new(RunConfig::quick("native"))
+            .with_categories(vec![Category::Pcie]);
+        let r = runner.run("native");
+        assert_eq!(r.results.len(), 4);
+        assert!(r.results.iter().all(|m| m.id.starts_with("PCIE")));
+    }
+
+    #[test]
+    fn metric_restriction_takes_precedence() {
+        let mut runner = SuiteRunner::new(RunConfig::quick("native"))
+            .with_categories(vec![Category::Pcie])
+            .with_metrics(vec!["OH-009".into()]);
+        let r = runner.run("native");
+        assert_eq!(r.results.len(), 1);
+        assert_eq!(r.results[0].id, "OH-009");
+    }
+}

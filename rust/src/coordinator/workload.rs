@@ -1,0 +1,128 @@
+//! Workload generators: request arrival processes and kernel mixes used by
+//! the examples and the end-to-end OH-010-style runs.
+
+use crate::simgpu::kernel::KernelDesc;
+use crate::util::Rng;
+
+/// A generated inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Arrival time offset from the previous request, ns.
+    pub inter_arrival_ns: f64,
+    /// Prompt length (tokens).
+    pub prompt_len: u64,
+    /// Tokens to generate.
+    pub gen_len: u64,
+    /// Batch-able (shares a decode step with others).
+    pub batchable: bool,
+}
+
+/// Poisson request generator with LLM-serving-shaped length distributions.
+#[derive(Clone, Debug)]
+pub struct RequestGenerator {
+    rng: Rng,
+    /// Mean arrival rate, requests/second.
+    pub rate_hz: f64,
+    pub max_prompt: u64,
+    pub max_gen: u64,
+}
+
+impl RequestGenerator {
+    pub fn new(seed: u64, rate_hz: f64) -> RequestGenerator {
+        RequestGenerator { rng: Rng::new(seed), rate_hz, max_prompt: 2048, max_gen: 256 }
+    }
+
+    pub fn next_request(&mut self) -> Request {
+        let inter = self.rng.exponential(self.rate_hz) * 1e9;
+        // Prompt lengths are long-tailed; use a simple log-uniform.
+        let prompt = (2f64).powf(self.rng.f64_range(5.0, (self.max_prompt as f64).log2()));
+        let gen = (2f64).powf(self.rng.f64_range(3.0, (self.max_gen as f64).log2()));
+        Request {
+            inter_arrival_ns: inter,
+            prompt_len: prompt as u64,
+            gen_len: gen as u64,
+            batchable: self.rng.chance(0.8),
+        }
+    }
+
+    /// Generate a trace of `n` requests.
+    pub fn trace(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+/// Kernel mixes for the background/noisy tenants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mix {
+    /// Compute-heavy (GEMM-dominated).
+    Compute,
+    /// Memory-bandwidth heavy (streaming).
+    Bandwidth,
+    /// Alloc/free churn.
+    AllocChurn,
+    /// Inference-like: alternating prefill/decode.
+    Inference,
+}
+
+impl Mix {
+    /// Next kernel in this mix (for mixes that launch kernels).
+    pub fn kernel(&self, rng: &mut Rng) -> KernelDesc {
+        match self {
+            Mix::Compute => {
+                let d = *rng.choose(&[2048u64, 3072, 4096]);
+                KernelDesc::gemm(d, d, d, false)
+            }
+            Mix::Bandwidth => KernelDesc::streaming(rng.f64_range(0.5e9, 2e9)),
+            Mix::AllocChurn => KernelDesc::null(),
+            Mix::Inference => {
+                if rng.chance(0.2) {
+                    KernelDesc::attention(8, 1024, 64, true) // prefill
+                } else {
+                    KernelDesc::gemm(4096, 8, 4096, true) // decode
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let mut g = RequestGenerator::new(1, 100.0);
+        let trace = g.trace(4000);
+        let mean_ns: f64 =
+            trace.iter().map(|r| r.inter_arrival_ns).sum::<f64>() / trace.len() as f64;
+        // 100 Hz → 10 ms mean inter-arrival.
+        assert!((mean_ns / 1e6 - 10.0).abs() < 1.0, "mean={mean_ns}");
+    }
+
+    #[test]
+    fn lengths_in_bounds() {
+        let mut g = RequestGenerator::new(2, 10.0);
+        for r in g.trace(500) {
+            assert!(r.prompt_len >= 32 && r.prompt_len <= 2048);
+            assert!(r.gen_len >= 8 && r.gen_len <= 256);
+        }
+    }
+
+    #[test]
+    fn mixes_generate_kernels() {
+        let mut rng = Rng::new(3);
+        assert!(Mix::Compute.kernel(&mut rng).flops > 1e9);
+        assert!(Mix::Bandwidth.kernel(&mut rng).bytes > 1e8);
+        let inf = Mix::Inference.kernel(&mut rng);
+        assert!(inf.half_precision);
+    }
+
+    #[test]
+    fn deterministic_traces() {
+        let t1 = RequestGenerator::new(7, 50.0).trace(10);
+        let t2 = RequestGenerator::new(7, 50.0).trace(10);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.prompt_len, b.prompt_len);
+        }
+    }
+}

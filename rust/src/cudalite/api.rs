@@ -1,0 +1,455 @@
+//! The driver API front end: contexts, memory, launches, transfers, events.
+
+use std::collections::HashMap;
+
+use crate::simgpu::error::{GpuError, GpuFault};
+use crate::simgpu::kernel::KernelDesc;
+use crate::simgpu::memory::{AllocError, DevicePtr};
+use crate::simgpu::pcie::Direction;
+use crate::simgpu::stream::StreamPriority;
+use crate::simgpu::{GpuDevice, StreamId, TenantId};
+use crate::virt::{TenantConfig, VirtLayer};
+
+/// CUDA-event handle.
+pub type EventId = u32;
+
+struct ContextState {
+    /// Bytes allocated through this context (per-pointer, for free()).
+    allocations: HashMap<DevicePtr, u64>,
+}
+
+/// The assembled API: one simulated device + one virtualization layer.
+pub struct Api {
+    pub dev: GpuDevice,
+    pub virt: Box<dyn VirtLayer>,
+    contexts: HashMap<TenantId, ContextState>,
+    current_ctx: Option<TenantId>,
+    /// Pointer → owning tenant (VA isolation check for IS-005).
+    owners: HashMap<DevicePtr, TenantId>,
+    events: HashMap<EventId, u64>,
+    next_event: EventId,
+}
+
+impl Api {
+    pub fn new(dev: GpuDevice, virt: Box<dyn VirtLayer>) -> Api {
+        Api {
+            dev,
+            virt,
+            contexts: HashMap::new(),
+            current_ctx: None,
+            owners: HashMap::new(),
+            events: HashMap::new(),
+            next_event: 1,
+        }
+    }
+
+    /// Convenience: A100 + backend by name.
+    pub fn with_backend(backend: &str, seed: u64) -> Api {
+        let dev = GpuDevice::a100(seed);
+        let virt = crate::virt::by_name(backend)
+            .unwrap_or_else(|| panic!("unknown backend {backend}"));
+        Api::new(dev, virt)
+    }
+
+    /// Current virtual time, ns (the benchmark stopwatch source).
+    pub fn now_ns(&self) -> u64 {
+        self.dev.clock.now_ns()
+    }
+
+    fn check_errors(&mut self, tenant: TenantId) -> Result<(), GpuError> {
+        let now = self.dev.clock.now_ns();
+        match self.dev.errors.check(tenant, now) {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    // ---- context management (cuCtxCreate / cuCtxDestroy / switch) ------
+
+    /// `cuCtxCreate` + container registration with the virt layer.
+    pub fn ctx_create(&mut self, tenant: TenantId, cfg: TenantConfig) -> Result<(), GpuError> {
+        if self.contexts.contains_key(&tenant) {
+            return Err(GpuError::InvalidValue);
+        }
+        self.virt.register_tenant(tenant, cfg, &mut self.dev)?;
+        let base = self.dev.spec.ctx_create_ns as f64 * self.dev.jitter();
+        let extra = self.virt.context_create_overhead_ns(tenant, &mut self.dev);
+        self.dev.clock.advance_f(base + extra);
+        self.contexts.insert(tenant, ContextState { allocations: HashMap::new() });
+        self.current_ctx = Some(tenant);
+        Ok(())
+    }
+
+    /// `cuCtxDestroy`: releases allocations, clears tenant poison.
+    pub fn ctx_destroy(&mut self, tenant: TenantId) -> Result<(), GpuError> {
+        let ctx = self.contexts.remove(&tenant).ok_or(GpuError::InvalidContext)?;
+        for (ptr, size) in ctx.allocations {
+            self.dev.raw_free(ptr);
+            self.owners.remove(&ptr);
+            self.virt.post_free(tenant, size, &mut self.dev);
+        }
+        self.virt.unregister_tenant(tenant, &mut self.dev);
+        self.dev.errors.recover_tenant(tenant);
+        let j = self.dev.jitter();
+        self.dev.clock.advance_f(self.dev.spec.ctx_destroy_ns as f64 * j);
+        if self.current_ctx == Some(tenant) {
+            self.current_ctx = None;
+        }
+        Ok(())
+    }
+
+    /// Switch the current context (SCHED-001). No-op if already current.
+    pub fn ctx_switch(&mut self, tenant: TenantId) -> Result<(), GpuError> {
+        if !self.contexts.contains_key(&tenant) {
+            return Err(GpuError::InvalidContext);
+        }
+        if self.current_ctx != Some(tenant) {
+            let hook = self.virt.hook_overhead_ns(&mut self.dev);
+            let j = self.dev.jitter();
+            self.dev.clock.advance_f(self.dev.spec.ctx_switch_ns as f64 * j + hook);
+            self.current_ctx = Some(tenant);
+        }
+        Ok(())
+    }
+
+    pub fn has_context(&self, tenant: TenantId) -> bool {
+        self.contexts.contains_key(&tenant)
+    }
+
+    // ---- memory (cuMemAlloc / cuMemFree / cuMemGetInfo) -----------------
+
+    /// `cuMemAlloc` with quota interposition (OH-002, IS-001/002).
+    pub fn mem_alloc(&mut self, tenant: TenantId, size: u64) -> Result<DevicePtr, GpuError> {
+        self.check_errors(tenant)?;
+        if !self.contexts.contains_key(&tenant) {
+            return Err(GpuError::InvalidContext);
+        }
+        // Virtualization admission (quota) — rejection is cheap and early.
+        match self.virt.pre_alloc(tenant, size, &mut self.dev) {
+            Ok(cost) => {
+                self.dev.clock.advance_f(cost);
+            }
+            Err(e) => {
+                // The enforcement path itself costs a hook + check.
+                let hook = self.virt.hook_overhead_ns(&mut self.dev);
+                self.dev.clock.advance_f(hook + 150.0);
+                return Err(e);
+            }
+        }
+        let (result, cost) = self.dev.raw_alloc(size);
+        self.dev.clock.advance_f(cost);
+        match result {
+            Ok(o) => {
+                let post = self.virt.post_alloc(tenant, o.reserved, &mut self.dev);
+                self.dev.clock.advance_f(post);
+                self.contexts.get_mut(&tenant).unwrap().allocations.insert(o.ptr, o.reserved);
+                self.owners.insert(o.ptr, tenant);
+                Ok(o.ptr)
+            }
+            Err(AllocError::ZeroSize) => {
+                // Roll back the quota reservation.
+                self.virt.post_free(tenant, size, &mut self.dev);
+                Err(GpuError::InvalidValue)
+            }
+            Err(_) => {
+                self.virt.post_free(tenant, size, &mut self.dev);
+                Err(GpuError::OutOfMemory)
+            }
+        }
+    }
+
+    /// `cuMemFree` (OH-003).
+    pub fn mem_free(&mut self, tenant: TenantId, ptr: DevicePtr) -> Result<(), GpuError> {
+        self.check_errors(tenant)?;
+        let ctx = self.contexts.get_mut(&tenant).ok_or(GpuError::InvalidContext)?;
+        let size = ctx.allocations.remove(&ptr).ok_or(GpuError::InvalidValue)?;
+        let pre = self.virt.pre_free(tenant, &mut self.dev);
+        let (freed, cost) = self.dev.raw_free(ptr);
+        debug_assert!(freed.is_some());
+        let post = self.virt.post_free(tenant, size, &mut self.dev);
+        self.owners.remove(&ptr);
+        self.dev.clock.advance_f(pre + cost + post);
+        Ok(())
+    }
+
+    /// Virtualized `cuMemGetInfo`/`nvmlDeviceGetMemoryInfo`.
+    pub fn mem_get_info(&mut self, tenant: TenantId) -> (u64, u64) {
+        let hook = self.virt.hook_overhead_ns(&mut self.dev);
+        self.dev.clock.advance_f(hook);
+        self.virt.mem_info(tenant, &self.dev)
+    }
+
+    /// Attempt to read device memory at `ptr` from `tenant`'s context —
+    /// the cross-tenant leak probe (IS-005). Reading an address you don't
+    /// own faults your own context, like CUDA VA isolation.
+    pub fn try_read(&mut self, tenant: TenantId, ptr: DevicePtr) -> Result<(), GpuError> {
+        self.check_errors(tenant)?;
+        match self.owners.get(&ptr) {
+            Some(owner) if *owner == tenant => Ok(()),
+            _ => {
+                self.dev.inject_fault(tenant, GpuFault::IllegalAddress);
+                Err(GpuError::IllegalAddress)
+            }
+        }
+    }
+
+    // ---- kernels (cuLaunchKernel) ---------------------------------------
+
+    /// `cuLaunchKernel`: asynchronous. The clock advances by the CPU-side
+    /// launch cost only (what OH-001 measures); the kernel body lands on
+    /// the stream timeline. Returns the kernel's `(start, end)` span.
+    pub fn launch_kernel(
+        &mut self,
+        tenant: TenantId,
+        stream: StreamId,
+        kernel: &KernelDesc,
+    ) -> Result<(u64, u64), GpuError> {
+        self.check_errors(tenant)?;
+        if !self.contexts.contains_key(&tenant) {
+            return Err(GpuError::InvalidContext);
+        }
+        let gate = self.virt.gate_launch(tenant, kernel, &mut self.dev);
+        let base = self.dev.spec.launch_ns as f64 * self.dev.jitter();
+        self.dev.clock.advance_f(base + gate.overhead_ns + gate.throttle_wait_ns);
+        let span = self
+            .dev
+            .raw_launch(tenant, stream, kernel, gate.granted_sms)
+            .ok_or(GpuError::InvalidValue)?;
+        let sm_frac = (gate.granted_sms as f64 / self.dev.spec.sm_count as f64)
+            * kernel.occupancy.clamp(1.0 / 2048.0, 1.0);
+        self.virt
+            .on_kernel_complete(tenant, sm_frac.min(1.0), (span.1 - span.0) as f64, span.1 as f64);
+        Ok(span)
+    }
+
+    /// `cuStreamSynchronize`.
+    pub fn sync_stream(&mut self, tenant: TenantId, stream: StreamId) -> Result<(), GpuError> {
+        let t = self
+            .dev
+            .streams
+            .sync_time(stream, self.dev.clock.now_ns())
+            .ok_or(GpuError::InvalidValue)?;
+        self.dev.clock.advance_to(t);
+        self.check_errors(tenant)
+    }
+
+    /// `cuCtxSynchronize` / `cudaDeviceSynchronize`.
+    pub fn sync_device(&mut self, tenant: TenantId) -> Result<(), GpuError> {
+        let t = self.dev.streams.device_sync_time(self.dev.clock.now_ns());
+        self.dev.clock.advance_to(t);
+        self.check_errors(tenant)
+    }
+
+    /// Create a stream with priority.
+    pub fn stream_create(&mut self, priority: StreamPriority) -> StreamId {
+        self.dev.clock.advance(800); // cudaStreamCreate cost
+        self.dev.create_stream(priority)
+    }
+
+    // ---- transfers (cuMemcpyHtoD / DtoH) --------------------------------
+
+    /// Synchronous memcpy. Returns achieved GB/s (PCIE-001/002/004).
+    pub fn memcpy(
+        &mut self,
+        tenant: TenantId,
+        dir: Direction,
+        bytes: u64,
+        pinned: bool,
+    ) -> Result<f64, GpuError> {
+        self.check_errors(tenant)?;
+        let hook = self.virt.hook_overhead_ns(&mut self.dev);
+        let (dur, bw) = self.dev.raw_transfer(tenant, dir, bytes, pinned);
+        self.dev.clock.advance_f(hook + dur);
+        Ok(bw)
+    }
+
+    // ---- events (cuEventRecord / cuEventElapsedTime) ---------------------
+
+    /// Record an event on a stream's current tail.
+    pub fn event_record(&mut self, stream: StreamId) -> Result<EventId, GpuError> {
+        let t = self
+            .dev
+            .streams
+            .sync_time(stream, self.dev.clock.now_ns())
+            .ok_or(GpuError::InvalidValue)?;
+        let j = self.dev.jitter();
+        self.dev.clock.advance_f(self.dev.spec.event_record_ns as f64 * j);
+        let id = self.next_event;
+        self.next_event += 1;
+        self.events.insert(id, t);
+        Ok(id)
+    }
+
+    /// Elapsed virtual ms between two events.
+    pub fn event_elapsed_ms(&self, start: EventId, end: EventId) -> Result<f64, GpuError> {
+        let s = self.events.get(&start).ok_or(GpuError::InvalidValue)?;
+        let e = self.events.get(&end).ok_or(GpuError::InvalidValue)?;
+        Ok((*e as f64 - *s as f64) / 1e6)
+    }
+
+    // ---- faults ----------------------------------------------------------
+
+    /// Inject a fault attributed to `tenant` (the ERR harness).
+    pub fn inject_fault(&mut self, tenant: TenantId, fault: GpuFault) {
+        self.dev.inject_fault(tenant, fault);
+    }
+
+    /// Device reset (ERR-002) — destroys all contexts.
+    pub fn device_reset(&mut self) {
+        let tenants: Vec<TenantId> = self.contexts.keys().copied().collect();
+        for t in tenants {
+            let _ = self.ctx_destroy(t);
+        }
+        self.owners.clear();
+        let cost = self.dev.reset();
+        self.dev.clock.advance_f(cost);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::VirtualClock;
+
+    fn api(backend: &str) -> Api {
+        let mut a = Api::with_backend(backend, 42);
+        a.dev.spec.jitter_sigma = 0.0;
+        a
+    }
+
+    fn stopwatch(a: &Api) -> (VirtualClock, u64) {
+        (a.dev.clock.clone(), a.dev.clock.now_ns())
+    }
+
+    #[test]
+    fn native_launch_latency_matches_table4() {
+        let mut a = api("native");
+        a.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        let t0 = a.now_ns();
+        a.launch_kernel(1, 0, &KernelDesc::null()).unwrap();
+        let dt = (a.now_ns() - t0) as f64 / 1e3;
+        assert!((dt - 4.2).abs() < 0.2, "launch = {dt} µs"); // Table 4: 4.2
+    }
+
+    #[test]
+    fn hami_launch_latency_elevated() {
+        let mut a = api("hami");
+        a.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        let t0 = a.now_ns();
+        a.launch_kernel(1, 0, &KernelDesc::null()).unwrap();
+        let dt = (a.now_ns() - t0) as f64 / 1e3;
+        assert!(dt > 4.8, "hami launch = {dt} µs");
+    }
+
+    #[test]
+    fn alloc_free_lifecycle() {
+        let mut a = api("native");
+        a.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        let t0 = a.now_ns();
+        let ptr = a.mem_alloc(1, 1 << 20).unwrap();
+        let alloc_us = (a.now_ns() - t0) as f64 / 1e3;
+        assert!((alloc_us - 12.5).abs() < 0.5, "alloc = {alloc_us} µs"); // Table 4
+        a.mem_free(1, ptr).unwrap();
+        assert!(a.mem_free(1, ptr).is_err()); // double free
+    }
+
+    #[test]
+    fn quota_enforced_through_api() {
+        let mut a = api("hami");
+        a.ctx_create(1, TenantConfig::unlimited().with_mem_limit(1 << 30)).unwrap();
+        assert!(a.mem_alloc(1, 1 << 29).is_ok());
+        assert_eq!(a.mem_alloc(1, 1 << 29), Err(GpuError::QuotaExceeded));
+        // Native never rejects on quota.
+        let mut n = api("native");
+        n.ctx_create(1, TenantConfig::unlimited().with_mem_limit(1 << 20)).unwrap();
+        assert!(n.mem_alloc(1, 1 << 22).is_ok());
+    }
+
+    #[test]
+    fn cross_tenant_read_faults() {
+        let mut a = api("hami");
+        a.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        a.ctx_create(2, TenantConfig::unlimited()).unwrap();
+        let p1 = a.mem_alloc(1, 4096).unwrap();
+        assert!(a.try_read(1, p1).is_ok());
+        assert_eq!(a.try_read(2, p1), Err(GpuError::IllegalAddress));
+        // Tenant 2's context is now poisoned (sticky), tenant 1 fine.
+        a.dev.clock.advance(100_000);
+        assert!(a.launch_kernel(2, 0, &KernelDesc::null()).is_err());
+        assert!(a.launch_kernel(1, 0, &KernelDesc::null()).is_ok());
+        // Destroy+recreate recovers tenant 2.
+        a.ctx_destroy(2).unwrap();
+        a.ctx_create(2, TenantConfig::unlimited()).unwrap();
+        assert!(a.launch_kernel(2, 0, &KernelDesc::null()).is_ok());
+    }
+
+    #[test]
+    fn events_measure_kernel_time() {
+        let mut a = api("native");
+        a.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        let e0 = a.event_record(0).unwrap();
+        let k = KernelDesc::gemm(1024, 1024, 1024, false);
+        a.launch_kernel(1, 0, &k).unwrap();
+        let e1 = a.event_record(0).unwrap();
+        let ms = a.event_elapsed_ms(e0, e1).unwrap();
+        // 2*1024^3/19.5e12 ≈ 0.11 ms.
+        assert!(ms > 0.08 && ms < 0.2, "ms={ms}");
+    }
+
+    #[test]
+    fn sync_advances_to_stream_completion() {
+        let mut a = api("native");
+        a.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        let (_, _) = stopwatch(&a);
+        let span = a.launch_kernel(1, 0, &KernelDesc::gemm(2048, 2048, 2048, false)).unwrap();
+        assert!(a.now_ns() < span.1); // async
+        a.sync_stream(1, 0).unwrap();
+        assert_eq!(a.now_ns(), span.1);
+    }
+
+    #[test]
+    fn memcpy_bandwidths() {
+        let mut a = api("native");
+        a.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        let bw_pinned = a.memcpy(1, Direction::HostToDevice, 1 << 30, true).unwrap();
+        let bw_pageable = a.memcpy(1, Direction::HostToDevice, 1 << 30, false).unwrap();
+        assert!(bw_pinned > 20.0);
+        assert!((bw_pinned / bw_pageable - 2.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn device_reset_recovers_from_ecc() {
+        let mut a = api("native");
+        a.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        a.inject_fault(1, GpuFault::EccUncorrectable);
+        a.dev.clock.advance(5_000_000);
+        assert!(a.launch_kernel(1, 0, &KernelDesc::null()).is_err());
+        a.device_reset();
+        a.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        assert!(a.launch_kernel(1, 0, &KernelDesc::null()).is_ok());
+    }
+
+    #[test]
+    fn mig_context_cheap_hami_expensive() {
+        let mut m = api("mig");
+        let t0 = m.now_ns();
+        m.ctx_create(1, TenantConfig::unlimited().with_sm_limit(0.5)).unwrap();
+        let mig_ctx = m.now_ns() - t0;
+        let mut h = api("hami");
+        let t0 = h.now_ns();
+        h.ctx_create(1, TenantConfig::unlimited()).unwrap();
+        let hami_ctx = h.now_ns() - t0;
+        assert!(hami_ctx > mig_ctx, "hami={hami_ctx} mig={mig_ctx}");
+        // Table 4: hami ctx ≈ 312µs.
+        let us = hami_ctx as f64 / 1e3;
+        assert!((us - 312.0).abs() < 40.0, "hami ctx = {us} µs");
+    }
+
+    #[test]
+    fn invalid_context_errors() {
+        let mut a = api("native");
+        assert_eq!(a.mem_alloc(9, 1024), Err(GpuError::InvalidContext));
+        assert_eq!(a.launch_kernel(9, 0, &KernelDesc::null()), Err(GpuError::InvalidContext));
+        assert_eq!(a.ctx_switch(9), Err(GpuError::InvalidContext));
+    }
+}

@@ -1,0 +1,120 @@
+//! NCCL-like collectives over a simulated multi-GPU topology
+//! (NCCL-001..004).
+//!
+//! A [`CollectiveCtx`] binds a communicator (n ranks) to a topology and a
+//! virtualization-induced bandwidth share. Software virtualization layers
+//! intercept the launch of NCCL's internal kernels, adding per-operation
+//! overhead; MIG instances cannot span collectives across slices of one
+//! GPU, which the paper sidesteps by benchmarking across physical GPUs —
+//! we model the same.
+
+use crate::simgpu::nvlink::Topology;
+use crate::simgpu::VirtualClock;
+
+/// A communicator over `topology.device_count` ranks.
+pub struct CollectiveCtx {
+    pub topology: Topology,
+    clock: VirtualClock,
+    /// Per-operation CPU-side overhead added by the virt layer (hooking
+    /// NCCL's kernel launches), ns.
+    pub launch_overhead_ns: f64,
+    /// Bandwidth share under multi-tenant contention (1.0 = solo).
+    pub bw_share: f64,
+    pub ops: u64,
+}
+
+impl CollectiveCtx {
+    pub fn new(topology: Topology, clock: VirtualClock) -> CollectiveCtx {
+        CollectiveCtx { topology, clock, launch_overhead_ns: 0.0, bw_share: 1.0, ops: 0 }
+    }
+
+    /// Configure the virtualization overhead per collective operation:
+    /// `hook_ns` per intercepted launch, `kernels_per_op` launches per
+    /// collective (ring algorithms launch one kernel per rank per phase).
+    pub fn with_virt_overhead(mut self, hook_ns: f64, kernels_per_op: u32) -> CollectiveCtx {
+        self.launch_overhead_ns = hook_ns * kernels_per_op as f64;
+        self
+    }
+
+    pub fn with_bw_share(mut self, share: f64) -> CollectiveCtx {
+        self.bw_share = share.clamp(1e-3, 1.0);
+        self
+    }
+
+    /// AllReduce of `bytes`; returns latency in µs (NCCL-001).
+    pub fn allreduce(&mut self, bytes: u64) -> f64 {
+        let t = self.topology.allreduce_ns(bytes, self.bw_share) + self.launch_overhead_ns;
+        self.clock.advance_f(t);
+        self.ops += 1;
+        t / 1e3
+    }
+
+    /// AllGather of `bytes` total; returns achieved GB/s (NCCL-002).
+    pub fn allgather(&mut self, bytes: u64) -> f64 {
+        let t = self.topology.allgather_ns(bytes, self.bw_share) + self.launch_overhead_ns;
+        self.clock.advance_f(t);
+        self.ops += 1;
+        bytes as f64 / t
+    }
+
+    /// P2P copy of `bytes`; returns achieved GB/s (NCCL-003).
+    pub fn p2p(&mut self, bytes: u64) -> f64 {
+        let (t, bw) = self.topology.p2p_ns(bytes, self.bw_share);
+        self.clock.advance_f(t + self.launch_overhead_ns);
+        self.ops += 1;
+        bw
+    }
+
+    /// Broadcast of `bytes`; returns achieved GB/s (NCCL-004).
+    pub fn broadcast(&mut self, bytes: u64) -> f64 {
+        let t = self.topology.broadcast_ns(bytes, self.bw_share) + self.launch_overhead_ns;
+        self.clock.advance_f(t);
+        self.ops += 1;
+        bytes as f64 / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> CollectiveCtx {
+        CollectiveCtx::new(Topology::nvlink_node(4, 300.0), VirtualClock::new())
+    }
+
+    #[test]
+    fn allreduce_latency_reasonable() {
+        let mut c = ctx();
+        // 256 MiB over 4 ranks at 300 GB/s: 2*3/4*256MiB/300GB/s ≈ 1.34 ms.
+        let us = c.allreduce(256 << 20);
+        assert!(us > 1_200.0 && us < 1_600.0, "us={us}");
+    }
+
+    #[test]
+    fn virt_overhead_additive() {
+        let mut solo = ctx();
+        let mut virt = ctx().with_virt_overhead(85.0, 8);
+        let small = 1024;
+        let a = solo.allreduce(small);
+        let b = virt.allreduce(small);
+        assert!((b - a - 85.0 * 8.0 / 1e3).abs() < 1e-6, "a={a} b={b}");
+    }
+
+    #[test]
+    fn contention_degrades_bandwidth() {
+        let mut solo = ctx();
+        let mut contended = ctx().with_bw_share(0.5);
+        let bw_solo = solo.allgather(1 << 28);
+        let bw_half = contended.allgather(1 << 28);
+        assert!(bw_half < bw_solo * 0.6, "solo={bw_solo} half={bw_half}");
+    }
+
+    #[test]
+    fn clock_advances() {
+        let clk = VirtualClock::new();
+        let mut c = CollectiveCtx::new(Topology::nvlink_node(2, 300.0), clk.clone());
+        c.p2p(1 << 20);
+        assert!(clk.now_ns() > 0);
+        assert_eq!(c.ops, 1);
+    }
+}

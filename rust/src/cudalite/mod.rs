@@ -1,0 +1,20 @@
+//! `cudalite` — a CUDA-driver-shaped API over the simulated GPU.
+//!
+//! This is the surface the virtualization layers interpose on, mirroring
+//! where HAMi-core's `dlsym` hooks wrap the real `libcuda`. Every call:
+//!
+//! 1. checks the device error state (sticky errors propagate like CUDA),
+//! 2. invokes the virt layer's pre-hooks (interception cost, quota,
+//!    throttling),
+//! 3. performs the hardware operation on [`crate::simgpu::GpuDevice`],
+//! 4. invokes post-hooks (accounting) and advances the virtual clock by
+//!    the total CPU-side cost.
+//!
+//! Benchmarks measure latency by reading the virtual clock around calls —
+//! exactly the `clock_gettime` pattern in the paper's Listings 3–4.
+
+pub mod api;
+pub mod collective;
+
+pub use api::{Api, EventId};
+pub use collective::CollectiveCtx;

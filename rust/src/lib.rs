@@ -1,0 +1,48 @@
+//! # GPU-Virt-Bench
+//!
+//! A comprehensive benchmarking framework for software-based GPU
+//! virtualization systems, reproducing the paper *GPU-Virt-Bench* (Bud
+//! Ecosystem, 2025) on a fully simulated GPU substrate.
+//!
+//! The crate is organized in layers:
+//!
+//! - [`simgpu`] — a discrete-event simulated GPU (A100-like by default):
+//!   SM pool, HBM allocator, L2 cache, PCIe link, NVLink topology, streams
+//!   and a virtual nanosecond clock.
+//! - [`cudalite`] — a CUDA-driver-shaped API over the simulator (contexts,
+//!   memory, kernel launch, transfers, events, collectives). This is the
+//!   interposition surface for virtualization layers.
+//! - [`virt`] — the virtualization backends under test: `native`
+//!   (passthrough), `hami` (HAMi-core-like dlsym interception, shared-region
+//!   accounting, fixed token bucket, NVML polling), `fcsp` (BUD-FCSP-like:
+//!   cached hooks, adaptive token bucket, weighted fair queuing) and `mig`
+//!   (ideal hardware partitioning baseline).
+//! - [`metrics`] — the paper's 56-metric taxonomy across 10 categories.
+//! - [`stats`], [`scoring`], [`report`] — statistical reduction, MIG-parity
+//!   scoring / grading, and JSON/CSV/TXT report generation.
+//! - [`coordinator`] — multi-tenant orchestration (thread-backed tenants,
+//!   workload generators, the suite runner).
+//! - [`runtime`] — PJRT wrapper that loads AOT-compiled JAX/Pallas HLO
+//!   artifacts and executes them from the Rust request path (used by the
+//!   LLM metric category and the examples).
+//! - [`cli`], [`config`] — the `gvbench` command-line front end.
+//! - [`benchkit`], [`testkit`], [`util`] — in-tree substitutes for
+//!   criterion / proptest / rand (offline environment).
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cudalite;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod scoring;
+pub mod simgpu;
+pub mod stats;
+pub mod testkit;
+pub mod util;
+pub mod virt;
+
+/// Crate version reported in benchmark output (`benchmark_version`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

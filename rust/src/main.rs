@@ -1,0 +1,8 @@
+//! `gvbench` — the GPU-Virt-Bench command-line tool.
+//!
+//! See `gvbench help` (or [`gvb::cli::args::USAGE`]) for usage.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(gvb::cli::main_with_args(&argv));
+}

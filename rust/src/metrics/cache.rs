@@ -1,0 +1,160 @@
+//! L2 cache isolation metrics CACHE-001..004 (paper §3.5).
+//!
+//! Measured by replaying tenant access streams through the set-associative
+//! L2 model. MIG way-partitions the cache; software backends share it —
+//! the hit-rate / eviction differences are the replacement policy's doing.
+
+use crate::cudalite::Api;
+use crate::simgpu::kernel::{duration_ns, ExecContext, KernelDesc};
+use crate::simgpu::TenantId;
+use crate::virt::TenantConfig;
+
+use super::{MetricResult, RunConfig};
+
+const VICTIM: TenantId = 1;
+
+fn api_for(cfg: &RunConfig) -> Api {
+    let mut api = Api::with_backend(&cfg.system, cfg.seed);
+    for t in 1..=cfg.tenants.max(2) {
+        // MIG carves L2 ways per tenant at registration.
+        api.ctx_create(t, TenantConfig::unlimited().with_sm_limit(1.0 / cfg.tenants.max(2) as f64))
+            .expect("ctx");
+    }
+    api
+}
+
+/// Replay: victim works over a working set that fits its fair share of L2;
+/// neighbours stream over large buffers (the cache-hostile pattern).
+fn run_replay(api: &mut Api, cfg: &RunConfig, rounds: usize) {
+    // Victim working set sized to fit even a 1-slice MIG partition
+    // (~2/16 of L2): the test probes *cross-tenant* pressure, not the
+    // victim's own capacity.
+    let ws = api.dev.spec.l2_bytes / 12;
+    // Neighbour pressure is bursty: per-round stream sizes straddle the
+    // LRU eviction threshold (≈ ways·sets·line / round), so the victim's
+    // hit rate lands between the all-hit and all-miss extremes — as real
+    // mixed workloads do.
+    let mean_stream = api.dev.spec.l2_bytes as f64 / 3.2;
+    api.dev.l2.access_range(VICTIM, 0, ws);
+    api.dev.l2.reset_stats();
+    let mut rng = api.dev.rng().fork();
+    for r in 0..rounds {
+        // Victim touches its set...
+        api.dev.l2.access_range(VICTIM, 0, ws);
+        // ...while each neighbour streams fresh gigabyte-spaced regions
+        // (cache-hostile: never re-touches a line).
+        for t in 2..=cfg.tenants.max(2) {
+            let stream = (mean_stream * rng.f64_range(0.2, 1.8)) as u64;
+            let base = ((t as u64) << 34) | (r as u64 * (1u64 << 28));
+            api.dev.l2.access_range(t, base, stream);
+        }
+    }
+}
+
+/// CACHE-001: victim L2 hit rate under multi-tenant load (paper eq. 25), %.
+pub fn cache_001(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    run_replay(&mut api, cfg, 12);
+    let hit = api.dev.l2.stats(VICTIM).hit_rate() * 100.0;
+    MetricResult::from_value("CACHE-001", &cfg.system, hit)
+}
+
+/// CACHE-002: fraction of victim evictions caused by other tenants, %.
+pub fn cache_002(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    run_replay(&mut api, cfg, 12);
+    let rate = api.dev.l2.stats(VICTIM).cross_eviction_rate() * 100.0;
+    MetricResult::from_value("CACHE-002", &cfg.system, rate)
+}
+
+/// CACHE-003: performance drop from working-set collision, %: kernel
+/// duration with the multi-tenant hit rate vs the solo hit rate.
+pub fn cache_003(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    let ws = api.dev.spec.l2_bytes / 12;
+    // Solo hit rate.
+    api.dev.l2.access_range(VICTIM, 0, ws);
+    api.dev.l2.reset_stats();
+    api.dev.l2.access_range(VICTIM, 0, ws);
+    let hit_solo = api.dev.l2.stats(VICTIM).hit_rate();
+    // Contended hit rate.
+    api.dev.l2.reset_stats();
+    run_replay(&mut api, cfg, 12);
+    let hit_cont = api.dev.l2.stats(VICTIM).hit_rate();
+    // Translate hit rates into kernel time via the roofline model.
+    let kernel = KernelDesc::streaming(ws as f64 * 16.0);
+    let spec = &api.dev.spec;
+    let t_solo = duration_ns(spec, &kernel, &ExecContext { sms: spec.sm_count, l2_hit_rate: hit_solo, bw_share: 1.0 });
+    let t_cont = duration_ns(spec, &kernel, &ExecContext { sms: spec.sm_count, l2_hit_rate: hit_cont, bw_share: 1.0 });
+    let drop = ((t_cont - t_solo) / t_solo * 100.0).max(0.0);
+    MetricResult::from_value("CACHE-003", &cfg.system, drop)
+}
+
+/// CACHE-004: added latency from L2 contention, %: like CACHE-003 but for
+/// a latency-sensitive small kernel repeatedly touching a hot buffer.
+pub fn cache_004(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    let hot = api.dev.spec.l2_bytes / 16;
+    api.dev.l2.access_range(VICTIM, 0, hot);
+    api.dev.l2.reset_stats();
+    api.dev.l2.access_range(VICTIM, 0, hot);
+    let hit_solo = api.dev.l2.stats(VICTIM).hit_rate();
+    // Neighbours blast the cache between victim touches.
+    api.dev.l2.reset_stats();
+    for r in 0..10u64 {
+        for t in 2..=cfg.tenants.max(2) {
+            api.dev.l2.access_range(t, (t as u64) << 32 | (r * 64 << 20), 8 << 20);
+        }
+        api.dev.l2.access_range(VICTIM, 0, hot);
+    }
+    let hit_cont = api.dev.l2.stats(VICTIM).hit_rate();
+    let kernel = KernelDesc::streaming(hot as f64 * 4.0);
+    let spec = &api.dev.spec;
+    let t_solo = duration_ns(spec, &kernel, &ExecContext { sms: spec.sm_count, l2_hit_rate: hit_solo, bw_share: 1.0 });
+    let t_cont = duration_ns(spec, &kernel, &ExecContext { sms: spec.sm_count, l2_hit_rate: hit_cont, bw_share: 1.0 });
+    let overhead = ((t_cont - t_solo) / t_solo * 100.0).max(0.0);
+    MetricResult::from_value("CACHE-004", &cfg.system, overhead)
+}
+
+/// Run the whole category in Table 8 order.
+pub fn run_all(cfg: &RunConfig) -> Vec<MetricResult> {
+    vec![cache_001(cfg), cache_002(cfg), cache_003(cfg), cache_004(cfg)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(system: &str) -> RunConfig {
+        RunConfig::quick(system)
+    }
+
+    #[test]
+    fn cache001_mig_retains_hits_under_load() {
+        let m = cache_001(&quick("mig")).value;
+        let h = cache_001(&quick("hami")).value;
+        assert!(m > h, "mig={m}% hami={h}%");
+        assert!(m > 90.0, "mig={m}%");
+    }
+
+    #[test]
+    fn cache002_no_cross_eviction_under_mig() {
+        assert_eq!(cache_002(&quick("mig")).value, 0.0);
+        let h = cache_002(&quick("hami")).value;
+        assert!(h > 10.0, "hami cross-eviction={h}%");
+    }
+
+    #[test]
+    fn cache003_collision_hurts_shared_cache() {
+        let m = cache_003(&quick("mig")).value;
+        let h = cache_003(&quick("hami")).value;
+        assert!(h > m, "hami={h}% mig={m}%");
+    }
+
+    #[test]
+    fn cache004_contention_overhead_positive_shared() {
+        let h = cache_004(&quick("hami")).value;
+        let m = cache_004(&quick("mig")).value;
+        assert!(h >= m, "hami={h}% mig={m}%");
+    }
+}

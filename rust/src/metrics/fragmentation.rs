@@ -1,0 +1,138 @@
+//! Memory fragmentation metrics FRAG-001..003 (paper §3.9).
+//!
+//! The churn workload mimics LLM serving: interleaved short-lived KV-cache
+//! blocks and long-lived weight buffers. Fragmentation emerges from the
+//! real free-list allocator in `simgpu::memory`.
+
+use crate::cudalite::Api;
+use crate::simgpu::TenantId;
+use crate::virt::TenantConfig;
+
+use super::{MetricResult, RunConfig};
+
+const TENANT: TenantId = 1;
+
+fn api_for(cfg: &RunConfig) -> Api {
+    let mut api = Api::with_backend(&cfg.system, cfg.seed);
+    api.ctx_create(TENANT, TenantConfig::unlimited()).expect("ctx");
+    api
+}
+
+/// Run an alloc/free churn and leave the heap fragmented. Phase 1 fills
+/// the device to ~85 % (a loaded serving node); phase 2 churns with
+/// balanced alloc/free, carving holes across the whole address range.
+/// Returns the surviving pointers.
+fn churn(api: &mut Api, cfg: &RunConfig) -> Vec<u64> {
+    let mut live: Vec<u64> = Vec::new();
+    let mut rng = api.dev.rng().fork();
+    let target = api.dev.memory.capacity() * 85 / 100;
+    // Phase 1: fill with mixed sizes 2–128 MiB.
+    while api.dev.memory.used() < target {
+        let size = (2u64 << 20) << rng.range(0, 7);
+        match api.mem_alloc(TENANT, size) {
+            Ok(p) => live.push(p),
+            Err(_) => break,
+        }
+    }
+    // Phase 2: steady-state churn.
+    for _ in 0..cfg.iterations.max(60) * 6 {
+        if !live.is_empty() && rng.chance(0.5) {
+            let idx = rng.range(0, live.len());
+            let ptr = live.swap_remove(idx);
+            api.mem_free(TENANT, ptr).unwrap();
+        } else {
+            let size = (2u64 << 20) << rng.range(0, 7);
+            if let Ok(p) = api.mem_alloc(TENANT, size) {
+                live.push(p);
+            }
+        }
+    }
+    live
+}
+
+/// FRAG-001: fragmentation index after churn (paper eq. 27), %.
+pub fn frag_001(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    churn(&mut api, cfg);
+    let frag = api.dev.memory.frag_stats().fragmentation_index * 100.0;
+    MetricResult::from_value("FRAG-001", &cfg.system, frag)
+}
+
+/// FRAG-002: allocation latency degradation with fragmentation, %.
+pub fn frag_002(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    let reps = cfg.iterations.max(30);
+    let mean_alloc = |api: &mut Api| -> f64 {
+        let mut total = 0.0;
+        for _ in 0..reps {
+            let t0 = api.now_ns();
+            let p = api.mem_alloc(TENANT, 4 << 20).expect("alloc");
+            total += (api.now_ns() - t0) as f64;
+            api.mem_free(TENANT, p).unwrap();
+        }
+        total / reps as f64
+    };
+    let fresh = mean_alloc(&mut api);
+    churn(&mut api, cfg);
+    let fragmented = mean_alloc(&mut api);
+    let degradation = ((fragmented - fresh) / fresh * 100.0).max(0.0);
+    MetricResult::from_value("FRAG-002", &cfg.system, degradation)
+}
+
+/// FRAG-003: compaction efficiency, % — fraction of free memory returned
+/// to the largest contiguous block by defragmentation.
+pub fn frag_003(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    churn(&mut api, cfg);
+    let before = api.dev.memory.frag_stats();
+    let (moved, _reloc) = api.dev.memory.compact();
+    // Charge the copy cost: moved bytes at HBM bandwidth (read+write).
+    let cost_ns = moved as f64 * 2.0 / (api.dev.spec.hbm_bw_gbps * 1e9) * 1e9;
+    api.dev.clock.advance_f(cost_ns);
+    let after = api.dev.memory.frag_stats();
+    let reclaimed = if after.total_free == 0 {
+        100.0
+    } else {
+        (after.largest_free - before.largest_free) as f64 / after.total_free as f64 * 100.0
+    };
+    MetricResult::from_value("FRAG-003", &cfg.system, reclaimed.clamp(0.0, 100.0))
+}
+
+/// Run the whole category in Table 8 order.
+pub fn run_all(cfg: &RunConfig) -> Vec<MetricResult> {
+    vec![frag_001(cfg), frag_002(cfg), frag_003(cfg)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(system: &str) -> RunConfig {
+        RunConfig::quick(system)
+    }
+
+    #[test]
+    fn frag001_churn_fragments() {
+        let f = frag_001(&quick("native")).value;
+        assert!(f > 5.0 && f < 100.0, "frag index={f}%");
+    }
+
+    #[test]
+    fn frag002_degradation_positive() {
+        let d = frag_002(&quick("native")).value;
+        assert!(d > 0.0, "degradation={d}%");
+    }
+
+    #[test]
+    fn frag003_compaction_reclaims() {
+        let r = frag_003(&quick("native")).value;
+        assert!(r > 10.0, "reclaimed={r}%");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = frag_001(&quick("hami")).value;
+        let b = frag_001(&quick("hami")).value;
+        assert_eq!(a, b);
+    }
+}

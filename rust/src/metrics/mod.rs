@@ -1,0 +1,244 @@
+//! The paper's 56-metric taxonomy (§3, Table 8) and the machinery to run it.
+//!
+//! Each category lives in its own module; [`taxonomy`] holds the static
+//! descriptor table (id, name, unit, direction, category). A metric is a
+//! function `fn(&RunConfig) -> MetricResult`; [`registry`] maps ids to
+//! functions so the runner, CLI and benches share one dispatch table.
+
+pub mod bandwidth;
+pub mod cache;
+pub mod error_recovery;
+pub mod fragmentation;
+pub mod isolation;
+pub mod llm;
+pub mod nccl;
+pub mod overhead;
+pub mod pcie;
+pub mod registry;
+pub mod scheduling;
+pub mod taxonomy;
+
+use crate::stats::Summary;
+
+/// Metric category (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    Overhead,
+    Isolation,
+    Llm,
+    MemoryBandwidth,
+    CacheIsolation,
+    Pcie,
+    Nccl,
+    Scheduling,
+    Fragmentation,
+    ErrorRecovery,
+}
+
+impl Category {
+    pub const ALL: [Category; 10] = [
+        Category::Overhead,
+        Category::Isolation,
+        Category::Llm,
+        Category::MemoryBandwidth,
+        Category::CacheIsolation,
+        Category::Pcie,
+        Category::Nccl,
+        Category::Scheduling,
+        Category::Fragmentation,
+        Category::ErrorRecovery,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Overhead => "Overhead",
+            Category::Isolation => "Isolation",
+            Category::Llm => "LLM",
+            Category::MemoryBandwidth => "Memory Bandwidth",
+            Category::CacheIsolation => "Cache Isolation",
+            Category::Pcie => "PCIe",
+            Category::Nccl => "NCCL/P2P",
+            Category::Scheduling => "Scheduling",
+            Category::Fragmentation => "Fragmentation",
+            Category::ErrorRecovery => "Error Recovery",
+        }
+    }
+
+    /// Default production weights (paper §6.3).
+    pub fn weight(&self) -> f64 {
+        match self {
+            Category::Overhead => 0.15,
+            Category::Isolation => 0.20,
+            Category::Llm => 0.20,
+            Category::MemoryBandwidth => 0.10,
+            Category::CacheIsolation => 0.08,
+            Category::Pcie => 0.07,
+            Category::Nccl => 0.05,
+            Category::Scheduling => 0.07,
+            Category::Fragmentation => 0.04,
+            Category::ErrorRecovery => 0.04,
+        }
+    }
+
+    /// CLI key (`--category overhead`).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Category::Overhead => "overhead",
+            Category::Isolation => "isolation",
+            Category::Llm => "llm",
+            Category::MemoryBandwidth => "bandwidth",
+            Category::CacheIsolation => "cache",
+            Category::Pcie => "pcie",
+            Category::Nccl => "nccl",
+            Category::Scheduling => "scheduling",
+            Category::Fragmentation => "fragmentation",
+            Category::ErrorRecovery => "error",
+        }
+    }
+
+    pub fn from_key(key: &str) -> Option<Category> {
+        Category::ALL.iter().copied().find(|c| c.key() == key)
+    }
+}
+
+/// Whether larger metric values are better (Table 8 "Better" column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    HigherBetter,
+    LowerBetter,
+    /// Boolean pass/fail (True is better).
+    Boolean,
+}
+
+/// Static description of one metric (one row of Table 8).
+#[derive(Clone, Copy, Debug)]
+pub struct Descriptor {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub description: &'static str,
+    pub unit: &'static str,
+    pub category: Category,
+    pub direction: Direction,
+}
+
+/// Configuration of a metric run (paper §4.4 defaults).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Backend key: `native` / `hami` / `fcsp` / `mig`.
+    pub system: String,
+    /// Measured iterations per metric (default 100).
+    pub iterations: usize,
+    /// Warmup iterations discarded (default 10).
+    pub warmup: usize,
+    /// Concurrent tenants in multi-tenant scenarios (default 4).
+    pub tenants: u32,
+    /// RNG seed.
+    pub seed: u64,
+    /// Memory quota per tenant in multi-tenant scenarios (bytes).
+    pub mem_limit: u64,
+    /// SM limit per tenant in multi-tenant scenarios (fraction).
+    pub sm_limit: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            system: "native".to_string(),
+            iterations: 100,
+            warmup: 10,
+            tenants: 4,
+            seed: 42,
+            mem_limit: 10 << 30, // 10 GiB = equal quarter of an A100-40GB
+            sm_limit: 0.25,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn for_system(system: &str) -> RunConfig {
+        RunConfig { system: system.to_string(), ..Default::default() }
+    }
+
+    /// Smaller iteration counts for quick runs / CI.
+    pub fn quick(system: &str) -> RunConfig {
+        RunConfig {
+            system: system.to_string(),
+            iterations: 25,
+            warmup: 3,
+            ..Default::default()
+        }
+    }
+}
+
+/// Outcome of one metric on one system.
+#[derive(Clone, Debug)]
+pub struct MetricResult {
+    pub id: &'static str,
+    pub system: String,
+    /// Headline value (mean for latency metrics, the computed ratio/index
+    /// for derived metrics, 1.0/0.0 for booleans).
+    pub value: f64,
+    /// Full sample statistics where the metric is sample-based.
+    pub summary: Summary,
+    /// Boolean outcome for pass/fail metrics.
+    pub pass: Option<bool>,
+}
+
+impl MetricResult {
+    /// Build from raw samples: value = mean.
+    pub fn from_samples(id: &'static str, system: &str, samples: &[f64]) -> MetricResult {
+        let summary = Summary::from_samples(samples);
+        MetricResult { id, system: system.to_string(), value: summary.mean, summary, pass: None }
+    }
+
+    /// Build from a single derived value.
+    pub fn from_value(id: &'static str, system: &str, value: f64) -> MetricResult {
+        MetricResult {
+            id,
+            system: system.to_string(),
+            value,
+            summary: Summary::from_samples(&[value]),
+            pass: None,
+        }
+    }
+
+    /// Build a boolean result.
+    pub fn from_pass(id: &'static str, system: &str, pass: bool) -> MetricResult {
+        MetricResult {
+            id,
+            system: system.to_string(),
+            value: if pass { 1.0 } else { 0.0 },
+            summary: Summary::from_samples(&[if pass { 1.0 } else { 0.0 }]),
+            pass: Some(pass),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn category_weights_sum_to_one() {
+        let sum: f64 = Category::ALL.iter().map(|c| c.weight()).sum();
+        assert!((sum - 1.0).abs() < 1e-12, "sum={sum}");
+    }
+
+    #[test]
+    fn category_keys_roundtrip() {
+        for c in Category::ALL {
+            assert_eq!(Category::from_key(c.key()), Some(c));
+        }
+        assert_eq!(Category::from_key("bogus"), None);
+    }
+
+    #[test]
+    fn result_constructors() {
+        let r = MetricResult::from_samples("OH-001", "native", &[1.0, 2.0, 3.0]);
+        assert_eq!(r.value, 2.0);
+        assert_eq!(r.summary.count, 3);
+        let b = MetricResult::from_pass("IS-005", "hami", true);
+        assert_eq!(b.pass, Some(true));
+        assert_eq!(b.value, 1.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! NCCL/P2P communication metrics NCCL-001..004 (paper §3.7).
+//!
+//! Collectives ride the simulated interconnect ([`Topology`]); software
+//! virtualization intercepts NCCL's internal kernel launches, so each
+//! collective pays `hook × kernels_per_op` of added CPU time.
+
+use crate::cudalite::{Api, CollectiveCtx};
+use crate::simgpu::nvlink::Topology;
+use crate::simgpu::TenantId;
+use crate::virt::TenantConfig;
+
+use super::{MetricResult, RunConfig};
+
+const TENANT: TenantId = 1;
+const RANKS: u32 = 4;
+
+fn collective_ctx(cfg: &RunConfig) -> (Api, CollectiveCtx) {
+    let mut api = Api::with_backend(&cfg.system, cfg.seed);
+    api.ctx_create(TENANT, TenantConfig::unlimited()).expect("ctx");
+    // Paper testbed: A100 PCIe — collectives over the PCIe switch.
+    let topo = Topology::pcie_node(RANKS, api.dev.spec.pcie_gbps);
+    api.virt.hook_overhead_ns(&mut api.dev); // warm (FCSP caches on first call)
+    let hook = api.virt.hook_overhead_ns(&mut api.dev);
+    let clock = api.dev.clock.clone();
+    // Ring collectives launch ~2 kernels per rank per operation.
+    let coll = CollectiveCtx::new(topo, clock).with_virt_overhead(hook, 2 * RANKS);
+    (api, coll)
+}
+
+/// NCCL-001: allreduce latency, µs (64 MiB buffer).
+pub fn nccl_001(cfg: &RunConfig) -> MetricResult {
+    let (_api, mut coll) = collective_ctx(cfg);
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    for _ in 0..cfg.warmup + cfg.iterations {
+        col.record(coll.allreduce(64 << 20));
+    }
+    MetricResult::from_samples("NCCL-001", &cfg.system, col.samples())
+}
+
+/// NCCL-002: allgather achieved bandwidth, GB/s.
+pub fn nccl_002(cfg: &RunConfig) -> MetricResult {
+    let (_api, mut coll) = collective_ctx(cfg);
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    for _ in 0..cfg.warmup + cfg.iterations {
+        col.record(coll.allgather(256 << 20));
+    }
+    MetricResult::from_samples("NCCL-002", &cfg.system, col.samples())
+}
+
+/// NCCL-003: P2P bandwidth, GB/s.
+pub fn nccl_003(cfg: &RunConfig) -> MetricResult {
+    let (_api, mut coll) = collective_ctx(cfg);
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    for _ in 0..cfg.warmup + cfg.iterations {
+        col.record(coll.p2p(256 << 20));
+    }
+    MetricResult::from_samples("NCCL-003", &cfg.system, col.samples())
+}
+
+/// NCCL-004: broadcast bandwidth, GB/s.
+pub fn nccl_004(cfg: &RunConfig) -> MetricResult {
+    let (_api, mut coll) = collective_ctx(cfg);
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    for _ in 0..cfg.warmup + cfg.iterations {
+        col.record(coll.broadcast(256 << 20));
+    }
+    MetricResult::from_samples("NCCL-004", &cfg.system, col.samples())
+}
+
+/// Run the whole category in Table 8 order.
+pub fn run_all(cfg: &RunConfig) -> Vec<MetricResult> {
+    vec![nccl_001(cfg), nccl_002(cfg), nccl_003(cfg), nccl_004(cfg)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(system: &str) -> RunConfig {
+        RunConfig::quick(system)
+    }
+
+    #[test]
+    fn nccl001_hami_adds_latency() {
+        let n = nccl_001(&quick("native")).value;
+        let h = nccl_001(&quick("hami")).value;
+        let f = nccl_001(&quick("fcsp")).value;
+        assert!(h > n && f > n && f < h, "n={n} f={f} h={h}");
+    }
+
+    #[test]
+    fn nccl002_bandwidth_below_link_peak() {
+        let bw = nccl_002(&quick("native")).value;
+        // Allgather moves (n-1)/n of the payload per rank over a 25 GB/s
+        // link: achieved output bandwidth can reach ~n/(n-1)·link ≈ 33.
+        assert!(bw > 15.0 && bw < 35.0, "allgather bw={bw}");
+    }
+
+    #[test]
+    fn nccl003_p2p_near_link() {
+        let bw = nccl_003(&quick("native")).value;
+        assert!(bw > 22.0 && bw <= 25.2, "p2p bw={bw}");
+    }
+
+    #[test]
+    fn nccl004_broadcast_sane() {
+        let bw = nccl_004(&quick("native")).value;
+        assert!(bw > 20.0 && bw <= 25.2, "broadcast bw={bw}");
+    }
+}

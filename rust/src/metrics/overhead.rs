@@ -1,0 +1,334 @@
+//! Overhead metrics OH-001..OH-010 (paper §3.1, Table 4).
+//!
+//! All latencies are measured with the virtual-clock stopwatch around the
+//! `cudalite` call — the simulated analogue of the paper's
+//! `clock_gettime(CLOCK_MONOTONIC)` pattern (Listings 3–4).
+
+use crate::cudalite::Api;
+use crate::simgpu::kernel::KernelDesc;
+use crate::simgpu::TenantId;
+use crate::virt::TenantConfig;
+
+use super::{MetricResult, RunConfig};
+
+const TENANT: TenantId = 1;
+
+fn api_for(cfg: &RunConfig) -> Api {
+    let mut api = Api::with_backend(&cfg.system, cfg.seed);
+    api.ctx_create(TENANT, TenantConfig::unlimited()).expect("ctx");
+    api
+}
+
+/// OH-001: `cuLaunchKernel` CPU-side latency over a null kernel.
+pub fn oh_001(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    let kernel = KernelDesc::null();
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    for _ in 0..cfg.warmup + cfg.iterations {
+        let t0 = api.now_ns();
+        api.launch_kernel(TENANT, 0, &kernel).expect("launch");
+        col.record((api.now_ns() - t0) as f64 / 1e3);
+        api.sync_device(TENANT).unwrap();
+    }
+    MetricResult::from_samples("OH-001", &cfg.system, col.samples())
+}
+
+/// OH-002: `cuMemAlloc` latency (1 MiB requests).
+pub fn oh_002(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    for _ in 0..cfg.warmup + cfg.iterations {
+        let t0 = api.now_ns();
+        let ptr = api.mem_alloc(TENANT, 1 << 20).expect("alloc");
+        col.record((api.now_ns() - t0) as f64 / 1e3);
+        api.mem_free(TENANT, ptr).unwrap();
+    }
+    MetricResult::from_samples("OH-002", &cfg.system, col.samples())
+}
+
+/// OH-003: `cuMemFree` latency.
+pub fn oh_003(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    for _ in 0..cfg.warmup + cfg.iterations {
+        let ptr = api.mem_alloc(TENANT, 1 << 20).expect("alloc");
+        let t0 = api.now_ns();
+        api.mem_free(TENANT, ptr).unwrap();
+        col.record((api.now_ns() - t0) as f64 / 1e3);
+    }
+    MetricResult::from_samples("OH-003", &cfg.system, col.samples())
+}
+
+/// OH-004: context creation time (create/destroy cycles).
+pub fn oh_004(cfg: &RunConfig) -> MetricResult {
+    let mut api = Api::with_backend(&cfg.system, cfg.seed);
+    let mut col = crate::stats::Collector::new(cfg.warmup.min(3), cfg.iterations);
+    for i in 0..cfg.warmup.min(3) + cfg.iterations {
+        let tenant = (i + 1) as TenantId;
+        let t0 = api.now_ns();
+        api.ctx_create(tenant, TenantConfig::unlimited()).expect("ctx");
+        col.record((api.now_ns() - t0) as f64 / 1e3);
+        api.ctx_destroy(tenant).unwrap();
+    }
+    MetricResult::from_samples("OH-004", &cfg.system, col.samples())
+}
+
+/// OH-005: per-call interception overhead, isolated by differencing the
+/// same call (`cuMemGetInfo`, a pure hook path) against native (paper
+/// Listing 4 method). Reported in ns.
+pub fn oh_005(cfg: &RunConfig) -> MetricResult {
+    let mut virt = api_for(cfg);
+    let mut native = {
+        let mut cfg_n = cfg.clone();
+        cfg_n.system = "native".to_string();
+        api_for(&cfg_n)
+    };
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    for _ in 0..cfg.warmup + cfg.iterations {
+        let t0 = virt.now_ns();
+        virt.mem_get_info(TENANT);
+        let t_virt = (virt.now_ns() - t0) as f64;
+        let t0 = native.now_ns();
+        native.mem_get_info(TENANT);
+        let t_native = (native.now_ns() - t0) as f64;
+        col.record((t_virt - t_native).max(0.0));
+    }
+    MetricResult::from_samples("OH-005", &cfg.system, col.samples())
+}
+
+/// OH-006: shared-region semaphore wait under multi-tenant churn, µs per
+/// acquisition. `cfg.tenants` containers hammer alloc/free; the region's
+/// M/D/1 contention model (calibrated to the observed lock rate) yields
+/// the per-acquisition wait — sub-µs for HAMi's 400 ns critical section,
+/// an order less for FCSP's atomic fast path.
+pub fn oh_006(cfg: &RunConfig) -> MetricResult {
+    let mut api = Api::with_backend(&cfg.system, cfg.seed);
+    let tenants = cfg.tenants.max(2);
+    for t in 0..tenants {
+        api.ctx_create(
+            t as TenantId + 1,
+            TenantConfig::unlimited().with_sm_limit(1.0 / tenants as f64),
+        )
+        .unwrap();
+    }
+    for i in 0..(cfg.iterations * 8).max(200) {
+        let tenant = (i as u32 % tenants) as TenantId + 1;
+        let ptr = api.mem_alloc(tenant, 1 << 16).expect("alloc");
+        api.mem_free(tenant, ptr).unwrap();
+        api.virt.tick(&mut api.dev); // recalibrate the observed lock rate
+    }
+    let (wait_ns, acquisitions) = api.virt.contention_stats();
+    let per_acq_us = if acquisitions == 0 { 0.0 } else { wait_ns / acquisitions as f64 / 1e3 };
+    MetricResult::from_value("OH-006", &cfg.system, per_acq_us)
+}
+
+/// OH-007: per-allocation *tracking* cost — the accounting data structure
+/// alone (hash-table insert/remove), excluding hooks, locks and NVML
+/// reconciliation (those are OH-005/006 and part of OH-002), in ns.
+pub fn oh_007(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    let base = api.virt.tracking_cost_ns();
+    // Report with the same jitter treatment as any measured latency.
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    for _ in 0..cfg.warmup + cfg.iterations {
+        let j = api.dev.jitter();
+        col.record(base * j);
+    }
+    MetricResult::from_samples("OH-007", &cfg.system, col.samples())
+}
+
+/// OH-008: rate-limiter check latency — launch latency with a (lenient)
+/// SM limit configured minus without, in ns. The limit is high enough that
+/// no throttling engages, isolating the token-bucket arithmetic.
+pub fn oh_008(cfg: &RunConfig) -> MetricResult {
+    let mean_launch = |limited: bool| -> f64 {
+        let mut api = Api::with_backend(&cfg.system, cfg.seed);
+        let tc = if limited {
+            TenantConfig::unlimited().with_sm_limit(0.99)
+        } else {
+            TenantConfig::unlimited()
+        };
+        api.ctx_create(TENANT, tc).unwrap();
+        let kernel = KernelDesc::null();
+        let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+        for _ in 0..cfg.warmup + cfg.iterations {
+            let t0 = api.now_ns();
+            api.launch_kernel(TENANT, 0, &kernel).expect("launch");
+            col.record((api.now_ns() - t0) as f64);
+            api.sync_device(TENANT).unwrap();
+        }
+        col.summary().mean
+    };
+    let with = mean_launch(true);
+    let without = mean_launch(false);
+    MetricResult::from_value("OH-008", &cfg.system, (with - without).max(0.0))
+}
+
+/// OH-009: monitoring CPU overhead (paper eq. 4), in percent.
+pub fn oh_009(cfg: &RunConfig) -> MetricResult {
+    let api = api_for(cfg);
+    MetricResult::from_value("OH-009", &cfg.system, api.virt.monitor_cpu_overhead() * 100.0)
+}
+
+/// OH-010: end-to-end throughput degradation vs native (paper eq. 5), in
+/// percent. Workload: a mixed loop of alloc → H2D copy → compute kernels →
+/// free, the shape of an inference serving step.
+pub fn oh_010(cfg: &RunConfig) -> MetricResult {
+    let throughput = |system: &str| -> f64 {
+        let mut c = cfg.clone();
+        c.system = system.to_string();
+        let mut api = Api::with_backend(system, cfg.seed);
+        // Configure like a real deployment: quota + SM limit that the
+        // steady workload stays *under* (limits cost even when not binding).
+        // Memory quota only — OH-010 measures virtualization overhead on
+        // an unthrottled workload (the capacity trade of an SM limit is a
+        // policy choice, not overhead).
+        api.ctx_create(TENANT, TenantConfig::unlimited().with_mem_limit(20 << 30)).unwrap();
+        let kernel = KernelDesc::gemm(1024, 1024, 1024, false);
+        let steps = cfg.iterations.max(20);
+        let t0 = api.now_ns();
+        for _ in 0..steps {
+            // An inference step: activation + KV-block + scratch
+            // allocations, input copy, four layer kernels, frees.
+            let a = api.mem_alloc(TENANT, 8 << 20).expect("alloc");
+            let b = api.mem_alloc(TENANT, 2 << 20).expect("alloc");
+            let c = api.mem_alloc(TENANT, 4 << 20).expect("alloc");
+            api.memcpy(TENANT, crate::simgpu::pcie::Direction::HostToDevice, 8 << 20, true)
+                .unwrap();
+            for _ in 0..4 {
+                api.launch_kernel(TENANT, 0, &kernel).expect("launch");
+            }
+            api.sync_device(TENANT).unwrap();
+            for p in [a, b, c] {
+                api.mem_free(TENANT, p).unwrap();
+            }
+        }
+        steps as f64 / ((api.now_ns() - t0) as f64 / 1e9)
+    };
+    let native = throughput("native");
+    let virt = throughput(&cfg.system);
+    let degradation = ((native - virt) / native * 100.0).max(0.0);
+    MetricResult::from_value("OH-010", &cfg.system, degradation)
+}
+
+/// Run the whole category in Table 8 order.
+pub fn run_all(cfg: &RunConfig) -> Vec<MetricResult> {
+    vec![
+        oh_001(cfg),
+        oh_002(cfg),
+        oh_003(cfg),
+        oh_004(cfg),
+        oh_005(cfg),
+        oh_006(cfg),
+        oh_007(cfg),
+        oh_008(cfg),
+        oh_009(cfg),
+        oh_010(cfg),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(system: &str) -> RunConfig {
+        RunConfig::quick(system)
+    }
+
+    #[test]
+    fn oh001_native_matches_table4() {
+        let r = oh_001(&quick("native"));
+        assert!((r.value - 4.2).abs() < 0.4, "native launch = {} µs", r.value);
+    }
+
+    #[test]
+    fn oh001_ordering_native_fcsp_hami() {
+        let n = oh_001(&quick("native")).value;
+        let f = oh_001(&quick("fcsp")).value;
+        let h = oh_001(&quick("hami")).value;
+        assert!(n < f && f < h, "n={n} f={f} h={h}");
+        // Paper: HAMi ≈ 3.6x native launch overall; ours is the CPU-side
+        // component without throttle waits — still clearly elevated.
+        assert!(h / n > 1.1, "h/n={}", h / n);
+    }
+
+    #[test]
+    fn oh002_oh003_native_calibration() {
+        let a = oh_002(&quick("native"));
+        let f = oh_003(&quick("native"));
+        assert!((a.value - 12.5).abs() < 1.0, "alloc={} µs", a.value);
+        assert!((f.value - 8.1).abs() < 0.8, "free={} µs", f.value);
+    }
+
+    #[test]
+    fn oh002_oh003_virt_match_table4() {
+        // Table 4: alloc 45.2 (HAMi) / 28.3 (FCSP); free 32.4 / 18.6.
+        let ah = oh_002(&quick("hami")).value;
+        let af = oh_002(&quick("fcsp")).value;
+        let fh = oh_003(&quick("hami")).value;
+        let ff = oh_003(&quick("fcsp")).value;
+        assert!((ah - 45.2).abs() < 4.0, "hami alloc={ah}");
+        assert!((af - 28.3).abs() < 3.0, "fcsp alloc={af}");
+        assert!((fh - 32.4).abs() < 3.5, "hami free={fh}");
+        assert!((ff - 18.6).abs() < 2.5, "fcsp free={ff}");
+    }
+
+    #[test]
+    fn oh004_hami_heaviest() {
+        let n = oh_004(&quick("native")).value;
+        let h = oh_004(&quick("hami")).value;
+        let f = oh_004(&quick("fcsp")).value;
+        let m = oh_004(&quick("mig")).value;
+        assert!((n - 125.0).abs() < 12.0, "native ctx={n}");
+        assert!((h - 312.0).abs() < 35.0, "hami ctx={h}");
+        assert!((f - 198.0).abs() < 25.0, "fcsp ctx={f}");
+        assert!((m - n).abs() < 12.0, "mig ctx={m}");
+    }
+
+    #[test]
+    fn oh005_hook_costs() {
+        let h = oh_005(&quick("hami")).value;
+        let f = oh_005(&quick("fcsp")).value;
+        let m = oh_005(&quick("mig")).value;
+        assert!((h - 85.0).abs() < 20.0, "hami hook={h}");
+        assert!((f - 42.0).abs() < 15.0, "fcsp hook={f}");
+        assert!(m < 5.0, "mig hook={m}");
+    }
+
+    #[test]
+    fn oh006_contention_positive_for_software() {
+        let h = oh_006(&quick("hami")).value;
+        let f = oh_006(&quick("fcsp")).value;
+        let m = oh_006(&quick("mig")).value;
+        assert!(h > 0.0, "hami lock wait = {h}");
+        assert!(f < h, "fcsp={f} hami={h}");
+        assert_eq!(m, 0.0);
+    }
+
+    #[test]
+    fn oh009_polling() {
+        assert!(oh_009(&quick("native")).value == 0.0);
+        let h = oh_009(&quick("hami")).value;
+        assert!((h - 0.055).abs() < 0.01, "hami poll = {h}%");
+        assert!(oh_009(&quick("fcsp")).value < h);
+    }
+
+    #[test]
+    fn oh010_degradation_ordering() {
+        let h = oh_010(&quick("hami")).value;
+        let f = oh_010(&quick("fcsp")).value;
+        let m = oh_010(&quick("mig")).value;
+        assert!(h > f, "hami={h} fcsp={f}");
+        assert!(m < 3.0, "mig={m}");
+        // Paper: HAMi 18.5 %, FCSP 9.2 %.
+        assert!(h > 10.0 && h < 30.0, "hami={h}");
+        assert!(f > 4.0 && f < 16.0, "fcsp={f}");
+    }
+
+    #[test]
+    fn run_all_returns_ten() {
+        let rs = run_all(&quick("native"));
+        assert_eq!(rs.len(), 10);
+        assert!(rs.iter().all(|r| r.id.starts_with("OH-")));
+    }
+}

@@ -1,0 +1,116 @@
+//! Dispatch table: metric id → implementation. The runner, CLI and benches
+//! all go through [`run_metric`] / [`run_category`] / [`run_all`].
+
+use super::{
+    bandwidth, cache, error_recovery, fragmentation, isolation, llm, nccl, overhead, pcie,
+    scheduling, taxonomy, Category, MetricResult, RunConfig,
+};
+
+/// A metric implementation.
+pub type MetricFn = fn(&RunConfig) -> MetricResult;
+
+/// All (id, fn) pairs in Table 8 order.
+pub const REGISTRY: [(&str, MetricFn); 56] = [
+    ("OH-001", overhead::oh_001),
+    ("OH-002", overhead::oh_002),
+    ("OH-003", overhead::oh_003),
+    ("OH-004", overhead::oh_004),
+    ("OH-005", overhead::oh_005),
+    ("OH-006", overhead::oh_006),
+    ("OH-007", overhead::oh_007),
+    ("OH-008", overhead::oh_008),
+    ("OH-009", overhead::oh_009),
+    ("OH-010", overhead::oh_010),
+    ("IS-001", isolation::is_001),
+    ("IS-002", isolation::is_002),
+    ("IS-003", isolation::is_003),
+    ("IS-004", isolation::is_004),
+    ("IS-005", isolation::is_005),
+    ("IS-006", isolation::is_006),
+    ("IS-007", isolation::is_007),
+    ("IS-008", isolation::is_008),
+    ("IS-009", isolation::is_009),
+    ("IS-010", isolation::is_010),
+    ("LLM-001", llm::llm_001),
+    ("LLM-002", llm::llm_002),
+    ("LLM-003", llm::llm_003),
+    ("LLM-004", llm::llm_004),
+    ("LLM-005", llm::llm_005),
+    ("LLM-006", llm::llm_006),
+    ("LLM-007", llm::llm_007),
+    ("LLM-008", llm::llm_008),
+    ("LLM-009", llm::llm_009),
+    ("LLM-010", llm::llm_010),
+    ("BW-001", bandwidth::bw_001),
+    ("BW-002", bandwidth::bw_002),
+    ("BW-003", bandwidth::bw_003),
+    ("BW-004", bandwidth::bw_004),
+    ("CACHE-001", cache::cache_001),
+    ("CACHE-002", cache::cache_002),
+    ("CACHE-003", cache::cache_003),
+    ("CACHE-004", cache::cache_004),
+    ("PCIE-001", pcie::pcie_001),
+    ("PCIE-002", pcie::pcie_002),
+    ("PCIE-003", pcie::pcie_003),
+    ("PCIE-004", pcie::pcie_004),
+    ("NCCL-001", nccl::nccl_001),
+    ("NCCL-002", nccl::nccl_002),
+    ("NCCL-003", nccl::nccl_003),
+    ("NCCL-004", nccl::nccl_004),
+    ("SCHED-001", scheduling::sched_001),
+    ("SCHED-002", scheduling::sched_002),
+    ("SCHED-003", scheduling::sched_003),
+    ("SCHED-004", scheduling::sched_004),
+    ("FRAG-001", fragmentation::frag_001),
+    ("FRAG-002", fragmentation::frag_002),
+    ("FRAG-003", fragmentation::frag_003),
+    ("ERR-001", error_recovery::err_001),
+    ("ERR-002", error_recovery::err_002),
+    ("ERR-003", error_recovery::err_003),
+];
+
+/// Run a single metric by id.
+pub fn run_metric(id: &str, cfg: &RunConfig) -> Option<MetricResult> {
+    REGISTRY.iter().find(|(mid, _)| *mid == id).map(|(_, f)| f(cfg))
+}
+
+/// Run all metrics of a category, in Table 8 order.
+pub fn run_category(category: Category, cfg: &RunConfig) -> Vec<MetricResult> {
+    taxonomy::by_category(category)
+        .iter()
+        .filter_map(|d| run_metric(d.id, cfg))
+        .collect()
+}
+
+/// Run the full 56-metric suite.
+pub fn run_all(cfg: &RunConfig) -> Vec<MetricResult> {
+    REGISTRY.iter().map(|(_, f)| f(cfg)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_taxonomy_exactly() {
+        assert_eq!(REGISTRY.len(), taxonomy::ALL.len());
+        for (i, d) in taxonomy::ALL.iter().enumerate() {
+            assert_eq!(REGISTRY[i].0, d.id, "registry order mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn run_metric_dispatches() {
+        let cfg = RunConfig::quick("native");
+        let r = run_metric("OH-001", &cfg).unwrap();
+        assert_eq!(r.id, "OH-001");
+        assert!(run_metric("NOPE-1", &cfg).is_none());
+    }
+
+    #[test]
+    fn run_category_counts() {
+        let cfg = RunConfig::quick("native");
+        assert_eq!(run_category(Category::Fragmentation, &cfg).len(), 3);
+        assert_eq!(run_category(Category::Pcie, &cfg).len(), 4);
+    }
+}

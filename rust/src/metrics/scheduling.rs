@@ -1,0 +1,147 @@
+//! Scheduling metrics SCHED-001..004 (paper §3.8).
+
+use crate::cudalite::Api;
+use crate::simgpu::kernel::KernelDesc;
+use crate::simgpu::stream::StreamPriority;
+use crate::virt::TenantConfig;
+
+use super::{MetricResult, RunConfig};
+
+fn api_for(cfg: &RunConfig) -> Api {
+    let mut api = Api::with_backend(&cfg.system, cfg.seed);
+    api.ctx_create(1, TenantConfig::unlimited()).expect("ctx");
+    api
+}
+
+/// SCHED-001: context switch latency (µs): ping-pong between two contexts.
+pub fn sched_001(cfg: &RunConfig) -> MetricResult {
+    // Two half-share contexts (fits MIG's slice geometry).
+    let mut api = Api::with_backend(&cfg.system, cfg.seed);
+    api.ctx_create(1, TenantConfig::unlimited().with_sm_limit(0.4)).expect("ctx");
+    api.ctx_create(2, TenantConfig::unlimited().with_sm_limit(0.4)).unwrap();
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    let mut current = 1;
+    for _ in 0..cfg.warmup + cfg.iterations {
+        current = if current == 1 { 2 } else { 1 };
+        let t0 = api.now_ns();
+        api.ctx_switch(current).unwrap();
+        col.record((api.now_ns() - t0) as f64 / 1e3);
+    }
+    MetricResult::from_samples("SCHED-001", &cfg.system, col.samples())
+}
+
+/// SCHED-002: minimal-kernel launch+complete time (µs) — launch overhead
+/// plus the null-kernel body, measured to stream drain (unlike OH-001,
+/// which measures only the CPU-side call).
+pub fn sched_002(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    let kernel = KernelDesc::null();
+    let mut col = crate::stats::Collector::new(cfg.warmup, cfg.iterations);
+    for _ in 0..cfg.warmup + cfg.iterations {
+        let t0 = api.now_ns();
+        api.launch_kernel(1, 0, &kernel).expect("launch");
+        api.sync_stream(1, 0).unwrap();
+        col.record((api.now_ns() - t0) as f64 / 1e3);
+    }
+    MetricResult::from_samples("SCHED-002", &cfg.system, col.samples())
+}
+
+/// SCHED-003: stream concurrency efficiency (%): wall time of K kernels on
+/// K streams vs serially on one stream. Kernels are launch-dominated, so
+/// overlapped streams hide launch overhead; virtualization inflates the
+/// serial launch path and so *reduces* the measured efficiency.
+pub fn sched_003(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    let k = 4u32;
+    // Kernel body ≈ 10 µs: launch overhead is a visible fraction.
+    let kernel = KernelDesc::streaming(16e6);
+    let reps = cfg.iterations.max(20);
+    let streams: Vec<u32> = (0..k).map(|_| api.stream_create(StreamPriority::Normal)).collect();
+    let mut serial = 0.0;
+    let mut concurrent = 0.0;
+    for _ in 0..reps {
+        // Serial: k kernels back-to-back on one stream.
+        let t0 = api.now_ns();
+        for _ in 0..k {
+            api.launch_kernel(1, 0, &kernel).expect("launch");
+            api.sync_stream(1, 0).unwrap();
+        }
+        serial += (api.now_ns() - t0) as f64;
+        // Concurrent: same work fanned across k streams.
+        let t0 = api.now_ns();
+        for s in &streams {
+            api.launch_kernel(1, *s, &kernel).expect("launch");
+        }
+        api.sync_device(1).unwrap();
+        concurrent += (api.now_ns() - t0) as f64;
+    }
+    // Ideal overlap hides everything but one body + the k launch calls;
+    // efficiency = how much of the serial k× cost overlap recovered.
+    let eff = (serial / concurrent / k as f64 * 100.0).min(100.0);
+    MetricResult::from_value("SCHED-003", &cfg.system, eff)
+}
+
+/// SCHED-004: preemption latency (ms): a high-priority launch arrives
+/// while a long low-priority kernel runs; measured delay until it starts.
+pub fn sched_004(cfg: &RunConfig) -> MetricResult {
+    let mut api = api_for(cfg);
+    let mut col = crate::stats::Collector::new(2, cfg.iterations.min(40));
+    let hi = api.stream_create(StreamPriority::High);
+    for _ in 0..2 + cfg.iterations.min(40) {
+        // Long kernel on the default stream (≈3 ms).
+        let long = KernelDesc::gemm(3072, 3072, 3072, false);
+        api.launch_kernel(1, 0, &long).expect("long");
+        // Preemption slice on A100 ≈ 100 µs granularity.
+        let delay = api.dev.streams.preemption_delay_ns(api.now_ns(), 100_000);
+        let t0 = api.now_ns();
+        api.dev.clock.advance(delay);
+        let span = api.launch_kernel(1, hi, &KernelDesc::null()).expect("hi");
+        api.dev.clock.advance_to(span.1);
+        col.record((api.now_ns() - t0) as f64 / 1e6);
+        api.sync_device(1).unwrap();
+    }
+    MetricResult::from_samples("SCHED-004", &cfg.system, col.samples())
+}
+
+/// Run the whole category in Table 8 order.
+pub fn run_all(cfg: &RunConfig) -> Vec<MetricResult> {
+    vec![sched_001(cfg), sched_002(cfg), sched_003(cfg), sched_004(cfg)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(system: &str) -> RunConfig {
+        RunConfig::quick(system)
+    }
+
+    #[test]
+    fn sched001_native_calibration() {
+        let n = sched_001(&quick("native")).value;
+        assert!((n - 10.5).abs() < 1.0, "ctx switch={n} µs");
+        let h = sched_001(&quick("hami")).value;
+        assert!(h > n, "hami={h} native={n}");
+    }
+
+    #[test]
+    fn sched002_includes_body() {
+        let oh = super::super::overhead::oh_001(&quick("native")).value;
+        let s2 = sched_002(&quick("native")).value;
+        assert!(s2 >= oh, "sched002={s2} oh001={oh}");
+    }
+
+    #[test]
+    fn sched003_efficiency_ordering() {
+        let n = sched_003(&quick("native")).value;
+        let h = sched_003(&quick("hami")).value;
+        assert!(n > h + 1.0, "native={n}% hami={h}%");
+        assert!(n > 35.0 && n <= 100.0, "native={n}%");
+    }
+
+    #[test]
+    fn sched004_bounded_by_slice_plus_kernel() {
+        let n = sched_004(&quick("native")).value;
+        assert!(n < 0.5, "preemption={n} ms");
+    }
+}

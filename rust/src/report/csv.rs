@@ -1,0 +1,61 @@
+//! CSV export: one row per metric, stable column order for analysis tools.
+
+use super::{unit_of, Report};
+use crate::metrics::taxonomy;
+
+fn esc(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Render the report as CSV.
+pub fn render(rep: &Report) -> String {
+    let mut out = String::from(
+        "id,name,category,unit,system,value,mean,stddev,median,p95,p99,cv,expected,deviation_percent,score\n",
+    );
+    for r in rep.results {
+        let d = taxonomy::by_id(r.id);
+        let expected = rep.baseline_for(r.id).map(|b| b.value).unwrap_or(f64::NAN);
+        let score = rep
+            .card
+            .per_metric
+            .iter()
+            .find(|(id, _)| *id == r.id)
+            .map(|(_, s)| *s)
+            .unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.3},{:.4}\n",
+            r.id,
+            esc(d.map(|d| d.name).unwrap_or("")),
+            d.map(|d| d.category.name()).unwrap_or(""),
+            esc(unit_of(r.id)),
+            rep.system,
+            r.value,
+            r.summary.mean,
+            r.summary.stddev,
+            r.summary.median,
+            r.summary.p95,
+            r.summary.p99,
+            r.summary.cv,
+            expected,
+            rep.deviation(r),
+            score,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escaping() {
+        assert_eq!(esc("plain"), "plain");
+        assert_eq!(esc("a,b"), "\"a,b\"");
+        assert_eq!(esc("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+}

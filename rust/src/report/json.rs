@@ -1,0 +1,174 @@
+//! Minimal JSON encoder + the Listing 7 output schema.
+
+use super::{unit_of, Report};
+use crate::metrics::taxonomy;
+
+/// Escape and quote a JSON string.
+pub fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format a finite JSON number (NaN/Inf become null).
+pub fn num(x: f64) -> String {
+    if x.is_finite() {
+        if x == x.trunc() && x.abs() < 1e15 {
+            format!("{:.1}", x)
+        } else {
+            format!("{}", (x * 1e6).round() / 1e6)
+        }
+    } else {
+        "null".to_string()
+    }
+}
+
+/// A tiny JSON builder for objects/arrays.
+#[derive(Default)]
+pub struct Obj {
+    fields: Vec<(String, String)>,
+}
+
+impl Obj {
+    pub fn new() -> Obj {
+        Obj::default()
+    }
+
+    pub fn field(mut self, key: &str, raw_value: String) -> Obj {
+        self.fields.push((key.to_string(), raw_value));
+        self
+    }
+
+    pub fn str(self, key: &str, value: &str) -> Obj {
+        let v = quote(value);
+        self.field(key, v)
+    }
+
+    pub fn num(self, key: &str, value: f64) -> Obj {
+        let v = num(value);
+        self.field(key, v)
+    }
+
+    pub fn bool(self, key: &str, value: bool) -> Obj {
+        self.field(key, value.to_string())
+    }
+
+    pub fn build(&self) -> String {
+        let inner: Vec<String> =
+            self.fields.iter().map(|(k, v)| format!("{}: {}", quote(k), v)).collect();
+        format!("{{{}}}", inner.join(", "))
+    }
+}
+
+/// Encode an array from raw JSON values.
+pub fn array(items: Vec<String>) -> String {
+    format!("[{}]", items.join(", "))
+}
+
+/// Render the full report in the paper's Listing 7 schema.
+pub fn render(rep: &Report) -> String {
+    let metrics: Vec<String> = rep
+        .results
+        .iter()
+        .map(|r| {
+            let d = taxonomy::by_id(r.id);
+            let stats = Obj::new()
+                .num("mean", r.summary.mean)
+                .num("stddev", r.summary.stddev)
+                .num("median", r.summary.median)
+                .num("p95", r.summary.p95)
+                .num("p99", r.summary.p99)
+                .num("cv", r.summary.cv)
+                .field("count", r.summary.count.to_string())
+                .build();
+            let baseline = rep.baseline_for(r.id).map(|b| b.value).unwrap_or(f64::NAN);
+            let score = rep
+                .card
+                .per_metric
+                .iter()
+                .find(|(id, _)| *id == r.id)
+                .map(|(_, s)| *s)
+                .unwrap_or(f64::NAN);
+            let mig = Obj::new()
+                .num("expected", baseline)
+                .num("deviation_percent", rep.deviation(r))
+                .num("score", score)
+                .build();
+            let mut o = Obj::new()
+                .str("id", r.id)
+                .str("name", d.map(|d| d.name).unwrap_or(""))
+                .str("unit", unit_of(r.id))
+                .num("value", r.value)
+                .field("statistics", stats)
+                .field("mig_comparison", mig);
+            if let Some(p) = r.pass {
+                o = o.bool("pass", p);
+            }
+            o.build()
+        })
+        .collect();
+    let categories: Vec<String> = crate::metrics::Category::ALL
+        .iter()
+        .filter_map(|c| {
+            rep.card.per_category.get(c).map(|s| {
+                Obj::new()
+                    .str("category", c.name())
+                    .num("weight", c.weight())
+                    .num("score", *s)
+                    .build()
+            })
+        })
+        .collect();
+    Obj::new()
+        .str("benchmark_version", crate::VERSION)
+        .field("system", Obj::new().str("name", rep.system).build())
+        .field("metrics", array(metrics))
+        .field("categories", array(categories))
+        .num("overall_score", rep.card.overall)
+        .num("mig_parity_percent", rep.card.mig_parity_percent())
+        .str("grade", rep.card.grade().letter())
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quoting_escapes() {
+        assert_eq!(quote("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(quote("tab\there"), "\"tab\\there\"");
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(num(4.2), "4.2");
+        assert_eq!(num(100.0), "100.0");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn object_building() {
+        let o = Obj::new().str("a", "x").num("b", 1.5).bool("c", true).build();
+        assert_eq!(o, "{\"a\": \"x\", \"b\": 1.5, \"c\": true}");
+    }
+
+    #[test]
+    fn array_building() {
+        assert_eq!(array(vec!["1".into(), "2".into()]), "[1, 2]");
+        assert_eq!(array(vec![]), "[]");
+    }
+}

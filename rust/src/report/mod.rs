@@ -1,0 +1,124 @@
+//! Report generation (paper §5.4): JSON (Listing 7 schema), CSV and a
+//! human-readable TXT summary with grades.
+//!
+//! The offline build has no serde; [`json`] is a small, correct JSON
+//! encoder (string escaping, finite-number handling) sufficient for the
+//! output schema.
+
+pub mod csv;
+pub mod json;
+pub mod txt;
+
+use crate::metrics::{taxonomy, MetricResult};
+use crate::scoring::{mig_deviation_percent, ScoreCard};
+
+/// A full benchmark report for one system: its results, the baseline run
+/// they are scored against, and the resulting scorecard.
+pub struct Report<'a> {
+    pub system: &'a str,
+    pub results: &'a [MetricResult],
+    pub baseline: &'a [MetricResult],
+    pub card: &'a ScoreCard,
+}
+
+impl<'a> Report<'a> {
+    pub fn new(
+        system: &'a str,
+        results: &'a [MetricResult],
+        baseline: &'a [MetricResult],
+        card: &'a ScoreCard,
+    ) -> Report<'a> {
+        Report { system, results, baseline, card }
+    }
+
+    /// Baseline result for a metric id.
+    pub fn baseline_for(&self, id: &str) -> Option<&MetricResult> {
+        self.baseline.iter().find(|r| r.id == id)
+    }
+
+    /// Signed MIG deviation for one metric (paper eqs. 29–30).
+    pub fn deviation(&self, r: &MetricResult) -> f64 {
+        self.baseline_for(r.id).map(|b| mig_deviation_percent(r, b)).unwrap_or(0.0)
+    }
+
+    /// Render to the requested format.
+    pub fn render(&self, format: Format) -> String {
+        match format {
+            Format::Json => json::render(self),
+            Format::Csv => csv::render(self),
+            Format::Txt => txt::render(self),
+        }
+    }
+}
+
+/// Output formats (paper §5.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    Json,
+    Csv,
+    Txt,
+}
+
+impl Format {
+    pub fn from_key(s: &str) -> Option<Format> {
+        match s {
+            "json" => Some(Format::Json),
+            "csv" => Some(Format::Csv),
+            "txt" | "text" => Some(Format::Txt),
+            _ => None,
+        }
+    }
+}
+
+/// Unit string for a metric id (Table 8).
+pub fn unit_of(id: &str) -> &'static str {
+    taxonomy::by_id(id).map(|d| d.unit).unwrap_or("")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::MetricResult;
+    use crate::scoring::ScoreCard;
+
+    fn sample_report() -> (Vec<MetricResult>, Vec<MetricResult>) {
+        let results = vec![
+            MetricResult::from_samples("OH-001", "hami", &[15.0, 15.3, 15.6]),
+            MetricResult::from_pass("IS-005", "hami", true),
+        ];
+        let baseline = vec![
+            MetricResult::from_samples("OH-001", "mig", &[4.2, 4.2, 4.2]),
+            MetricResult::from_pass("IS-005", "mig", true),
+        ];
+        (results, baseline)
+    }
+
+    #[test]
+    fn all_formats_render() {
+        let (results, baseline) = sample_report();
+        let card = ScoreCard::build("hami", &results, &baseline);
+        let rep = Report::new("hami", &results, &baseline, &card);
+        let j = rep.render(Format::Json);
+        assert!(j.contains("\"OH-001\""));
+        assert!(j.contains("benchmark_version"));
+        let c = rep.render(Format::Csv);
+        assert!(c.starts_with("id,"));
+        let t = rep.render(Format::Txt);
+        assert!(t.contains("GPU-Virt-Bench"));
+    }
+
+    #[test]
+    fn deviation_negative_for_slower() {
+        let (results, baseline) = sample_report();
+        let card = ScoreCard::build("hami", &results, &baseline);
+        let rep = Report::new("hami", &results, &baseline, &card);
+        assert!(rep.deviation(&results[0]) < 0.0);
+    }
+
+    #[test]
+    fn format_keys() {
+        assert_eq!(Format::from_key("json"), Some(Format::Json));
+        assert_eq!(Format::from_key("text"), Some(Format::Txt));
+        assert_eq!(Format::from_key("xml"), None);
+    }
+}

@@ -1,0 +1,76 @@
+//! Human-readable TXT summary with per-category scores and the letter
+//! grade (the format the paper's §5.4 calls "human-readable summary with
+//! grades").
+
+use super::{unit_of, Report};
+use crate::metrics::{taxonomy, Category};
+
+/// Render the text report.
+pub fn render(rep: &Report) -> String {
+    let mut out = String::new();
+    out.push_str("==============================================================\n");
+    out.push_str(&format!(
+        " GPU-Virt-Bench v{} — system: {}\n",
+        crate::VERSION,
+        rep.system
+    ));
+    out.push_str("==============================================================\n\n");
+    for c in Category::ALL {
+        let metrics: Vec<_> =
+            rep.results.iter().filter(|r| taxonomy::by_id(r.id).map(|d| d.category) == Some(c)).collect();
+        if metrics.is_empty() {
+            continue;
+        }
+        let cat_score = rep.card.per_category.get(&c).copied().unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "--- {} (weight {:.2}, score {:.1}%) ---\n",
+            c.name(),
+            c.weight(),
+            cat_score * 100.0
+        ));
+        for r in metrics {
+            let d = taxonomy::by_id(r.id).unwrap();
+            let dev = rep.deviation(r);
+            let value_str = match r.pass {
+                Some(true) => "Pass".to_string(),
+                Some(false) => "FAIL".to_string(),
+                None => format!("{:.3} {}", r.value, unit_of(r.id)),
+            };
+            out.push_str(&format!(
+                "  {:<10} {:<32} {:>16}   Δmig {:+6.1}%\n",
+                r.id, d.name, value_str, dev
+            ));
+        }
+        out.push('\n');
+    }
+    out.push_str("--------------------------------------------------------------\n");
+    out.push_str(&format!(
+        " OVERALL: {:.1}%   MIG parity: {:.1}%   Grade: {} ({})\n",
+        rep.card.overall * 100.0,
+        rep.card.mig_parity_percent(),
+        rep.card.grade().letter(),
+        rep.card.grade().interpretation()
+    ));
+    out.push_str("--------------------------------------------------------------\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::MetricResult;
+    use crate::report::Format;
+    use crate::scoring::ScoreCard;
+
+    #[test]
+    fn renders_grade_line() {
+        let results = vec![MetricResult::from_samples("OH-001", "fcsp", &[8.7])];
+        let baseline = vec![MetricResult::from_samples("OH-001", "mig", &[4.3])];
+        let card = ScoreCard::build("fcsp", &results, &baseline);
+        let rep = Report::new("fcsp", &results, &baseline, &card);
+        let t = rep.render(Format::Txt);
+        assert!(t.contains("OVERALL"));
+        assert!(t.contains("Grade:"));
+        assert!(t.contains("OH-001"));
+    }
+}

@@ -1,0 +1,148 @@
+//! The PJRT execution engine: compile each artifact once, execute many
+//! times from the (Rust-only) request path.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Dtype, Manifest};
+
+/// Compiled artifacts over one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load every artifact in `dir` (must contain `manifest.txt`).
+    pub fn load_dir(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for a in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                a.file.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", a.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", a.name))?;
+            executables.insert(a.name.clone(), exe);
+        }
+        Ok(Engine { client, manifest, executables })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Engine> {
+        let dir = super::find_artifacts_dir()
+            .context("artifacts/ not found — run `make artifacts` first")?;
+        Engine::load_dir(&dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Execute artifact `name` on f32 input buffers (one `Vec<f32>` per
+    /// input, lengths must match the manifest shapes). Returns the flat
+    /// f32 outputs, one `Vec` per output.
+    pub fn execute_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        let exe = self.executables.get(name).context("not compiled")?;
+        if inputs.len() != spec.inputs.len() {
+            bail!("artifact {name} expects {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, tspec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if tspec.dtype != Dtype::F32 {
+                bail!("artifact {name} input {i} is not f32");
+            }
+            if buf.len() != tspec.element_count() {
+                bail!(
+                    "artifact {name} input {i}: expected {} elements, got {}",
+                    tspec.element_count(),
+                    buf.len()
+                );
+            }
+            let lit = xla::Literal::vec1(buf);
+            let lit = if tspec.dims.is_empty() {
+                lit
+            } else {
+                lit.reshape(&tspec.dims).context("reshape input literal")?
+            };
+            literals.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&literals).context("execute")?;
+        let mut out_lit = result[0][0].to_literal_sync().context("fetch output")?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let elems = out_lit.decompose_tuple().context("decompose tuple")?;
+        let mut outs = Vec::with_capacity(elems.len());
+        for e in elems {
+            outs.push(e.to_vec::<f32>().context("output to_vec")?);
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests require `make artifacts` to have produced the bundle;
+    /// they skip (pass vacuously, with a note) when it is absent so the
+    /// pure-Rust test suite works standalone.
+    fn engine() -> Option<Engine> {
+        match Engine::load_default() {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("skipping PJRT test (artifacts missing): {err:#}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn loads_and_lists_artifacts() {
+        let Some(e) = engine() else { return };
+        assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+        let names = e.names();
+        assert!(names.contains(&"attention_fp32"), "names={names:?}");
+        assert!(names.contains(&"decode_step_fp32"), "names={names:?}");
+    }
+
+    #[test]
+    fn attention_matches_reference_shape() {
+        let Some(e) = engine() else { return };
+        let spec = e.spec("attention_fp32").unwrap().clone();
+        let inputs: Vec<Vec<f32>> = spec
+            .inputs
+            .iter()
+            .map(|t| (0..t.element_count()).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect())
+            .collect();
+        let outs = e.execute_f32("attention_fp32", &inputs).unwrap();
+        assert_eq!(outs.len(), spec.outputs);
+        // Output has the Q shape; softmax-weighted mixture stays bounded
+        // by the V value range.
+        assert_eq!(outs[0].len(), spec.inputs[0].element_count());
+        assert!(outs[0].iter().all(|x| x.is_finite()));
+        let vmax = 0.7;
+        assert!(outs[0].iter().all(|x| x.abs() <= vmax), "attention out of range");
+    }
+
+    #[test]
+    fn wrong_input_count_rejected() {
+        let Some(e) = engine() else { return };
+        assert!(e.execute_f32("attention_fp32", &[vec![0.0]]).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! The artifact manifest: a line-based description of each lowered
+//! computation written by `python/compile/aot.py` alongside the HLO text.
+//!
+//! Format (one artifact per line):
+//!
+//! ```text
+//! name=decode_fp32 file=decode_fp32.hlo.txt inputs=f32[8,256];f32[256,256] outputs=1
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an input (only what the bridge supports).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+}
+
+/// Shape+dtype of one input tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: Dtype,
+    pub dims: Vec<i64>,
+}
+
+impl TensorSpec {
+    /// Parse `f32[8,256]`.
+    fn parse(s: &str) -> Result<TensorSpec> {
+        let open = s.find('[').context("missing [ in tensor spec")?;
+        let dtype = Dtype::parse(&s[..open])?;
+        let dims_str = s[open + 1..].trim_end_matches(']');
+        let dims = if dims_str.is_empty() {
+            Vec::new()
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.trim().parse::<i64>().context("bad dim"))
+                .collect::<Result<Vec<i64>>>()?
+        };
+        Ok(TensorSpec { dtype, dims })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<i64>().max(1) as usize
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, base_dir: &Path) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut name = None;
+            let mut file = None;
+            let mut inputs = Vec::new();
+            let mut outputs = 1usize;
+            for tok in line.split_whitespace() {
+                let (k, v) =
+                    tok.split_once('=').with_context(|| format!("line {}: bad token {tok}", i + 1))?;
+                match k {
+                    "name" => name = Some(v.to_string()),
+                    "file" => file = Some(base_dir.join(v)),
+                    "inputs" => {
+                        for spec in v.split(';').filter(|s| !s.is_empty()) {
+                            inputs.push(TensorSpec::parse(spec)?);
+                        }
+                    }
+                    "outputs" => outputs = v.parse().context("bad outputs count")?,
+                    _ => {} // forward-compatible: ignore unknown keys
+                }
+            }
+            artifacts.push(ArtifactSpec {
+                name: name.with_context(|| format!("line {}: missing name", i + 1))?,
+                file: file.with_context(|| format!("line {}: missing file", i + 1))?,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_line() {
+        let m = Manifest::parse(
+            "# comment\nname=decode file=decode.hlo.txt inputs=f32[8,256];f32[256,256] outputs=2\n",
+            Path::new("/tmp/a"),
+        )
+        .unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.name, "decode");
+        assert_eq!(a.file, PathBuf::from("/tmp/a/decode.hlo.txt"));
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![8, 256]);
+        assert_eq!(a.inputs[0].element_count(), 2048);
+        assert_eq!(a.outputs, 2);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let t = TensorSpec::parse("f32[]").unwrap();
+        assert!(t.dims.is_empty());
+        assert_eq!(t.element_count(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        assert!(TensorSpec::parse("f64[2]").is_err());
+    }
+
+    #[test]
+    fn missing_name_errors() {
+        assert!(Manifest::parse("file=x.hlo.txt\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn lookup() {
+        let m = Manifest::parse("name=a file=a.hlo.txt inputs=f32[1]\n", Path::new(".")).unwrap();
+        assert!(m.get("a").is_some());
+        assert!(m.get("b").is_none());
+    }
+}

@@ -1,0 +1,28 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from Rust. Python never runs
+//! on this path — `make artifacts` lowers the model once at build time
+//! (see `python/compile/aot.py`), and this module compiles + executes the
+//! HLO through the PJRT CPU client (`xla` crate).
+//!
+//! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// Default artifacts directory relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory from the current working directory or
+/// the crate root (tests run from the workspace root).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    let candidates = [
+        std::path::PathBuf::from(ARTIFACTS_DIR),
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR),
+    ];
+    candidates.into_iter().find(|p| p.join("manifest.txt").exists())
+}

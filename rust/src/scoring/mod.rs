@@ -1,0 +1,272 @@
+//! Scoring methodology (paper §6): per-metric normalization against the
+//! MIG-Ideal baseline, category aggregation, weighted overall score and
+//! letter grades.
+//!
+//! The MIG baseline is what the `mig` backend *measures* (the paper
+//! likewise simulates MIG-Ideal from specifications); by construction MIG
+//! scores 100 %.
+
+use std::collections::HashMap;
+
+use crate::metrics::{taxonomy, Category, Direction, MetricResult};
+
+/// Per-metric score ∈ [0, 1] (paper eqs. 31–32).
+pub fn metric_score(result: &MetricResult, expected: &MetricResult) -> f64 {
+    let d = match taxonomy::by_id(result.id) {
+        Some(d) => d,
+        None => return 0.0,
+    };
+    match d.direction {
+        Direction::Boolean => {
+            if result.pass.unwrap_or(result.value > 0.5) {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        Direction::LowerBetter => {
+            let (actual, exp) = (result.value, expected.value);
+            if actual <= 0.0 {
+                // Zero-or-negative latency/overhead: at least as good as
+                // any baseline.
+                1.0
+            } else if exp <= 0.0 {
+                // Baseline is zero (e.g. MIG has no hook overhead): score
+                // against a small epsilon floor so finite overhead is
+                // penalized smoothly rather than zeroed. The floor is 10 %
+                // of the native-calibrated launch cost (420 ns) for ns/µs
+                // metrics and 1 percentage point for % metrics.
+                let floor = match d.unit {
+                    "%" => 1.0,
+                    "ns" => 40.0,
+                    "ms" => 0.04,
+                    _ => 0.4, // µs
+                };
+                (floor / actual).clamp(0.0, 1.0)
+            } else {
+                (exp / actual).clamp(0.0, 1.0)
+            }
+        }
+        Direction::HigherBetter => {
+            let (actual, exp) = (result.value, expected.value);
+            if exp <= 0.0 {
+                1.0
+            } else {
+                (actual / exp).clamp(0.0, 1.0)
+            }
+        }
+    }
+}
+
+/// Scores for one system against a baseline run.
+#[derive(Clone, Debug)]
+pub struct ScoreCard {
+    pub system: String,
+    /// Per-metric scores keyed by id, in taxonomy order.
+    pub per_metric: Vec<(&'static str, f64)>,
+    /// Category → mean score (paper eq. 33).
+    pub per_category: HashMap<Category, f64>,
+    /// Weighted overall (paper eq. 34).
+    pub overall: f64,
+}
+
+impl ScoreCard {
+    /// Score `results` (one full suite run) against `baseline` (the
+    /// MIG-Ideal suite run). Both must be in taxonomy order or at least
+    /// share ids.
+    pub fn build(system: &str, results: &[MetricResult], baseline: &[MetricResult]) -> ScoreCard {
+        let base_by_id: HashMap<&str, &MetricResult> =
+            baseline.iter().map(|r| (r.id, r)).collect();
+        let mut per_metric = Vec::with_capacity(results.len());
+        for r in results {
+            if let Some(b) = base_by_id.get(r.id) {
+                per_metric.push((r.id, metric_score(r, b)));
+            }
+        }
+        let mut per_category: HashMap<Category, f64> = HashMap::new();
+        for c in Category::ALL {
+            let scores: Vec<f64> = per_metric
+                .iter()
+                .filter(|(id, _)| taxonomy::by_id(id).map(|d| d.category) == Some(c))
+                .map(|(_, s)| *s)
+                .collect();
+            if !scores.is_empty() {
+                per_category.insert(c, scores.iter().sum::<f64>() / scores.len() as f64);
+            }
+        }
+        let overall: f64 = Category::ALL
+            .iter()
+            .filter_map(|c| per_category.get(c).map(|s| s * c.weight()))
+            .sum::<f64>()
+            / Category::ALL
+                .iter()
+                .filter(|c| per_category.contains_key(c))
+                .map(|c| c.weight())
+                .sum::<f64>();
+        ScoreCard { system: system.to_string(), per_metric, per_category, overall }
+    }
+
+    /// "MIG parity" percentage (Table 7).
+    pub fn mig_parity_percent(&self) -> f64 {
+        self.overall * 100.0
+    }
+
+    pub fn grade(&self) -> Grade {
+        Grade::from_score(self.overall)
+    }
+}
+
+/// Letter grades (paper Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Grade {
+    APlus,
+    A,
+    BPlus,
+    B,
+    C,
+    D,
+    F,
+}
+
+impl Grade {
+    pub fn from_score(score: f64) -> Grade {
+        let pct = score * 100.0;
+        if pct >= 95.0 {
+            Grade::APlus
+        } else if pct >= 90.0 {
+            Grade::A
+        } else if pct >= 85.0 {
+            Grade::BPlus
+        } else if pct >= 80.0 {
+            Grade::B
+        } else if pct >= 70.0 {
+            Grade::C
+        } else if pct >= 60.0 {
+            Grade::D
+        } else {
+            Grade::F
+        }
+    }
+
+    pub fn letter(&self) -> &'static str {
+        match self {
+            Grade::APlus => "A+",
+            Grade::A => "A",
+            Grade::BPlus => "B+",
+            Grade::B => "B",
+            Grade::C => "C",
+            Grade::D => "D",
+            Grade::F => "F",
+        }
+    }
+
+    /// Table 3 interpretation column.
+    pub fn interpretation(&self) -> &'static str {
+        match self {
+            Grade::APlus => "Approaches MIG-level isolation",
+            Grade::A => "Excellent",
+            Grade::BPlus => "Very Good",
+            Grade::B => "Good",
+            Grade::C => "Fair",
+            Grade::D => "Poor",
+            Grade::F => "Significant improvement needed",
+        }
+    }
+}
+
+/// Signed MIG deviation (paper eqs. 29–30), percent. Positive = the
+/// software solution outperforms the MIG baseline.
+pub fn mig_deviation_percent(result: &MetricResult, expected: &MetricResult) -> f64 {
+    let d = match taxonomy::by_id(result.id) {
+        Some(d) => d,
+        None => return 0.0,
+    };
+    match d.direction {
+        Direction::HigherBetter | Direction::Boolean => {
+            if expected.value.abs() < f64::EPSILON {
+                0.0
+            } else {
+                (result.value - expected.value) / expected.value * 100.0
+            }
+        }
+        Direction::LowerBetter => {
+            if expected.value.abs() < f64::EPSILON {
+                if result.value.abs() < f64::EPSILON { 0.0 } else { -100.0 }
+            } else {
+                (expected.value - result.value) / expected.value * 100.0
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::MetricResult;
+
+    fn r(id: &'static str, v: f64) -> MetricResult {
+        MetricResult::from_value(id, "test", v)
+    }
+
+    #[test]
+    fn lower_better_scoring() {
+        // OH-001 is lower-better. expected 4.2, actual 15.3 → 0.27.
+        let s = metric_score(&r("OH-001", 15.3), &r("OH-001", 4.2));
+        assert!((s - 4.2 / 15.3).abs() < 1e-12);
+        // Better than baseline clamps at 1.
+        assert_eq!(metric_score(&r("OH-001", 2.0), &r("OH-001", 4.2)), 1.0);
+    }
+
+    #[test]
+    fn higher_better_scoring() {
+        // IS-008 higher-better: 0.87 vs baseline 1.0 → 0.87.
+        let s = metric_score(&r("IS-008", 0.87), &r("IS-008", 1.0));
+        assert!((s - 0.87).abs() < 1e-12);
+        assert_eq!(metric_score(&r("IS-008", 1.2), &r("IS-008", 1.0)), 1.0);
+    }
+
+    #[test]
+    fn boolean_scoring() {
+        let pass = MetricResult::from_pass("IS-005", "x", true);
+        let fail = MetricResult::from_pass("IS-005", "x", false);
+        let base = MetricResult::from_pass("IS-005", "mig", true);
+        assert_eq!(metric_score(&pass, &base), 1.0);
+        assert_eq!(metric_score(&fail, &base), 0.0);
+    }
+
+    #[test]
+    fn zero_baseline_floor() {
+        // MIG hook overhead = 0 ns; HAMi 85 ns → floored, small score.
+        let s = metric_score(&r("OH-005", 85.0), &r("OH-005", 0.0));
+        assert!(s > 0.0 && s < 0.6, "s={s}");
+        // And zero actual = perfect.
+        assert_eq!(metric_score(&r("OH-005", 0.0), &r("OH-005", 0.0)), 1.0);
+    }
+
+    #[test]
+    fn grades_match_table3() {
+        assert_eq!(Grade::from_score(0.96).letter(), "A+");
+        assert_eq!(Grade::from_score(0.91).letter(), "A");
+        assert_eq!(Grade::from_score(0.852).letter(), "B+"); // FCSP
+        assert_eq!(Grade::from_score(0.81).letter(), "B");
+        assert_eq!(Grade::from_score(0.72).letter(), "C"); // HAMi
+        assert_eq!(Grade::from_score(0.65).letter(), "D");
+        assert_eq!(Grade::from_score(0.2).letter(), "F");
+    }
+
+    #[test]
+    fn scorecard_baseline_scores_one() {
+        let baseline = vec![r("OH-001", 4.2), r("IS-008", 1.0)];
+        let card = ScoreCard::build("mig", &baseline, &baseline);
+        assert!((card.overall - 1.0).abs() < 1e-12);
+        assert_eq!(card.grade().letter(), "A+");
+    }
+
+    #[test]
+    fn deviation_signs() {
+        // Lower-better: actual worse than baseline → negative.
+        assert!(mig_deviation_percent(&r("OH-001", 15.3), &r("OH-001", 4.2)) < 0.0);
+        // Higher-better: actual better → positive.
+        assert!(mig_deviation_percent(&r("IS-008", 1.1), &r("IS-008", 1.0)) > 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Virtual time. All simulated latencies are expressed in nanoseconds and
+//! advance a per-run [`VirtualClock`], making measurements deterministic and
+//! independent of host scheduling.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// A shareable virtual clock counting nanoseconds since run start.
+///
+/// Cloning shares the underlying counter (`Rc<Cell<u64>>`), so a device and
+/// its API front-ends observe a single timeline.
+#[derive(Clone, Debug, Default)]
+pub struct VirtualClock {
+    now_ns: Rc<Cell<u64>>,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Current virtual time in nanoseconds.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns.get()
+    }
+
+    /// Advance by `ns` nanoseconds and return the new time.
+    #[inline]
+    pub fn advance(&self, ns: u64) -> u64 {
+        let t = self.now_ns.get() + ns;
+        self.now_ns.set(t);
+        t
+    }
+
+    /// Advance by a (possibly fractional) nanosecond amount; fractional
+    /// parts are rounded to the nearest nanosecond.
+    #[inline]
+    pub fn advance_f(&self, ns: f64) -> u64 {
+        self.advance(ns.max(0.0).round() as u64)
+    }
+
+    /// Jump to an absolute time (used when joining parallel timelines:
+    /// `max(now, t)`).
+    #[inline]
+    pub fn advance_to(&self, t_ns: u64) {
+        if t_ns > self.now_ns.get() {
+            self.now_ns.set(t_ns);
+        }
+    }
+}
+
+/// A stopwatch over the virtual clock, mirroring `clock_gettime` usage in
+/// the paper's listings.
+pub struct VirtualStopwatch {
+    clock: VirtualClock,
+    start_ns: u64,
+}
+
+impl VirtualStopwatch {
+    pub fn start(clock: &VirtualClock) -> VirtualStopwatch {
+        VirtualStopwatch { clock: clock.clone(), start_ns: clock.now_ns() }
+    }
+
+    /// Elapsed virtual nanoseconds since `start`.
+    pub fn elapsed_ns(&self) -> u64 {
+        self.clock.now_ns() - self.start_ns
+    }
+
+    /// Elapsed virtual microseconds (the unit most paper tables use).
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_ns() as f64 / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ns(), 0);
+        c.advance(100);
+        assert_eq!(c.now_ns(), 100);
+        c.advance_f(0.6);
+        assert_eq!(c.now_ns(), 101);
+    }
+
+    #[test]
+    fn clones_share_timeline() {
+        let a = VirtualClock::new();
+        let b = a.clone();
+        a.advance(42);
+        assert_eq!(b.now_ns(), 42);
+    }
+
+    #[test]
+    fn advance_to_is_monotonic() {
+        let c = VirtualClock::new();
+        c.advance(100);
+        c.advance_to(50); // no-op
+        assert_eq!(c.now_ns(), 100);
+        c.advance_to(150);
+        assert_eq!(c.now_ns(), 150);
+    }
+
+    #[test]
+    fn stopwatch_measures_interval() {
+        let c = VirtualClock::new();
+        c.advance(10);
+        let sw = VirtualStopwatch::start(&c);
+        c.advance(4_200);
+        assert_eq!(sw.elapsed_ns(), 4_200);
+        assert!((sw.elapsed_us() - 4.2).abs() < 1e-9);
+    }
+}

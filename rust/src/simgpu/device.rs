@@ -1,0 +1,335 @@
+//! The assembled simulated GPU: allocator + cache + SM pool + PCIe +
+//! streams + error state over one virtual clock.
+//!
+//! `GpuDevice` exposes the raw *hardware* operations; [`crate::cudalite`]
+//! wraps them in driver-API semantics and [`crate::virt`] interposes
+//! virtualization policy. All durations are virtual nanoseconds; the device
+//! itself never blocks the host thread.
+
+use crate::util::Rng;
+
+use super::cache::L2Cache;
+use super::clock::VirtualClock;
+use super::error::{ErrorState, GpuFault};
+use super::kernel::{duration_ns, ExecContext, KernelDesc};
+use super::memory::{AllocError, AllocOutcome, DevicePtr, HbmAllocator};
+use super::pcie::{Direction, PcieLink};
+use super::sm::{SmGrant, SmPool};
+use super::spec::GpuSpec;
+use super::stream::{StreamPriority, StreamTable};
+use super::{StreamId, TenantId};
+
+/// Sustained background demand a tenant puts on shared device resources —
+/// used to model contention deterministically in multi-tenant scenarios.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BackgroundLoad {
+    /// Fraction of HBM bandwidth demanded (0..=1).
+    pub membw_demand: f64,
+    /// Number of concurrently resident kernels (space-sharing pressure).
+    pub resident_kernels: u32,
+}
+
+/// The simulated device.
+pub struct GpuDevice {
+    pub spec: GpuSpec,
+    pub clock: VirtualClock,
+    pub memory: HbmAllocator,
+    pub l2: L2Cache,
+    pub sms: SmPool,
+    pub pcie: PcieLink,
+    pub streams: StreamTable,
+    pub errors: ErrorState,
+    rng: Rng,
+    background: std::collections::HashMap<TenantId, BackgroundLoad>,
+}
+
+impl GpuDevice {
+    pub fn new(spec: GpuSpec, seed: u64) -> GpuDevice {
+        let clock = VirtualClock::new();
+        GpuDevice {
+            memory: HbmAllocator::new(spec.hbm_bytes),
+            l2: L2Cache::new(spec.l2_bytes, spec.l2_line, spec.l2_ways),
+            sms: SmPool::new(spec.sm_count),
+            pcie: PcieLink::new(spec.pcie_gbps, spec.pinned_speedup, spec.dma_setup_ns),
+            streams: StreamTable::new(),
+            errors: ErrorState::new(),
+            rng: Rng::new(seed),
+            background: std::collections::HashMap::new(),
+            clock,
+            spec,
+        }
+    }
+
+    /// A100-40GB device with the given seed (the common case in tests).
+    pub fn a100(seed: u64) -> GpuDevice {
+        GpuDevice::new(GpuSpec::a100_40gb(), seed)
+    }
+
+    /// Multiplicative latency jitter sample.
+    #[inline]
+    pub fn jitter(&mut self) -> f64 {
+        let s = self.spec.jitter_sigma;
+        if s <= 0.0 { 1.0 } else { self.rng.jitter(s) }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    // ---- background load registry --------------------------------------
+
+    /// Declare a tenant's sustained background load (contention scenarios).
+    pub fn set_background(&mut self, tenant: TenantId, load: BackgroundLoad) {
+        if load.membw_demand <= 0.0 && load.resident_kernels == 0 {
+            self.background.remove(&tenant);
+        } else {
+            self.background.insert(tenant, load);
+        }
+    }
+
+    pub fn clear_background(&mut self) {
+        self.background.clear();
+    }
+
+    /// HBM bandwidth share available to `tenant` given background demands
+    /// (max-min fair, mirroring the PCIe model).
+    pub fn membw_share(&self, tenant: TenantId) -> f64 {
+        let others: Vec<f64> = self
+            .background
+            .iter()
+            .filter(|(t, _)| **t != tenant)
+            .map(|(_, l)| l.membw_demand)
+            .filter(|d| *d > 0.0)
+            .collect();
+        if others.is_empty() {
+            return 1.0;
+        }
+        let n = others.len() + 1;
+        let fair = 1.0 / n as f64;
+        let mut leftover = 1.0;
+        let mut unconstrained = 1usize;
+        for d in &others {
+            if *d <= fair {
+                leftover -= d;
+            } else {
+                unconstrained += 1;
+            }
+        }
+        (leftover / unconstrained as f64).clamp(0.0, 1.0)
+    }
+
+    /// Number of kernels space-sharing the shared SM pool with `tenant`'s
+    /// launch (its own launch counts as one).
+    pub fn concurrent_shared(&self, tenant: TenantId) -> u32 {
+        1 + self
+            .background
+            .iter()
+            .filter(|(t, _)| **t != tenant)
+            .map(|(_, l)| l.resident_kernels)
+            .sum::<u32>()
+    }
+
+    // ---- hardware operations (no virtualization policy here) -----------
+
+    /// Raw allocation: free-list search + latency model. Returns the
+    /// outcome and the virtual-ns cost (caller advances the clock — the
+    /// virt layer may add its own overhead first).
+    pub fn raw_alloc(&mut self, size: u64) -> (Result<AllocOutcome, AllocError>, f64) {
+        let result = self.memory.alloc(size);
+        let nodes = match &result {
+            Ok(o) => o.nodes_visited,
+            Err(_) => self.memory.free_list_len(),
+        };
+        let cost = (self.spec.alloc_base_ns as f64
+            + nodes as f64 * self.spec.alloc_per_node_ns as f64)
+            * self.jitter();
+        (result, cost)
+    }
+
+    /// Raw free. Returns freed size (None = invalid pointer) and cost.
+    pub fn raw_free(&mut self, ptr: DevicePtr) -> (Option<u64>, f64) {
+        let freed = self.memory.free(ptr);
+        let cost = self.spec.free_base_ns as f64 * self.jitter();
+        (freed, cost)
+    }
+
+    /// Raw kernel execution: computes the duration from the roofline model
+    /// and the tenant's current cache/bandwidth conditions, enqueues it on
+    /// `stream`, and records SM busy time. Returns `(start, end)` virtual
+    /// times of the kernel body (the *launch* overhead is charged by the
+    /// API layer).
+    pub fn raw_launch(
+        &mut self,
+        tenant: TenantId,
+        stream: StreamId,
+        kernel: &KernelDesc,
+        granted_sms: u32,
+    ) -> Option<(u64, u64)> {
+        let ctx = ExecContext {
+            sms: granted_sms,
+            l2_hit_rate: self.l2.stats(tenant).hit_rate(),
+            bw_share: self.membw_share(tenant),
+        };
+        let dur = duration_ns(&self.spec, kernel, &ctx) * self.jitter();
+        let now = self.clock.now_ns();
+        let span = self.streams.enqueue(stream, now, dur.round() as u64)?;
+        let occupancy_frac =
+            (granted_sms as f64 / self.spec.sm_count as f64).min(1.0) * kernel.occupancy.clamp(0.0, 1.0).max(1.0 / 2048.0);
+        self.sms.record_busy(tenant, occupancy_frac.min(1.0), dur);
+        Some(span)
+    }
+
+    /// Raw host↔device copy. Returns `(duration_ns, achieved_gbps)`.
+    pub fn raw_transfer(
+        &mut self,
+        tenant: TenantId,
+        dir: Direction,
+        bytes: u64,
+        pinned: bool,
+    ) -> (f64, f64) {
+        let j = self.jitter();
+        let (dur, bw) = self.pcie.transfer_ns(tenant, dir, bytes, pinned);
+        (dur * j, bw / j)
+    }
+
+    /// Register tenant compute grant (dedicated = MIG slice).
+    pub fn grant_sms(&mut self, tenant: TenantId, grant: SmGrant) -> Result<(), String> {
+        self.sms.register(tenant, grant)
+    }
+
+    /// Create a stream.
+    pub fn create_stream(&mut self, priority: StreamPriority) -> StreamId {
+        self.streams.create(priority)
+    }
+
+    /// Inject a fault (fault-injection harness for ERR/IS-010 metrics).
+    /// Detection latency: ECC errors surface on the next scrub (~ms);
+    /// illegal addresses surface at the next sync (~µs).
+    pub fn inject_fault(&mut self, tenant: TenantId, fault: GpuFault) {
+        let detect_ns = match fault {
+            GpuFault::EccUncorrectable => 1_500_000,
+            GpuFault::IllegalAddress => 35_000,
+            GpuFault::LaunchTimeout => 2_000_000,
+            GpuFault::OutOfMemory => 0,
+        };
+        let jitter = self.jitter();
+        let now = self.clock.now_ns();
+        self.errors.inject(tenant, fault, now, (detect_ns as f64 * jitter) as u64);
+    }
+
+    /// Full device reset (ERR-002): clears memory, caches, streams, errors.
+    /// Returns the virtual-ns cost.
+    pub fn reset(&mut self) -> f64 {
+        self.memory.reset();
+        self.l2.flush();
+        self.streams.reset();
+        self.errors.reset();
+        self.spec.reset_ns as f64 * self.jitter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_cost_calibrated_to_table4() {
+        let mut d = GpuDevice::a100(1);
+        let (r, cost) = d.raw_alloc(1 << 20);
+        assert!(r.is_ok());
+        // Table 4 native alloc = 12.5 µs; fresh allocator visits 1 node.
+        assert!((cost - 12_535.0).abs() < 12_535.0 * 0.2, "cost={cost}");
+    }
+
+    #[test]
+    fn alloc_cost_grows_with_fragmentation() {
+        let mut d = GpuDevice::a100(2);
+        let mb = 1 << 20;
+        let ptrs: Vec<_> = (0..512).map(|_| d.raw_alloc(mb).0.unwrap().ptr).collect();
+        for (i, p) in ptrs.iter().enumerate() {
+            if i % 2 == 0 {
+                d.raw_free(*p);
+            }
+        }
+        // Request larger than any hole → walks the whole free list.
+        let (_, cost) = d.raw_alloc(2 * mb);
+        assert!(cost > 18_000.0, "cost={cost}");
+    }
+
+    #[test]
+    fn launch_records_utilization() {
+        let mut d = GpuDevice::a100(3);
+        d.grant_sms(1, SmGrant::Shared).unwrap();
+        d.sms.reset_window(0);
+        let k = KernelDesc::gemm(1024, 1024, 1024, false);
+        let (_, end) = d.raw_launch(1, 0, &k, 108).unwrap();
+        d.clock.advance_to(end);
+        let util = d.sms.utilization(1, d.clock.now_ns());
+        assert!(util > 0.9, "util={util}");
+    }
+
+    #[test]
+    fn membw_share_under_background() {
+        let mut d = GpuDevice::a100(4);
+        d.set_background(2, BackgroundLoad { membw_demand: 1.0, resident_kernels: 1 });
+        assert!((d.membw_share(1) - 0.5).abs() < 1e-9);
+        d.set_background(3, BackgroundLoad { membw_demand: 1.0, resident_kernels: 1 });
+        assert!((d.membw_share(1) - 1.0 / 3.0).abs() < 1e-9);
+        d.clear_background();
+        assert_eq!(d.membw_share(1), 1.0);
+    }
+
+    #[test]
+    fn concurrent_shared_counts_residents() {
+        let mut d = GpuDevice::a100(5);
+        assert_eq!(d.concurrent_shared(1), 1);
+        d.set_background(2, BackgroundLoad { membw_demand: 0.0, resident_kernels: 3 });
+        assert_eq!(d.concurrent_shared(1), 4);
+    }
+
+    #[test]
+    fn transfer_roundtrip() {
+        let mut d = GpuDevice::a100(6);
+        let (dur, bw) = d.raw_transfer(1, Direction::HostToDevice, 1 << 30, true);
+        assert!(bw > 20.0 && bw < 27.0, "bw={bw}");
+        assert!(dur > 1e9 / 26.0, "dur={dur}");
+    }
+
+    #[test]
+    fn reset_restores_clean_state() {
+        let mut d = GpuDevice::a100(7);
+        d.raw_alloc(1 << 20).0.unwrap();
+        d.inject_fault(1, GpuFault::EccUncorrectable);
+        d.clock.advance(10_000_000);
+        assert!(d.errors.check(1, d.clock.now_ns()).is_some());
+        let cost = d.reset();
+        assert!(cost > 1e6, "cost={cost}");
+        assert_eq!(d.memory.used(), 0);
+        assert!(d.errors.check(1, d.clock.now_ns()).is_none());
+    }
+
+    #[test]
+    fn fault_detection_latency_ordering() {
+        // Illegal address detected faster than ECC.
+        let mut d = GpuDevice::a100(8);
+        d.inject_fault(1, GpuFault::IllegalAddress);
+        d.inject_fault(2, GpuFault::EccUncorrectable);
+        d.clock.advance(100_000); // 100µs: illegal addr observable, ECC not
+        assert!(d.errors.check(1, d.clock.now_ns()).is_some());
+        // ECC matures later and then poisons everyone.
+        d.clock.advance(3_000_000);
+        assert!(d.errors.check(3, d.clock.now_ns()).is_some());
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let run = |seed| {
+            let mut d = GpuDevice::a100(seed);
+            let (_, c1) = d.raw_alloc(1024);
+            let (_, c2) = d.raw_alloc(4096);
+            (c1, c2)
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
+    }
+}

@@ -1,0 +1,195 @@
+//! Kernel descriptors and the roofline duration model.
+//!
+//! A kernel is characterised by its arithmetic work (FLOPs), memory traffic
+//! (bytes) and precision. Execution time on a granted set of SMs is the
+//! max of the compute-bound and memory-bound times (classic roofline),
+//! degraded by achieved L2 hit-rate and bandwidth contention. The LLM
+//! metric category builds transformer-shaped kernels with these costs; the
+//! microbenchmarks use tiny null kernels (launch-overhead dominated).
+
+use super::spec::GpuSpec;
+
+/// Workload shape of one kernel launch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KernelDesc {
+    /// Floating-point operations performed.
+    pub flops: f64,
+    /// Bytes read from + written to device memory (before cache filtering).
+    pub bytes: f64,
+    /// Half precision (FP16/BF16 — tensor-core eligible).
+    pub half_precision: bool,
+    /// Fraction of the granted SMs the launch geometry can occupy (0..=1].
+    pub occupancy: f64,
+}
+
+impl KernelDesc {
+    /// The paper's `null_kernel<<<1,1>>>` used for launch-overhead
+    /// measurement (Listing 3).
+    pub fn null() -> KernelDesc {
+        KernelDesc { flops: 0.0, bytes: 0.0, half_precision: false, occupancy: 1.0 / 2048.0 }
+    }
+
+    /// A dense GEMM `m×k · k×n` in the given precision.
+    pub fn gemm(m: u64, n: u64, k: u64, half_precision: bool) -> KernelDesc {
+        let elt = if half_precision { 2.0 } else { 4.0 };
+        KernelDesc {
+            flops: 2.0 * m as f64 * n as f64 * k as f64,
+            bytes: elt * ((m * k) as f64 + (k * n) as f64 + (m * n) as f64),
+            half_precision,
+            occupancy: 1.0,
+        }
+    }
+
+    /// Single-head attention for (batch, seq, dim) — the paper's LLM-001
+    /// FLOP proxy `2·B·S²·D` (eq. 12) plus the `P·V` contraction.
+    pub fn attention(batch: u64, seq: u64, dim: u64, half_precision: bool) -> KernelDesc {
+        let (b, s, d) = (batch as f64, seq as f64, dim as f64);
+        let elt = if half_precision { 2.0 } else { 4.0 };
+        KernelDesc {
+            // QK^T and PV: 2 * (2*B*S^2*D)
+            flops: 4.0 * b * s * s * d,
+            // Q,K,V read + scores + output written.
+            bytes: elt * (3.0 * b * s * d + b * s * s + b * s * d),
+            half_precision,
+            occupancy: 1.0,
+        }
+    }
+
+    /// A streaming (bandwidth-bound) kernel touching `bytes` of memory.
+    pub fn streaming(bytes: f64) -> KernelDesc {
+        KernelDesc { flops: bytes / 4.0, bytes, half_precision: false, occupancy: 1.0 }
+    }
+
+    /// Arithmetic intensity in FLOP/byte.
+    pub fn intensity(&self) -> f64 {
+        if self.bytes <= 0.0 { f64::INFINITY } else { self.flops / self.bytes }
+    }
+}
+
+/// Dynamic execution conditions for one launch.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecContext {
+    /// SMs granted to this launch.
+    pub sms: u32,
+    /// Fraction of `bytes` served from L2 (hit rate measured by the cache
+    /// model for this tenant's recent access pattern).
+    pub l2_hit_rate: f64,
+    /// Share of HBM bandwidth available (1.0 = uncontended; `1/n` under
+    /// n-way bandwidth contention).
+    pub bw_share: f64,
+}
+
+impl ExecContext {
+    pub fn uncontended(sms: u32) -> ExecContext {
+        ExecContext { sms, l2_hit_rate: 0.0, bw_share: 1.0 }
+    }
+}
+
+/// Roofline duration of `kernel` on `spec` under `ctx`, in nanoseconds.
+/// Pure function — the device wraps it with jitter and accounting.
+pub fn duration_ns(spec: &GpuSpec, kernel: &KernelDesc, ctx: &ExecContext) -> f64 {
+    let sms = ctx.sms.clamp(1, spec.sm_count) as f64;
+    // Compute-bound time.
+    let flops_rate = spec.flops_per_sm(kernel.half_precision) * sms * kernel.occupancy.clamp(1e-6, 1.0);
+    let t_compute = if kernel.flops > 0.0 { kernel.flops / flops_rate * 1e9 } else { 0.0 };
+    // Memory-bound time: hits are served at l2_speedup, misses at the
+    // contended HBM bandwidth share.
+    let hit = ctx.l2_hit_rate.clamp(0.0, 1.0);
+    let hbm_bw = spec.hbm_bw_gbps * 1e9 * ctx.bw_share.clamp(1e-3, 1.0);
+    let l2_bw = spec.hbm_bw_gbps * 1e9 * spec.l2_speedup;
+    let t_mem = if kernel.bytes > 0.0 {
+        (kernel.bytes * (1.0 - hit) / hbm_bw + kernel.bytes * hit / l2_bw) * 1e9
+    } else {
+        0.0
+    };
+    // A launch always takes at least a couple of SM clock cycles.
+    let floor = 2.0 / (spec.clock_ghz * 1e9) * 1e9;
+    t_compute.max(t_mem).max(floor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GpuSpec {
+        GpuSpec::a100_40gb()
+    }
+
+    #[test]
+    fn null_kernel_is_fast() {
+        let d = duration_ns(&spec(), &KernelDesc::null(), &ExecContext::uncontended(108));
+        assert!(d < 100.0, "d={d}");
+    }
+
+    #[test]
+    fn gemm_compute_bound_time() {
+        // 4096^3 GEMM fp32: 2*4096^3 = 137.4 GFLOP at 19.5 TFLOP/s ≈ 7.05 ms.
+        let k = KernelDesc::gemm(4096, 4096, 4096, false);
+        let d = duration_ns(&spec(), &k, &ExecContext::uncontended(108));
+        let expect = 2.0 * 4096f64.powi(3) / 19.5e12 * 1e9;
+        assert!((d - expect).abs() / expect < 0.01, "d={d} expect={expect}");
+    }
+
+    #[test]
+    fn streaming_bandwidth_bound_time() {
+        // 1 GiB stream at 1555 GB/s ≈ 0.69 ms.
+        let k = KernelDesc::streaming(1_073_741_824.0);
+        let d = duration_ns(&spec(), &k, &ExecContext::uncontended(108));
+        let expect = 1_073_741_824.0 / 1555e9 * 1e9;
+        assert!((d - expect).abs() / expect < 0.01, "d={d} expect={expect}");
+    }
+
+    #[test]
+    fn fewer_sms_slower_compute() {
+        let k = KernelDesc::gemm(2048, 2048, 2048, false);
+        let full = duration_ns(&spec(), &k, &ExecContext::uncontended(108));
+        let half = duration_ns(&spec(), &k, &ExecContext::uncontended(54));
+        assert!((half / full - 2.0).abs() < 0.05, "ratio={}", half / full);
+    }
+
+    #[test]
+    fn half_precision_faster() {
+        let f32k = KernelDesc::gemm(2048, 2048, 2048, false);
+        let f16k = KernelDesc::gemm(2048, 2048, 2048, true);
+        let ctx = ExecContext::uncontended(108);
+        let s = spec();
+        let t32 = duration_ns(&s, &f32k, &ctx);
+        let t16 = duration_ns(&s, &f16k, &ctx);
+        // A100: 312/19.5 = 16x peak ratio; memory bound caps realized gain.
+        assert!(t16 < t32, "t16={t16} t32={t32}");
+    }
+
+    #[test]
+    fn bandwidth_contention_slows_memory_bound() {
+        let k = KernelDesc::streaming((1u64 << 28) as f64);
+        let s = spec();
+        let solo = duration_ns(&s, &k, &ExecContext { sms: 108, l2_hit_rate: 0.0, bw_share: 1.0 });
+        let quarter = duration_ns(&s, &k, &ExecContext { sms: 108, l2_hit_rate: 0.0, bw_share: 0.25 });
+        assert!((quarter / solo - 4.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn cache_hits_speed_up_memory_bound() {
+        let k = KernelDesc::streaming((1u64 << 28) as f64);
+        let s = spec();
+        let cold = duration_ns(&s, &k, &ExecContext { sms: 108, l2_hit_rate: 0.0, bw_share: 1.0 });
+        let warm = duration_ns(&s, &k, &ExecContext { sms: 108, l2_hit_rate: 0.9, bw_share: 1.0 });
+        assert!(warm < cold * 0.5, "warm={warm} cold={cold}");
+    }
+
+    #[test]
+    fn attention_flops_match_paper_proxy() {
+        let k = KernelDesc::attention(8, 1024, 64, false);
+        // eq. 12 proxy counts 2*B*S^2*D for QK^T; we add PV → 2x.
+        let proxy = 2.0 * 8.0 * 1024.0 * 1024.0 * 64.0;
+        assert!((k.flops - 2.0 * proxy).abs() < 1.0);
+    }
+
+    #[test]
+    fn intensity() {
+        let k = KernelDesc::gemm(4096, 4096, 4096, false);
+        assert!(k.intensity() > 100.0); // large GEMMs are compute bound
+        let st = KernelDesc::streaming(1e6);
+        assert!(st.intensity() < 1.0);
+    }
+}

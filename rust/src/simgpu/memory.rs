@@ -1,0 +1,362 @@
+//! Simulated HBM allocator.
+//!
+//! A real first-fit free-list allocator over the device address range.
+//! Fragmentation metrics (FRAG-001..003) and allocation-latency degradation
+//! (FRAG-002) are *emergent*: repeated alloc/free churn grows the free list,
+//! lengthening the first-fit search that [`AllocOutcome::nodes_visited`]
+//! reports to the latency model.
+
+use std::collections::BTreeMap;
+
+/// Device pointer (byte offset into simulated HBM).
+pub type DevicePtr = u64;
+
+/// Allocation granularity — CUDA rounds device allocations up; 256 B
+/// matches `cuMemAlloc` alignment.
+pub const ALIGN: u64 = 256;
+
+/// A contiguous free region `[start, start + len)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FreeBlock {
+    pub start: u64,
+    pub len: u64,
+}
+
+/// Result of a successful allocation, including the search cost used by the
+/// latency model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AllocOutcome {
+    pub ptr: DevicePtr,
+    /// Rounded-up size actually reserved.
+    pub reserved: u64,
+    /// Free-list nodes visited during the first-fit search.
+    pub nodes_visited: usize,
+}
+
+/// Why an allocation failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocError {
+    /// Not enough total free memory.
+    OutOfMemory { requested: u64, free: u64 },
+    /// Enough total free memory but no contiguous block (fragmentation).
+    Fragmented { requested: u64, largest_free: u64 },
+    /// Zero-byte allocation.
+    ZeroSize,
+}
+
+/// Fragmentation snapshot (paper eq. 27).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FragStats {
+    pub total_free: u64,
+    pub largest_free: u64,
+    pub free_blocks: usize,
+    /// `1 - largest_free/total_free` (0 when nothing is free).
+    pub fragmentation_index: f64,
+}
+
+/// First-fit free-list allocator over `[0, capacity)`.
+#[derive(Clone, Debug)]
+pub struct HbmAllocator {
+    capacity: u64,
+    /// Free blocks ordered by start address (coalescing needs order).
+    free: Vec<FreeBlock>,
+    /// Live allocations: ptr → reserved length.
+    live: BTreeMap<DevicePtr, u64>,
+    /// Total bytes currently reserved.
+    used: u64,
+    /// Cumulative counters.
+    pub total_allocs: u64,
+    pub total_frees: u64,
+    pub failed_allocs: u64,
+}
+
+impl HbmAllocator {
+    pub fn new(capacity: u64) -> HbmAllocator {
+        HbmAllocator {
+            capacity,
+            free: vec![FreeBlock { start: 0, len: capacity }],
+            live: BTreeMap::new(),
+            used: 0,
+            total_allocs: 0,
+            total_frees: 0,
+            failed_allocs: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn live_allocations(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Round a request up to allocation granularity.
+    pub fn round_up(size: u64) -> u64 {
+        size.div_ceil(ALIGN) * ALIGN
+    }
+
+    /// First-fit allocation.
+    pub fn alloc(&mut self, size: u64) -> Result<AllocOutcome, AllocError> {
+        if size == 0 {
+            self.failed_allocs += 1;
+            return Err(AllocError::ZeroSize);
+        }
+        let need = Self::round_up(size);
+        let mut visited = 0;
+        for i in 0..self.free.len() {
+            visited += 1;
+            let b = self.free[i];
+            if b.len >= need {
+                let ptr = b.start;
+                if b.len == need {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = FreeBlock { start: b.start + need, len: b.len - need };
+                }
+                self.live.insert(ptr, need);
+                self.used += need;
+                self.total_allocs += 1;
+                return Ok(AllocOutcome { ptr, reserved: need, nodes_visited: visited });
+            }
+        }
+        self.failed_allocs += 1;
+        let stats = self.frag_stats();
+        if need > stats.total_free {
+            Err(AllocError::OutOfMemory { requested: need, free: stats.total_free })
+        } else {
+            Err(AllocError::Fragmented { requested: need, largest_free: stats.largest_free })
+        }
+    }
+
+    /// Free a previous allocation, coalescing with neighbours.
+    /// Returns the reserved length, or `None` for an invalid pointer
+    /// (double-free / wild pointer — surfaced as a CUDA error upstream).
+    pub fn free(&mut self, ptr: DevicePtr) -> Option<u64> {
+        let len = self.live.remove(&ptr)?;
+        self.used -= len;
+        self.total_frees += 1;
+        // Insert sorted by start, then coalesce with neighbours.
+        let idx = self.free.partition_point(|b| b.start < ptr);
+        self.free.insert(idx, FreeBlock { start: ptr, len });
+        // Coalesce with next.
+        if idx + 1 < self.free.len() && self.free[idx].start + self.free[idx].len == self.free[idx + 1].start {
+            self.free[idx].len += self.free[idx + 1].len;
+            self.free.remove(idx + 1);
+        }
+        // Coalesce with previous.
+        if idx > 0 && self.free[idx - 1].start + self.free[idx - 1].len == self.free[idx].start {
+            self.free[idx - 1].len += self.free[idx].len;
+            self.free.remove(idx);
+        }
+        Some(len)
+    }
+
+    /// Whether `ptr` is a live allocation base pointer.
+    pub fn is_live(&self, ptr: DevicePtr) -> bool {
+        self.live.contains_key(&ptr)
+    }
+
+    /// Reserved size of a live allocation.
+    pub fn size_of(&self, ptr: DevicePtr) -> Option<u64> {
+        self.live.get(&ptr).copied()
+    }
+
+    /// Fragmentation snapshot (paper eq. 27:
+    /// `frag = 1 - largest_free_block / total_free_memory`).
+    pub fn frag_stats(&self) -> FragStats {
+        let total_free: u64 = self.free.iter().map(|b| b.len).sum();
+        let largest_free = self.free.iter().map(|b| b.len).max().unwrap_or(0);
+        FragStats {
+            total_free,
+            largest_free,
+            free_blocks: self.free.len(),
+            fragmentation_index: if total_free == 0 {
+                0.0
+            } else {
+                1.0 - largest_free as f64 / total_free as f64
+            },
+        }
+    }
+
+    /// Compact live allocations to the bottom of the address range
+    /// (FRAG-003). Returns the number of bytes moved — the cost model
+    /// charges `moved / hbm_bw` for the copy. Pointers are relocated; the
+    /// returned map gives old → new addresses.
+    pub fn compact(&mut self) -> (u64, BTreeMap<DevicePtr, DevicePtr>) {
+        let mut moved_bytes = 0;
+        let mut relocations = BTreeMap::new();
+        let mut cursor = 0u64;
+        let mut new_live = BTreeMap::new();
+        for (&ptr, &len) in &self.live {
+            if ptr != cursor {
+                moved_bytes += len;
+                relocations.insert(ptr, cursor);
+            }
+            new_live.insert(cursor, len);
+            cursor += len;
+        }
+        self.live = new_live;
+        self.free = if cursor < self.capacity {
+            vec![FreeBlock { start: cursor, len: self.capacity - cursor }]
+        } else {
+            Vec::new()
+        };
+        (moved_bytes, relocations)
+    }
+
+    /// Free every live allocation (device reset).
+    pub fn reset(&mut self) {
+        self.live.clear();
+        self.used = 0;
+        self.free = vec![FreeBlock { start: 0, len: self.capacity }];
+    }
+
+    /// Number of free-list nodes (search-length proxy exported to tests).
+    pub fn free_list_len(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1 << 20;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = HbmAllocator::new(64 * MB);
+        let o = a.alloc(MB).unwrap();
+        assert_eq!(o.ptr, 0);
+        assert_eq!(o.reserved, MB);
+        assert_eq!(a.used(), MB);
+        assert_eq!(a.free(o.ptr), Some(MB));
+        assert_eq!(a.used(), 0);
+        assert_eq!(a.free_list_len(), 1); // fully coalesced
+    }
+
+    #[test]
+    fn rounds_up_to_alignment() {
+        let mut a = HbmAllocator::new(MB);
+        let o = a.alloc(1).unwrap();
+        assert_eq!(o.reserved, ALIGN);
+    }
+
+    #[test]
+    fn zero_size_rejected() {
+        let mut a = HbmAllocator::new(MB);
+        assert_eq!(a.alloc(0), Err(AllocError::ZeroSize));
+    }
+
+    #[test]
+    fn oom_reports_free() {
+        let mut a = HbmAllocator::new(MB);
+        a.alloc(MB).unwrap();
+        match a.alloc(1) {
+            Err(AllocError::OutOfMemory { free, .. }) => assert_eq!(free, 0),
+            other => panic!("expected OOM, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fragmentation_emerges_from_churn() {
+        let mut a = HbmAllocator::new(64 * MB);
+        // Allocate 64 x 1MB, free every other one → 32 free holes.
+        let ptrs: Vec<_> = (0..64).map(|_| a.alloc(MB).unwrap().ptr).collect();
+        for (i, p) in ptrs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.free(*p);
+            }
+        }
+        let fs = a.frag_stats();
+        assert_eq!(fs.free_blocks, 32);
+        assert_eq!(fs.total_free, 32 * MB);
+        assert_eq!(fs.largest_free, MB);
+        assert!((fs.fragmentation_index - (1.0 - 1.0 / 32.0)).abs() < 1e-12);
+        // A 2MB contiguous request fails even though 32MB is free.
+        match a.alloc(2 * MB) {
+            Err(AllocError::Fragmented { largest_free, .. }) => assert_eq!(largest_free, MB),
+            other => panic!("expected Fragmented, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn search_length_grows_with_fragmentation() {
+        let mut a = HbmAllocator::new(256 * MB);
+        let ptrs: Vec<_> = (0..128).map(|_| a.alloc(MB).unwrap().ptr).collect();
+        for (i, p) in ptrs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.free(*p);
+            }
+        }
+        // All holes are 1MB; a 1.5MB request walks all 64 holes + tail.
+        let before = a.free_list_len();
+        assert!(before > 60);
+        let o = a.alloc(3 * MB / 2).unwrap();
+        assert!(o.nodes_visited >= 60, "visited={}", o.nodes_visited);
+    }
+
+    #[test]
+    fn coalescing_merges_neighbours() {
+        let mut a = HbmAllocator::new(4 * MB);
+        let p0 = a.alloc(MB).unwrap().ptr;
+        let p1 = a.alloc(MB).unwrap().ptr;
+        let p2 = a.alloc(MB).unwrap().ptr;
+        a.free(p0);
+        a.free(p2);
+        // p2 coalesces with the tail: [hole@p0, hole@p2+tail].
+        assert_eq!(a.free_list_len(), 2);
+        a.free(p1); // merges all
+        assert_eq!(a.free_list_len(), 1);
+        assert_eq!(a.frag_stats().largest_free, 4 * MB);
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut a = HbmAllocator::new(MB);
+        let p = a.alloc(1024).unwrap().ptr;
+        assert!(a.free(p).is_some());
+        assert!(a.free(p).is_none());
+    }
+
+    #[test]
+    fn compaction_restores_contiguity() {
+        let mut a = HbmAllocator::new(64 * MB);
+        let ptrs: Vec<_> = (0..32).map(|_| a.alloc(MB).unwrap().ptr).collect();
+        for (i, p) in ptrs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.free(*p);
+            }
+        }
+        // 16 x 1MB holes + 32MB tail: frag = 1 - 32/48 = 1/3.
+        assert!(a.frag_stats().fragmentation_index > 0.3);
+        let (moved, reloc) = a.compact();
+        assert!(moved > 0);
+        assert!(!reloc.is_empty());
+        let fs = a.frag_stats();
+        assert_eq!(fs.free_blocks, 1);
+        assert!((fs.fragmentation_index).abs() < 1e-12);
+        // 16 x 1MB survivors now occupy the bottom 16MB.
+        assert_eq!(a.used(), 16 * MB);
+        assert!(a.is_live(0));
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut a = HbmAllocator::new(MB);
+        a.alloc(1024).unwrap();
+        a.reset();
+        assert_eq!(a.used(), 0);
+        assert_eq!(a.live_allocations(), 0);
+        assert_eq!(a.free_list_len(), 1);
+    }
+}

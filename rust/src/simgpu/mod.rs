@@ -1,0 +1,45 @@
+//! Discrete-event simulated GPU substrate.
+//!
+//! The paper benchmarks real NVIDIA hardware; this environment has none, so
+//! `simgpu` models the device the benchmarks observe. The model is
+//! *mechanistic* where the paper's phenomena demand it:
+//!
+//! - [`memory`] is a real first-fit free-list allocator over the simulated
+//!   HBM range — fragmentation (FRAG-001..003) and allocation-latency
+//!   degradation emerge from the data structure, they are not scripted.
+//! - [`cache`] is a real set-associative LRU L2 — hit-rates, evictions and
+//!   working-set collisions (CACHE-001..004) come from simulated accesses.
+//! - [`sm`] tracks SM grants per tenant; software limiters (token buckets,
+//!   WFQ) gate *when* kernels run, so utilization accuracy (IS-003) is the
+//!   closed-loop behaviour of the limiter, not a constant.
+//! - [`pcie`] / [`nvlink`] are bandwidth-sharing link models with
+//!   contention; [`kernel`] converts FLOPs/bytes to durations through a
+//!   roofline model; [`error`] is a fault-injection + recovery state
+//!   machine.
+//!
+//! Time is virtual (nanoseconds, [`clock::VirtualClock`]) so runs are
+//! deterministic under a fixed seed.
+
+pub mod cache;
+pub mod clock;
+pub mod device;
+pub mod error;
+pub mod kernel;
+pub mod memory;
+pub mod nvlink;
+pub mod pcie;
+pub mod sm;
+pub mod spec;
+pub mod stream;
+
+pub use clock::VirtualClock;
+pub use device::GpuDevice;
+pub use error::{GpuError, GpuFault};
+pub use kernel::KernelDesc;
+pub use spec::GpuSpec;
+
+/// Identifier for a tenant (container / process) sharing the device.
+pub type TenantId = u32;
+
+/// Identifier for a simulated CUDA stream.
+pub type StreamId = u32;

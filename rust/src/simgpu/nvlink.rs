@@ -1,0 +1,172 @@
+//! Multi-GPU interconnect topology and collective cost models
+//! (NCCL-001..004).
+//!
+//! Devices are connected either all-to-all via NVLink (SXM systems) or
+//! through the PCIe host bridge. Collective times use the standard ring
+//! algorithm cost models (the same first-order models NCCL tuning uses):
+//!
+//! - allreduce:  `2·(n-1)/n · size / bw + 2·(n-1)·latency`
+//! - allgather / reduce-scatter: `(n-1)/n · size / bw + (n-1)·latency`
+//! - broadcast (ring-pipelined): `size / bw + (n-1)·latency`
+
+/// Interconnect flavour between a device pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Direct NVLink.
+    NvLink,
+    /// Through the PCIe switch / host bridge.
+    Pcie,
+}
+
+/// A multi-GPU node topology.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub device_count: u32,
+    /// Per-direction NVLink bandwidth between a pair, GB/s (0 = no NVLink).
+    pub nvlink_gbps: f64,
+    /// PCIe P2P bandwidth, GB/s.
+    pub pcie_gbps: f64,
+    /// Per-hop latency, ns.
+    pub nvlink_latency_ns: f64,
+    pub pcie_latency_ns: f64,
+}
+
+impl Topology {
+    /// DGX-like node: `n` devices, all-to-all NVLink.
+    pub fn nvlink_node(n: u32, nvlink_gbps: f64) -> Topology {
+        Topology {
+            device_count: n,
+            nvlink_gbps,
+            pcie_gbps: 25.0,
+            nvlink_latency_ns: 1_300.0,
+            pcie_latency_ns: 2_800.0,
+        }
+    }
+
+    /// PCIe-only node (the paper's A100 PCIe testbed).
+    pub fn pcie_node(n: u32, pcie_gbps: f64) -> Topology {
+        Topology {
+            device_count: n,
+            nvlink_gbps: 0.0,
+            pcie_gbps,
+            nvlink_latency_ns: 1_300.0,
+            pcie_latency_ns: 2_800.0,
+        }
+    }
+
+    pub fn link_kind(&self) -> LinkKind {
+        if self.nvlink_gbps > 0.0 { LinkKind::NvLink } else { LinkKind::Pcie }
+    }
+
+    fn link_bw_gbps(&self) -> f64 {
+        match self.link_kind() {
+            LinkKind::NvLink => self.nvlink_gbps,
+            LinkKind::Pcie => self.pcie_gbps,
+        }
+    }
+
+    fn hop_latency_ns(&self) -> f64 {
+        match self.link_kind() {
+            LinkKind::NvLink => self.nvlink_latency_ns,
+            LinkKind::Pcie => self.pcie_latency_ns,
+        }
+    }
+
+    /// Point-to-point transfer time in ns and achieved GB/s.
+    /// `bw_share` models contention from other tenants' collectives.
+    pub fn p2p_ns(&self, bytes: u64, bw_share: f64) -> (f64, f64) {
+        let bw = self.link_bw_gbps() * bw_share.clamp(1e-3, 1.0);
+        let dur = self.hop_latency_ns() + bytes as f64 / (bw * 1e9) * 1e9;
+        (dur, bytes as f64 / dur)
+    }
+
+    /// Ring allreduce over `n` ranks of a `bytes` buffer.
+    pub fn allreduce_ns(&self, bytes: u64, bw_share: f64) -> f64 {
+        let n = self.device_count.max(2) as f64;
+        let bw = self.link_bw_gbps() * bw_share.clamp(1e-3, 1.0) * 1e9;
+        2.0 * (n - 1.0) / n * bytes as f64 / bw * 1e9 + 2.0 * (n - 1.0) * self.hop_latency_ns()
+    }
+
+    /// Ring allgather of `bytes` total output.
+    pub fn allgather_ns(&self, bytes: u64, bw_share: f64) -> f64 {
+        let n = self.device_count.max(2) as f64;
+        let bw = self.link_bw_gbps() * bw_share.clamp(1e-3, 1.0) * 1e9;
+        (n - 1.0) / n * bytes as f64 / bw * 1e9 + (n - 1.0) * self.hop_latency_ns()
+    }
+
+    /// Pipelined ring broadcast of `bytes`.
+    pub fn broadcast_ns(&self, bytes: u64, bw_share: f64) -> f64 {
+        let n = self.device_count.max(2) as f64;
+        let bw = self.link_bw_gbps() * bw_share.clamp(1e-3, 1.0) * 1e9;
+        bytes as f64 / bw * 1e9 + (n - 1.0) * self.hop_latency_ns()
+    }
+
+    /// Algorithm ("bus") bandwidth for an allreduce: the figure NCCL tests
+    /// report — `size / time · 2(n-1)/n`.
+    pub fn allreduce_busbw_gbps(&self, bytes: u64, bw_share: f64) -> f64 {
+        let n = self.device_count.max(2) as f64;
+        let t = self.allreduce_ns(bytes, bw_share);
+        bytes as f64 / t * (2.0 * (n - 1.0) / n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvlink_beats_pcie() {
+        let nv = Topology::nvlink_node(4, 300.0);
+        let pc = Topology::pcie_node(4, 25.0);
+        let b = 1 << 28;
+        assert!(nv.allreduce_ns(b, 1.0) < pc.allreduce_ns(b, 1.0) / 5.0);
+    }
+
+    #[test]
+    fn allreduce_busbw_approaches_link_bw() {
+        let nv = Topology::nvlink_node(8, 300.0);
+        // Large message: bus bandwidth ≈ link bandwidth.
+        let busbw = nv.allreduce_busbw_gbps(1 << 30, 1.0);
+        assert!(busbw > 270.0 && busbw <= 300.0, "busbw={busbw}");
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let nv = Topology::nvlink_node(8, 300.0);
+        let t_small = nv.allreduce_ns(1024, 1.0);
+        // 2*(n-1)*latency = 14 * 1300 = 18200ns floor.
+        assert!(t_small >= 18_200.0, "t={t_small}");
+    }
+
+    #[test]
+    fn contention_scales_time() {
+        let nv = Topology::nvlink_node(4, 300.0);
+        let solo = nv.allreduce_ns(1 << 30, 1.0);
+        let half = nv.allreduce_ns(1 << 30, 0.5);
+        assert!(half > solo * 1.8 && half < solo * 2.1);
+    }
+
+    #[test]
+    fn p2p_achieves_share() {
+        let nv = Topology::nvlink_node(2, 300.0);
+        let (_, bw) = nv.p2p_ns(1 << 30, 1.0);
+        assert!(bw > 290.0, "bw={bw}");
+        let (_, bw_half) = nv.p2p_ns(1 << 30, 0.5);
+        assert!(bw_half < 155.0, "bw={bw_half}");
+    }
+
+    #[test]
+    fn collective_ordering() {
+        // For the same payload: broadcast < allgather < allreduce.
+        let nv = Topology::nvlink_node(8, 300.0);
+        let b = 1 << 28;
+        let br = nv.broadcast_ns(b, 1.0);
+        let ag = nv.allgather_ns(b, 1.0);
+        let ar = nv.allreduce_ns(b, 1.0);
+        assert!(ar > ag, "ar={ar} ag={ag}");
+        // Pipelined broadcast moves the full buffer once; allgather (n-1)/n
+        // of it — they are close, allreduce is ~2x allgather.
+        assert!(ar / ag > 1.8);
+        assert!(br < ar);
+    }
+}

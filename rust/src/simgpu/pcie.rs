@@ -1,0 +1,204 @@
+//! PCIe link model: host↔device transfers with pinned/pageable asymmetry
+//! and bandwidth sharing under multi-tenant contention (PCIE-001..004).
+
+use std::collections::HashMap;
+
+use super::TenantId;
+
+/// Direction of a host↔device transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    HostToDevice,
+    DeviceToHost,
+}
+
+/// Per-tenant transfer accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PcieStats {
+    pub bytes_h2d: u64,
+    pub bytes_d2h: u64,
+    pub transfers: u64,
+}
+
+/// The PCIe link. Each direction has independent bandwidth (full duplex);
+/// concurrent flows in the same direction share it equally (the switch
+/// arbitrates round-robin at TLP granularity, which averages to a fair
+/// share).
+#[derive(Clone, Debug)]
+pub struct PcieLink {
+    /// Peak effective unidirectional bandwidth, GB/s.
+    bw_gbps: f64,
+    /// Pageable transfers are staged through a bounce buffer: effective
+    /// bandwidth is divided by this factor.
+    pinned_speedup: f64,
+    /// Fixed DMA setup cost per transfer, ns.
+    setup_ns: u64,
+    /// Registered concurrent background flows per direction (tenant → GB/s
+    /// demand). Used to compute the contended share deterministically.
+    background: HashMap<(TenantId, Direction), f64>,
+    stats: HashMap<TenantId, PcieStats>,
+}
+
+impl PcieLink {
+    pub fn new(bw_gbps: f64, pinned_speedup: f64, setup_ns: u64) -> PcieLink {
+        PcieLink {
+            bw_gbps,
+            pinned_speedup,
+            setup_ns,
+            background: HashMap::new(),
+            stats: HashMap::new(),
+        }
+    }
+
+    pub fn bw_gbps(&self) -> f64 {
+        self.bw_gbps
+    }
+
+    /// Declare a sustained background flow (noisy neighbour / contention
+    /// scenarios). `demand_gbps` is the unthrottled demand.
+    pub fn set_background(&mut self, tenant: TenantId, dir: Direction, demand_gbps: f64) {
+        if demand_gbps <= 0.0 {
+            self.background.remove(&(tenant, dir));
+        } else {
+            self.background.insert((tenant, dir), demand_gbps);
+        }
+    }
+
+    pub fn clear_background(&mut self) {
+        self.background.clear();
+    }
+
+    /// Bandwidth share available to `tenant` in `dir`, as a fraction of
+    /// peak, given current background flows (max-min fair allocation).
+    pub fn share(&self, tenant: TenantId, dir: Direction) -> f64 {
+        let others: Vec<f64> = self
+            .background
+            .iter()
+            .filter(|((t, d), _)| *t != tenant && *d == dir)
+            .map(|(_, demand)| *demand)
+            .collect();
+        if others.is_empty() {
+            return 1.0;
+        }
+        // Max-min fair: every flow (others + this one) gets an equal share,
+        // but a background flow never takes more than its demand.
+        let n = others.len() + 1;
+        let fair = self.bw_gbps / n as f64;
+        let mut leftover = self.bw_gbps;
+        let mut unconstrained = 1usize; // this tenant
+        for d in &others {
+            if *d <= fair {
+                leftover -= d;
+            } else {
+                unconstrained += 1;
+            }
+        }
+        (leftover / unconstrained as f64 / self.bw_gbps).clamp(0.0, 1.0)
+    }
+
+    /// Duration of a transfer in ns, and effective bandwidth in GB/s.
+    pub fn transfer_ns(
+        &mut self,
+        tenant: TenantId,
+        dir: Direction,
+        bytes: u64,
+        pinned: bool,
+    ) -> (f64, f64) {
+        let share = self.share(tenant, dir);
+        let mut bw = self.bw_gbps * share;
+        if !pinned {
+            bw /= self.pinned_speedup;
+        }
+        let dur = self.setup_ns as f64 + bytes as f64 / (bw * 1e9) * 1e9;
+        let s = self.stats.entry(tenant).or_default();
+        match dir {
+            Direction::HostToDevice => s.bytes_h2d += bytes,
+            Direction::DeviceToHost => s.bytes_d2h += bytes,
+        }
+        s.transfers += 1;
+        let eff_bw = bytes as f64 / dur; // bytes/ns == GB/s
+        (dur, eff_bw)
+    }
+
+    pub fn stats(&self, tenant: TenantId) -> PcieStats {
+        self.stats.get(&tenant).copied().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> PcieLink {
+        PcieLink::new(25.0, 2.4, 6_000)
+    }
+
+    #[test]
+    fn pinned_transfer_near_peak() {
+        let mut l = link();
+        let (_, bw) = l.transfer_ns(1, Direction::HostToDevice, 1 << 30, true);
+        assert!(bw > 24.0 && bw <= 25.0, "bw={bw}");
+    }
+
+    #[test]
+    fn pageable_slower_by_factor() {
+        let mut l = link();
+        let (_, pinned) = l.transfer_ns(1, Direction::HostToDevice, 1 << 30, true);
+        let (_, pageable) = l.transfer_ns(1, Direction::HostToDevice, 1 << 30, false);
+        let ratio = pinned / pageable;
+        assert!((ratio - 2.4).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn setup_cost_dominates_small_transfers() {
+        let mut l = link();
+        let (dur, bw) = l.transfer_ns(1, Direction::HostToDevice, 4096, true);
+        assert!(dur > 6_000.0);
+        assert!(bw < 1.0, "bw={bw}");
+    }
+
+    #[test]
+    fn directions_are_independent() {
+        let mut l = link();
+        l.set_background(2, Direction::DeviceToHost, 25.0);
+        assert_eq!(l.share(1, Direction::HostToDevice), 1.0);
+        assert!(l.share(1, Direction::DeviceToHost) < 0.6);
+    }
+
+    #[test]
+    fn contention_halves_share() {
+        let mut l = link();
+        l.set_background(2, Direction::HostToDevice, 25.0);
+        let s = l.share(1, Direction::HostToDevice);
+        assert!((s - 0.5).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn small_background_flow_leaves_most_bandwidth() {
+        let mut l = link();
+        l.set_background(2, Direction::HostToDevice, 2.5); // 10% demand
+        let s = l.share(1, Direction::HostToDevice);
+        assert!((s - 0.9).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn four_way_contention() {
+        let mut l = link();
+        for t in 2..5 {
+            l.set_background(t, Direction::HostToDevice, 25.0);
+        }
+        let s = l.share(1, Direction::HostToDevice);
+        assert!((s - 0.25).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut l = link();
+        l.transfer_ns(1, Direction::HostToDevice, 100, true);
+        l.transfer_ns(1, Direction::DeviceToHost, 200, true);
+        let s = l.stats(1);
+        assert_eq!(s.bytes_h2d, 100);
+        assert_eq!(s.bytes_d2h, 200);
+        assert_eq!(s.transfers, 2);
+    }
+}

@@ -1,0 +1,214 @@
+//! Device specifications and latency calibration.
+//!
+//! The default profile models the paper's testbed (NVIDIA A100-40GB PCIe,
+//! §7.1). Base API costs are calibrated to the paper's *native* column in
+//! Table 4; virtualization layers add their own mechanism costs on top, so
+//! the HAMi/FCSP columns *emerge* rather than being transcribed.
+
+/// Static description of a simulated GPU.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Number of streaming multiprocessors.
+    pub sm_count: u32,
+    /// SM clock in GHz.
+    pub clock_ghz: f64,
+    /// Peak dense FP32 throughput (TFLOP/s) across the whole device.
+    pub fp32_tflops: f64,
+    /// Peak dense FP16/BF16 (tensor-core) throughput (TFLOP/s).
+    pub fp16_tflops: f64,
+    /// Device memory (HBM) capacity in bytes.
+    pub hbm_bytes: u64,
+    /// Device memory bandwidth in GB/s.
+    pub hbm_bw_gbps: f64,
+    /// L2 cache capacity in bytes.
+    pub l2_bytes: u64,
+    /// L2 line size in bytes.
+    pub l2_line: u32,
+    /// L2 associativity (ways).
+    pub l2_ways: u32,
+    /// L2 bandwidth multiplier over HBM (how much faster a hit is).
+    pub l2_speedup: f64,
+    /// PCIe unidirectional bandwidth in GB/s (Gen4 x16 ≈ 25 effective).
+    pub pcie_gbps: f64,
+    /// Pinned-to-pageable host memory transfer efficiency ratio (>1).
+    pub pinned_speedup: f64,
+    /// NVLink per-direction bandwidth in GB/s (0 = no NVLink).
+    pub nvlink_gbps: f64,
+
+    // --- calibrated native API base costs (virtual ns) -------------------
+    /// `cuLaunchKernel` CPU-side cost (Table 4 native: 4.2 µs).
+    pub launch_ns: u64,
+    /// `cuMemAlloc` base cost excluding free-list search (Table 4: 12.5 µs).
+    pub alloc_base_ns: u64,
+    /// Extra cost per free-list node visited during allocation search.
+    pub alloc_per_node_ns: u64,
+    /// `cuMemFree` base cost (Table 4: 8.1 µs).
+    pub free_base_ns: u64,
+    /// Context creation (Table 4: 125 µs).
+    pub ctx_create_ns: u64,
+    /// Context destruction.
+    pub ctx_destroy_ns: u64,
+    /// CUDA context switch latency (SCHED-001 baseline, ~10 µs on A100).
+    pub ctx_switch_ns: u64,
+    /// Host-side per-event record cost.
+    pub event_record_ns: u64,
+    /// Fixed DMA setup cost per memcpy.
+    pub dma_setup_ns: u64,
+    /// Device reset / error recovery time (ERR-002 baseline, ~2 ms).
+    pub reset_ns: u64,
+    /// Multiplicative log-normal jitter sigma applied to API latencies.
+    pub jitter_sigma: f64,
+}
+
+impl GpuSpec {
+    /// The paper's testbed: A100-40GB PCIe (§7.1).
+    pub fn a100_40gb() -> GpuSpec {
+        GpuSpec {
+            name: "A100-40GB-PCIe".to_string(),
+            sm_count: 108,
+            clock_ghz: 1.41,
+            fp32_tflops: 19.5,
+            fp16_tflops: 312.0,
+            hbm_bytes: 40 * (1 << 30),
+            hbm_bw_gbps: 1555.0,
+            l2_bytes: 40 * (1 << 20),
+            l2_line: 128,
+            l2_ways: 16,
+            l2_speedup: 3.2,
+            pcie_gbps: 25.0,
+            pinned_speedup: 2.4,
+            nvlink_gbps: 0.0, // PCIe SKU
+            launch_ns: 4_200,
+            alloc_base_ns: 12_500,
+            alloc_per_node_ns: 35,
+            free_base_ns: 8_100,
+            ctx_create_ns: 125_000,
+            ctx_destroy_ns: 60_000,
+            ctx_switch_ns: 10_500,
+            event_record_ns: 900,
+            dma_setup_ns: 6_000,
+            reset_ns: 2_100_000,
+            jitter_sigma: 0.04,
+        }
+    }
+
+    /// An SXM A100 with NVLink, for multi-GPU (NCCL) scenarios.
+    pub fn a100_80gb_sxm() -> GpuSpec {
+        let mut s = GpuSpec::a100_40gb();
+        s.name = "A100-80GB-SXM".to_string();
+        s.hbm_bytes = 80 * (1 << 30);
+        s.hbm_bw_gbps = 2039.0;
+        s.nvlink_gbps = 300.0; // NVLink3 aggregate per direction
+        s
+    }
+
+    /// An H100 PCIe profile (for cross-architecture sanity experiments).
+    pub fn h100_80gb() -> GpuSpec {
+        GpuSpec {
+            name: "H100-80GB-PCIe".to_string(),
+            sm_count: 114,
+            clock_ghz: 1.755,
+            fp32_tflops: 51.0,
+            fp16_tflops: 756.0,
+            hbm_bytes: 80 * (1 << 30),
+            hbm_bw_gbps: 2000.0,
+            l2_bytes: 50 * (1 << 20),
+            l2_line: 128,
+            l2_ways: 16,
+            l2_speedup: 3.5,
+            pcie_gbps: 50.0,
+            pinned_speedup: 2.2,
+            nvlink_gbps: 0.0,
+            launch_ns: 3_900,
+            alloc_base_ns: 11_800,
+            alloc_per_node_ns: 32,
+            free_base_ns: 7_600,
+            ctx_create_ns: 118_000,
+            ctx_destroy_ns: 55_000,
+            ctx_switch_ns: 9_800,
+            event_record_ns: 850,
+            dma_setup_ns: 5_500,
+            reset_ns: 1_900_000,
+            jitter_sigma: 0.04,
+        }
+    }
+
+    /// A MIG slice of this device: `frac_num/frac_den` of SMs, memory and
+    /// L2, with dedicated (partitioned) resources. E.g. 1g.5gb on A100-40GB
+    /// is (1, 7) compute and (1, 8) memory; we use a uniform fraction for
+    /// simplicity and note it in DESIGN.md.
+    pub fn mig_slice(&self, frac_num: u32, frac_den: u32) -> GpuSpec {
+        assert!(frac_num >= 1 && frac_num <= frac_den);
+        let f = frac_num as f64 / frac_den as f64;
+        let mut s = self.clone();
+        s.name = format!("{}-mig-{}of{}", self.name, frac_num, frac_den);
+        s.sm_count = ((self.sm_count as f64 * f).round() as u32).max(1);
+        s.fp32_tflops *= f;
+        s.fp16_tflops *= f;
+        s.hbm_bytes = (self.hbm_bytes as f64 * f) as u64;
+        s.hbm_bw_gbps *= f;
+        s.l2_bytes = (self.l2_bytes as f64 * f) as u64;
+        s.l2_ways = ((self.l2_ways as f64 * f).round() as u32).max(1);
+        s
+    }
+
+    /// Peak FLOP/s for a given precision.
+    pub fn peak_flops(&self, half_precision: bool) -> f64 {
+        (if half_precision { self.fp16_tflops } else { self.fp32_tflops }) * 1e12
+    }
+
+    /// Per-SM FP32 throughput in FLOP/s (used when a tenant is granted a
+    /// subset of SMs).
+    pub fn flops_per_sm(&self, half_precision: bool) -> f64 {
+        self.peak_flops(half_precision) / self.sm_count as f64
+    }
+}
+
+impl Default for GpuSpec {
+    fn default() -> Self {
+        GpuSpec::a100_40gb()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_matches_paper_native_calibration() {
+        let s = GpuSpec::a100_40gb();
+        assert_eq!(s.launch_ns, 4_200); // Table 4 native launch = 4.2 µs
+        assert_eq!(s.alloc_base_ns, 12_500); // 12.5 µs
+        assert_eq!(s.free_base_ns, 8_100); // 8.1 µs
+        assert_eq!(s.ctx_create_ns, 125_000); // 125 µs
+        assert_eq!(s.sm_count, 108);
+        assert_eq!(s.hbm_bytes, 40 * (1 << 30));
+    }
+
+    #[test]
+    fn mig_slice_scales_resources() {
+        let a100 = GpuSpec::a100_40gb();
+        let half = a100.mig_slice(1, 2);
+        assert_eq!(half.sm_count, 54);
+        assert_eq!(half.hbm_bytes, 20 * (1 << 30));
+        assert!((half.fp32_tflops - 9.75).abs() < 1e-9);
+        // Base API latencies are a host-side property and do not scale.
+        assert_eq!(half.launch_ns, a100.launch_ns);
+    }
+
+    #[test]
+    fn mig_slice_minimums() {
+        let a100 = GpuSpec::a100_40gb();
+        let tiny = a100.mig_slice(1, 200);
+        assert!(tiny.sm_count >= 1);
+        assert!(tiny.l2_ways >= 1);
+    }
+
+    #[test]
+    fn peak_flops_precision() {
+        let s = GpuSpec::a100_40gb();
+        assert!(s.peak_flops(true) > s.peak_flops(false));
+        assert!((s.flops_per_sm(false) * 108.0 - 19.5e12).abs() < 1e6);
+    }
+}

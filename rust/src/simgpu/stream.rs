@@ -1,0 +1,208 @@
+//! CUDA-stream model: per-stream FIFO timelines in virtual time.
+//!
+//! Work items on one stream serialize; items on different streams overlap
+//! up to resource limits (the launch path decides the SM split). Events are
+//! timestamps on a stream's timeline — `elapsed = end - start`, exactly the
+//! CUDA-event arithmetic the paper's harness uses.
+
+use std::collections::HashMap;
+
+use super::StreamId;
+
+/// Priority for preemption tests (SCHED-004).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StreamPriority {
+    Low,
+    Normal,
+    High,
+}
+
+#[derive(Clone, Debug)]
+struct StreamState {
+    /// Virtual time at which the stream's last queued work finishes.
+    ready_at_ns: u64,
+    priority: StreamPriority,
+    /// Number of work items ever enqueued.
+    depth: u64,
+}
+
+/// The per-device stream table.
+#[derive(Clone, Debug, Default)]
+pub struct StreamTable {
+    streams: HashMap<StreamId, StreamState>,
+    next_id: StreamId,
+}
+
+impl StreamTable {
+    pub fn new() -> StreamTable {
+        let mut t = StreamTable::default();
+        // Stream 0 is the default (legacy) stream.
+        t.streams.insert(
+            0,
+            StreamState { ready_at_ns: 0, priority: StreamPriority::Normal, depth: 0 },
+        );
+        t.next_id = 1;
+        t
+    }
+
+    pub fn create(&mut self, priority: StreamPriority) -> StreamId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.streams.insert(id, StreamState { ready_at_ns: 0, priority, depth: 0 });
+        id
+    }
+
+    pub fn destroy(&mut self, id: StreamId) -> bool {
+        if id == 0 {
+            return false; // default stream is indestructible
+        }
+        self.streams.remove(&id).is_some()
+    }
+
+    pub fn exists(&self, id: StreamId) -> bool {
+        self.streams.contains_key(&id)
+    }
+
+    pub fn priority(&self, id: StreamId) -> Option<StreamPriority> {
+        self.streams.get(&id).map(|s| s.priority)
+    }
+
+    /// Count of streams with queued work finishing after `now` (i.e.
+    /// concurrently active).
+    pub fn active_at(&self, now_ns: u64) -> u32 {
+        self.streams.values().filter(|s| s.ready_at_ns > now_ns).count() as u32
+    }
+
+    /// Enqueue `duration_ns` of work on `stream` at `now_ns`; returns
+    /// `(start, end)` in virtual time. Returns `None` for an unknown stream.
+    pub fn enqueue(&mut self, stream: StreamId, now_ns: u64, duration_ns: u64) -> Option<(u64, u64)> {
+        let s = self.streams.get_mut(&stream)?;
+        let start = s.ready_at_ns.max(now_ns);
+        let end = start + duration_ns;
+        s.ready_at_ns = end;
+        s.depth += 1;
+        Some((start, end))
+    }
+
+    /// `cudaStreamSynchronize`: virtual time at which the stream drains.
+    pub fn sync_time(&self, stream: StreamId, now_ns: u64) -> Option<u64> {
+        self.streams.get(&stream).map(|s| s.ready_at_ns.max(now_ns))
+    }
+
+    /// `cudaDeviceSynchronize`: all streams drained.
+    pub fn device_sync_time(&self, now_ns: u64) -> u64 {
+        self.streams.values().map(|s| s.ready_at_ns).max().unwrap_or(0).max(now_ns)
+    }
+
+    /// Preemption point for a high-priority launch: the earliest time the
+    /// device can switch to it — end of the currently-running (not queued)
+    /// work item. We approximate the running item's remainder as
+    /// `min(ready_at - now, typical_slice)`.
+    pub fn preemption_delay_ns(&self, now_ns: u64, slice_ns: u64) -> u64 {
+        let busy_until = self
+            .streams
+            .values()
+            .filter(|s| s.ready_at_ns > now_ns)
+            .map(|s| s.ready_at_ns - now_ns)
+            .min()
+            .unwrap_or(0);
+        busy_until.min(slice_ns)
+    }
+
+    pub fn depth(&self, stream: StreamId) -> u64 {
+        self.streams.get(&stream).map(|s| s.depth).unwrap_or(0)
+    }
+
+    pub fn stream_count(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Reset all stream timelines (device reset).
+    pub fn reset(&mut self) {
+        for s in self.streams.values_mut() {
+            s.ready_at_ns = 0;
+            s.depth = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_stream_exists() {
+        let t = StreamTable::new();
+        assert!(t.exists(0));
+        assert_eq!(t.stream_count(), 1);
+    }
+
+    #[test]
+    fn same_stream_serializes() {
+        let mut t = StreamTable::new();
+        let (s1, e1) = t.enqueue(0, 0, 100).unwrap();
+        let (s2, e2) = t.enqueue(0, 0, 100).unwrap();
+        assert_eq!((s1, e1), (0, 100));
+        assert_eq!((s2, e2), (100, 200));
+    }
+
+    #[test]
+    fn different_streams_overlap() {
+        let mut t = StreamTable::new();
+        let a = t.create(StreamPriority::Normal);
+        let b = t.create(StreamPriority::Normal);
+        let (sa, _) = t.enqueue(a, 0, 100).unwrap();
+        let (sb, _) = t.enqueue(b, 0, 100).unwrap();
+        assert_eq!(sa, 0);
+        assert_eq!(sb, 0); // overlapping start
+        assert_eq!(t.device_sync_time(0), 100);
+    }
+
+    #[test]
+    fn sync_times() {
+        let mut t = StreamTable::new();
+        let a = t.create(StreamPriority::Normal);
+        t.enqueue(a, 0, 500).unwrap();
+        assert_eq!(t.sync_time(a, 0), Some(500));
+        assert_eq!(t.sync_time(0, 42), Some(42)); // idle stream syncs now
+        assert_eq!(t.device_sync_time(0), 500);
+    }
+
+    #[test]
+    fn destroy_default_stream_forbidden() {
+        let mut t = StreamTable::new();
+        assert!(!t.destroy(0));
+        let a = t.create(StreamPriority::Low);
+        assert!(t.destroy(a));
+        assert!(!t.exists(a));
+    }
+
+    #[test]
+    fn active_count() {
+        let mut t = StreamTable::new();
+        let a = t.create(StreamPriority::Normal);
+        let b = t.create(StreamPriority::Normal);
+        t.enqueue(a, 0, 100).unwrap();
+        t.enqueue(b, 0, 200).unwrap();
+        assert_eq!(t.active_at(0), 2);
+        assert_eq!(t.active_at(150), 1);
+        assert_eq!(t.active_at(250), 0);
+    }
+
+    #[test]
+    fn preemption_delay_bounded_by_slice() {
+        let mut t = StreamTable::new();
+        t.enqueue(0, 0, 1_000_000).unwrap(); // long-running kernel
+        assert_eq!(t.preemption_delay_ns(0, 50_000), 50_000);
+        // Idle device → immediate.
+        assert_eq!(t.preemption_delay_ns(2_000_000, 50_000), 0);
+    }
+
+    #[test]
+    fn later_enqueue_starts_at_now() {
+        let mut t = StreamTable::new();
+        t.enqueue(0, 0, 100).unwrap();
+        let (s, e) = t.enqueue(0, 500, 100).unwrap();
+        assert_eq!((s, e), (500, 600));
+    }
+}

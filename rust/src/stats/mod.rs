@@ -1,0 +1,191 @@
+//! Statistical reduction of benchmark samples (the paper's §4.4).
+//!
+//! Every metric collects `iterations` samples after `warmup` discarded
+//! runs, then reduces to mean, standard deviation, median, P95, P99 and the
+//! coefficient of variation. Jain's fairness index (paper eq. 10) lives
+//! here too since three metric categories use it.
+
+/// Summary statistics over a sample vector (paper §4.4).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// Coefficient of variation `σ/µ` (0 when mean is 0).
+    pub cv: f64,
+}
+
+impl Summary {
+    /// Reduce a sample vector. Returns a zeroed summary for empty input.
+    pub fn from_samples(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        // Population variance: the samples *are* the run being reported.
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        let stddev = var.sqrt();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        Summary {
+            count: samples.len(),
+            mean,
+            stddev,
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            cv: if mean.abs() > f64::EPSILON { stddev / mean } else { 0.0 },
+        }
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice (inclusive method,
+/// matching numpy's default).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Percentile of an unsorted slice.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+    percentile_sorted(&sorted, p)
+}
+
+/// Jain's fairness index (paper eq. 10):
+/// `J(x) = (Σxᵢ)² / (n · Σxᵢ²)`. Returns 1.0 for empty/singleton input and
+/// for all-zero throughputs (degenerate but "fair").
+pub fn jain_fairness(xs: &[f64]) -> f64 {
+    if xs.len() <= 1 {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sum_sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sum_sq <= f64::EPSILON {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sum_sq)
+}
+
+/// Coefficient of variation of a sample vector (paper eq. 9).
+pub fn coefficient_of_variation(xs: &[f64]) -> f64 {
+    Summary::from_samples(xs).cv
+}
+
+/// Sample collector with warmup discard, mirroring the paper's
+/// "N iterations (default 100) with warmup runs (default 10)".
+#[derive(Clone, Debug)]
+pub struct Collector {
+    warmup_remaining: usize,
+    samples: Vec<f64>,
+}
+
+impl Collector {
+    pub fn new(warmup: usize, capacity: usize) -> Collector {
+        Collector { warmup_remaining: warmup, samples: Vec::with_capacity(capacity) }
+    }
+
+    /// Record one measurement; the first `warmup` records are discarded.
+    pub fn record(&mut self, value: f64) {
+        if self.warmup_remaining > 0 {
+            self.warmup_remaining -= 1;
+        } else {
+            self.samples.push(value);
+        }
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::from_samples(&self.samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 5.0).abs() < 1e-12);
+        // population stddev of 1..5 = sqrt(2)
+        assert!((s.stddev - 2.0_f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_zeroed() {
+        assert_eq!(Summary::from_samples(&[]), Summary::default());
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let v = [10.0, 20.0, 30.0, 40.0];
+        assert!((percentile(&v, 0.0) - 10.0).abs() < 1e-12);
+        assert!((percentile(&v, 100.0) - 40.0).abs() < 1e-12);
+        assert!((percentile(&v, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p99_close_to_max_for_uniform() {
+        let v: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let p99 = percentile(&v, 99.0);
+        assert!(p99 > 985.0 && p99 < 995.0, "p99={p99}");
+    }
+
+    #[test]
+    fn jain_perfect_fairness() {
+        assert!((jain_fairness(&[5.0, 5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_worst_case_one_over_n() {
+        // One tenant gets everything: J = 1/n.
+        let j = jain_fairness(&[10.0, 0.0, 0.0, 0.0]);
+        assert!((j - 0.25).abs() < 1e-12, "j={j}");
+    }
+
+    #[test]
+    fn jain_degenerate_inputs() {
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[3.0]), 1.0);
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn collector_discards_warmup() {
+        let mut c = Collector::new(2, 10);
+        for i in 0..5 {
+            c.record(i as f64);
+        }
+        assert_eq!(c.samples(), &[2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn cv_zero_mean_guard() {
+        assert_eq!(coefficient_of_variation(&[0.0, 0.0, 0.0]), 0.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Property-testing mini-framework (proptest substitute for the offline
+//! build): seeded generators + a runner that reports the failing seed and
+//! attempts input shrinking for integer-vector cases.
+//!
+//! Used by `rust/tests/prop_*.rs` to check coordinator/substrate
+//! invariants across randomized inputs.
+
+use crate::util::Rng;
+
+/// Number of cases per property by default.
+pub const DEFAULT_CASES: usize = 256;
+
+/// A generator of random values of `T`.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng) -> T;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Run `prop` on `cases` random inputs from `gen`; panics with the seed
+/// and case number on the first failure.
+pub fn check<T: std::fmt::Debug, G: Gen<T>, P: Fn(&T) -> bool>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: G,
+    prop: P,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed})\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but shrinks a failing `Vec<u64>` input by halving and
+/// element dropping before reporting.
+pub fn check_vec_u64<P: Fn(&[u64]) -> bool>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    max_len: usize,
+    max_val: u64,
+    prop: P,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let len = rng.range(0, max_len + 1);
+        let input: Vec<u64> = (0..len).map(|_| rng.below(max_val.max(1))).collect();
+        if !prop(&input) {
+            let minimal = shrink_vec(&input, &prop);
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed})\n  shrunk input ({} of {} elems): {minimal:?}",
+                minimal.len(),
+                input.len()
+            );
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly try removing chunks while the property still
+/// fails; return the smallest failing input found.
+pub fn shrink_vec<P: Fn(&[u64]) -> bool>(input: &[u64], prop: &P) -> Vec<u64> {
+    let mut cur = input.to_vec();
+    let mut chunk = (cur.len() / 2).max(1);
+    while chunk >= 1 && !cur.is_empty() {
+        let mut i = 0;
+        let mut progressed = false;
+        while i + chunk <= cur.len() {
+            let mut candidate = cur.clone();
+            candidate.drain(i..i + chunk);
+            if !prop(&candidate) {
+                cur = candidate;
+                progressed = true;
+            } else {
+                i += chunk;
+            }
+        }
+        if !progressed {
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+    }
+    cur
+}
+
+/// Common generators.
+pub mod gens {
+    use crate::util::Rng;
+
+    /// Allocation sizes: log-uniform across bytes..GiB.
+    pub fn alloc_size(rng: &mut Rng) -> u64 {
+        let exp = rng.f64_range(6.0, 30.0);
+        (2f64).powf(exp) as u64
+    }
+
+    /// A fraction in (0, 1].
+    pub fn fraction(rng: &mut Rng) -> f64 {
+        rng.f64_range(0.01, 1.0)
+    }
+
+    /// A small tenant count 1..=8.
+    pub fn tenants(rng: &mut Rng) -> u32 {
+        rng.range(1, 9) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("sum-commutes", 1, 64, |r: &mut Rng| (r.below(100), r.below(100)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 2, 8, |r: &mut Rng| r.below(10), |_| false);
+    }
+
+    #[test]
+    fn shrink_finds_minimal_counterexample() {
+        // Property: "no element equals 7" — fails iff input contains 7.
+        let prop = |v: &[u64]| !v.contains(&7);
+        let shrunk = shrink_vec(&[1, 2, 7, 3, 7, 4], &prop);
+        assert_eq!(shrunk, vec![7]);
+    }
+
+    #[test]
+    fn shrink_keeps_failing_invariant() {
+        let prop = |v: &[u64]| v.iter().sum::<u64>() < 10;
+        let input = vec![5, 5, 5, 5];
+        let shrunk = shrink_vec(&input, &prop);
+        assert!(!prop(&shrunk));
+        assert!(shrunk.len() <= input.len());
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..200 {
+            let s = gens::alloc_size(&mut rng);
+            assert!(s >= 64 && s <= (1 << 30));
+            let f = gens::fraction(&mut rng);
+            assert!(f > 0.0 && f <= 1.0);
+            let t = gens::tenants(&mut rng);
+            assert!((1..=8).contains(&t));
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Human-readable formatting of byte sizes, durations and rates used by the
+//! TXT report writer and CLI output.
+
+/// Format a byte count with binary units (`KiB`, `MiB`, `GiB`).
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a nanosecond duration with an adaptive unit (ns/µs/ms/s).
+pub fn duration_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a bandwidth in GB/s from bytes and nanoseconds.
+pub fn bandwidth_gbps(bytes: f64, ns: f64) -> String {
+    if ns <= 0.0 {
+        return "inf".to_string();
+    }
+    format!("{:.2} GB/s", bytes / ns) // bytes/ns == GB/s
+}
+
+/// Format a ratio as a percentage with one decimal.
+pub fn percent(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(40 * 1024 * 1024 * 1024), "40.00 GiB");
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(duration_ns(500.0), "500.0 ns");
+        assert_eq!(duration_ns(4_200.0), "4.20 µs");
+        assert_eq!(duration_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(duration_ns(2.5e9), "2.500 s");
+    }
+
+    #[test]
+    fn bandwidth() {
+        // 1555 GB in 1 s.
+        assert_eq!(bandwidth_gbps(1555e9, 1e9), "1555.00 GB/s");
+    }
+
+    #[test]
+    fn percent_fmt() {
+        assert_eq!(percent(0.852), "85.2%");
+    }
+}

@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic RNG and human-readable formatting.
+//!
+//! The offline build environment has no `rand` crate, so [`rng`] implements
+//! the SplitMix64 and xoshiro256** generators from the reference
+//! implementations (Blackman & Vigna). These are used everywhere a seeded,
+//! reproducible stream of pseudo-random numbers is needed (jitter models,
+//! workload generators, property tests).
+
+pub mod fmt;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,311 @@
+//! BUD-FCSP-like backend (paper §2.3.2): HAMi-compatible API with four
+//! measurable improvements —
+//!
+//! 1. **Cached hook resolution** ([`super::hooks::HookTable::fcsp`]):
+//!    ~42 ns per intercepted call vs HAMi's ~85 ns.
+//! 2. **Lock-light accounting** ([`super::shared_region::SharedRegion::fcsp`]):
+//!    atomics on the fast path shrink the critical section ~4×.
+//! 3. **Adaptive token bucket** ([`super::rate_limiter::AdaptiveBucket`]):
+//!    continuous refill + burst credit + integral trim ⇒ sub-percentage SM
+//!    control (IS-003 ≈ 93 % vs 85 %).
+//! 4. **Weighted fair queuing** ([`super::wfq::WfqScheduler`]): cross-tenant
+//!    arbitration by virtual finish time (IS-008 ≈ 0.94 vs 0.87).
+
+use std::collections::HashMap;
+
+use crate::simgpu::error::GpuError;
+use crate::simgpu::kernel::{duration_ns, ExecContext, KernelDesc};
+use crate::simgpu::sm::SmGrant;
+use crate::simgpu::{GpuDevice, TenantId};
+
+use super::hooks::HookTable;
+use super::nvml::{virtual_mem_info, NvmlPoller};
+use super::rate_limiter::AdaptiveBucket;
+use super::shared_region::{Reserve, SharedRegion};
+use super::wfq::WfqScheduler;
+use super::{LaunchGate, TenantConfig, VirtLayer};
+
+struct FcspTenant {
+    cfg: TenantConfig,
+    limiter: Option<AdaptiveBucket>,
+}
+
+/// The BUD-FCSP-like layer.
+pub struct BudFcsp {
+    hooks: HookTable,
+    region: SharedRegion,
+    poller: NvmlPoller,
+    wfq: WfqScheduler,
+    tenants: HashMap<TenantId, FcspTenant>,
+    /// Per-allocation tracking cost (open-addressing table, cheaper than
+    /// HAMi's chained hash), ns.
+    tracking_ns: f64,
+    /// Launch-path quota check (branch on cached quota state), ns.
+    quota_check_ns: f64,
+    /// FCSP batches NVML reconciliation: a cheaper cached read with
+    /// periodic refresh amortizes the ioctl (Table 4: 28.3 µs alloc).
+    nvml_alloc_check_ns: f64,
+    /// Lighter free-path sync (Table 4: 18.6 µs free).
+    nvml_free_sync_ns: f64,
+    /// Launch-path state sync: FCSP reads an atomic snapshot instead of
+    /// taking the semaphore, but still refreshes its cached core counters
+    /// (Table 4: launch 8.7 µs vs 4.2 native).
+    launch_sync_ns: f64,
+}
+
+/// Context bookkeeping reserve charged against the quota (leaner tables
+/// than HAMi's — IS-001: 99.1 %).
+pub const CTX_RESERVE: u64 = 90 << 20;
+
+impl BudFcsp {
+    pub fn new() -> BudFcsp {
+        BudFcsp {
+            hooks: HookTable::fcsp(),
+            region: SharedRegion::fcsp(),
+            poller: NvmlPoller::fcsp(),
+            wfq: WfqScheduler::new(),
+            tenants: HashMap::new(),
+            tracking_ns: 120.0,
+            quota_check_ns: 45.0,
+            nvml_alloc_check_ns: 15_300.0,
+            nvml_free_sync_ns: 10_200.0,
+            launch_sync_ns: 4_300.0,
+        }
+    }
+}
+
+impl Default for BudFcsp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl VirtLayer for BudFcsp {
+    fn name(&self) -> &'static str {
+        "fcsp"
+    }
+
+    fn register_tenant(
+        &mut self,
+        tenant: TenantId,
+        cfg: TenantConfig,
+        dev: &mut GpuDevice,
+    ) -> Result<(), GpuError> {
+        self.region.add_tenant(tenant, cfg.mem_limit);
+        if cfg.mem_limit.is_some() {
+            self.region.reserve(tenant, CTX_RESERVE, dev);
+        }
+        self.wfq.add_tenant(tenant, cfg.weight);
+        let limiter = cfg.sm_limit.filter(|l| *l < 1.0).map(AdaptiveBucket::new);
+        self.tenants.insert(tenant, FcspTenant { cfg, limiter });
+        self.region.set_active_tenants(self.tenants.len() as u32);
+        dev.grant_sms(tenant, SmGrant::Shared).map_err(|_| GpuError::InvalidValue)
+    }
+
+    fn unregister_tenant(&mut self, tenant: TenantId, dev: &mut GpuDevice) {
+        self.tenants.remove(&tenant);
+        self.region.remove_tenant(tenant);
+        self.wfq.remove_tenant(tenant);
+        self.region.set_active_tenants((self.tenants.len() as u32).max(1));
+        dev.sms.unregister(tenant);
+    }
+
+    fn hook_overhead_ns(&mut self, dev: &mut GpuDevice) -> f64 {
+        self.hooks.call_ns(dev)
+    }
+
+    fn context_create_overhead_ns(&mut self, _tenant: TenantId, dev: &mut GpuDevice) -> f64 {
+        // Lazy symbol resolution + smaller shared mapping: Table 4 shows
+        // 198 µs vs native 125 µs ⇒ ~73 µs added.
+        (self.hooks.cold_resolve_ns() / 2.0 + 3_000.0) * dev.jitter()
+    }
+
+    fn pre_alloc(
+        &mut self,
+        tenant: TenantId,
+        size: u64,
+        dev: &mut GpuDevice,
+    ) -> Result<f64, GpuError> {
+        let hook = self.hooks.call_ns(dev);
+        let (outcome, lock_cost) = self.region.reserve(tenant, size, dev);
+        match outcome {
+            Reserve::Granted => Ok(hook
+                + lock_cost
+                + (self.quota_check_ns + self.nvml_alloc_check_ns) * dev.jitter()),
+            Reserve::OverQuota { .. } => Err(GpuError::QuotaExceeded),
+        }
+    }
+
+    fn post_alloc(&mut self, _tenant: TenantId, _size: u64, dev: &mut GpuDevice) -> f64 {
+        self.tracking_ns * dev.jitter()
+    }
+
+    fn pre_free(&mut self, _tenant: TenantId, dev: &mut GpuDevice) -> f64 {
+        self.hooks.call_ns(dev)
+            + (self.tracking_ns + self.nvml_free_sync_ns) * dev.jitter()
+    }
+
+    fn post_free(&mut self, tenant: TenantId, size: u64, dev: &mut GpuDevice) -> f64 {
+        self.region.release(tenant, size, dev)
+    }
+
+    fn gate_launch(
+        &mut self,
+        tenant: TenantId,
+        kernel: &KernelDesc,
+        dev: &mut GpuDevice,
+    ) -> LaunchGate {
+        self.tick(dev);
+        // Fast path: hook + cached-quota branch; the shared region is NOT
+        // locked per launch (atomic snapshot read + counter refresh).
+        let mut overhead = self.hooks.call_ns(dev)
+            + (self.quota_check_ns + self.launch_sync_ns) * dev.jitter();
+        let concurrent = dev.concurrent_shared(tenant);
+        let granted = dev.sms.effective_sms(tenant, concurrent);
+        let mut wait = 0.0;
+        if let Some(t) = self.tenants.get_mut(&tenant) {
+            if let Some(lim) = t.limiter.as_mut() {
+                let est = duration_ns(&dev.spec, kernel, &ExecContext::uncontended(granted));
+                let sm_frac = (granted as f64 / dev.spec.sm_count as f64)
+                    * kernel.occupancy.clamp(1.0 / 2048.0, 1.0);
+                let adm = lim.acquire(est * sm_frac, dev.clock.now_ns() as f64);
+                overhead += adm.overhead_ns;
+                wait = adm.wait_ns;
+            }
+        }
+        // WFQ virtual-time accounting for this tenant's submission.
+        self.wfq.serve(tenant, kernel.flops.max(1.0));
+        LaunchGate { overhead_ns: overhead, throttle_wait_ns: wait, granted_sms: granted }
+    }
+
+    fn on_kernel_complete(&mut self, tenant: TenantId, sm_frac: f64, busy_ns: f64, now_ns: f64) {
+        if let Some(t) = self.tenants.get_mut(&tenant) {
+            if let Some(lim) = t.limiter.as_mut() {
+                lim.on_complete(sm_frac, busy_ns, now_ns);
+            }
+        }
+    }
+
+    fn mem_info(&self, tenant: TenantId, dev: &GpuDevice) -> (u64, u64) {
+        let (used, limit) = self.region.usage(tenant);
+        virtual_mem_info(tenant, used, limit, dev)
+    }
+
+    fn tick(&mut self, dev: &mut GpuDevice) {
+        self.poller.tick(dev);
+        self.region.observe_rate(dev.clock.now_ns() as f64);
+    }
+
+    fn contention_stats(&self) -> (f64, u64) {
+        self.region.contention_stats()
+    }
+
+    fn tracking_cost_ns(&self) -> f64 {
+        self.tracking_ns
+    }
+
+    fn monitor_cpu_overhead(&self) -> f64 {
+        self.poller.cpu_overhead()
+    }
+
+    fn fair_scheduler(&self) -> bool {
+        true
+    }
+
+    fn arbitrate(&mut self, pending: &[(TenantId, KernelDesc)]) -> usize {
+        let costs: Vec<(TenantId, f64)> =
+            pending.iter().map(|(t, k)| (*t, k.flops.max(1.0))).collect();
+        self.wfq.pick(&costs).unwrap_or(0)
+    }
+
+    fn sm_limit(&self, tenant: TenantId) -> f64 {
+        self.tenants
+            .get(&tenant)
+            .and_then(|t| t.cfg.sm_limit)
+            .unwrap_or(1.0)
+    }
+
+    fn update_sm_limit(&mut self, tenant: TenantId, limit: f64) -> bool {
+        if let Some(t) = self.tenants.get_mut(&tenant) {
+            t.cfg.sm_limit = Some(limit);
+            match t.limiter.as_mut() {
+                Some(l) => l.set_limit(limit),
+                None => t.limiter = Some(AdaptiveBucket::new(limit)),
+            }
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (GpuDevice, BudFcsp) {
+        let mut dev = GpuDevice::a100(11);
+        dev.spec.jitter_sigma = 0.0;
+        let mut f = BudFcsp::new();
+        f.register_tenant(1, TenantConfig::unlimited().with_mem_limit(1 << 30), &mut dev)
+            .unwrap();
+        (dev, f)
+    }
+
+    #[test]
+    fn hook_cost_near_42ns_after_warmup() {
+        let (mut dev, mut f) = setup();
+        f.hook_overhead_ns(&mut dev); // cold
+        let c = f.hook_overhead_ns(&mut dev);
+        assert!((c - 42.0).abs() < 1.0, "c={c}");
+    }
+
+    #[test]
+    fn cheaper_than_hami_on_every_path() {
+        let mut dev = GpuDevice::a100(12);
+        dev.spec.jitter_sigma = 0.0;
+        let mut f = BudFcsp::new();
+        let mut h = super::super::hami::HamiCore::new();
+        f.register_tenant(1, TenantConfig::unlimited(), &mut dev).unwrap();
+        h.register_tenant(2, TenantConfig::unlimited(), &mut dev).unwrap();
+        f.hook_overhead_ns(&mut dev); // warm the cache
+        assert!(f.hook_overhead_ns(&mut dev) < h.hook_overhead_ns(&mut dev));
+        assert!(
+            f.context_create_overhead_ns(1, &mut dev) < h.context_create_overhead_ns(2, &mut dev)
+        );
+        let gf = f.gate_launch(1, &KernelDesc::null(), &mut dev);
+        let gh = h.gate_launch(2, &KernelDesc::null(), &mut dev);
+        assert!(gf.overhead_ns < gh.overhead_ns, "f={} h={}", gf.overhead_ns, gh.overhead_ns);
+    }
+
+    #[test]
+    fn quota_still_enforced() {
+        let (mut dev, mut f) = setup();
+        assert!(f.pre_alloc(1, 1 << 29, &mut dev).is_ok());
+        assert_eq!(f.pre_alloc(1, 1 << 30, &mut dev), Err(GpuError::QuotaExceeded));
+    }
+
+    #[test]
+    fn arbitrate_uses_wfq() {
+        let mut dev = GpuDevice::a100(13);
+        let mut f = BudFcsp::new();
+        f.register_tenant(1, TenantConfig::unlimited(), &mut dev).unwrap();
+        f.register_tenant(2, TenantConfig::unlimited(), &mut dev).unwrap();
+        // Tenant 1 has consumed lots of virtual time.
+        for _ in 0..50 {
+            f.gate_launch(1, &KernelDesc::gemm(512, 512, 512, false), &mut dev);
+        }
+        let pending = vec![
+            (1, KernelDesc::null()),
+            (2, KernelDesc::null()),
+        ];
+        assert_eq!(f.arbitrate(&pending), 1); // tenant 2 is behind → served
+    }
+
+    #[test]
+    fn monitor_overhead_below_hami() {
+        let f = BudFcsp::new();
+        let h = super::super::hami::HamiCore::new();
+        assert!(f.monitor_cpu_overhead() < h.monitor_cpu_overhead());
+    }
+}

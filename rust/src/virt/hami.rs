@@ -1,0 +1,343 @@
+//! HAMi-core-like backend (paper §2.3.1).
+//!
+//! Mechanisms composed here, each contributing measurable overhead:
+//!
+//! - **dlsym hooks** ([`super::hooks::HookTable::hami`]): full dispatch
+//!   lookup on every intercepted call (~85 ns, OH-005).
+//! - **Shared-region accounting** ([`super::shared_region`]): every
+//!   alloc/free takes the semaphore and updates usage (OH-002/003/006/007).
+//! - **Fixed-window rate limiter** ([`super::rate_limiter::HamiLimiter`]):
+//!   token pool refilled only when the 100 ms NVML poll fires — coarse
+//!   closed-loop SM limiting (OH-001/008, IS-003/004).
+//! - **NVML poller** ([`super::nvml::NvmlPoller::hami`]): background
+//!   utilization sampling (OH-009), also the limiter's only feedback path.
+//!
+//! Memory quota violations are rejected *before* touching the driver
+//! (IS-002), and NVML memory queries report the container quota (IS-001).
+
+use std::collections::HashMap;
+
+use crate::simgpu::error::GpuError;
+use crate::simgpu::kernel::{duration_ns, ExecContext, KernelDesc};
+use crate::simgpu::sm::SmGrant;
+use crate::simgpu::{GpuDevice, TenantId};
+
+use super::hooks::HookTable;
+use super::nvml::{virtual_mem_info, NvmlPoller};
+use super::rate_limiter::HamiLimiter;
+use super::shared_region::{Reserve, SharedRegion};
+use super::{LaunchGate, TenantConfig, VirtLayer};
+
+struct HamiTenant {
+    cfg: TenantConfig,
+    limiter: Option<HamiLimiter>,
+}
+
+/// The HAMi-core-like layer.
+pub struct HamiCore {
+    hooks: HookTable,
+    region: SharedRegion,
+    poller: NvmlPoller,
+    tenants: HashMap<TenantId, HamiTenant>,
+    /// Round-robin arbitration pointer (the CUDA driver's context
+    /// timeslicer — HAMi adds no cross-tenant scheduler of its own).
+    rr_counter: usize,
+    /// Per-allocation tracking cost: hash-table insert/remove in the
+    /// interception library (OH-007), ns.
+    tracking_ns: f64,
+    /// Quota-check arithmetic on the launch path, ns.
+    quota_check_ns: f64,
+    /// NVML `nvmlDeviceGetMemoryInfo` ioctl round-trip HAMi performs on
+    /// every allocation to reconcile the shared region against the real
+    /// device (the dominant term in Table 4's 45.2 µs alloc).
+    nvml_alloc_check_ns: f64,
+    /// Region reconciliation + NVML poke on the free path (Table 4:
+    /// 32.4 µs free vs 8.1 native).
+    nvml_free_sync_ns: f64,
+    /// Launch-path shared-region synchronization: HAMi takes the region
+    /// semaphore and scans per-tenant core counters on *every* launch
+    /// (Table 4: launch 15.3 µs vs 4.2 native — the dominant added term).
+    launch_region_sync_ns: f64,
+}
+
+/// Device memory the interception library's own context bookkeeping
+/// consumes out of the tenant's quota (CUDA context + tracking tables).
+/// This is why memory-limit accuracy is below 100 % (IS-001: 98.2 %).
+pub const CTX_RESERVE: u64 = 180 << 20;
+
+impl HamiCore {
+    pub fn new() -> HamiCore {
+        HamiCore {
+            hooks: HookTable::hami(),
+            region: SharedRegion::hami(),
+            poller: NvmlPoller::hami(),
+            tenants: HashMap::new(),
+            rr_counter: 0,
+            tracking_ns: 260.0,
+            quota_check_ns: 110.0,
+            nvml_alloc_check_ns: 31_500.0,
+            nvml_free_sync_ns: 23_600.0,
+            launch_region_sync_ns: 10_000.0,
+        }
+    }
+
+    fn active_tenants(&self) -> u32 {
+        self.tenants.len() as u32
+    }
+}
+
+impl Default for HamiCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl VirtLayer for HamiCore {
+    fn name(&self) -> &'static str {
+        "hami"
+    }
+
+    fn register_tenant(
+        &mut self,
+        tenant: TenantId,
+        cfg: TenantConfig,
+        dev: &mut GpuDevice,
+    ) -> Result<(), GpuError> {
+        self.region.add_tenant(tenant, cfg.mem_limit);
+        if cfg.mem_limit.is_some() {
+            // The context itself eats into the quota.
+            self.region.reserve(tenant, CTX_RESERVE, dev);
+        }
+        let limiter = cfg.sm_limit.filter(|l| *l < 1.0).map(HamiLimiter::new);
+        self.tenants.insert(tenant, HamiTenant { cfg, limiter });
+        self.region.set_active_tenants(self.active_tenants());
+        dev.grant_sms(tenant, SmGrant::Shared).map_err(|_| GpuError::InvalidValue)
+    }
+
+    fn unregister_tenant(&mut self, tenant: TenantId, dev: &mut GpuDevice) {
+        self.tenants.remove(&tenant);
+        self.region.remove_tenant(tenant);
+        self.region.set_active_tenants(self.active_tenants().max(1));
+        dev.sms.unregister(tenant);
+    }
+
+    fn hook_overhead_ns(&mut self, dev: &mut GpuDevice) -> f64 {
+        self.hooks.call_ns(dev)
+    }
+
+    fn context_create_overhead_ns(&mut self, _tenant: TenantId, dev: &mut GpuDevice) -> f64 {
+        // Library constructor: resolve hook table, map the shared region,
+        // initialize semaphores. Paper Table 4: 312 µs vs 125 µs native.
+        (self.hooks.cold_resolve_ns() + 7_000.0) * dev.jitter()
+    }
+
+    fn pre_alloc(
+        &mut self,
+        tenant: TenantId,
+        size: u64,
+        dev: &mut GpuDevice,
+    ) -> Result<f64, GpuError> {
+        let hook = self.hooks.call_ns(dev);
+        let (outcome, lock_cost) = self.region.reserve(tenant, size, dev);
+        match outcome {
+            // Granted: HAMi reconciles against the physical device with an
+            // NVML memory-info query before letting the driver allocate.
+            Reserve::Granted => Ok(hook
+                + lock_cost
+                + (self.quota_check_ns + self.nvml_alloc_check_ns) * dev.jitter()),
+            // Rejection is decided from the shared region alone — fast.
+            Reserve::OverQuota { .. } => Err(GpuError::QuotaExceeded),
+        }
+    }
+
+    fn post_alloc(&mut self, _tenant: TenantId, _size: u64, dev: &mut GpuDevice) -> f64 {
+        // Allocation-table insert + size bookkeeping.
+        self.tracking_ns * dev.jitter()
+    }
+
+    fn pre_free(&mut self, _tenant: TenantId, dev: &mut GpuDevice) -> f64 {
+        self.hooks.call_ns(dev)
+            + (self.tracking_ns + self.nvml_free_sync_ns) * dev.jitter()
+    }
+
+    fn post_free(&mut self, tenant: TenantId, size: u64, dev: &mut GpuDevice) -> f64 {
+        self.region.release(tenant, size, dev)
+    }
+
+    fn gate_launch(
+        &mut self,
+        tenant: TenantId,
+        kernel: &KernelDesc,
+        dev: &mut GpuDevice,
+    ) -> LaunchGate {
+        self.tick(dev);
+        let mut overhead = self.hooks.call_ns(dev) + self.quota_check_ns * dev.jitter();
+        // HAMi consults the shared region under its semaphore on every
+        // launch (core-counter scan) — even for unlimited tenants.
+        overhead += (2.0 * self.region.critical_ns() + self.launch_region_sync_ns)
+            * dev.jitter();
+        let concurrent = dev.concurrent_shared(tenant);
+        let granted = dev.sms.effective_sms(tenant, concurrent);
+        let mut wait = 0.0;
+        if let Some(t) = self.tenants.get_mut(&tenant) {
+            if let Some(lim) = t.limiter.as_mut() {
+                let est = duration_ns(&dev.spec, kernel, &ExecContext::uncontended(granted));
+                let sm_frac = (granted as f64 / dev.spec.sm_count as f64)
+                    * kernel.occupancy.clamp(1.0 / 2048.0, 1.0);
+                let adm = lim.acquire(est * sm_frac, dev.clock.now_ns() as f64);
+                overhead += adm.overhead_ns;
+                wait = adm.wait_ns;
+            }
+        }
+        LaunchGate { overhead_ns: overhead, throttle_wait_ns: wait, granted_sms: granted }
+    }
+
+    fn on_kernel_complete(&mut self, tenant: TenantId, sm_frac: f64, busy_ns: f64, _now_ns: f64) {
+        if let Some(t) = self.tenants.get_mut(&tenant) {
+            if let Some(lim) = t.limiter.as_mut() {
+                lim.on_complete(sm_frac, busy_ns);
+            }
+        }
+    }
+
+    fn mem_info(&self, tenant: TenantId, dev: &GpuDevice) -> (u64, u64) {
+        let (used, limit) = self.region.usage(tenant);
+        virtual_mem_info(tenant, used, limit, dev)
+    }
+
+    fn tick(&mut self, dev: &mut GpuDevice) {
+        self.poller.tick(dev);
+        self.region.observe_rate(dev.clock.now_ns() as f64);
+    }
+
+    fn monitor_cpu_overhead(&self) -> f64 {
+        self.poller.cpu_overhead()
+    }
+
+    fn contention_stats(&self) -> (f64, u64) {
+        self.region.contention_stats()
+    }
+
+    fn tracking_cost_ns(&self) -> f64 {
+        self.tracking_ns
+    }
+
+    fn arbitrate(&mut self, pending: &[(TenantId, KernelDesc)]) -> usize {
+        // Driver-level round robin over submitted work: one head-of-line
+        // item per turn, regardless of its size — large-kernel tenants get
+        // more *service time* per turn, which is HAMi's fairness gap.
+        if pending.is_empty() {
+            return 0;
+        }
+        let idx = self.rr_counter % pending.len();
+        self.rr_counter += 1;
+        idx
+    }
+
+    fn sm_limit(&self, tenant: TenantId) -> f64 {
+        self.tenants
+            .get(&tenant)
+            .and_then(|t| t.cfg.sm_limit)
+            .unwrap_or(1.0)
+    }
+
+    fn update_sm_limit(&mut self, tenant: TenantId, limit: f64) -> bool {
+        if let Some(t) = self.tenants.get_mut(&tenant) {
+            t.cfg.sm_limit = Some(limit);
+            match t.limiter.as_mut() {
+                Some(l) => l.set_limit(limit),
+                None => t.limiter = Some(HamiLimiter::new(limit)),
+            }
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (GpuDevice, HamiCore) {
+        let mut dev = GpuDevice::a100(7);
+        dev.spec.jitter_sigma = 0.0;
+        let mut h = HamiCore::new();
+        h.register_tenant(1, TenantConfig::unlimited().with_mem_limit(1 << 30), &mut dev)
+            .unwrap();
+        (dev, h)
+    }
+
+    #[test]
+    fn hook_cost_near_85ns() {
+        let (mut dev, mut h) = setup();
+        let c = h.hook_overhead_ns(&mut dev);
+        assert!((c - 85.0).abs() < 1.0, "c={c}");
+    }
+
+    #[test]
+    fn quota_rejects_over_allocation() {
+        let (mut dev, mut h) = setup();
+        assert!(h.pre_alloc(1, 1 << 29, &mut dev).is_ok());
+        assert_eq!(h.pre_alloc(1, 1 << 30, &mut dev), Err(GpuError::QuotaExceeded));
+    }
+
+    #[test]
+    fn mem_info_shows_container_quota() {
+        let (mut dev, mut h) = setup();
+        h.pre_alloc(1, 1 << 20, &mut dev).unwrap();
+        let (free, total) = h.mem_info(1, &dev);
+        assert_eq!(total, 1 << 30);
+        // Free = quota - allocation - the library's context reserve.
+        assert_eq!(free, (1 << 30) - (1 << 20) - CTX_RESERVE);
+    }
+
+    #[test]
+    fn launch_overhead_well_above_native() {
+        let (mut dev, mut h) = setup();
+        let g = h.gate_launch(1, &KernelDesc::null(), &mut dev);
+        // Hook + quota + 2 shared-region touches ≈ 1 µs; the paper's 15.3µs
+        // total includes the driver's 4.2µs base plus limiter waits — the
+        // full path is asserted in the metrics tests.
+        assert!(g.overhead_ns > 500.0, "overhead={}", g.overhead_ns);
+        assert_eq!(g.granted_sms, 108);
+    }
+
+    #[test]
+    fn limited_tenant_gets_throttled_eventually() {
+        let mut dev = GpuDevice::a100(9);
+        dev.spec.jitter_sigma = 0.0;
+        let mut h = HamiCore::new();
+        h.register_tenant(2, TenantConfig::unlimited().with_sm_limit(0.25), &mut dev).unwrap();
+        let k = KernelDesc::gemm(2048, 2048, 2048, false);
+        let mut throttled = false;
+        for _ in 0..400 {
+            let g = h.gate_launch(2, &k, &mut dev);
+            let span = dev.raw_launch(2, 0, &k, g.granted_sms).unwrap();
+            dev.clock.advance_to(span.1);
+            h.on_kernel_complete(2, 1.0, (span.1 - span.0) as f64, span.1 as f64);
+            if g.throttle_wait_ns > 0.0 {
+                throttled = true;
+                break;
+            }
+        }
+        assert!(throttled, "limiter never engaged");
+    }
+
+    #[test]
+    fn context_overhead_calibrated() {
+        let (mut dev, mut h) = setup();
+        let extra = h.context_create_overhead_ns(1, &mut dev);
+        // Table 4: HAMi context = 312 µs = 125 native + ~187 added.
+        assert!((extra - 187_000.0).abs() < 30_000.0, "extra={extra}");
+    }
+
+    #[test]
+    fn unregister_releases_state() {
+        let (mut dev, mut h) = setup();
+        h.unregister_tenant(1, &mut dev);
+        // Unknown tenant → unlimited view.
+        let (_, total) = h.mem_info(1, &dev);
+        assert_eq!(total, dev.memory.capacity());
+    }
+}

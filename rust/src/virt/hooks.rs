@@ -1,0 +1,137 @@
+//! dlsym-hook cost model (OH-005).
+//!
+//! HAMi-core intercepts CUDA/NVML entry points through `dlsym` shims. Each
+//! intercepted call pays: symbol-table lookup in the shim's dispatch table
+//! plus the real-symbol indirection. BUD-FCSP's "optimized dlsym hook
+//! resolution paths" (paper §2.3.2) cache the resolved pointer per call
+//! site after first use, leaving only the indirect-branch cost.
+//!
+//! Calibration: paper Table 4 reports OH-005 = 85 ns (HAMi) vs 42 ns
+//! (FCSP). Those numbers *emerge* here from `lookup_ns` vs `cached_ns`
+//! given the resolution policy.
+
+use crate::simgpu::GpuDevice;
+
+/// Resolution strategy for intercepted symbols.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resolution {
+    /// Hash-table dispatch on every call (HAMi-core style).
+    PerCall,
+    /// Resolve once, then indirect-branch through a cached pointer
+    /// (BUD-FCSP style).
+    Cached,
+}
+
+/// Per-call hook cost model.
+#[derive(Clone, Debug)]
+pub struct HookTable {
+    resolution: Resolution,
+    /// Cost of a full dispatch-table lookup (hashing the symbol, probing).
+    lookup_ns: f64,
+    /// Cost of the cached indirect call path.
+    cached_ns: f64,
+    /// Whether the first call for each symbol has been paid (cold path).
+    warmed: bool,
+    /// One-time cost of resolving the full symbol table (library ctor).
+    cold_resolve_ns: f64,
+    pub calls: u64,
+}
+
+impl HookTable {
+    /// HAMi-core defaults: 70 ns table probe + ~15 ns shim prologue ⇒ ~85 ns.
+    pub fn hami() -> HookTable {
+        HookTable {
+            resolution: Resolution::PerCall,
+            lookup_ns: 70.0,
+            cached_ns: 15.0,
+            warmed: false,
+            cold_resolve_ns: 180_000.0,
+            calls: 0,
+        }
+    }
+
+    /// BUD-FCSP defaults: cached pointer + shim prologue ⇒ ~42 ns
+    /// (27 ns branch-predicted indirect call + 15 ns prologue).
+    pub fn fcsp() -> HookTable {
+        HookTable {
+            resolution: Resolution::Cached,
+            lookup_ns: 70.0,
+            cached_ns: 27.0 + 15.0,
+            warmed: false,
+            cold_resolve_ns: 140_000.0,
+            calls: 0,
+        }
+    }
+
+    /// Cost of one intercepted call, with jitter from the device's RNG.
+    pub fn call_ns(&mut self, dev: &mut GpuDevice) -> f64 {
+        self.calls += 1;
+        let base = match self.resolution {
+            Resolution::PerCall => self.lookup_ns + self.cached_ns,
+            Resolution::Cached => {
+                if !self.warmed {
+                    self.warmed = true;
+                    // First call resolves and installs the cache entry.
+                    self.lookup_ns + self.cached_ns
+                } else {
+                    self.cached_ns
+                }
+            }
+        };
+        base * dev.jitter()
+    }
+
+    /// One-time library-constructor cost (part of OH-004 context overhead).
+    pub fn cold_resolve_ns(&self) -> f64 {
+        self.cold_resolve_ns
+    }
+
+    /// Steady-state per-call cost without jitter (for reporting).
+    pub fn steady_ns(&self) -> f64 {
+        match self.resolution {
+            Resolution::PerCall => self.lookup_ns + self.cached_ns,
+            Resolution::Cached => self.cached_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::GpuDevice;
+
+    #[test]
+    fn hami_steady_cost_matches_paper() {
+        // Table 4 OH-005: HAMi = 85 ns.
+        assert!((HookTable::hami().steady_ns() - 85.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fcsp_steady_cost_matches_paper() {
+        // Table 4 OH-005: FCSP = 42 ns.
+        assert!((HookTable::fcsp().steady_ns() - 42.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fcsp_first_call_pays_lookup() {
+        let mut dev = GpuDevice::a100(1);
+        dev.spec.jitter_sigma = 0.0;
+        let mut h = HookTable::fcsp();
+        let first = h.call_ns(&mut dev);
+        let second = h.call_ns(&mut dev);
+        assert!(first > second, "first={first} second={second}");
+        assert!((second - 42.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hami_pays_lookup_every_call() {
+        let mut dev = GpuDevice::a100(2);
+        dev.spec.jitter_sigma = 0.0;
+        let mut h = HookTable::hami();
+        let a = h.call_ns(&mut dev);
+        let b = h.call_ns(&mut dev);
+        assert!((a - 85.0).abs() < 1e-9);
+        assert!((b - 85.0).abs() < 1e-9);
+        assert_eq!(h.calls, 2);
+    }
+}

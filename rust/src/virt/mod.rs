@@ -1,0 +1,244 @@
+//! Virtualization backends under test (paper Table 2).
+//!
+//! Every backend implements [`VirtLayer`] — the interposition surface the
+//! `cudalite` driver API calls around each operation, exactly where
+//! HAMi-core's `dlsym` hooks sit around the real CUDA driver:
+//!
+//! | backend  | key    | mechanisms |
+//! |----------|--------|------------|
+//! | [`native`] | `native` | passthrough; zero added cost |
+//! | [`hami`]   | `hami`   | per-call dlsym hook resolution, shared-region accounting behind a semaphore, fixed-window utilization enforcement driven by a 100 ms NVML poller, fixed token bucket |
+//! | [`fcsp`]   | `fcsp`   | cached hook resolution, lock-free accounting fast path, adaptive token bucket with burst credit, weighted fair queuing |
+//! | [`mig`]    | `mig`    | ideal hardware partitioning: dedicated SM/memory/L2 slices, no interception cost |
+//!
+//! The shared mechanism implementations live in [`hooks`],
+//! [`shared_region`], [`rate_limiter`], [`wfq`] and [`nvml`]; the backends
+//! compose them with different parameters and policies, so the performance
+//! differences measured by the metrics *emerge* from the mechanisms.
+
+pub mod fcsp;
+pub mod hami;
+pub mod hooks;
+pub mod mig;
+pub mod native;
+pub mod nvml;
+pub mod rate_limiter;
+pub mod shared_region;
+pub mod timeslice;
+pub mod wfq;
+
+use crate::simgpu::error::GpuError;
+use crate::simgpu::kernel::KernelDesc;
+use crate::simgpu::{GpuDevice, TenantId};
+
+/// Per-tenant resource configuration (the pod annotations HAMi consumes).
+#[derive(Clone, Copy, Debug)]
+pub struct TenantConfig {
+    /// Device-memory quota in bytes (`None` = unlimited).
+    pub mem_limit: Option<u64>,
+    /// SM-utilization limit as a fraction of the device (`None` = 1.0).
+    pub sm_limit: Option<f64>,
+    /// Scheduling weight (WFQ backends only).
+    pub weight: f64,
+}
+
+impl TenantConfig {
+    pub fn unlimited() -> TenantConfig {
+        TenantConfig { mem_limit: None, sm_limit: None, weight: 1.0 }
+    }
+
+    /// Equal 1/n share of a device (the paper's 4-tenant scenarios use
+    /// `equal_share(4)`).
+    pub fn equal_share(n: u32, dev_mem: u64) -> TenantConfig {
+        TenantConfig {
+            mem_limit: Some(dev_mem / n as u64),
+            sm_limit: Some(1.0 / n as f64),
+            weight: 1.0,
+        }
+    }
+
+    pub fn with_mem_limit(mut self, bytes: u64) -> Self {
+        self.mem_limit = Some(bytes);
+        self
+    }
+
+    pub fn with_sm_limit(mut self, frac: f64) -> Self {
+        self.sm_limit = Some(frac);
+        self
+    }
+
+    pub fn with_weight(mut self, w: f64) -> Self {
+        self.weight = w;
+        self
+    }
+}
+
+/// Decision returned by [`VirtLayer::gate_launch`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaunchGate {
+    /// CPU-side latency the layer adds to the launch call (hook + checks).
+    pub overhead_ns: f64,
+    /// Throttle delay before the kernel may be submitted (rate limiting).
+    pub throttle_wait_ns: f64,
+    /// SMs granted to the kernel body.
+    pub granted_sms: u32,
+}
+
+/// The interposition surface. One instance serves all tenants of a device
+/// (mirroring the per-GPU shared region HAMi-core maps into containers).
+pub trait VirtLayer {
+    /// Backend key (Table 2).
+    fn name(&self) -> &'static str;
+
+    /// Register a tenant (container start). MIG reserves its hardware
+    /// slice here and can fail on oversubscription.
+    fn register_tenant(
+        &mut self,
+        tenant: TenantId,
+        cfg: TenantConfig,
+        dev: &mut GpuDevice,
+    ) -> Result<(), GpuError>;
+
+    /// Unregister (container stop); releases slices/accounting.
+    fn unregister_tenant(&mut self, tenant: TenantId, dev: &mut GpuDevice);
+
+    /// Per-intercepted-call hook cost (OH-005). Called for *every*
+    /// driver-API entry the layer intercepts.
+    fn hook_overhead_ns(&mut self, dev: &mut GpuDevice) -> f64;
+
+    /// Extra context-creation work (OH-004 beyond native).
+    fn context_create_overhead_ns(&mut self, tenant: TenantId, dev: &mut GpuDevice) -> f64;
+
+    /// Memory-quota admission check (IS-001/002). `Err(QuotaExceeded)`
+    /// blocks the allocation; `Ok(cost)` is the added latency.
+    fn pre_alloc(
+        &mut self,
+        tenant: TenantId,
+        size: u64,
+        dev: &mut GpuDevice,
+    ) -> Result<f64, GpuError>;
+
+    /// Post-allocation accounting (OH-007). Returns added latency.
+    fn post_alloc(&mut self, tenant: TenantId, size: u64, dev: &mut GpuDevice) -> f64;
+
+    /// Pre/post free accounting. Return added latency.
+    fn pre_free(&mut self, tenant: TenantId, dev: &mut GpuDevice) -> f64;
+    fn post_free(&mut self, tenant: TenantId, size: u64, dev: &mut GpuDevice) -> f64;
+
+    /// Kernel-launch gate: hook + quota check + rate limiting (OH-001,
+    /// OH-008, IS-003). Must be called with the device clock at submission
+    /// time.
+    fn gate_launch(
+        &mut self,
+        tenant: TenantId,
+        kernel: &KernelDesc,
+        dev: &mut GpuDevice,
+    ) -> LaunchGate;
+
+    /// Completion feedback for closed-loop limiters: the kernel occupied
+    /// `sm_frac` of the device for `busy_ns`, completing at virtual time
+    /// `now_ns`.
+    fn on_kernel_complete(&mut self, tenant: TenantId, sm_frac: f64, busy_ns: f64, now_ns: f64);
+
+    /// Virtualized NVML memory report `(free, total)` — containers must
+    /// see their quota, not the physical device (HAMi's NVML interception).
+    fn mem_info(&self, tenant: TenantId, dev: &GpuDevice) -> (u64, u64);
+
+    /// Advance background machinery (pollers) to the current virtual time.
+    fn tick(&mut self, dev: &mut GpuDevice);
+
+    /// Steady-state CPU overhead of monitoring, as a fraction (OH-009).
+    fn monitor_cpu_overhead(&self) -> f64;
+
+    /// Pick the next request to run from a cross-tenant pending queue
+    /// (index into `pending`). Default: FIFO. FCSP overrides with WFQ;
+    /// `mig` runs tenants in parallel so arbitration is moot but FIFO is a
+    /// sound default.
+    fn arbitrate(&mut self, pending: &[(TenantId, KernelDesc)]) -> usize {
+        if pending.is_empty() { 0 } else { 0 }
+    }
+
+    /// Whether tenants are hardware-isolated (dedicated SMs/L2): used by
+    /// metrics to decide contention topology.
+    fn hardware_isolated(&self) -> bool {
+        false
+    }
+
+    /// Configured SM limit for a tenant (1.0 when unlimited/unknown).
+    fn sm_limit(&self, tenant: TenantId) -> f64;
+
+    /// Whether the backend schedules cross-tenant submissions through a
+    /// fair queue (FCSP's WFQ). Fair interleaving prevents a noisy
+    /// tenant's bursts from stacking against a victim's accesses.
+    fn fair_scheduler(&self) -> bool {
+        false
+    }
+
+    /// Per-allocation tracking cost in ns (OH-007: the accounting data
+    /// structure alone, excluding hooks/locks/NVML).
+    fn tracking_cost_ns(&self) -> f64 {
+        0.0
+    }
+
+    /// Cumulative shared-region lock contention: `(total_wait_ns,
+    /// acquisitions)` (OH-006). Backends without a shared region return
+    /// zeros.
+    fn contention_stats(&self) -> (f64, u64) {
+        (0.0, 0)
+    }
+
+    /// Dynamically reconfigure a tenant's SM limit (IS-004). Backends
+    /// without dynamic limiting ignore it. Returns whether the change took
+    /// effect online (MIG requires quiescing and returns `false`).
+    fn update_sm_limit(&mut self, _tenant: TenantId, _limit: f64) -> bool {
+        false
+    }
+}
+
+/// Construct a backend by key (Table 2: `native`, `hami`, `fcsp`, `mig`).
+pub fn by_name(name: &str) -> Option<Box<dyn VirtLayer>> {
+    match name {
+        "native" => Some(Box::new(native::Native::new())),
+        "hami" => Some(Box::new(hami::HamiCore::new())),
+        "fcsp" => Some(Box::new(fcsp::BudFcsp::new())),
+        "mig" => Some(Box::new(mig::MigIdeal::new())),
+        "timeslice" => Some(Box::new(timeslice::TimeSlice::new())),
+        _ => None,
+    }
+}
+
+/// All backend keys in the paper's comparison order (Table 2).
+pub const ALL_SYSTEMS: [&str; 4] = ["native", "hami", "fcsp", "mig"];
+
+/// Extended system list including the §1.2 time-slicing approach.
+pub const ALL_SYSTEMS_EXTENDED: [&str; 5] = ["native", "hami", "fcsp", "mig", "timeslice"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_constructs_all() {
+        for key in ALL_SYSTEMS {
+            let l = by_name(key).unwrap_or_else(|| panic!("missing backend {key}"));
+            assert_eq!(l.name(), key);
+        }
+        assert!(by_name("timeslice").is_some()); // §1.2 extension
+        assert!(by_name("mps").is_none());
+    }
+
+    #[test]
+    fn equal_share_splits() {
+        let c = TenantConfig::equal_share(4, 40 << 30);
+        assert_eq!(c.mem_limit, Some(10 << 30));
+        assert!((c.sm_limit.unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn builder_methods() {
+        let c = TenantConfig::unlimited().with_mem_limit(1024).with_sm_limit(0.5).with_weight(2.0);
+        assert_eq!(c.mem_limit, Some(1024));
+        assert_eq!(c.sm_limit, Some(0.5));
+        assert_eq!(c.weight, 2.0);
+    }
+}

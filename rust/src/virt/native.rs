@@ -1,0 +1,148 @@
+//! Bare-metal baseline: no interception, no quotas, no limits (Table 2,
+//! `native`). Every hook returns zero added cost; the device's base costs
+//! are the only thing the metrics observe.
+
+use std::collections::HashMap;
+
+use crate::simgpu::error::GpuError;
+use crate::simgpu::kernel::KernelDesc;
+use crate::simgpu::sm::SmGrant;
+use crate::simgpu::{GpuDevice, TenantId};
+
+use super::{LaunchGate, TenantConfig, VirtLayer};
+
+/// The passthrough backend.
+#[derive(Debug, Default)]
+pub struct Native {
+    tenants: HashMap<TenantId, TenantConfig>,
+    rr_counter: usize,
+}
+
+impl Native {
+    pub fn new() -> Native {
+        Native::default()
+    }
+}
+
+impl VirtLayer for Native {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn register_tenant(
+        &mut self,
+        tenant: TenantId,
+        cfg: TenantConfig,
+        dev: &mut GpuDevice,
+    ) -> Result<(), GpuError> {
+        // Native ignores quotas entirely — the whole point of the baseline.
+        self.tenants.insert(tenant, cfg);
+        dev.grant_sms(tenant, SmGrant::Shared).map_err(|_| GpuError::InvalidValue)
+    }
+
+    fn unregister_tenant(&mut self, tenant: TenantId, dev: &mut GpuDevice) {
+        self.tenants.remove(&tenant);
+        dev.sms.unregister(tenant);
+    }
+
+    fn hook_overhead_ns(&mut self, _dev: &mut GpuDevice) -> f64 {
+        0.0
+    }
+
+    fn context_create_overhead_ns(&mut self, _tenant: TenantId, _dev: &mut GpuDevice) -> f64 {
+        0.0
+    }
+
+    fn pre_alloc(
+        &mut self,
+        _tenant: TenantId,
+        _size: u64,
+        _dev: &mut GpuDevice,
+    ) -> Result<f64, GpuError> {
+        Ok(0.0)
+    }
+
+    fn post_alloc(&mut self, _tenant: TenantId, _size: u64, _dev: &mut GpuDevice) -> f64 {
+        0.0
+    }
+
+    fn pre_free(&mut self, _tenant: TenantId, _dev: &mut GpuDevice) -> f64 {
+        0.0
+    }
+
+    fn post_free(&mut self, _tenant: TenantId, _size: u64, _dev: &mut GpuDevice) -> f64 {
+        0.0
+    }
+
+    fn gate_launch(
+        &mut self,
+        tenant: TenantId,
+        _kernel: &KernelDesc,
+        dev: &mut GpuDevice,
+    ) -> LaunchGate {
+        let concurrent = dev.concurrent_shared(tenant);
+        LaunchGate {
+            overhead_ns: 0.0,
+            throttle_wait_ns: 0.0,
+            granted_sms: dev.sms.effective_sms(tenant, concurrent),
+        }
+    }
+
+    fn on_kernel_complete(&mut self, _tenant: TenantId, _sm_frac: f64, _busy_ns: f64, _now_ns: f64) {}
+
+    fn mem_info(&self, _tenant: TenantId, dev: &GpuDevice) -> (u64, u64) {
+        (dev.memory.free_bytes(), dev.memory.capacity())
+    }
+
+    fn tick(&mut self, _dev: &mut GpuDevice) {}
+
+    fn monitor_cpu_overhead(&self) -> f64 {
+        0.0
+    }
+
+    fn arbitrate(&mut self, pending: &[(TenantId, KernelDesc)]) -> usize {
+        // The CUDA driver timeslices contexts round-robin.
+        if pending.is_empty() {
+            return 0;
+        }
+        let idx = self.rr_counter % pending.len();
+        self.rr_counter += 1;
+        idx
+    }
+
+    fn sm_limit(&self, _tenant: TenantId) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_overhead_everywhere() {
+        let mut dev = GpuDevice::a100(1);
+        let mut n = Native::new();
+        n.register_tenant(1, TenantConfig::equal_share(4, dev.spec.hbm_bytes), &mut dev).unwrap();
+        assert_eq!(n.hook_overhead_ns(&mut dev), 0.0);
+        assert_eq!(n.pre_alloc(1, 1 << 40, &mut dev).unwrap(), 0.0); // no quota!
+        let g = n.gate_launch(1, &KernelDesc::null(), &mut dev);
+        assert_eq!(g.overhead_ns, 0.0);
+        assert_eq!(g.throttle_wait_ns, 0.0);
+        assert_eq!(g.granted_sms, 108);
+        assert_eq!(n.monitor_cpu_overhead(), 0.0);
+        assert_eq!(n.sm_limit(1), 1.0);
+    }
+
+    #[test]
+    fn mem_info_reports_physical_device() {
+        let mut dev = GpuDevice::a100(2);
+        let n = Native::new();
+        let (free, total) = n.mem_info(1, &dev);
+        assert_eq!(total, dev.spec.hbm_bytes);
+        assert_eq!(free, dev.spec.hbm_bytes);
+        dev.raw_alloc(1 << 20).0.unwrap();
+        let (free2, _) = n.mem_info(1, &dev);
+        assert_eq!(free2, dev.spec.hbm_bytes - (1 << 20));
+    }
+}

@@ -1,0 +1,404 @@
+//! Compute rate limiters (OH-008, IS-003, IS-004).
+//!
+//! Two designs, mirroring the systems in the paper:
+//!
+//! - [`HamiLimiter`] — HAMi-core's scheme: a token pool refilled **only at
+//!   NVML polling boundaries** (default 100 ms), driven by a utilization
+//!   measurement that is *lagged one window* and *quantized* (NVML reports
+//!   coarse percentages). Admission is checked **before** launch, so one
+//!   kernel can overshoot past zero, and the debt is **forgiven** at the
+//!   next boundary (the pool floors at zero before refill). Non-conserving
+//!   tokens + coarse feedback ⇒ persistent overshoot and oscillation —
+//!   exactly why the paper measures ~85 % SM-limit accuracy for HAMi.
+//!
+//! - [`AdaptiveBucket`] — BUD-FCSP's scheme ("adaptive token bucket with
+//!   burst handling", §2.3.2): GCRA-style pacing with a small burst
+//!   allowance and **conserved debt** — a kernel is admitted while the
+//!   balance is non-negative and the spend is always repaid. An integral
+//!   trim corrects bias between *estimated* and *actual* kernel cost, the
+//!   "adaptive" part ⇒ sub-percentage long-run control, ~93 % accuracy.
+//!
+//! Token unit: **SM·ns** (one token = one nanosecond of the full device's
+//! SMs). A kernel occupying fraction `f` of the device for `d` ns costs
+//! `f · d` tokens.
+
+/// Outcome of an admission attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Admission {
+    /// Wait before the kernel may start, ns.
+    pub wait_ns: f64,
+    /// CPU cost of the limiter bookkeeping itself, ns (OH-008).
+    pub overhead_ns: f64,
+}
+
+/// HAMi-core-style fixed-window limiter.
+#[derive(Clone, Debug)]
+pub struct HamiLimiter {
+    /// Target utilization fraction (0..=1].
+    limit: f64,
+    /// Poll interval, ns (default 100 ms).
+    window_ns: f64,
+    /// Token pool, SM·ns. Admission requires `tokens > 0`; the pool may go
+    /// negative transiently but is floored at zero on refill (HAMi resets
+    /// its core counter — debt is forgiven).
+    tokens: f64,
+    /// Busy SM·ns accumulated in the current window (feedback source).
+    window_busy: f64,
+    /// Utilization of the *previous* window (the lagged measurement the
+    /// refill controller sees).
+    lagged_util: f64,
+    /// End of the current window in virtual time.
+    window_end_ns: f64,
+    /// Proportional gain on (limit - measured). 1.0 reproduces HAMi; the
+    /// ablation bench sweeps it.
+    kp: f64,
+    /// NVML measurement quantization step (0.10 = whole deciles).
+    quant: f64,
+    /// Per-admission bookkeeping cost, ns.
+    check_ns: f64,
+    pub admissions: u64,
+    pub blocks: u64,
+}
+
+impl HamiLimiter {
+    pub fn new(limit: f64) -> HamiLimiter {
+        HamiLimiter {
+            limit: limit.clamp(0.01, 1.0),
+            window_ns: 100e6, // 100 ms NVML poll (paper §3.1.8)
+            tokens: 0.0,
+            window_busy: 0.0,
+            lagged_util: 0.0,
+            window_end_ns: 0.0,
+            kp: 1.0,
+            quant: 0.10,
+            check_ns: 32.0,
+            admissions: 0,
+            blocks: 0,
+        }
+    }
+
+    pub fn set_window_ns(&mut self, w: f64) {
+        self.window_ns = w;
+    }
+
+    /// Feedback gain (ablation).
+    pub fn set_kp(&mut self, kp: f64) {
+        self.kp = kp;
+    }
+
+    /// Measurement quantization step (ablation; 0 disables quantization).
+    pub fn set_quant(&mut self, q: f64) {
+        self.quant = q.max(0.0);
+    }
+
+    pub fn limit(&self) -> f64 {
+        self.limit
+    }
+
+    pub fn set_limit(&mut self, l: f64) {
+        self.limit = l.clamp(0.01, 1.0);
+    }
+
+    fn quantize(&self, util: f64) -> f64 {
+        if self.quant <= 0.0 {
+            util
+        } else {
+            (util / self.quant).floor() * self.quant
+        }
+    }
+
+    /// Advance window boundaries up to `now`, applying the refill at each
+    /// boundary (the 100 ms NVML poll firing).
+    fn advance(&mut self, now_ns: f64) {
+        if self.window_end_ns == 0.0 {
+            // First use: one quantum of credit.
+            self.window_end_ns = now_ns + self.window_ns;
+            self.tokens = self.limit * self.window_ns;
+            return;
+        }
+        while now_ns >= self.window_end_ns {
+            // The measurement driving this refill is the utilization NVML
+            // reported for the *previous* window, quantized.
+            let measured = self.quantize(self.lagged_util);
+            self.lagged_util = (self.window_busy / self.window_ns).min(1.5);
+            self.window_busy = 0.0;
+            let refill = (self.limit + self.kp * (self.limit - measured)).max(0.0) * self.window_ns;
+            // Debt forgiveness: floor at zero before refill, cap at one
+            // full window of device time.
+            self.tokens = (self.tokens.max(0.0) + refill).min(self.window_ns);
+            self.window_end_ns += self.window_ns;
+        }
+    }
+
+    /// Try to admit a kernel expected to cost `cost_smns` SM·ns at virtual
+    /// time `now_ns`.
+    pub fn acquire(&mut self, cost_smns: f64, now_ns: f64) -> Admission {
+        self.advance(now_ns);
+        self.admissions += 1;
+        if self.tokens > 0.0 {
+            // Admit immediately — possibly overshooting past zero (the
+            // check-before-launch behaviour that degrades accuracy).
+            self.tokens -= cost_smns;
+            return Admission { wait_ns: 0.0, overhead_ns: self.check_ns };
+        }
+        // Blocked: sleep to poll boundaries until a refill lands.
+        self.blocks += 1;
+        let mut wait = self.window_end_ns - now_ns;
+        let mut guard = 0;
+        loop {
+            let t = self.window_end_ns;
+            self.advance(t + 1.0);
+            if self.tokens > 0.0 || guard > 64 {
+                break;
+            }
+            wait += self.window_ns;
+            guard += 1;
+        }
+        self.tokens -= cost_smns;
+        Admission { wait_ns: wait, overhead_ns: self.check_ns + 210.0 /* futex sleep+wake */ }
+    }
+
+    /// Completion feedback: `sm_frac` of the device busy for `busy_ns`.
+    pub fn on_complete(&mut self, sm_frac: f64, busy_ns: f64) {
+        self.window_busy += sm_frac * busy_ns;
+    }
+}
+
+/// BUD-FCSP-style adaptive token bucket (GCRA pacing + integral trim).
+#[derive(Clone, Debug)]
+pub struct AdaptiveBucket {
+    limit: f64,
+    /// Continuous refill rate, SM·ns per ns (== limit, adjusted by trim).
+    rate: f64,
+    /// Burst capacity, SM·ns (small: sub-percentage long-run granularity).
+    burst: f64,
+    /// Balance. Admission requires `tokens >= 0`; spend is conserved (the
+    /// balance goes negative and must be repaid by refill).
+    tokens: f64,
+    last_ns: f64,
+    /// Integral error correction on achieved utilization (the adaptive
+    /// part: compensates biased kernel-cost estimates).
+    err_integral: f64,
+    total_busy: f64,
+    start_ns: f64,
+    check_ns: f64,
+    pub admissions: u64,
+    pub blocks: u64,
+}
+
+impl AdaptiveBucket {
+    pub fn new(limit: f64) -> AdaptiveBucket {
+        let limit = limit.clamp(0.001, 1.0);
+        AdaptiveBucket {
+            limit,
+            rate: limit,
+            // 2 ms of device time worth of burst at the limit rate.
+            burst: limit * 2e6,
+            tokens: limit * 2e6,
+            last_ns: f64::NAN,
+            err_integral: 0.0,
+            total_busy: 0.0,
+            start_ns: f64::NAN,
+            check_ns: 41.0,
+            admissions: 0,
+            blocks: 0,
+        }
+    }
+
+    pub fn limit(&self) -> f64 {
+        self.limit
+    }
+
+    pub fn set_limit(&mut self, l: f64) {
+        let l = l.clamp(0.001, 1.0);
+        self.limit = l;
+        self.rate = l;
+        self.burst = l * 2e6;
+    }
+
+    fn refill(&mut self, now_ns: f64) {
+        if self.start_ns.is_nan() {
+            self.start_ns = now_ns;
+            self.last_ns = now_ns;
+        }
+        let dt = (now_ns - self.last_ns).max(0.0);
+        self.tokens = (self.tokens + self.rate * dt).min(self.burst);
+        self.last_ns = now_ns;
+    }
+
+    /// Admit a kernel costing `cost_smns` SM·ns at time `now_ns`.
+    pub fn acquire(&mut self, cost_smns: f64, now_ns: f64) -> Admission {
+        self.refill(now_ns);
+        self.admissions += 1;
+        if self.tokens >= 0.0 {
+            // Balance non-negative: admit now; the spend may drive the
+            // balance negative (conserved debt = pacing).
+            self.tokens -= cost_smns;
+            return Admission { wait_ns: 0.0, overhead_ns: self.check_ns };
+        }
+        // In debt: wait exactly until the balance returns to zero.
+        self.blocks += 1;
+        let wait = -self.tokens / self.rate.max(1e-9);
+        self.tokens = -cost_smns;
+        self.last_ns = now_ns + wait;
+        Admission { wait_ns: wait, overhead_ns: self.check_ns + 180.0 }
+    }
+
+    /// Completion feedback with integral trim: nudge the refill rate so the
+    /// long-run *achieved* utilization converges on the limit even when
+    /// admission-time cost estimates are biased.
+    pub fn on_complete(&mut self, sm_frac: f64, busy_ns: f64, now_ns: f64) {
+        self.total_busy += sm_frac * busy_ns;
+        if self.start_ns.is_nan() {
+            return;
+        }
+        let elapsed = (now_ns - self.start_ns).max(1.0);
+        let achieved = self.total_busy / elapsed;
+        let err = self.limit - achieved;
+        self.err_integral = (self.err_integral + err).clamp(-0.2, 0.2);
+        self.rate = (self.limit + 0.1 * self.err_integral).clamp(self.limit * 0.5, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a limiter with a synthetic back-to-back kernel load and return
+    /// achieved utilization. `kernel_ns` at `sm_frac` occupancy.
+    fn drive_hami(limit: f64, kernel_ns: f64, sm_frac: f64, sim_ns: f64) -> f64 {
+        let mut l = HamiLimiter::new(limit);
+        let mut now = 0.0;
+        let mut busy = 0.0;
+        while now < sim_ns {
+            let cost = kernel_ns * sm_frac;
+            let a = l.acquire(cost, now);
+            now += a.wait_ns + a.overhead_ns;
+            now += kernel_ns;
+            busy += cost;
+            l.on_complete(sm_frac, kernel_ns);
+        }
+        busy / now
+    }
+
+    fn drive_adaptive(limit: f64, kernel_ns: f64, sm_frac: f64, sim_ns: f64) -> f64 {
+        let mut l = AdaptiveBucket::new(limit);
+        let mut now = 0.0;
+        let mut busy = 0.0;
+        while now < sim_ns {
+            let cost = kernel_ns * sm_frac;
+            let a = l.acquire(cost, now);
+            now += a.wait_ns + a.overhead_ns;
+            now += kernel_ns;
+            busy += cost;
+            l.on_complete(sm_frac, kernel_ns, now);
+        }
+        busy / now
+    }
+
+    #[test]
+    fn hami_roughly_tracks_limit() {
+        let achieved = drive_hami(0.5, 2e6, 1.0, 3e9);
+        assert!(achieved > 0.35 && achieved < 0.75, "achieved={achieved}");
+    }
+
+    #[test]
+    fn adaptive_tracks_limit_tightly() {
+        for limit in [0.3, 0.5, 0.7] {
+            for kernel in [2e6, 7e6] {
+                let achieved = drive_adaptive(limit, kernel, 1.0, 5e9);
+                let err = (achieved - limit).abs() / limit;
+                assert!(err < 0.05, "limit={limit} kernel={kernel} achieved={achieved}");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_more_accurate_than_hami() {
+        // 7 ms kernels don't divide the window allowance evenly, so HAMi's
+        // forgiven overshoot persists — the IS-003 accuracy gap the paper
+        // measures (85 % vs 93 %).
+        let mut hami_err = 0.0;
+        let mut fcsp_err = 0.0;
+        for limit in [0.3, 0.5, 0.7] {
+            hami_err += ((drive_hami(limit, 7e6, 1.0, 5e9) - limit) / limit).abs();
+            fcsp_err += ((drive_adaptive(limit, 7e6, 1.0, 5e9) - limit) / limit).abs();
+        }
+        assert!(fcsp_err < hami_err, "fcsp_err={fcsp_err} hami_err={hami_err}");
+        // HAMi's mean relative error should be visible (> 3 %).
+        assert!(hami_err / 3.0 > 0.03, "hami_err={hami_err}");
+    }
+
+    #[test]
+    fn unlimited_passes_through() {
+        let mut l = AdaptiveBucket::new(1.0);
+        let a = l.acquire(1000.0, 0.0);
+        assert_eq!(a.wait_ns, 0.0);
+    }
+
+    #[test]
+    fn hami_blocks_when_exhausted() {
+        let mut l = HamiLimiter::new(0.1);
+        // Burn the entire first window's allowance in one shot.
+        let a1 = l.acquire(0.1 * 100e6 * 2.0, 0.0);
+        assert_eq!(a1.wait_ns, 0.0); // overshoot admit
+        let a2 = l.acquire(1e6, 1.0);
+        assert!(a2.wait_ns > 0.0, "wait={}", a2.wait_ns);
+        assert!(l.blocks >= 1);
+    }
+
+    #[test]
+    fn adaptive_paces_in_debt() {
+        let mut l = AdaptiveBucket::new(0.5);
+        // First admit spends burst + goes into debt.
+        let a0 = l.acquire(0.5 * 2e6 + 3e6, 0.0);
+        assert_eq!(a0.wait_ns, 0.0);
+        // Second admit must wait for the debt (3e6) to be repaid at rate 0.5.
+        let a1 = l.acquire(1e6, 0.0);
+        assert!((a1.wait_ns - 6e6).abs() < 1e3, "wait={}", a1.wait_ns);
+    }
+
+    #[test]
+    fn hami_forgives_debt_at_boundary() {
+        let mut l = HamiLimiter::new(0.5);
+        // Overshoot hugely in window 1.
+        l.acquire(0.5 * 100e6 * 3.0, 0.0);
+        // After one boundary the pool is floored at 0 then refilled → a
+        // new kernel is admitted without repaying the huge debt.
+        let a = l.acquire(1e6, 100e6 + 2.0);
+        assert_eq!(a.wait_ns, 0.0);
+    }
+
+    #[test]
+    fn overhead_charged_per_admission() {
+        let mut l = HamiLimiter::new(0.9);
+        let a = l.acquire(10.0, 0.0);
+        assert!(a.overhead_ns >= 32.0);
+        let mut b = AdaptiveBucket::new(0.9);
+        let a = b.acquire(10.0, 0.0);
+        assert!(a.overhead_ns >= 41.0);
+    }
+
+    #[test]
+    fn is004_limit_change_response() {
+        // Dynamic reconfiguration (IS-004): halve the limit mid-run and
+        // check the adaptive bucket converges to the new target.
+        let mut l = AdaptiveBucket::new(0.8);
+        let mut now = 0.0;
+        for _ in 0..500 {
+            let a = l.acquire(2e6, now);
+            now += a.wait_ns + a.overhead_ns + 2e6;
+            l.on_complete(1.0, 2e6, now);
+        }
+        l.set_limit(0.4);
+        let t_change = now;
+        let mut busy_after = 0.0;
+        for _ in 0..800 {
+            let a = l.acquire(2e6, now);
+            now += a.wait_ns + a.overhead_ns + 2e6;
+            busy_after += 2e6;
+        }
+        let achieved = busy_after / (now - t_change);
+        assert!((achieved - 0.4).abs() < 0.06, "achieved={achieved}");
+    }
+}

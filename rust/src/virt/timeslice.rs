@@ -1,0 +1,221 @@
+//! Time-slicing backend (paper §1.2's second sharing approach, an
+//! extension beyond Table 2): "the GPU scheduler alternates between
+//! workloads, providing each with full GPU access during its time slice.
+//! Maximum flexibility but no isolation guarantees."
+//!
+//! Mechanisms: no interception (zero hook cost, no quotas), but every
+//! cross-tenant launch pays a context-switch when the previous slice
+//! belonged to someone else, and under contention a tenant waits for the
+//! other tenants' remaining slices — which is exactly why the paper calls
+//! out aggressive workloads impacting neighbours.
+
+use std::collections::HashMap;
+
+use crate::simgpu::error::GpuError;
+use crate::simgpu::kernel::{duration_ns, ExecContext, KernelDesc};
+use crate::simgpu::sm::SmGrant;
+use crate::simgpu::{GpuDevice, TenantId};
+
+use super::{LaunchGate, TenantConfig, VirtLayer};
+
+/// Kubernetes-device-plugin-style time slicing.
+pub struct TimeSlice {
+    tenants: HashMap<TenantId, TenantConfig>,
+    /// Scheduler slice quantum, ns (the nvidia device plugin default is
+    /// on the order of milliseconds).
+    slice_ns: f64,
+    /// Tenant owning the current slice.
+    current: Option<TenantId>,
+    rr_counter: usize,
+}
+
+impl TimeSlice {
+    pub fn new() -> TimeSlice {
+        TimeSlice {
+            tenants: HashMap::new(),
+            slice_ns: 2_000_000.0, // 2 ms quantum
+            current: None,
+            rr_counter: 0,
+        }
+    }
+
+    /// Expected wait for the device when `n` tenants share slices and the
+    /// caller does not own the current slice: on average half the other
+    /// tenants' quanta are in front of us.
+    fn slice_wait_ns(&self, tenant: TenantId, dev: &mut GpuDevice) -> f64 {
+        let others = self.tenants.len().saturating_sub(1) as f64;
+        if others == 0.0 || self.current == Some(tenant) {
+            return 0.0;
+        }
+        // Busy neighbours each hold ~1 quantum; arrival lands mid-rotation.
+        let busy_others: f64 = others.min(dev.concurrent_shared(tenant) as f64 - 1.0).max(0.0);
+        busy_others * self.slice_ns * dev.rng().f64_range(0.0, 1.0)
+    }
+}
+
+impl Default for TimeSlice {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl VirtLayer for TimeSlice {
+    fn name(&self) -> &'static str {
+        "timeslice"
+    }
+
+    fn register_tenant(
+        &mut self,
+        tenant: TenantId,
+        cfg: TenantConfig,
+        dev: &mut GpuDevice,
+    ) -> Result<(), GpuError> {
+        // Quotas are accepted but NOT enforced — the defining property.
+        self.tenants.insert(tenant, cfg);
+        dev.grant_sms(tenant, SmGrant::Shared).map_err(|_| GpuError::InvalidValue)
+    }
+
+    fn unregister_tenant(&mut self, tenant: TenantId, dev: &mut GpuDevice) {
+        self.tenants.remove(&tenant);
+        dev.sms.unregister(tenant);
+        if self.current == Some(tenant) {
+            self.current = None;
+        }
+    }
+
+    fn hook_overhead_ns(&mut self, _dev: &mut GpuDevice) -> f64 {
+        0.0 // no interception layer at all
+    }
+
+    fn context_create_overhead_ns(&mut self, _t: TenantId, _dev: &mut GpuDevice) -> f64 {
+        0.0
+    }
+
+    fn pre_alloc(&mut self, _t: TenantId, _s: u64, _d: &mut GpuDevice) -> Result<f64, GpuError> {
+        Ok(0.0) // no quota: first-come-first-served until device OOM
+    }
+
+    fn post_alloc(&mut self, _t: TenantId, _s: u64, _d: &mut GpuDevice) -> f64 {
+        0.0
+    }
+
+    fn pre_free(&mut self, _t: TenantId, _d: &mut GpuDevice) -> f64 {
+        0.0
+    }
+
+    fn post_free(&mut self, _t: TenantId, _s: u64, _d: &mut GpuDevice) -> f64 {
+        0.0
+    }
+
+    fn gate_launch(
+        &mut self,
+        tenant: TenantId,
+        kernel: &KernelDesc,
+        dev: &mut GpuDevice,
+    ) -> LaunchGate {
+        let mut wait = self.slice_wait_ns(tenant, dev);
+        let mut overhead = 0.0;
+        if self.current != Some(tenant) {
+            // Context switch into this tenant's slice.
+            overhead += dev.spec.ctx_switch_ns as f64 * dev.jitter();
+            self.current = Some(tenant);
+        }
+        // A kernel longer than the quantum keeps getting rescheduled: it
+        // pays a switch per extra quantum under contention.
+        let others = self.tenants.len().saturating_sub(1);
+        if others > 0 {
+            let est = duration_ns(&dev.spec, kernel, &ExecContext::uncontended(dev.spec.sm_count));
+            let extra_quanta = (est / self.slice_ns).floor();
+            wait += extra_quanta * others as f64 * self.slice_ns
+                * (dev.concurrent_shared(tenant) as f64 - 1.0).clamp(0.0, 1.0);
+        }
+        LaunchGate {
+            overhead_ns: overhead,
+            throttle_wait_ns: wait,
+            granted_sms: dev.spec.sm_count, // full device during the slice
+        }
+    }
+
+    fn on_kernel_complete(&mut self, _t: TenantId, _f: f64, _b: f64, _n: f64) {}
+
+    fn mem_info(&self, _t: TenantId, dev: &GpuDevice) -> (u64, u64) {
+        (dev.memory.free_bytes(), dev.memory.capacity())
+    }
+
+    fn tick(&mut self, _dev: &mut GpuDevice) {}
+
+    fn monitor_cpu_overhead(&self) -> f64 {
+        0.0
+    }
+
+    fn arbitrate(&mut self, pending: &[(TenantId, KernelDesc)]) -> usize {
+        if pending.is_empty() {
+            return 0;
+        }
+        let idx = self.rr_counter % pending.len();
+        self.rr_counter += 1;
+        idx
+    }
+
+    fn sm_limit(&self, _tenant: TenantId) -> f64 {
+        1.0 // no SM limiting whatsoever
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_quota_enforcement() {
+        let mut dev = GpuDevice::a100(1);
+        let mut ts = TimeSlice::new();
+        ts.register_tenant(1, TenantConfig::unlimited().with_mem_limit(1 << 20), &mut dev)
+            .unwrap();
+        // Configured 1 MiB quota is ignored entirely.
+        assert!(ts.pre_alloc(1, 10 << 30, &mut dev).is_ok());
+        assert_eq!(ts.sm_limit(1), 1.0);
+    }
+
+    #[test]
+    fn solo_tenant_runs_uncontended() {
+        let mut dev = GpuDevice::a100(2);
+        dev.spec.jitter_sigma = 0.0;
+        let mut ts = TimeSlice::new();
+        ts.register_tenant(1, TenantConfig::unlimited(), &mut dev).unwrap();
+        let g1 = ts.gate_launch(1, &KernelDesc::null(), &mut dev);
+        // First launch pays the switch into the slice, then nothing.
+        assert!(g1.overhead_ns > 0.0);
+        let g2 = ts.gate_launch(1, &KernelDesc::null(), &mut dev);
+        assert_eq!(g2.overhead_ns, 0.0);
+        assert_eq!(g2.throttle_wait_ns, 0.0);
+        assert_eq!(g2.granted_sms, 108);
+    }
+
+    #[test]
+    fn cross_tenant_switches_cost() {
+        let mut dev = GpuDevice::a100(3);
+        dev.spec.jitter_sigma = 0.0;
+        let mut ts = TimeSlice::new();
+        ts.register_tenant(1, TenantConfig::unlimited(), &mut dev).unwrap();
+        ts.register_tenant(2, TenantConfig::unlimited(), &mut dev).unwrap();
+        ts.gate_launch(1, &KernelDesc::null(), &mut dev);
+        let g = ts.gate_launch(2, &KernelDesc::null(), &mut dev);
+        assert!((g.overhead_ns - dev.spec.ctx_switch_ns as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn long_kernels_wait_under_contention() {
+        let mut dev = GpuDevice::a100(4);
+        let mut ts = TimeSlice::new();
+        ts.register_tenant(1, TenantConfig::unlimited(), &mut dev).unwrap();
+        ts.register_tenant(2, TenantConfig::unlimited(), &mut dev).unwrap();
+        dev.set_background(
+            2,
+            crate::simgpu::device::BackgroundLoad { membw_demand: 0.5, resident_kernels: 1 },
+        );
+        // A 7 ms kernel spans ~3 quanta → pays rescheduling waits.
+        let g = ts.gate_launch(1, &KernelDesc::gemm(4096, 4096, 4096, false), &mut dev);
+        assert!(g.throttle_wait_ns >= 2.0 * 2_000_000.0, "wait={}", g.throttle_wait_ns);
+    }
+}

@@ -1,0 +1,91 @@
+//! Integration tests: full suite runs, report round-trips, determinism
+//! and failure injection across module boundaries.
+
+use gvb::coordinator::SuiteRunner;
+use gvb::metrics::{registry, Category, RunConfig};
+use gvb::report::{Format, Report};
+
+#[test]
+fn full_quick_suite_all_systems_and_report_roundtrip() {
+    let mut runner = SuiteRunner::new(RunConfig::quick("native"));
+    for sys in ["native", "hami", "fcsp", "mig"] {
+        let suite = runner.run(sys);
+        assert_eq!(suite.results.len(), 56, "{sys}: all 56 metrics must run");
+        let baseline = runner.baseline().to_vec();
+        let rep = Report::new(sys, &suite.results, &baseline, &suite.card);
+        let json = rep.render(Format::Json);
+        // Every metric id appears in every format.
+        for r in &suite.results {
+            assert!(json.contains(r.id), "{sys}: {} missing from JSON", r.id);
+        }
+        let csv = rep.render(Format::Csv);
+        assert_eq!(csv.lines().count(), 57, "{sys}: csv rows");
+        let txt = rep.render(Format::Txt);
+        assert!(txt.contains("Grade:"));
+        // Score sanity.
+        assert!(suite.card.overall > 0.3 && suite.card.overall <= 1.0, "{sys}");
+    }
+}
+
+#[test]
+fn table7_ordering_holds() {
+    let mut runner = SuiteRunner::new(RunConfig::quick("native"));
+    let mig = runner.run("mig").card.overall;
+    let fcsp = runner.run("fcsp").card.overall;
+    let hami = runner.run("hami").card.overall;
+    // Paper Table 7 ordering: MIG > FCSP > HAMi, with HAMi in the C band
+    // and a clear FCSP lead.
+    assert!(mig > fcsp && fcsp > hami, "mig={mig} fcsp={fcsp} hami={hami}");
+    assert!(mig > 0.95, "mig={mig}");
+    assert!(fcsp - hami > 0.03, "fcsp={fcsp} hami={hami}");
+    assert!((0.60..0.85).contains(&hami), "hami={hami}");
+}
+
+#[test]
+fn suite_is_deterministic_under_seed() {
+    let run = |seed: u64| -> Vec<f64> {
+        let mut cfg = RunConfig::quick("hami");
+        cfg.seed = seed;
+        registry::run_category(Category::Overhead, &cfg).iter().map(|r| r.value).collect()
+    };
+    assert_eq!(run(1234), run(1234));
+    assert_ne!(run(1234), run(4321));
+}
+
+#[test]
+fn single_metric_runs_for_every_id() {
+    let cfg = RunConfig::quick("fcsp");
+    for d in &gvb::metrics::taxonomy::ALL {
+        let r = registry::run_metric(d.id, &cfg)
+            .unwrap_or_else(|| panic!("{} not in registry", d.id));
+        assert!(r.value.is_finite(), "{} produced non-finite value", d.id);
+    }
+}
+
+#[test]
+fn config_file_flows_into_runner() {
+    let text = "system = fcsp\niterations = 10\nwarmup = 2\ntenants = 2\nseed = 9\n";
+    let cfg = gvb::config::FileConfig::parse(text)
+        .unwrap()
+        .apply(RunConfig::default())
+        .unwrap();
+    assert_eq!(cfg.system, "fcsp");
+    let mut runner = SuiteRunner::new(cfg).with_metrics(vec!["OH-009".into()]);
+    let suite = runner.run("fcsp");
+    assert_eq!(suite.results.len(), 1);
+}
+
+#[test]
+fn failure_injection_does_not_poison_subsequent_runs() {
+    use gvb::cudalite::Api;
+    use gvb::simgpu::error::GpuFault;
+    use gvb::virt::TenantConfig;
+    let mut api = Api::with_backend("fcsp", 3);
+    api.ctx_create(1, TenantConfig::unlimited()).unwrap();
+    api.inject_fault(1, GpuFault::EccUncorrectable);
+    api.dev.clock.advance(10_000_000);
+    assert!(api.launch_kernel(1, 0, &gvb::simgpu::kernel::KernelDesc::null()).is_err());
+    api.device_reset();
+    api.ctx_create(1, TenantConfig::unlimited()).unwrap();
+    assert!(api.launch_kernel(1, 0, &gvb::simgpu::kernel::KernelDesc::null()).is_ok());
+}

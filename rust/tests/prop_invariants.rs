@@ -1,0 +1,165 @@
+//! Property-based tests (via the in-tree `testkit`) on substrate and
+//! coordinator invariants.
+
+use gvb::cudalite::Api;
+use gvb::simgpu::memory::HbmAllocator;
+use gvb::stats::jain_fairness;
+use gvb::testkit::{check, gens};
+use gvb::util::Rng;
+use gvb::virt::wfq::WfqScheduler;
+use gvb::virt::TenantConfig;
+
+/// Allocator invariant: after any interleaving of allocs and frees,
+/// used + total_free == capacity and the free list stays coalesced
+/// (no two adjacent free blocks).
+#[test]
+fn prop_allocator_conserves_memory() {
+    check(
+        "allocator-conservation",
+        0xA110C,
+        64,
+        |rng: &mut Rng| {
+            let ops: Vec<(bool, u64)> = (0..rng.range(1, 200))
+                .map(|_| (rng.chance(0.6), gens::alloc_size(rng) % (1 << 28) + 256))
+                .collect();
+            ops
+        },
+        |ops| {
+            let cap = 1u64 << 32;
+            let mut a = HbmAllocator::new(cap);
+            let mut live = Vec::new();
+            for (is_alloc, size) in ops {
+                if *is_alloc {
+                    if let Ok(o) = a.alloc(*size) {
+                        live.push(o.ptr);
+                    }
+                } else if !live.is_empty() {
+                    let p = live.swap_remove(live.len() / 2);
+                    if a.free(p).is_none() {
+                        return false; // double free must be impossible here
+                    }
+                }
+            }
+            a.used() + a.frag_stats().total_free == cap
+        },
+    );
+}
+
+/// Quota invariant: under any sequence of allocations, a HAMi/FCSP tenant
+/// can never hold more device memory than its configured limit.
+#[test]
+fn prop_quota_never_exceeded() {
+    for backend in ["hami", "fcsp"] {
+        check(
+            "quota-never-exceeded",
+            0x900A + backend.len() as u64,
+            24,
+            |rng: &mut Rng| {
+                let quota = rng.range(1 << 28, 1 << 31) as u64;
+                let sizes: Vec<u64> =
+                    (0..rng.range(1, 60)).map(|_| gens::alloc_size(rng)).collect();
+                (quota, sizes)
+            },
+            |(quota, sizes)| {
+                let mut api = Api::with_backend(backend, 7);
+                api.ctx_create(1, TenantConfig::unlimited().with_mem_limit(*quota)).unwrap();
+                let mut held = 0u64;
+                for s in sizes {
+                    if api.mem_alloc(1, *s).is_ok() {
+                        held += HbmAllocator::round_up(*s);
+                    }
+                    if held > *quota {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+}
+
+/// WFQ invariant: with equal weights and everyone backlogged, long-run
+/// service shares are near-equal regardless of per-tenant cost skew.
+#[test]
+fn prop_wfq_equal_share() {
+    check(
+        "wfq-equal-share",
+        0x3F9,
+        32,
+        |rng: &mut Rng| {
+            let n = rng.range(2, 6);
+            let costs: Vec<f64> = (0..n).map(|_| rng.f64_range(0.5, 20.0)).collect();
+            costs
+        },
+        |costs| {
+            let mut wfq = WfqScheduler::new();
+            for t in 0..costs.len() as u32 {
+                wfq.add_tenant(t, 1.0);
+            }
+            let mut served = vec![0.0; costs.len()];
+            for _ in 0..5000 {
+                let pending: Vec<(u32, f64)> =
+                    (0..costs.len()).map(|t| (t as u32, costs[t])).collect();
+                let pick = wfq.pick(&pending).unwrap();
+                let (t, c) = pending[pick];
+                wfq.serve(t, c);
+                served[t as usize] += c;
+            }
+            jain_fairness(&served) > 0.97
+        },
+    );
+}
+
+/// Limiter invariant: achieved utilization never exceeds the limit by
+/// more than one kernel per poll window (HAMi) / one burst (FCSP).
+#[test]
+fn prop_limiter_bounded_overshoot() {
+    check(
+        "limiter-bounded-overshoot",
+        0x11117,
+        24,
+        |rng: &mut Rng| (gens::fraction(rng).max(0.05), rng.f64_range(5e5, 2e7)),
+        |(limit, kernel_ns)| {
+            let mut l = gvb::virt::rate_limiter::AdaptiveBucket::new(*limit);
+            let (mut now, mut busy) = (0.0, 0.0);
+            while now < 3e9 {
+                let a = l.acquire(*kernel_ns, now);
+                now += a.wait_ns + a.overhead_ns + kernel_ns;
+                busy += kernel_ns;
+                l.on_complete(1.0, *kernel_ns, now);
+            }
+            let achieved: f64 = busy / now;
+            // GCRA pacing: long-run overshoot bounded by burst/horizon.
+            achieved <= limit + kernel_ns / 3e9 + 0.02
+        },
+    );
+}
+
+/// Clock invariant: every cudalite call moves virtual time forward.
+#[test]
+fn prop_virtual_time_monotone() {
+    for backend in ["native", "hami", "fcsp", "mig"] {
+        let mut api = Api::with_backend(backend, 99);
+        api.ctx_create(1, TenantConfig::unlimited().with_sm_limit(0.5)).unwrap();
+        let mut last = api.now_ns();
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            match rng.range(0, 3) {
+                0 => {
+                    if let Ok(p) = api.mem_alloc(1, 4096) {
+                        api.mem_free(1, p).unwrap();
+                    }
+                }
+                1 => {
+                    api.launch_kernel(1, 0, &gvb::simgpu::kernel::KernelDesc::null()).unwrap();
+                }
+                _ => {
+                    api.sync_device(1).unwrap();
+                }
+            }
+            let now = api.now_ns();
+            assert!(now >= last, "{backend}: time went backwards");
+            last = now;
+        }
+    }
+}
