@@ -1,0 +1,143 @@
+//! In-tree substitute for the `anyhow` crate (offline build, no registry).
+//!
+//! Provides the small surface the CLI and PJRT runtime use: a string-backed
+//! [`Error`] with context chaining, the [`Result`] alias with a defaulted
+//! error type, the [`Context`] extension trait for `Result`/`Option`, and a
+//! `bail!` macro. Like the real crate, [`Error`] deliberately does not
+//! implement `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// String-backed error with the context chain pre-rendered into the message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow`-style result alias with a defaulted error type, so
+/// `Result<T>` and `collect::<Result<Vec<_>>>()` both work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human-readable context to failures, `anyhow`-style.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow::Error::msg(format!($($arg)*)))
+    };
+}
+
+// Make `use crate::anyhow::bail;` work: `#[macro_export]` places the macro
+// at the crate root; re-export it through this module for the idiomatic
+// import path.
+pub use crate::bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn context_on_result_prepends() {
+        let e = io_fail().context("reading x").unwrap_err();
+        assert_eq!(e.to_string(), "reading x: gone");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let e: Result<()> = io_fail().with_context(|| format!("step {}", 3));
+        assert_eq!(e.unwrap_err().to_string(), "step 3: gone");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 12);
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn inner(x: u32) -> Result<()> {
+            if x > 1 {
+                bail!("too big: {x}");
+            }
+            Ok(())
+        }
+        assert!(inner(0).is_ok());
+        assert_eq!(inner(5).unwrap_err().to_string(), "too big: 5");
+    }
+
+    #[test]
+    fn display_and_debug_match() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom"); // alternate flag: same chain
+    }
+}

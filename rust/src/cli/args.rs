@@ -9,17 +9,22 @@ GPU-Virt-Bench — benchmarking framework for GPU virtualization systems
 USAGE:
   gvbench run [--system <native|hami|fcsp|mig>] [--all-systems]
               [--category <key>] [--metric <ID>] [--iterations N]
-              [--warmup N] [--tenants N] [--seed N] [--quick]
+              [--warmup N] [--tenants N] [--seed N] [--jobs N] [--quick]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
   gvbench list [--full | --systems | --categories]
-  gvbench compare [--quick]        # Table 7: overall scores, all systems
+  gvbench compare [--quick] [--jobs N]  # Table 7: overall scores, all systems
   gvbench regress --baseline <csv> [--system S] [--threshold PCT] [--quick]
   gvbench help
 
 EXAMPLES:
   gvbench run --system hami --category overhead
   gvbench run --all-systems --quick --format json --out results.json
+  gvbench run --all-systems --jobs 8      # shard the matrix over 8 workers
   gvbench compare --quick
+
+Parallelism: --jobs N shards the (system x metric) matrix across N worker
+threads (0 or unset = all cores). Same --seed => bit-identical numbers at
+any job count.
 ";
 
 /// Parsed command line.
@@ -43,6 +48,7 @@ pub struct Args {
     pub warmup: Option<usize>,
     pub tenants: Option<u32>,
     pub seed: Option<u64>,
+    pub jobs: Option<usize>,
     pub quick: bool,
     pub config: Option<String>,
     pub format: String,
@@ -66,6 +72,7 @@ impl Default for Args {
             warmup: None,
             tenants: None,
             seed: None,
+            jobs: None,
             quick: false,
             config: None,
             format: "txt".to_string(),
@@ -135,6 +142,10 @@ impl Args {
                 "--seed" => {
                     args.seed =
                         Some(next_value(&mut it, flag)?.parse().map_err(|_| err("bad --seed"))?)
+                }
+                "--jobs" => {
+                    args.jobs =
+                        Some(next_value(&mut it, flag)?.parse().map_err(|_| err("bad --jobs"))?)
                 }
                 "--quick" => args.quick = true,
                 "--config" => args.config = Some(next_value(&mut it, flag)?),
@@ -211,6 +222,14 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(parse("run --system").is_err());
+    }
+
+    #[test]
+    fn jobs_flag_parses() {
+        let a = parse("run --system hami --jobs 8").unwrap();
+        assert_eq!(a.jobs, Some(8));
+        assert!(parse("run --system hami --jobs lots").is_err());
+        assert_eq!(parse("run --system hami").unwrap().jobs, None);
     }
 
     #[test]

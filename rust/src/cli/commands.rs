@@ -1,6 +1,6 @@
 //! Command implementations for `gvbench`.
 
-use anyhow::{Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 use crate::config::FileConfig;
 use crate::coordinator::SuiteRunner;
@@ -48,7 +48,7 @@ fn cmd_regress(args: &Args) -> Result<()> {
             r.id, d.name, r.baseline, r.current, d.unit, r.regression_percent
         );
     }
-    anyhow::bail!("{} metric(s) regressed beyond {:.1}%", regressions.len(), args.threshold)
+    bail!("{} metric(s) regressed beyond {:.1}%", regressions.len(), args.threshold)
 }
 
 fn build_config(args: &Args) -> Result<RunConfig> {
@@ -73,6 +73,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     if let Some(v) = args.seed {
         cfg.seed = v;
     }
+    if let Some(v) = args.jobs {
+        cfg.jobs = v;
+    }
     Ok(cfg)
 }
 
@@ -94,17 +97,35 @@ fn cmd_run(args: &Args) -> Result<()> {
         if args.all_systems { ALL_SYSTEMS.to_vec() } else { vec![args.system.as_str()] };
     let format = Format::from_key(&args.format).expect("validated");
     let mut rendered = String::new();
+    let mut all_stats = crate::coordinator::executor::ExecutionStats::default();
     for system in systems {
         let suite = runner.run(system);
         let baseline = runner.baseline().to_vec();
-        let report = Report::new(system, &suite.results, &baseline, &suite.card);
+        let report =
+            Report::new(system, &suite.results, &baseline, &suite.card).with_stats(&suite.stats);
         rendered.push_str(&report.render(format));
         rendered.push('\n');
+        eprintln!(
+            "[gvbench] {system}: {} tasks on {} workers in {:.2}s (busy/wall {:.2}x)",
+            suite.stats.tasks.len(),
+            suite.stats.jobs,
+            suite.stats.wall_ns as f64 / 1e9,
+            suite.stats.speedup_estimate(),
+        );
+        all_stats.tasks.extend(suite.stats.tasks.iter().cloned());
     }
     match &args.out {
         Some(path) => {
             std::fs::write(path, &rendered).with_context(|| format!("writing {path}"))?;
             eprintln!("wrote {path}");
+            // CSV keeps the metric table parseable as a regress baseline;
+            // executor timings go to a sidecar file instead.
+            if format == Format::Csv {
+                let tpath = format!("{path}.timings.csv");
+                std::fs::write(&tpath, crate::report::csv::render_timings(&all_stats))
+                    .with_context(|| format!("writing {tpath}"))?;
+                eprintln!("wrote {tpath}");
+            }
         }
         None => print!("{rendered}"),
     }
@@ -150,8 +171,11 @@ fn cmd_list(args: &Args) -> Result<()> {
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
-    let cfg =
+    let mut cfg =
         if args.quick { RunConfig::quick("native") } else { RunConfig::for_system("native") };
+    if let Some(v) = args.jobs {
+        cfg.jobs = v;
+    }
     let mut runner = SuiteRunner::new(cfg);
     println!("Running the full 56-metric suite for all systems (this runs");
     println!("the simulated A100 in virtual time; ~seconds per system)...\n");
@@ -209,6 +233,29 @@ mod tests {
         dispatch(&a).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"OH-009\""));
+        assert!(text.contains("\"execution\""));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_out_writes_timings_sidecar() {
+        let mut a = Args::default();
+        a.command = Command::Run;
+        a.system = "native".into();
+        a.metric = Some("OH-009".into());
+        a.quick = true;
+        a.format = "csv".into();
+        let path = std::env::temp_dir().join("gvb_test_out.csv");
+        let path_str = path.to_str().unwrap().to_string();
+        a.out = Some(path_str.clone());
+        dispatch(&a).unwrap();
+        let main = std::fs::read_to_string(&path).unwrap();
+        assert!(main.starts_with("id,"));
+        let tpath = format!("{path_str}.timings.csv");
+        let timings = std::fs::read_to_string(&tpath).unwrap();
+        assert!(timings.starts_with("metric_id,system,worker,wall_ms"));
+        assert!(timings.contains("OH-009,native,"));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&tpath).ok();
     }
 }

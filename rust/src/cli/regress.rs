@@ -12,11 +12,18 @@
 //! Re-runs every metric present in the baseline CSV and flags any that
 //! moved against its direction (Table 8) by more than `threshold` percent.
 //! Exit code 1 on regressions — CI-friendly.
+//!
+//! Seed parity: baselines are produced by `gvbench run`, which executes
+//! through the parallel executor with per-task derived seeds. The re-run
+//! here derives the same seed per metric ([`executor::derive_cfg`]), so an
+//! unchanged system compared against its own fresh baseline reports zero
+//! regressions.
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
+use crate::coordinator::executor;
 use crate::metrics::{registry, taxonomy, Direction, RunConfig};
 
 /// A parsed baseline: metric id → recorded value.
@@ -92,7 +99,10 @@ pub fn run_regression(
     let mut checked = 0;
     for (id, base) in baseline {
         let d = taxonomy::by_id(id).context("unknown id")?;
-        let Some(result) = registry::run_metric(id, cfg) else {
+        // Match the seed derivation of the executor that produced the
+        // baseline, or identical code would show phantom regressions.
+        let task_cfg = executor::derive_cfg(cfg, &cfg.system, d.id);
+        let Some(result) = registry::run_metric(id, &task_cfg) else {
             continue;
         };
         checked += 1;

@@ -14,15 +14,26 @@ pub struct FileConfig {
 }
 
 /// Parse error with line number.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ConfigError {
-    #[error("line {0}: expected `key = value`, got `{1}`")]
     Syntax(usize, String),
-    #[error("invalid value for `{0}`: `{1}`")]
     Value(String, String),
-    #[error("weights must sum to 1.0 (got {0})")]
     Weights(f64),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Syntax(line, got) => {
+                write!(f, "line {line}: expected `key = value`, got `{got}`")
+            }
+            ConfigError::Value(key, val) => write!(f, "invalid value for `{key}`: `{val}`"),
+            ConfigError::Weights(sum) => write!(f, "weights must sum to 1.0 (got {sum})"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl FileConfig {
     /// Parse `key = value` lines; `#`/`;` start comments; blanks ignored.
@@ -82,6 +93,9 @@ impl FileConfig {
         if let Some(v) = self.get_num::<f64>("sm_limit")? {
             cfg.sm_limit = v;
         }
+        if let Some(v) = self.get_num::<usize>("jobs")? {
+            cfg.jobs = v;
+        }
         Ok(cfg)
     }
 
@@ -112,7 +126,7 @@ mod tests {
     #[test]
     fn parses_and_applies() {
         let fc = FileConfig::parse(
-            "# comment\nsystem = fcsp\niterations = 50\ntenants=8\nmem_limit_mb = 4096 ; inline\n",
+            "# comment\nsystem = fcsp\niterations = 50\ntenants=8\nmem_limit_mb = 4096 ; inline\njobs = 6\n",
         )
         .unwrap();
         let cfg = fc.apply(RunConfig::default()).unwrap();
@@ -120,6 +134,7 @@ mod tests {
         assert_eq!(cfg.iterations, 50);
         assert_eq!(cfg.tenants, 8);
         assert_eq!(cfg.mem_limit, 4096 << 20);
+        assert_eq!(cfg.jobs, 6);
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Parallel, sharded execution of the (system × metric) task matrix.
+//!
+//! The full Table-8 evaluation (4 systems × 56 metrics = 224 tasks) used to
+//! run strictly sequentially. Every metric is an independent pure function
+//! of its [`RunConfig`] — each builds its own simulated device — so the
+//! matrix shards perfectly across a worker pool:
+//!
+//! 1. The caller describes the matrix as a flat `Vec<Task>` in the desired
+//!    output (Table-8) order.
+//! 2. `--jobs N` scoped threads (default: available parallelism) pull task
+//!    indices from a shared atomic cursor — classic work stealing by
+//!    sharded index, no channels, no unsafe.
+//! 3. Each task derives its own seed with [`task_seed`]`(cfg.seed, system,
+//!    metric_id)` — a pure function of the run seed and the task
+//!    coordinates — so the numbers are **bit-identical regardless of worker
+//!    count or completion order** (see `rust/tests/determinism.rs`).
+//! 4. Results land in per-index slots and are re-assembled in input order;
+//!    wall-clock and per-task timings are recorded in [`ExecutionStats`]
+//!    and surfaced by the JSON/CSV reporters.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::metrics::{registry, MetricResult, RunConfig};
+use crate::util::rng::task_seed;
+
+/// One (system, metric) cell of the evaluation matrix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Task {
+    /// Backend key (`native` / `hami` / `fcsp` / `mig` / `timeslice`).
+    pub system: String,
+    /// Metric id from the Table-8 taxonomy (e.g. `OH-001`).
+    pub metric_id: &'static str,
+}
+
+/// Wall-clock timing of one executed task.
+#[derive(Clone, Debug)]
+pub struct TaskTiming {
+    pub system: String,
+    pub metric_id: &'static str,
+    /// Host wall-clock spent executing the task, ns.
+    pub wall_ns: u64,
+    /// Worker index (0-based) that ran the task.
+    pub worker: usize,
+}
+
+/// Aggregate statistics for one executor invocation.
+#[derive(Clone, Debug, Default)]
+pub struct ExecutionStats {
+    /// Worker count actually used.
+    pub jobs: usize,
+    /// Per-task timings, in output (Table-8) order.
+    pub tasks: Vec<TaskTiming>,
+    /// End-to-end wall-clock of the whole matrix, ns.
+    pub wall_ns: u64,
+}
+
+impl ExecutionStats {
+    /// Sum of per-task wall-clock (the serial-equivalent cost), ns.
+    pub fn total_task_ns(&self) -> u64 {
+        self.tasks.iter().map(|t| t.wall_ns).sum()
+    }
+
+    /// Longest single task, ns (the parallel-speedup floor).
+    pub fn max_task_ns(&self) -> u64 {
+        self.tasks.iter().map(|t| t.wall_ns).max().unwrap_or(0)
+    }
+
+    /// Achieved busy/wall ratio — ≈ the effective parallel speedup over a
+    /// serial run of the same tasks.
+    pub fn speedup_estimate(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 1.0;
+        }
+        self.total_task_ns() as f64 / self.wall_ns as f64
+    }
+}
+
+/// Resolve a requested job count: 0 means "available parallelism".
+pub fn resolve_jobs(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Build the full matrix for `systems` × `metric_ids`, system-major (all of
+/// system 0's metrics in Table-8 order, then system 1, …).
+pub fn task_matrix(systems: &[&str], metric_ids: &[&'static str]) -> Vec<Task> {
+    systems
+        .iter()
+        .flat_map(|s| {
+            metric_ids.iter().map(move |id| Task { system: s.to_string(), metric_id: *id })
+        })
+        .collect()
+}
+
+/// The per-task config: `base` with the task's system and derived seed.
+pub fn derive_cfg(base: &RunConfig, system: &str, metric_id: &str) -> RunConfig {
+    let mut cfg = base.clone();
+    cfg.system = system.to_string();
+    cfg.seed = task_seed(base.seed, system, metric_id);
+    cfg
+}
+
+/// Execute `tasks` on a pool of `jobs` workers (0 = available parallelism).
+///
+/// Returns results **in input order** (unknown metric ids are skipped, as
+/// in the sequential registry path) plus the run's [`ExecutionStats`].
+pub fn execute(base: &RunConfig, tasks: &[Task], jobs: usize) -> (Vec<MetricResult>, ExecutionStats) {
+    let jobs = resolve_jobs(jobs).min(tasks.len().max(1));
+    let t_start = Instant::now();
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<(MetricResult, TaskTiming)>>> =
+        tasks.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for worker in 0..jobs {
+            let cursor = &cursor;
+            let slots = &slots;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks.len() {
+                    break;
+                }
+                let task = &tasks[i];
+                let cfg = derive_cfg(base, &task.system, task.metric_id);
+                let t0 = Instant::now();
+                if let Some(result) = registry::run_metric(task.metric_id, &cfg) {
+                    let timing = TaskTiming {
+                        system: task.system.clone(),
+                        metric_id: task.metric_id,
+                        wall_ns: t0.elapsed().as_nanos() as u64,
+                        worker,
+                    };
+                    *slots[i].lock().unwrap() = Some((result, timing));
+                }
+            });
+        }
+    });
+    let mut results = Vec::with_capacity(tasks.len());
+    let mut timings = Vec::with_capacity(tasks.len());
+    for slot in slots {
+        if let Some((result, timing)) = slot.into_inner().unwrap() {
+            results.push(result);
+            timings.push(timing);
+        }
+    }
+    let stats =
+        ExecutionStats { jobs, tasks: timings, wall_ns: t_start.elapsed().as_nanos() as u64 };
+    (results, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cheap_ids() -> Vec<&'static str> {
+        // Metrics with small fixed costs — keep executor unit tests fast.
+        vec!["OH-009", "PCIE-001", "PCIE-004", "BW-003"]
+    }
+
+    #[test]
+    fn preserves_input_order() {
+        let base = RunConfig::quick("native");
+        let tasks = task_matrix(&["native", "hami"], &cheap_ids());
+        let (results, stats) = execute(&base, &tasks, 3);
+        assert_eq!(results.len(), tasks.len());
+        for (r, t) in results.iter().zip(&tasks) {
+            assert_eq!(r.id, t.metric_id);
+            assert_eq!(r.system, t.system);
+        }
+        assert_eq!(stats.tasks.len(), tasks.len());
+        assert_eq!(stats.jobs, 3);
+    }
+
+    #[test]
+    fn unknown_ids_skipped() {
+        let base = RunConfig::quick("native");
+        let tasks = vec![
+            Task { system: "native".into(), metric_id: "OH-009" },
+            Task { system: "native".into(), metric_id: "NOPE-1" },
+            Task { system: "native".into(), metric_id: "PCIE-004" },
+        ];
+        let (results, stats) = execute(&base, &tasks, 2);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].id, "OH-009");
+        assert_eq!(results[1].id, "PCIE-004");
+        assert_eq!(stats.tasks.len(), 2);
+    }
+
+    #[test]
+    fn job_counts_agree_bitwise() {
+        let base = RunConfig::quick("hami");
+        let tasks = task_matrix(&["hami", "fcsp"], &cheap_ids());
+        let (r1, s1) = execute(&base, &tasks, 1);
+        let (r4, s4) = execute(&base, &tasks, 4);
+        assert_eq!(s1.jobs, 1);
+        assert_eq!(s4.jobs, 4);
+        assert_eq!(r1.len(), r4.len());
+        for (a, b) in r1.iter().zip(&r4) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "{}", a.id);
+        }
+    }
+
+    #[test]
+    fn derived_cfg_changes_seed_and_system() {
+        let base = RunConfig::quick("native");
+        let a = derive_cfg(&base, "hami", "OH-001");
+        let b = derive_cfg(&base, "hami", "OH-002");
+        assert_eq!(a.system, "hami");
+        assert_ne!(a.seed, b.seed);
+        assert_eq!(a.iterations, base.iterations);
+    }
+
+    #[test]
+    fn stats_aggregates() {
+        let base = RunConfig::quick("native");
+        let tasks = task_matrix(&["native"], &cheap_ids());
+        let (_, stats) = execute(&base, &tasks, 2);
+        assert!(stats.wall_ns > 0);
+        assert!(stats.total_task_ns() >= stats.max_task_ns());
+        assert!(stats.speedup_estimate() > 0.0);
+    }
+
+    #[test]
+    fn resolve_jobs_auto_positive() {
+        assert!(resolve_jobs(0) >= 1);
+        assert_eq!(resolve_jobs(7), 7);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let base = RunConfig::quick("native");
+        let (results, stats) = execute(&base, &[], 4);
+        assert!(results.is_empty());
+        assert!(stats.tasks.is_empty());
+    }
+}

@@ -1,10 +1,12 @@
-//! Multi-tenant orchestration: the suite runner ([`runner`]), workload
-//! generators ([`workload`]) and a thread-backed tenant harness
-//! ([`tenant`]) used by the examples to drive real concurrent load against
-//! the PJRT runtime.
+//! Multi-tenant orchestration: the parallel sharded suite executor
+//! ([`executor`]), the suite runner ([`runner`]), workload generators
+//! ([`workload`]) and a thread-backed tenant harness ([`tenant`]) used by
+//! the examples to drive real concurrent load against the PJRT runtime.
 
+pub mod executor;
 pub mod runner;
 pub mod tenant;
 pub mod workload;
 
+pub use executor::{ExecutionStats, Task, TaskTiming};
 pub use runner::{SuiteResult, SuiteRunner};

@@ -1,17 +1,27 @@
 //! The suite runner: executes the 56-metric suite for a set of systems,
 //! always including the MIG-Ideal baseline run it scores against
 //! (paper §4.5: every metric is compared to the simulated MIG baseline).
+//!
+//! Execution goes through the parallel sharded executor
+//! ([`super::executor`]): the metric list shards across `jobs` workers
+//! (0 = available parallelism) with per-task derived seeds, so a suite's
+//! numbers are bit-identical at any job count; results return in Table-8
+//! order and the run's [`ExecutionStats`] ride along on [`SuiteResult`].
 
 use std::collections::HashMap;
 
-use crate::metrics::{registry, Category, MetricResult, RunConfig};
+use crate::metrics::{taxonomy, Category, MetricResult, RunConfig};
 use crate::scoring::ScoreCard;
 
-/// Results for one system plus its scorecard.
+use super::executor::{self, ExecutionStats, Task};
+
+/// Results for one system plus its scorecard and execution timings.
 pub struct SuiteResult {
     pub system: String,
     pub results: Vec<MetricResult>,
     pub card: ScoreCard,
+    /// Wall-clock + per-task timing of the run (host time, not virtual).
+    pub stats: ExecutionStats,
 }
 
 /// Runs suites and keeps the shared MIG baseline.
@@ -39,43 +49,45 @@ impl SuiteRunner {
         self
     }
 
-    fn run_suite(&self, system: &str) -> Vec<MetricResult> {
-        let mut cfg = self.base_cfg.clone();
-        cfg.system = system.to_string();
+    /// Set the worker count for suite execution (0 = available
+    /// parallelism). Results are bit-identical at any value.
+    pub fn with_jobs(mut self, jobs: usize) -> SuiteRunner {
+        self.base_cfg.jobs = jobs;
+        self
+    }
+
+    /// The metric ids this runner is configured to execute: explicit ids
+    /// (caller order) take precedence over categories (Table-8 order);
+    /// default is the full taxonomy.
+    fn metric_id_list(&self) -> Vec<&'static str> {
         if let Some(ids) = &self.metric_ids {
-            return ids.iter().filter_map(|id| registry::run_metric(id, &cfg)).collect();
+            ids.iter().filter_map(|id| taxonomy::by_id(id).map(|d| d.id)).collect()
+        } else if let Some(cats) = &self.categories {
+            cats.iter().flat_map(|c| taxonomy::by_category(*c)).map(|d| d.id).collect()
+        } else {
+            taxonomy::ALL.iter().map(|d| d.id).collect()
         }
-        match &self.categories {
-            Some(cats) => {
-                cats.iter().flat_map(|c| registry::run_category(*c, &cfg)).collect()
-            }
-            None => registry::run_all(&cfg),
-        }
+    }
+
+    fn run_suite(&self, system: &str) -> (Vec<MetricResult>, ExecutionStats) {
+        let ids = self.metric_id_list();
+        let tasks: Vec<Task> =
+            ids.iter().map(|id| Task { system: system.to_string(), metric_id: *id }).collect();
+        executor::execute(&self.base_cfg, &tasks, self.base_cfg.jobs)
     }
 
     /// The MIG-Ideal baseline: spec-derived expected values (paper §4.5),
     /// one per metric the runner is configured to execute.
     pub fn baseline(&mut self) -> &[MetricResult] {
         if self.baseline.is_none() {
-            let ids: Vec<&'static str> = if let Some(ids) = &self.metric_ids {
-                ids.iter()
-                    .filter_map(|id| crate::metrics::taxonomy::by_id(id).map(|d| d.id))
-                    .collect()
-            } else if let Some(cats) = &self.categories {
-                cats.iter()
-                    .flat_map(|c| crate::metrics::taxonomy::by_category(*c))
-                    .map(|d| d.id)
-                    .collect()
-            } else {
-                crate::metrics::taxonomy::ALL.iter().map(|d| d.id).collect()
-            };
             self.baseline = Some(
-                ids.into_iter()
+                self.metric_id_list()
+                    .into_iter()
                     .map(|id| {
                         MetricResult::from_value(
                             id,
                             "mig-ideal-spec",
-                            crate::metrics::taxonomy::mig_baseline(id),
+                            taxonomy::mig_baseline(id),
                         )
                     })
                     .collect(),
@@ -86,15 +98,15 @@ impl SuiteRunner {
 
     /// The *measured* MIG suite (for Δ-vs-measured ablations).
     pub fn measured_mig(&self) -> Vec<MetricResult> {
-        self.run_suite("mig")
+        self.run_suite("mig").0
     }
 
     /// Run one system and score it against the MIG baseline.
     pub fn run(&mut self, system: &str) -> SuiteResult {
         self.baseline();
-        let results = self.run_suite(system);
+        let (results, stats) = self.run_suite(system);
         let card = ScoreCard::build(system, &results, self.baseline.as_ref().unwrap());
-        SuiteResult { system: system.to_string(), results, card }
+        SuiteResult { system: system.to_string(), results, card, stats }
     }
 
     /// Run several systems; returns results keyed by system name.
@@ -132,5 +144,31 @@ mod tests {
         let r = runner.run("native");
         assert_eq!(r.results.len(), 1);
         assert_eq!(r.results[0].id, "OH-009");
+    }
+
+    #[test]
+    fn stats_cover_every_task() {
+        let mut runner = SuiteRunner::new(RunConfig::quick("native"))
+            .with_categories(vec![Category::Pcie])
+            .with_jobs(2);
+        let r = runner.run("native");
+        assert_eq!(r.stats.tasks.len(), 4);
+        assert_eq!(r.stats.jobs, 2);
+        assert!(r.stats.wall_ns > 0);
+    }
+
+    #[test]
+    fn jobs_do_not_change_numbers() {
+        let cfg = RunConfig::quick("fcsp");
+        let ids = vec!["OH-009".to_string(), "PCIE-004".to_string(), "BW-003".to_string()];
+        let mut one =
+            SuiteRunner::new(cfg.clone()).with_metrics(ids.clone()).with_jobs(1);
+        let mut many = SuiteRunner::new(cfg).with_metrics(ids).with_jobs(4);
+        let a = one.run("fcsp");
+        let b = many.run("fcsp");
+        assert_eq!(a.card.overall.to_bits(), b.card.overall.to_bits());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.value.to_bits(), y.value.to_bits(), "{}", x.id);
+        }
     }
 }

@@ -21,14 +21,34 @@
 //! - [`stats`], [`scoring`], [`report`] — statistical reduction, MIG-parity
 //!   scoring / grading, and JSON/CSV/TXT report generation.
 //! - [`coordinator`] — multi-tenant orchestration (thread-backed tenants,
-//!   workload generators, the suite runner).
+//!   workload generators, the suite runner) and the **parallel sharded
+//!   executor** ([`coordinator::executor`]) that runs the (system × metric)
+//!   task matrix across a `--jobs N` worker pool.
 //! - [`runtime`] — PJRT wrapper that loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and executes them from the Rust request path (used by the
 //!   LLM metric category and the examples).
 //! - [`cli`], [`config`] — the `gvbench` command-line front end.
 //! - [`benchkit`], [`testkit`], [`util`] — in-tree substitutes for
-//!   criterion / proptest / rand (offline environment).
+//!   criterion / proptest / rand, plus [`anyhow`] (error context) and
+//!   [`xla`] (PJRT stub) for the offline environment.
+//!
+//! ## Parallel execution and determinism
+//!
+//! The full evaluation matrix (4 systems × 56 metrics = 224 tasks) is
+//! executed by [`coordinator::executor`]: a `std::thread::scope`-based
+//! worker pool that shards tasks across `--jobs N` workers (default:
+//! available parallelism). Every task derives its own RNG seed as
+//! `util::rng::task_seed(cfg.seed, system, metric_id)` — a pure function of
+//! the run seed and the task's coordinates — and each metric builds its own
+//! simulated device from that seed. Results are therefore **bit-identical
+//! at any worker count and any completion order**; the executor only
+//! re-assembles them into Table-8 order. `rust/tests/determinism.rs` proves
+//! the guarantee by comparing full-suite runs at `jobs=1` and `jobs=8`
+//! bit-for-bit. Wall-clock and per-task timings are recorded in
+//! [`coordinator::executor::ExecutionStats`] and surfaced by the JSON/CSV
+//! reporters.
 
+pub mod anyhow;
 pub mod benchkit;
 pub mod cli;
 pub mod config;
@@ -43,6 +63,7 @@ pub mod stats;
 pub mod testkit;
 pub mod util;
 pub mod virt;
+pub mod xla;
 
 /// Crate version reported in benchmark output (`benchmark_version`).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -138,6 +138,10 @@ pub struct RunConfig {
     pub mem_limit: u64,
     /// SM limit per tenant in multi-tenant scenarios (fraction).
     pub sm_limit: f64,
+    /// Worker threads for suite execution (0 = available parallelism).
+    /// Results are bit-identical at any job count: each (system, metric)
+    /// task derives its own seed via [`crate::util::rng::task_seed`].
+    pub jobs: usize,
 }
 
 impl Default for RunConfig {
@@ -150,6 +154,7 @@ impl Default for RunConfig {
             seed: 42,
             mem_limit: 10 << 30, // 10 GiB = equal quarter of an A100-40GB
             sm_limit: 0.25,
+            jobs: 0,
         }
     }
 }

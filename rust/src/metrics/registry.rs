@@ -1,5 +1,16 @@
 //! Dispatch table: metric id → implementation. The runner, CLI and benches
 //! all go through [`run_metric`] / [`run_category`] / [`run_all`].
+//!
+//! `run_category` and `run_all` execute through the parallel sharded
+//! executor ([`crate::coordinator::executor`]): tasks run on `cfg.jobs`
+//! workers (0 = available parallelism), each with a per-task derived seed,
+//! and results come back in Table-8 order — bit-identical at any job
+//! count. [`run_metric`] stays a direct call with `cfg.seed` untouched;
+//! callers that need parity with executor-produced numbers (e.g. the
+//! regression checker) derive the task seed themselves via
+//! [`crate::coordinator::executor::derive_cfg`].
+
+use crate::coordinator::executor;
 
 use super::{
     bandwidth, cache, error_recovery, fragmentation, isolation, llm, nccl, overhead, pcie,
@@ -74,17 +85,27 @@ pub fn run_metric(id: &str, cfg: &RunConfig) -> Option<MetricResult> {
     REGISTRY.iter().find(|(mid, _)| *mid == id).map(|(_, f)| f(cfg))
 }
 
-/// Run all metrics of a category, in Table 8 order.
-pub fn run_category(category: Category, cfg: &RunConfig) -> Vec<MetricResult> {
-    taxonomy::by_category(category)
+/// Execute a list of metric ids for `cfg.system` through the parallel
+/// executor, preserving the input order of `ids`.
+fn run_ids(ids: &[&'static str], cfg: &RunConfig) -> Vec<MetricResult> {
+    let tasks: Vec<executor::Task> = ids
         .iter()
-        .filter_map(|d| run_metric(d.id, cfg))
-        .collect()
+        .map(|id| executor::Task { system: cfg.system.clone(), metric_id: *id })
+        .collect();
+    executor::execute(cfg, &tasks, cfg.jobs).0
 }
 
-/// Run the full 56-metric suite.
+/// Run all metrics of a category, in Table 8 order (parallel, sharded).
+pub fn run_category(category: Category, cfg: &RunConfig) -> Vec<MetricResult> {
+    let ids: Vec<&'static str> =
+        taxonomy::by_category(category).iter().map(|d| d.id).collect();
+    run_ids(&ids, cfg)
+}
+
+/// Run the full 56-metric suite (parallel, sharded).
 pub fn run_all(cfg: &RunConfig) -> Vec<MetricResult> {
-    REGISTRY.iter().map(|(_, f)| f(cfg)).collect()
+    let ids: Vec<&'static str> = REGISTRY.iter().map(|(id, _)| *id).collect();
+    run_ids(&ids, cfg)
 }
 
 #[cfg(test)]

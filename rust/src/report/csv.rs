@@ -48,14 +48,48 @@ pub fn render(rep: &Report) -> String {
     out
 }
 
+/// Render executor timings ([`ExecutionStats`]) as a task-timing CSV —
+/// one row per executed (system, metric) task, stable column order.
+pub fn render_timings(stats: &crate::coordinator::executor::ExecutionStats) -> String {
+    let mut out = String::from("metric_id,system,worker,wall_ms\n");
+    for t in &stats.tasks {
+        out.push_str(&format!(
+            "{},{},{},{:.3}\n",
+            esc(t.metric_id),
+            esc(&t.system),
+            t.worker,
+            t.wall_ns as f64 / 1e6
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::executor::{ExecutionStats, TaskTiming};
 
     #[test]
     fn escaping() {
         assert_eq!(esc("plain"), "plain");
         assert_eq!(esc("a,b"), "\"a,b\"");
         assert_eq!(esc("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn timings_rows() {
+        let stats = ExecutionStats {
+            jobs: 2,
+            tasks: vec![
+                TaskTiming { system: "hami".into(), metric_id: "OH-001", wall_ns: 2_500_000, worker: 0 },
+                TaskTiming { system: "hami".into(), metric_id: "OH-002", wall_ns: 1_000_000, worker: 1 },
+            ],
+            wall_ns: 3_000_000,
+        };
+        let csv = render_timings(&stats);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "metric_id,system,worker,wall_ms");
+        assert_eq!(lines[1], "OH-001,hami,0,2.500");
+        assert_eq!(lines[2], "OH-002,hami,1,1.000");
     }
 }

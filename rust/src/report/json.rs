@@ -131,14 +131,40 @@ pub fn render(rep: &Report) -> String {
             })
         })
         .collect();
-    Obj::new()
+    let mut top = Obj::new()
         .str("benchmark_version", crate::VERSION)
         .field("system", Obj::new().str("name", rep.system).build())
         .field("metrics", array(metrics))
         .field("categories", array(categories))
         .num("overall_score", rep.card.overall)
         .num("mig_parity_percent", rep.card.mig_parity_percent())
-        .str("grade", rep.card.grade().letter())
+        .str("grade", rep.card.grade().letter());
+    if let Some(stats) = rep.stats {
+        top = top.field("execution", render_execution(stats));
+    }
+    top.build()
+}
+
+/// Encode [`ExecutionStats`] (wall-clock + per-task timings) as JSON.
+pub fn render_execution(stats: &crate::coordinator::executor::ExecutionStats) -> String {
+    let tasks: Vec<String> = stats
+        .tasks
+        .iter()
+        .map(|t| {
+            Obj::new()
+                .str("metric_id", t.metric_id)
+                .str("system", &t.system)
+                .field("worker", t.worker.to_string())
+                .num("wall_ms", t.wall_ns as f64 / 1e6)
+                .build()
+        })
+        .collect();
+    Obj::new()
+        .field("jobs", stats.jobs.to_string())
+        .num("wall_ms", stats.wall_ns as f64 / 1e6)
+        .num("busy_ms", stats.total_task_ns() as f64 / 1e6)
+        .num("speedup_estimate", stats.speedup_estimate())
+        .field("tasks", array(tasks))
         .build()
 }
 

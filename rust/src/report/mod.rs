@@ -9,16 +9,21 @@ pub mod csv;
 pub mod json;
 pub mod txt;
 
+use crate::coordinator::executor::ExecutionStats;
 use crate::metrics::{taxonomy, MetricResult};
 use crate::scoring::{mig_deviation_percent, ScoreCard};
 
 /// A full benchmark report for one system: its results, the baseline run
-/// they are scored against, and the resulting scorecard.
+/// they are scored against, the resulting scorecard, and (optionally) the
+/// executor's wall-clock statistics.
 pub struct Report<'a> {
     pub system: &'a str,
     pub results: &'a [MetricResult],
     pub baseline: &'a [MetricResult],
     pub card: &'a ScoreCard,
+    /// Execution timings from the parallel executor (None = not recorded;
+    /// omitted from rendered output).
+    pub stats: Option<&'a ExecutionStats>,
 }
 
 impl<'a> Report<'a> {
@@ -28,7 +33,13 @@ impl<'a> Report<'a> {
         baseline: &'a [MetricResult],
         card: &'a ScoreCard,
     ) -> Report<'a> {
-        Report { system, results, baseline, card }
+        Report { system, results, baseline, card, stats: None }
+    }
+
+    /// Attach executor timings; JSON output gains an `execution` object.
+    pub fn with_stats(mut self, stats: &'a ExecutionStats) -> Report<'a> {
+        self.stats = Some(stats);
+        self
     }
 
     /// Baseline result for a metric id.

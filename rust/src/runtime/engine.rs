@@ -4,7 +4,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
+use crate::xla;
 
 use super::manifest::{ArtifactSpec, Dtype, Manifest};
 

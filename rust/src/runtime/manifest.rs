@@ -9,7 +9,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 /// Element type of an input (only what the bridge supports).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -38,27 +38,37 @@ impl GpuFault {
 }
 
 /// CUDA-style error codes surfaced to the API layer.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum GpuError {
-    #[error("CUDA_ERROR_OUT_OF_MEMORY")]
     OutOfMemory,
-    #[error("CUDA_ERROR_ILLEGAL_ADDRESS")]
     IllegalAddress,
-    #[error("CUDA_ERROR_LAUNCH_TIMEOUT")]
     LaunchTimeout,
-    #[error("CUDA_ERROR_ECC_UNCORRECTABLE")]
     EccUncorrectable,
-    #[error("CUDA_ERROR_INVALID_VALUE")]
     InvalidValue,
-    #[error("CUDA_ERROR_INVALID_CONTEXT")]
     InvalidContext,
-    #[error("CUDA_ERROR_NOT_INITIALIZED")]
     NotInitialized,
     /// Virtualization-layer memory-quota rejection (reported to the app as
     /// OOM, but distinguished internally for IS-002 measurement).
-    #[error("VGPU_ERROR_QUOTA_EXCEEDED")]
     QuotaExceeded,
 }
+
+impl std::fmt::Display for GpuError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let code = match self {
+            GpuError::OutOfMemory => "CUDA_ERROR_OUT_OF_MEMORY",
+            GpuError::IllegalAddress => "CUDA_ERROR_ILLEGAL_ADDRESS",
+            GpuError::LaunchTimeout => "CUDA_ERROR_LAUNCH_TIMEOUT",
+            GpuError::EccUncorrectable => "CUDA_ERROR_ECC_UNCORRECTABLE",
+            GpuError::InvalidValue => "CUDA_ERROR_INVALID_VALUE",
+            GpuError::InvalidContext => "CUDA_ERROR_INVALID_CONTEXT",
+            GpuError::NotInitialized => "CUDA_ERROR_NOT_INITIALIZED",
+            GpuError::QuotaExceeded => "VGPU_ERROR_QUOTA_EXCEEDED",
+        };
+        write!(f, "{code}")
+    }
+}
+
+impl std::error::Error for GpuError {}
 
 impl From<GpuFault> for GpuError {
     fn from(f: GpuFault) -> GpuError {

@@ -1,0 +1,91 @@
+//! Golden snapshot tests for the report writers: a small fixed suite
+//! (synthetic, hand-checkable values — scores 0.5 / 1.0 / 0.8) rendered to
+//! JSON and CSV and compared byte-for-byte against checked-in golden
+//! files. Any change to field ordering, number formatting or escaping
+//! shows up as a diff here.
+//!
+//! To regenerate after an *intentional* format change:
+//! `GVB_BLESS=1 cargo test -q --test golden_reports`
+
+use std::path::PathBuf;
+
+use gvb::metrics::MetricResult;
+use gvb::report::{Format, Report};
+use gvb::scoring::ScoreCard;
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens").join(name)
+}
+
+/// The fixed miniature suite: one lower-better, one boolean, one
+/// higher-better metric, with values chosen so every derived number
+/// (scores 0.5/1.0/0.8, deviations -100/0/-20 %, overall 0.331/0.42) is
+/// exactly representable in the renderers' rounding.
+fn sample() -> (Vec<MetricResult>, Vec<MetricResult>) {
+    let results = vec![
+        MetricResult::from_value("OH-001", "hami", 10.0),
+        MetricResult::from_pass("IS-005", "hami", true),
+        MetricResult::from_value("PCIE-001", "hami", 20.0),
+    ];
+    let baseline = vec![
+        MetricResult::from_value("OH-001", "mig-ideal-spec", 5.0),
+        MetricResult::from_pass("IS-005", "mig-ideal-spec", true),
+        MetricResult::from_value("PCIE-001", "mig-ideal-spec", 25.0),
+    ];
+    (results, baseline)
+}
+
+fn render(format: Format) -> String {
+    let (results, baseline) = sample();
+    let card = ScoreCard::build("hami", &results, &baseline);
+    Report::new("hami", &results, &baseline, &card).render(format)
+}
+
+fn check_golden(name: &str, rendered: &str) {
+    let path = golden_path(name);
+    if std::env::var("GVB_BLESS").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{}\n", rendered.trim_end())).unwrap();
+        return;
+    }
+    let golden = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden {} ({e}); run with GVB_BLESS=1", path.display()));
+    let got = normalize_version(rendered.trim_end());
+    let want = normalize_version(golden.trim_end());
+    assert_eq!(got, want, "golden mismatch for {name} — if intentional, re-bless with GVB_BLESS=1");
+}
+
+/// Mask the `benchmark_version` field's value (whatever it is, on both the
+/// rendered and the golden side) so a crate version bump alone doesn't
+/// churn the golden. Inputs without the field pass through untouched.
+fn normalize_version(s: &str) -> String {
+    const KEY: &str = "\"benchmark_version\": \"";
+    if let Some(start) = s.find(KEY) {
+        let vstart = start + KEY.len();
+        if let Some(vlen) = s[vstart..].find('"') {
+            let version = s[vstart..vstart + vlen].to_string();
+            return s.replace(&version, "{VERSION}");
+        }
+    }
+    s.to_string()
+}
+
+#[test]
+fn json_report_matches_golden() {
+    check_golden("report.json", &render(Format::Json));
+}
+
+#[test]
+fn csv_report_matches_golden() {
+    check_golden("report.csv", &render(Format::Csv));
+}
+
+#[test]
+fn sample_card_is_hand_checkable() {
+    // Guard the premise of the goldens: the synthetic scores stay exact.
+    let (results, baseline) = sample();
+    let card = ScoreCard::build("hami", &results, &baseline);
+    assert_eq!(card.per_metric, vec![("OH-001", 0.5), ("IS-005", 1.0), ("PCIE-001", 0.8)]);
+    assert!((card.overall - 0.331 / 0.42).abs() < 1e-12, "overall={}", card.overall);
+    assert_eq!(card.grade().letter(), "C");
+}

@@ -1,13 +1,18 @@
 //! Property-based tests (via the in-tree `testkit`) on substrate and
 //! coordinator invariants.
 
+use std::collections::HashSet;
+
+use gvb::coordinator::executor::{self, Task};
 use gvb::cudalite::Api;
+use gvb::metrics::{taxonomy, RunConfig};
 use gvb::simgpu::memory::HbmAllocator;
 use gvb::stats::jain_fairness;
 use gvb::testkit::{check, gens};
+use gvb::util::rng::task_seed;
 use gvb::util::Rng;
 use gvb::virt::wfq::WfqScheduler;
-use gvb::virt::TenantConfig;
+use gvb::virt::{TenantConfig, ALL_SYSTEMS};
 
 /// Allocator invariant: after any interleaving of allocs and frees,
 /// used + total_free == capacity and the free list stays coalesced
@@ -131,6 +136,77 @@ fn prop_limiter_bounded_overshoot() {
             let achieved: f64 = busy / now;
             // GCRA pacing: long-run overshoot bounded by burst/horizon.
             achieved <= limit + kernel_ns / 3e9 + 0.02
+        },
+    );
+}
+
+/// Seed-derivation invariant: for any base seed, `task_seed` is stable
+/// across calls and collision-free over the entire 4-system × 56-metric
+/// (224-cell) evaluation matrix.
+#[test]
+fn prop_task_seed_stable_and_collision_free() {
+    check(
+        "task-seed-stable-collision-free",
+        0x5EED5,
+        128,
+        |rng: &mut Rng| rng.next_u64(),
+        |&base| {
+            let mut seen = HashSet::new();
+            for system in ALL_SYSTEMS {
+                for d in &taxonomy::ALL {
+                    let s = task_seed(base, system, d.id);
+                    if s != task_seed(base, system, d.id) {
+                        return false; // must be a pure function
+                    }
+                    if !seen.insert(s) {
+                        return false; // collision across the matrix
+                    }
+                }
+            }
+            seen.len() == ALL_SYSTEMS.len() * taxonomy::ALL.len()
+        },
+    );
+}
+
+/// Executor invariant: for randomized metric-id subsets (kept in Table-8
+/// order, as the runner emits them), the parallel executor returns results
+/// in exactly the input order at any worker count.
+#[test]
+fn prop_executor_preserves_table8_order() {
+    // A pool of cheap metrics so randomized cases stay fast; pool indices
+    // are in Table-8 order.
+    let pool: [&'static str; 6] =
+        ["OH-007", "OH-009", "PCIE-001", "PCIE-002", "PCIE-004", "BW-003"];
+    check(
+        "executor-preserves-order",
+        0x0D3B,
+        6,
+        |rng: &mut Rng| {
+            let system = *rng.choose(&ALL_SYSTEMS);
+            let n = rng.range(1, pool.len() + 1);
+            // Random subset, preserving pool (Table-8) order.
+            let mut picked: Vec<&'static str> = Vec::new();
+            for id in pool {
+                if picked.len() < n && rng.chance(0.6) {
+                    picked.push(id);
+                }
+            }
+            if picked.is_empty() {
+                picked.push(pool[rng.range(0, pool.len())]);
+            }
+            let jobs = rng.range(1, 5);
+            (system.to_string(), picked, jobs)
+        },
+        |(system, ids, jobs)| {
+            let tasks: Vec<Task> = ids
+                .iter()
+                .map(|id| Task { system: system.clone(), metric_id: *id })
+                .collect();
+            let (results, stats) = executor::execute(&RunConfig::quick(system), &tasks, *jobs);
+            results.len() == ids.len()
+                && stats.tasks.len() == ids.len()
+                && results.iter().zip(ids).all(|(r, id)| r.id == *id)
+                && stats.tasks.iter().zip(ids).all(|(t, id)| t.metric_id == *id)
         },
     );
 }
