@@ -11,26 +11,46 @@ USAGE:
               [--category <key>] [--metric <ID>] [--iterations N]
               [--warmup N] [--tenants N] [--seed N] [--jobs N] [--quick]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
+  gvbench sweep [--system S | --all-systems] [--tenants N,N,...]
+              [--quota PCT,PCT,...] [--category key,key,...]
+              [--iterations N] [--warmup N] [--seed N] [--jobs N] [--quick]
+              [--config <file>] [--format <txt|json|csv>] [--out <file>]
   gvbench list [--full | --systems | --categories]
   gvbench compare [--quick] [--jobs N]  # Table 7: overall scores, all systems
   gvbench regress --baseline <csv> [--system S] [--threshold PCT] [--quick]
+              [--jobs N]
   gvbench help
 
 EXAMPLES:
   gvbench run --system hami --category overhead
   gvbench run --all-systems --quick --format json --out results.json
   gvbench run --all-systems --jobs 8      # shard the matrix over 8 workers
+  gvbench sweep --tenants 1,2,4,8 --quota 25,50,100 --jobs 8 --format csv
+  gvbench sweep --category isolation,fragmentation --quick
   gvbench compare --quick
 
-Parallelism: --jobs N shards the (system x metric) matrix across N worker
-threads (0 or unset = all cores). Same --seed => bit-identical numbers at
-any job count.
+Scenario sweeps: `sweep` expands (systems x tenants x quota x metrics)
+into one executor task list; quota is the percent of the whole device each
+tenant gets (memory + SM). Defaults: all systems, tenants 1,2,4,8, quota
+25,50,100. Every cell reports its score delta vs the (1 tenant, 100%)
+baseline cell. A config file `[sweep]` section (tenants/quota/systems/
+categories keys) sets the grid; CLI flags override it.
+
+Regression gate: `regress` re-runs every metric in the baseline CSV (all
+systems in the file, or just --system S) sharded across --jobs workers,
+and exits 1 if any metric moved against its direction by more than
+--threshold percent.
+
+Parallelism: --jobs N shards the task matrix across N worker threads
+(0 or unset = all cores). Same --seed => bit-identical numbers at any job
+count, for `run` and `sweep` alike.
 ";
 
 /// Parsed command line.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Command {
     Run,
+    Sweep,
     List,
     Compare,
     Regress,
@@ -41,6 +61,9 @@ pub enum Command {
 pub struct Args {
     pub command: Command,
     pub system: String,
+    /// True when `--system` was passed explicitly (vs the default); sweep
+    /// and regress use this to distinguish "restrict to S" from "all".
+    pub system_set: bool,
     pub all_systems: bool,
     pub category: Option<String>,
     pub metric: Option<String>,
@@ -58,6 +81,12 @@ pub struct Args {
     pub list_categories: bool,
     pub baseline: Option<String>,
     pub threshold: f64,
+    /// Sweep grid: tenant counts (`--tenants 1,2,4` under `sweep`).
+    pub sweep_tenants: Option<Vec<u32>>,
+    /// Sweep grid: per-tenant quota percents (`--quota 25,50,100`).
+    pub sweep_quotas: Option<Vec<u32>>,
+    /// Sweep grid: category keys (`--category isolation,fragmentation`).
+    pub sweep_categories: Option<Vec<String>>,
 }
 
 impl Default for Args {
@@ -65,6 +94,7 @@ impl Default for Args {
         Args {
             command: Command::Help,
             system: "hami".to_string(),
+            system_set: false,
             all_systems: false,
             category: None,
             metric: None,
@@ -82,6 +112,9 @@ impl Default for Args {
             list_categories: false,
             baseline: None,
             threshold: 10.0,
+            sweep_tenants: None,
+            sweep_quotas: None,
+            sweep_categories: None,
         }
     }
 }
@@ -102,6 +135,38 @@ fn err(msg: impl Into<String>) -> ParseError {
     ParseError(msg.into())
 }
 
+/// Parse a comma-separated u32 list flag value (`1,2,4`).
+fn parse_u32_list(flag: &str, v: &str) -> Result<Vec<u32>, ParseError> {
+    let xs: Result<Vec<u32>, _> = v.split(',').map(|s| s.trim().parse::<u32>()).collect();
+    match xs {
+        Ok(xs) if !xs.is_empty() => Ok(xs),
+        _ => Err(err(format!("bad {flag} list `{v}` (expected e.g. 1,2,4)"))),
+    }
+}
+
+/// Range checks shared by the CLI flags and config-file `[sweep]` grids:
+/// tenant counts in 1..=64, quota percents in 1..=100.
+pub fn validate_sweep_grid(
+    tenants: Option<&[u32]>,
+    quotas: Option<&[u32]>,
+) -> Result<(), String> {
+    if let Some(ts) = tenants {
+        for &t in ts {
+            if !(1..=64).contains(&t) {
+                return Err(format!("--tenants value {t} out of range (1..=64)"));
+            }
+        }
+    }
+    if let Some(qs) = quotas {
+        for &q in qs {
+            if !(1..=100).contains(&q) {
+                return Err(format!("--quota value {q} out of range (1..=100)"));
+            }
+        }
+    }
+    Ok(())
+}
+
 impl Args {
     /// Parse argv (without the program name).
     pub fn parse(argv: &[String]) -> Result<Args, ParseError> {
@@ -109,6 +174,7 @@ impl Args {
         let mut it = argv.iter().peekable();
         args.command = match it.next().map(|s| s.as_str()) {
             Some("run") => Command::Run,
+            Some("sweep") => Command::Sweep,
             Some("list") => Command::List,
             Some("compare") => Command::Compare,
             Some("regress") => Command::Regress,
@@ -122,9 +188,21 @@ impl Args {
         };
         while let Some(flag) = it.next() {
             match flag.as_str() {
-                "--system" => args.system = next_value(&mut it, flag)?,
+                "--system" => {
+                    args.system = next_value(&mut it, flag)?;
+                    args.system_set = true;
+                }
                 "--all-systems" => args.all_systems = true,
-                "--category" => args.category = Some(next_value(&mut it, flag)?),
+                "--category" => {
+                    let v = next_value(&mut it, flag)?;
+                    if args.command == Command::Sweep {
+                        // Sweeps take a comma-separated category list.
+                        args.sweep_categories =
+                            Some(v.split(',').map(|s| s.trim().to_string()).collect());
+                    } else {
+                        args.category = Some(v);
+                    }
+                }
                 "--metric" => args.metric = Some(next_value(&mut it, flag)?),
                 "--iterations" => {
                     args.iterations = Some(
@@ -136,8 +214,19 @@ impl Args {
                         Some(next_value(&mut it, flag)?.parse().map_err(|_| err("bad --warmup"))?)
                 }
                 "--tenants" => {
-                    args.tenants =
-                        Some(next_value(&mut it, flag)?.parse().map_err(|_| err("bad --tenants"))?)
+                    let v = next_value(&mut it, flag)?;
+                    if args.command == Command::Sweep {
+                        args.sweep_tenants = Some(parse_u32_list(flag, &v)?);
+                    } else {
+                        args.tenants = Some(v.parse().map_err(|_| err("bad --tenants"))?);
+                    }
+                }
+                "--quota" => {
+                    if args.command != Command::Sweep {
+                        return Err(err("--quota is only valid for `gvbench sweep`"));
+                    }
+                    let v = next_value(&mut it, flag)?;
+                    args.sweep_quotas = Some(parse_u32_list(flag, &v)?);
                 }
                 "--seed" => {
                     args.seed =
@@ -167,7 +256,11 @@ impl Args {
         if args.command == Command::Regress && args.baseline.is_none() {
             return Err(err("regress requires --baseline <csv>"));
         }
-        if args.command == Command::Run || args.command == Command::Regress {
+        let takes_suite_flags = matches!(
+            args.command,
+            Command::Run | Command::Regress | Command::Sweep
+        );
+        if takes_suite_flags {
             if crate::virt::by_name(&args.system).is_none() {
                 return Err(err(format!(
                     "unknown system `{}` (expected: native, hami, fcsp, mig, timeslice)",
@@ -187,6 +280,20 @@ impl Args {
             if crate::report::Format::from_key(&args.format).is_none() {
                 return Err(err(format!("unknown format `{}`", args.format)));
             }
+        }
+        if args.command == Command::Sweep {
+            if args.metric.is_some() {
+                return Err(err("--metric is not supported by `gvbench sweep`; use --category"));
+            }
+            if let Some(cats) = &args.sweep_categories {
+                for c in cats {
+                    if crate::metrics::Category::from_key(c).is_none() {
+                        return Err(err(format!("unknown category `{c}`")));
+                    }
+                }
+            }
+            validate_sweep_grid(args.sweep_tenants.as_deref(), args.sweep_quotas.as_deref())
+                .map_err(err)?;
         }
         Ok(args)
     }
@@ -230,6 +337,51 @@ mod tests {
         assert_eq!(a.jobs, Some(8));
         assert!(parse("run --system hami --jobs lots").is_err());
         assert_eq!(parse("run --system hami").unwrap().jobs, None);
+    }
+
+    #[test]
+    fn sweep_parses_lists() {
+        let a = parse("sweep --tenants 1,2,4 --quota 50,100 --category isolation,pcie --jobs 8 --seed 42")
+            .unwrap();
+        assert_eq!(a.command, Command::Sweep);
+        assert_eq!(a.sweep_tenants, Some(vec![1, 2, 4]));
+        assert_eq!(a.sweep_quotas, Some(vec![50, 100]));
+        assert_eq!(
+            a.sweep_categories,
+            Some(vec!["isolation".to_string(), "pcie".to_string()])
+        );
+        assert_eq!(a.jobs, Some(8));
+        assert_eq!(a.seed, Some(42));
+        assert!(!a.system_set);
+    }
+
+    #[test]
+    fn sweep_rejects_bad_grids() {
+        assert!(parse("sweep --tenants 1,lots").is_err());
+        assert!(parse("sweep --tenants 0").is_err());
+        assert!(parse("sweep --tenants 65").is_err());
+        assert!(parse("sweep --quota 0").is_err());
+        assert!(parse("sweep --quota 101").is_err());
+        assert!(parse("sweep --category bogus").is_err());
+        assert!(parse("sweep --format xml").is_err());
+        assert!(parse("sweep --metric OH-001").is_err());
+        // --quota belongs to sweep only.
+        assert!(parse("run --system hami --quota 50").is_err());
+    }
+
+    #[test]
+    fn system_set_tracks_explicit_flag() {
+        assert!(parse("sweep --system fcsp").unwrap().system_set);
+        assert!(!parse("run").unwrap().system_set);
+        assert!(parse("run --system hami").unwrap().system_set);
+    }
+
+    #[test]
+    fn run_tenants_stays_scalar() {
+        let a = parse("run --system hami --tenants 8").unwrap();
+        assert_eq!(a.tenants, Some(8));
+        assert_eq!(a.sweep_tenants, None);
+        assert!(parse("run --system hami --tenants 1,2").is_err());
     }
 
     #[test]

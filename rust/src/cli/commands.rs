@@ -2,7 +2,8 @@
 
 use crate::anyhow::{bail, Context, Result};
 
-use crate::config::FileConfig;
+use crate::config::{FileConfig, SweepOverlay};
+use crate::coordinator::sweep::{self, SweepSpec};
 use crate::coordinator::SuiteRunner;
 use crate::metrics::{taxonomy, Category, RunConfig};
 use crate::report::{Format, Report};
@@ -19,6 +20,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         }
         Command::List => cmd_list(args),
         Command::Run => cmd_run(args),
+        Command::Sweep => cmd_sweep(args),
         Command::Compare => cmd_compare(args),
         Command::Regress => cmd_regress(args),
     }
@@ -27,13 +29,23 @@ pub fn dispatch(args: &Args) -> Result<()> {
 fn cmd_regress(args: &Args) -> Result<()> {
     let path = args.baseline.as_ref().expect("validated");
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    let baseline = super::regress::parse_baseline_csv(&text)?;
+    let mut baseline = super::regress::parse_baseline_csv(&text, &args.system)?;
+    if args.system_set {
+        // Explicit --system restricts a multi-system baseline to one row set.
+        baseline.retain(|r| r.system == args.system);
+        if baseline.is_empty() {
+            bail!("baseline {path} has no rows for system `{}`", args.system);
+        }
+    }
     let cfg = build_config(args)?;
+    let systems: std::collections::BTreeSet<&str> =
+        baseline.iter().map(|r| r.system.as_str()).collect();
     println!(
-        "Regression check: system={}, {} baseline metrics, threshold {:.1}%",
-        cfg.system,
+        "Regression check: systems=[{}], {} baseline metrics, threshold {:.1}%, jobs={}",
+        systems.into_iter().collect::<Vec<_>>().join(","),
         baseline.len(),
-        args.threshold
+        args.threshold,
+        crate::coordinator::executor::resolve_jobs(cfg.jobs),
     );
     let (regressions, checked) = super::regress::run_regression(&cfg, &baseline, args.threshold)?;
     if regressions.is_empty() {
@@ -44,22 +56,39 @@ fn cmd_regress(args: &Args) -> Result<()> {
     for r in &regressions {
         let d = taxonomy::by_id(&r.id).unwrap();
         println!(
-            "  {:<10} {:<32} {:.3} -> {:.3} {}  ({:+.1}% worse)",
-            r.id, d.name, r.baseline, r.current, d.unit, r.regression_percent
+            "  {:<10} {:<10} {:<32} {:.3} -> {:.3} {}  ({:+.1}% worse)",
+            r.system, r.id, d.name, r.baseline, r.current, d.unit, r.regression_percent
         );
     }
     bail!("{} metric(s) regressed beyond {:.1}%", regressions.len(), args.threshold)
 }
 
+/// Load `--config <file>` if one was given.
+fn load_file_config(args: &Args) -> Result<Option<FileConfig>> {
+    match &args.config {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            Ok(Some(FileConfig::parse(&text)?))
+        }
+        None => Ok(None),
+    }
+}
+
 fn build_config(args: &Args) -> Result<RunConfig> {
+    let file = load_file_config(args)?;
+    build_config_with(args, file.as_ref())
+}
+
+/// Base config ← config file ← CLI flag overrides.
+fn build_config_with(args: &Args, file: Option<&FileConfig>) -> Result<RunConfig> {
     let mut cfg = if args.quick {
         RunConfig::quick(&args.system)
     } else {
         RunConfig::for_system(&args.system)
     };
-    if let Some(path) = &args.config {
-        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        cfg = FileConfig::parse(&text)?.apply(cfg)?;
+    if let Some(fc) = file {
+        cfg = fc.apply(cfg)?;
     }
     if let Some(v) = args.iterations {
         cfg.iterations = v;
@@ -77,6 +106,77 @@ fn build_config(args: &Args) -> Result<RunConfig> {
         cfg.jobs = v;
     }
     Ok(cfg)
+}
+
+/// Build the sweep grid (CLI flags > config-file `[sweep]` section >
+/// default grid) and run it through the executor.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let file = load_file_config(args)?;
+    let cfg = build_config_with(args, file.as_ref())?;
+    let overlay = match file.as_ref() {
+        Some(fc) => fc.sweep()?,
+        None => SweepOverlay::default(),
+    };
+    let tenants = args
+        .sweep_tenants
+        .clone()
+        .or(overlay.tenants)
+        .unwrap_or_else(|| vec![1, 2, 4, 8]);
+    let quotas = args
+        .sweep_quotas
+        .clone()
+        .or(overlay.quotas)
+        .unwrap_or_else(|| vec![25, 50, 100]);
+    if let Err(e) = super::args::validate_sweep_grid(Some(&tenants), Some(&quotas)) {
+        bail!("{e}");
+    }
+    let systems: Vec<String> = if args.all_systems {
+        ALL_SYSTEMS.iter().map(|s| s.to_string()).collect()
+    } else if args.system_set {
+        vec![args.system.clone()]
+    } else if let Some(ss) = overlay.systems {
+        for s in &ss {
+            if crate::virt::by_name(s).is_none() {
+                bail!("unknown system `{s}` in [sweep] config");
+            }
+        }
+        ss
+    } else {
+        ALL_SYSTEMS.iter().map(|s| s.to_string()).collect()
+    };
+    let categories = match args.sweep_categories.clone().or(overlay.categories) {
+        None => None,
+        Some(keys) => {
+            let mut cats = Vec::new();
+            for k in &keys {
+                match Category::from_key(k) {
+                    Some(c) => cats.push(c),
+                    None => bail!("unknown category `{k}` in sweep grid"),
+                }
+            }
+            Some(cats)
+        }
+    };
+    let spec = SweepSpec { systems, tenants, quotas, categories };
+    let surface = sweep::run_sweep(&cfg, &spec, cfg.jobs);
+    eprintln!(
+        "[gvbench] sweep: {} cells x {} metrics on {} workers in {:.2}s (busy/wall {:.2}x)",
+        surface.cells.len(),
+        surface.metric_ids.len(),
+        surface.stats.jobs,
+        surface.stats.wall_ns as f64 / 1e9,
+        surface.stats.speedup_estimate(),
+    );
+    let format = Format::from_key(&args.format).expect("validated");
+    let rendered = crate::report::sweep::render(&surface, format);
+    match &args.out {
+        Some(path) => {
+            std::fs::write(path, &rendered).with_context(|| format!("writing {path}"))?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{rendered}"),
+    }
+    Ok(())
 }
 
 fn build_runner(args: &Args, cfg: RunConfig) -> SuiteRunner {
@@ -98,13 +198,25 @@ fn cmd_run(args: &Args) -> Result<()> {
     let format = Format::from_key(&args.format).expect("validated");
     let mut rendered = String::new();
     let mut all_stats = crate::coordinator::executor::ExecutionStats::default();
-    for system in systems {
+    for (i, system) in systems.iter().enumerate() {
+        let system: &str = system;
         let suite = runner.run(system);
         let baseline = runner.baseline().to_vec();
         let report =
             Report::new(system, &suite.results, &baseline, &suite.card).with_stats(&suite.stats);
-        rendered.push_str(&report.render(format));
-        rendered.push('\n');
+        let text = report.render(format);
+        if format == Format::Csv {
+            // CSV concatenates as one table with a single header, so a
+            // multi-system run stays parseable as a regress baseline.
+            if i == 0 {
+                rendered.push_str(&text);
+            } else {
+                rendered.push_str(text.split_once('\n').map(|(_, body)| body).unwrap_or(""));
+            }
+        } else {
+            rendered.push_str(&text);
+            rendered.push('\n');
+        }
         eprintln!(
             "[gvbench] {system}: {} tasks on {} workers in {:.2}s (busy/wall {:.2}x)",
             suite.stats.tasks.len(),
@@ -235,6 +347,53 @@ mod tests {
         assert!(text.contains("\"OH-009\""));
         assert!(text.contains("\"execution\""));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sweep_writes_surface_csv() {
+        let mut a = Args::default();
+        a.command = Command::Sweep;
+        a.system = "native".into();
+        a.system_set = true;
+        a.quick = true;
+        a.sweep_tenants = Some(vec![1, 2]);
+        a.sweep_quotas = Some(vec![100]);
+        a.sweep_categories = Some(vec!["pcie".into()]);
+        a.format = "csv".into();
+        let path = std::env::temp_dir().join("gvb_test_sweep.csv");
+        a.out = Some(path.to_str().unwrap().to_string());
+        dispatch(&a).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].starts_with("system,tenants,quota_pct"));
+        assert!(lines[0].ends_with("score_pcie"));
+        assert_eq!(lines.len(), 3); // header + (1,100) baseline + (2,100)
+        assert!(lines[1].starts_with("native,1,100,true,"));
+        assert!(lines[2].starts_with("native,2,100,false,"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn all_systems_csv_is_one_table() {
+        let mut a = Args::default();
+        a.command = Command::Run;
+        a.all_systems = true;
+        a.metric = Some("OH-009".into());
+        a.quick = true;
+        a.format = "csv".into();
+        let path = std::env::temp_dir().join("gvb_test_all_systems.csv");
+        let path_str = path.to_str().unwrap().to_string();
+        a.out = Some(path_str.clone());
+        dispatch(&a).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Exactly one header; one row per system; no blank separators —
+        // i.e. directly usable as a multi-system regress baseline.
+        assert_eq!(text.lines().filter(|l| l.starts_with("id,")).count(), 1);
+        assert_eq!(text.lines().count(), 5);
+        let rows = super::super::regress::parse_baseline_csv(&text, "native").unwrap();
+        assert_eq!(rows.len(), 4);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(format!("{path_str}.timings.csv")).ok();
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! `gvbench` command-line front end (clap substitute for the offline
-//! build): subcommands `run`, `list`, `compare`, plus `--help`.
+//! build): subcommands `run`, `sweep`, `list`, `compare`, `regress`, plus
+//! `--help`.
 
 pub mod args;
 pub mod commands;

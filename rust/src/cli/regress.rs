@@ -4,36 +4,54 @@
 //! Workflow:
 //!
 //! ```bash
-//! gvbench run --system fcsp --format csv --out baseline.csv   # pin a release
+//! gvbench run --all-systems --format csv --out baseline.csv  # pin a release
 //! ... upgrade the virtualization stack ...
-//! gvbench regress --system fcsp --baseline baseline.csv --threshold 10
+//! gvbench regress --baseline baseline.csv --threshold 10 --jobs 4
 //! ```
 //!
-//! Re-runs every metric present in the baseline CSV and flags any that
-//! moved against its direction (Table 8) by more than `threshold` percent.
-//! Exit code 1 on regressions — CI-friendly.
+//! Re-runs every (system, metric) row present in the baseline CSV —
+//! **sharded across `--jobs` workers through the parallel executor**, so a
+//! 224-row all-systems baseline re-checks at CI speed — and flags any
+//! metric that moved against its direction (Table 8) by more than
+//! `threshold` percent. Exit code 1 on regressions — CI-friendly.
+//!
+//! Baselines may span multiple systems (the `system` column written by
+//! `gvbench run --all-systems --format csv`); single-system baselines
+//! without a `system` column attribute rows to `--system` (default hami).
 //!
 //! Seed parity: baselines are produced by `gvbench run`, which executes
 //! through the parallel executor with per-task derived seeds. The re-run
-//! here derives the same seed per metric ([`executor::derive_cfg`]), so an
-//! unchanged system compared against its own fresh baseline reports zero
-//! regressions.
+//! here goes through the same executor, deriving the same
+//! `task_seed(seed, system, metric)` per row — so an unchanged system
+//! compared against its own fresh baseline reports zero regressions.
 
-use std::collections::BTreeMap;
+use std::collections::BTreeSet;
 
 use crate::anyhow::{bail, Context, Result};
 
 use crate::coordinator::executor;
-use crate::metrics::{registry, taxonomy, Direction, RunConfig};
+use crate::metrics::{taxonomy, Direction, RunConfig};
 
-/// A parsed baseline: metric id → recorded value.
-pub fn parse_baseline_csv(text: &str) -> Result<BTreeMap<String, f64>> {
-    let mut out = BTreeMap::new();
+/// One parsed baseline row.
+#[derive(Clone, Debug)]
+pub struct BaselineRow {
+    pub system: String,
+    pub id: String,
+    pub value: f64,
+}
+
+/// Parse a baseline CSV into rows, in file order. Rows without a `system`
+/// column are attributed to `default_system`. Unknown metric ids, unknown
+/// systems and duplicate (system, id) pairs are rejected.
+pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Vec<BaselineRow>> {
+    let mut out: Vec<BaselineRow> = Vec::new();
+    let mut seen: BTreeSet<(String, String)> = BTreeSet::new();
     let mut lines = text.lines();
     let header = lines.next().context("empty baseline file")?;
     let cols: Vec<&str> = header.split(',').collect();
     let id_col = cols.iter().position(|c| *c == "id").context("no `id` column")?;
     let value_col = cols.iter().position(|c| *c == "value").context("no `value` column")?;
+    let system_col = cols.iter().position(|c| *c == "system");
     for (i, line) in lines.enumerate() {
         if line.trim().is_empty() {
             continue;
@@ -50,7 +68,20 @@ pub fn parse_baseline_csv(text: &str) -> Result<BTreeMap<String, f64>> {
         if taxonomy::by_id(id).is_none() {
             bail!("row {}: unknown metric id `{id}`", i + 2);
         }
-        out.insert(id.to_string(), value);
+        let system = match system_col {
+            Some(c) => fields
+                .get(c)
+                .with_context(|| format!("row {}: missing system", i + 2))?
+                .clone(),
+            None => default_system.to_string(),
+        };
+        if crate::virt::by_name(&system).is_none() {
+            bail!("row {}: unknown system `{system}`", i + 2);
+        }
+        if !seen.insert((system.clone(), id.clone())) {
+            bail!("row {}: duplicate baseline entry for {system}/{id}", i + 2);
+        }
+        out.push(BaselineRow { system, id: id.clone(), value });
     }
     if out.is_empty() {
         bail!("baseline contains no metrics");
@@ -82,6 +113,7 @@ fn split_csv(line: &str) -> Vec<String> {
 /// One regression finding.
 #[derive(Clone, Debug)]
 pub struct Regression {
+    pub system: String,
     pub id: String,
     pub baseline: f64,
     pub current: f64,
@@ -89,24 +121,40 @@ pub struct Regression {
     pub regression_percent: f64,
 }
 
-/// Re-run the baseline's metrics on `cfg` and compare.
+/// Re-run the baseline's (system, metric) rows — sharded across
+/// `cfg.jobs` executor workers — and compare against the recorded values.
 pub fn run_regression(
     cfg: &RunConfig,
-    baseline: &BTreeMap<String, f64>,
+    baseline: &[BaselineRow],
     threshold_percent: f64,
 ) -> Result<(Vec<Regression>, usize)> {
+    // Every row's id was validated at parse time, so the executor returns
+    // exactly one result per task, in row order. `execute` derives each
+    // task's seed from (cfg.seed, system, metric) — the same derivation
+    // `gvbench run` used to produce the baseline.
+    let tasks: Vec<executor::Task> = baseline
+        .iter()
+        .filter_map(|r| {
+            taxonomy::by_id(&r.id)
+                .map(|d| executor::Task { system: r.system.clone(), metric_id: d.id })
+        })
+        .collect();
+    let (results, _stats) = executor::execute(cfg, &tasks, cfg.jobs);
+    if results.len() != baseline.len() {
+        bail!("regression re-run produced {} results for {} rows", results.len(), baseline.len());
+    }
     let mut regressions = Vec::new();
-    let mut checked = 0;
-    for (id, base) in baseline {
-        let d = taxonomy::by_id(id).context("unknown id")?;
-        // Match the seed derivation of the executor that produced the
-        // baseline, or identical code would show phantom regressions.
-        let task_cfg = executor::derive_cfg(cfg, &cfg.system, d.id);
-        let Some(result) = registry::run_metric(id, &task_cfg) else {
+    let checked = results.len();
+    for (row, result) in baseline.iter().zip(&results) {
+        let d = taxonomy::by_id(&row.id).context("unknown id")?;
+        let (base, cur) = (row.value, result.value);
+        // Baseline CSVs record 6 decimal places; a move inside that
+        // recording resolution is rounding noise, not a regression (and
+        // would otherwise read as an infinite relative move when a tiny
+        // value rounded to 0 in the baseline).
+        if (cur - base).abs() <= 1.5e-6 {
             continue;
-        };
-        checked += 1;
-        let cur = result.value;
+        }
         // Positive = got worse, in the metric's own direction.
         let worse_pct = match d.direction {
             Direction::LowerBetter => {
@@ -124,13 +172,14 @@ pub fn run_regression(
                 }
             }
             Direction::Boolean => {
-                if cur < *base { 100.0 } else { 0.0 }
+                if cur < base { 100.0 } else { 0.0 }
             }
         };
         if worse_pct > threshold_percent {
             regressions.push(Regression {
-                id: id.clone(),
-                baseline: *base,
+                system: row.system.clone(),
+                id: row.id.clone(),
+                baseline: base,
                 current: cur,
                 regression_percent: worse_pct,
             });
@@ -150,32 +199,78 @@ mod tests {
     }
 
     #[test]
-    fn parses_baseline() {
-        let csv = "id,name,category,unit,system,value\nOH-001,\"Kernel Launch, x\",Overhead,µs,hami,15.3\n";
-        let b = parse_baseline_csv(csv).unwrap();
-        assert_eq!(b["OH-001"], 15.3);
+    fn parses_baseline_with_system_column() {
+        let csv = "id,name,category,unit,system,value\n\
+                   OH-001,\"Kernel Launch, x\",Overhead,µs,hami,15.3\n\
+                   OH-001,\"Kernel Launch, x\",Overhead,µs,fcsp,8.1\n";
+        let b = parse_baseline_csv(csv, "native").unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].system, "hami");
+        assert_eq!(b[0].value, 15.3);
+        assert_eq!(b[1].system, "fcsp");
     }
 
     #[test]
-    fn rejects_unknown_ids_and_empty() {
-        assert!(parse_baseline_csv("id,value\nXX-1,3\n").is_err());
-        assert!(parse_baseline_csv("id,value\n").is_err());
+    fn parses_baseline_without_system_column() {
+        let csv = "id,value\nOH-001,15.3\n";
+        let b = parse_baseline_csv(csv, "fcsp").unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].system, "fcsp");
+        assert_eq!(b[0].id, "OH-001");
+    }
+
+    #[test]
+    fn rejects_unknown_duplicate_and_empty() {
+        assert!(parse_baseline_csv("id,value\nXX-1,3\n", "hami").is_err());
+        assert!(parse_baseline_csv("id,value\n", "hami").is_err());
+        // Unknown system.
+        let csv = "id,system,value\nOH-001,mps,1.0\n";
+        assert!(parse_baseline_csv(csv, "hami").is_err());
+        // Duplicate (system, id).
+        let csv = "id,system,value\nOH-001,hami,1.0\nOH-001,hami,2.0\n";
+        assert!(parse_baseline_csv(csv, "hami").is_err());
     }
 
     #[test]
     fn detects_direction_aware_regressions() {
-        // OH-001 lower-better: 4.2 → 15.3 is a regression.
-        let mut base = BTreeMap::new();
-        base.insert("OH-009".to_string(), 0.001); // hami will measure 0.055
+        // OH-009 lower-better: hami measures 0.055, so a 0.001 baseline is
+        // a large regression; a matching baseline is clean.
+        let rows = |v: f64| {
+            vec![BaselineRow { system: "hami".to_string(), id: "OH-009".to_string(), value: v }]
+        };
         let cfg = RunConfig::quick("hami");
-        let (regs, checked) = run_regression(&cfg, &base, 10.0).unwrap();
+        let (regs, checked) = run_regression(&cfg, &rows(0.001), 10.0).unwrap();
         assert_eq!(checked, 1);
         assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].system, "hami");
         assert!(regs[0].regression_percent > 100.0);
-        // And no regression when the baseline matches.
-        let mut base = BTreeMap::new();
-        base.insert("OH-009".to_string(), 0.055);
-        let (regs, _) = run_regression(&cfg, &base, 10.0).unwrap();
+        let (regs, _) = run_regression(&cfg, &rows(0.055), 10.0).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+    }
+
+    #[test]
+    fn rerun_matches_its_own_fresh_baseline_across_systems() {
+        // A multi-system "baseline" produced by the executor compares
+        // clean against a sharded re-run at a different job count.
+        let cfg = RunConfig::quick("native");
+        let tasks = vec![
+            executor::Task { system: "native".into(), metric_id: "PCIE-001" },
+            executor::Task { system: "hami".into(), metric_id: "PCIE-001" },
+            executor::Task { system: "fcsp".into(), metric_id: "BW-003" },
+        ];
+        let (results, _) = executor::execute(&cfg, &tasks, 1);
+        let baseline: Vec<BaselineRow> = results
+            .iter()
+            .map(|r| BaselineRow {
+                system: r.system.clone(),
+                id: r.id.to_string(),
+                value: r.value,
+            })
+            .collect();
+        let mut cfg8 = cfg.clone();
+        cfg8.jobs = 8;
+        let (regs, checked) = run_regression(&cfg8, &baseline, 0.0001).unwrap();
+        assert_eq!(checked, 3);
         assert!(regs.is_empty(), "{regs:?}");
     }
 }

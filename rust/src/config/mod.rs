@@ -1,7 +1,19 @@
 //! Run configuration files: a small parser for a `key = value` format
-//! (INI-like, with `#` comments) that configures iterations, tenants,
-//! quotas and custom category weights — the paper's "users can customize
-//! weights via configuration files" (§6.3).
+//! (INI-like, with `#` comments and `[section]` headers) that configures
+//! iterations, tenants, quotas, custom category weights — the paper's
+//! "users can customize weights via configuration files" (§6.3) — and the
+//! `[sweep]` scenario grid consumed by `gvbench sweep`.
+//!
+//! A `[section]` header prefixes subsequent keys with `section.`, so
+//!
+//! ```text
+//! jobs = 8
+//! [sweep]
+//! tenants = 1,2,4,8
+//! quota = 25,50,100
+//! ```
+//!
+//! stores `jobs` and `sweep.tenants` / `sweep.quota`.
 
 use std::collections::HashMap;
 
@@ -13,12 +25,23 @@ pub struct FileConfig {
     values: HashMap<String, String>,
 }
 
+/// Values from a config file's `[sweep]` section (`None` = key absent; the
+/// CLI overlays its own flags on top and falls back to the default grid).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SweepOverlay {
+    pub tenants: Option<Vec<u32>>,
+    pub quotas: Option<Vec<u32>>,
+    pub systems: Option<Vec<String>>,
+    pub categories: Option<Vec<String>>,
+}
+
 /// Parse error with line number.
 #[derive(Debug, PartialEq)]
 pub enum ConfigError {
     Syntax(usize, String),
     Value(String, String),
     Weights(f64),
+    UnknownKey(String),
 }
 
 impl std::fmt::Display for ConfigError {
@@ -29,6 +52,10 @@ impl std::fmt::Display for ConfigError {
             }
             ConfigError::Value(key, val) => write!(f, "invalid value for `{key}`: `{val}`"),
             ConfigError::Weights(sum) => write!(f, "weights must sum to 1.0 (got {sum})"),
+            ConfigError::UnknownKey(key) => write!(
+                f,
+                "unrecognized key `{key}` (known [sweep] keys: tenants, quota, systems, categories)"
+            ),
         }
     }
 }
@@ -36,9 +63,11 @@ impl std::fmt::Display for ConfigError {
 impl std::error::Error for ConfigError {}
 
 impl FileConfig {
-    /// Parse `key = value` lines; `#`/`;` start comments; blanks ignored.
+    /// Parse `key = value` lines; `#`/`;` start comments; blanks ignored;
+    /// `[section]` headers prefix subsequent keys with `section.`.
     pub fn parse(text: &str) -> Result<FileConfig, ConfigError> {
         let mut values = HashMap::new();
+        let mut section = String::new();
         for (i, raw) in text.lines().enumerate() {
             let line = match raw.find(['#', ';']) {
                 Some(p) => &raw[..p],
@@ -48,10 +77,19 @@ impl FileConfig {
             if line.is_empty() {
                 continue;
             }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_lowercase();
+                continue;
+            }
             let (k, v) = line
                 .split_once('=')
                 .ok_or_else(|| ConfigError::Syntax(i + 1, raw.to_string()))?;
-            values.insert(k.trim().to_lowercase(), v.trim().to_string());
+            let key = if section.is_empty() {
+                k.trim().to_lowercase()
+            } else {
+                format!("{section}.{}", k.trim().to_lowercase())
+            };
+            values.insert(key, v.trim().to_string());
         }
         Ok(FileConfig { values })
     }
@@ -97,6 +135,52 @@ impl FileConfig {
             cfg.jobs = v;
         }
         Ok(cfg)
+    }
+
+    /// Parse a comma-separated list value (e.g. `1, 2, 4`).
+    fn get_list<T: std::str::FromStr>(&self, key: &str) -> Result<Option<Vec<T>>, ConfigError> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .map_err(|_| ConfigError::Value(key.to_string(), v.clone()))
+                })
+                .collect::<Result<Vec<T>, ConfigError>>()
+                .map(Some),
+        }
+    }
+
+    /// A comma-separated string list (no parsing beyond trimming).
+    fn get_str_list(&self, key: &str) -> Option<Vec<String>> {
+        self.values
+            .get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
+    /// The `[sweep]` section's scenario grid, if any keys are present.
+    /// Recognized keys: `sweep.tenants`, `sweep.quota` (u32 lists),
+    /// `sweep.systems`, `sweep.categories` (string lists; validated by the
+    /// CLI layer against the backend/category registries). The `sweep.*`
+    /// namespace is closed: any other key in the section — a `quotas`
+    /// typo, a global key like `seed` placed below the header — is an
+    /// error rather than a silently ignored setting.
+    pub fn sweep(&self) -> Result<SweepOverlay, ConfigError> {
+        const KNOWN: [&str; 4] =
+            ["sweep.tenants", "sweep.quota", "sweep.systems", "sweep.categories"];
+        for key in self.values.keys() {
+            if key.starts_with("sweep.") && !KNOWN.contains(&key.as_str()) {
+                return Err(ConfigError::UnknownKey(key.clone()));
+            }
+        }
+        Ok(SweepOverlay {
+            tenants: self.get_list::<u32>("sweep.tenants")?,
+            quotas: self.get_list::<u32>("sweep.quota")?,
+            systems: self.get_str_list("sweep.systems"),
+            categories: self.get_str_list("sweep.categories"),
+        })
     }
 
     /// Custom category weights: keys `weight.<category-key>`. Returns the
@@ -147,6 +231,40 @@ mod tests {
     fn value_error() {
         let fc = FileConfig::parse("iterations = lots\n").unwrap();
         assert!(matches!(fc.apply(RunConfig::default()), Err(ConfigError::Value(_, _))));
+    }
+
+    #[test]
+    fn sections_prefix_keys() {
+        let fc = FileConfig::parse(
+            "jobs = 8\n[sweep]\ntenants = 1, 2,4\nquota = 25,100\nsystems = hami, fcsp\n",
+        )
+        .unwrap();
+        assert_eq!(fc.get("jobs"), Some("8"));
+        assert_eq!(fc.get("sweep.tenants"), Some("1, 2,4"));
+        let s = fc.sweep().unwrap();
+        assert_eq!(s.tenants, Some(vec![1, 2, 4]));
+        assert_eq!(s.quotas, Some(vec![25, 100]));
+        assert_eq!(s.systems, Some(vec!["hami".to_string(), "fcsp".to_string()]));
+        assert_eq!(s.categories, None);
+    }
+
+    #[test]
+    fn sweep_overlay_absent_and_bad_values() {
+        let fc = FileConfig::parse("iterations = 5\n").unwrap();
+        let s = fc.sweep().unwrap();
+        assert!(s.tenants.is_none() && s.quotas.is_none());
+        let bad = FileConfig::parse("[sweep]\ntenants = 1,lots\n").unwrap();
+        assert!(matches!(bad.sweep(), Err(ConfigError::Value(_, _))));
+    }
+
+    #[test]
+    fn sweep_namespace_is_closed() {
+        // A `quotas` typo or a global key under [sweep] errors instead of
+        // being silently ignored.
+        let typo = FileConfig::parse("[sweep]\nquotas = 25,50\n").unwrap();
+        assert!(matches!(typo.sweep(), Err(ConfigError::UnknownKey(_))));
+        let stray = FileConfig::parse("[sweep]\ntenants = 1,2\nseed = 7\n").unwrap();
+        assert_eq!(stray.sweep(), Err(ConfigError::UnknownKey("sweep.seed".to_string())));
     }
 
     #[test]

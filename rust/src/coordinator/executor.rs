@@ -109,25 +109,47 @@ pub fn derive_cfg(base: &RunConfig, system: &str, metric_id: &str) -> RunConfig 
 ///
 /// Returns results **in input order** (unknown metric ids are skipped, as
 /// in the sequential registry path) plus the run's [`ExecutionStats`].
+/// Each task's config is derived from `base` via [`derive_cfg`].
 pub fn execute(base: &RunConfig, tasks: &[Task], jobs: usize) -> (Vec<MetricResult>, ExecutionStats) {
-    let jobs = resolve_jobs(jobs).min(tasks.len().max(1));
+    let pairs: Vec<(Task, RunConfig)> = tasks
+        .iter()
+        .map(|t| (t.clone(), derive_cfg(base, &t.system, t.metric_id)))
+        .collect();
+    execute_prepared(&pairs, jobs)
+}
+
+/// Execute explicit (task, per-task config) pairs on a pool of `jobs`
+/// workers (0 = available parallelism).
+///
+/// This is the generalized entry point behind [`execute`]: callers that
+/// vary more than the (system, metric) coordinates per task — e.g. the
+/// scenario sweep, which also varies tenant count and quota per cell —
+/// pre-derive one full [`RunConfig`] per task. Determinism contract: each
+/// config (seed included) must be a pure function of its task's
+/// coordinates, never of worker count or completion order; then results
+/// are bit-identical at any job count. Results return **in input order**
+/// (unknown metric ids are skipped).
+pub fn execute_prepared(
+    pairs: &[(Task, RunConfig)],
+    jobs: usize,
+) -> (Vec<MetricResult>, ExecutionStats) {
+    let jobs = resolve_jobs(jobs).min(pairs.len().max(1));
     let t_start = Instant::now();
     let cursor = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<(MetricResult, TaskTiming)>>> =
-        tasks.iter().map(|_| Mutex::new(None)).collect();
+        pairs.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for worker in 0..jobs {
             let cursor = &cursor;
             let slots = &slots;
             scope.spawn(move || loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= tasks.len() {
+                if i >= pairs.len() {
                     break;
                 }
-                let task = &tasks[i];
-                let cfg = derive_cfg(base, &task.system, task.metric_id);
+                let (task, cfg) = &pairs[i];
                 let t0 = Instant::now();
-                if let Some(result) = registry::run_metric(task.metric_id, &cfg) {
+                if let Some(result) = registry::run_metric(task.metric_id, cfg) {
                     let timing = TaskTiming {
                         system: task.system.clone(),
                         metric_id: task.metric_id,
@@ -139,8 +161,8 @@ pub fn execute(base: &RunConfig, tasks: &[Task], jobs: usize) -> (Vec<MetricResu
             });
         }
     });
-    let mut results = Vec::with_capacity(tasks.len());
-    let mut timings = Vec::with_capacity(tasks.len());
+    let mut results = Vec::with_capacity(pairs.len());
+    let mut timings = Vec::with_capacity(pairs.len());
     for slot in slots {
         if let Some((result, timing)) = slot.into_inner().unwrap() {
             results.push(result);
@@ -202,6 +224,29 @@ mod tests {
         for (a, b) in r1.iter().zip(&r4) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.value.to_bits(), b.value.to_bits(), "{}", a.id);
+        }
+    }
+
+    #[test]
+    fn execute_prepared_honours_per_task_cfg() {
+        // Each task must run with exactly its own prepared config (not a
+        // shared base): results match direct `run_metric` calls with the
+        // same configs, bit for bit, at any job count.
+        let base = RunConfig::quick("hami");
+        let mut pairs: Vec<(Task, RunConfig)> = Vec::new();
+        for (i, id) in cheap_ids().into_iter().enumerate() {
+            let mut cfg = derive_cfg(&base, "hami", id);
+            cfg.tenants = 2 + i as u32; // vary more than the seed per task
+            cfg.seed = cfg.seed.wrapping_add(i as u64);
+            pairs.push((Task { system: "hami".into(), metric_id: id }, cfg));
+        }
+        let (r1, _) = execute_prepared(&pairs, 1);
+        let (r4, _) = execute_prepared(&pairs, 4);
+        assert_eq!(r1.len(), pairs.len());
+        for ((task, cfg), (a, b)) in pairs.iter().zip(r1.iter().zip(&r4)) {
+            let direct = registry::run_metric(task.metric_id, cfg).unwrap();
+            assert_eq!(a.value.to_bits(), direct.value.to_bits(), "{}", task.metric_id);
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "{}", task.metric_id);
         }
     }
 

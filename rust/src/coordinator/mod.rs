@@ -1,12 +1,15 @@
 //! Multi-tenant orchestration: the parallel sharded suite executor
-//! ([`executor`]), the suite runner ([`runner`]), workload generators
-//! ([`workload`]) and a thread-backed tenant harness ([`tenant`]) used by
-//! the examples to drive real concurrent load against the PJRT runtime.
+//! ([`executor`]), the suite runner ([`runner`]), the scenario-matrix
+//! sweep subsystem ([`sweep`]), workload generators ([`workload`]) and a
+//! thread-backed tenant harness ([`tenant`]) used by the examples to
+//! drive real concurrent load against the PJRT runtime.
 
 pub mod executor;
 pub mod runner;
+pub mod sweep;
 pub mod tenant;
 pub mod workload;
 
 pub use executor::{ExecutionStats, Task, TaskTiming};
 pub use runner::{SuiteResult, SuiteRunner};
+pub use sweep::{SweepCell, SweepSpec, SweepSurface};

@@ -1,0 +1,405 @@
+//! Scenario-matrix sweeps: the (systems × tenant counts × quota levels ×
+//! metrics) evaluation grid, executed as one flat task list through the
+//! parallel sharded executor.
+//!
+//! The single-point suite answers "how good is system S at the default
+//! operating point"; isolation and fragmentation behaviour only becomes
+//! visible when swept across tenant counts and partition sizes (MIGPerf,
+//! arXiv 2301.00407; fragmentation-aware scheduling, arXiv 2511.18906).
+//! A [`SweepSpec`] names the grid; [`run_sweep`] expands it:
+//!
+//! 1. Scenarios are the (tenants, quota) cross product, deduplicated, with
+//!    the **baseline cell** (1 tenant, 100 % quota) prepended if absent —
+//!    every system's cells report their score delta against it.
+//! 2. Every (system, scenario, metric) cell becomes one executor task with
+//!    a fully pre-derived [`RunConfig`]: quota maps onto `mem_limit` /
+//!    `sm_limit` (percent of the whole device granted to each tenant) and
+//!    the per-task seed is `task_seed(scenario_seed(run_seed, tenants,
+//!    quota), system, metric)` — a pure function of the cell coordinates,
+//!    so a sweep is **bit-identical at any `--jobs` count** (proven by
+//!    `rust/tests/sweep_determinism.rs`).
+//! 3. Results re-assemble into per-cell [`ScoreCard`]s against the
+//!    MIG-Ideal spec baseline, forming the [`SweepSurface`] that
+//!    `report::sweep` renders as JSON / CSV / TXT.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::metrics::{registry, taxonomy, Category, MetricResult, RunConfig};
+use crate::scoring::{Grade, ScoreCard};
+use crate::simgpu::GpuSpec;
+use crate::util::rng::scenario_seed;
+use crate::virt::ALL_SYSTEMS;
+
+use super::executor::{self, ExecutionStats, Task};
+
+/// Tenant count of the baseline cell every delta is computed against.
+pub const BASELINE_TENANTS: u32 = 1;
+/// Quota percent of the baseline cell every delta is computed against.
+pub const BASELINE_QUOTA_PCT: u32 = 100;
+
+/// A sweep specification: which systems to evaluate over which
+/// (tenant count × quota percent) scenario grid, optionally restricted to
+/// a set of metric categories.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Backend keys (`native` / `hami` / `fcsp` / `mig` / `timeslice`).
+    pub systems: Vec<String>,
+    /// Tenant counts to sweep (e.g. `1,2,4,8`).
+    pub tenants: Vec<u32>,
+    /// Per-tenant quota levels in percent of the whole device (memory and
+    /// SM alike); 100 % = unconstrained.
+    pub quotas: Vec<u32>,
+    /// Restrict to these metric categories (None = all 56 metrics).
+    pub categories: Option<Vec<Category>>,
+}
+
+impl SweepSpec {
+    /// The default grid: all Table-2 systems × tenants 1,2,4,8 × quotas
+    /// 25,50,100 %, over the full taxonomy.
+    pub fn default_grid() -> SweepSpec {
+        SweepSpec {
+            systems: ALL_SYSTEMS.iter().map(|s| s.to_string()).collect(),
+            tenants: vec![1, 2, 4, 8],
+            quotas: vec![25, 50, 100],
+            categories: None,
+        }
+    }
+
+    /// The deduplicated (tenants, quota) scenario list, baseline cell
+    /// first if it isn't already part of the grid.
+    pub fn scenarios(&self) -> Vec<(u32, u32)> {
+        let mut out: Vec<(u32, u32)> = Vec::new();
+        if !(self.tenants.contains(&BASELINE_TENANTS) && self.quotas.contains(&BASELINE_QUOTA_PCT))
+        {
+            out.push((BASELINE_TENANTS, BASELINE_QUOTA_PCT));
+        }
+        for &t in &self.tenants {
+            for &q in &self.quotas {
+                out.push((t, q));
+            }
+        }
+        let mut seen = HashSet::new();
+        out.retain(|s| seen.insert(*s));
+        out
+    }
+
+    /// Metric ids this spec evaluates, in global Table-8 order.
+    pub fn metric_ids(&self) -> Vec<&'static str> {
+        match &self.categories {
+            Some(cats) => registry::ids_for_categories(cats),
+            None => registry::all_ids(),
+        }
+    }
+}
+
+/// The per-cell config: `base` with the cell's system, tenant count and
+/// quota applied. Quota is the percent of the full device granted to each
+/// tenant, for memory quota and SM limit alike — so (1 tenant, 100 %) is
+/// the unconstrained baseline and (4 tenants, 25 %) reproduces the
+/// paper's default equal-share-of-four operating point. The seed becomes
+/// the scenario seed; the executor then derives per-metric task seeds
+/// from it.
+pub fn cell_cfg(base: &RunConfig, system: &str, tenants: u32, quota_pct: u32) -> RunConfig {
+    let dev_mem = GpuSpec::a100_40gb().hbm_bytes;
+    let mut cfg = base.clone();
+    cfg.system = system.to_string();
+    cfg.tenants = tenants;
+    cfg.mem_limit = dev_mem.saturating_mul(quota_pct as u64) / 100;
+    cfg.sm_limit = quota_pct as f64 / 100.0;
+    cfg.seed = scenario_seed(base.seed, tenants, quota_pct);
+    cfg
+}
+
+/// Whether a (system, tenants) combination can run at all. MIG-style
+/// hardware partitioning exposes [`crate::virt::mig::COMPUTE_SLICES`]
+/// compute slices on an A100, so such systems cannot host more concurrent
+/// tenants than slices; the sweep records those cells as infeasible
+/// instead of driving the backend into a registration failure.
+pub fn cell_feasible(system: &str, tenants: u32) -> bool {
+    match crate::virt::by_name(system) {
+        Some(layer) => {
+            !layer.hardware_isolated() || tenants <= crate::virt::mig::COMPUTE_SLICES
+        }
+        None => false,
+    }
+}
+
+/// One scored (system, tenants, quota) cell of the sweep surface.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub system: String,
+    pub tenants: u32,
+    pub quota_pct: u32,
+    /// Weighted overall score of this cell against the MIG-Ideal spec
+    /// baseline (same scoring as the single-point suite). NaN when the
+    /// cell is infeasible.
+    pub overall: f64,
+    /// Signed percent change of `overall` vs this system's baseline cell
+    /// (1 tenant, 100 % quota); negative = degraded under the scenario.
+    pub delta_vs_baseline_pct: f64,
+    /// Category → mean score, in `Category::ALL` order (only categories
+    /// the spec selected). Empty when the cell is infeasible.
+    pub per_category: Vec<(Category, f64)>,
+    pub grade: Grade,
+    /// True for the (1 tenant, 100 % quota) reference cell.
+    pub is_baseline: bool,
+    /// False when the system cannot host the scenario at all (e.g. more
+    /// tenants than MIG compute slices); such cells ran no metrics.
+    pub feasible: bool,
+}
+
+/// A completed sweep: all scored cells plus the run's execution timings.
+pub struct SweepSurface {
+    /// The run seed the scenario/task seeds were derived from.
+    pub seed: u64,
+    /// Metric ids evaluated in every cell, in Table-8 order.
+    pub metric_ids: Vec<&'static str>,
+    /// Cells in deterministic order: spec's system order, then scenario
+    /// order (baseline first when it was injected).
+    pub cells: Vec<SweepCell>,
+    /// Wall-clock + per-task timings of the whole flattened matrix.
+    pub stats: ExecutionStats,
+}
+
+impl SweepSurface {
+    /// The worst-degrading non-baseline cell (most negative delta) per
+    /// system, in the surface's system order.
+    pub fn worst_cells(&self) -> Vec<&SweepCell> {
+        let mut order: Vec<&str> = Vec::new();
+        let mut worst: HashMap<&str, &SweepCell> = HashMap::new();
+        for c in &self.cells {
+            if c.is_baseline || !c.feasible {
+                continue;
+            }
+            let key = c.system.as_str();
+            match worst.get(key).map(|prev| prev.delta_vs_baseline_pct) {
+                None => {
+                    order.push(key);
+                    worst.insert(key, c);
+                }
+                Some(prev_delta) => {
+                    if c.delta_vs_baseline_pct < prev_delta {
+                        worst.insert(key, c);
+                    }
+                }
+            }
+        }
+        order.iter().filter_map(|s| worst.get(s).copied()).collect()
+    }
+}
+
+/// Expand `spec` into a flat task list, execute it through the sharded
+/// executor on `jobs` workers (0 = available parallelism), and score each
+/// cell. `base` supplies iterations/warmup/seed; system, tenants, quota
+/// and per-task seeds are derived per cell.
+pub fn run_sweep(base: &RunConfig, spec: &SweepSpec, jobs: usize) -> SweepSurface {
+    let ids = spec.metric_ids();
+    let scenarios = spec.scenarios();
+
+    // One flat (task, prepared config) list over the whole matrix, in
+    // deterministic cell order.
+    let mut pairs: Vec<(Task, RunConfig)> = Vec::with_capacity(
+        spec.systems.len() * scenarios.len() * ids.len(),
+    );
+    for system in &spec.systems {
+        for &(tenants, quota) in &scenarios {
+            if !cell_feasible(system, tenants) {
+                continue; // recorded as an infeasible cell below
+            }
+            let cfg = cell_cfg(base, system, tenants, quota);
+            for &id in &ids {
+                pairs.push((
+                    Task { system: system.clone(), metric_id: id },
+                    executor::derive_cfg(&cfg, system, id),
+                ));
+            }
+        }
+    }
+    let (results, stats) = executor::execute_prepared(&pairs, jobs);
+
+    // Spec baseline (MIG-Ideal expected values), shared by every cell.
+    let spec_baseline: Vec<MetricResult> = ids
+        .iter()
+        .map(|&id| MetricResult::from_value(id, "mig-ideal-spec", taxonomy::mig_baseline(id)))
+        .collect();
+
+    // Re-group the flat results into cells (all ids are registry-known, so
+    // the executor returns exactly one result per task, in input order).
+    let per_cell = ids.len();
+    let mut cells: Vec<SweepCell> = Vec::with_capacity(spec.systems.len() * scenarios.len());
+    let mut offset = 0;
+    for system in &spec.systems {
+        let first_cell_of_system = cells.len();
+        for &(tenants, quota) in &scenarios {
+            let is_baseline = tenants == BASELINE_TENANTS && quota == BASELINE_QUOTA_PCT;
+            if !cell_feasible(system, tenants) {
+                cells.push(SweepCell {
+                    system: system.clone(),
+                    tenants,
+                    quota_pct: quota,
+                    overall: f64::NAN,
+                    delta_vs_baseline_pct: 0.0,
+                    per_category: Vec::new(),
+                    grade: Grade::F,
+                    is_baseline,
+                    feasible: false,
+                });
+                continue;
+            }
+            let cell_results = &results[offset..offset + per_cell];
+            offset += per_cell;
+            let card = ScoreCard::build(system, cell_results, &spec_baseline);
+            let per_category: Vec<(Category, f64)> = Category::ALL
+                .iter()
+                .filter_map(|c| card.per_category.get(c).map(|s| (*c, *s)))
+                .collect();
+            cells.push(SweepCell {
+                system: system.clone(),
+                tenants,
+                quota_pct: quota,
+                overall: card.overall,
+                delta_vs_baseline_pct: 0.0,
+                per_category,
+                grade: card.grade(),
+                is_baseline,
+                feasible: true,
+            });
+        }
+        // Deltas vs this system's baseline cell (always present and
+        // feasible — it has 1 tenant — whether in-grid or injected).
+        let base_overall = cells[first_cell_of_system..]
+            .iter()
+            .find(|c| c.is_baseline)
+            .map(|c| c.overall)
+            .unwrap_or(f64::NAN);
+        for c in &mut cells[first_cell_of_system..] {
+            c.delta_vs_baseline_pct = if base_overall.abs() < 1e-12
+                || !base_overall.is_finite()
+                || !c.overall.is_finite()
+            {
+                0.0
+            } else {
+                (c.overall - base_overall) / base_overall * 100.0
+            };
+        }
+    }
+
+    SweepSurface { seed: base.seed, metric_ids: ids, cells, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec {
+            systems: vec!["native".into(), "hami".into()],
+            tenants: vec![2, 4],
+            quotas: vec![50],
+            categories: Some(vec![Category::Pcie]),
+        }
+    }
+
+    #[test]
+    fn scenarios_inject_baseline_and_dedupe() {
+        let s = small_spec();
+        assert_eq!(s.scenarios(), vec![(1, 100), (2, 50), (4, 50)]);
+        // Grid already containing the baseline cell: not injected twice.
+        let full = SweepSpec {
+            tenants: vec![1, 2],
+            quotas: vec![100, 100],
+            ..small_spec()
+        };
+        assert_eq!(full.scenarios(), vec![(1, 100), (2, 100)]);
+    }
+
+    #[test]
+    fn cell_cfg_maps_quota_and_seed() {
+        let base = RunConfig::quick("native");
+        let cfg = cell_cfg(&base, "hami", 4, 25);
+        assert_eq!(cfg.system, "hami");
+        assert_eq!(cfg.tenants, 4);
+        assert_eq!(cfg.mem_limit, 10 << 30); // 25 % of an A100-40GB
+        assert!((cfg.sm_limit - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.seed, scenario_seed(base.seed, 4, 25));
+        assert_eq!(cfg.iterations, base.iterations);
+        // The unconstrained baseline cell grants the whole device.
+        let b = cell_cfg(&base, "hami", 1, 100);
+        assert_eq!(b.mem_limit, 40u64 << 30);
+        assert!((b.sm_limit - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweep_shapes_and_baseline_deltas() {
+        let base = RunConfig::quick("native");
+        let surface = run_sweep(&base, &small_spec(), 2);
+        // 2 systems × 3 scenarios (baseline injected) × 4 PCIe metrics.
+        assert_eq!(surface.metric_ids.len(), 4);
+        assert_eq!(surface.cells.len(), 6);
+        assert_eq!(surface.stats.tasks.len(), 24);
+        for c in &surface.cells {
+            assert!(c.feasible);
+            assert!(c.overall.is_finite(), "{}/{}t/{}%", c.system, c.tenants, c.quota_pct);
+            assert!(!c.per_category.is_empty());
+        }
+        // First cell per system is the injected baseline with delta 0.
+        for sys_block in surface.cells.chunks(3) {
+            assert!(sys_block[0].is_baseline);
+            assert_eq!(sys_block[0].tenants, 1);
+            assert_eq!(sys_block[0].quota_pct, 100);
+            assert_eq!(sys_block[0].delta_vs_baseline_pct, 0.0);
+        }
+    }
+
+    #[test]
+    fn worst_cells_one_per_system() {
+        let base = RunConfig::quick("native");
+        let surface = run_sweep(&base, &small_spec(), 0);
+        let worst = surface.worst_cells();
+        assert_eq!(worst.len(), 2);
+        assert_eq!(worst[0].system, "native");
+        assert_eq!(worst[1].system, "hami");
+        for w in worst {
+            assert!(!w.is_baseline);
+        }
+    }
+
+    #[test]
+    fn default_grid_is_full_matrix() {
+        let g = SweepSpec::default_grid();
+        assert_eq!(g.systems.len(), 4);
+        assert_eq!(g.scenarios().len(), 12); // 4×3, baseline in-grid
+        assert_eq!(g.metric_ids().len(), 56);
+    }
+
+    #[test]
+    fn mig_over_slice_count_is_infeasible_not_a_panic() {
+        // MIG exposes 7 compute slices; an 8-tenant cell cannot register
+        // and must surface as `feasible: false` instead of driving the
+        // backend into a context-creation failure.
+        assert!(cell_feasible("mig", 7));
+        assert!(!cell_feasible("mig", 8));
+        assert!(cell_feasible("hami", 64));
+        assert!(!cell_feasible("nope", 1));
+        let spec = SweepSpec {
+            systems: vec!["mig".into()],
+            tenants: vec![8],
+            quotas: vec![50],
+            categories: Some(vec![Category::Pcie]),
+        };
+        let surface = run_sweep(&RunConfig::quick("native"), &spec, 2);
+        // Injected (1,100) baseline + the infeasible (8,50) cell.
+        assert_eq!(surface.cells.len(), 2);
+        assert!(surface.cells[0].is_baseline && surface.cells[0].feasible);
+        assert!(surface.cells[0].overall.is_finite());
+        let infeasible = &surface.cells[1];
+        assert!(!infeasible.feasible);
+        assert!(infeasible.overall.is_nan());
+        assert_eq!(infeasible.delta_vs_baseline_pct, 0.0);
+        assert!(infeasible.per_category.is_empty());
+        // Only the baseline cell's metrics actually ran.
+        assert_eq!(surface.stats.tasks.len(), 4);
+        // And it never shows up as a worst-degrading cell.
+        assert!(surface.worst_cells().is_empty());
+    }
+}

@@ -21,9 +21,12 @@
 //! - [`stats`], [`scoring`], [`report`] — statistical reduction, MIG-parity
 //!   scoring / grading, and JSON/CSV/TXT report generation.
 //! - [`coordinator`] — multi-tenant orchestration (thread-backed tenants,
-//!   workload generators, the suite runner) and the **parallel sharded
+//!   workload generators, the suite runner), the **parallel sharded
 //!   executor** ([`coordinator::executor`]) that runs the (system × metric)
-//!   task matrix across a `--jobs N` worker pool.
+//!   task matrix across a `--jobs N` worker pool, and the
+//!   **scenario-matrix sweep subsystem** ([`coordinator::sweep`]) that
+//!   expands (systems × tenant counts × quota levels × metrics) grids into
+//!   flat executor task lists.
 //! - [`runtime`] — PJRT wrapper that loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and executes them from the Rust request path (used by the
 //!   LLM metric category and the examples).
@@ -47,6 +50,23 @@
 //! bit-for-bit. Wall-clock and per-task timings are recorded in
 //! [`coordinator::executor::ExecutionStats`] and surfaced by the JSON/CSV
 //! reporters.
+//!
+//! ## Scenario sweeps and the CI regression gate
+//!
+//! `gvbench sweep` evaluates multi-tenant operating points instead of the
+//! single default configuration: [`coordinator::sweep`] expands a
+//! [`coordinator::sweep::SweepSpec`] into one flat task list (each cell's
+//! per-tenant quota maps onto memory/SM limits; its seed derives as
+//! `task_seed(scenario_seed(run_seed, tenants, quota), system, metric)`),
+//! executes it via [`coordinator::executor::execute_prepared`], and scores
+//! every cell against the MIG-Ideal spec baseline. [`report::sweep`]
+//! renders the resulting surface — per-cell overall/category scores and
+//! the delta vs the (1 tenant, 100 % quota) baseline cell — as CSV, JSON
+//! or a TXT summary of the worst-degrading cells per system.
+//! `rust/tests/sweep_determinism.rs` proves sweeps bit-identical at any
+//! job count. `gvbench regress` consumes the (possibly multi-system) CSV
+//! a run writes and re-checks it sharded through the executor; CI wires
+//! this into a blocking regression gate (see `ci/README.md`).
 
 pub mod anyhow;
 pub mod benchkit;

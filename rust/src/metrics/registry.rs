@@ -104,8 +104,19 @@ pub fn run_category(category: Category, cfg: &RunConfig) -> Vec<MetricResult> {
 
 /// Run the full 56-metric suite (parallel, sharded).
 pub fn run_all(cfg: &RunConfig) -> Vec<MetricResult> {
-    let ids: Vec<&'static str> = REGISTRY.iter().map(|(id, _)| *id).collect();
-    run_ids(&ids, cfg)
+    run_ids(&all_ids(), cfg)
+}
+
+/// All metric ids, in Table 8 order.
+pub fn all_ids() -> Vec<&'static str> {
+    REGISTRY.iter().map(|(id, _)| *id).collect()
+}
+
+/// Metric ids belonging to any of `cats`, in global Table-8 order
+/// (not grouped by the order of `cats`) — so restricted runs and the
+/// scenario sweep report metrics in the same order as full runs.
+pub fn ids_for_categories(cats: &[Category]) -> Vec<&'static str> {
+    taxonomy::ALL.iter().filter(|d| cats.contains(&d.category)).map(|d| d.id).collect()
 }
 
 #[cfg(test)]
@@ -133,5 +144,15 @@ mod tests {
         let cfg = RunConfig::quick("native");
         assert_eq!(run_category(Category::Fragmentation, &cfg).len(), 3);
         assert_eq!(run_category(Category::Pcie, &cfg).len(), 4);
+    }
+
+    #[test]
+    fn id_list_helpers() {
+        assert_eq!(all_ids().len(), 56);
+        assert_eq!(all_ids()[0], "OH-001");
+        let ids = ids_for_categories(&[Category::Pcie, Category::MemoryBandwidth]);
+        // Global Table-8 order: BW before PCIE regardless of argument order.
+        assert_eq!(ids, vec!["BW-001", "BW-002", "BW-003", "BW-004", "PCIE-001", "PCIE-002", "PCIE-003", "PCIE-004"]);
+        assert!(ids_for_categories(&[]).is_empty());
     }
 }

@@ -7,6 +7,7 @@
 
 pub mod csv;
 pub mod json;
+pub mod sweep;
 pub mod txt;
 
 use crate::coordinator::executor::ExecutionStats;

@@ -1,0 +1,265 @@
+//! Sweep-surface reporting: the aggregated (system × tenants × quota)
+//! score table from `coordinator::sweep`, rendered as JSON, CSV or a TXT
+//! summary that highlights the worst-degrading cells per system.
+//!
+//! The CSV is the canonical "sweep surface" — one row per cell, no host
+//! timings — so identical sweeps render byte-identical CSV at any job
+//! count (`rust/tests/sweep_determinism.rs`). The JSON adds the
+//! `execution` timing object as metadata.
+
+use crate::coordinator::sweep::{SweepCell, SweepSurface};
+use crate::metrics::Category;
+
+use super::json::{array, render_execution, Obj};
+use super::Format;
+
+/// Render the surface in the requested format.
+pub fn render(surface: &SweepSurface, format: Format) -> String {
+    match format {
+        Format::Json => render_json(surface),
+        Format::Csv => render_csv(surface),
+        Format::Txt => render_txt(surface),
+    }
+}
+
+/// Categories that appear in at least one cell, in `Category::ALL` order —
+/// the per-category column set of the CSV/TXT tables.
+fn category_columns(surface: &SweepSurface) -> Vec<Category> {
+    Category::ALL
+        .iter()
+        .copied()
+        .filter(|c| {
+            surface.cells.iter().any(|cell| cell.per_category.iter().any(|(cc, _)| cc == c))
+        })
+        .collect()
+}
+
+fn category_score(cell: &SweepCell, cat: Category) -> Option<f64> {
+    cell.per_category.iter().find(|(c, _)| *c == cat).map(|(_, s)| *s)
+}
+
+/// One row per cell; stable column order for analysis tools and regress
+/// baselines.
+pub fn render_csv(surface: &SweepSurface) -> String {
+    let cats = category_columns(surface);
+    let mut out = String::from(
+        "system,tenants,quota_pct,is_baseline,feasible,overall_score,delta_vs_baseline_pct,grade",
+    );
+    for c in &cats {
+        out.push_str(&format!(",score_{}", c.key()));
+    }
+    out.push('\n');
+    for cell in &surface.cells {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.6},{:.3},{}",
+            cell.system,
+            cell.tenants,
+            cell.quota_pct,
+            cell.is_baseline,
+            cell.feasible,
+            cell.overall,
+            cell.delta_vs_baseline_pct,
+            if cell.feasible { cell.grade.letter() } else { "-" }
+        ));
+        for &c in &cats {
+            match category_score(cell, c) {
+                Some(v) => out.push_str(&format!(",{:.6}", v)),
+                None => out.push(','),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// The full surface plus executor timings, in the Listing-7 JSON style.
+pub fn render_json(surface: &SweepSurface) -> String {
+    let cells: Vec<String> = surface
+        .cells
+        .iter()
+        .map(|c| {
+            let cats: Vec<String> = c
+                .per_category
+                .iter()
+                .map(|(cat, score)| {
+                    Obj::new().str("category", cat.key()).num("score", *score).build()
+                })
+                .collect();
+            cell_obj(c).field("categories", array(cats)).build()
+        })
+        .collect();
+    let worst: Vec<String> =
+        surface.worst_cells().iter().map(|c| cell_obj(c).build()).collect();
+    let ids: Vec<String> =
+        surface.metric_ids.iter().map(|id| super::json::quote(id)).collect();
+    Obj::new()
+        .str("benchmark_version", crate::VERSION)
+        .field("seed", surface.seed.to_string())
+        .field("metric_ids", array(ids))
+        .field("cells", array(cells))
+        .field("worst_degrading", array(worst))
+        .field("execution", render_execution(&surface.stats))
+        .build()
+}
+
+fn cell_obj(c: &SweepCell) -> Obj {
+    Obj::new()
+        .str("system", &c.system)
+        .field("tenants", c.tenants.to_string())
+        .field("quota_pct", c.quota_pct.to_string())
+        .bool("is_baseline", c.is_baseline)
+        .bool("feasible", c.feasible)
+        .num("overall_score", c.overall) // NaN renders as null when infeasible
+        .num("delta_vs_baseline_pct", c.delta_vs_baseline_pct)
+        .str("grade", if c.feasible { c.grade.letter() } else { "-" })
+}
+
+/// Human-readable summary: the cell table plus the worst-degrading cells
+/// per system.
+pub fn render_txt(surface: &SweepSurface) -> String {
+    let mut out = String::new();
+    out.push_str("GPU-Virt-Bench — scenario sweep surface\n");
+    out.push_str(&format!(
+        "  seed {}, {} metrics per cell, {} cells\n\n",
+        surface.seed,
+        surface.metric_ids.len(),
+        surface.cells.len()
+    ));
+    out.push_str(&format!(
+        "{:<12} {:>7} {:>7} {:>9} {:>15} {:>6}\n",
+        "System", "Tenants", "Quota%", "Overall%", "Δ vs baseline", "Grade"
+    ));
+    out.push_str(&format!("{}\n", "-".repeat(62)));
+    for c in &surface.cells {
+        let marker = if c.is_baseline { "*" } else { "" };
+        if !c.feasible {
+            out.push_str(&format!(
+                "{:<12} {:>7} {:>7} {:>9} {:>15} {:>6}\n",
+                format!("{}{}", c.system, marker),
+                c.tenants,
+                c.quota_pct,
+                "n/a",
+                "infeasible",
+                "-"
+            ));
+            continue;
+        }
+        out.push_str(&format!(
+            "{:<12} {:>7} {:>7} {:>9.1} {:>14.1}% {:>6}\n",
+            format!("{}{}", c.system, marker),
+            c.tenants,
+            c.quota_pct,
+            c.overall * 100.0,
+            c.delta_vs_baseline_pct,
+            c.grade.letter()
+        ));
+    }
+    out.push_str("  (* = baseline cell: 1 tenant, 100% quota)\n\n");
+    out.push_str("Worst-degrading cells per system:\n");
+    let worst = surface.worst_cells();
+    if worst.is_empty() {
+        out.push_str("  (no non-baseline cells)\n");
+    }
+    for c in worst {
+        out.push_str(&format!(
+            "  {:<10} {} tenants @ {:>3}% quota — overall {:.1}% ({:+.1}% vs baseline)\n",
+            c.system, c.tenants, c.quota_pct, c.overall * 100.0, c.delta_vs_baseline_pct
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::ExecutionStats;
+    use crate::scoring::Grade;
+
+    fn cell(system: &str, tenants: u32, quota: u32, overall: f64, delta: f64) -> SweepCell {
+        SweepCell {
+            system: system.to_string(),
+            tenants,
+            quota_pct: quota,
+            overall,
+            delta_vs_baseline_pct: delta,
+            per_category: vec![(Category::Pcie, overall)],
+            grade: Grade::from_score(overall),
+            is_baseline: tenants == 1 && quota == 100,
+            feasible: true,
+        }
+    }
+
+    fn surface() -> SweepSurface {
+        SweepSurface {
+            seed: 42,
+            metric_ids: vec!["PCIE-001", "PCIE-004"],
+            cells: vec![
+                cell("hami", 1, 100, 0.80, 0.0),
+                cell("hami", 4, 25, 0.60, -25.0),
+                cell("hami", 8, 25, 0.56, -30.0),
+            ],
+            stats: ExecutionStats::default(),
+        }
+    }
+
+    #[test]
+    fn csv_rows_and_columns() {
+        let s = surface();
+        let csv = render_csv(&s);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(
+            lines[0],
+            "system,tenants,quota_pct,is_baseline,feasible,overall_score,delta_vs_baseline_pct,grade,score_pcie"
+        );
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1], "hami,1,100,true,true,0.800000,0.000,B,0.800000");
+        assert_eq!(lines[2], "hami,4,25,false,true,0.600000,-25.000,D,0.600000");
+    }
+
+    #[test]
+    fn infeasible_cells_render_as_such() {
+        let mut s = surface();
+        s.cells.push(SweepCell {
+            system: "mig".to_string(),
+            tenants: 8,
+            quota_pct: 25,
+            overall: f64::NAN,
+            delta_vs_baseline_pct: 0.0,
+            per_category: Vec::new(),
+            grade: Grade::F,
+            is_baseline: false,
+            feasible: false,
+        });
+        let csv = render_csv(&s);
+        assert!(csv.contains("mig,8,25,false,false,NaN,0.000,-,"));
+        let j = render_json(&s);
+        assert!(j.contains("\"feasible\": false"));
+        assert!(j.contains("\"overall_score\": null"));
+        let t = render_txt(&s);
+        assert!(t.contains("infeasible"));
+    }
+
+    #[test]
+    fn json_contains_cells_and_worst() {
+        let s = surface();
+        let j = render_json(&s);
+        assert!(j.contains("\"cells\""));
+        assert!(j.contains("\"worst_degrading\""));
+        assert!(j.contains("\"quota_pct\": 25"));
+        assert!(j.contains("\"execution\""));
+        // The worst hami cell is the 8-tenant one.
+        let worst_idx = j.find("worst_degrading").unwrap();
+        assert!(j[worst_idx..].contains("\"tenants\": 8"));
+        assert!(!j[worst_idx..].contains("\"tenants\": 4"));
+    }
+
+    #[test]
+    fn txt_highlights_worst_cells() {
+        let s = surface();
+        let t = render_txt(&s);
+        assert!(t.contains("scenario sweep surface"));
+        assert!(t.contains("Worst-degrading cells per system:"));
+        assert!(t.contains("8 tenants"));
+        assert!(t.contains("baseline cell"));
+    }
+}

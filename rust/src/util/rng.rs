@@ -35,6 +35,34 @@ pub fn task_seed(seed: u64, system: &str, metric_id: &str) -> u64 {
     splitmix64(&mut state)
 }
 
+/// Derive the scenario-level seed for one sweep cell's (tenant count,
+/// quota percent) coordinates. The sweep subsystem composes this with
+/// [`task_seed`] — the per-task seed of a sweep cell is
+/// `task_seed(scenario_seed(run_seed, tenants, quota_pct), system,
+/// metric_id)` — so every cell of a (systems × tenants × quotas × metrics)
+/// matrix is a pure function of the run seed and its coordinates, and a
+/// sweep is bit-identical at any `--jobs` count.
+///
+/// Construction mirrors [`task_seed`]: FNV-1a over the two fixed-width
+/// little-endian coordinate encodings (fixed widths make aliasing
+/// impossible; the 0xFF separator is belt-and-braces), folded into the run
+/// seed and finalized with one SplitMix64 step. `prop_invariants` checks
+/// the composed seeds stay collision-free across the full expanded matrix.
+pub fn scenario_seed(seed: u64, tenants: u32, quota_pct: u32) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325; // FNV-1a offset basis
+    for b in tenants
+        .to_le_bytes()
+        .into_iter()
+        .chain(std::iter::once(0xFFu8))
+        .chain(quota_pct.to_le_bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3); // FNV-1a prime
+    }
+    let mut state = seed.wrapping_add(h);
+    splitmix64(&mut state)
+}
+
 /// xoshiro256** — fast, high-quality, 256-bit state PRNG.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -242,6 +270,27 @@ mod tests {
         assert_ne!(task_seed(42, "hami", "OH-001"), task_seed(42, "hami", "OH-002"));
         // Separator prevents concatenation aliasing.
         assert_ne!(task_seed(42, "ab", "c"), task_seed(42, "a", "bc"));
+    }
+
+    #[test]
+    fn scenario_seed_pure_and_sensitive() {
+        // Stable across calls.
+        assert_eq!(scenario_seed(42, 4, 50), scenario_seed(42, 4, 50));
+        // Sensitive to every coordinate.
+        assert_ne!(scenario_seed(42, 4, 50), scenario_seed(43, 4, 50));
+        assert_ne!(scenario_seed(42, 4, 50), scenario_seed(42, 8, 50));
+        assert_ne!(scenario_seed(42, 4, 50), scenario_seed(42, 4, 100));
+        // Coordinates don't alias across the field boundary.
+        assert_ne!(scenario_seed(42, 1, 100), scenario_seed(42, 100, 1));
+    }
+
+    #[test]
+    fn scenario_and_task_seed_compose_distinctly() {
+        // The composed per-task sweep seed distinguishes scenarios that
+        // share (system, metric) coordinates.
+        let a = task_seed(scenario_seed(42, 1, 100), "hami", "OH-001");
+        let b = task_seed(scenario_seed(42, 4, 25), "hami", "OH-001");
+        assert_ne!(a, b);
     }
 
     #[test]
