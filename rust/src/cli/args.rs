@@ -18,7 +18,7 @@ USAGE:
   gvbench list [--full | --systems | --categories]
   gvbench compare [--quick] [--jobs N]  # Table 7: overall scores, all systems
   gvbench regress --baseline <csv> [--system S] [--threshold PCT] [--quick]
-              [--jobs N]
+              [--jobs N] [--report-json <file>] [--report-md <file>]
   gvbench help
 
 EXAMPLES:
@@ -36,10 +36,16 @@ tenant gets (memory + SM). Defaults: all systems, tenants 1,2,4,8, quota
 baseline cell. A config file `[sweep]` section (tenants/quota/systems/
 categories keys) sets the grid; CLI flags override it.
 
-Regression gate: `regress` re-runs every metric in the baseline CSV (all
+Regression gate: `regress` re-runs every cell in the baseline CSV (all
 systems in the file, or just --system S) sharded across --jobs workers,
 and exits 1 if any metric moved against its direction by more than
---threshold percent.
+--threshold percent. The baseline schema is auto-detected: a `gvbench
+run --format csv` table re-runs at this invocation's operating point,
+while a `gvbench sweep --format csv` surface re-runs every
+(system, tenants, quota) cell with the sweep's own quota mapping and
+seed derivation (`feasible=false` cells are skipped). --report-json and
+--report-md write machine-readable reports (per-cell deltas / a
+GitHub-flavored summary of the worst regressions per system).
 
 Parallelism: --jobs N shards the task matrix across N worker threads
 (0 or unset = all cores). Same --seed => bit-identical numbers at any job
@@ -81,6 +87,10 @@ pub struct Args {
     pub list_categories: bool,
     pub baseline: Option<String>,
     pub threshold: f64,
+    /// `regress`: write the JSON regression report here.
+    pub report_json: Option<String>,
+    /// `regress`: write the markdown regression summary here.
+    pub report_md: Option<String>,
     /// Sweep grid: tenant counts (`--tenants 1,2,4` under `sweep`).
     pub sweep_tenants: Option<Vec<u32>>,
     /// Sweep grid: per-tenant quota percents (`--quota 25,50,100`).
@@ -112,6 +122,8 @@ impl Default for Args {
             list_categories: false,
             baseline: None,
             threshold: 10.0,
+            report_json: None,
+            report_md: None,
             sweep_tenants: None,
             sweep_quotas: None,
             sweep_categories: None,
@@ -241,6 +253,18 @@ impl Args {
                 "--format" => args.format = next_value(&mut it, flag)?,
                 "--out" => args.out = Some(next_value(&mut it, flag)?),
                 "--baseline" => args.baseline = Some(next_value(&mut it, flag)?),
+                "--report-json" => {
+                    if args.command != Command::Regress {
+                        return Err(err("--report-json is only valid for `gvbench regress`"));
+                    }
+                    args.report_json = Some(next_value(&mut it, flag)?);
+                }
+                "--report-md" => {
+                    if args.command != Command::Regress {
+                        return Err(err("--report-md is only valid for `gvbench regress`"));
+                    }
+                    args.report_md = Some(next_value(&mut it, flag)?);
+                }
                 "--threshold" => {
                     args.threshold = next_value(&mut it, flag)?
                         .parse()
@@ -398,6 +422,19 @@ mod tests {
         assert_eq!(a.command, Command::Regress);
         assert_eq!(a.baseline.as_deref(), Some("b.csv"));
         assert_eq!(a.threshold, 5.0);
+        assert_eq!(a.report_json, None);
+        assert_eq!(a.report_md, None);
+    }
+
+    #[test]
+    fn regress_report_flags() {
+        let a = parse("regress --baseline b.csv --report-json r.json --report-md r.md").unwrap();
+        assert_eq!(a.report_json.as_deref(), Some("r.json"));
+        assert_eq!(a.report_md.as_deref(), Some("r.md"));
+        // Report flags belong to regress only.
+        assert!(parse("run --system hami --report-json r.json").is_err());
+        assert!(parse("sweep --report-md r.md").is_err());
+        assert!(parse("regress --baseline b.csv --report-json").is_err());
     }
 
     #[test]

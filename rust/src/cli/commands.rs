@@ -29,38 +29,63 @@ pub fn dispatch(args: &Args) -> Result<()> {
 fn cmd_regress(args: &Args) -> Result<()> {
     let path = args.baseline.as_ref().expect("validated");
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    let mut baseline = super::regress::parse_baseline_csv(&text, &args.system)?;
+    let mut baseline = crate::regress::parse_baseline_csv(&text, &args.system)?;
     if args.system_set {
         // Explicit --system restricts a multi-system baseline to one row set.
-        baseline.retain(|r| r.system == args.system);
-        if baseline.is_empty() {
+        baseline.rows.retain(|r| r.system == args.system);
+        baseline.infeasible.retain(|(s, _, _)| s == &args.system);
+        if baseline.rows.is_empty() {
             bail!("baseline {path} has no rows for system `{}`", args.system);
         }
     }
     let cfg = build_config(args)?;
     let systems: std::collections::BTreeSet<&str> =
-        baseline.iter().map(|r| r.system.as_str()).collect();
+        baseline.rows.iter().map(|r| r.system.as_str()).collect();
     println!(
-        "Regression check: systems=[{}], {} baseline metrics, threshold {:.1}%, jobs={}",
+        "Regression check: {} baseline, systems=[{}], {} cells, threshold {:.1}%, jobs={}",
+        baseline.schema.key(),
         systems.into_iter().collect::<Vec<_>>().join(","),
-        baseline.len(),
+        baseline.rows.len(),
         args.threshold,
         crate::coordinator::executor::resolve_jobs(cfg.jobs),
     );
-    let (regressions, checked) = super::regress::run_regression(&cfg, &baseline, args.threshold)?;
+    let outcome = crate::regress::run_regression(&cfg, &baseline, args.threshold)?;
+    // Reports are written before the pass/fail verdict so CI can publish
+    // them from failed gate runs.
+    if let Some(p) = &args.report_json {
+        std::fs::write(p, crate::regress::render_json(&outcome, path))
+            .with_context(|| format!("writing {p}"))?;
+        eprintln!("wrote {p}");
+    }
+    if let Some(p) = &args.report_md {
+        std::fs::write(p, crate::regress::render_markdown(&outcome, path))
+            .with_context(|| format!("writing {p}"))?;
+        eprintln!("wrote {p}");
+    }
+    if outcome.skipped_infeasible > 0 {
+        println!("  ({} infeasible cell(s) skipped)", outcome.skipped_infeasible);
+    }
+    let regressions = outcome.regressions();
     if regressions.is_empty() {
-        println!("OK — {checked} metrics within threshold.");
+        println!("OK — {} cells within threshold.", outcome.checked());
         return Ok(());
     }
-    println!("{} regressions / {checked} metrics:", regressions.len());
+    println!("{} regressions / {} cells:", regressions.len(), outcome.checked());
     for r in &regressions {
         let d = taxonomy::by_id(&r.id).unwrap();
         println!(
-            "  {:<10} {:<10} {:<32} {:.3} -> {:.3} {}  ({:+.1}% worse)",
-            r.system, r.id, d.name, r.baseline, r.current, d.unit, r.regression_percent
+            "  {:<10} {:<9} {:<10} {:<32} {:.3} -> {:.3} {}  ({:+.1}% worse)",
+            r.system,
+            r.cell_label(),
+            r.id,
+            d.name,
+            r.baseline,
+            r.current,
+            d.unit,
+            r.worse_percent
         );
     }
-    bail!("{} metric(s) regressed beyond {:.1}%", regressions.len(), args.threshold)
+    bail!("{} cell(s) regressed beyond {:.1}%", regressions.len(), args.threshold)
 }
 
 /// Load `--config <file>` if one was given.
@@ -365,11 +390,14 @@ mod tests {
         dispatch(&a).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert!(lines[0].starts_with("system,tenants,quota_pct"));
-        assert!(lines[0].ends_with("score_pcie"));
-        assert_eq!(lines.len(), 3); // header + (1,100) baseline + (2,100)
-        assert!(lines[1].starts_with("native,1,100,true,"));
-        assert!(lines[2].starts_with("native,2,100,false,"));
+        assert_eq!(lines[0], crate::report::sweep::CSV_HEADER);
+        // Long format: header + 2 cells × 4 PCIe metrics.
+        assert_eq!(lines.len(), 9);
+        assert!(lines[1].starts_with("native,1,100,true,true,PCIE-"));
+        assert!(lines[5].starts_with("native,2,100,false,true,PCIE-"));
+        // The written surface is directly consumable as a regress baseline.
+        let b = crate::regress::parse_baseline_csv(&text, "native").unwrap();
+        assert_eq!(b.rows.len(), 8);
         std::fs::remove_file(&path).ok();
     }
 
@@ -390,10 +418,42 @@ mod tests {
         // i.e. directly usable as a multi-system regress baseline.
         assert_eq!(text.lines().filter(|l| l.starts_with("id,")).count(), 1);
         assert_eq!(text.lines().count(), 5);
-        let rows = super::super::regress::parse_baseline_csv(&text, "native").unwrap();
-        assert_eq!(rows.len(), 4);
+        let b = crate::regress::parse_baseline_csv(&text, "native").unwrap();
+        assert_eq!(b.schema, crate::regress::BaselineSchema::Point);
+        assert_eq!(b.rows.len(), 4);
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(format!("{path_str}.timings.csv")).ok();
+    }
+
+    #[test]
+    fn regress_cmd_writes_reports_and_passes_on_own_baseline() {
+        use crate::coordinator::executor;
+        // Produce a tiny point baseline the same way `gvbench run` derives
+        // its values, then regress against it with report outputs.
+        let cfg = RunConfig::quick("native");
+        let tasks = vec![executor::Task { system: "native".into(), metric_id: "OH-009" }];
+        let (results, _) = executor::execute(&cfg, &tasks, 1);
+        let csv = format!("id,system,value\nOH-009,native,{:.6}\n", results[0].value);
+        let dir = std::env::temp_dir();
+        let bpath = dir.join("gvb_test_regress_baseline.csv");
+        let jpath = dir.join("gvb_test_regress_report.json");
+        let mpath = dir.join("gvb_test_regress_report.md");
+        std::fs::write(&bpath, csv).unwrap();
+        let mut a = Args::default();
+        a.command = Command::Regress;
+        a.quick = true;
+        a.baseline = Some(bpath.to_str().unwrap().to_string());
+        a.report_json = Some(jpath.to_str().unwrap().to_string());
+        a.report_md = Some(mpath.to_str().unwrap().to_string());
+        dispatch(&a).unwrap();
+        let j = std::fs::read_to_string(&jpath).unwrap();
+        assert!(j.contains("\"passed\": true"), "{j}");
+        assert!(j.contains("\"schema\": \"point\""), "{j}");
+        let m = std::fs::read_to_string(&mpath).unwrap();
+        assert!(m.contains("PASS"), "{m}");
+        for p in [&bpath, &jpath, &mpath] {
+            std::fs::remove_file(p).ok();
+        }
     }
 
     #[test]

@@ -4,7 +4,6 @@
 
 pub mod args;
 pub mod commands;
-pub mod regress;
 
 pub use args::{Args, ParseError};
 

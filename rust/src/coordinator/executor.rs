@@ -133,6 +133,20 @@ pub fn execute_prepared(
     pairs: &[(Task, RunConfig)],
     jobs: usize,
 ) -> (Vec<MetricResult>, ExecutionStats) {
+    let (slots, stats) = execute_prepared_indexed(pairs, jobs);
+    (slots.into_iter().flatten().collect(), stats)
+}
+
+/// Like [`execute_prepared`], but results stay **aligned with input
+/// indices**: slot `i` is `Some(result)` for `pairs[i]`, or `None` when
+/// its metric id is unknown to the registry. Callers that must pair every
+/// result back with its originating row (e.g. the regression engine
+/// zipping re-runs against baseline rows) use this instead of relying on
+/// length equality of the filtered result list.
+pub fn execute_prepared_indexed(
+    pairs: &[(Task, RunConfig)],
+    jobs: usize,
+) -> (Vec<Option<MetricResult>>, ExecutionStats) {
     let jobs = resolve_jobs(jobs).min(pairs.len().max(1));
     let t_start = Instant::now();
     let cursor = AtomicUsize::new(0);
@@ -161,12 +175,15 @@ pub fn execute_prepared(
             });
         }
     });
-    let mut results = Vec::with_capacity(pairs.len());
+    let mut results: Vec<Option<MetricResult>> = Vec::with_capacity(pairs.len());
     let mut timings = Vec::with_capacity(pairs.len());
     for slot in slots {
-        if let Some((result, timing)) = slot.into_inner().unwrap() {
-            results.push(result);
-            timings.push(timing);
+        match slot.into_inner().unwrap() {
+            Some((result, timing)) => {
+                results.push(Some(result));
+                timings.push(timing);
+            }
+            None => results.push(None),
         }
     }
     let stats =
@@ -248,6 +265,25 @@ mod tests {
             assert_eq!(a.value.to_bits(), direct.value.to_bits(), "{}", task.metric_id);
             assert_eq!(a.value.to_bits(), b.value.to_bits(), "{}", task.metric_id);
         }
+    }
+
+    #[test]
+    fn indexed_results_keep_slots_for_unknown_ids() {
+        let base = RunConfig::quick("native");
+        let pairs: Vec<(Task, RunConfig)> = vec![
+            ("OH-009", derive_cfg(&base, "native", "OH-009")),
+            ("NOPE-1", derive_cfg(&base, "native", "NOPE-1")),
+            ("PCIE-004", derive_cfg(&base, "native", "PCIE-004")),
+        ]
+        .into_iter()
+        .map(|(id, cfg)| (Task { system: "native".into(), metric_id: id }, cfg))
+        .collect();
+        let (slots, stats) = execute_prepared_indexed(&pairs, 2);
+        assert_eq!(slots.len(), 3);
+        assert_eq!(slots[0].as_ref().unwrap().id, "OH-009");
+        assert!(slots[1].is_none());
+        assert_eq!(slots[2].as_ref().unwrap().id, "PCIE-004");
+        assert_eq!(stats.tasks.len(), 2);
     }
 
     #[test]

@@ -146,6 +146,11 @@ pub struct SweepCell {
     /// False when the system cannot host the scenario at all (e.g. more
     /// tenants than MIG compute slices); such cells ran no metrics.
     pub feasible: bool,
+    /// Raw per-metric results of this cell, in [`SweepSurface::metric_ids`]
+    /// order (empty when infeasible). The long-format CSV surface — the
+    /// per-cell baseline `gvbench regress` gates on — and the JSON
+    /// reporter read these.
+    pub results: Vec<MetricResult>,
 }
 
 /// A completed sweep: all scored cells plus the run's execution timings.
@@ -215,7 +220,11 @@ pub fn run_sweep(base: &RunConfig, spec: &SweepSpec, jobs: usize) -> SweepSurfac
             }
         }
     }
-    let (results, stats) = executor::execute_prepared(&pairs, jobs);
+    // Index-aligned execution: every id comes from the registry, so every
+    // slot must be filled — a `None` (a taxonomy/registry divergence)
+    // panics loudly below instead of silently shifting later cells'
+    // results onto the wrong coordinates.
+    let (slots, stats) = executor::execute_prepared_indexed(&pairs, jobs);
 
     // Spec baseline (MIG-Ideal expected values), shared by every cell.
     let spec_baseline: Vec<MetricResult> = ids
@@ -243,12 +252,26 @@ pub fn run_sweep(base: &RunConfig, spec: &SweepSpec, jobs: usize) -> SweepSurfac
                     grade: Grade::F,
                     is_baseline,
                     feasible: false,
+                    results: Vec::new(),
                 });
                 continue;
             }
-            let cell_results = &results[offset..offset + per_cell];
+            let cell_results: Vec<MetricResult> = slots[offset..offset + per_cell]
+                .iter()
+                .zip(&ids)
+                .map(|(slot, id)| {
+                    slot.as_ref()
+                        .unwrap_or_else(|| {
+                            panic!(
+                                "sweep cell {system}/{tenants}t/{quota}%: metric `{id}` \
+                                 is in the taxonomy but not the runnable registry"
+                            )
+                        })
+                        .clone()
+                })
+                .collect();
             offset += per_cell;
-            let card = ScoreCard::build(system, cell_results, &spec_baseline);
+            let card = ScoreCard::build(system, &cell_results, &spec_baseline);
             let per_category: Vec<(Category, f64)> = Category::ALL
                 .iter()
                 .filter_map(|c| card.per_category.get(c).map(|s| (*c, *s)))
@@ -263,6 +286,7 @@ pub fn run_sweep(base: &RunConfig, spec: &SweepSpec, jobs: usize) -> SweepSurfac
                 grade: card.grade(),
                 is_baseline,
                 feasible: true,
+                results: cell_results,
             });
         }
         // Deltas vs this system's baseline cell (always present and
@@ -341,6 +365,12 @@ mod tests {
             assert!(c.feasible);
             assert!(c.overall.is_finite(), "{}/{}t/{}%", c.system, c.tenants, c.quota_pct);
             assert!(!c.per_category.is_empty());
+            // Raw per-metric results ride along in metric_ids order.
+            assert_eq!(c.results.len(), surface.metric_ids.len());
+            for (r, id) in c.results.iter().zip(&surface.metric_ids) {
+                assert_eq!(r.id, *id);
+                assert_eq!(r.system, c.system);
+            }
         }
         // First cell per system is the injected baseline with delta 0.
         for sys_block in surface.cells.chunks(3) {
@@ -397,6 +427,7 @@ mod tests {
         assert!(infeasible.overall.is_nan());
         assert_eq!(infeasible.delta_vs_baseline_pct, 0.0);
         assert!(infeasible.per_category.is_empty());
+        assert!(infeasible.results.is_empty());
         // Only the baseline cell's metrics actually ran.
         assert_eq!(surface.stats.tasks.len(), 4);
         // And it never shows up as a worst-degrading cell.

@@ -20,6 +20,10 @@
 //! - [`metrics`] — the paper's 56-metric taxonomy across 10 categories.
 //! - [`stats`], [`scoring`], [`report`] — statistical reduction, MIG-parity
 //!   scoring / grading, and JSON/CSV/TXT report generation.
+//! - [`regress`] — the sweep-aware regression subsystem: baseline CSVs
+//!   keyed by the full `(system, tenants, quota_pct, metric)` cell
+//!   coordinate, a sharded re-run/compare engine, and JSON + markdown
+//!   regression reports for the CI gates.
 //! - [`coordinator`] — multi-tenant orchestration (thread-backed tenants,
 //!   workload generators, the suite runner), the **parallel sharded
 //!   executor** ([`coordinator::executor`]) that runs the (system × metric)
@@ -58,15 +62,28 @@
 //! [`coordinator::sweep::SweepSpec`] into one flat task list (each cell's
 //! per-tenant quota maps onto memory/SM limits; its seed derives as
 //! `task_seed(scenario_seed(run_seed, tenants, quota), system, metric)`),
-//! executes it via [`coordinator::executor::execute_prepared`], and scores
+//! executes it via [`coordinator::executor::execute_prepared_indexed`], and scores
 //! every cell against the MIG-Ideal spec baseline. [`report::sweep`]
 //! renders the resulting surface — per-cell overall/category scores and
 //! the delta vs the (1 tenant, 100 % quota) baseline cell — as CSV, JSON
 //! or a TXT summary of the worst-degrading cells per system.
 //! `rust/tests/sweep_determinism.rs` proves sweeps bit-identical at any
-//! job count. `gvbench regress` consumes the (possibly multi-system) CSV
-//! a run writes and re-checks it sharded through the executor; CI wires
-//! this into a blocking regression gate (see `ci/README.md`).
+//! job count.
+//!
+//! The sweep CSV surface is **long format** — one row per (cell × metric),
+//! with the cell's score summary denormalized onto every row — so it
+//! doubles as a per-cell regression baseline. [`regress`] parses both that
+//! surface and the single-point `gvbench run --format csv` table into one
+//! baseline model keyed by `(system, tenants, quota_pct, metric)`,
+//! reconstructs each cell's [`metrics::RunConfig`] with the producing
+//! run's exact seed derivation, re-runs the cells through
+//! [`coordinator::executor::execute_prepared_indexed`] (`--jobs`), and
+//! applies direction-aware per-cell comparison. `gvbench regress` exposes
+//! it (`--report-json` / `--report-md` emit machine-readable reports); CI
+//! wires it into two blocking gates — quick-point and 2×2 sweep — that
+//! publish those reports as artifacts and into `$GITHUB_STEP_SUMMARY`
+//! (see `ci/README.md`). `rust/tests/regress_engine.rs` proves the
+//! sweep→CSV→regress round-trip clean at any job count.
 
 pub mod anyhow;
 pub mod benchkit;
@@ -75,6 +92,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cudalite;
 pub mod metrics;
+pub mod regress;
 pub mod report;
 pub mod runtime;
 pub mod scoring;

@@ -1,0 +1,346 @@
+//! Baseline model and CSV parsing for the regression engine.
+//!
+//! A baseline CSV is either a **point** table (`gvbench run --all-systems
+//! --format csv`: `id,...,system,value`, no scenario columns) or a
+//! **sweep** surface (`gvbench sweep --format csv`: one row per cell ×
+//! metric with `system,tenants,quota_pct,feasible,id,value` columns).
+//! The schema is auto-detected from the header; the two must not be
+//! mixed — a header carrying only one of `tenants`/`quota_pct` is
+//! rejected, as is any data row that does not fit the detected schema.
+//! Every rejection names the offending row.
+
+use std::collections::BTreeSet;
+
+use crate::anyhow::{bail, Context, Result};
+use crate::metrics::taxonomy;
+
+/// Which kind of baseline CSV was parsed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaselineSchema {
+    /// Per-metric rows at one operating point (`gvbench run` CSV); rows
+    /// re-run at the regress invocation's own `RunConfig`.
+    Point,
+    /// Long-format sweep surface (`gvbench sweep --format csv`); rows
+    /// carry a full (tenants, quota) cell coordinate.
+    Sweep,
+}
+
+impl BaselineSchema {
+    pub fn key(&self) -> &'static str {
+        match self {
+            BaselineSchema::Point => "point",
+            BaselineSchema::Sweep => "sweep",
+        }
+    }
+}
+
+/// One parsed baseline entry, keyed by its full cell coordinate.
+#[derive(Clone, Debug)]
+pub struct BaselineRow {
+    pub system: String,
+    /// Sweep cell coordinate `(tenants, quota_pct)`; `None` for point
+    /// rows, which re-run at the invocation's configured operating point.
+    pub cell: Option<(u32, u32)>,
+    pub id: String,
+    pub value: f64,
+    /// 1-based CSV line number, for error messages.
+    pub line: usize,
+}
+
+impl BaselineRow {
+    /// Short human label for the row's cell coordinate.
+    pub fn cell_label(&self) -> String {
+        cell_label(self.cell)
+    }
+}
+
+/// Render a cell coordinate as `4t@25%` (or `point` when absent).
+pub fn cell_label(cell: Option<(u32, u32)>) -> String {
+    match cell {
+        Some((t, q)) => format!("{t}t@{q}%"),
+        None => "point".to_string(),
+    }
+}
+
+/// A parsed baseline: re-runnable rows plus the infeasible cells the
+/// surface recorded (skipped by the engine, never re-run).
+#[derive(Clone, Debug)]
+pub struct Baseline {
+    pub schema: BaselineSchema,
+    /// Feasible rows, in file order.
+    pub rows: Vec<BaselineRow>,
+    /// Distinct `(system, tenants, quota_pct)` cells marked
+    /// `feasible: false` in the file.
+    pub infeasible: Vec<(String, u32, u32)>,
+}
+
+/// Parse a baseline CSV. Point rows without a `system` column are
+/// attributed to `default_system`. Unknown metric ids, unknown systems,
+/// malformed fields, out-of-range cell coordinates and duplicate
+/// `(system, cell, id)` keys are rejected with the offending row named.
+pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> {
+    let mut lines = text.lines();
+    let header = lines.next().context("empty baseline file")?;
+    let cols = split_csv(header);
+    let col = |name: &str| cols.iter().position(|c| c == name);
+    let id_col = col("id").context("no `id` column in baseline header")?;
+    let value_col = col("value").context("no `value` column in baseline header")?;
+    let system_col = col("system");
+    let tenants_col = col("tenants");
+    let quota_col = col("quota_pct");
+    let feasible_col = col("feasible");
+    let schema = match (tenants_col, quota_col) {
+        (Some(_), Some(_)) => BaselineSchema::Sweep,
+        (None, None) => BaselineSchema::Point,
+        _ => bail!(
+            "mixed-schema baseline header: `tenants` and `quota_pct` must appear together"
+        ),
+    };
+    if schema == BaselineSchema::Sweep {
+        if system_col.is_none() {
+            bail!("sweep-schema baseline requires a `system` column");
+        }
+        if feasible_col.is_none() {
+            bail!("sweep-schema baseline requires a `feasible` column");
+        }
+    }
+
+    let mut rows: Vec<BaselineRow> = Vec::new();
+    let mut infeasible: Vec<(String, u32, u32)> = Vec::new();
+    let mut seen: BTreeSet<(String, Option<(u32, u32)>, String)> = BTreeSet::new();
+    for (i, line) in lines.enumerate() {
+        let lineno = i + 2;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields = split_csv(line);
+        let system = match system_col {
+            Some(c) => get_field(&fields, c, lineno, "system")?.clone(),
+            None => default_system.to_string(),
+        };
+        if crate::virt::by_name(&system).is_none() {
+            bail!(
+                "row {lineno}: unknown system `{system}` (expected: native, hami, fcsp, mig, timeslice)"
+            );
+        }
+        let cell = match schema {
+            BaselineSchema::Point => None,
+            BaselineSchema::Sweep => {
+                let tenants: u32 = get_field(&fields, tenants_col.expect("sweep schema"), lineno, "tenants")?
+                    .parse()
+                    .with_context(|| format!("row {lineno}: bad tenants value"))?;
+                let quota: u32 = get_field(&fields, quota_col.expect("sweep schema"), lineno, "quota_pct")?
+                    .parse()
+                    .with_context(|| format!("row {lineno}: bad quota_pct value"))?;
+                if !(1..=64).contains(&tenants) {
+                    bail!("row {lineno}: tenants value {tenants} out of range (1..=64)");
+                }
+                if !(1..=100).contains(&quota) {
+                    bail!("row {lineno}: quota_pct value {quota} out of range (1..=100)");
+                }
+                Some((tenants, quota))
+            }
+        };
+        if schema == BaselineSchema::Sweep {
+            // Cells a system cannot host ran no metrics when the surface
+            // was produced; record them so the engine reports the skip.
+            match get_field(&fields, feasible_col.expect("sweep schema"), lineno, "feasible")?.as_str() {
+                "true" => {}
+                "false" => {
+                    let (t, q) = cell.expect("sweep schema");
+                    let key = (system.clone(), t, q);
+                    if !infeasible.contains(&key) {
+                        infeasible.push(key);
+                    }
+                    continue;
+                }
+                other => {
+                    bail!("row {lineno}: bad feasible value `{other}` (expected true/false)")
+                }
+            }
+        }
+        let id = get_field(&fields, id_col, lineno, "id")?.clone();
+        if taxonomy::by_id(&id).is_none() {
+            bail!("row {lineno}: unknown metric id `{id}` (system `{system}`)");
+        }
+        let value: f64 = get_field(&fields, value_col, lineno, "value")?
+            .parse()
+            .with_context(|| format!("row {lineno}: bad value for {system}/{id}"))?;
+        if !value.is_finite() {
+            bail!("row {lineno}: non-finite value for {system}/{id} in a feasible row");
+        }
+        if !seen.insert((system.clone(), cell, id.clone())) {
+            bail!(
+                "row {lineno}: duplicate baseline entry for {system}/{}/{id}",
+                cell_label(cell)
+            );
+        }
+        rows.push(BaselineRow { system, cell, id, value, line: lineno });
+    }
+    if rows.is_empty() && infeasible.is_empty() {
+        bail!("baseline contains no metrics");
+    }
+    Ok(Baseline { schema, rows, infeasible })
+}
+
+/// Fetch column `c` of a split row, naming the row and column on absence.
+fn get_field<'a>(
+    fields: &'a [String],
+    c: usize,
+    lineno: usize,
+    what: &str,
+) -> Result<&'a String> {
+    fields.get(c).with_context(|| format!("row {lineno}: missing {what}"))
+}
+
+/// Minimal CSV field splitter honouring double-quoted fields (the point
+/// CSV quotes name/unit fields that may contain commas).
+pub fn split_csv(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => fields.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_splitter_handles_quotes() {
+        assert_eq!(split_csv("a,\"b,c\",d"), vec!["a", "b,c", "d"]);
+        assert_eq!(split_csv("x,\"say \"\"hi\"\"\",y"), vec!["x", "say \"hi\"", "y"]);
+    }
+
+    #[test]
+    fn parses_point_baseline_with_system_column() {
+        let csv = "id,name,category,unit,system,value\n\
+                   OH-001,\"Kernel Launch, x\",Overhead,µs,hami,15.3\n\
+                   OH-001,\"Kernel Launch, x\",Overhead,µs,fcsp,8.1\n";
+        let b = parse_baseline_csv(csv, "native").unwrap();
+        assert_eq!(b.schema, BaselineSchema::Point);
+        assert_eq!(b.rows.len(), 2);
+        assert_eq!(b.rows[0].system, "hami");
+        assert_eq!(b.rows[0].value, 15.3);
+        assert_eq!(b.rows[0].cell, None);
+        assert_eq!(b.rows[0].line, 2);
+        assert_eq!(b.rows[1].system, "fcsp");
+        assert!(b.infeasible.is_empty());
+    }
+
+    #[test]
+    fn parses_point_baseline_without_system_column() {
+        let csv = "id,value\nOH-001,15.3\n";
+        let b = parse_baseline_csv(csv, "fcsp").unwrap();
+        assert_eq!(b.rows.len(), 1);
+        assert_eq!(b.rows[0].system, "fcsp");
+        assert_eq!(b.rows[0].id, "OH-001");
+        assert_eq!(b.rows[0].cell_label(), "point");
+    }
+
+    #[test]
+    fn parses_sweep_baseline_with_cells() {
+        let csv = "system,tenants,quota_pct,is_baseline,feasible,id,value,overall_score,delta_vs_baseline_pct,grade\n\
+                   hami,1,100,true,true,OH-001,15.3,0.8,0.000,B\n\
+                   hami,4,25,false,true,OH-001,19.1,0.7,-12.500,C\n\
+                   mig,8,25,false,false,,,NaN,0.000,-\n";
+        let b = parse_baseline_csv(csv, "native").unwrap();
+        assert_eq!(b.schema, BaselineSchema::Sweep);
+        assert_eq!(b.rows.len(), 2);
+        assert_eq!(b.rows[0].cell, Some((1, 100)));
+        assert_eq!(b.rows[1].cell, Some((4, 25)));
+        assert_eq!(b.rows[1].cell_label(), "4t@25%");
+        assert_eq!(b.infeasible, vec![("mig".to_string(), 8, 25)]);
+    }
+
+    #[test]
+    fn rejects_mixed_schema_headers() {
+        let e = parse_baseline_csv("system,tenants,id,value\nhami,2,OH-001,1.0\n", "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("mixed-schema"), "{e:#}");
+        // Sweep header without a feasible column.
+        let e = parse_baseline_csv(
+            "system,tenants,quota_pct,id,value\nhami,2,50,OH-001,1.0\n",
+            "hami",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("feasible"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_unknown_system_and_metric_naming_the_row() {
+        let e = parse_baseline_csv("id,value\nOH-001,3\nXX-1,3\n", "hami").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("row 3"), "{msg}");
+        assert!(msg.contains("XX-1"), "{msg}");
+        let e = parse_baseline_csv("id,system,value\nOH-001,mps,1.0\n", "hami").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("row 2"), "{msg}");
+        assert!(msg.contains("mps"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_malformed_rows_naming_the_row() {
+        // Bad value.
+        let e = parse_baseline_csv("id,value\nOH-001,lots\n", "hami").unwrap_err();
+        assert!(format!("{e:#}").contains("row 2"), "{e:#}");
+        // Bad tenants / out-of-range quota on the sweep schema.
+        let hdr = "system,tenants,quota_pct,feasible,id,value\n";
+        let e = parse_baseline_csv(&format!("{hdr}hami,two,50,true,OH-001,1.0\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("bad tenants"), "{e:#}");
+        let e = parse_baseline_csv(&format!("{hdr}hami,2,101,true,OH-001,1.0\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("out of range"), "{e:#}");
+        let e = parse_baseline_csv(&format!("{hdr}hami,2,50,maybe,OH-001,1.0\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("bad feasible"), "{e:#}");
+        // A point-schema row glued under a sweep header (too few fields).
+        let e = parse_baseline_csv(&format!("{hdr}OH-001,1.0\n"), "hami").unwrap_err();
+        assert!(format!("{e:#}").contains("row 2"), "{e:#}");
+        // Non-finite value in a feasible row.
+        let e = parse_baseline_csv(&format!("{hdr}hami,2,50,true,OH-001,NaN\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("non-finite"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_empty() {
+        assert!(parse_baseline_csv("id,value\n", "hami").is_err());
+        let csv = "id,system,value\nOH-001,hami,1.0\nOH-001,hami,2.0\n";
+        assert!(parse_baseline_csv(csv, "hami").is_err());
+        // The same (system, metric) in *different* cells is not a duplicate.
+        let hdr = "system,tenants,quota_pct,feasible,id,value\n";
+        let csv = format!("{hdr}hami,1,100,true,OH-001,1.0\nhami,2,50,true,OH-001,1.2\n");
+        assert_eq!(parse_baseline_csv(&csv, "hami").unwrap().rows.len(), 2);
+        // ... but the same full coordinate is.
+        let csv = format!("{hdr}hami,2,50,true,OH-001,1.0\nhami,2,50,true,OH-001,1.2\n");
+        let e = parse_baseline_csv(&csv, "hami").unwrap_err();
+        assert!(format!("{e:#}").contains("2t@50%"), "{e:#}");
+    }
+
+    #[test]
+    fn a_second_header_line_is_a_named_row_error() {
+        // Concatenating two exports leaves the second header as a data
+        // row; it must be rejected with its line number, not silently
+        // parsed or panicked on.
+        let csv = "id,value\nOH-001,1.0\nid,value\n";
+        let e = parse_baseline_csv(csv, "hami").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("row 3"), "{msg}");
+        assert!(msg.contains("unknown metric id `id`"), "{msg}");
+    }
+}

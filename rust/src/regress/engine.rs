@@ -1,0 +1,350 @@
+//! The comparison engine: re-run every baseline cell and flag
+//! direction-aware regressions.
+//!
+//! Each baseline row is reconstructed as an explicit per-task
+//! [`RunConfig`] — point rows via [`executor::derive_cfg`] (the same
+//! derivation `gvbench run` used to produce them), sweep rows via
+//! [`sweep::cell_cfg`] + [`executor::derive_cfg`] (the same quota→mem/SM
+//! mapping and `task_seed(scenario_seed(seed, tenants, quota), system,
+//! metric)` composition `run_sweep` used) — and the whole list shards
+//! through [`executor::execute_prepared_indexed`] on `cfg.jobs` workers.
+//! Seed parity makes an unchanged tree compare clean against its own
+//! fresh baseline at any job count.
+
+use crate::anyhow::{bail, Result};
+use crate::coordinator::executor::{self, ExecutionStats, Task};
+use crate::coordinator::sweep;
+use crate::metrics::{taxonomy, Direction, RunConfig};
+
+use super::baseline::{cell_label, Baseline, BaselineSchema};
+
+/// Percent by which `cur` is worse than `base` in the metric's own
+/// direction (positive = regressed; 0 = unchanged or improved).
+///
+/// Baseline CSVs record 6 decimal places; a move inside that recording
+/// resolution is rounding noise, not a regression (and would otherwise
+/// read as an infinite relative move when a tiny value rounded to 0 in
+/// the baseline).
+pub fn worse_percent(direction: Direction, base: f64, cur: f64) -> f64 {
+    if (cur - base).abs() <= 1.5e-6 {
+        return 0.0;
+    }
+    match direction {
+        Direction::LowerBetter => {
+            if base.abs() < 1e-12 {
+                if cur > 1e-12 {
+                    100.0
+                } else {
+                    0.0
+                }
+            } else {
+                (cur - base) / base * 100.0
+            }
+        }
+        Direction::HigherBetter => {
+            if base.abs() < 1e-12 {
+                0.0
+            } else {
+                (base - cur) / base * 100.0
+            }
+        }
+        Direction::Boolean => {
+            if cur < base {
+                100.0
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Comparison outcome for one re-run baseline cell.
+#[derive(Clone, Debug)]
+pub struct CellDelta {
+    pub system: String,
+    /// Sweep cell coordinate; `None` for point rows.
+    pub cell: Option<(u32, u32)>,
+    pub id: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Signed change in the *bad* direction, percent (0 when unchanged or
+    /// improved).
+    pub worse_percent: f64,
+    /// True when `worse_percent` exceeded the threshold.
+    pub regressed: bool,
+}
+
+impl CellDelta {
+    /// Short human label for the cell coordinate (`4t@25%` / `point`).
+    pub fn cell_label(&self) -> String {
+        cell_label(self.cell)
+    }
+}
+
+/// A completed regression check: every cell's delta plus run metadata.
+#[derive(Clone, Debug)]
+pub struct RegressOutcome {
+    pub threshold_percent: f64,
+    /// The run seed the re-run derived its per-task seeds from.
+    pub seed: u64,
+    pub schema: BaselineSchema,
+    /// `feasible: false` cells present in the baseline, skipped unrun.
+    pub skipped_infeasible: usize,
+    /// Per-cell deltas, in baseline row order.
+    pub cells: Vec<CellDelta>,
+    /// Executor timings of the re-run.
+    pub stats: ExecutionStats,
+}
+
+impl RegressOutcome {
+    /// Number of cells actually re-run and compared.
+    pub fn checked(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Cells that regressed beyond the threshold, in baseline order.
+    pub fn regressions(&self) -> Vec<&CellDelta> {
+        self.cells.iter().filter(|c| c.regressed).collect()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.cells.iter().all(|c| !c.regressed)
+    }
+
+    /// The worst regression (largest `worse_percent`) per system, in
+    /// first-appearance order. Empty when the check passed.
+    pub fn worst_per_system(&self) -> Vec<&CellDelta> {
+        let mut order: Vec<&str> = Vec::new();
+        let mut worst: std::collections::HashMap<&str, &CellDelta> =
+            std::collections::HashMap::new();
+        for c in self.cells.iter().filter(|c| c.regressed) {
+            let key = c.system.as_str();
+            match worst.get(key) {
+                None => {
+                    order.push(key);
+                    worst.insert(key, c);
+                }
+                Some(prev) => {
+                    if c.worse_percent > prev.worse_percent {
+                        worst.insert(key, c);
+                    }
+                }
+            }
+        }
+        order.iter().filter_map(|s| worst.get(s).copied()).collect()
+    }
+}
+
+/// Re-run every feasible baseline cell — sharded across `cfg.jobs`
+/// executor workers — and compare against the recorded values.
+/// `cfg` supplies iterations/warmup/seed/jobs; system, scenario and
+/// per-task seeds are derived per row, exactly as the producing
+/// `gvbench run` / `gvbench sweep` derived them.
+pub fn run_regression(
+    cfg: &RunConfig,
+    baseline: &Baseline,
+    threshold_percent: f64,
+) -> Result<RegressOutcome> {
+    let mut pairs: Vec<(Task, RunConfig)> = Vec::with_capacity(baseline.rows.len());
+    for row in &baseline.rows {
+        // Parse validated these; re-check so an engine caller constructing
+        // rows by hand gets a named error rather than a panic or a
+        // silently skipped row.
+        let d = match taxonomy::by_id(&row.id) {
+            Some(d) => d,
+            None => bail!(
+                "row {}: unknown metric id `{}` (system `{}`)",
+                row.line,
+                row.id,
+                row.system
+            ),
+        };
+        if crate::virt::by_name(&row.system).is_none() {
+            bail!("row {}: unknown system `{}`", row.line, row.system);
+        }
+        let task_cfg = match row.cell {
+            None => executor::derive_cfg(cfg, &row.system, d.id),
+            Some((tenants, quota)) => {
+                if !sweep::cell_feasible(&row.system, tenants) {
+                    bail!(
+                        "row {}: cell {}/{} is marked feasible but system `{}` cannot host {} tenants",
+                        row.line,
+                        row.system,
+                        cell_label(row.cell),
+                        row.system,
+                        tenants
+                    );
+                }
+                let cell_cfg = sweep::cell_cfg(cfg, &row.system, tenants, quota);
+                executor::derive_cfg(&cell_cfg, &row.system, d.id)
+            }
+        };
+        pairs.push((Task { system: row.system.clone(), metric_id: d.id }, task_cfg));
+    }
+    let (slots, stats) = executor::execute_prepared_indexed(&pairs, cfg.jobs);
+    let mut cells: Vec<CellDelta> = Vec::with_capacity(baseline.rows.len());
+    for (row, slot) in baseline.rows.iter().zip(slots) {
+        let result = match slot {
+            Some(r) => r,
+            None => bail!(
+                "row {}: metric `{}` on `{}` produced no result on re-run",
+                row.line,
+                row.id,
+                row.system
+            ),
+        };
+        let d = taxonomy::by_id(&row.id).expect("validated above");
+        let worse = worse_percent(d.direction, row.value, result.value);
+        cells.push(CellDelta {
+            system: row.system.clone(),
+            cell: row.cell,
+            id: row.id.clone(),
+            baseline: row.value,
+            current: result.value,
+            worse_percent: worse,
+            regressed: worse > threshold_percent,
+        });
+    }
+    Ok(RegressOutcome {
+        threshold_percent,
+        seed: cfg.seed,
+        schema: baseline.schema,
+        skipped_infeasible: baseline.infeasible.len(),
+        cells,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regress::baseline::BaselineRow;
+
+    fn point_baseline(rows: Vec<BaselineRow>) -> Baseline {
+        Baseline { schema: BaselineSchema::Point, rows, infeasible: Vec::new() }
+    }
+
+    fn row(system: &str, id: &str, value: f64) -> BaselineRow {
+        BaselineRow {
+            system: system.to_string(),
+            cell: None,
+            id: id.to_string(),
+            value,
+            line: 2,
+        }
+    }
+
+    #[test]
+    fn worse_percent_is_direction_aware() {
+        use Direction::*;
+        // Lower-better: growth is bad, shrinkage is good.
+        assert!((worse_percent(LowerBetter, 10.0, 12.0) - 20.0).abs() < 1e-9);
+        assert!(worse_percent(LowerBetter, 10.0, 8.0) < 0.0);
+        // Higher-better: shrinkage is bad.
+        assert!((worse_percent(HigherBetter, 10.0, 8.0) - 20.0).abs() < 1e-9);
+        assert!(worse_percent(HigherBetter, 10.0, 12.0) < 0.0);
+        // Boolean: true -> false is a full regression.
+        assert_eq!(worse_percent(Boolean, 1.0, 0.0), 100.0);
+        assert_eq!(worse_percent(Boolean, 0.0, 1.0), 0.0);
+        // Recording-resolution guard: a sub-microunit move is noise.
+        assert_eq!(worse_percent(LowerBetter, 0.0, 1e-6), 0.0);
+        assert_eq!(worse_percent(HigherBetter, 1.0, 1.0 + 1e-6), 0.0);
+        // A tiny baseline that rounded to zero, now nonzero: flagged.
+        assert_eq!(worse_percent(LowerBetter, 0.0, 0.5), 100.0);
+    }
+
+    #[test]
+    fn detects_direction_aware_regressions() {
+        // OH-009 is lower-better: hami measures ~0.055, so a 0.001
+        // baseline is a large regression; a matching baseline is clean.
+        let cfg = RunConfig::quick("hami");
+        let b = point_baseline(vec![row("hami", "OH-009", 0.001)]);
+        let out = run_regression(&cfg, &b, 10.0).unwrap();
+        assert_eq!(out.checked(), 1);
+        let regs = out.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].system, "hami");
+        assert!(regs[0].worse_percent > 100.0);
+        assert!(!out.passed());
+        let b = point_baseline(vec![row("hami", "OH-009", 0.055)]);
+        let out = run_regression(&cfg, &b, 10.0).unwrap();
+        assert!(out.passed(), "{:?}", out.regressions());
+    }
+
+    #[test]
+    fn rerun_matches_its_own_fresh_baseline_across_systems() {
+        // A multi-system "baseline" produced by the executor compares
+        // clean against a sharded re-run at a different job count.
+        let cfg = RunConfig::quick("native");
+        let tasks = vec![
+            Task { system: "native".into(), metric_id: "PCIE-001" },
+            Task { system: "hami".into(), metric_id: "PCIE-001" },
+            Task { system: "fcsp".into(), metric_id: "BW-003" },
+        ];
+        let (results, _) = executor::execute(&cfg, &tasks, 1);
+        let rows: Vec<BaselineRow> = results
+            .iter()
+            .map(|r| row(&r.system, r.id, r.value))
+            .collect();
+        let mut cfg8 = cfg.clone();
+        cfg8.jobs = 8;
+        let out = run_regression(&cfg8, &point_baseline(rows), 0.0001).unwrap();
+        assert_eq!(out.checked(), 3);
+        assert!(out.passed(), "{:?}", out.regressions());
+    }
+
+    #[test]
+    fn hand_built_rows_with_unknown_coordinates_error_cleanly() {
+        let cfg = RunConfig::quick("hami");
+        let b = point_baseline(vec![row("hami", "NOPE-1", 1.0)]);
+        let e = run_regression(&cfg, &b, 5.0).unwrap_err();
+        assert!(format!("{e:#}").contains("NOPE-1"), "{e:#}");
+        let b = point_baseline(vec![row("mps", "OH-001", 1.0)]);
+        let e = run_regression(&cfg, &b, 5.0).unwrap_err();
+        assert!(format!("{e:#}").contains("mps"), "{e:#}");
+        // A sweep row claiming feasibility the backend cannot deliver.
+        let mut r = row("mig", "OH-001", 1.0);
+        r.cell = Some((8, 50));
+        let b = Baseline {
+            schema: BaselineSchema::Sweep,
+            rows: vec![r],
+            infeasible: Vec::new(),
+        };
+        let e = run_regression(&cfg, &b, 5.0).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("cannot host 8 tenants"), "{msg}");
+    }
+
+    #[test]
+    fn worst_per_system_picks_the_largest_regression() {
+        let delta = |system: &str, id: &str, worse: f64| CellDelta {
+            system: system.to_string(),
+            cell: Some((4, 25)),
+            id: id.to_string(),
+            baseline: 1.0,
+            current: 2.0,
+            worse_percent: worse,
+            regressed: worse > 5.0,
+        };
+        let out = RegressOutcome {
+            threshold_percent: 5.0,
+            seed: 42,
+            schema: BaselineSchema::Sweep,
+            skipped_infeasible: 0,
+            cells: vec![
+                delta("hami", "OH-001", 12.0),
+                delta("hami", "OH-002", 40.0),
+                delta("fcsp", "OH-001", 8.0),
+                delta("fcsp", "OH-003", 2.0), // under threshold
+            ],
+            stats: ExecutionStats::default(),
+        };
+        assert_eq!(out.regressions().len(), 3);
+        let worst = out.worst_per_system();
+        assert_eq!(worst.len(), 2);
+        assert_eq!(worst[0].system, "hami");
+        assert_eq!(worst[0].id, "OH-002");
+        assert_eq!(worst[1].system, "fcsp");
+        assert_eq!(worst[1].id, "OH-001");
+    }
+}

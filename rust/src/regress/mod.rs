@@ -1,0 +1,47 @@
+//! Sweep-aware regression checking — the paper's §9 "automated regression
+//! testing" future-work item, promoted from a CLI helper into a
+//! first-class subsystem.
+//!
+//! The single-point quick gate compares only the 1-tenant/100 %-quota
+//! operating point — exactly the regime where MIGPerf (arXiv 2301.00407)
+//! and fragmentation-aware scheduling work (arXiv 2511.18906) show that
+//! multi-tenant degradation hides. This module therefore keys every
+//! baseline entry by its **full cell coordinate** `(system, tenants,
+//! quota_pct, metric)`, so one engine gates both:
+//!
+//! - **point baselines** — the per-metric CSV `gvbench run --all-systems
+//!   --format csv` writes (no `tenants`/`quota_pct` columns; rows re-run
+//!   at the invocation's [`RunConfig`] operating point), and
+//! - **sweep surfaces** — the long-format CSV `gvbench sweep --format
+//!   csv` writes (one row per cell × metric; rows re-run through
+//!   [`crate::coordinator::sweep::cell_cfg`] so quota→mem/SM mapping and
+//!   the `task_seed(scenario_seed(seed, tenants, quota), system, metric)`
+//!   derivation are bit-identical to the original sweep).
+//!
+//! Layout:
+//!
+//! - [`baseline`] — the [`Baseline`] model and CSV parser (schema
+//!   auto-detection, per-row validation that names the offending line,
+//!   `feasible: false` cells recorded for skipping rather than re-run).
+//! - [`engine`] — [`run_regression`]: reconstructs each baseline row as
+//!   an explicit per-task [`RunConfig`], shards the re-run through
+//!   [`crate::coordinator::executor::execute_prepared_indexed`]
+//!   (`--jobs`), and applies direction-aware per-cell comparison with the
+//!   6-decimal recording-resolution guard.
+//! - [`report`] — machine-readable surfaces: a JSON regression report
+//!   (per-cell deltas, threshold, pass/fail, executor timings) and a
+//!   GitHub-flavored markdown summary (worst regressions per system;
+//!   written to `$GITHUB_STEP_SUMMARY` by the CI gate jobs).
+//!
+//! `rust/tests/regress_engine.rs` proves the sweep-baseline round-trip
+//! (fresh sweep → CSV → regress passes against itself at `--jobs 1` and
+//! `--jobs 8`), infeasible-cell skipping, per-cell injected-regression
+//! detection, and malformed/mixed-schema rejection.
+
+pub mod baseline;
+pub mod engine;
+pub mod report;
+
+pub use baseline::{parse_baseline_csv, Baseline, BaselineRow, BaselineSchema};
+pub use engine::{run_regression, worse_percent, CellDelta, RegressOutcome};
+pub use report::{render_json, render_markdown};

@@ -1,0 +1,206 @@
+//! Machine-readable regression reports: a JSON document (per-cell
+//! deltas, threshold, pass/fail, executor timings) for artifact
+//! pipelines, and a GitHub-flavored markdown summary (worst regressions
+//! per system) that the CI gate jobs append to `$GITHUB_STEP_SUMMARY`.
+
+use crate::report::json::{array, render_execution, Obj};
+
+use super::engine::{CellDelta, RegressOutcome};
+
+fn delta_obj(c: &CellDelta) -> Obj {
+    let mut o = Obj::new().str("system", &c.system);
+    o = match c.cell {
+        Some((t, q)) => {
+            o.field("tenants", t.to_string()).field("quota_pct", q.to_string())
+        }
+        None => o.field("tenants", "null".to_string()).field("quota_pct", "null".to_string()),
+    };
+    o.str("id", &c.id)
+        .num("baseline", c.baseline)
+        .num("current", c.current)
+        .num("worse_percent", c.worse_percent)
+        .bool("regressed", c.regressed)
+}
+
+/// The full JSON regression report.
+pub fn render_json(outcome: &RegressOutcome, baseline_label: &str) -> String {
+    let cells: Vec<String> = outcome.cells.iter().map(|c| delta_obj(c).build()).collect();
+    let regressions: Vec<String> =
+        outcome.regressions().iter().map(|c| delta_obj(c).build()).collect();
+    Obj::new()
+        .str("benchmark_version", crate::VERSION)
+        .str("baseline", baseline_label)
+        .str("schema", outcome.schema.key())
+        .num("threshold_percent", outcome.threshold_percent)
+        .field("seed", outcome.seed.to_string())
+        .bool("passed", outcome.passed())
+        .field("checked", outcome.checked().to_string())
+        .field("regression_count", regressions.len().to_string())
+        .field("skipped_infeasible", outcome.skipped_infeasible.to_string())
+        .field("cells", array(cells))
+        .field("regressions", array(regressions))
+        .field("execution", render_execution(&outcome.stats))
+        .build()
+}
+
+fn md_row(out: &mut String, c: &CellDelta) {
+    out.push_str(&format!(
+        "| {} | {} | {} | {:.6} | {:.6} | {:+.1}% |\n",
+        c.system,
+        c.cell_label(),
+        c.id,
+        c.baseline,
+        c.current,
+        c.worse_percent
+    ));
+}
+
+const MD_TABLE_HEADER: &str =
+    "| System | Cell | Metric | Baseline | Current | Worse by |\n|---|---|---|---:|---:|---:|\n";
+
+/// Regressions listed in full before truncating the markdown table.
+const MD_REGRESSION_CAP: usize = 20;
+
+/// GitHub-flavored markdown summary of the check.
+pub fn render_markdown(outcome: &RegressOutcome, baseline_label: &str) -> String {
+    let regressions = outcome.regressions();
+    let mut out = String::new();
+    let status = if outcome.passed() { "✅ PASS" } else { "❌ FAIL" };
+    out.push_str(&format!("## GPU-Virt-Bench regression gate — {status}\n\n"));
+    out.push_str(&format!(
+        "`{}` ({} baseline, seed {}): **{}** cells checked against a {:.1}% threshold, **{}** regressed, {} infeasible cell(s) skipped.\n\n",
+        baseline_label,
+        outcome.schema.key(),
+        outcome.seed,
+        outcome.checked(),
+        outcome.threshold_percent,
+        regressions.len(),
+        outcome.skipped_infeasible
+    ));
+    if regressions.is_empty() {
+        out.push_str("All cells within threshold.\n\n");
+    } else {
+        out.push_str("### Worst regression per system\n\n");
+        out.push_str(MD_TABLE_HEADER);
+        for c in outcome.worst_per_system() {
+            md_row(&mut out, c);
+        }
+        out.push('\n');
+        out.push_str(&format!("### All regressions ({})\n\n", regressions.len()));
+        out.push_str(MD_TABLE_HEADER);
+        for c in regressions.iter().take(MD_REGRESSION_CAP) {
+            md_row(&mut out, c);
+        }
+        if regressions.len() > MD_REGRESSION_CAP {
+            out.push_str(&format!(
+                "\n…and {} more (see the JSON report artifact).\n",
+                regressions.len() - MD_REGRESSION_CAP
+            ));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "<sub>re-ran {} tasks on {} workers in {:.2}s (busy/wall {:.2}x)</sub>\n",
+        outcome.stats.tasks.len(),
+        outcome.stats.jobs,
+        outcome.stats.wall_ns as f64 / 1e9,
+        outcome.stats.speedup_estimate()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::ExecutionStats;
+    use crate::regress::baseline::BaselineSchema;
+
+    fn delta(system: &str, cell: Option<(u32, u32)>, id: &str, worse: f64) -> CellDelta {
+        CellDelta {
+            system: system.to_string(),
+            cell,
+            id: id.to_string(),
+            baseline: 10.0,
+            current: 10.0 * (1.0 + worse / 100.0),
+            worse_percent: worse,
+            regressed: worse > 5.0,
+        }
+    }
+
+    fn outcome(cells: Vec<CellDelta>) -> RegressOutcome {
+        RegressOutcome {
+            threshold_percent: 5.0,
+            seed: 42,
+            schema: BaselineSchema::Sweep,
+            skipped_infeasible: 1,
+            cells,
+            stats: ExecutionStats::default(),
+        }
+    }
+
+    #[test]
+    fn json_report_carries_cells_and_verdict() {
+        let out = outcome(vec![
+            delta("hami", Some((4, 25)), "OH-001", 40.0),
+            delta("hami", Some((1, 100)), "OH-001", 0.0),
+        ]);
+        let j = render_json(&out, "ci/baseline_sweep.csv");
+        assert!(j.contains("\"baseline\": \"ci/baseline_sweep.csv\""), "{j}");
+        assert!(j.contains("\"schema\": \"sweep\""), "{j}");
+        assert!(j.contains("\"passed\": false"), "{j}");
+        assert!(j.contains("\"checked\": 2"), "{j}");
+        assert!(j.contains("\"regression_count\": 1"), "{j}");
+        assert!(j.contains("\"skipped_infeasible\": 1"), "{j}");
+        assert!(j.contains("\"tenants\": 4"), "{j}");
+        assert!(j.contains("\"quota_pct\": 25"), "{j}");
+        assert!(j.contains("\"worse_percent\": 40"), "{j}");
+        assert!(j.contains("\"execution\""), "{j}");
+    }
+
+    #[test]
+    fn json_point_rows_have_null_cells() {
+        let out = outcome(vec![delta("hami", None, "OH-001", 0.0)]);
+        let j = render_json(&out, "b.csv");
+        assert!(j.contains("\"tenants\": null"), "{j}");
+        assert!(j.contains("\"quota_pct\": null"), "{j}");
+        assert!(j.contains("\"passed\": true"), "{j}");
+    }
+
+    #[test]
+    fn markdown_pass_is_compact() {
+        let m = render_markdown(&outcome(vec![delta("hami", None, "OH-001", 0.0)]), "b.csv");
+        assert!(m.contains("✅ PASS"), "{m}");
+        assert!(m.contains("All cells within threshold."), "{m}");
+        assert!(m.contains("1 infeasible cell(s) skipped"), "{m}");
+        assert!(!m.contains("Worst regression"), "{m}");
+    }
+
+    #[test]
+    fn markdown_fail_lists_worst_per_system() {
+        let out = outcome(vec![
+            delta("hami", Some((4, 25)), "OH-001", 12.0),
+            delta("hami", Some((8, 25)), "OH-002", 40.0),
+            delta("fcsp", Some((2, 50)), "OH-001", 8.0),
+        ]);
+        let m = render_markdown(&out, "ci/baseline_sweep.csv");
+        assert!(m.contains("❌ FAIL"), "{m}");
+        assert!(m.contains("### Worst regression per system"), "{m}");
+        assert!(m.contains("### All regressions (3)"), "{m}");
+        assert!(m.contains("| hami | 8t@25% | OH-002 |"), "{m}");
+        assert!(m.contains("| fcsp | 2t@50% | OH-001 |"), "{m}");
+        // Worst-per-system section lists OH-002 (40%) for hami, not OH-001.
+        let worst_idx = m.find("Worst regression per system").unwrap();
+        let all_idx = m.find("All regressions").unwrap();
+        assert!(!m[worst_idx..all_idx].contains("4t@25%"), "{m}");
+    }
+
+    #[test]
+    fn markdown_caps_the_regression_table() {
+        let cells: Vec<CellDelta> = (0..30)
+            .map(|i| delta("hami", Some((4, 25)), ["OH-001", "OH-002", "OH-003"][i % 3], 20.0))
+            .collect();
+        // Distinct ids per row aren't needed; the cap is about row count.
+        let m = render_markdown(&outcome(cells), "b.csv");
+        assert!(m.contains("…and 10 more"), "{m}");
+    }
+}

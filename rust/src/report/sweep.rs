@@ -1,14 +1,19 @@
 //! Sweep-surface reporting: the aggregated (system × tenants × quota)
-//! score table from `coordinator::sweep`, rendered as JSON, CSV or a TXT
+//! results from `coordinator::sweep`, rendered as JSON, CSV or a TXT
 //! summary that highlights the worst-degrading cells per system.
 //!
-//! The CSV is the canonical "sweep surface" — one row per cell, no host
-//! timings — so identical sweeps render byte-identical CSV at any job
-//! count (`rust/tests/sweep_determinism.rs`). The JSON adds the
-//! `execution` timing object as metadata.
+//! The CSV is the canonical "sweep surface": **long format**, one row per
+//! (cell × metric) with the cell's score summary denormalized onto every
+//! row — so it doubles as a per-cell regression baseline for
+//! `gvbench regress` (`crate::regress` keys rows by the full
+//! `(system, tenants, quota_pct, metric)` coordinate). Infeasible cells
+//! contribute a single marker row (`feasible=false`, empty id/value) that
+//! the regress engine skips. No host timings appear in the CSV, so
+//! identical sweeps render byte-identical CSV at any job count
+//! (`rust/tests/sweep_determinism.rs`). The JSON adds per-category
+//! scores and the `execution` timing object as metadata.
 
 use crate::coordinator::sweep::{SweepCell, SweepSurface};
-use crate::metrics::Category;
 
 use super::json::{array, render_execution, Obj};
 use super::Format;
@@ -22,52 +27,35 @@ pub fn render(surface: &SweepSurface, format: Format) -> String {
     }
 }
 
-/// Categories that appear in at least one cell, in `Category::ALL` order —
-/// the per-category column set of the CSV/TXT tables.
-fn category_columns(surface: &SweepSurface) -> Vec<Category> {
-    Category::ALL
-        .iter()
-        .copied()
-        .filter(|c| {
-            surface.cells.iter().any(|cell| cell.per_category.iter().any(|(cc, _)| cc == c))
-        })
-        .collect()
-}
+/// Column header of the long-format CSV surface (also the schema the
+/// regress baseline parser detects sweep baselines by).
+pub const CSV_HEADER: &str =
+    "system,tenants,quota_pct,is_baseline,feasible,id,value,overall_score,delta_vs_baseline_pct,grade";
 
-fn category_score(cell: &SweepCell, cat: Category) -> Option<f64> {
-    cell.per_category.iter().find(|(c, _)| *c == cat).map(|(_, s)| *s)
-}
-
-/// One row per cell; stable column order for analysis tools and regress
-/// baselines.
+/// Long format: one row per (cell, metric), cell summary denormalized;
+/// one marker row per infeasible cell. Stable column order for analysis
+/// tools and regress baselines.
 pub fn render_csv(surface: &SweepSurface) -> String {
-    let cats = category_columns(surface);
-    let mut out = String::from(
-        "system,tenants,quota_pct,is_baseline,feasible,overall_score,delta_vs_baseline_pct,grade",
-    );
-    for c in &cats {
-        out.push_str(&format!(",score_{}", c.key()));
-    }
+    let mut out = String::from(CSV_HEADER);
     out.push('\n');
     for cell in &surface.cells {
-        out.push_str(&format!(
-            "{},{},{},{},{},{:.6},{:.3},{}",
-            cell.system,
-            cell.tenants,
-            cell.quota_pct,
-            cell.is_baseline,
-            cell.feasible,
+        let prefix = format!(
+            "{},{},{},{},{}",
+            cell.system, cell.tenants, cell.quota_pct, cell.is_baseline, cell.feasible
+        );
+        if !cell.feasible {
+            out.push_str(&format!("{prefix},,,NaN,0.000,-\n"));
+            continue;
+        }
+        let summary = format!(
+            "{:.6},{:.3},{}",
             cell.overall,
             cell.delta_vs_baseline_pct,
-            if cell.feasible { cell.grade.letter() } else { "-" }
-        ));
-        for &c in &cats {
-            match category_score(cell, c) {
-                Some(v) => out.push_str(&format!(",{:.6}", v)),
-                None => out.push(','),
-            }
+            cell.grade.letter()
+        );
+        for r in &cell.results {
+            out.push_str(&format!("{prefix},{},{:.6},{summary}\n", r.id, r.value));
         }
-        out.push('\n');
     }
     out
 }
@@ -85,7 +73,15 @@ pub fn render_json(surface: &SweepSurface) -> String {
                     Obj::new().str("category", cat.key()).num("score", *score).build()
                 })
                 .collect();
-            cell_obj(c).field("categories", array(cats)).build()
+            let metrics: Vec<String> = c
+                .results
+                .iter()
+                .map(|r| Obj::new().str("id", r.id).num("value", r.value).build())
+                .collect();
+            cell_obj(c)
+                .field("categories", array(cats))
+                .field("metrics", array(metrics))
+                .build()
         })
         .collect();
     let worst: Vec<String> =
@@ -173,6 +169,7 @@ pub fn render_txt(surface: &SweepSurface) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::executor::ExecutionStats;
+    use crate::metrics::{Category, MetricResult};
     use crate::scoring::Grade;
 
     fn cell(system: &str, tenants: u32, quota: u32, overall: f64, delta: f64) -> SweepCell {
@@ -186,6 +183,10 @@ mod tests {
             grade: Grade::from_score(overall),
             is_baseline: tenants == 1 && quota == 100,
             feasible: true,
+            results: vec![
+                MetricResult::from_value("PCIE-001", system, 12.5),
+                MetricResult::from_value("PCIE-004", system, overall),
+            ],
         }
     }
 
@@ -207,13 +208,18 @@ mod tests {
         let s = surface();
         let csv = render_csv(&s);
         let lines: Vec<&str> = csv.lines().collect();
-        assert_eq!(
-            lines[0],
-            "system,tenants,quota_pct,is_baseline,feasible,overall_score,delta_vs_baseline_pct,grade,score_pcie"
-        );
-        assert_eq!(lines.len(), 4);
-        assert_eq!(lines[1], "hami,1,100,true,true,0.800000,0.000,B,0.800000");
-        assert_eq!(lines[2], "hami,4,25,false,true,0.600000,-25.000,D,0.600000");
+        assert_eq!(lines[0], CSV_HEADER);
+        // 3 cells × 2 metrics, long format.
+        assert_eq!(lines.len(), 7);
+        assert_eq!(lines[1], "hami,1,100,true,true,PCIE-001,12.500000,0.800000,0.000,B");
+        assert_eq!(lines[2], "hami,1,100,true,true,PCIE-004,0.800000,0.800000,0.000,B");
+        assert_eq!(lines[3], "hami,4,25,false,true,PCIE-001,12.500000,0.600000,-25.000,D");
+        // The long CSV parses directly as a sweep-schema regress baseline.
+        let b = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
+        assert_eq!(b.schema, crate::regress::BaselineSchema::Sweep);
+        assert_eq!(b.rows.len(), 6);
+        assert_eq!(b.rows[0].cell, Some((1, 100)));
+        assert_eq!(b.rows[0].value, 12.5);
     }
 
     #[test]
@@ -229,9 +235,12 @@ mod tests {
             grade: Grade::F,
             is_baseline: false,
             feasible: false,
+            results: Vec::new(),
         });
         let csv = render_csv(&s);
-        assert!(csv.contains("mig,8,25,false,false,NaN,0.000,-,"));
+        assert!(csv.contains("mig,8,25,false,false,,,NaN,0.000,-"), "{csv}");
+        let b = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
+        assert_eq!(b.infeasible, vec![("mig".to_string(), 8, 25)]);
         let j = render_json(&s);
         assert!(j.contains("\"feasible\": false"));
         assert!(j.contains("\"overall_score\": null"));
@@ -247,6 +256,7 @@ mod tests {
         assert!(j.contains("\"worst_degrading\""));
         assert!(j.contains("\"quota_pct\": 25"));
         assert!(j.contains("\"execution\""));
+        assert!(j.contains("\"metrics\": [{\"id\": \"PCIE-001\""));
         // The worst hami cell is the 8-tenant one.
         let worst_idx = j.find("worst_degrading").unwrap();
         assert!(j[worst_idx..].contains("\"tenants\": 8"));

@@ -1,0 +1,192 @@
+//! End-to-end coverage of the sweep-aware regression subsystem: a fresh
+//! sweep surface, rendered to the long-format CSV and parsed back, must
+//! regress clean against itself at any job count; infeasible cells are
+//! skipped; a single perturbed cell is flagged with its exact coordinate;
+//! malformed and mixed-schema baselines are rejected with named rows.
+
+use gvb::coordinator::executor;
+use gvb::coordinator::sweep::{run_sweep, SweepSpec};
+use gvb::metrics::{taxonomy, Category, Direction, RunConfig};
+use gvb::regress::{parse_baseline_csv, render_json, render_markdown, run_regression, BaselineSchema};
+use gvb::report::sweep::render_csv;
+
+fn base() -> RunConfig {
+    let mut cfg = RunConfig::quick("native");
+    cfg.seed = 42;
+    cfg
+}
+
+fn spec() -> SweepSpec {
+    SweepSpec {
+        systems: vec!["hami".into(), "fcsp".into()],
+        tenants: vec![1, 2],
+        quotas: vec![50, 100],
+        categories: Some(vec![Category::Pcie]),
+    }
+}
+
+#[test]
+fn sweep_baseline_roundtrips_clean_at_jobs_1_and_8() {
+    let surface = run_sweep(&base(), &spec(), 2);
+    let csv = render_csv(&surface);
+    let baseline = parse_baseline_csv(&csv, "native").unwrap();
+    assert_eq!(baseline.schema, BaselineSchema::Sweep);
+    // 2 systems × 4 scenarios ((1,100) in-grid) × 4 PCIe metrics.
+    assert_eq!(baseline.rows.len(), 32);
+    assert!(baseline.infeasible.is_empty());
+    for jobs in [1, 8] {
+        let mut cfg = base();
+        cfg.jobs = jobs;
+        let outcome = run_regression(&cfg, &baseline, 0.0001).unwrap();
+        assert_eq!(outcome.checked(), 32);
+        assert!(
+            outcome.passed(),
+            "jobs={jobs}: {:?}",
+            outcome
+                .regressions()
+                .iter()
+                .map(|r| format!("{}/{}/{}", r.system, r.cell_label(), r.id))
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn infeasible_cells_are_skipped_not_flagged() {
+    // MIG cannot host 8 tenants; the surface records the cell as
+    // infeasible and the regress engine skips it.
+    let spec = SweepSpec {
+        systems: vec!["mig".into()],
+        tenants: vec![8],
+        quotas: vec![50],
+        categories: Some(vec![Category::Pcie]),
+    };
+    let surface = run_sweep(&base(), &spec, 2);
+    let csv = render_csv(&surface);
+    let baseline = parse_baseline_csv(&csv, "native").unwrap();
+    // Only the injected (1,100) baseline cell carries metric rows.
+    assert_eq!(baseline.rows.len(), 4);
+    assert_eq!(baseline.infeasible, vec![("mig".to_string(), 8, 50)]);
+    let outcome = run_regression(&base(), &baseline, 1.0).unwrap();
+    assert_eq!(outcome.checked(), 4);
+    assert_eq!(outcome.skipped_infeasible, 1);
+    assert!(outcome.passed(), "{:?}", outcome.regressions());
+    // The skip is surfaced in both machine-readable reports.
+    let j = render_json(&outcome, "b.csv");
+    assert!(j.contains("\"skipped_infeasible\": 1"), "{j}");
+    let m = render_markdown(&outcome, "b.csv");
+    assert!(m.contains("1 infeasible cell(s) skipped"), "{m}");
+}
+
+#[test]
+fn injected_regression_is_detected_with_its_cell_coordinate() {
+    let surface = run_sweep(&base(), &spec(), 2);
+    let csv = render_csv(&surface);
+    let mut baseline = parse_baseline_csv(&csv, "native").unwrap();
+    // Perturb exactly one non-baseline cell's metric against its
+    // direction, so the unchanged re-run reads as a large regression.
+    let idx = baseline
+        .rows
+        .iter()
+        .position(|r| {
+            r.system == "hami"
+                && r.cell == Some((2, 50))
+                && r.value > 1e-3
+                && !matches!(
+                    taxonomy::by_id(&r.id).unwrap().direction,
+                    Direction::Boolean
+                )
+        })
+        .expect("a perturbable hami 2t@50% row");
+    let (system, cell, id) = {
+        let row = &mut baseline.rows[idx];
+        match taxonomy::by_id(&row.id).unwrap().direction {
+            Direction::LowerBetter => row.value /= 2.0,
+            Direction::HigherBetter => row.value *= 2.0,
+            Direction::Boolean => unreachable!("filtered out above"),
+        }
+        (row.system.clone(), row.cell, row.id.clone())
+    };
+    let outcome = run_regression(&base(), &baseline, 5.0).unwrap();
+    assert!(!outcome.passed());
+    let regressions = outcome.regressions();
+    assert_eq!(regressions.len(), 1, "{regressions:?}");
+    assert_eq!(regressions[0].system, system);
+    assert_eq!(regressions[0].cell, cell);
+    assert_eq!(regressions[0].id, id);
+    assert!(regressions[0].worse_percent > 5.0);
+    // Both reports name the offending cell and flip to FAIL.
+    let j = render_json(&outcome, "b.csv");
+    assert!(j.contains("\"passed\": false"), "{j}");
+    assert!(j.contains("\"regression_count\": 1"), "{j}");
+    let m = render_markdown(&outcome, "b.csv");
+    assert!(m.contains("❌ FAIL"), "{m}");
+    assert!(m.contains(&format!("| {} | 2t@50% | {} |", system, id)), "{m}");
+}
+
+#[test]
+fn point_baseline_roundtrips_through_the_same_engine() {
+    // A hand-rolled point table (the `gvbench run --format csv` schema,
+    // reduced to its regress-relevant columns) re-runs at the
+    // invocation's operating point and compares clean at any job count.
+    let cfg = base();
+    let tasks = vec![
+        executor::Task { system: "native".into(), metric_id: "PCIE-001" },
+        executor::Task { system: "hami".into(), metric_id: "PCIE-001" },
+        executor::Task { system: "fcsp".into(), metric_id: "BW-003" },
+    ];
+    let (results, _) = executor::execute(&cfg, &tasks, 1);
+    let mut csv = String::from("id,system,value\n");
+    for r in &results {
+        // 6-decimal recording resolution, exactly as the CSV reporter
+        // writes it — the comparison guard must absorb the rounding.
+        csv.push_str(&format!("{},{},{:.6}\n", r.id, r.system, r.value));
+    }
+    let baseline = parse_baseline_csv(&csv, "native").unwrap();
+    assert_eq!(baseline.schema, BaselineSchema::Point);
+    for jobs in [1, 8] {
+        let mut cfg = base();
+        cfg.jobs = jobs;
+        let outcome = run_regression(&cfg, &baseline, 0.0001).unwrap();
+        assert_eq!(outcome.checked(), 3);
+        assert!(outcome.passed(), "jobs={jobs}: {:?}", outcome.regressions());
+    }
+}
+
+#[test]
+fn unknown_coordinates_are_named_errors_not_panics() {
+    // Unknown metric id, naming the offending row.
+    let e = parse_baseline_csv("id,system,value\nOH-001,hami,1.0\nZZ-999,hami,2.0\n", "native")
+        .unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("row 3"), "{msg}");
+    assert!(msg.contains("ZZ-999"), "{msg}");
+    // Unknown system, naming the offending row.
+    let e = parse_baseline_csv("id,system,value\nOH-001,vgpu,1.0\n", "native").unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("row 2"), "{msg}");
+    assert!(msg.contains("vgpu"), "{msg}");
+    // Same for the sweep schema.
+    let hdr = "system,tenants,quota_pct,feasible,id,value\n";
+    let e = parse_baseline_csv(&format!("{hdr}hami,2,50,true,ZZ-999,1.0\n"), "native")
+        .unwrap_err();
+    assert!(format!("{e:#}").contains("ZZ-999"), "{e:#}");
+}
+
+#[test]
+fn malformed_and_mixed_schema_baselines_are_rejected() {
+    // Half a sweep header is neither schema.
+    let e = parse_baseline_csv("system,quota_pct,id,value\nhami,50,OH-001,1.0\n", "native")
+        .unwrap_err();
+    assert!(format!("{e:#}").contains("mixed-schema"), "{e:#}");
+    // A sweep surface concatenated under a point table: the stray header
+    // row is rejected by name, not silently skipped.
+    let glued = "id,system,value\nOH-001,hami,1.0\nsystem,tenants,quota_pct,is_baseline,feasible,id,value,overall_score,delta_vs_baseline_pct,grade\n";
+    let e = parse_baseline_csv(glued, "native").unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("row 3"), "{msg}");
+    // Truncated sweep rows are named.
+    let hdr = "system,tenants,quota_pct,feasible,id,value\n";
+    let e = parse_baseline_csv(&format!("{hdr}hami,2,50,true\n"), "native").unwrap_err();
+    assert!(format!("{e:#}").contains("row 2"), "{e:#}");
+}

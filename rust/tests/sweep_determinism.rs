@@ -50,6 +50,13 @@ fn assert_surfaces_bit_identical(a: &SweepSurface, b: &SweepSurface) {
             assert_eq!(ca, cb, "{ctx}: category order");
             assert_eq!(sa.to_bits(), sb.to_bits(), "{ctx}/{:?}: category score", ca);
         }
+        // The raw per-metric results the CSV surface / regress baselines
+        // are built from are bit-identical too.
+        assert_eq!(x.results.len(), y.results.len(), "{ctx}");
+        for (ra, rb) in x.results.iter().zip(&y.results) {
+            assert_eq!(ra.id, rb.id, "{ctx}: metric order");
+            assert_eq!(ra.value.to_bits(), rb.value.to_bits(), "{ctx}/{}", ra.id);
+        }
     }
 }
 
