@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Existence check over the relative markdown links in the documentation
+# surface (README.md, docs/*.md, ci/README.md). External links
+# (http/https/mailto) and pure-anchor links (#section) are skipped;
+# `path#anchor` links are checked for the path part only. Paths resolve
+# relative to the linking file first, then to the repository root.
+#
+# Run from anywhere: the script cd's to the repository root (its parent
+# directory). CI runs it as the blocking `docs` job; locally:
+#
+#   bash ci/check_links.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+for f in README.md docs/*.md ci/README.md; do
+  [ -e "$f" ] || continue
+  dir=$(dirname "$f")
+  # Inline links: the (target) part of [text](target).
+  while IFS= read -r target; do
+    case "$target" in
+      http://* | https://* | mailto:* | "#"*) continue ;;
+    esac
+    path="${target%%#*}"
+    [ -z "$path" ] && continue
+    if [ ! -e "$dir/$path" ] && [ ! -e "$path" ]; then
+      echo "::error file=$f::dangling relative link: ($target)"
+      fail=1
+    fi
+  done < <(grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\((.*)\)$/\1/')
+done
+
+if [ "$fail" -eq 0 ]; then
+  echo "all relative markdown links resolve"
+fi
+exit "$fail"

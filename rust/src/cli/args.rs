@@ -11,8 +11,10 @@ USAGE:
               [--category <key>] [--metric <ID>] [--iterations N]
               [--warmup N] [--tenants N] [--seed N] [--jobs N] [--quick]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
-  gvbench sweep [--system S | --all-systems] [--tenants N,N,...]
-              [--quota PCT,PCT,...] [--category key,key,...]
+  gvbench sweep [--system S | --systems S,S,...|all | --all-systems]
+              [--tenants N,N,...]
+              [--quota PCT,PCT,...] [--gpus N,N,...] [--link nvlink,pcie]
+              [--category key,key,...]
               [--iterations N] [--warmup N] [--seed N] [--jobs N] [--quick]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
   gvbench list [--full | --systems | --categories]
@@ -26,15 +28,22 @@ EXAMPLES:
   gvbench run --all-systems --quick --format json --out results.json
   gvbench run --all-systems --jobs 8      # shard the matrix over 8 workers
   gvbench sweep --tenants 1,2,4,8 --quota 25,50,100 --jobs 8 --format csv
+  gvbench sweep --gpus 2,4,8 --link nvlink,pcie --category nccl --quick
   gvbench sweep --category isolation,fragmentation --quick
   gvbench compare --quick
 
-Scenario sweeps: `sweep` expands (systems x tenants x quota x metrics)
-into one executor task list; quota is the percent of the whole device each
-tenant gets (memory + SM). Defaults: all systems, tenants 1,2,4,8, quota
-25,50,100. Every cell reports its score delta vs the (1 tenant, 100%)
-baseline cell. A config file `[sweep]` section (tenants/quota/systems/
-categories keys) sets the grid; CLI flags override it.
+Scenario sweeps: `sweep` expands (systems x tenants x quota x gpus x
+link x metrics) into one executor task list; quota is the percent of the
+whole device each tenant gets (memory + SM), and --gpus/--link select
+the simulated multi-GPU node the NCCL/P2P and PCIe metrics run on.
+Defaults: all systems, tenants 1,2,4,8, quota 25,50,100, one 4-GPU PCIe
+node. Every cell reports its score delta vs the (1 tenant, 100%)
+baseline cell of its own topology. Topology axes multiply the whole
+grid but only the NCCL/P2P and PCIe categories read them — scope
+topology sweeps with --category nccl,pcie unless you want the full
+taxonomy re-measured per node. A config file `[sweep]` section
+(tenants/quota/gpus/link/systems/categories keys) sets the grid; CLI
+flags override it.
 
 Regression gate: `regress` re-runs every cell in the baseline CSV (all
 systems in the file, or just --system S) sharded across --jobs workers,
@@ -42,10 +51,12 @@ and exits 1 if any metric moved against its direction by more than
 --threshold percent. The baseline schema is auto-detected: a `gvbench
 run --format csv` table re-runs at this invocation's operating point,
 while a `gvbench sweep --format csv` surface re-runs every
-(system, tenants, quota) cell with the sweep's own quota mapping and
-seed derivation (`feasible=false` cells are skipped). --report-json and
---report-md write machine-readable reports (per-cell deltas / a
-GitHub-flavored summary of the worst regressions per system).
+(system, tenants, quota, gpus, link) cell with the sweep's own quota
+mapping, node topology and seed derivation (`feasible=false` cells are
+skipped; PR-3-era baselines without gpu_count/link columns re-run on
+the default 4-GPU PCIe node). --report-json and --report-md write
+machine-readable reports (per-cell deltas / a GitHub-flavored summary
+of the worst regressions per system and per link kind).
 
 Parallelism: --jobs N shards the task matrix across N worker threads
 (0 or unset = all cores). Same --seed => bit-identical numbers at any job
@@ -95,6 +106,13 @@ pub struct Args {
     pub sweep_tenants: Option<Vec<u32>>,
     /// Sweep grid: per-tenant quota percents (`--quota 25,50,100`).
     pub sweep_quotas: Option<Vec<u32>>,
+    /// Sweep grid: node GPU counts (`--gpus 2,4,8`).
+    pub sweep_gpus: Option<Vec<u32>>,
+    /// Sweep grid: node link kinds (`--link nvlink,pcie`).
+    pub sweep_links: Option<Vec<String>>,
+    /// Sweep grid: explicit system list (`--systems hami,fcsp`;
+    /// `--systems all` sets `all_systems` instead).
+    pub sweep_systems: Option<Vec<String>>,
     /// Sweep grid: category keys (`--category isolation,fragmentation`).
     pub sweep_categories: Option<Vec<String>>,
 }
@@ -126,6 +144,9 @@ impl Default for Args {
             report_md: None,
             sweep_tenants: None,
             sweep_quotas: None,
+            sweep_gpus: None,
+            sweep_links: None,
+            sweep_systems: None,
             sweep_categories: None,
         }
     }
@@ -157,10 +178,12 @@ fn parse_u32_list(flag: &str, v: &str) -> Result<Vec<u32>, ParseError> {
 }
 
 /// Range checks shared by the CLI flags and config-file `[sweep]` grids:
-/// tenant counts in 1..=64, quota percents in 1..=100.
+/// tenant counts in 1..=64, quota percents in 1..=100, node GPU counts in
+/// 1..=16 (matching the baseline parser's acceptance ranges).
 pub fn validate_sweep_grid(
     tenants: Option<&[u32]>,
     quotas: Option<&[u32]>,
+    gpus: Option<&[u32]>,
 ) -> Result<(), String> {
     if let Some(ts) = tenants {
         for &t in ts {
@@ -173,6 +196,25 @@ pub fn validate_sweep_grid(
         for &q in qs {
             if !(1..=100).contains(&q) {
                 return Err(format!("--quota value {q} out of range (1..=100)"));
+            }
+        }
+    }
+    if let Some(gs) = gpus {
+        for &g in gs {
+            if !(1..=16).contains(&g) {
+                return Err(format!("--gpus value {g} out of range (1..=16)"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate `--link` / `[sweep] link` keys against the known link kinds.
+pub fn validate_sweep_links(links: Option<&[String]>) -> Result<(), String> {
+    if let Some(ls) = links {
+        for l in ls {
+            if crate::simgpu::nvlink::LinkKind::from_key(l).is_none() {
+                return Err(format!("unknown link kind `{l}` (expected nvlink, pcie)"));
             }
         }
     }
@@ -240,6 +282,21 @@ impl Args {
                     let v = next_value(&mut it, flag)?;
                     args.sweep_quotas = Some(parse_u32_list(flag, &v)?);
                 }
+                "--gpus" => {
+                    if args.command != Command::Sweep {
+                        return Err(err("--gpus is only valid for `gvbench sweep`"));
+                    }
+                    let v = next_value(&mut it, flag)?;
+                    args.sweep_gpus = Some(parse_u32_list(flag, &v)?);
+                }
+                "--link" => {
+                    if args.command != Command::Sweep {
+                        return Err(err("--link is only valid for `gvbench sweep`"));
+                    }
+                    let v = next_value(&mut it, flag)?;
+                    args.sweep_links =
+                        Some(v.split(',').map(|s| s.trim().to_string()).collect());
+                }
                 "--seed" => {
                     args.seed =
                         Some(next_value(&mut it, flag)?.parse().map_err(|_| err("bad --seed"))?)
@@ -271,7 +328,20 @@ impl Args {
                         .map_err(|_| err("bad --threshold"))?
                 }
                 "--full" => args.list_full = true,
-                "--systems" => args.list_systems = true,
+                "--systems" => {
+                    if args.command == Command::Sweep {
+                        // Sweeps take a system list (`all` = every system).
+                        let v = next_value(&mut it, flag)?;
+                        if v.trim() == "all" {
+                            args.all_systems = true;
+                        } else {
+                            args.sweep_systems =
+                                Some(v.split(',').map(|s| s.trim().to_string()).collect());
+                        }
+                    } else {
+                        args.list_systems = true;
+                    }
+                }
                 "--categories" => args.list_categories = true,
                 other => return Err(err(format!("unknown flag `{other}`"))),
             }
@@ -316,8 +386,22 @@ impl Args {
                     }
                 }
             }
-            validate_sweep_grid(args.sweep_tenants.as_deref(), args.sweep_quotas.as_deref())
-                .map_err(err)?;
+            if let Some(ss) = &args.sweep_systems {
+                for s in ss {
+                    if crate::virt::by_name(s).is_none() {
+                        return Err(err(format!(
+                            "unknown system `{s}` (expected: native, hami, fcsp, mig, timeslice, or `all`)"
+                        )));
+                    }
+                }
+            }
+            validate_sweep_grid(
+                args.sweep_tenants.as_deref(),
+                args.sweep_quotas.as_deref(),
+                args.sweep_gpus.as_deref(),
+            )
+            .map_err(err)?;
+            validate_sweep_links(args.sweep_links.as_deref()).map_err(err)?;
         }
         Ok(args)
     }
@@ -386,11 +470,51 @@ mod tests {
         assert!(parse("sweep --tenants 65").is_err());
         assert!(parse("sweep --quota 0").is_err());
         assert!(parse("sweep --quota 101").is_err());
+        assert!(parse("sweep --gpus 0").is_err());
+        assert!(parse("sweep --gpus 32").is_err());
+        assert!(parse("sweep --gpus 2,lots").is_err());
+        assert!(parse("sweep --link sli").is_err());
+        assert!(parse("sweep --link nvlink,bogus").is_err());
         assert!(parse("sweep --category bogus").is_err());
         assert!(parse("sweep --format xml").is_err());
         assert!(parse("sweep --metric OH-001").is_err());
-        // --quota belongs to sweep only.
+        // --quota / --gpus / --link belong to sweep only.
         assert!(parse("run --system hami --quota 50").is_err());
+        assert!(parse("run --system hami --gpus 2,4").is_err());
+        assert!(parse("run --system hami --link nvlink").is_err());
+    }
+
+    #[test]
+    fn sweep_parses_topology_axes() {
+        let a = parse("sweep --gpus 2,4,8 --link nvlink,pcie").unwrap();
+        assert_eq!(a.sweep_gpus, Some(vec![2, 4, 8]));
+        assert_eq!(
+            a.sweep_links,
+            Some(vec!["nvlink".to_string(), "pcie".to_string()])
+        );
+        // Absent: the sweep falls back to the default 4-GPU PCIe node.
+        let a = parse("sweep --tenants 1,2").unwrap();
+        assert_eq!(a.sweep_gpus, None);
+        assert_eq!(a.sweep_links, None);
+    }
+
+    #[test]
+    fn sweep_systems_list_and_all() {
+        // `--systems all` is shorthand for --all-systems under sweep.
+        let a = parse("sweep --systems all --tenants 1,2").unwrap();
+        assert!(a.all_systems);
+        assert_eq!(a.sweep_systems, None);
+        let a = parse("sweep --systems hami,fcsp").unwrap();
+        assert!(!a.all_systems);
+        assert_eq!(
+            a.sweep_systems,
+            Some(vec!["hami".to_string(), "fcsp".to_string()])
+        );
+        assert!(parse("sweep --systems hami,mps").is_err());
+        // Under `list`, --systems stays the boolean section selector.
+        let a = parse("list --systems").unwrap();
+        assert!(a.list_systems);
+        assert_eq!(a.sweep_systems, None);
     }
 
     #[test]

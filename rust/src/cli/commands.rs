@@ -7,6 +7,7 @@ use crate::coordinator::sweep::{self, SweepSpec};
 use crate::coordinator::SuiteRunner;
 use crate::metrics::{taxonomy, Category, RunConfig};
 use crate::report::{Format, Report};
+use crate::simgpu::nvlink::LinkKind;
 use crate::virt::ALL_SYSTEMS;
 
 use super::args::{Args, Command, USAGE};
@@ -33,7 +34,7 @@ fn cmd_regress(args: &Args) -> Result<()> {
     if args.system_set {
         // Explicit --system restricts a multi-system baseline to one row set.
         baseline.rows.retain(|r| r.system == args.system);
-        baseline.infeasible.retain(|(s, _, _)| s == &args.system);
+        baseline.infeasible.retain(|(s, _)| s == &args.system);
         if baseline.rows.is_empty() {
             bail!("baseline {path} has no rows for system `{}`", args.system);
         }
@@ -152,11 +153,32 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .clone()
         .or(overlay.quotas)
         .unwrap_or_else(|| vec![25, 50, 100]);
-    if let Err(e) = super::args::validate_sweep_grid(Some(&tenants), Some(&quotas)) {
+    let gpus = args
+        .sweep_gpus
+        .clone()
+        .or(overlay.gpus)
+        .unwrap_or_else(|| vec![sweep::DEFAULT_GPU_COUNT]);
+    let link_keys = args.sweep_links.clone().or(overlay.links);
+    if let Err(e) =
+        super::args::validate_sweep_grid(Some(&tenants), Some(&quotas), Some(&gpus))
+    {
         bail!("{e}");
     }
+    // One validation path for CLI flags and config-file keys alike.
+    if let Err(e) = super::args::validate_sweep_links(link_keys.as_deref()) {
+        bail!("{e} in sweep grid");
+    }
+    let links: Vec<LinkKind> = match link_keys {
+        None => vec![sweep::DEFAULT_LINK],
+        Some(keys) => keys
+            .iter()
+            .map(|k| LinkKind::from_key(k).expect("validated above"))
+            .collect(),
+    };
     let systems: Vec<String> = if args.all_systems {
         ALL_SYSTEMS.iter().map(|s| s.to_string()).collect()
+    } else if let Some(ss) = args.sweep_systems.clone() {
+        ss
     } else if args.system_set {
         vec![args.system.clone()]
     } else if let Some(ss) = overlay.systems {
@@ -182,7 +204,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             Some(cats)
         }
     };
-    let spec = SweepSpec { systems, tenants, quotas, categories };
+    let spec = SweepSpec { systems, tenants, quotas, gpu_counts: gpus, links, categories };
     let surface = sweep::run_sweep(&cfg, &spec, cfg.jobs);
     eprintln!(
         "[gvbench] sweep: {} cells x {} metrics on {} workers in {:.2}s (busy/wall {:.2}x)",
@@ -391,13 +413,41 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines[0], crate::report::sweep::CSV_HEADER);
-        // Long format: header + 2 cells × 4 PCIe metrics.
+        // Long format: header + 2 cells × 4 PCIe metrics, on the default
+        // 4-GPU PCIe node when no topology flags are given.
         assert_eq!(lines.len(), 9);
-        assert!(lines[1].starts_with("native,1,100,true,true,PCIE-"));
-        assert!(lines[5].starts_with("native,2,100,false,true,PCIE-"));
+        assert!(lines[1].starts_with("native,1,100,4,pcie,true,true,PCIE-"));
+        assert!(lines[5].starts_with("native,2,100,4,pcie,false,true,PCIE-"));
         // The written surface is directly consumable as a regress baseline.
         let b = crate::regress::parse_baseline_csv(&text, "native").unwrap();
         assert_eq!(b.rows.len(), 8);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sweep_topology_flags_expand_the_surface() {
+        let mut a = Args::default();
+        a.command = Command::Sweep;
+        a.system = "native".into();
+        a.system_set = true;
+        a.quick = true;
+        a.sweep_tenants = Some(vec![1]);
+        a.sweep_quotas = Some(vec![100]);
+        a.sweep_gpus = Some(vec![2, 4]);
+        a.sweep_links = Some(vec!["nvlink".into(), "pcie".into()]);
+        a.sweep_categories = Some(vec!["nccl".into()]);
+        a.format = "csv".into();
+        let path = std::env::temp_dir().join("gvb_test_sweep_topo.csv");
+        a.out = Some(path.to_str().unwrap().to_string());
+        dispatch(&a).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Header + 1 scenario × 4 topologies × 4 NCCL metrics.
+        assert_eq!(text.lines().count(), 17);
+        assert!(text.contains("native,1,100,2,nvlink,true,true,NCCL-"), "{text}");
+        assert!(text.contains("native,1,100,4,pcie,true,true,NCCL-"), "{text}");
+        // Unknown link keys are rejected before any work runs.
+        a.sweep_links = Some(vec!["sli".into()]);
+        assert!(dispatch(&a).is_err());
         std::fs::remove_file(&path).ok();
     }
 

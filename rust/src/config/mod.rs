@@ -31,6 +31,11 @@ pub struct FileConfig {
 pub struct SweepOverlay {
     pub tenants: Option<Vec<u32>>,
     pub quotas: Option<Vec<u32>>,
+    /// Node GPU counts (`gpus = 2,4,8`), the `--gpus` axis.
+    pub gpus: Option<Vec<u32>>,
+    /// Node link kinds (`link = nvlink,pcie`), the `--link` axis
+    /// (validated by the CLI layer against the known kinds).
+    pub links: Option<Vec<String>>,
     pub systems: Option<Vec<String>>,
     pub categories: Option<Vec<String>>,
 }
@@ -54,7 +59,7 @@ impl std::fmt::Display for ConfigError {
             ConfigError::Weights(sum) => write!(f, "weights must sum to 1.0 (got {sum})"),
             ConfigError::UnknownKey(key) => write!(
                 f,
-                "unrecognized key `{key}` (known [sweep] keys: tenants, quota, systems, categories)"
+                "unrecognized key `{key}` (known [sweep] keys: tenants, quota, gpus, link, systems, categories)"
             ),
         }
     }
@@ -161,15 +166,22 @@ impl FileConfig {
     }
 
     /// The `[sweep]` section's scenario grid, if any keys are present.
-    /// Recognized keys: `sweep.tenants`, `sweep.quota` (u32 lists),
-    /// `sweep.systems`, `sweep.categories` (string lists; validated by the
-    /// CLI layer against the backend/category registries). The `sweep.*`
-    /// namespace is closed: any other key in the section — a `quotas`
-    /// typo, a global key like `seed` placed below the header — is an
-    /// error rather than a silently ignored setting.
+    /// Recognized keys: `sweep.tenants`, `sweep.quota`, `sweep.gpus`
+    /// (u32 lists), `sweep.link`, `sweep.systems`, `sweep.categories`
+    /// (string lists; validated by the CLI layer against the link-kind /
+    /// backend / category registries). The `sweep.*` namespace is closed:
+    /// any other key in the section — a `quotas` typo, a global key like
+    /// `seed` placed below the header — is an error rather than a
+    /// silently ignored setting.
     pub fn sweep(&self) -> Result<SweepOverlay, ConfigError> {
-        const KNOWN: [&str; 4] =
-            ["sweep.tenants", "sweep.quota", "sweep.systems", "sweep.categories"];
+        const KNOWN: [&str; 6] = [
+            "sweep.tenants",
+            "sweep.quota",
+            "sweep.gpus",
+            "sweep.link",
+            "sweep.systems",
+            "sweep.categories",
+        ];
         for key in self.values.keys() {
             if key.starts_with("sweep.") && !KNOWN.contains(&key.as_str()) {
                 return Err(ConfigError::UnknownKey(key.clone()));
@@ -178,6 +190,8 @@ impl FileConfig {
         Ok(SweepOverlay {
             tenants: self.get_list::<u32>("sweep.tenants")?,
             quotas: self.get_list::<u32>("sweep.quota")?,
+            gpus: self.get_list::<u32>("sweep.gpus")?,
+            links: self.get_str_list("sweep.link"),
             systems: self.get_str_list("sweep.systems"),
             categories: self.get_str_list("sweep.categories"),
         })
@@ -236,7 +250,7 @@ mod tests {
     #[test]
     fn sections_prefix_keys() {
         let fc = FileConfig::parse(
-            "jobs = 8\n[sweep]\ntenants = 1, 2,4\nquota = 25,100\nsystems = hami, fcsp\n",
+            "jobs = 8\n[sweep]\ntenants = 1, 2,4\nquota = 25,100\ngpus = 2, 4\nlink = nvlink, pcie\nsystems = hami, fcsp\n",
         )
         .unwrap();
         assert_eq!(fc.get("jobs"), Some("8"));
@@ -244,8 +258,19 @@ mod tests {
         let s = fc.sweep().unwrap();
         assert_eq!(s.tenants, Some(vec![1, 2, 4]));
         assert_eq!(s.quotas, Some(vec![25, 100]));
+        assert_eq!(s.gpus, Some(vec![2, 4]));
+        assert_eq!(s.links, Some(vec!["nvlink".to_string(), "pcie".to_string()]));
         assert_eq!(s.systems, Some(vec!["hami".to_string(), "fcsp".to_string()]));
         assert_eq!(s.categories, None);
+    }
+
+    #[test]
+    fn sweep_topology_keys_absent_and_bad_values() {
+        let fc = FileConfig::parse("[sweep]\ntenants = 1,2\n").unwrap();
+        let s = fc.sweep().unwrap();
+        assert!(s.gpus.is_none() && s.links.is_none());
+        let bad = FileConfig::parse("[sweep]\ngpus = 2,lots\n").unwrap();
+        assert!(matches!(bad.sweep(), Err(ConfigError::Value(_, _))));
     }
 
     #[test]

@@ -1,23 +1,31 @@
 //! Scenario-matrix sweeps: the (systems × tenant counts × quota levels ×
-//! metrics) evaluation grid, executed as one flat task list through the
-//! parallel sharded executor.
+//! GPU counts × link kinds × metrics) evaluation grid, executed as one
+//! flat task list through the parallel sharded executor.
 //!
 //! The single-point suite answers "how good is system S at the default
 //! operating point"; isolation and fragmentation behaviour only becomes
 //! visible when swept across tenant counts and partition sizes (MIGPerf,
-//! arXiv 2301.00407; fragmentation-aware scheduling, arXiv 2511.18906).
-//! A [`SweepSpec`] names the grid; [`run_sweep`] expands it:
+//! arXiv 2301.00407; fragmentation-aware scheduling, arXiv 2511.18906),
+//! and multi-GPU communication behaviour only when the node topology is
+//! an explicit axis (LLM-era sharing, arXiv 2508.08448). A [`SweepSpec`]
+//! names the grid; [`run_sweep`] expands it:
 //!
 //! 1. Scenarios are the (tenants, quota) cross product, deduplicated, with
-//!    the **baseline cell** (1 tenant, 100 % quota) prepended if absent —
-//!    every system's cells report their score delta against it.
-//! 2. Every (system, scenario, metric) cell becomes one executor task with
-//!    a fully pre-derived [`RunConfig`]: quota maps onto `mem_limit` /
-//!    `sm_limit` (percent of the whole device granted to each tenant) and
-//!    the per-task seed is `task_seed(scenario_seed(run_seed, tenants,
-//!    quota), system, metric)` — a pure function of the cell coordinates,
-//!    so a sweep is **bit-identical at any `--jobs` count** (proven by
-//!    `rust/tests/sweep_determinism.rs`).
+//!    the **baseline scenario** (1 tenant, 100 % quota) prepended if
+//!    absent. Topologies are the (gpu_count, link) cross product — the
+//!    full cell coordinate is `(system, tenants, quota_pct, gpu_count,
+//!    link)`, and every cell reports its score delta against the baseline
+//!    scenario **of its own (system, topology) block**, so NVLink and
+//!    PCIe nodes are each compared against themselves.
+//! 2. Every (system, topology, scenario, metric) cell becomes one executor
+//!    task with a fully pre-derived [`RunConfig`]: quota maps onto
+//!    `mem_limit` / `sm_limit` (percent of the whole device granted to
+//!    each tenant), `gpu_count` / `link` select the simulated node the
+//!    NCCL/P2P and PCIe backends build, and the per-task seed is
+//!    `task_seed(topology_seed(scenario_seed(run_seed, tenants, quota),
+//!    gpus, link), system, metric)` — a pure function of the cell
+//!    coordinates, so a sweep is **bit-identical at any `--jobs` count**
+//!    (proven by `rust/tests/sweep_determinism.rs`).
 //! 3. Results re-assemble into per-cell [`ScoreCard`]s against the
 //!    MIG-Ideal spec baseline, forming the [`SweepSurface`] that
 //!    `report::sweep` renders as JSON / CSV / TXT.
@@ -26,8 +34,9 @@ use std::collections::{HashMap, HashSet};
 
 use crate::metrics::{registry, taxonomy, Category, MetricResult, RunConfig};
 use crate::scoring::{Grade, ScoreCard};
+use crate::simgpu::nvlink::LinkKind;
 use crate::simgpu::GpuSpec;
-use crate::util::rng::scenario_seed;
+use crate::util::rng::{scenario_seed, topology_seed};
 use crate::virt::ALL_SYSTEMS;
 
 use super::executor::{self, ExecutionStats, Task};
@@ -36,10 +45,38 @@ use super::executor::{self, ExecutionStats, Task};
 pub const BASELINE_TENANTS: u32 = 1;
 /// Quota percent of the baseline cell every delta is computed against.
 pub const BASELINE_QUOTA_PCT: u32 = 100;
+/// GPU count of the default node — the topology every pre-topology-axis
+/// (PR-3-era) baseline row is re-run on, and the single value the default
+/// grid evaluates.
+pub const DEFAULT_GPU_COUNT: u32 = 4;
+/// Link kind of the default node (the paper's A100 PCIe testbed).
+pub const DEFAULT_LINK: LinkKind = LinkKind::Pcie;
 
 /// A sweep specification: which systems to evaluate over which
-/// (tenant count × quota percent) scenario grid, optionally restricted to
-/// a set of metric categories.
+/// (tenant count × quota percent) scenario grid and which
+/// (gpu_count × link) node topologies, optionally restricted to a set of
+/// metric categories.
+///
+/// # Examples
+///
+/// ```
+/// use gvb::coordinator::sweep::SweepSpec;
+/// use gvb::simgpu::nvlink::LinkKind;
+///
+/// let spec = SweepSpec {
+///     systems: vec!["hami".into()],
+///     tenants: vec![2, 4],
+///     quotas: vec![50],
+///     gpu_counts: vec![2, 4],
+///     links: vec![LinkKind::NvLink, LinkKind::Pcie],
+///     categories: None,
+/// };
+/// // The baseline scenario (1 tenant, 100 % quota) is injected first…
+/// assert_eq!(spec.scenarios(), vec![(1, 100), (2, 50), (4, 50)]);
+/// // …and the topology axes expand as a cross product.
+/// assert_eq!(spec.topologies().len(), 4);
+/// assert_eq!(spec.topologies()[0], (2, LinkKind::NvLink));
+/// ```
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
     /// Backend keys (`native` / `hami` / `fcsp` / `mig` / `timeslice`).
@@ -49,18 +86,26 @@ pub struct SweepSpec {
     /// Per-tenant quota levels in percent of the whole device (memory and
     /// SM alike); 100 % = unconstrained.
     pub quotas: Vec<u32>,
+    /// GPU counts of the simulated node (`--gpus 2,4,8`); an empty list
+    /// falls back to [`DEFAULT_GPU_COUNT`].
+    pub gpu_counts: Vec<u32>,
+    /// Interconnect kinds of the simulated node (`--link nvlink,pcie`);
+    /// an empty list falls back to [`DEFAULT_LINK`].
+    pub links: Vec<LinkKind>,
     /// Restrict to these metric categories (None = all 56 metrics).
     pub categories: Option<Vec<Category>>,
 }
 
 impl SweepSpec {
     /// The default grid: all Table-2 systems × tenants 1,2,4,8 × quotas
-    /// 25,50,100 %, over the full taxonomy.
+    /// 25,50,100 % on the default 4-GPU PCIe node, over the full taxonomy.
     pub fn default_grid() -> SweepSpec {
         SweepSpec {
             systems: ALL_SYSTEMS.iter().map(|s| s.to_string()).collect(),
             tenants: vec![1, 2, 4, 8],
             quotas: vec![25, 50, 100],
+            gpu_counts: vec![DEFAULT_GPU_COUNT],
+            links: vec![DEFAULT_LINK],
             categories: None,
         }
     }
@@ -83,6 +128,25 @@ impl SweepSpec {
         out
     }
 
+    /// The deduplicated (gpu_count, link) topology list, in grid order
+    /// (gpu counts outer, link kinds inner). Empty axes fall back to the
+    /// default 4-GPU PCIe node so a spec without topology lists behaves
+    /// exactly like the pre-topology-axis sweep.
+    pub fn topologies(&self) -> Vec<(u32, LinkKind)> {
+        let mut out: Vec<(u32, LinkKind)> = Vec::new();
+        let gpus: &[u32] =
+            if self.gpu_counts.is_empty() { &[DEFAULT_GPU_COUNT] } else { &self.gpu_counts };
+        let links: &[LinkKind] = if self.links.is_empty() { &[DEFAULT_LINK] } else { &self.links };
+        for &g in gpus {
+            for &l in links {
+                out.push((g, l));
+            }
+        }
+        let mut seen = HashSet::new();
+        out.retain(|t| seen.insert(*t));
+        out
+    }
+
     /// Metric ids this spec evaluates, in global Table-8 order.
     pub fn metric_ids(&self) -> Vec<&'static str> {
         match &self.categories {
@@ -92,20 +156,51 @@ impl SweepSpec {
     }
 }
 
-/// The per-cell config: `base` with the cell's system, tenant count and
-/// quota applied. Quota is the percent of the full device granted to each
-/// tenant, for memory quota and SM limit alike — so (1 tenant, 100 %) is
-/// the unconstrained baseline and (4 tenants, 25 %) reproduces the
-/// paper's default equal-share-of-four operating point. The seed becomes
-/// the scenario seed; the executor then derives per-metric task seeds
-/// from it.
-pub fn cell_cfg(base: &RunConfig, system: &str, tenants: u32, quota_pct: u32) -> RunConfig {
+/// The per-cell config: `base` with the cell's system, tenant count,
+/// quota and node topology applied. Quota is the percent of the full
+/// device granted to each tenant, for memory quota and SM limit alike —
+/// so (1 tenant, 100 %) is the unconstrained baseline and (4 tenants,
+/// 25 %) reproduces the paper's default equal-share-of-four operating
+/// point. `gpu_count` / `link` select the simulated node the NCCL/P2P
+/// and PCIe metric backends build. The seed becomes the composed
+/// scenario+topology seed; the executor then derives per-metric task
+/// seeds from it, so the full chain is
+/// `task_seed(topology_seed(scenario_seed(run_seed, tenants, quota),
+/// gpus, link), system, metric)`.
+pub fn cell_cfg(
+    base: &RunConfig,
+    system: &str,
+    tenants: u32,
+    quota_pct: u32,
+    gpu_count: u32,
+    link: LinkKind,
+) -> RunConfig {
     let dev_mem = GpuSpec::a100_40gb().hbm_bytes;
     let mut cfg = base.clone();
     cfg.system = system.to_string();
     cfg.tenants = tenants;
     cfg.mem_limit = dev_mem.saturating_mul(quota_pct as u64) / 100;
     cfg.sm_limit = quota_pct as f64 / 100.0;
+    cfg.gpu_count = gpu_count;
+    cfg.link = link;
+    cfg.seed = topology_seed(scenario_seed(base.seed, tenants, quota_pct), gpu_count, link.key());
+    cfg
+}
+
+/// The PR-3-era per-cell config: identical quota→mem/SM mapping and the
+/// same default node the pre-topology-axis sweep hardcoded, but the seed
+/// stops at the scenario layer — `task_seed(scenario_seed(seed, tenants,
+/// quota), system, metric)` — exactly the derivation that produced
+/// 4-tuple (no `gpu_count`/`link` columns) baselines. The regress engine
+/// re-runs topology-less rows through this so genuinely old baselines
+/// compare bit-identically against an unchanged tree.
+pub fn legacy_cell_cfg(
+    base: &RunConfig,
+    system: &str,
+    tenants: u32,
+    quota_pct: u32,
+) -> RunConfig {
+    let mut cfg = cell_cfg(base, system, tenants, quota_pct, DEFAULT_GPU_COUNT, DEFAULT_LINK);
     cfg.seed = scenario_seed(base.seed, tenants, quota_pct);
     cfg
 }
@@ -114,7 +209,8 @@ pub fn cell_cfg(base: &RunConfig, system: &str, tenants: u32, quota_pct: u32) ->
 /// hardware partitioning exposes [`crate::virt::mig::COMPUTE_SLICES`]
 /// compute slices on an A100, so such systems cannot host more concurrent
 /// tenants than slices; the sweep records those cells as infeasible
-/// instead of driving the backend into a registration failure.
+/// instead of driving the backend into a registration failure. The
+/// topology axes do not restrict feasibility: tenancy is per GPU.
 pub fn cell_feasible(system: &str, tenants: u32) -> bool {
     match crate::virt::by_name(system) {
         Some(layer) => {
@@ -124,24 +220,31 @@ pub fn cell_feasible(system: &str, tenants: u32) -> bool {
     }
 }
 
-/// One scored (system, tenants, quota) cell of the sweep surface.
+/// One scored (system, tenants, quota, gpu_count, link) cell of the
+/// sweep surface.
 #[derive(Clone, Debug)]
 pub struct SweepCell {
     pub system: String,
     pub tenants: u32,
     pub quota_pct: u32,
+    /// GPUs in the cell's simulated node.
+    pub gpu_count: u32,
+    /// Interconnect of the cell's simulated node.
+    pub link: LinkKind,
     /// Weighted overall score of this cell against the MIG-Ideal spec
     /// baseline (same scoring as the single-point suite). NaN when the
     /// cell is infeasible.
     pub overall: f64,
     /// Signed percent change of `overall` vs this system's baseline cell
-    /// (1 tenant, 100 % quota); negative = degraded under the scenario.
+    /// (1 tenant, 100 % quota) **on the same topology**; negative =
+    /// degraded under the scenario.
     pub delta_vs_baseline_pct: f64,
     /// Category → mean score, in `Category::ALL` order (only categories
     /// the spec selected). Empty when the cell is infeasible.
     pub per_category: Vec<(Category, f64)>,
     pub grade: Grade,
-    /// True for the (1 tenant, 100 % quota) reference cell.
+    /// True for the (1 tenant, 100 % quota) reference scenario of its
+    /// (system, topology) block.
     pub is_baseline: bool,
     /// False when the system cannot host the scenario at all (e.g. more
     /// tenants than MIG compute slices); such cells ran no metrics.
@@ -155,68 +258,89 @@ pub struct SweepCell {
 
 /// A completed sweep: all scored cells plus the run's execution timings.
 pub struct SweepSurface {
-    /// The run seed the scenario/task seeds were derived from.
+    /// The run seed the scenario/topology/task seeds were derived from.
     pub seed: u64,
     /// Metric ids evaluated in every cell, in Table-8 order.
     pub metric_ids: Vec<&'static str>,
-    /// Cells in deterministic order: spec's system order, then scenario
-    /// order (baseline first when it was injected).
+    /// Cells in deterministic order: spec's system order, then topology
+    /// order (gpu counts outer, links inner), then scenario order
+    /// (baseline first when it was injected).
     pub cells: Vec<SweepCell>,
     /// Wall-clock + per-task timings of the whole flattened matrix.
     pub stats: ExecutionStats,
 }
 
 impl SweepSurface {
-    /// The worst-degrading non-baseline cell (most negative delta) per
-    /// system, in the surface's system order.
-    pub fn worst_cells(&self) -> Vec<&SweepCell> {
-        let mut order: Vec<&str> = Vec::new();
-        let mut worst: HashMap<&str, &SweepCell> = HashMap::new();
+    /// The worst-degrading non-baseline feasible cell (most negative
+    /// delta) per `key` group, in first-appearance order.
+    fn worst_by_key<K: std::hash::Hash + Eq + Clone>(
+        &self,
+        key: impl Fn(&SweepCell) -> K,
+    ) -> Vec<&SweepCell> {
+        let mut order: Vec<K> = Vec::new();
+        let mut worst: HashMap<K, &SweepCell> = HashMap::new();
         for c in &self.cells {
             if c.is_baseline || !c.feasible {
                 continue;
             }
-            let key = c.system.as_str();
-            match worst.get(key).map(|prev| prev.delta_vs_baseline_pct) {
+            let k = key(c);
+            match worst.get(&k).map(|prev| prev.delta_vs_baseline_pct) {
                 None => {
-                    order.push(key);
-                    worst.insert(key, c);
+                    order.push(k.clone());
+                    worst.insert(k, c);
                 }
                 Some(prev_delta) => {
                     if c.delta_vs_baseline_pct < prev_delta {
-                        worst.insert(key, c);
+                        worst.insert(k, c);
                     }
                 }
             }
         }
-        order.iter().filter_map(|s| worst.get(s).copied()).collect()
+        order.iter().filter_map(|k| worst.get(k).copied()).collect()
+    }
+
+    /// The worst-degrading non-baseline cell (most negative delta) per
+    /// system, in the surface's system order.
+    pub fn worst_cells(&self) -> Vec<&SweepCell> {
+        self.worst_by_key(|c| c.system.clone())
+    }
+
+    /// The worst-degrading non-baseline cell per (system, link kind), in
+    /// first-appearance order — the per-link summary the TXT and JSON
+    /// reporters surface so NVLink and PCIe nodes are each judged against
+    /// their own baselines.
+    pub fn worst_cells_per_link(&self) -> Vec<&SweepCell> {
+        self.worst_by_key(|c| (c.system.clone(), c.link))
     }
 }
 
 /// Expand `spec` into a flat task list, execute it through the sharded
 /// executor on `jobs` workers (0 = available parallelism), and score each
-/// cell. `base` supplies iterations/warmup/seed; system, tenants, quota
-/// and per-task seeds are derived per cell.
+/// cell. `base` supplies iterations/warmup/seed; system, tenants, quota,
+/// topology and per-task seeds are derived per cell.
 pub fn run_sweep(base: &RunConfig, spec: &SweepSpec, jobs: usize) -> SweepSurface {
     let ids = spec.metric_ids();
     let scenarios = spec.scenarios();
+    let topologies = spec.topologies();
 
     // One flat (task, prepared config) list over the whole matrix, in
     // deterministic cell order.
     let mut pairs: Vec<(Task, RunConfig)> = Vec::with_capacity(
-        spec.systems.len() * scenarios.len() * ids.len(),
+        spec.systems.len() * topologies.len() * scenarios.len() * ids.len(),
     );
     for system in &spec.systems {
-        for &(tenants, quota) in &scenarios {
-            if !cell_feasible(system, tenants) {
-                continue; // recorded as an infeasible cell below
-            }
-            let cfg = cell_cfg(base, system, tenants, quota);
-            for &id in &ids {
-                pairs.push((
-                    Task { system: system.clone(), metric_id: id },
-                    executor::derive_cfg(&cfg, system, id),
-                ));
+        for &(gpus, link) in &topologies {
+            for &(tenants, quota) in &scenarios {
+                if !cell_feasible(system, tenants) {
+                    continue; // recorded as an infeasible cell below
+                }
+                let cfg = cell_cfg(base, system, tenants, quota, gpus, link);
+                for &id in &ids {
+                    pairs.push((
+                        Task { system: system.clone(), metric_id: id },
+                        executor::derive_cfg(&cfg, system, id),
+                    ));
+                }
             }
         }
     }
@@ -235,76 +359,86 @@ pub fn run_sweep(base: &RunConfig, spec: &SweepSpec, jobs: usize) -> SweepSurfac
     // Re-group the flat results into cells (all ids are registry-known, so
     // the executor returns exactly one result per task, in input order).
     let per_cell = ids.len();
-    let mut cells: Vec<SweepCell> = Vec::with_capacity(spec.systems.len() * scenarios.len());
+    let mut cells: Vec<SweepCell> =
+        Vec::with_capacity(spec.systems.len() * topologies.len() * scenarios.len());
     let mut offset = 0;
     for system in &spec.systems {
-        let first_cell_of_system = cells.len();
-        for &(tenants, quota) in &scenarios {
-            let is_baseline = tenants == BASELINE_TENANTS && quota == BASELINE_QUOTA_PCT;
-            if !cell_feasible(system, tenants) {
+        for &(gpus, link) in &topologies {
+            let first_cell_of_block = cells.len();
+            for &(tenants, quota) in &scenarios {
+                let is_baseline = tenants == BASELINE_TENANTS && quota == BASELINE_QUOTA_PCT;
+                if !cell_feasible(system, tenants) {
+                    cells.push(SweepCell {
+                        system: system.clone(),
+                        tenants,
+                        quota_pct: quota,
+                        gpu_count: gpus,
+                        link,
+                        overall: f64::NAN,
+                        delta_vs_baseline_pct: 0.0,
+                        per_category: Vec::new(),
+                        grade: Grade::F,
+                        is_baseline,
+                        feasible: false,
+                        results: Vec::new(),
+                    });
+                    continue;
+                }
+                let cell_results: Vec<MetricResult> = slots[offset..offset + per_cell]
+                    .iter()
+                    .zip(&ids)
+                    .map(|(slot, id)| {
+                        slot.as_ref()
+                            .unwrap_or_else(|| {
+                                panic!(
+                                    "sweep cell {system}/{tenants}t/{quota}%/{gpus}g/{}: \
+                                     metric `{id}` is in the taxonomy but not the runnable \
+                                     registry",
+                                    link.key()
+                                )
+                            })
+                            .clone()
+                    })
+                    .collect();
+                offset += per_cell;
+                let card = ScoreCard::build(system, &cell_results, &spec_baseline);
+                let per_category: Vec<(Category, f64)> = Category::ALL
+                    .iter()
+                    .filter_map(|c| card.per_category.get(c).map(|s| (*c, *s)))
+                    .collect();
                 cells.push(SweepCell {
                     system: system.clone(),
                     tenants,
                     quota_pct: quota,
-                    overall: f64::NAN,
+                    gpu_count: gpus,
+                    link,
+                    overall: card.overall,
                     delta_vs_baseline_pct: 0.0,
-                    per_category: Vec::new(),
-                    grade: Grade::F,
+                    per_category,
+                    grade: card.grade(),
                     is_baseline,
-                    feasible: false,
-                    results: Vec::new(),
+                    feasible: true,
+                    results: cell_results,
                 });
-                continue;
             }
-            let cell_results: Vec<MetricResult> = slots[offset..offset + per_cell]
+            // Deltas vs this (system, topology) block's baseline cell
+            // (always present and feasible — it has 1 tenant — whether
+            // in-grid or injected).
+            let base_overall = cells[first_cell_of_block..]
                 .iter()
-                .zip(&ids)
-                .map(|(slot, id)| {
-                    slot.as_ref()
-                        .unwrap_or_else(|| {
-                            panic!(
-                                "sweep cell {system}/{tenants}t/{quota}%: metric `{id}` \
-                                 is in the taxonomy but not the runnable registry"
-                            )
-                        })
-                        .clone()
-                })
-                .collect();
-            offset += per_cell;
-            let card = ScoreCard::build(system, &cell_results, &spec_baseline);
-            let per_category: Vec<(Category, f64)> = Category::ALL
-                .iter()
-                .filter_map(|c| card.per_category.get(c).map(|s| (*c, *s)))
-                .collect();
-            cells.push(SweepCell {
-                system: system.clone(),
-                tenants,
-                quota_pct: quota,
-                overall: card.overall,
-                delta_vs_baseline_pct: 0.0,
-                per_category,
-                grade: card.grade(),
-                is_baseline,
-                feasible: true,
-                results: cell_results,
-            });
-        }
-        // Deltas vs this system's baseline cell (always present and
-        // feasible — it has 1 tenant — whether in-grid or injected).
-        let base_overall = cells[first_cell_of_system..]
-            .iter()
-            .find(|c| c.is_baseline)
-            .map(|c| c.overall)
-            .unwrap_or(f64::NAN);
-        for c in &mut cells[first_cell_of_system..] {
-            c.delta_vs_baseline_pct = if base_overall.abs() < 1e-12
-                || !base_overall.is_finite()
-                || !c.overall.is_finite()
-            {
-                0.0
-            } else {
-                (c.overall - base_overall) / base_overall * 100.0
-            };
+                .find(|c| c.is_baseline)
+                .map(|c| c.overall)
+                .unwrap_or(f64::NAN);
+            for c in &mut cells[first_cell_of_block..] {
+                c.delta_vs_baseline_pct = if base_overall.abs() < 1e-12
+                    || !base_overall.is_finite()
+                    || !c.overall.is_finite()
+                {
+                    0.0
+                } else {
+                    (c.overall - base_overall) / base_overall * 100.0
+                };
+            }
         }
     }
 
@@ -320,6 +454,8 @@ mod tests {
             systems: vec!["native".into(), "hami".into()],
             tenants: vec![2, 4],
             quotas: vec![50],
+            gpu_counts: vec![DEFAULT_GPU_COUNT],
+            links: vec![DEFAULT_LINK],
             categories: Some(vec![Category::Pcie]),
         }
     }
@@ -338,26 +474,73 @@ mod tests {
     }
 
     #[test]
-    fn cell_cfg_maps_quota_and_seed() {
+    fn topologies_cross_product_dedupes_and_defaults() {
+        let s = SweepSpec {
+            gpu_counts: vec![2, 4, 4],
+            links: vec![LinkKind::NvLink, LinkKind::Pcie],
+            ..small_spec()
+        };
+        assert_eq!(
+            s.topologies(),
+            vec![
+                (2, LinkKind::NvLink),
+                (2, LinkKind::Pcie),
+                (4, LinkKind::NvLink),
+                (4, LinkKind::Pcie),
+            ]
+        );
+        // Empty axes fall back to the default 4-GPU PCIe node.
+        let bare = SweepSpec { gpu_counts: vec![], links: vec![], ..small_spec() };
+        assert_eq!(bare.topologies(), vec![(DEFAULT_GPU_COUNT, DEFAULT_LINK)]);
+    }
+
+    #[test]
+    fn cell_cfg_maps_quota_topology_and_seed() {
         let base = RunConfig::quick("native");
-        let cfg = cell_cfg(&base, "hami", 4, 25);
+        let cfg = cell_cfg(&base, "hami", 4, 25, 8, LinkKind::NvLink);
         assert_eq!(cfg.system, "hami");
         assert_eq!(cfg.tenants, 4);
         assert_eq!(cfg.mem_limit, 10 << 30); // 25 % of an A100-40GB
         assert!((cfg.sm_limit - 0.25).abs() < 1e-12);
-        assert_eq!(cfg.seed, scenario_seed(base.seed, 4, 25));
+        assert_eq!(cfg.gpu_count, 8);
+        assert_eq!(cfg.link, LinkKind::NvLink);
+        assert_eq!(
+            cfg.seed,
+            topology_seed(scenario_seed(base.seed, 4, 25), 8, "nvlink")
+        );
         assert_eq!(cfg.iterations, base.iterations);
         // The unconstrained baseline cell grants the whole device.
-        let b = cell_cfg(&base, "hami", 1, 100);
+        let b = cell_cfg(&base, "hami", 1, 100, DEFAULT_GPU_COUNT, DEFAULT_LINK);
         assert_eq!(b.mem_limit, 40u64 << 30);
         assert!((b.sm_limit - 1.0).abs() < 1e-12);
+        // Same scenario on different topologies: different seeds.
+        let nv = cell_cfg(&base, "hami", 4, 25, 4, LinkKind::NvLink);
+        let pc = cell_cfg(&base, "hami", 4, 25, 4, LinkKind::Pcie);
+        assert_ne!(nv.seed, pc.seed);
+    }
+
+    #[test]
+    fn legacy_cell_cfg_matches_pr3_derivation() {
+        let base = RunConfig::quick("native");
+        let legacy = legacy_cell_cfg(&base, "hami", 4, 25);
+        let modern = cell_cfg(&base, "hami", 4, 25, DEFAULT_GPU_COUNT, DEFAULT_LINK);
+        // Same quota mapping and the same default node…
+        assert_eq!(legacy.mem_limit, modern.mem_limit);
+        assert!((legacy.sm_limit - modern.sm_limit).abs() < 1e-12);
+        assert_eq!(legacy.gpu_count, DEFAULT_GPU_COUNT);
+        assert_eq!(legacy.link, DEFAULT_LINK);
+        // …but the seed stops at the scenario layer, exactly as the
+        // pre-topology-axis sweep derived it.
+        assert_eq!(legacy.seed, scenario_seed(base.seed, 4, 25));
+        assert_ne!(legacy.seed, modern.seed);
     }
 
     #[test]
     fn sweep_shapes_and_baseline_deltas() {
         let base = RunConfig::quick("native");
         let surface = run_sweep(&base, &small_spec(), 2);
-        // 2 systems × 3 scenarios (baseline injected) × 4 PCIe metrics.
+        // 2 systems × 1 topology × 3 scenarios (baseline injected) ×
+        // 4 PCIe metrics.
         assert_eq!(surface.metric_ids.len(), 4);
         assert_eq!(surface.cells.len(), 6);
         assert_eq!(surface.stats.tasks.len(), 24);
@@ -365,6 +548,8 @@ mod tests {
             assert!(c.feasible);
             assert!(c.overall.is_finite(), "{}/{}t/{}%", c.system, c.tenants, c.quota_pct);
             assert!(!c.per_category.is_empty());
+            assert_eq!(c.gpu_count, DEFAULT_GPU_COUNT);
+            assert_eq!(c.link, DEFAULT_LINK);
             // Raw per-metric results ride along in metric_ids order.
             assert_eq!(c.results.len(), surface.metric_ids.len());
             for (r, id) in c.results.iter().zip(&surface.metric_ids) {
@@ -372,13 +557,53 @@ mod tests {
                 assert_eq!(r.system, c.system);
             }
         }
-        // First cell per system is the injected baseline with delta 0.
+        // First cell per (system, topology) block is the injected
+        // baseline with delta 0.
         for sys_block in surface.cells.chunks(3) {
             assert!(sys_block[0].is_baseline);
             assert_eq!(sys_block[0].tenants, 1);
             assert_eq!(sys_block[0].quota_pct, 100);
             assert_eq!(sys_block[0].delta_vs_baseline_pct, 0.0);
         }
+    }
+
+    #[test]
+    fn topology_axes_expand_cells_with_per_block_baselines() {
+        let base = RunConfig::quick("native");
+        let spec = SweepSpec {
+            systems: vec!["native".into()],
+            tenants: vec![2],
+            quotas: vec![50],
+            gpu_counts: vec![4, 8],
+            links: vec![LinkKind::NvLink, LinkKind::Pcie],
+            categories: Some(vec![Category::Nccl]),
+        };
+        let surface = run_sweep(&base, &spec, 2);
+        // 1 system × 4 topologies × 2 scenarios ((1,100) injected) ×
+        // 4 NCCL metrics.
+        assert_eq!(surface.cells.len(), 8);
+        assert_eq!(surface.stats.tasks.len(), 32);
+        // Every topology block leads with its own baseline cell.
+        for block in surface.cells.chunks(2) {
+            assert!(block[0].is_baseline);
+            assert_eq!(block[0].delta_vs_baseline_pct, 0.0);
+            assert_eq!(block[0].gpu_count, block[1].gpu_count);
+            assert_eq!(block[0].link, block[1].link);
+        }
+        // NCCL-003 (P2P GB/s) is far faster on the NVLink cells than the
+        // PCIe cells of the same scenario: the topology actually reaches
+        // the metric backends.
+        let p2p = |link: LinkKind, gpus: u32| -> f64 {
+            let c = surface
+                .cells
+                .iter()
+                .find(|c| c.link == link && c.gpu_count == gpus && c.is_baseline)
+                .unwrap();
+            let idx =
+                surface.metric_ids.iter().position(|id| *id == "NCCL-003").unwrap();
+            c.results[idx].value
+        };
+        assert!(p2p(LinkKind::NvLink, 4) > p2p(LinkKind::Pcie, 4) * 5.0);
     }
 
     #[test]
@@ -395,10 +620,35 @@ mod tests {
     }
 
     #[test]
+    fn worst_cells_per_link_split_by_link_kind() {
+        let base = RunConfig::quick("native");
+        let spec = SweepSpec {
+            systems: vec!["hami".into()],
+            tenants: vec![4],
+            quotas: vec![25],
+            gpu_counts: vec![4],
+            links: vec![LinkKind::NvLink, LinkKind::Pcie],
+            categories: Some(vec![Category::Pcie]),
+        };
+        let surface = run_sweep(&base, &spec, 2);
+        let worst = surface.worst_cells_per_link();
+        assert_eq!(worst.len(), 2);
+        assert_eq!(worst[0].link, LinkKind::NvLink);
+        assert_eq!(worst[1].link, LinkKind::Pcie);
+        for w in &worst {
+            assert_eq!(w.system, "hami");
+            assert!(!w.is_baseline);
+        }
+        // The plain per-system summary still collapses to one cell.
+        assert_eq!(surface.worst_cells().len(), 1);
+    }
+
+    #[test]
     fn default_grid_is_full_matrix() {
         let g = SweepSpec::default_grid();
         assert_eq!(g.systems.len(), 4);
         assert_eq!(g.scenarios().len(), 12); // 4×3, baseline in-grid
+        assert_eq!(g.topologies(), vec![(DEFAULT_GPU_COUNT, DEFAULT_LINK)]);
         assert_eq!(g.metric_ids().len(), 56);
     }
 
@@ -415,6 +665,8 @@ mod tests {
             systems: vec!["mig".into()],
             tenants: vec![8],
             quotas: vec![50],
+            gpu_counts: vec![DEFAULT_GPU_COUNT],
+            links: vec![DEFAULT_LINK],
             categories: Some(vec![Category::Pcie]),
         };
         let surface = run_sweep(&RunConfig::quick("native"), &spec, 2);
@@ -432,5 +684,6 @@ mod tests {
         assert_eq!(surface.stats.tasks.len(), 4);
         // And it never shows up as a worst-degrading cell.
         assert!(surface.worst_cells().is_empty());
+        assert!(surface.worst_cells_per_link().is_empty());
     }
 }

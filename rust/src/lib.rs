@@ -57,33 +57,47 @@
 //!
 //! ## Scenario sweeps and the CI regression gate
 //!
-//! `gvbench sweep` evaluates multi-tenant operating points instead of the
-//! single default configuration: [`coordinator::sweep`] expands a
-//! [`coordinator::sweep::SweepSpec`] into one flat task list (each cell's
-//! per-tenant quota maps onto memory/SM limits; its seed derives as
-//! `task_seed(scenario_seed(run_seed, tenants, quota), system, metric)`),
-//! executes it via [`coordinator::executor::execute_prepared_indexed`], and scores
-//! every cell against the MIG-Ideal spec baseline. [`report::sweep`]
-//! renders the resulting surface — per-cell overall/category scores and
-//! the delta vs the (1 tenant, 100 % quota) baseline cell — as CSV, JSON
-//! or a TXT summary of the worst-degrading cells per system.
+//! `gvbench sweep` evaluates multi-tenant **and multi-GPU** operating
+//! points instead of the single default configuration:
+//! [`coordinator::sweep`] expands a [`coordinator::sweep::SweepSpec`] —
+//! systems × tenants × quotas × **gpu_counts × link kinds** × metrics —
+//! into one flat task list. Each cell's per-tenant quota maps onto
+//! memory/SM limits, its `gpu_count`/`link` coordinates select the
+//! simulated node topology the NCCL/P2P and PCIe metric backends build
+//! ([`metrics::RunConfig::node_topology`]), and its seed derives as
+//! `task_seed(topology_seed(scenario_seed(run_seed, tenants, quota),
+//! gpus, link), system, metric)`. The matrix executes via
+//! [`coordinator::executor::execute_prepared_indexed`], and every cell is
+//! scored against the MIG-Ideal spec baseline. [`report::sweep`] renders
+//! the resulting surface — per-cell overall/category scores and the
+//! delta vs the (1 tenant, 100 % quota) baseline cell of the same
+//! (system, topology) block — as CSV, JSON or a TXT summary of the
+//! worst-degrading cells per system and per link kind.
 //! `rust/tests/sweep_determinism.rs` proves sweeps bit-identical at any
-//! job count.
+//! job count, topology axes included.
 //!
 //! The sweep CSV surface is **long format** — one row per (cell × metric),
 //! with the cell's score summary denormalized onto every row — so it
-//! doubles as a per-cell regression baseline. [`regress`] parses both that
-//! surface and the single-point `gvbench run --format csv` table into one
-//! baseline model keyed by `(system, tenants, quota_pct, metric)`,
-//! reconstructs each cell's [`metrics::RunConfig`] with the producing
-//! run's exact seed derivation, re-runs the cells through
+//! doubles as a per-cell regression baseline. [`regress`] parses that
+//! surface (with or without the PR-4 topology columns — PR-3-era
+//! baselines re-run on the default 4-GPU PCIe node with their original
+//! scenario-layer seed derivation) and the single-point
+//! `gvbench run --format csv` table into one baseline model keyed by
+//! `(system, tenants, quota_pct, gpu_count, link, metric)`, reconstructs
+//! each cell's [`metrics::RunConfig`] with the producing run's exact
+//! seed derivation, re-runs the cells through
 //! [`coordinator::executor::execute_prepared_indexed`] (`--jobs`), and
 //! applies direction-aware per-cell comparison. `gvbench regress` exposes
-//! it (`--report-json` / `--report-md` emit machine-readable reports); CI
-//! wires it into two blocking gates — quick-point and 2×2 sweep — that
-//! publish those reports as artifacts and into `$GITHUB_STEP_SUMMARY`
-//! (see `ci/README.md`). `rust/tests/regress_engine.rs` proves the
-//! sweep→CSV→regress round-trip clean at any job count.
+//! it (`--report-json` / `--report-md` emit machine-readable reports,
+//! including a per-link-kind breakdown); CI wires it into two blocking
+//! gates — quick-point and the 2×2×2 sweep — that publish those reports
+//! as artifacts and into `$GITHUB_STEP_SUMMARY` (see `ci/README.md`).
+//! `rust/tests/regress_engine.rs` proves the sweep→CSV→regress
+//! round-trip clean at any job count for all three baseline schemas.
+//!
+//! Operator-facing guides live under `docs/` (`architecture.md`,
+//! `sweeps.md`, `regression-gating.md`), with the quickstart in the
+//! top-level `README.md`.
 
 pub mod anyhow;
 pub mod benchkit;

@@ -18,6 +18,8 @@ pub mod registry;
 pub mod scheduling;
 pub mod taxonomy;
 
+use crate::simgpu::nvlink::{LinkKind, Topology};
+use crate::simgpu::GpuSpec;
 use crate::stats::Summary;
 
 /// Metric category (Table 1).
@@ -138,6 +140,14 @@ pub struct RunConfig {
     pub mem_limit: u64,
     /// SM limit per tenant in multi-tenant scenarios (fraction).
     pub sm_limit: f64,
+    /// GPUs in the simulated multi-GPU node — the NCCL/P2P rank count and
+    /// the PCIe host-complex population (default 4, the node the
+    /// NCCL-001..004 category evaluated before the topology became a
+    /// sweep axis). Swept by `gvbench sweep --gpus 2,4,8`.
+    pub gpu_count: u32,
+    /// Interconnect joining the node's GPUs (default PCIe — the paper's
+    /// A100 PCIe testbed). Swept by `gvbench sweep --link nvlink,pcie`.
+    pub link: LinkKind,
     /// Worker threads for suite execution (0 = available parallelism).
     /// Results are bit-identical at any job count: each (system, metric)
     /// task derives its own seed via [`crate::util::rng::task_seed`].
@@ -154,6 +164,8 @@ impl Default for RunConfig {
             seed: 42,
             mem_limit: 10 << 30, // 10 GiB = equal quarter of an A100-40GB
             sm_limit: 0.25,
+            gpu_count: 4,
+            link: LinkKind::Pcie,
             jobs: 0,
         }
     }
@@ -171,6 +183,28 @@ impl RunConfig {
             iterations: 25,
             warmup: 3,
             ..Default::default()
+        }
+    }
+
+    /// The multi-GPU node topology of this run's cell: `gpu_count`
+    /// devices joined by `link`. PCIe nodes use `spec`'s host-link
+    /// bandwidth; NVLink nodes use `spec`'s per-direction NVLink
+    /// bandwidth when the profile has one, falling back to the A100-SXM
+    /// sibling's NVLink3 figure for PCIe SKUs (whose spec carries
+    /// `nvlink_gbps = 0`). The NCCL/P2P metric backends build their
+    /// communicator from this, so collective numbers are keyed to the
+    /// sweep cell's topology coordinates.
+    pub fn node_topology(&self, spec: &GpuSpec) -> Topology {
+        match self.link {
+            LinkKind::NvLink => {
+                let bw = if spec.nvlink_gbps > 0.0 {
+                    spec.nvlink_gbps
+                } else {
+                    GpuSpec::a100_80gb_sxm().nvlink_gbps
+                };
+                Topology::nvlink_node(self.gpu_count, bw)
+            }
+            LinkKind::Pcie => Topology::pcie_node(self.gpu_count, spec.pcie_gbps),
         }
     }
 }
@@ -235,6 +269,28 @@ mod tests {
             assert_eq!(Category::from_key(c.key()), Some(c));
         }
         assert_eq!(Category::from_key("bogus"), None);
+    }
+
+    #[test]
+    fn node_topology_follows_link_and_count() {
+        let spec = GpuSpec::a100_40gb();
+        let mut cfg = RunConfig::default();
+        // Defaults reproduce the pre-PR-4 hardcoded node: 4 ranks, PCIe.
+        assert_eq!(cfg.gpu_count, 4);
+        assert_eq!(cfg.link, LinkKind::Pcie);
+        let t = cfg.node_topology(&spec);
+        assert_eq!(t.device_count, 4);
+        assert_eq!(t.link_kind(), LinkKind::Pcie);
+        assert_eq!(t.pcie_gbps, spec.pcie_gbps);
+        cfg.link = LinkKind::NvLink;
+        cfg.gpu_count = 8;
+        let t = cfg.node_topology(&spec);
+        assert_eq!(t.device_count, 8);
+        assert_eq!(t.link_kind(), LinkKind::NvLink);
+        // PCIe SKU (nvlink_gbps = 0): falls back to the SXM sibling.
+        assert_eq!(t.nvlink_gbps, GpuSpec::a100_80gb_sxm().nvlink_gbps);
+        let sxm = GpuSpec::a100_80gb_sxm();
+        assert_eq!(cfg.node_topology(&sxm).nvlink_gbps, sxm.nvlink_gbps);
     }
 
     #[test]

@@ -1,29 +1,35 @@
 //! NCCL/P2P communication metrics NCCL-001..004 (paper §3.7).
 //!
-//! Collectives ride the simulated interconnect ([`Topology`]); software
+//! Collectives ride the simulated interconnect
+//! ([`crate::simgpu::nvlink::Topology`]), built per run from the cell's
+//! `RunConfig::gpu_count` / `RunConfig::link` coordinates rather than a
+//! fixed node — `gvbench sweep --gpus 2,4,8 --link nvlink,pcie` therefore
+//! measures every collective on every topology cell. The defaults
+//! (4 GPUs over PCIe) reproduce the paper's §7.1 testbed. Software
 //! virtualization intercepts NCCL's internal kernel launches, so each
 //! collective pays `hook × kernels_per_op` of added CPU time.
 
 use crate::cudalite::{Api, CollectiveCtx};
-use crate::simgpu::nvlink::Topology;
 use crate::simgpu::TenantId;
 use crate::virt::TenantConfig;
 
 use super::{MetricResult, RunConfig};
 
 const TENANT: TenantId = 1;
-const RANKS: u32 = 4;
 
 fn collective_ctx(cfg: &RunConfig) -> (Api, CollectiveCtx) {
     let mut api = Api::with_backend(&cfg.system, cfg.seed);
     api.ctx_create(TENANT, TenantConfig::unlimited()).expect("ctx");
-    // Paper testbed: A100 PCIe — collectives over the PCIe switch.
-    let topo = Topology::pcie_node(RANKS, api.dev.spec.pcie_gbps);
+    // The cell's node: `gpu_count` ranks joined by `link` (default: the
+    // paper's 4-GPU A100 PCIe testbed).
+    let topo = cfg.node_topology(&api.dev.spec);
     api.virt.hook_overhead_ns(&mut api.dev); // warm (FCSP caches on first call)
     let hook = api.virt.hook_overhead_ns(&mut api.dev);
     let clock = api.dev.clock.clone();
-    // Ring collectives launch ~2 kernels per rank per operation.
-    let coll = CollectiveCtx::new(topo, clock).with_virt_overhead(hook, 2 * RANKS);
+    // Ring collectives launch ~2 kernels per rank per operation (a ring
+    // needs at least 2 ranks, matching the topology's internal clamp).
+    let ranks = cfg.gpu_count.max(2);
+    let coll = CollectiveCtx::new(topo, clock).with_virt_overhead(hook, 2 * ranks);
     (api, coll)
 }
 
@@ -106,5 +112,33 @@ mod tests {
     fn nccl004_broadcast_sane() {
         let bw = nccl_004(&quick("native")).value;
         assert!(bw > 20.0 && bw <= 25.2, "broadcast bw={bw}");
+    }
+
+    #[test]
+    fn nvlink_cell_outruns_pcie_cell() {
+        use crate::simgpu::nvlink::LinkKind;
+        let pcie = quick("native");
+        let mut nvlink = quick("native");
+        nvlink.link = LinkKind::NvLink;
+        // P2P bandwidth on an NVLink node approaches NVLink3 (300 GB/s),
+        // an order of magnitude over the PCIe node's ~25 GB/s.
+        let bw_pcie = nccl_003(&pcie).value;
+        let bw_nvlink = nccl_003(&nvlink).value;
+        assert!(bw_nvlink > bw_pcie * 5.0, "pcie={bw_pcie} nvlink={bw_nvlink}");
+        // Allreduce latency drops accordingly.
+        assert!(nccl_001(&nvlink).value < nccl_001(&pcie).value);
+    }
+
+    #[test]
+    fn gpu_count_scales_collective_latency() {
+        let mut small = quick("native");
+        small.gpu_count = 2;
+        let mut large = quick("native");
+        large.gpu_count = 8;
+        // More ranks: more ring hops and more intercepted launches, so
+        // allreduce latency grows with the node's GPU count.
+        let t2 = nccl_001(&small).value;
+        let t8 = nccl_001(&large).value;
+        assert!(t8 > t2, "2-gpu={t2} 8-gpu={t8}");
     }
 }

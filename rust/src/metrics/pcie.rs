@@ -1,4 +1,14 @@
 //! PCIe bandwidth metrics PCIE-001..004 (paper §3.6).
+//!
+//! Host↔device transfers are keyed to the sweep cell's topology: the
+//! simulated host exposes [`HOST_ROOT_PORTS`] dedicated x16 root ports
+//! (a DGX-like chassis), so cells with `RunConfig::gpu_count` beyond
+//! that share ports behind PCIe switches and every GPU on a port pays
+//! saturating sibling traffic in both directions. At the default
+//! 4-GPU node this is a no-op and the numbers match the paper's
+//! single-link §7.1 testbed. The link *kind* does not enter here: SXM
+//! nodes still reach the host over PCIe, so `--link nvlink` changes
+//! only the collective (NCCL/P2P) path.
 
 use crate::cudalite::Api;
 use crate::simgpu::pcie::Direction;
@@ -9,9 +19,28 @@ use super::{MetricResult, RunConfig};
 
 const TENANT: TenantId = 1;
 
+/// Upstream x16 root ports on the simulated host. Up to this many GPUs
+/// get dedicated host links; larger `gpu_count` cells divide sustained
+/// host bandwidth among the GPUs sharing one port.
+pub const HOST_ROOT_PORTS: u32 = 4;
+
+/// Pseudo-tenant id base for sibling-GPU background flows — real tenant
+/// ids stay in `1..=64`, so these can never collide.
+const SIBLING_FLOW_BASE: TenantId = 1_000;
+
 fn api_for(cfg: &RunConfig) -> Api {
     let mut api = Api::with_backend(&cfg.system, cfg.seed);
     api.ctx_create(TENANT, TenantConfig::unlimited()).expect("ctx");
+    // Thread the cell topology into the host link: every sibling GPU
+    // sharing this GPU's root port saturates its fair share of the
+    // upstream bandwidth in both directions.
+    let per_port = (cfg.gpu_count + HOST_ROOT_PORTS - 1) / HOST_ROOT_PORTS;
+    for s in 1..per_port {
+        let flow = SIBLING_FLOW_BASE + s;
+        let demand = api.dev.spec.pcie_gbps;
+        api.dev.pcie.set_background(flow, Direction::HostToDevice, demand);
+        api.dev.pcie.set_background(flow, Direction::DeviceToHost, demand);
+    }
     api
 }
 
@@ -101,6 +130,35 @@ mod tests {
     fn pcie004_pinned_ratio() {
         let r = pcie_004(&quick("native")).value;
         assert!((r - 2.4).abs() < 0.2, "ratio={r}");
+    }
+
+    #[test]
+    fn host_port_sharing_keys_bandwidth_to_gpu_count() {
+        // Up to HOST_ROOT_PORTS GPUs each own a root port: bit-identical
+        // to the single-link testbed numbers.
+        let mut two = quick("native");
+        two.gpu_count = 2;
+        let mut four = quick("native");
+        four.gpu_count = 4;
+        assert_eq!(
+            pcie_001(&two).value.to_bits(),
+            pcie_001(&four).value.to_bits(),
+            "dedicated-port cells must match the single-link testbed"
+        );
+        // An 8-GPU cell shares each port between two GPUs: sustained
+        // host bandwidth halves.
+        let mut eight = quick("native");
+        eight.gpu_count = 8;
+        let solo = pcie_001(&four).value;
+        let shared = pcie_001(&eight).value;
+        assert!(
+            shared < solo * 0.55 && shared > solo * 0.4,
+            "solo={solo} shared={shared}"
+        );
+        // The pinned/pageable ratio is share-invariant.
+        let r4 = pcie_004(&four).value;
+        let r8 = pcie_004(&eight).value;
+        assert!((r4 - r8).abs() / r4 < 0.02, "r4={r4} r8={r8}");
     }
 
     #[test]

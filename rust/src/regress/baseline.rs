@@ -2,17 +2,27 @@
 //!
 //! A baseline CSV is either a **point** table (`gvbench run --all-systems
 //! --format csv`: `id,...,system,value`, no scenario columns) or a
-//! **sweep** surface (`gvbench sweep --format csv`: one row per cell ×
-//! metric with `system,tenants,quota_pct,feasible,id,value` columns).
-//! The schema is auto-detected from the header; the two must not be
-//! mixed — a header carrying only one of `tenants`/`quota_pct` is
-//! rejected, as is any data row that does not fit the detected schema.
-//! Every rejection names the offending row.
+//! **sweep** surface (`gvbench sweep --format csv`): one row per cell ×
+//! metric. Two sweep generations are accepted:
+//!
+//! - the **extended** (PR 4+) schema with the full topology coordinate
+//!   (`system,tenants,quota_pct,gpu_count,link,feasible,id,value` columns
+//!   among others), and
+//! - the **PR-3-era** 4-tuple schema without `gpu_count`/`link` columns,
+//!   whose rows re-run on the default 4-GPU PCIe node with the
+//!   scenario-layer seed derivation their producing sweep used
+//!   ([`crate::coordinator::sweep::legacy_cell_cfg`]).
+//!
+//! The schema is auto-detected from the header; generations must not be
+//! mixed — a header carrying only one of `tenants`/`quota_pct`, or only
+//! one of `gpu_count`/`link`, is rejected, as is any data row that does
+//! not fit the detected schema. Every rejection names the offending row.
 
 use std::collections::BTreeSet;
 
 use crate::anyhow::{bail, Context, Result};
 use crate::metrics::taxonomy;
+use crate::simgpu::nvlink::LinkKind;
 
 /// Which kind of baseline CSV was parsed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,7 +31,7 @@ pub enum BaselineSchema {
     /// re-run at the regress invocation's own `RunConfig`.
     Point,
     /// Long-format sweep surface (`gvbench sweep --format csv`); rows
-    /// carry a full (tenants, quota) cell coordinate.
+    /// carry a full (tenants, quota[, gpu_count, link]) cell coordinate.
     Sweep,
 }
 
@@ -34,13 +44,25 @@ impl BaselineSchema {
     }
 }
 
+/// Full sweep-cell coordinate of one baseline row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CellCoord {
+    pub tenants: u32,
+    pub quota_pct: u32,
+    /// Topology axes `(gpu_count, link)`; `None` in PR-3-era baselines
+    /// without `gpu_count`/`link` columns — such rows re-run on the
+    /// default node (4 GPUs over PCIe) with the scenario-layer seed
+    /// derivation their producing sweep used.
+    pub topo: Option<(u32, LinkKind)>,
+}
+
 /// One parsed baseline entry, keyed by its full cell coordinate.
 #[derive(Clone, Debug)]
 pub struct BaselineRow {
     pub system: String,
-    /// Sweep cell coordinate `(tenants, quota_pct)`; `None` for point
-    /// rows, which re-run at the invocation's configured operating point.
-    pub cell: Option<(u32, u32)>,
+    /// Sweep cell coordinate; `None` for point rows, which re-run at the
+    /// invocation's configured operating point.
+    pub cell: Option<CellCoord>,
     pub id: String,
     pub value: f64,
     /// 1-based CSV line number, for error messages.
@@ -54,10 +76,14 @@ impl BaselineRow {
     }
 }
 
-/// Render a cell coordinate as `4t@25%` (or `point` when absent).
-pub fn cell_label(cell: Option<(u32, u32)>) -> String {
+/// Render a cell coordinate as `4t@25%` (PR-3-era rows),
+/// `4t@25%/8g/nvlink` (extended rows) or `point` (absent).
+pub fn cell_label(cell: Option<CellCoord>) -> String {
     match cell {
-        Some((t, q)) => format!("{t}t@{q}%"),
+        Some(CellCoord { tenants, quota_pct, topo: Some((gpus, link)) }) => {
+            format!("{tenants}t@{quota_pct}%/{gpus}g/{}", link.key())
+        }
+        Some(CellCoord { tenants, quota_pct, topo: None }) => format!("{tenants}t@{quota_pct}%"),
         None => "point".to_string(),
     }
 }
@@ -69,15 +95,44 @@ pub struct Baseline {
     pub schema: BaselineSchema,
     /// Feasible rows, in file order.
     pub rows: Vec<BaselineRow>,
-    /// Distinct `(system, tenants, quota_pct)` cells marked
-    /// `feasible: false` in the file.
-    pub infeasible: Vec<(String, u32, u32)>,
+    /// Distinct `(system, cell)` coordinates marked `feasible: false` in
+    /// the file.
+    pub infeasible: Vec<(String, CellCoord)>,
+}
+
+impl Baseline {
+    /// Parse a baseline CSV — an inherent-method alias for
+    /// [`parse_baseline_csv`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use gvb::regress::{Baseline, BaselineSchema};
+    ///
+    /// // A PR-3-era sweep baseline without topology columns still parses…
+    /// let legacy = "system,tenants,quota_pct,feasible,id,value\n\
+    ///               hami,2,50,true,OH-001,15.3\n";
+    /// let b = Baseline::parse(legacy, "native").unwrap();
+    /// assert_eq!(b.schema, BaselineSchema::Sweep);
+    /// assert!(b.rows[0].cell.unwrap().topo.is_none());
+    /// assert_eq!(b.rows[0].cell_label(), "2t@50%");
+    ///
+    /// // …and the extended schema carries the full topology coordinate.
+    /// let extended = "system,tenants,quota_pct,gpu_count,link,feasible,id,value\n\
+    ///                 hami,2,50,8,nvlink,true,OH-001,15.3\n";
+    /// let b = Baseline::parse(extended, "native").unwrap();
+    /// assert_eq!(b.rows[0].cell_label(), "2t@50%/8g/nvlink");
+    /// ```
+    pub fn parse(text: &str, default_system: &str) -> Result<Baseline> {
+        parse_baseline_csv(text, default_system)
+    }
 }
 
 /// Parse a baseline CSV. Point rows without a `system` column are
 /// attributed to `default_system`. Unknown metric ids, unknown systems,
-/// malformed fields, out-of-range cell coordinates and duplicate
-/// `(system, cell, id)` keys are rejected with the offending row named.
+/// unknown link kinds, malformed fields, out-of-range cell coordinates
+/// and duplicate `(system, cell, id)` keys are rejected with the
+/// offending row named.
 pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> {
     let mut lines = text.lines();
     let header = lines.next().context("empty baseline file")?;
@@ -88,6 +143,8 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
     let system_col = col("system");
     let tenants_col = col("tenants");
     let quota_col = col("quota_pct");
+    let gpus_col = col("gpu_count");
+    let link_col = col("link");
     let feasible_col = col("feasible");
     let schema = match (tenants_col, quota_col) {
         (Some(_), Some(_)) => BaselineSchema::Sweep,
@@ -96,6 +153,15 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
             "mixed-schema baseline header: `tenants` and `quota_pct` must appear together"
         ),
     };
+    if gpus_col.is_some() != link_col.is_some() {
+        bail!("mixed-schema baseline header: `gpu_count` and `link` must appear together");
+    }
+    if gpus_col.is_some() && schema == BaselineSchema::Point {
+        bail!(
+            "topology columns (`gpu_count`/`link`) require the sweep schema \
+             (`tenants`/`quota_pct`)"
+        );
+    }
     if schema == BaselineSchema::Sweep {
         if system_col.is_none() {
             bail!("sweep-schema baseline requires a `system` column");
@@ -106,8 +172,8 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
     }
 
     let mut rows: Vec<BaselineRow> = Vec::new();
-    let mut infeasible: Vec<(String, u32, u32)> = Vec::new();
-    let mut seen: BTreeSet<(String, Option<(u32, u32)>, String)> = BTreeSet::new();
+    let mut infeasible: Vec<(String, CellCoord)> = Vec::new();
+    let mut seen: BTreeSet<(String, Option<CellCoord>, String)> = BTreeSet::new();
     for (i, line) in lines.enumerate() {
         let lineno = i + 2;
         if line.trim().is_empty() {
@@ -138,7 +204,23 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
                 if !(1..=100).contains(&quota) {
                     bail!("row {lineno}: quota_pct value {quota} out of range (1..=100)");
                 }
-                Some((tenants, quota))
+                let topo = match (gpus_col, link_col) {
+                    (Some(gc), Some(lc)) => {
+                        let gpus: u32 = get_field(&fields, gc, lineno, "gpu_count")?
+                            .parse()
+                            .with_context(|| format!("row {lineno}: bad gpu_count value"))?;
+                        if !(1..=16).contains(&gpus) {
+                            bail!("row {lineno}: gpu_count value {gpus} out of range (1..=16)");
+                        }
+                        let key = get_field(&fields, lc, lineno, "link")?;
+                        let link = LinkKind::from_key(key).with_context(|| {
+                            format!("row {lineno}: unknown link kind `{key}` (expected nvlink/pcie)")
+                        })?;
+                        Some((gpus, link))
+                    }
+                    _ => None,
+                };
+                Some(CellCoord { tenants, quota_pct: quota, topo })
             }
         };
         if schema == BaselineSchema::Sweep {
@@ -147,8 +229,8 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
             match get_field(&fields, feasible_col.expect("sweep schema"), lineno, "feasible")?.as_str() {
                 "true" => {}
                 "false" => {
-                    let (t, q) = cell.expect("sweep schema");
-                    let key = (system.clone(), t, q);
+                    let coord = cell.expect("sweep schema");
+                    let key = (system.clone(), coord);
                     if !infeasible.contains(&key) {
                         infeasible.push(key);
                     }
@@ -219,6 +301,16 @@ pub fn split_csv(line: &str) -> Vec<String> {
 mod tests {
     use super::*;
 
+    /// A PR-3-era cell coordinate (no topology columns).
+    fn cc(tenants: u32, quota_pct: u32) -> CellCoord {
+        CellCoord { tenants, quota_pct, topo: None }
+    }
+
+    /// An extended cell coordinate.
+    fn cct(tenants: u32, quota_pct: u32, gpus: u32, link: LinkKind) -> CellCoord {
+        CellCoord { tenants, quota_pct, topo: Some((gpus, link)) }
+    }
+
     #[test]
     fn csv_splitter_handles_quotes() {
         assert_eq!(split_csv("a,\"b,c\",d"), vec!["a", "b,c", "d"]);
@@ -252,7 +344,7 @@ mod tests {
     }
 
     #[test]
-    fn parses_sweep_baseline_with_cells() {
+    fn parses_pr3_era_sweep_baseline_with_cells() {
         let csv = "system,tenants,quota_pct,is_baseline,feasible,id,value,overall_score,delta_vs_baseline_pct,grade\n\
                    hami,1,100,true,true,OH-001,15.3,0.8,0.000,B\n\
                    hami,4,25,false,true,OH-001,19.1,0.7,-12.500,C\n\
@@ -260,10 +352,25 @@ mod tests {
         let b = parse_baseline_csv(csv, "native").unwrap();
         assert_eq!(b.schema, BaselineSchema::Sweep);
         assert_eq!(b.rows.len(), 2);
-        assert_eq!(b.rows[0].cell, Some((1, 100)));
-        assert_eq!(b.rows[1].cell, Some((4, 25)));
+        assert_eq!(b.rows[0].cell, Some(cc(1, 100)));
+        assert_eq!(b.rows[1].cell, Some(cc(4, 25)));
         assert_eq!(b.rows[1].cell_label(), "4t@25%");
-        assert_eq!(b.infeasible, vec![("mig".to_string(), 8, 25)]);
+        assert_eq!(b.infeasible, vec![("mig".to_string(), cc(8, 25))]);
+    }
+
+    #[test]
+    fn parses_extended_sweep_baseline_with_topology_cells() {
+        let csv = "system,tenants,quota_pct,gpu_count,link,is_baseline,feasible,id,value,overall_score,delta_vs_baseline_pct,grade\n\
+                   hami,1,100,4,pcie,true,true,OH-001,15.3,0.8,0.000,B\n\
+                   hami,4,25,8,nvlink,false,true,OH-001,19.1,0.7,-12.500,C\n\
+                   mig,8,25,8,nvlink,false,false,,,NaN,0.000,-\n";
+        let b = parse_baseline_csv(csv, "native").unwrap();
+        assert_eq!(b.schema, BaselineSchema::Sweep);
+        assert_eq!(b.rows.len(), 2);
+        assert_eq!(b.rows[0].cell, Some(cct(1, 100, 4, LinkKind::Pcie)));
+        assert_eq!(b.rows[1].cell, Some(cct(4, 25, 8, LinkKind::NvLink)));
+        assert_eq!(b.rows[1].cell_label(), "4t@25%/8g/nvlink");
+        assert_eq!(b.infeasible, vec![("mig".to_string(), cct(8, 25, 8, LinkKind::NvLink))]);
     }
 
     #[test]
@@ -278,6 +385,21 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{e:#}").contains("feasible"), "{e:#}");
+        // Half a topology coordinate is neither generation.
+        let e = parse_baseline_csv(
+            "system,tenants,quota_pct,gpu_count,feasible,id,value\nhami,2,50,4,true,OH-001,1.0\n",
+            "hami",
+        )
+        .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("gpu_count") && msg.contains("link"), "{msg}");
+        // Topology columns glued onto the point schema.
+        let e = parse_baseline_csv(
+            "id,system,gpu_count,link,value\nOH-001,hami,4,pcie,1.0\n",
+            "hami",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("require the sweep schema"), "{e:#}");
     }
 
     #[test]
@@ -318,6 +440,25 @@ mod tests {
     }
 
     #[test]
+    fn rejects_malformed_topology_fields_naming_the_row() {
+        let hdr = "system,tenants,quota_pct,gpu_count,link,feasible,id,value\n";
+        // Bad gpu_count.
+        let e = parse_baseline_csv(&format!("{hdr}hami,2,50,lots,pcie,true,OH-001,1.0\n"), "hami")
+            .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("row 2") && msg.contains("bad gpu_count"), "{msg}");
+        // Out-of-range gpu_count.
+        let e = parse_baseline_csv(&format!("{hdr}hami,2,50,32,pcie,true,OH-001,1.0\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("out of range (1..=16)"), "{e:#}");
+        // Unknown link kind.
+        let e = parse_baseline_csv(&format!("{hdr}hami,2,50,4,sli,true,OH-001,1.0\n"), "hami")
+            .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("row 2") && msg.contains("sli"), "{msg}");
+    }
+
+    #[test]
     fn rejects_duplicates_and_empty() {
         assert!(parse_baseline_csv("id,value\n", "hami").is_err());
         let csv = "id,system,value\nOH-001,hami,1.0\nOH-001,hami,2.0\n";
@@ -330,6 +471,18 @@ mod tests {
         let csv = format!("{hdr}hami,2,50,true,OH-001,1.0\nhami,2,50,true,OH-001,1.2\n");
         let e = parse_baseline_csv(&csv, "hami").unwrap_err();
         assert!(format!("{e:#}").contains("2t@50%"), "{e:#}");
+        // The same scenario on *different topologies* is not a duplicate…
+        let hdr = "system,tenants,quota_pct,gpu_count,link,feasible,id,value\n";
+        let csv = format!(
+            "{hdr}hami,2,50,4,pcie,true,OH-001,1.0\nhami,2,50,4,nvlink,true,OH-001,1.2\n"
+        );
+        assert_eq!(parse_baseline_csv(&csv, "hami").unwrap().rows.len(), 2);
+        // …but the same full topology coordinate is.
+        let csv = format!(
+            "{hdr}hami,2,50,4,pcie,true,OH-001,1.0\nhami,2,50,4,pcie,true,OH-001,1.2\n"
+        );
+        let e = parse_baseline_csv(&csv, "hami").unwrap_err();
+        assert!(format!("{e:#}").contains("2t@50%/4g/pcie"), "{e:#}");
     }
 
     #[test]

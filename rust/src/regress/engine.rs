@@ -5,18 +5,24 @@
 //! [`RunConfig`] — point rows via [`executor::derive_cfg`] (the same
 //! derivation `gvbench run` used to produce them), sweep rows via
 //! [`sweep::cell_cfg`] + [`executor::derive_cfg`] (the same quota→mem/SM
-//! mapping and `task_seed(scenario_seed(seed, tenants, quota), system,
-//! metric)` composition `run_sweep` used) — and the whole list shards
-//! through [`executor::execute_prepared_indexed`] on `cfg.jobs` workers.
-//! Seed parity makes an unchanged tree compare clean against its own
-//! fresh baseline at any job count.
+//! mapping, the same node topology and the same
+//! `task_seed(topology_seed(scenario_seed(seed, tenants, quota), gpus,
+//! link), system, metric)` composition `run_sweep` used) — and the whole
+//! list shards through [`executor::execute_prepared_indexed`] on
+//! `cfg.jobs` workers. PR-3-era sweep rows carry no topology coordinate
+//! and re-run through [`sweep::legacy_cell_cfg`]: the default node
+//! ([`sweep::DEFAULT_GPU_COUNT`] GPUs over [`sweep::DEFAULT_LINK`])
+//! *and* the scenario-layer seed derivation (no `topology_seed` fold) —
+//! exactly what their producing sweep hardcoded, so genuinely old
+//! baselines stay bit-identical too. Seed parity makes an unchanged
+//! tree compare clean against its own fresh baseline at any job count.
 
 use crate::anyhow::{bail, Result};
 use crate::coordinator::executor::{self, ExecutionStats, Task};
 use crate::coordinator::sweep;
 use crate::metrics::{taxonomy, Direction, RunConfig};
 
-use super::baseline::{cell_label, Baseline, BaselineSchema};
+use super::baseline::{cell_label, Baseline, BaselineSchema, CellCoord};
 
 /// Percent by which `cur` is worse than `base` in the metric's own
 /// direction (positive = regressed; 0 = unchanged or improved).
@@ -63,7 +69,7 @@ pub fn worse_percent(direction: Direction, base: f64, cur: f64) -> f64 {
 pub struct CellDelta {
     pub system: String,
     /// Sweep cell coordinate; `None` for point rows.
-    pub cell: Option<(u32, u32)>,
+    pub cell: Option<CellCoord>,
     pub id: String,
     pub baseline: f64,
     pub current: f64,
@@ -75,7 +81,8 @@ pub struct CellDelta {
 }
 
 impl CellDelta {
-    /// Short human label for the cell coordinate (`4t@25%` / `point`).
+    /// Short human label for the cell coordinate (`4t@25%` /
+    /// `4t@25%/8g/nvlink` / `point`).
     pub fn cell_label(&self) -> String {
         cell_label(self.cell)
     }
@@ -164,18 +171,37 @@ pub fn run_regression(
         }
         let task_cfg = match row.cell {
             None => executor::derive_cfg(cfg, &row.system, d.id),
-            Some((tenants, quota)) => {
-                if !sweep::cell_feasible(&row.system, tenants) {
+            Some(coord) => {
+                if !sweep::cell_feasible(&row.system, coord.tenants) {
                     bail!(
                         "row {}: cell {}/{} is marked feasible but system `{}` cannot host {} tenants",
                         row.line,
                         row.system,
                         cell_label(row.cell),
                         row.system,
-                        tenants
+                        coord.tenants
                     );
                 }
-                let cell_cfg = sweep::cell_cfg(cfg, &row.system, tenants, quota);
+                // PR-3-era rows carry no topology coordinate: they were
+                // produced on the then-hardcoded default node with the
+                // scenario-layer seed derivation, so they re-run exactly
+                // that way — bit-identical to their producing sweep.
+                let cell_cfg = match coord.topo {
+                    Some((gpus, link)) => sweep::cell_cfg(
+                        cfg,
+                        &row.system,
+                        coord.tenants,
+                        coord.quota_pct,
+                        gpus,
+                        link,
+                    ),
+                    None => sweep::legacy_cell_cfg(
+                        cfg,
+                        &row.system,
+                        coord.tenants,
+                        coord.quota_pct,
+                    ),
+                };
                 executor::derive_cfg(&cell_cfg, &row.system, d.id)
             }
         };
@@ -304,7 +330,7 @@ mod tests {
         assert!(format!("{e:#}").contains("mps"), "{e:#}");
         // A sweep row claiming feasibility the backend cannot deliver.
         let mut r = row("mig", "OH-001", 1.0);
-        r.cell = Some((8, 50));
+        r.cell = Some(CellCoord { tenants: 8, quota_pct: 50, topo: None });
         let b = Baseline {
             schema: BaselineSchema::Sweep,
             rows: vec![r],
@@ -319,7 +345,7 @@ mod tests {
     fn worst_per_system_picks_the_largest_regression() {
         let delta = |system: &str, id: &str, worse: f64| CellDelta {
             system: system.to_string(),
-            cell: Some((4, 25)),
+            cell: Some(CellCoord { tenants: 4, quota_pct: 25, topo: None }),
             id: id.to_string(),
             baseline: 1.0,
             current: 2.0,

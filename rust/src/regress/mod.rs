@@ -7,16 +7,23 @@
 //! and fragmentation-aware scheduling work (arXiv 2511.18906) show that
 //! multi-tenant degradation hides. This module therefore keys every
 //! baseline entry by its **full cell coordinate** `(system, tenants,
-//! quota_pct, metric)`, so one engine gates both:
+//! quota_pct, gpu_count, link, metric)`, so one engine gates all of:
 //!
 //! - **point baselines** — the per-metric CSV `gvbench run --all-systems
 //!   --format csv` writes (no `tenants`/`quota_pct` columns; rows re-run
-//!   at the invocation's [`RunConfig`] operating point), and
-//! - **sweep surfaces** — the long-format CSV `gvbench sweep --format
-//!   csv` writes (one row per cell × metric; rows re-run through
-//!   [`crate::coordinator::sweep::cell_cfg`] so quota→mem/SM mapping and
-//!   the `task_seed(scenario_seed(seed, tenants, quota), system, metric)`
-//!   derivation are bit-identical to the original sweep).
+//!   at the invocation's [`crate::metrics::RunConfig`] operating point),
+//! - **extended sweep surfaces** — the long-format CSV `gvbench sweep
+//!   --format csv` writes (one row per cell × metric carrying the full
+//!   topology coordinate; rows re-run through
+//!   [`crate::coordinator::sweep::cell_cfg`] so quota→mem/SM mapping,
+//!   the node topology and the `task_seed(topology_seed(scenario_seed(
+//!   seed, tenants, quota), gpus, link), system, metric)` derivation are
+//!   bit-identical to the original sweep), and
+//! - **PR-3-era sweep surfaces** — 4-tuple baselines without
+//!   `gpu_count`/`link` columns, auto-detected and re-run through
+//!   [`crate::coordinator::sweep::legacy_cell_cfg`]: the default 4-GPU
+//!   PCIe node *and* the scenario-layer seed derivation their producing
+//!   sweep hardcoded, so genuinely old surfaces stay bit-identical.
 //!
 //! Layout:
 //!
@@ -24,24 +31,27 @@
 //!   auto-detection, per-row validation that names the offending line,
 //!   `feasible: false` cells recorded for skipping rather than re-run).
 //! - [`engine`] — [`run_regression`]: reconstructs each baseline row as
-//!   an explicit per-task [`RunConfig`], shards the re-run through
-//!   [`crate::coordinator::executor::execute_prepared_indexed`]
+//!   an explicit per-task [`crate::metrics::RunConfig`], shards the re-run
+//!   through [`crate::coordinator::executor::execute_prepared_indexed`]
 //!   (`--jobs`), and applies direction-aware per-cell comparison with the
 //!   6-decimal recording-resolution guard.
 //! - [`report`] — machine-readable surfaces: a JSON regression report
-//!   (per-cell deltas, threshold, pass/fail, executor timings) and a
-//!   GitHub-flavored markdown summary (worst regressions per system;
+//!   (per-cell deltas, threshold, pass/fail, executor timings, a
+//!   per-link-kind breakdown) and a GitHub-flavored markdown summary
+//!   (worst regressions per system, regressions grouped by link kind;
 //!   written to `$GITHUB_STEP_SUMMARY` by the CI gate jobs).
 //!
 //! `rust/tests/regress_engine.rs` proves the sweep-baseline round-trip
 //! (fresh sweep → CSV → regress passes against itself at `--jobs 1` and
-//! `--jobs 8`), infeasible-cell skipping, per-cell injected-regression
-//! detection, and malformed/mixed-schema rejection.
+//! `--jobs 8`, topology axes included), PR-3-era baseline acceptance,
+//! infeasible-cell skipping, per-cell injected-regression detection with
+//! the full coordinate named, and malformed/mixed-schema rejection. See
+//! `docs/regression-gating.md` for the operator-facing guide.
 
 pub mod baseline;
 pub mod engine;
 pub mod report;
 
-pub use baseline::{parse_baseline_csv, Baseline, BaselineRow, BaselineSchema};
+pub use baseline::{parse_baseline_csv, Baseline, BaselineRow, BaselineSchema, CellCoord};
 pub use engine::{run_regression, worse_percent, CellDelta, RegressOutcome};
 pub use report::{render_json, render_markdown};

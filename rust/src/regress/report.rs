@@ -1,19 +1,33 @@
 //! Machine-readable regression reports: a JSON document (per-cell
-//! deltas, threshold, pass/fail, executor timings) for artifact
-//! pipelines, and a GitHub-flavored markdown summary (worst regressions
-//! per system) that the CI gate jobs append to `$GITHUB_STEP_SUMMARY`.
+//! deltas, threshold, pass/fail, executor timings, a per-link-kind
+//! breakdown) for artifact pipelines, and a GitHub-flavored markdown
+//! summary (worst regressions per system, regressions grouped by link
+//! kind) that the CI gate jobs append to `$GITHUB_STEP_SUMMARY`.
 
 use crate::report::json::{array, render_execution, Obj};
 
 use super::engine::{CellDelta, RegressOutcome};
 
 fn delta_obj(c: &CellDelta) -> Obj {
+    let null = || "null".to_string();
     let mut o = Obj::new().str("system", &c.system);
     o = match c.cell {
-        Some((t, q)) => {
-            o.field("tenants", t.to_string()).field("quota_pct", q.to_string())
+        Some(coord) => {
+            let o2 = o
+                .field("tenants", coord.tenants.to_string())
+                .field("quota_pct", coord.quota_pct.to_string());
+            match coord.topo {
+                Some((gpus, link)) => {
+                    o2.field("gpu_count", gpus.to_string()).str("link", link.key())
+                }
+                None => o2.field("gpu_count", null()).field("link", null()),
+            }
         }
-        None => o.field("tenants", "null".to_string()).field("quota_pct", "null".to_string()),
+        None => o
+            .field("tenants", null())
+            .field("quota_pct", null())
+            .field("gpu_count", null())
+            .field("link", null()),
     };
     o.str("id", &c.id)
         .num("baseline", c.baseline)
@@ -22,11 +36,71 @@ fn delta_obj(c: &CellDelta) -> Obj {
         .bool("regressed", c.regressed)
 }
 
+/// Grouping label for the per-link-kind breakdown: the cell's link kind
+/// for extended sweep rows, `default-node` for PR-3-era rows (which
+/// re-ran on the default 4-GPU PCIe node) and `point` for point rows.
+fn link_group(c: &CellDelta) -> &'static str {
+    match c.cell {
+        Some(coord) => match coord.topo {
+            Some((_, link)) => link.key(),
+            None => "default-node",
+        },
+        None => "point",
+    }
+}
+
+/// Per-link-kind delta summary: `(label, checked, regressed, worst)`,
+/// in first-appearance order over the outcome's cells.
+fn link_breakdown(outcome: &RegressOutcome) -> Vec<(&'static str, usize, usize, Option<&CellDelta>)> {
+    let mut order: Vec<&'static str> = Vec::new();
+    let mut stats: std::collections::HashMap<&'static str, (usize, usize, Option<&CellDelta>)> =
+        std::collections::HashMap::new();
+    for c in &outcome.cells {
+        let key = link_group(c);
+        if !stats.contains_key(key) {
+            order.push(key);
+            stats.insert(key, (0, 0, None));
+        }
+        let entry = stats.get_mut(key).expect("inserted above");
+        entry.0 += 1;
+        if c.regressed {
+            entry.1 += 1;
+            let replace = match entry.2 {
+                None => true,
+                Some(prev) => c.worse_percent > prev.worse_percent,
+            };
+            if replace {
+                entry.2 = Some(c);
+            }
+        }
+    }
+    order
+        .into_iter()
+        .map(|k| {
+            let (checked, regressed, worst) = stats[k];
+            (k, checked, regressed, worst)
+        })
+        .collect()
+}
+
 /// The full JSON regression report.
 pub fn render_json(outcome: &RegressOutcome, baseline_label: &str) -> String {
     let cells: Vec<String> = outcome.cells.iter().map(|c| delta_obj(c).build()).collect();
     let regressions: Vec<String> =
         outcome.regressions().iter().map(|c| delta_obj(c).build()).collect();
+    let by_link: Vec<String> = link_breakdown(outcome)
+        .into_iter()
+        .map(|(label, checked, regressed, worst)| {
+            let mut o = Obj::new()
+                .str("link", label)
+                .field("checked", checked.to_string())
+                .field("regressed", regressed.to_string());
+            if let Some(w) = worst {
+                o = o.field("worst", delta_obj(w).build());
+            }
+            o.build()
+        })
+        .collect();
     Obj::new()
         .str("benchmark_version", crate::VERSION)
         .str("baseline", baseline_label)
@@ -39,6 +113,7 @@ pub fn render_json(outcome: &RegressOutcome, baseline_label: &str) -> String {
         .field("skipped_infeasible", outcome.skipped_infeasible.to_string())
         .field("cells", array(cells))
         .field("regressions", array(regressions))
+        .field("by_link", array(by_link))
         .field("execution", render_execution(&outcome.stats))
         .build()
 }
@@ -98,6 +173,31 @@ pub fn render_markdown(outcome: &RegressOutcome, baseline_label: &str) -> String
             ));
         }
         out.push('\n');
+        // Per-link breakdown — only worth a section when the baseline
+        // spans more than one link group.
+        let breakdown = link_breakdown(outcome);
+        if breakdown.len() > 1 {
+            out.push_str("### Regressions by link kind\n\n");
+            out.push_str("| Link | Checked | Regressed | Worst cell | Worse by |\n|---|---:|---:|---|---:|\n");
+            for (label, checked, regressed, worst) in breakdown {
+                match worst {
+                    Some(w) => out.push_str(&format!(
+                        "| {} | {} | {} | {} {} {} | {:+.1}% |\n",
+                        label,
+                        checked,
+                        regressed,
+                        w.system,
+                        w.cell_label(),
+                        w.id,
+                        w.worse_percent
+                    )),
+                    None => out.push_str(&format!(
+                        "| {label} | {checked} | {regressed} | — | — |\n"
+                    )),
+                }
+            }
+            out.push('\n');
+        }
     }
     out.push_str(&format!(
         "<sub>re-ran {} tasks on {} workers in {:.2}s (busy/wall {:.2}x)</sub>\n",
@@ -113,18 +213,31 @@ pub fn render_markdown(outcome: &RegressOutcome, baseline_label: &str) -> String
 mod tests {
     use super::*;
     use crate::coordinator::executor::ExecutionStats;
-    use crate::regress::baseline::BaselineSchema;
+    use crate::regress::baseline::{BaselineSchema, CellCoord};
+    use crate::simgpu::nvlink::LinkKind;
 
     fn delta(system: &str, cell: Option<(u32, u32)>, id: &str, worse: f64) -> CellDelta {
         CellDelta {
             system: system.to_string(),
-            cell,
+            cell: cell.map(|(tenants, quota_pct)| CellCoord { tenants, quota_pct, topo: None }),
             id: id.to_string(),
             baseline: 10.0,
             current: 10.0 * (1.0 + worse / 100.0),
             worse_percent: worse,
             regressed: worse > 5.0,
         }
+    }
+
+    fn delta_on(
+        system: &str,
+        cell: (u32, u32),
+        topo: (u32, LinkKind),
+        id: &str,
+        worse: f64,
+    ) -> CellDelta {
+        let mut d = delta(system, Some(cell), id, worse);
+        d.cell = Some(CellCoord { tenants: cell.0, quota_pct: cell.1, topo: Some(topo) });
+        d
     }
 
     fn outcome(cells: Vec<CellDelta>) -> RegressOutcome {
@@ -163,7 +276,28 @@ mod tests {
         let j = render_json(&out, "b.csv");
         assert!(j.contains("\"tenants\": null"), "{j}");
         assert!(j.contains("\"quota_pct\": null"), "{j}");
+        assert!(j.contains("\"gpu_count\": null"), "{j}");
+        assert!(j.contains("\"link\": null"), "{j}");
         assert!(j.contains("\"passed\": true"), "{j}");
+    }
+
+    #[test]
+    fn json_extended_rows_carry_topology_and_by_link_groups() {
+        let out = outcome(vec![
+            delta_on("hami", (4, 25), (8, LinkKind::NvLink), "NCCL-001", 40.0),
+            delta_on("hami", (4, 25), (8, LinkKind::Pcie), "NCCL-001", 0.0),
+            delta("hami", Some((4, 25)), "OH-001", 0.0),
+        ]);
+        let j = render_json(&out, "b.csv");
+        assert!(j.contains("\"gpu_count\": 8"), "{j}");
+        assert!(j.contains("\"link\": \"nvlink\""), "{j}");
+        assert!(j.contains("\"by_link\""), "{j}");
+        let idx = j.find("\"by_link\"").unwrap();
+        // Three groups: nvlink, pcie, default-node (the PR-3-era row).
+        assert!(j[idx..].contains("\"link\": \"nvlink\""), "{j}");
+        assert!(j[idx..].contains("\"link\": \"pcie\""), "{j}");
+        assert!(j[idx..].contains("\"link\": \"default-node\""), "{j}");
+        assert!(j[idx..].contains("\"worst\""), "{j}");
     }
 
     #[test]
@@ -192,6 +326,24 @@ mod tests {
         let worst_idx = m.find("Worst regression per system").unwrap();
         let all_idx = m.find("All regressions").unwrap();
         assert!(!m[worst_idx..all_idx].contains("4t@25%"), "{m}");
+    }
+
+    #[test]
+    fn markdown_groups_regressions_by_link_kind() {
+        let out = outcome(vec![
+            delta_on("hami", (2, 50), (8, LinkKind::NvLink), "NCCL-001", 40.0),
+            delta_on("hami", (2, 50), (8, LinkKind::Pcie), "NCCL-001", 12.0),
+            delta_on("hami", (2, 50), (4, LinkKind::Pcie), "NCCL-002", 18.0),
+        ]);
+        let m = render_markdown(&out, "b.csv");
+        assert!(m.contains("### Regressions by link kind"), "{m}");
+        // The worst pcie regression is the 18% one on the 4-GPU node.
+        assert!(m.contains("| pcie | 2 | 2 | hami 2t@50%/4g/pcie NCCL-002 | +18.0% |"), "{m}");
+        assert!(m.contains("| nvlink | 1 | 1 | hami 2t@50%/8g/nvlink NCCL-001 | +40.0% |"), "{m}");
+        // A single-group outcome keeps the summary compact.
+        let single = outcome(vec![delta("hami", Some((4, 25)), "OH-001", 12.0)]);
+        let m = render_markdown(&single, "b.csv");
+        assert!(!m.contains("by link kind"), "{m}");
     }
 
     #[test]

@@ -145,7 +145,8 @@ pub fn render(rep: &Report) -> String {
     top.build()
 }
 
-/// Encode [`ExecutionStats`] (wall-clock + per-task timings) as JSON.
+/// Encode [`crate::coordinator::executor::ExecutionStats`] (wall-clock +
+/// per-task timings) as JSON.
 pub fn render_execution(stats: &crate::coordinator::executor::ExecutionStats) -> String {
     let tasks: Vec<String> = stats
         .tasks

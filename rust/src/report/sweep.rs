@@ -1,17 +1,19 @@
-//! Sweep-surface reporting: the aggregated (system × tenants × quota)
-//! results from `coordinator::sweep`, rendered as JSON, CSV or a TXT
-//! summary that highlights the worst-degrading cells per system.
+//! Sweep-surface reporting: the aggregated (system × tenants × quota ×
+//! gpu_count × link) results from `coordinator::sweep`, rendered as JSON,
+//! CSV or a TXT summary that highlights the worst-degrading cells per
+//! system and per link kind.
 //!
 //! The CSV is the canonical "sweep surface": **long format**, one row per
 //! (cell × metric) with the cell's score summary denormalized onto every
 //! row — so it doubles as a per-cell regression baseline for
 //! `gvbench regress` (`crate::regress` keys rows by the full
-//! `(system, tenants, quota_pct, metric)` coordinate). Infeasible cells
-//! contribute a single marker row (`feasible=false`, empty id/value) that
-//! the regress engine skips. No host timings appear in the CSV, so
-//! identical sweeps render byte-identical CSV at any job count
-//! (`rust/tests/sweep_determinism.rs`). The JSON adds per-category
-//! scores and the `execution` timing object as metadata.
+//! `(system, tenants, quota_pct, gpu_count, link, metric)` coordinate).
+//! Infeasible cells contribute a single marker row (`feasible=false`,
+//! empty id/value) that the regress engine skips. No host timings appear
+//! in the CSV, so identical sweeps render byte-identical CSV at any job
+//! count (`rust/tests/sweep_determinism.rs`). The JSON adds per-category
+//! scores, the per-link worst-cell summary and the `execution` timing
+//! object as metadata.
 
 use crate::coordinator::sweep::{SweepCell, SweepSurface};
 
@@ -28,9 +30,9 @@ pub fn render(surface: &SweepSurface, format: Format) -> String {
 }
 
 /// Column header of the long-format CSV surface (also the schema the
-/// regress baseline parser detects sweep baselines by).
+/// regress baseline parser detects extended sweep baselines by).
 pub const CSV_HEADER: &str =
-    "system,tenants,quota_pct,is_baseline,feasible,id,value,overall_score,delta_vs_baseline_pct,grade";
+    "system,tenants,quota_pct,gpu_count,link,is_baseline,feasible,id,value,overall_score,delta_vs_baseline_pct,grade";
 
 /// Long format: one row per (cell, metric), cell summary denormalized;
 /// one marker row per infeasible cell. Stable column order for analysis
@@ -40,8 +42,14 @@ pub fn render_csv(surface: &SweepSurface) -> String {
     out.push('\n');
     for cell in &surface.cells {
         let prefix = format!(
-            "{},{},{},{},{}",
-            cell.system, cell.tenants, cell.quota_pct, cell.is_baseline, cell.feasible
+            "{},{},{},{},{},{},{}",
+            cell.system,
+            cell.tenants,
+            cell.quota_pct,
+            cell.gpu_count,
+            cell.link.key(),
+            cell.is_baseline,
+            cell.feasible
         );
         if !cell.feasible {
             out.push_str(&format!("{prefix},,,NaN,0.000,-\n"));
@@ -86,6 +94,8 @@ pub fn render_json(surface: &SweepSurface) -> String {
         .collect();
     let worst: Vec<String> =
         surface.worst_cells().iter().map(|c| cell_obj(c).build()).collect();
+    let worst_by_link: Vec<String> =
+        surface.worst_cells_per_link().iter().map(|c| cell_obj(c).build()).collect();
     let ids: Vec<String> =
         surface.metric_ids.iter().map(|id| super::json::quote(id)).collect();
     Obj::new()
@@ -94,6 +104,7 @@ pub fn render_json(surface: &SweepSurface) -> String {
         .field("metric_ids", array(ids))
         .field("cells", array(cells))
         .field("worst_degrading", array(worst))
+        .field("worst_degrading_by_link", array(worst_by_link))
         .field("execution", render_execution(&surface.stats))
         .build()
 }
@@ -103,6 +114,8 @@ fn cell_obj(c: &SweepCell) -> Obj {
         .str("system", &c.system)
         .field("tenants", c.tenants.to_string())
         .field("quota_pct", c.quota_pct.to_string())
+        .field("gpu_count", c.gpu_count.to_string())
+        .str("link", c.link.key())
         .bool("is_baseline", c.is_baseline)
         .bool("feasible", c.feasible)
         .num("overall_score", c.overall) // NaN renders as null when infeasible
@@ -111,7 +124,7 @@ fn cell_obj(c: &SweepCell) -> Obj {
 }
 
 /// Human-readable summary: the cell table plus the worst-degrading cells
-/// per system.
+/// per system and per (system, link).
 pub fn render_txt(surface: &SweepSurface) -> String {
     let mut out = String::new();
     out.push_str("GPU-Virt-Bench — scenario sweep surface\n");
@@ -122,18 +135,20 @@ pub fn render_txt(surface: &SweepSurface) -> String {
         surface.cells.len()
     ));
     out.push_str(&format!(
-        "{:<12} {:>7} {:>7} {:>9} {:>15} {:>6}\n",
-        "System", "Tenants", "Quota%", "Overall%", "Δ vs baseline", "Grade"
+        "{:<12} {:>7} {:>7} {:>5} {:>7} {:>9} {:>15} {:>6}\n",
+        "System", "Tenants", "Quota%", "GPUs", "Link", "Overall%", "Δ vs baseline", "Grade"
     ));
-    out.push_str(&format!("{}\n", "-".repeat(62)));
+    out.push_str(&format!("{}\n", "-".repeat(76)));
     for c in &surface.cells {
         let marker = if c.is_baseline { "*" } else { "" };
         if !c.feasible {
             out.push_str(&format!(
-                "{:<12} {:>7} {:>7} {:>9} {:>15} {:>6}\n",
+                "{:<12} {:>7} {:>7} {:>5} {:>7} {:>9} {:>15} {:>6}\n",
                 format!("{}{}", c.system, marker),
                 c.tenants,
                 c.quota_pct,
+                c.gpu_count,
+                c.link.key(),
                 "n/a",
                 "infeasible",
                 "-"
@@ -141,16 +156,18 @@ pub fn render_txt(surface: &SweepSurface) -> String {
             continue;
         }
         out.push_str(&format!(
-            "{:<12} {:>7} {:>7} {:>9.1} {:>14.1}% {:>6}\n",
+            "{:<12} {:>7} {:>7} {:>5} {:>7} {:>9.1} {:>14.1}% {:>6}\n",
             format!("{}{}", c.system, marker),
             c.tenants,
             c.quota_pct,
+            c.gpu_count,
+            c.link.key(),
             c.overall * 100.0,
             c.delta_vs_baseline_pct,
             c.grade.letter()
         ));
     }
-    out.push_str("  (* = baseline cell: 1 tenant, 100% quota)\n\n");
+    out.push_str("  (* = baseline cell: 1 tenant, 100% quota on its topology)\n\n");
     out.push_str("Worst-degrading cells per system:\n");
     let worst = surface.worst_cells();
     if worst.is_empty() {
@@ -158,9 +175,38 @@ pub fn render_txt(surface: &SweepSurface) -> String {
     }
     for c in worst {
         out.push_str(&format!(
-            "  {:<10} {} tenants @ {:>3}% quota — overall {:.1}% ({:+.1}% vs baseline)\n",
-            c.system, c.tenants, c.quota_pct, c.overall * 100.0, c.delta_vs_baseline_pct
+            "  {:<10} {} tenants @ {:>3}% quota on {}g/{} — overall {:.1}% ({:+.1}% vs baseline)\n",
+            c.system,
+            c.tenants,
+            c.quota_pct,
+            c.gpu_count,
+            c.link.key(),
+            c.overall * 100.0,
+            c.delta_vs_baseline_pct
         ));
+    }
+    // Only worth a second section when the surface spans >1 link kind.
+    let worst_by_link = surface.worst_cells_per_link();
+    let multi_link = {
+        let mut kinds: Vec<&str> = worst_by_link.iter().map(|c| c.link.key()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        kinds.len() > 1
+    };
+    if multi_link {
+        out.push_str("\nWorst-degrading cells per system and link:\n");
+        for c in worst_by_link {
+            out.push_str(&format!(
+                "  {:<10} {:<6} {} tenants @ {:>3}% quota on {} GPUs — overall {:.1}% ({:+.1}% vs baseline)\n",
+                c.system,
+                c.link.key(),
+                c.tenants,
+                c.quota_pct,
+                c.gpu_count,
+                c.overall * 100.0,
+                c.delta_vs_baseline_pct
+            ));
+        }
     }
     out
 }
@@ -171,12 +217,23 @@ mod tests {
     use crate::coordinator::executor::ExecutionStats;
     use crate::metrics::{Category, MetricResult};
     use crate::scoring::Grade;
+    use crate::simgpu::nvlink::LinkKind;
 
-    fn cell(system: &str, tenants: u32, quota: u32, overall: f64, delta: f64) -> SweepCell {
+    fn cell_on(
+        system: &str,
+        tenants: u32,
+        quota: u32,
+        gpus: u32,
+        link: LinkKind,
+        overall: f64,
+        delta: f64,
+    ) -> SweepCell {
         SweepCell {
             system: system.to_string(),
             tenants,
             quota_pct: quota,
+            gpu_count: gpus,
+            link,
             overall,
             delta_vs_baseline_pct: delta,
             per_category: vec![(Category::Pcie, overall)],
@@ -188,6 +245,10 @@ mod tests {
                 MetricResult::from_value("PCIE-004", system, overall),
             ],
         }
+    }
+
+    fn cell(system: &str, tenants: u32, quota: u32, overall: f64, delta: f64) -> SweepCell {
+        cell_on(system, tenants, quota, 4, LinkKind::Pcie, overall, delta)
     }
 
     fn surface() -> SweepSurface {
@@ -211,14 +272,26 @@ mod tests {
         assert_eq!(lines[0], CSV_HEADER);
         // 3 cells × 2 metrics, long format.
         assert_eq!(lines.len(), 7);
-        assert_eq!(lines[1], "hami,1,100,true,true,PCIE-001,12.500000,0.800000,0.000,B");
-        assert_eq!(lines[2], "hami,1,100,true,true,PCIE-004,0.800000,0.800000,0.000,B");
-        assert_eq!(lines[3], "hami,4,25,false,true,PCIE-001,12.500000,0.600000,-25.000,D");
-        // The long CSV parses directly as a sweep-schema regress baseline.
+        assert_eq!(
+            lines[1],
+            "hami,1,100,4,pcie,true,true,PCIE-001,12.500000,0.800000,0.000,B"
+        );
+        assert_eq!(
+            lines[2],
+            "hami,1,100,4,pcie,true,true,PCIE-004,0.800000,0.800000,0.000,B"
+        );
+        assert_eq!(
+            lines[3],
+            "hami,4,25,4,pcie,false,true,PCIE-001,12.500000,0.600000,-25.000,D"
+        );
+        // The long CSV parses directly as an extended sweep regress
+        // baseline carrying the topology coordinate.
         let b = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
         assert_eq!(b.schema, crate::regress::BaselineSchema::Sweep);
         assert_eq!(b.rows.len(), 6);
-        assert_eq!(b.rows[0].cell, Some((1, 100)));
+        let c = b.rows[0].cell.unwrap();
+        assert_eq!((c.tenants, c.quota_pct), (1, 100));
+        assert_eq!(c.topo, Some((4, LinkKind::Pcie)));
         assert_eq!(b.rows[0].value, 12.5);
     }
 
@@ -229,6 +302,8 @@ mod tests {
             system: "mig".to_string(),
             tenants: 8,
             quota_pct: 25,
+            gpu_count: 4,
+            link: LinkKind::Pcie,
             overall: f64::NAN,
             delta_vs_baseline_pct: 0.0,
             per_category: Vec::new(),
@@ -238,9 +313,14 @@ mod tests {
             results: Vec::new(),
         });
         let csv = render_csv(&s);
-        assert!(csv.contains("mig,8,25,false,false,,,NaN,0.000,-"), "{csv}");
+        assert!(csv.contains("mig,8,25,4,pcie,false,false,,,NaN,0.000,-"), "{csv}");
         let b = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
-        assert_eq!(b.infeasible, vec![("mig".to_string(), 8, 25)]);
+        assert_eq!(b.infeasible.len(), 1);
+        assert_eq!(b.infeasible[0].0, "mig");
+        assert_eq!(
+            (b.infeasible[0].1.tenants, b.infeasible[0].1.quota_pct),
+            (8, 25)
+        );
         let j = render_json(&s);
         assert!(j.contains("\"feasible\": false"));
         assert!(j.contains("\"overall_score\": null"));
@@ -254,7 +334,10 @@ mod tests {
         let j = render_json(&s);
         assert!(j.contains("\"cells\""));
         assert!(j.contains("\"worst_degrading\""));
+        assert!(j.contains("\"worst_degrading_by_link\""));
         assert!(j.contains("\"quota_pct\": 25"));
+        assert!(j.contains("\"gpu_count\": 4"));
+        assert!(j.contains("\"link\": \"pcie\""));
         assert!(j.contains("\"execution\""));
         assert!(j.contains("\"metrics\": [{\"id\": \"PCIE-001\""));
         // The worst hami cell is the 8-tenant one.
@@ -271,5 +354,21 @@ mod tests {
         assert!(t.contains("Worst-degrading cells per system:"));
         assert!(t.contains("8 tenants"));
         assert!(t.contains("baseline cell"));
+        // Single-link surface: no per-link section.
+        assert!(!t.contains("per system and link"), "{t}");
+    }
+
+    #[test]
+    fn txt_multi_link_surface_adds_per_link_section() {
+        let mut s = surface();
+        s.cells.push(cell_on("hami", 1, 100, 4, LinkKind::NvLink, 0.82, 0.0));
+        s.cells.push(cell_on("hami", 4, 25, 4, LinkKind::NvLink, 0.70, -14.6));
+        let t = render_txt(&s);
+        assert!(t.contains("Worst-degrading cells per system and link:"), "{t}");
+        assert!(t.contains("nvlink"), "{t}");
+        assert!(t.contains("pcie"), "{t}");
+        let j = render_json(&s);
+        let idx = j.find("worst_degrading_by_link").unwrap();
+        assert!(j[idx..].contains("\"link\": \"nvlink\""), "{j}");
     }
 }

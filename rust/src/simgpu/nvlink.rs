@@ -8,14 +8,46 @@
 //! - allreduce:  `2·(n-1)/n · size / bw + 2·(n-1)·latency`
 //! - allgather / reduce-scatter: `(n-1)/n · size / bw + (n-1)·latency`
 //! - broadcast (ring-pipelined): `size / bw + (n-1)·latency`
+//!
+//! Since PR 4 the node topology is an **experiment axis** rather than a
+//! fixed constant: a sweep cell's full coordinate is
+//! `(system, tenants, quota_pct, gpu_count, link)`, where `gpu_count`
+//! selects the device count passed to [`Topology::nvlink_node`] /
+//! [`Topology::pcie_node`] and `link` is a [`LinkKind`]. The NCCL/P2P
+//! and PCIe metric backends build their topology from those two
+//! `RunConfig` fields, so multi-GPU communication numbers are keyed to
+//! the cell being evaluated (see `docs/sweeps.md`).
 
 /// Interconnect flavour between a device pair.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// Also a sweep axis: `gvbench sweep --link nvlink,pcie` evaluates every
+/// scenario on both node flavours. [`LinkKind::key`] /
+/// [`LinkKind::from_key`] define the CLI / config-file / CSV spelling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum LinkKind {
     /// Direct NVLink.
     NvLink,
     /// Through the PCIe switch / host bridge.
     Pcie,
+}
+
+impl LinkKind {
+    /// Both kinds, in CLI listing order.
+    pub const ALL: [LinkKind; 2] = [LinkKind::NvLink, LinkKind::Pcie];
+
+    /// Stable lower-case key used by the CLI (`--link nvlink,pcie`), the
+    /// `[sweep]` config section and the sweep CSV `link` column.
+    pub fn key(&self) -> &'static str {
+        match self {
+            LinkKind::NvLink => "nvlink",
+            LinkKind::Pcie => "pcie",
+        }
+    }
+
+    /// Inverse of [`LinkKind::key`]; `None` for unknown spellings.
+    pub fn from_key(key: &str) -> Option<LinkKind> {
+        LinkKind::ALL.iter().copied().find(|l| l.key() == key)
+    }
 }
 
 /// A multi-GPU node topology.
@@ -153,6 +185,18 @@ mod tests {
         assert!(bw > 290.0, "bw={bw}");
         let (_, bw_half) = nv.p2p_ns(1 << 30, 0.5);
         assert!(bw_half < 155.0, "bw={bw_half}");
+    }
+
+    #[test]
+    fn link_kind_keys_roundtrip() {
+        for l in LinkKind::ALL {
+            assert_eq!(LinkKind::from_key(l.key()), Some(l));
+        }
+        assert_eq!(LinkKind::from_key("NVLINK"), None);
+        assert_eq!(LinkKind::from_key("sli"), None);
+        // The constructors produce nodes of the matching kind.
+        assert_eq!(Topology::nvlink_node(4, 300.0).link_kind(), LinkKind::NvLink);
+        assert_eq!(Topology::pcie_node(4, 25.0).link_kind(), LinkKind::Pcie);
     }
 
     #[test]

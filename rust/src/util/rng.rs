@@ -63,6 +63,42 @@ pub fn scenario_seed(seed: u64, tenants: u32, quota_pct: u32) -> u64 {
     splitmix64(&mut state)
 }
 
+/// Derive the topology-level seed for one sweep cell's `(gpu_count,
+/// link)` coordinates — the PR 4 extension of the sweep coordinate to
+/// multi-GPU nodes. The sweep subsystem composes the full chain as
+///
+/// ```text
+/// task_seed(topology_seed(scenario_seed(run_seed, tenants, quota_pct),
+///                         gpu_count, link_key),
+///           system, metric_id)
+/// ```
+///
+/// so every cell of a (systems × tenants × quotas × gpu_counts × links ×
+/// metrics) matrix is a pure function of the run seed and its
+/// coordinates, and a sweep stays bit-identical at any `--jobs` count.
+///
+/// Construction mirrors [`scenario_seed`]: FNV-1a over the fixed-width
+/// little-endian `gpu_count` encoding, a `0xFE` separator (distinct from
+/// `scenario_seed`'s `0xFF`, so the two layers cannot alias even on
+/// equal byte streams), and the link kind's stable key (`nvlink` /
+/// `pcie`), folded into the incoming seed and finalized with one
+/// SplitMix64 step. `prop_invariants` checks the composed seeds stay
+/// collision-free across the fully expanded matrix.
+pub fn topology_seed(seed: u64, gpu_count: u32, link_key: &str) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325; // FNV-1a offset basis
+    for b in gpu_count
+        .to_le_bytes()
+        .into_iter()
+        .chain(std::iter::once(0xFEu8))
+        .chain(link_key.bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3); // FNV-1a prime
+    }
+    let mut state = seed.wrapping_add(h);
+    splitmix64(&mut state)
+}
+
 /// xoshiro256** — fast, high-quality, 256-bit state PRNG.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -282,6 +318,19 @@ mod tests {
         assert_ne!(scenario_seed(42, 4, 50), scenario_seed(42, 4, 100));
         // Coordinates don't alias across the field boundary.
         assert_ne!(scenario_seed(42, 1, 100), scenario_seed(42, 100, 1));
+    }
+
+    #[test]
+    fn topology_seed_pure_and_sensitive() {
+        // Stable across calls.
+        assert_eq!(topology_seed(42, 4, "pcie"), topology_seed(42, 4, "pcie"));
+        // Sensitive to every coordinate.
+        assert_ne!(topology_seed(42, 4, "pcie"), topology_seed(43, 4, "pcie"));
+        assert_ne!(topology_seed(42, 4, "pcie"), topology_seed(42, 8, "pcie"));
+        assert_ne!(topology_seed(42, 4, "pcie"), topology_seed(42, 4, "nvlink"));
+        // The 0xFE separator keeps this layer distinct from scenario_seed
+        // even on coordinate values that encode to similar byte streams.
+        assert_ne!(topology_seed(42, 4, ""), scenario_seed(42, 4, 0));
     }
 
     #[test]

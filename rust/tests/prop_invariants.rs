@@ -9,7 +9,7 @@ use gvb::metrics::{taxonomy, RunConfig};
 use gvb::simgpu::memory::HbmAllocator;
 use gvb::stats::jain_fairness;
 use gvb::testkit::{check, gens};
-use gvb::util::rng::{scenario_seed, task_seed};
+use gvb::util::rng::{scenario_seed, task_seed, topology_seed};
 use gvb::util::Rng;
 use gvb::virt::wfq::WfqScheduler;
 use gvb::virt::{TenantConfig, ALL_SYSTEMS};
@@ -168,30 +168,39 @@ fn prop_task_seed_stable_and_collision_free() {
     );
 }
 
-/// Sweep-seed invariant: composed scenario+task seeds — the per-cell
-/// derivation used by `coordinator::sweep` — are collision-free across
-/// the entire expanded (systems × metrics × tenants × quotas) matrix for
-/// any base seed. A collision would make two sweep cells draw identical
-/// jitter streams and silently correlate their numbers.
+/// Sweep-seed invariant: composed scenario+topology+task seeds — the
+/// per-cell derivation used by `coordinator::sweep` — are collision-free
+/// across the entire expanded (systems × metrics × tenants × quotas ×
+/// gpu_counts × links) matrix for any base seed. A collision would make
+/// two sweep cells draw identical jitter streams and silently correlate
+/// their numbers.
 #[test]
 fn prop_sweep_cell_seeds_collision_free() {
     let tenants = [1u32, 2, 3, 4, 8, 16];
     let quotas = [10u32, 25, 50, 75, 100];
-    let expanded = ALL_SYSTEMS.len() * taxonomy::ALL.len() * tenants.len() * quotas.len();
+    let topologies = [(2u32, "nvlink"), (2, "pcie"), (4, "nvlink"), (4, "pcie"), (8, "nvlink")];
+    let expanded = ALL_SYSTEMS.len()
+        * taxonomy::ALL.len()
+        * tenants.len()
+        * quotas.len()
+        * topologies.len();
     check(
         "sweep-cell-seeds-collision-free",
         0x5EED6,
-        16,
+        8,
         |rng: &mut Rng| rng.next_u64(),
         |&base| {
             let mut seen = HashSet::new();
             for &t in &tenants {
                 for &q in &quotas {
-                    let cell = scenario_seed(base, t, q);
-                    for system in ALL_SYSTEMS {
-                        for d in &taxonomy::ALL {
-                            if !seen.insert(task_seed(cell, system, d.id)) {
-                                return false; // collision across the matrix
+                    let scenario = scenario_seed(base, t, q);
+                    for &(g, l) in &topologies {
+                        let cell = topology_seed(scenario, g, l);
+                        for system in ALL_SYSTEMS {
+                            for d in &taxonomy::ALL {
+                                if !seen.insert(task_seed(cell, system, d.id)) {
+                                    return false; // collision across the matrix
+                                }
                             }
                         }
                     }

@@ -1,14 +1,17 @@
 //! End-to-end coverage of the sweep-aware regression subsystem: a fresh
-//! sweep surface, rendered to the long-format CSV and parsed back, must
-//! regress clean against itself at any job count; infeasible cells are
-//! skipped; a single perturbed cell is flagged with its exact coordinate;
-//! malformed and mixed-schema baselines are rejected with named rows.
+//! sweep surface — topology axes included — rendered to the long-format
+//! CSV and parsed back, must regress clean against itself at any job
+//! count; a PR-3-era 4-tuple baseline (no `gpu_count`/`link` columns)
+//! still parses and gates; infeasible cells are skipped; a single
+//! perturbed cell is flagged with its exact full coordinate; malformed
+//! and mixed-schema baselines are rejected with named rows.
 
 use gvb::coordinator::executor;
-use gvb::coordinator::sweep::{run_sweep, SweepSpec};
+use gvb::coordinator::sweep::{run_sweep, SweepSpec, DEFAULT_GPU_COUNT, DEFAULT_LINK};
 use gvb::metrics::{taxonomy, Category, Direction, RunConfig};
 use gvb::regress::{parse_baseline_csv, render_json, render_markdown, run_regression, BaselineSchema};
 use gvb::report::sweep::render_csv;
+use gvb::simgpu::nvlink::LinkKind;
 
 fn base() -> RunConfig {
     let mut cfg = RunConfig::quick("native");
@@ -21,7 +24,21 @@ fn spec() -> SweepSpec {
         systems: vec!["hami".into(), "fcsp".into()],
         tenants: vec![1, 2],
         quotas: vec![50, 100],
+        gpu_counts: vec![DEFAULT_GPU_COUNT],
+        links: vec![DEFAULT_LINK],
         categories: Some(vec![Category::Pcie]),
+    }
+}
+
+/// A spec exercising the topology axes (NCCL so the link kind matters).
+fn topo_spec() -> SweepSpec {
+    SweepSpec {
+        systems: vec!["hami".into()],
+        tenants: vec![1, 2],
+        quotas: vec![50],
+        gpu_counts: vec![4, 8],
+        links: vec![LinkKind::NvLink, LinkKind::Pcie],
+        categories: Some(vec![Category::Nccl]),
     }
 }
 
@@ -31,14 +48,107 @@ fn sweep_baseline_roundtrips_clean_at_jobs_1_and_8() {
     let csv = render_csv(&surface);
     let baseline = parse_baseline_csv(&csv, "native").unwrap();
     assert_eq!(baseline.schema, BaselineSchema::Sweep);
-    // 2 systems × 4 scenarios ((1,100) in-grid) × 4 PCIe metrics.
+    // 2 systems × 1 topology × 4 scenarios ((1,100) in-grid) × 4 PCIe
+    // metrics.
     assert_eq!(baseline.rows.len(), 32);
     assert!(baseline.infeasible.is_empty());
+    // The produced rows carry the extended topology coordinate.
+    assert_eq!(
+        baseline.rows[0].cell.unwrap().topo,
+        Some((DEFAULT_GPU_COUNT, DEFAULT_LINK))
+    );
     for jobs in [1, 8] {
         let mut cfg = base();
         cfg.jobs = jobs;
         let outcome = run_regression(&cfg, &baseline, 0.0001).unwrap();
         assert_eq!(outcome.checked(), 32);
+        assert!(
+            outcome.passed(),
+            "jobs={jobs}: {:?}",
+            outcome
+                .regressions()
+                .iter()
+                .map(|r| format!("{}/{}/{}", r.system, r.cell_label(), r.id))
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn topology_sweep_baseline_roundtrips_clean_at_jobs_1_and_8() {
+    let surface = run_sweep(&base(), &topo_spec(), 2);
+    let csv = render_csv(&surface);
+    let baseline = parse_baseline_csv(&csv, "native").unwrap();
+    // 1 system × 4 topologies × 3 scenarios ((1,100) injected) × 4 NCCL
+    // metrics.
+    assert_eq!(baseline.rows.len(), 48);
+    // All four topology cells are represented.
+    for topo in [
+        (4, LinkKind::NvLink),
+        (4, LinkKind::Pcie),
+        (8, LinkKind::NvLink),
+        (8, LinkKind::Pcie),
+    ] {
+        assert!(
+            baseline.rows.iter().any(|r| r.cell.unwrap().topo == Some(topo)),
+            "missing topology cell {topo:?}"
+        );
+    }
+    for jobs in [1, 8] {
+        let mut cfg = base();
+        cfg.jobs = jobs;
+        let outcome = run_regression(&cfg, &baseline, 0.0001).unwrap();
+        assert_eq!(outcome.checked(), 48);
+        assert!(
+            outcome.passed(),
+            "jobs={jobs}: {:?}",
+            outcome
+                .regressions()
+                .iter()
+                .map(|r| format!("{}/{}/{}", r.system, r.cell_label(), r.id))
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn pr3_era_baseline_without_topology_columns_still_gates() {
+    // Fabricate a baseline exactly as the PR-3 sweep produced it: same
+    // quota→mem/SM mapping and default node, seeds stopping at the
+    // scenario layer (`legacy_cell_cfg` reproduces that derivation).
+    // Such a 4-tuple CSV must parse (topo-less coordinate) and re-run
+    // bit-identically against the unchanged tree at any job count.
+    let base = base();
+    let mut legacy_csv = String::from("system,tenants,quota_pct,feasible,id,value\n");
+    let metric_ids = ["PCIE-001", "PCIE-002", "PCIE-003", "PCIE-004"];
+    for sys in ["hami", "fcsp"] {
+        for (tenants, quota) in [(1u32, 100u32), (2, 50)] {
+            let cfg = gvb::coordinator::sweep::legacy_cell_cfg(&base, sys, tenants, quota);
+            let tasks: Vec<executor::Task> = metric_ids
+                .iter()
+                .map(|&id| executor::Task { system: sys.to_string(), metric_id: id })
+                .collect();
+            let (results, _) = executor::execute(&cfg, &tasks, 2);
+            for r in &results {
+                // 6-decimal recording resolution, as the CSV writer uses.
+                legacy_csv.push_str(&format!(
+                    "{sys},{tenants},{quota},true,{},{:.6}\n",
+                    r.id, r.value
+                ));
+            }
+        }
+    }
+    let baseline = parse_baseline_csv(&legacy_csv, "native").unwrap();
+    assert_eq!(baseline.schema, BaselineSchema::Sweep);
+    assert_eq!(baseline.rows.len(), 16);
+    for r in &baseline.rows {
+        assert_eq!(r.cell.unwrap().topo, None, "legacy rows must carry no topology");
+    }
+    for jobs in [1, 8] {
+        let mut cfg = base.clone();
+        cfg.jobs = jobs;
+        let outcome = run_regression(&cfg, &baseline, 0.0001).unwrap();
+        assert_eq!(outcome.checked(), 16);
         assert!(
             outcome.passed(),
             "jobs={jobs}: {:?}",
@@ -59,6 +169,8 @@ fn infeasible_cells_are_skipped_not_flagged() {
         systems: vec!["mig".into()],
         tenants: vec![8],
         quotas: vec![50],
+        gpu_counts: vec![DEFAULT_GPU_COUNT],
+        links: vec![DEFAULT_LINK],
         categories: Some(vec![Category::Pcie]),
     };
     let surface = run_sweep(&base(), &spec, 2);
@@ -66,7 +178,11 @@ fn infeasible_cells_are_skipped_not_flagged() {
     let baseline = parse_baseline_csv(&csv, "native").unwrap();
     // Only the injected (1,100) baseline cell carries metric rows.
     assert_eq!(baseline.rows.len(), 4);
-    assert_eq!(baseline.infeasible, vec![("mig".to_string(), 8, 50)]);
+    assert_eq!(baseline.infeasible.len(), 1);
+    assert_eq!(baseline.infeasible[0].0, "mig");
+    let coord = baseline.infeasible[0].1;
+    assert_eq!((coord.tenants, coord.quota_pct), (8, 50));
+    assert_eq!(coord.topo, Some((DEFAULT_GPU_COUNT, DEFAULT_LINK)));
     let outcome = run_regression(&base(), &baseline, 1.0).unwrap();
     assert_eq!(outcome.checked(), 4);
     assert_eq!(outcome.skipped_infeasible, 1);
@@ -89,8 +205,9 @@ fn injected_regression_is_detected_with_its_cell_coordinate() {
         .rows
         .iter()
         .position(|r| {
+            let c = r.cell.unwrap();
             r.system == "hami"
-                && r.cell == Some((2, 50))
+                && (c.tenants, c.quota_pct) == (2, 50)
                 && r.value > 1e-3
                 && !matches!(
                     taxonomy::by_id(&r.id).unwrap().direction,
@@ -115,13 +232,48 @@ fn injected_regression_is_detected_with_its_cell_coordinate() {
     assert_eq!(regressions[0].cell, cell);
     assert_eq!(regressions[0].id, id);
     assert!(regressions[0].worse_percent > 5.0);
-    // Both reports name the offending cell and flip to FAIL.
+    // Both reports name the offending cell — full topology coordinate
+    // included — and flip to FAIL.
     let j = render_json(&outcome, "b.csv");
     assert!(j.contains("\"passed\": false"), "{j}");
     assert!(j.contains("\"regression_count\": 1"), "{j}");
     let m = render_markdown(&outcome, "b.csv");
     assert!(m.contains("❌ FAIL"), "{m}");
-    assert!(m.contains(&format!("| {} | 2t@50% | {} |", system, id)), "{m}");
+    assert!(
+        m.contains(&format!("| {} | 2t@50%/4g/pcie | {} |", system, id)),
+        "{m}"
+    );
+}
+
+#[test]
+fn injected_regression_in_a_topology_cell_names_the_full_coordinate() {
+    // Same detection story, but the perturbed cell lives on a non-default
+    // topology: the 8-GPU NVLink node.
+    let surface = run_sweep(&base(), &topo_spec(), 2);
+    let csv = render_csv(&surface);
+    let mut baseline = parse_baseline_csv(&csv, "native").unwrap();
+    let idx = baseline
+        .rows
+        .iter()
+        .position(|r| {
+            let c = r.cell.unwrap();
+            (c.tenants, c.quota_pct) == (2, 50)
+                && c.topo == Some((8, LinkKind::NvLink))
+                && r.id == "NCCL-001" // allreduce latency, lower-better
+        })
+        .expect("the 8-GPU NVLink 2t@50% NCCL-001 row");
+    baseline.rows[idx].value /= 2.0; // lower-better: re-run reads 2x worse
+    let outcome = run_regression(&base(), &baseline, 5.0).unwrap();
+    let regressions = outcome.regressions();
+    assert_eq!(regressions.len(), 1, "{regressions:?}");
+    assert_eq!(regressions[0].cell_label(), "2t@50%/8g/nvlink");
+    assert_eq!(regressions[0].id, "NCCL-001");
+    let m = render_markdown(&outcome, "b.csv");
+    assert!(m.contains("| hami | 2t@50%/8g/nvlink | NCCL-001 |"), "{m}");
+    // The by-link breakdown blames the nvlink group, not pcie.
+    let j = render_json(&outcome, "b.csv");
+    let idx = j.find("\"by_link\"").unwrap();
+    assert!(j[idx..].contains("\"link\": \"nvlink\""), "{j}");
 }
 
 #[test]
@@ -171,6 +323,13 @@ fn unknown_coordinates_are_named_errors_not_panics() {
     let e = parse_baseline_csv(&format!("{hdr}hami,2,50,true,ZZ-999,1.0\n"), "native")
         .unwrap_err();
     assert!(format!("{e:#}").contains("ZZ-999"), "{e:#}");
+    // And for the extended schema's topology fields.
+    let hdr = "system,tenants,quota_pct,gpu_count,link,feasible,id,value\n";
+    let e = parse_baseline_csv(&format!("{hdr}hami,2,50,4,infiniband,true,OH-001,1.0\n"), "native")
+        .unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("row 2"), "{msg}");
+    assert!(msg.contains("infiniband"), "{msg}");
 }
 
 #[test]
@@ -179,9 +338,17 @@ fn malformed_and_mixed_schema_baselines_are_rejected() {
     let e = parse_baseline_csv("system,quota_pct,id,value\nhami,50,OH-001,1.0\n", "native")
         .unwrap_err();
     assert!(format!("{e:#}").contains("mixed-schema"), "{e:#}");
+    // Half a topology coordinate is neither generation.
+    let e = parse_baseline_csv(
+        "system,tenants,quota_pct,link,feasible,id,value\nhami,2,50,pcie,true,OH-001,1.0\n",
+        "native",
+    )
+    .unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("gpu_count") && msg.contains("link"), "{msg}");
     // A sweep surface concatenated under a point table: the stray header
     // row is rejected by name, not silently skipped.
-    let glued = "id,system,value\nOH-001,hami,1.0\nsystem,tenants,quota_pct,is_baseline,feasible,id,value,overall_score,delta_vs_baseline_pct,grade\n";
+    let glued = "id,system,value\nOH-001,hami,1.0\nsystem,tenants,quota_pct,gpu_count,link,is_baseline,feasible,id,value,overall_score,delta_vs_baseline_pct,grade\n";
     let e = parse_baseline_csv(glued, "native").unwrap_err();
     let msg = format!("{e:#}");
     assert!(msg.contains("row 3"), "{msg}");

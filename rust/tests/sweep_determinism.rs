@@ -1,19 +1,24 @@
-//! The sweep subsystem's determinism guarantee, proven end-to-end: the
-//! same sweep spec and seed produce a **bit-identical** sweep surface at
-//! `--jobs 1` and `--jobs 8` (per-cell seeds are pure functions of the
-//! run seed and the cell coordinates), and the rendered CSV surface —
-//! which carries no host timings — matches byte-for-byte.
+//! The sweep subsystem's determinism guarantee, proven end-to-end over
+//! the full extended cell coordinate: the same sweep spec and seed —
+//! including the `gpu_count` × `link` topology axes — produce a
+//! **bit-identical** sweep surface at `--jobs 1` and `--jobs 8`
+//! (per-cell seeds are pure functions of the run seed and the cell
+//! coordinates), and the rendered CSV surface — which carries no host
+//! timings — matches byte-for-byte.
 
 use gvb::coordinator::sweep::{run_sweep, SweepSpec, SweepSurface};
 use gvb::metrics::{Category, RunConfig};
 use gvb::report::sweep::render_csv;
+use gvb::simgpu::nvlink::LinkKind;
 
 fn spec() -> SweepSpec {
     SweepSpec {
         systems: vec!["hami".into(), "fcsp".into()],
-        tenants: vec![1, 2, 4],
+        tenants: vec![1, 2],
         quotas: vec![50, 100],
-        categories: Some(vec![Category::MemoryBandwidth, Category::Pcie]),
+        gpu_counts: vec![2, 4],
+        links: vec![LinkKind::NvLink, LinkKind::Pcie],
+        categories: Some(vec![Category::Pcie]),
     }
 }
 
@@ -28,10 +33,19 @@ fn assert_surfaces_bit_identical(a: &SweepSurface, b: &SweepSurface) {
     assert_eq!(a.metric_ids, b.metric_ids);
     assert_eq!(a.cells.len(), b.cells.len());
     for (x, y) in a.cells.iter().zip(&b.cells) {
-        let ctx = format!("{}/{}t/{}%", x.system, x.tenants, x.quota_pct);
+        let ctx = format!(
+            "{}/{}t/{}%/{}g/{}",
+            x.system,
+            x.tenants,
+            x.quota_pct,
+            x.gpu_count,
+            x.link.key()
+        );
         assert_eq!(x.system, y.system, "{ctx}: cell order diverged");
         assert_eq!(x.tenants, y.tenants, "{ctx}");
         assert_eq!(x.quota_pct, y.quota_pct, "{ctx}");
+        assert_eq!(x.gpu_count, y.gpu_count, "{ctx}: topology order diverged");
+        assert_eq!(x.link, y.link, "{ctx}: topology order diverged");
         assert_eq!(x.is_baseline, y.is_baseline, "{ctx}");
         assert_eq!(
             x.overall.to_bits(),
@@ -67,10 +81,11 @@ fn sweep_surface_bit_identical_at_any_job_count() {
     let sharded = run_sweep(&base, &spec(), 8);
     assert_eq!(serial.stats.jobs, 1);
     assert_eq!(sharded.stats.jobs, 8);
-    // 2 systems × 6 scenarios (baseline is in-grid) × 8 metrics.
-    assert_eq!(serial.cells.len(), 12);
-    assert_eq!(serial.metric_ids.len(), 8);
-    assert_eq!(serial.stats.tasks.len(), 96);
+    // 2 systems × 4 topologies × 4 scenarios (baseline in-grid) ×
+    // 4 PCIe metrics.
+    assert_eq!(serial.cells.len(), 32);
+    assert_eq!(serial.metric_ids.len(), 4);
+    assert_eq!(serial.stats.tasks.len(), 128);
     assert_surfaces_bit_identical(&serial, &sharded);
     // The rendered CSV surface (no host timings) matches byte-for-byte.
     assert_eq!(render_csv(&serial), render_csv(&sharded));
@@ -86,6 +101,32 @@ fn sweep_cells_differ_across_scenarios() {
         hami.iter().any(|c| c.overall.to_bits() != hami[0].overall.to_bits()),
         "all hami cells identical: {:?}",
         hami.iter().map(|c| c.overall).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn topology_axes_reach_the_metric_backends() {
+    // NCCL metrics must actually see the cell's node: P2P bandwidth on
+    // the NVLink cells is an order of magnitude above the PCIe cells'.
+    let spec = SweepSpec {
+        systems: vec!["native".into()],
+        tenants: vec![1],
+        quotas: vec![100],
+        gpu_counts: vec![4],
+        links: vec![LinkKind::NvLink, LinkKind::Pcie],
+        categories: Some(vec![Category::Nccl]),
+    };
+    let surface = run_sweep(&base(), &spec, 2);
+    assert_eq!(surface.cells.len(), 2);
+    let idx = surface.metric_ids.iter().position(|id| *id == "NCCL-003").unwrap();
+    let p2p = |link: LinkKind| -> f64 {
+        surface.cells.iter().find(|c| c.link == link).unwrap().results[idx].value
+    };
+    assert!(
+        p2p(LinkKind::NvLink) > p2p(LinkKind::Pcie) * 5.0,
+        "nvlink={} pcie={}",
+        p2p(LinkKind::NvLink),
+        p2p(LinkKind::Pcie)
     );
 }
 
