@@ -1,0 +1,72 @@
+//! Dynamics-grid scaling: wall-clock of a (systems × scenarios) timeline
+//! grid at 1 → N executor workers, plus a bit-identity spot check between
+//! the serial and widest runs.
+//!
+//! Timelines are coarser-grained tasks than single metrics (one task =
+//! one whole scenario replay), so this also exercises the executor's
+//! load balance on small task counts: with 16 timelines and N ≤ 16
+//! workers the speedup floor is the longest single timeline.
+
+use std::time::Instant;
+
+use gvb::benchkit::print_table;
+use gvb::dynsim::{run_dynamics, DynSpec, PRESETS};
+use gvb::metrics::RunConfig;
+use gvb::report::dynamics::render_summary_csv;
+use gvb::virt::ALL_SYSTEMS;
+
+fn main() {
+    let base = RunConfig::quick("native");
+    let spec = DynSpec {
+        systems: ALL_SYSTEMS.iter().map(|s| s.to_string()).collect(),
+        scenarios: PRESETS.to_vec(),
+        duration_ms: 600,
+        window_ms: 100,
+    };
+    println!(
+        "Dynamics grid: {} systems x {} scenarios = {} timelines ({} ms horizon, {} ms windows)",
+        spec.systems.len(),
+        spec.scenarios.len(),
+        spec.systems.len() * spec.scenarios.len(),
+        spec.duration_ms,
+        spec.window_ms
+    );
+
+    let hw = gvb::coordinator::executor::resolve_jobs(0);
+    let mut job_counts = vec![1usize, 2, 4];
+    if hw > 4 {
+        job_counts.push(hw);
+    }
+    job_counts.dedup();
+
+    let mut rows = Vec::new();
+    let mut serial_s = 0.0;
+    let mut serial_summary = String::new();
+    for &jobs in &job_counts {
+        let t0 = Instant::now();
+        let surface = run_dynamics(&base, &spec, jobs);
+        let dt = t0.elapsed().as_secs_f64();
+        let summary = render_summary_csv(&surface);
+        if jobs == 1 {
+            serial_s = dt;
+            serial_summary = summary;
+        } else {
+            assert_eq!(summary, serial_summary, "determinism violated at jobs={jobs}");
+        }
+        let requests: usize = surface.runs.iter().map(|r| r.completed).sum();
+        rows.push(vec![
+            jobs.to_string(),
+            format!("{dt:.2}"),
+            format!("{:.2}x", serial_s / dt),
+            format!("{:.2}x", surface.stats.speedup_estimate()),
+            format!("{:.0} ms", surface.stats.max_task_ns() as f64 / 1e6),
+            requests.to_string(),
+        ]);
+    }
+    print_table(
+        "Dynamics scaling — 4 systems x 4 scenarios",
+        &["jobs", "wall s", "speedup vs 1", "busy/wall", "longest timeline", "requests"],
+        &rows,
+    );
+    println!("\n(host parallelism: {hw}; summary CSV verified byte-identical across job counts)");
+}

@@ -1,0 +1,101 @@
+#!/usr/bin/env bash
+# Arm (or re-arm) the CI regression gates from the gate jobs' uploaded
+# artifacts — the scripted version of the manual flow in ci/README.md.
+#
+# Usage:
+#   ci/arm_baselines.sh <artifacts-dir>
+#
+# <artifacts-dir> is a directory containing the downloaded artifacts of
+# one CI run, e.g. as laid out by
+#
+#   gh run download <run-id> --dir artifacts
+#
+# which produces
+#
+#   artifacts/regression-baseline/fresh_quick.csv
+#   artifacts/sweep-baseline/fresh_sweep.csv
+#
+# (bare fresh_*.csv files directly inside <artifacts-dir> are accepted
+# too). The script validates each snapshot — non-empty, expected header,
+# data rows present — copies it over the committed ci/baseline_*.csv,
+# and stages the result with `git add`; committing stays a human action
+# so the accepted movement lands in the same commit as its explanation.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ $# -ne 1 ]; then
+  echo "usage: ci/arm_baselines.sh <artifacts-dir>" >&2
+  exit 2
+fi
+artifacts=$1
+if [ ! -d "$artifacts" ]; then
+  echo "error: $artifacts is not a directory" >&2
+  exit 2
+fi
+
+# Locate an artifact file: prefer the per-artifact subdirectory layout,
+# fall back to a bare file in the artifacts dir.
+find_artifact() {
+  local artifact_dir=$1 file=$2
+  for candidate in "$artifacts/$artifact_dir/$file" "$artifacts/$file"; do
+    if [ -f "$candidate" ]; then
+      echo "$candidate"
+      return 0
+    fi
+  done
+  return 1
+}
+
+# validate <file> <expected-first-header-field> — non-empty, sane header,
+# at least one data row.
+validate() {
+  local file=$1 head_field=$2
+  local header
+  header=$(head -n 1 "$file")
+  case "$header" in
+    "$head_field"*) ;;
+    *)
+      echo "error: $file does not look like a baseline (header: $header)" >&2
+      return 1
+      ;;
+  esac
+  if [ "$(tail -n +2 "$file" | grep -c .)" -eq 0 ]; then
+    echo "error: $file has no data rows" >&2
+    return 1
+  fi
+}
+
+armed=0
+arm() {
+  local artifact_dir=$1 file=$2 dest=$3 head_field=$4
+  local src
+  if ! src=$(find_artifact "$artifact_dir" "$file"); then
+    echo "skip: $file not found under $artifacts (is the $artifact_dir artifact downloaded?)"
+    return 0
+  fi
+  validate "$src" "$head_field"
+  # The committed header must match the snapshot's: a mismatch means the
+  # schema moved and the snapshot came from a stale build.
+  if [ -f "$dest" ] && [ -s "$dest" ]; then
+    if [ "$(head -n 1 "$src")" != "$(head -n 1 "$dest")" ]; then
+      echo "error: $src header does not match committed $dest header (schema drift?)" >&2
+      return 1
+    fi
+  fi
+  cp "$src" "$dest"
+  git add "$dest"
+  echo "armed: $dest <- $src ($(tail -n +2 "$dest" | grep -c .) data rows)"
+  armed=$((armed + 1))
+}
+
+arm regression-baseline fresh_quick.csv ci/baseline_quick.csv "id,"
+arm sweep-baseline fresh_sweep.csv ci/baseline_sweep.csv "system,"
+
+if [ "$armed" -eq 0 ]; then
+  echo "error: no baseline artifacts found under $artifacts" >&2
+  exit 1
+fi
+echo
+echo "$armed baseline(s) staged. Review the diff and commit:"
+echo "  git diff --cached ci/"
+echo "  git commit -m 'Arm CI regression baselines'"

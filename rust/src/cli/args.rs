@@ -17,6 +17,11 @@ USAGE:
               [--category key,key,...]
               [--iterations N] [--warmup N] [--seed N] [--jobs N] [--quick]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
+  gvbench dynamics [--scenario steady,churn,spike,failover]
+              [--system S | --systems S,S,...|all | --all-systems]
+              [--duration-ms N] [--window-ms N] [--seed N] [--jobs N]
+              [--config <file>] [--format <txt|json|csv>] [--out <file>]
+              [--summary-out <file>]
   gvbench list [--full | --systems | --categories]
   gvbench compare [--quick] [--jobs N]  # Table 7: overall scores, all systems
   gvbench regress --baseline <csv> [--system S] [--threshold PCT] [--quick]
@@ -30,6 +35,8 @@ EXAMPLES:
   gvbench sweep --tenants 1,2,4,8 --quota 25,50,100 --jobs 8 --format csv
   gvbench sweep --gpus 2,4,8 --link nvlink,pcie --category nccl --quick
   gvbench sweep --category isolation,fragmentation --quick
+  gvbench dynamics --scenario churn,failover --systems hami,fcsp --jobs 8
+  gvbench dynamics --duration-ms 2000 --window-ms 200 --format csv --out dyn.csv
   gvbench compare --quick
 
 Scenario sweeps: `sweep` expands (systems x tenants x quota x gpus x
@@ -45,16 +52,32 @@ taxonomy re-measured per node. A config file `[sweep]` section
 (tenants/quota/gpus/link/systems/categories keys) sets the grid; CLI
 flags override it.
 
+Dynamic scenarios: `dynamics` replays virtual-time tenant timelines
+(arrive / depart / burst / fail events driving per-tenant LLM request
+streams) against each system and reports *windowed time series*:
+latency p50/p99, throughput, per-tenant SM/memory occupancy,
+fragmentation ratio and fault recovery time. Scenarios are named
+presets (steady, churn, spike, failover; default: all four) on a
+--duration-ms horizon (default 1000) cut into --window-ms windows
+(default 100). --out writes the long-format time series in --format;
+--summary-out writes the per-scenario summary CSV (steady-state p99,
+worst-window degradation, mean throughput, recovery time) — a
+regress-gateable baseline. A config file `[dynsim]` section
+(scenarios/duration_ms/window_ms/systems keys) sets the grid; CLI
+flags override it.
+
 Regression gate: `regress` re-runs every cell in the baseline CSV (all
 systems in the file, or just --system S) sharded across --jobs workers,
 and exits 1 if any metric moved against its direction by more than
 --threshold percent. The baseline schema is auto-detected: a `gvbench
 run --format csv` table re-runs at this invocation's operating point,
-while a `gvbench sweep --format csv` surface re-runs every
+a `gvbench sweep --format csv` surface re-runs every
 (system, tenants, quota, gpus, link) cell with the sweep's own quota
 mapping, node topology and seed derivation (`feasible=false` cells are
 skipped; PR-3-era baselines without gpu_count/link columns re-run on
-the default 4-GPU PCIe node). --report-json and --report-md write
+the default 4-GPU PCIe node), and a `gvbench dynamics --summary-out`
+summary replays each (system, scenario) timeline with the producing
+run's seed derivation. --report-json and --report-md write
 machine-readable reports (per-cell deltas / a GitHub-flavored summary
 of the worst regressions per system and per link kind).
 
@@ -68,6 +91,7 @@ count, for `run` and `sweep` alike.
 pub enum Command {
     Run,
     Sweep,
+    Dynamics,
     List,
     Compare,
     Regress,
@@ -115,6 +139,14 @@ pub struct Args {
     pub sweep_systems: Option<Vec<String>>,
     /// Sweep grid: category keys (`--category isolation,fragmentation`).
     pub sweep_categories: Option<Vec<String>>,
+    /// Dynamics grid: scenario preset keys (`--scenario churn,spike`).
+    pub dyn_scenarios: Option<Vec<String>>,
+    /// Dynamics grid: timeline horizon (`--duration-ms 2000`).
+    pub duration_ms: Option<u64>,
+    /// Dynamics grid: reporting window (`--window-ms 200`).
+    pub window_ms: Option<u64>,
+    /// `dynamics`: write the regress-compatible summary CSV here.
+    pub summary_out: Option<String>,
 }
 
 impl Default for Args {
@@ -148,6 +180,10 @@ impl Default for Args {
             sweep_links: None,
             sweep_systems: None,
             sweep_categories: None,
+            dyn_scenarios: None,
+            duration_ms: None,
+            window_ms: None,
+            summary_out: None,
         }
     }
 }
@@ -221,6 +257,47 @@ pub fn validate_sweep_links(links: Option<&[String]>) -> Result<(), String> {
     Ok(())
 }
 
+/// Range/name checks shared by the `dynamics` CLI flags and config-file
+/// `[dynsim]` grids: scenario names must be known presets, the horizon
+/// fits 1 ms..=1 h, and the window fits inside the horizon (matching the
+/// dynamics baseline parser's acceptance ranges).
+pub fn validate_dynamics_grid(
+    scenarios: Option<&[String]>,
+    duration_ms: Option<u64>,
+    window_ms: Option<u64>,
+) -> Result<(), String> {
+    if let Some(ss) = scenarios {
+        if ss.is_empty() {
+            return Err("--scenario list is empty".to_string());
+        }
+        for s in ss {
+            if crate::dynsim::scenario::canonical(s).is_none() {
+                return Err(format!(
+                    "unknown scenario `{s}` (expected: steady, churn, spike, failover)"
+                ));
+            }
+        }
+    }
+    if let Some(d) = duration_ms {
+        if !(1..=3_600_000).contains(&d) {
+            return Err(format!("--duration-ms value {d} out of range (1..=3600000)"));
+        }
+    }
+    if let Some(w) = window_ms {
+        if w == 0 {
+            return Err("--window-ms must be at least 1".to_string());
+        }
+        if let Some(d) = duration_ms {
+            if w > d {
+                return Err(format!(
+                    "--window-ms value {w} exceeds the --duration-ms horizon {d}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
 impl Args {
     /// Parse argv (without the program name).
     pub fn parse(argv: &[String]) -> Result<Args, ParseError> {
@@ -229,6 +306,7 @@ impl Args {
         args.command = match it.next().map(|s| s.as_str()) {
             Some("run") => Command::Run,
             Some("sweep") => Command::Sweep,
+            Some("dynamics") => Command::Dynamics,
             Some("list") => Command::List,
             Some("compare") => Command::Compare,
             Some("regress") => Command::Regress,
@@ -258,6 +336,36 @@ impl Args {
                     }
                 }
                 "--metric" => args.metric = Some(next_value(&mut it, flag)?),
+                "--scenario" => {
+                    if args.command != Command::Dynamics {
+                        return Err(err("--scenario is only valid for `gvbench dynamics`"));
+                    }
+                    let v = next_value(&mut it, flag)?;
+                    args.dyn_scenarios =
+                        Some(v.split(',').map(|s| s.trim().to_string()).collect());
+                }
+                "--duration-ms" => {
+                    if args.command != Command::Dynamics {
+                        return Err(err("--duration-ms is only valid for `gvbench dynamics`"));
+                    }
+                    args.duration_ms = Some(
+                        next_value(&mut it, flag)?.parse().map_err(|_| err("bad --duration-ms"))?,
+                    );
+                }
+                "--window-ms" => {
+                    if args.command != Command::Dynamics {
+                        return Err(err("--window-ms is only valid for `gvbench dynamics`"));
+                    }
+                    args.window_ms = Some(
+                        next_value(&mut it, flag)?.parse().map_err(|_| err("bad --window-ms"))?,
+                    );
+                }
+                "--summary-out" => {
+                    if args.command != Command::Dynamics {
+                        return Err(err("--summary-out is only valid for `gvbench dynamics`"));
+                    }
+                    args.summary_out = Some(next_value(&mut it, flag)?);
+                }
                 "--iterations" => {
                     args.iterations = Some(
                         next_value(&mut it, flag)?.parse().map_err(|_| err("bad --iterations"))?,
@@ -329,8 +437,8 @@ impl Args {
                 }
                 "--full" => args.list_full = true,
                 "--systems" => {
-                    if args.command == Command::Sweep {
-                        // Sweeps take a system list (`all` = every system).
+                    if matches!(args.command, Command::Sweep | Command::Dynamics) {
+                        // Sweeps/dynamics take a system list (`all` = every system).
                         let v = next_value(&mut it, flag)?;
                         if v.trim() == "all" {
                             args.all_systems = true;
@@ -352,7 +460,7 @@ impl Args {
         }
         let takes_suite_flags = matches!(
             args.command,
-            Command::Run | Command::Regress | Command::Sweep
+            Command::Run | Command::Regress | Command::Sweep | Command::Dynamics
         );
         if takes_suite_flags {
             if crate::virt::by_name(&args.system).is_none() {
@@ -402,6 +510,34 @@ impl Args {
             )
             .map_err(err)?;
             validate_sweep_links(args.sweep_links.as_deref()).map_err(err)?;
+        }
+        if args.command == Command::Dynamics {
+            if args.metric.is_some() || args.category.is_some() {
+                return Err(err(
+                    "--metric/--category are not supported by `gvbench dynamics`; use --scenario",
+                ));
+            }
+            if args.tenants.is_some() {
+                return Err(err(
+                    "--tenants is not supported by `gvbench dynamics`; the tenant population \
+                     comes from the scenario preset's timeline",
+                ));
+            }
+            if let Some(ss) = &args.sweep_systems {
+                for s in ss {
+                    if crate::virt::by_name(s).is_none() {
+                        return Err(err(format!(
+                            "unknown system `{s}` (expected: native, hami, fcsp, mig, timeslice, or `all`)"
+                        )));
+                    }
+                }
+            }
+            validate_dynamics_grid(
+                args.dyn_scenarios.as_deref(),
+                args.duration_ms,
+                args.window_ms,
+            )
+            .map_err(err)?;
         }
         Ok(args)
     }
@@ -515,6 +651,51 @@ mod tests {
         let a = parse("list --systems").unwrap();
         assert!(a.list_systems);
         assert_eq!(a.sweep_systems, None);
+    }
+
+    #[test]
+    fn dynamics_parses_grid_and_outputs() {
+        let a = parse(
+            "dynamics --scenario churn,failover --systems hami,fcsp --duration-ms 2000 \
+             --window-ms 200 --jobs 8 --seed 7 --format csv --out d.csv --summary-out s.csv",
+        )
+        .unwrap();
+        assert_eq!(a.command, Command::Dynamics);
+        assert_eq!(
+            a.dyn_scenarios,
+            Some(vec!["churn".to_string(), "failover".to_string()])
+        );
+        assert_eq!(a.sweep_systems, Some(vec!["hami".to_string(), "fcsp".to_string()]));
+        assert_eq!(a.duration_ms, Some(2000));
+        assert_eq!(a.window_ms, Some(200));
+        assert_eq!(a.jobs, Some(8));
+        assert_eq!(a.seed, Some(7));
+        assert_eq!(a.summary_out.as_deref(), Some("s.csv"));
+        // Defaults: everything optional.
+        let a = parse("dynamics").unwrap();
+        assert_eq!(a.dyn_scenarios, None);
+        assert_eq!(a.duration_ms, None);
+        // `--systems all` works like the sweep shorthand.
+        let a = parse("dynamics --systems all").unwrap();
+        assert!(a.all_systems);
+    }
+
+    #[test]
+    fn dynamics_rejects_bad_grids() {
+        assert!(parse("dynamics --scenario meltdown").is_err());
+        assert!(parse("dynamics --duration-ms 0").is_err());
+        assert!(parse("dynamics --duration-ms lots").is_err());
+        assert!(parse("dynamics --window-ms 0").is_err());
+        assert!(parse("dynamics --duration-ms 100 --window-ms 200").is_err());
+        assert!(parse("dynamics --systems hami,mps").is_err());
+        assert!(parse("dynamics --metric OH-001").is_err());
+        assert!(parse("dynamics --category llm").is_err());
+        assert!(parse("dynamics --tenants 8").is_err());
+        assert!(parse("dynamics --format xml").is_err());
+        // Dynamics flags belong to dynamics only.
+        assert!(parse("run --system hami --scenario churn").is_err());
+        assert!(parse("sweep --duration-ms 100").is_err());
+        assert!(parse("run --system hami --summary-out s.csv").is_err());
     }
 
     #[test]

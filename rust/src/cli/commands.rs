@@ -2,9 +2,10 @@
 
 use crate::anyhow::{bail, Context, Result};
 
-use crate::config::{FileConfig, SweepOverlay};
+use crate::config::{DynOverlay, FileConfig, SweepOverlay};
 use crate::coordinator::sweep::{self, SweepSpec};
 use crate::coordinator::SuiteRunner;
+use crate::dynsim::{self, DynSpec};
 use crate::metrics::{taxonomy, Category, RunConfig};
 use crate::report::{Format, Report};
 use crate::simgpu::nvlink::LinkKind;
@@ -22,6 +23,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Command::List => cmd_list(args),
         Command::Run => cmd_run(args),
         Command::Sweep => cmd_sweep(args),
+        Command::Dynamics => cmd_dynamics(args),
         Command::Compare => cmd_compare(args),
         Command::Regress => cmd_regress(args),
     }
@@ -73,7 +75,10 @@ fn cmd_regress(args: &Args) -> Result<()> {
     }
     println!("{} regressions / {} cells:", regressions.len(), outcome.checked());
     for r in &regressions {
-        let d = taxonomy::by_id(&r.id).unwrap();
+        // Dynamics summary ids live outside the Table-8 taxonomy.
+        let d = taxonomy::by_id(&r.id)
+            .or_else(|| taxonomy::dyn_summary_by_id(&r.id))
+            .expect("engine validated the id");
         println!(
             "  {:<10} {:<9} {:<10} {:<32} {:.3} -> {:.3} {}  ({:+.1}% worse)",
             r.system,
@@ -175,22 +180,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .map(|k| LinkKind::from_key(k).expect("validated above"))
             .collect(),
     };
-    let systems: Vec<String> = if args.all_systems {
-        ALL_SYSTEMS.iter().map(|s| s.to_string()).collect()
-    } else if let Some(ss) = args.sweep_systems.clone() {
-        ss
-    } else if args.system_set {
-        vec![args.system.clone()]
-    } else if let Some(ss) = overlay.systems {
-        for s in &ss {
-            if crate::virt::by_name(s).is_none() {
-                bail!("unknown system `{s}` in [sweep] config");
-            }
-        }
-        ss
-    } else {
-        ALL_SYSTEMS.iter().map(|s| s.to_string()).collect()
-    };
+    let systems = resolve_grid_systems(args, overlay.systems, "sweep")?;
     let categories = match args.sweep_categories.clone().or(overlay.categories) {
         None => None,
         Some(keys) => {
@@ -222,6 +212,94 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             eprintln!("wrote {path}");
         }
         None => print!("{rendered}"),
+    }
+    Ok(())
+}
+
+/// Resolve the systems a grid command evaluates (CLI flags > config
+/// overlay > all Table-2 systems).
+fn resolve_grid_systems(
+    args: &Args,
+    overlay_systems: Option<Vec<String>>,
+    section: &str,
+) -> Result<Vec<String>> {
+    if args.all_systems {
+        return Ok(ALL_SYSTEMS.iter().map(|s| s.to_string()).collect());
+    }
+    if let Some(ss) = args.sweep_systems.clone() {
+        return Ok(ss);
+    }
+    if args.system_set {
+        return Ok(vec![args.system.clone()]);
+    }
+    if let Some(ss) = overlay_systems {
+        for s in &ss {
+            if crate::virt::by_name(s).is_none() {
+                bail!("unknown system `{s}` in [{section}] config");
+            }
+        }
+        return Ok(ss);
+    }
+    Ok(ALL_SYSTEMS.iter().map(|s| s.to_string()).collect())
+}
+
+/// Build the dynamics grid (CLI flags > config-file `[dynsim]` section >
+/// defaults) and replay it through the executor.
+fn cmd_dynamics(args: &Args) -> Result<()> {
+    let file = load_file_config(args)?;
+    let cfg = build_config_with(args, file.as_ref())?;
+    let overlay = match file.as_ref() {
+        Some(fc) => fc.dynsim()?,
+        None => DynOverlay::default(),
+    };
+    let scenario_keys = args.dyn_scenarios.clone().or(overlay.scenarios);
+    let duration_ms = args
+        .duration_ms
+        .or(overlay.duration_ms)
+        .unwrap_or(dynsim::DEFAULT_DURATION_MS);
+    let window_ms = args
+        .window_ms
+        .or(overlay.window_ms)
+        .unwrap_or_else(|| dynsim::DEFAULT_WINDOW_MS.min(duration_ms));
+    // One validation path for CLI flags and config-file keys alike.
+    if let Err(e) = super::args::validate_dynamics_grid(
+        scenario_keys.as_deref(),
+        Some(duration_ms),
+        Some(window_ms),
+    ) {
+        bail!("{e} in dynamics grid");
+    }
+    let scenarios: Vec<&'static str> = match scenario_keys {
+        None => dynsim::PRESETS.to_vec(),
+        Some(keys) => keys
+            .iter()
+            .map(|k| dynsim::scenario::canonical(k).expect("validated above"))
+            .collect(),
+    };
+    let systems = resolve_grid_systems(args, overlay.systems, "dynsim")?;
+    let spec = DynSpec { systems, scenarios, duration_ms, window_ms };
+    let surface = dynsim::run_dynamics(&cfg, &spec, cfg.jobs);
+    eprintln!(
+        "[gvbench] dynamics: {} timeline(s) x {} window(s) on {} workers in {:.2}s (busy/wall {:.2}x)",
+        surface.runs.len(),
+        surface.runs.first().map(|r| r.windows).unwrap_or(0),
+        surface.stats.jobs,
+        surface.stats.wall_ns as f64 / 1e9,
+        surface.stats.speedup_estimate(),
+    );
+    let format = Format::from_key(&args.format).expect("validated");
+    let rendered = crate::report::dynamics::render(&surface, format);
+    match &args.out {
+        Some(path) => {
+            std::fs::write(path, &rendered).with_context(|| format!("writing {path}"))?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{rendered}"),
+    }
+    if let Some(path) = &args.summary_out {
+        std::fs::write(path, crate::report::dynamics::render_summary_csv(&surface))
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path} (regress-compatible summary)");
     }
     Ok(())
 }
@@ -449,6 +527,42 @@ mod tests {
         a.sweep_links = Some(vec!["sli".into()]);
         assert!(dispatch(&a).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dynamics_writes_series_and_summary_and_summary_regresses_clean() {
+        let dir = std::env::temp_dir();
+        let series_path = dir.join("gvb_test_dyn_series.csv");
+        let summary_path = dir.join("gvb_test_dyn_summary.csv");
+        let mut a = Args::default();
+        a.command = Command::Dynamics;
+        a.system = "native".into();
+        a.system_set = true;
+        a.quick = true;
+        a.dyn_scenarios = Some(vec!["steady".into()]);
+        a.duration_ms = Some(200);
+        a.window_ms = Some(50);
+        a.format = "csv".into();
+        a.out = Some(series_path.to_str().unwrap().to_string());
+        a.summary_out = Some(summary_path.to_str().unwrap().to_string());
+        dispatch(&a).unwrap();
+        let series = std::fs::read_to_string(&series_path).unwrap();
+        let lines: Vec<&str> = series.lines().collect();
+        assert_eq!(lines[0], crate::report::dynamics::CSV_HEADER);
+        // 4 windows × (6 aggregate + 2 per-tenant × 4 tenants) series.
+        assert_eq!(lines.len(), 1 + 4 * (6 + 8));
+        assert!(lines[1].starts_with("native,steady,200,50,0,50,all,DYN-LAT-P50,"));
+        // The summary CSV is directly consumable by `gvbench regress`
+        // and passes against itself.
+        let summary = std::fs::read_to_string(&summary_path).unwrap();
+        let b = crate::regress::parse_baseline_csv(&summary, "native").unwrap();
+        assert_eq!(b.schema, crate::regress::BaselineSchema::Dynamics);
+        assert_eq!(b.rows.len(), 4);
+        let cfg = RunConfig::quick("native");
+        let out = crate::regress::run_regression(&cfg, &b, 0.0001).unwrap();
+        assert!(out.passed(), "{:?}", out.regressions());
+        std::fs::remove_file(&series_path).ok();
+        std::fs::remove_file(&summary_path).ok();
     }
 
     #[test]

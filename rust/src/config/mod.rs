@@ -1,8 +1,9 @@
 //! Run configuration files: a small parser for a `key = value` format
 //! (INI-like, with `#` comments and `[section]` headers) that configures
 //! iterations, tenants, quotas, custom category weights — the paper's
-//! "users can customize weights via configuration files" (§6.3) — and the
-//! `[sweep]` scenario grid consumed by `gvbench sweep`.
+//! "users can customize weights via configuration files" (§6.3) — the
+//! `[sweep]` scenario grid consumed by `gvbench sweep`, and the
+//! `[dynsim]` dynamics grid consumed by `gvbench dynamics`.
 //!
 //! A `[section]` header prefixes subsequent keys with `section.`, so
 //!
@@ -40,6 +41,21 @@ pub struct SweepOverlay {
     pub categories: Option<Vec<String>>,
 }
 
+/// Values from a config file's `[dynsim]` section (`None` = key absent;
+/// `gvbench dynamics` overlays its own flags on top and falls back to
+/// the default grid). Scenario names and ranges are validated by the
+/// CLI layer against the preset registry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DynOverlay {
+    /// Scenario preset keys (`scenarios = churn, failover`).
+    pub scenarios: Option<Vec<String>>,
+    /// Timeline horizon (`duration_ms = 2000`).
+    pub duration_ms: Option<u64>,
+    /// Reporting window (`window_ms = 200`).
+    pub window_ms: Option<u64>,
+    pub systems: Option<Vec<String>>,
+}
+
 /// Parse error with line number.
 #[derive(Debug, PartialEq)]
 pub enum ConfigError {
@@ -59,7 +75,9 @@ impl std::fmt::Display for ConfigError {
             ConfigError::Weights(sum) => write!(f, "weights must sum to 1.0 (got {sum})"),
             ConfigError::UnknownKey(key) => write!(
                 f,
-                "unrecognized key `{key}` (known [sweep] keys: tenants, quota, gpus, link, systems, categories)"
+                "unrecognized key `{key}` (known [sweep] keys: tenants, quota, gpus, link, \
+                 systems, categories; known [dynsim] keys: scenarios, duration_ms, window_ms, \
+                 systems)"
             ),
         }
     }
@@ -197,6 +215,31 @@ impl FileConfig {
         })
     }
 
+    /// The `[dynsim]` section's dynamics grid, if any keys are present.
+    /// Recognized keys: `dynsim.scenarios`, `dynsim.systems` (string
+    /// lists), `dynsim.duration_ms`, `dynsim.window_ms` (u64). Like the
+    /// `sweep.*` namespace, `dynsim.*` is closed: unknown keys are an
+    /// error rather than silently ignored settings.
+    pub fn dynsim(&self) -> Result<DynOverlay, ConfigError> {
+        const KNOWN: [&str; 4] = [
+            "dynsim.scenarios",
+            "dynsim.duration_ms",
+            "dynsim.window_ms",
+            "dynsim.systems",
+        ];
+        for key in self.values.keys() {
+            if key.starts_with("dynsim.") && !KNOWN.contains(&key.as_str()) {
+                return Err(ConfigError::UnknownKey(key.clone()));
+            }
+        }
+        Ok(DynOverlay {
+            scenarios: self.get_str_list("dynsim.scenarios"),
+            duration_ms: self.get_num::<u64>("dynsim.duration_ms")?,
+            window_ms: self.get_num::<u64>("dynsim.window_ms")?,
+            systems: self.get_str_list("dynsim.systems"),
+        })
+    }
+
     /// Custom category weights: keys `weight.<category-key>`. Returns the
     /// default weights overlaid with any file-provided ones; validates the
     /// sum is 1.0 (±1e-6).
@@ -290,6 +333,30 @@ mod tests {
         assert!(matches!(typo.sweep(), Err(ConfigError::UnknownKey(_))));
         let stray = FileConfig::parse("[sweep]\ntenants = 1,2\nseed = 7\n").unwrap();
         assert_eq!(stray.sweep(), Err(ConfigError::UnknownKey("sweep.seed".to_string())));
+    }
+
+    #[test]
+    fn dynsim_section_parses_and_is_closed() {
+        let fc = FileConfig::parse(
+            "[dynsim]\nscenarios = churn, failover\nduration_ms = 2000\nwindow_ms = 200\nsystems = hami\n",
+        )
+        .unwrap();
+        let d = fc.dynsim().unwrap();
+        assert_eq!(
+            d.scenarios,
+            Some(vec!["churn".to_string(), "failover".to_string()])
+        );
+        assert_eq!(d.duration_ms, Some(2000));
+        assert_eq!(d.window_ms, Some(200));
+        assert_eq!(d.systems, Some(vec!["hami".to_string()]));
+        // Absent section: all-None overlay.
+        let empty = FileConfig::parse("jobs = 4\n").unwrap();
+        assert_eq!(empty.dynsim().unwrap(), DynOverlay::default());
+        // Typos and stray keys are errors, not silently ignored settings.
+        let typo = FileConfig::parse("[dynsim]\nscenario = churn\n").unwrap();
+        assert!(matches!(typo.dynsim(), Err(ConfigError::UnknownKey(_))));
+        let bad = FileConfig::parse("[dynsim]\nduration_ms = lots\n").unwrap();
+        assert!(matches!(bad.dynsim(), Err(ConfigError::Value(_, _))));
     }
 
     #[test]

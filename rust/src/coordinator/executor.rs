@@ -147,23 +147,50 @@ pub fn execute_prepared_indexed(
     pairs: &[(Task, RunConfig)],
     jobs: usize,
 ) -> (Vec<Option<MetricResult>>, ExecutionStats) {
-    let jobs = resolve_jobs(jobs).min(pairs.len().max(1));
+    let tasks: Vec<Task> = pairs.iter().map(|(t, _)| t.clone()).collect();
+    execute_indexed_with(&tasks, jobs, |i, task| registry::run_metric(task.metric_id, &pairs[i].1))
+}
+
+/// The generic worker-pool core behind [`execute_prepared_indexed`]:
+/// execute an arbitrary per-task function over `tasks` on a pool of
+/// `jobs` workers (0 = available parallelism), returning results aligned
+/// with input indices plus the run's [`ExecutionStats`].
+///
+/// `run(i, task)` produces the result for `tasks[i]`; returning `None`
+/// leaves slot `i` empty and records no timing (the "unknown metric id"
+/// convention of the metric paths). Callers that execute something other
+/// than a registry metric per task — the `dynsim` dynamic-scenario
+/// engine runs one whole scenario timeline per task — ride this directly.
+/// The determinism contract is unchanged: `run` must be a pure function
+/// of the task's coordinates (derive any seed from them), never of the
+/// worker count or completion order.
+pub fn execute_indexed_with<R, F>(
+    tasks: &[Task],
+    jobs: usize,
+    run: F,
+) -> (Vec<Option<R>>, ExecutionStats)
+where
+    R: Send,
+    F: Fn(usize, &Task) -> Option<R> + Sync,
+{
+    let jobs = resolve_jobs(jobs).min(tasks.len().max(1));
     let t_start = Instant::now();
     let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<(MetricResult, TaskTiming)>>> =
-        pairs.iter().map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<(R, TaskTiming)>>> =
+        tasks.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for worker in 0..jobs {
             let cursor = &cursor;
             let slots = &slots;
+            let run = &run;
             scope.spawn(move || loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= pairs.len() {
+                if i >= tasks.len() {
                     break;
                 }
-                let (task, cfg) = &pairs[i];
+                let task = &tasks[i];
                 let t0 = Instant::now();
-                if let Some(result) = registry::run_metric(task.metric_id, cfg) {
+                if let Some(result) = run(i, task) {
                     let timing = TaskTiming {
                         system: task.system.clone(),
                         metric_id: task.metric_id,
@@ -175,8 +202,8 @@ pub fn execute_prepared_indexed(
             });
         }
     });
-    let mut results: Vec<Option<MetricResult>> = Vec::with_capacity(pairs.len());
-    let mut timings = Vec::with_capacity(pairs.len());
+    let mut results: Vec<Option<R>> = Vec::with_capacity(tasks.len());
+    let mut timings = Vec::with_capacity(tasks.len());
     for slot in slots {
         match slot.into_inner().unwrap() {
             Some((result, timing)) => {
@@ -284,6 +311,31 @@ mod tests {
         assert!(slots[1].is_none());
         assert_eq!(slots[2].as_ref().unwrap().id, "PCIE-004");
         assert_eq!(stats.tasks.len(), 2);
+    }
+
+    #[test]
+    fn generic_core_runs_arbitrary_task_functions() {
+        // execute_indexed_with is the shared pool core: results align with
+        // input indices, None slots record no timing, and output order is
+        // independent of the worker count.
+        let tasks: Vec<Task> = (0..7)
+            .map(|i| Task { system: format!("sys{i}"), metric_id: "X-1" })
+            .collect();
+        let run = |i: usize, task: &Task| {
+            if i == 3 {
+                None
+            } else {
+                Some(format!("{}#{}", task.system, i))
+            }
+        };
+        let (r1, s1) = execute_indexed_with(&tasks, 1, run);
+        let (r4, s4) = execute_indexed_with(&tasks, 4, run);
+        assert_eq!(r1, r4);
+        assert_eq!(r1.len(), 7);
+        assert!(r1[3].is_none());
+        assert_eq!(r1[2].as_deref(), Some("sys2#2"));
+        assert_eq!(s1.tasks.len(), 6);
+        assert_eq!(s4.tasks.len(), 6);
     }
 
     #[test]

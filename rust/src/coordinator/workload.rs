@@ -1,5 +1,14 @@
-//! Workload generators: request arrival processes and kernel mixes used by
-//! the examples and the end-to-end OH-010-style runs.
+//! Workload generators: request arrival processes and kernel mixes.
+//!
+//! [`RequestGenerator`] produces Poisson arrivals with LLM-serving-shaped
+//! (log-uniform) prompt/generation lengths. Its primary consumer is the
+//! `dynsim` virtual-time dynamic-scenario engine
+//! ([`crate::dynsim::engine`]), which drives one generator per simulated
+//! tenant — rescaling `rate_hz` for burst phases — and turns each
+//! [`Request`] into its prefill/decode kernel pair
+//! ([`Request::prefill_kernel`] / [`Request::decode_kernel`]). The
+//! examples and the end-to-end OH-010-style runs use the same generators
+//! for open-loop load.
 
 use crate::simgpu::kernel::KernelDesc;
 use crate::util::Rng;
@@ -17,6 +26,29 @@ pub struct Request {
     pub batchable: bool,
 }
 
+impl Request {
+    /// The request's prefill phase: one fused attention pass over the
+    /// prompt (bf16) — compute scales with `prompt_len²`.
+    pub fn prefill_kernel(&self) -> KernelDesc {
+        KernelDesc::attention(1, self.prompt_len.max(1), 64, true)
+    }
+
+    /// The request's decode phase as one fused kernel covering all
+    /// generated tokens: the classic weight-streaming-bound regime (a
+    /// ~25M-param layer group's bf16 weights re-read once per token), so
+    /// service time scales linearly with `gen_len`.
+    pub fn decode_kernel(&self) -> KernelDesc {
+        let params = 25_000_000f64;
+        let tokens = self.gen_len.max(1) as f64;
+        KernelDesc {
+            flops: 2.0 * params * tokens,
+            bytes: params * 2.0 * tokens,
+            half_precision: true,
+            occupancy: 1.0,
+        }
+    }
+}
+
 /// Poisson request generator with LLM-serving-shaped length distributions.
 #[derive(Clone, Debug)]
 pub struct RequestGenerator {
@@ -27,20 +59,37 @@ pub struct RequestGenerator {
     pub max_gen: u64,
 }
 
+/// Log-uniform length sample in `[2^lo_exp, max]`, clamping the exponent
+/// range so it never inverts when `max < 2^lo_exp` (small caps collapse
+/// to the constant `max` instead of sampling outside the bounds).
+fn log_uniform_len(rng: &mut Rng, lo_exp: f64, max: u64) -> u64 {
+    let hi = (max.max(1) as f64).log2();
+    let lo = lo_exp.min(hi);
+    ((2f64).powf(rng.f64_range(lo, hi)) as u64).clamp(1, max.max(1))
+}
+
 impl RequestGenerator {
     pub fn new(seed: u64, rate_hz: f64) -> RequestGenerator {
         RequestGenerator { rng: Rng::new(seed), rate_hz, max_prompt: 2048, max_gen: 256 }
     }
 
+    /// Builder: override the prompt/generation length caps (the dynsim
+    /// engine uses serving-scaled caps so scenario timelines stay cheap).
+    pub fn with_lengths(mut self, max_prompt: u64, max_gen: u64) -> RequestGenerator {
+        self.max_prompt = max_prompt;
+        self.max_gen = max_gen;
+        self
+    }
+
     pub fn next_request(&mut self) -> Request {
         let inter = self.rng.exponential(self.rate_hz) * 1e9;
         // Prompt lengths are long-tailed; use a simple log-uniform.
-        let prompt = (2f64).powf(self.rng.f64_range(5.0, (self.max_prompt as f64).log2()));
-        let gen = (2f64).powf(self.rng.f64_range(3.0, (self.max_gen as f64).log2()));
+        let prompt = log_uniform_len(&mut self.rng, 5.0, self.max_prompt);
+        let gen = log_uniform_len(&mut self.rng, 3.0, self.max_gen);
         Request {
             inter_arrival_ns: inter,
-            prompt_len: prompt as u64,
-            gen_len: gen as u64,
+            prompt_len: prompt,
+            gen_len: gen,
             batchable: self.rng.chance(0.8),
         }
     }
@@ -115,6 +164,39 @@ mod tests {
         assert!(Mix::Bandwidth.kernel(&mut rng).bytes > 1e8);
         let inf = Mix::Inference.kernel(&mut rng);
         assert!(inf.half_precision);
+    }
+
+    #[test]
+    fn small_length_caps_stay_in_bounds() {
+        // Regression test: caps below the log-uniform floors (2^5 prompt,
+        // 2^3 gen) used to invert the exponent range and sample *outside*
+        // [1, max]; the clamped bounds collapse to the cap instead.
+        let mut g = RequestGenerator::new(5, 10.0).with_lengths(16, 4);
+        for r in g.trace(300) {
+            assert!(r.prompt_len >= 1 && r.prompt_len <= 16, "prompt={}", r.prompt_len);
+            assert!(r.gen_len >= 1 && r.gen_len <= 4, "gen={}", r.gen_len);
+        }
+        // Degenerate 1-token caps are the constant 1.
+        let mut g = RequestGenerator::new(6, 10.0).with_lengths(1, 1);
+        for r in g.trace(50) {
+            assert_eq!((r.prompt_len, r.gen_len), (1, 1));
+        }
+    }
+
+    #[test]
+    fn request_kernels_are_phase_shaped() {
+        let mut g = RequestGenerator::new(8, 10.0).with_lengths(512, 64);
+        let r = g.next_request();
+        let prefill = r.prefill_kernel();
+        let decode = r.decode_kernel();
+        // Prefill compute scales with prompt²; decode is weight-bound and
+        // linear in generated tokens.
+        assert!(prefill.half_precision && decode.half_precision);
+        assert!(
+            (prefill.flops - 4.0 * (r.prompt_len * r.prompt_len * 64) as f64).abs() < 1.0
+        );
+        assert!((decode.bytes - 50e6 * r.gen_len as f64).abs() < 1.0);
+        assert!(decode.intensity() < 5.0, "decode must be memory-bound");
     }
 
     #[test]

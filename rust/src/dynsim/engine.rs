@@ -1,0 +1,615 @@
+//! The virtual-time event engine: replay one [`ScenarioSpec`] timeline
+//! against one simulated GPU node and reduce it to windowed time series.
+//!
+//! The engine is a discrete-event simulation over the `cudalite` API's
+//! single virtual clock:
+//!
+//! - **Arrivals are open-loop**: each active tenant owns a
+//!   [`RequestGenerator`] whose Poisson process schedules request arrival
+//!   times independently of service completion — the correct model for
+//!   an LLM serving front door. Requests are serviced in arrival order;
+//!   when the device (clock) is behind the arrival backlog, queueing
+//!   delay emerges naturally and shows up in the windowed latency tails.
+//! - **Service is the virtualized driver path**: each request allocates
+//!   its KV block through `cuMemAlloc` (held in a bounded per-tenant
+//!   ring, so the heap churns like a real serving node), launches its
+//!   prefill and decode kernels ([`Request::prefill_kernel`] /
+//!   [`Request::decode_kernel`]) and synchronizes. Every hook, quota
+//!   check and throttle of the system under test is therefore on the
+//!   request path, which is exactly where the paper's §8 finding ("LLM
+//!   workloads are sensitive to allocation overhead") lives.
+//! - **Faults recover through the driver**: an injected fault surfaces at
+//!   the tenant's first failing call; the engine performs the
+//!   destroy+recreate recovery the ERR-002 metric measures and records
+//!   the fault→first-successful-request recovery time.
+//!
+//! Determinism: everything derives from `cfg.seed` (the caller passes the
+//! composed `task_seed(dynamics_seed(..), system, scenario)` — see
+//! [`crate::util::rng::dynamics_seed`]); per-tenant request streams are
+//! keyed by tenant id, so timelines are bit-identical at any `--jobs`
+//! count and any completion order.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::coordinator::workload::{Request, RequestGenerator};
+use crate::cudalite::Api;
+use crate::metrics::RunConfig;
+use crate::simgpu::error::{GpuError, GpuFault};
+use crate::simgpu::memory::DevicePtr;
+use crate::simgpu::TenantId;
+use crate::util::rng::splitmix64;
+use crate::virt::TenantConfig;
+
+use super::scenario::{EventKind, ScenarioSpec};
+
+/// KV-cache bytes per (prompt + generated) token held by a request.
+const KV_BYTES_PER_TOKEN: u64 = 128 << 10;
+/// Recent request KV blocks each tenant keeps resident (a serving
+/// engine's prefix/session cache) — old blocks free as new ones land,
+/// which is what keeps the allocator churning.
+const KV_RING: usize = 12;
+/// Prompt/generation caps for the serving-scaled request shapes.
+const MAX_PROMPT: u64 = 512;
+const MAX_GEN: u64 = 64;
+
+/// One value of one windowed series.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SeriesPoint {
+    /// Window index (0-based).
+    pub window: usize,
+    /// `None` = aggregate over all tenants; `Some(t)` = per-tenant series.
+    pub tenant: Option<TenantId>,
+    /// Series id from [`crate::metrics::taxonomy::DYN_SERIES`] (plus the
+    /// `DYN-RECOVERY` marker row in the recovery window).
+    pub id: &'static str,
+    pub value: f64,
+}
+
+/// Recovery record of the first injected-fault recovery of the timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Recovery {
+    /// The tenant the fault was attributed to.
+    pub tenant: TenantId,
+    /// Virtual time of fault injection, ns.
+    pub fault_ns: u64,
+    /// Virtual completion time of the tenant's first successful request
+    /// after recovery, ns.
+    pub recovered_ns: u64,
+}
+
+impl Recovery {
+    /// Fault-to-recovered interval, ms.
+    pub fn recovery_ms(&self) -> f64 {
+        (self.recovered_ns.saturating_sub(self.fault_ns)) as f64 / 1e6
+    }
+}
+
+/// One executed (system, scenario) timeline: the windowed time series
+/// plus the per-scenario summary statistics.
+#[derive(Clone, Debug)]
+pub struct ScenarioRun {
+    pub system: String,
+    /// Canonical scenario key.
+    pub scenario: &'static str,
+    pub duration_ms: u64,
+    pub window_ms: u64,
+    /// Number of reporting windows.
+    pub windows: usize,
+    /// Every tenant that ever arrived, ascending.
+    pub tenants: Vec<TenantId>,
+    /// Long-format series points in deterministic order: windows
+    /// ascending; within a window the aggregate series first (taxonomy
+    /// order), then per-tenant series per tenant ascending, then the
+    /// recovery marker when this is the recovery window.
+    pub series: Vec<SeriesPoint>,
+    /// Per-scenario summary statistics, in
+    /// [`crate::metrics::taxonomy::DYN_SUMMARY`] order.
+    pub summary: Vec<(&'static str, f64)>,
+    /// Requests completed successfully.
+    pub completed: usize,
+    /// Requests abandoned (service failed even after recovery).
+    pub failed: usize,
+    /// First injected-fault recovery, when the scenario injected one and
+    /// the tenant recovered within the horizon.
+    pub recovery: Option<Recovery>,
+}
+
+impl ScenarioRun {
+    /// Summary value by id.
+    pub fn summary_value(&self, id: &str) -> Option<f64> {
+        self.summary.iter().find(|(i, _)| *i == id).map(|(_, v)| *v)
+    }
+
+    /// All points of one series id (aggregate and per-tenant alike).
+    pub fn points(&self, id: &str) -> Vec<&SeriesPoint> {
+        self.series.iter().filter(|p| p.id == id).collect()
+    }
+
+    /// The window index containing virtual time `t_ns` (clamped to the
+    /// last window, where late completions accumulate).
+    pub fn window_of(&self, t_ns: u64) -> usize {
+        window_of(t_ns, self.window_ms * 1_000_000, self.windows)
+    }
+
+    /// End of window `w` on the timeline, ms (the last window truncates
+    /// at the horizon) — the `t_ms` column of the time-series CSV.
+    pub fn window_end_ms(&self, w: usize) -> u64 {
+        ((w as u64 + 1) * self.window_ms).min(self.duration_ms)
+    }
+}
+
+fn window_of(t_ns: u64, window_ns: u64, n_windows: usize) -> usize {
+    ((t_ns / window_ns.max(1)) as usize).min(n_windows.saturating_sub(1))
+}
+
+/// Deterministic per-tenant stream seed: pure in (run seed, tenant id),
+/// so a tenant's request trace is independent of arrival interleaving.
+fn tenant_stream_seed(seed: u64, tenant: TenantId) -> u64 {
+    let mut s = seed ^ 0xD1B54A32D192ED03u64.wrapping_mul(tenant as u64 + 1);
+    splitmix64(&mut s)
+}
+
+/// Live per-tenant state.
+struct Tenant {
+    gen: RequestGenerator,
+    quota_cfg: TenantConfig,
+    base_rate_hz: f64,
+    burst_until_ns: Option<u64>,
+    /// The next request, drawn ahead so its arrival time is known.
+    pending: Request,
+    next_arrival_ns: u64,
+    /// Resident KV blocks `(ptr, bytes)`, oldest first.
+    ring: VecDeque<(DevicePtr, u64)>,
+    held_bytes: u64,
+}
+
+/// Drive one request through the virtualized driver path. Quota/OOM
+/// rejections shrink the tenant's KV ring and carry on; fault-class
+/// errors propagate so the caller can run the recovery path.
+fn service_request(
+    api: &mut Api,
+    tenant: TenantId,
+    req: &Request,
+    state: &mut Tenant,
+    busy: &mut BTreeMap<(usize, TenantId), f64>,
+    window_ns: u64,
+    duration_ns: u64,
+    n_windows: usize,
+) -> Result<(), GpuError> {
+    let kv_bytes = (req.prompt_len + req.gen_len).max(1) * KV_BYTES_PER_TOKEN;
+    match api.mem_alloc(tenant, kv_bytes) {
+        Ok(p) => {
+            state.ring.push_back((p, kv_bytes));
+            state.held_bytes += kv_bytes;
+            if state.ring.len() > KV_RING {
+                let (old, sz) = state.ring.pop_front().expect("ring non-empty");
+                state.held_bytes = state.held_bytes.saturating_sub(sz);
+                api.mem_free(tenant, old)?;
+            }
+        }
+        Err(GpuError::QuotaExceeded) | Err(GpuError::OutOfMemory) => {
+            // Quota pressure: evict the oldest cached block and serve the
+            // request without caching this one.
+            if let Some((old, sz)) = state.ring.pop_front() {
+                state.held_bytes = state.held_bytes.saturating_sub(sz);
+                api.mem_free(tenant, old)?;
+            }
+        }
+        Err(e) => return Err(e),
+    }
+    let prefill = api.launch_kernel(tenant, 0, &req.prefill_kernel())?;
+    let decode = api.launch_kernel(tenant, 0, &req.decode_kernel())?;
+    api.sync_device(tenant)?;
+    for (s, e) in [prefill, decode] {
+        record_busy(busy, tenant, s, e, window_ns, duration_ns, n_windows);
+    }
+    Ok(())
+}
+
+/// Distribute a kernel's `[start, end)` busy span over the windows it
+/// overlaps (clipped at the horizon; spans past it fold into the last
+/// window's accounting only up to the horizon).
+fn record_busy(
+    busy: &mut BTreeMap<(usize, TenantId), f64>,
+    tenant: TenantId,
+    start: u64,
+    end: u64,
+    window_ns: u64,
+    duration_ns: u64,
+    n_windows: usize,
+) {
+    let end = end.min(duration_ns);
+    let mut s = start.min(end);
+    while s < end {
+        let w = window_of(s, window_ns, n_windows);
+        let w_end = ((w as u64 + 1) * window_ns).min(duration_ns).max(s + 1);
+        let e = end.min(w_end);
+        *busy.entry((w, tenant)).or_insert(0.0) += (e - s) as f64;
+        s = e;
+    }
+}
+
+/// Execute one scenario timeline on one system. `cfg.system` selects the
+/// backend and `cfg.seed` must already be the composed per-task dynamics
+/// seed (see [`super::run_dynamics`], which derives it per task).
+pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
+    let mut api = Api::with_backend(&cfg.system, cfg.seed);
+    let dev_mem = api.dev.spec.hbm_bytes;
+    let duration_ns = spec.duration_ms.max(1) * 1_000_000;
+    let window_ns = spec.window_ms.max(1) * 1_000_000;
+    let n_windows = spec.windows().max(1);
+
+    let mut events = spec.events.clone();
+    events.sort_by_key(|e| (e.at_ms, e.tenant));
+    let mut ev_idx = 0usize;
+
+    let mut active: BTreeMap<TenantId, Tenant> = BTreeMap::new();
+    let mut ever: BTreeSet<TenantId> = BTreeSet::new();
+    // (tenant, arrival_ns, completion_ns) of successful requests.
+    let mut samples: Vec<(TenantId, u64, u64)> = Vec::new();
+    let mut failed = 0usize;
+    let mut busy: BTreeMap<(usize, TenantId), f64> = BTreeMap::new();
+    let mut snap_mem: Vec<f64> = Vec::with_capacity(n_windows);
+    let mut snap_frag: Vec<f64> = Vec::with_capacity(n_windows);
+    let mut snap_tenant_mem: Vec<BTreeMap<TenantId, f64>> = Vec::with_capacity(n_windows);
+    let mut fault: Option<(TenantId, u64)> = None;
+    let mut recovery: Option<Recovery> = None;
+
+    let boundary_ns =
+        |w: usize| ((w as u64 + 1) * window_ns).min(duration_ns);
+
+    loop {
+        let next_event_ns = events.get(ev_idx).map(|e| e.at_ms * 1_000_000);
+        let next_arrival: Option<(u64, TenantId)> =
+            active.iter().map(|(t, s)| (s.next_arrival_ns, *t)).min();
+        let t = match (next_event_ns, next_arrival) {
+            (None, None) => break,
+            (Some(te), None) => te,
+            (None, Some((ta, _))) => ta,
+            (Some(te), Some((ta, _))) => te.min(ta),
+        };
+        if t >= duration_ns {
+            break;
+        }
+        // Snapshot every window boundary reached before this occurrence:
+        // nothing changes between consecutive occurrences, so the current
+        // state *is* the boundary state.
+        while snap_mem.len() < n_windows && boundary_ns(snap_mem.len()) <= t {
+            snap_mem.push(api.dev.memory.used() as f64 / dev_mem as f64);
+            snap_frag.push(api.dev.memory.frag_stats().fragmentation_index * 100.0);
+            snap_tenant_mem.push(
+                active
+                    .iter()
+                    .map(|(tid, s)| (*tid, s.held_bytes as f64 / dev_mem as f64))
+                    .collect(),
+            );
+        }
+        // Scenario events take precedence over request arrivals on ties.
+        if next_event_ns == Some(t) {
+            let ev = events[ev_idx];
+            ev_idx += 1;
+            match ev.kind {
+                EventKind::Arrive { rate_hz, quota_pct } => {
+                    let quota = dev_mem.saturating_mul(quota_pct as u64) / 100;
+                    let tc = TenantConfig::unlimited()
+                        .with_mem_limit(quota)
+                        .with_sm_limit(quota_pct as f64 / 100.0);
+                    api.dev.clock.advance_to(t);
+                    if api.ctx_create(ev.tenant, tc).is_ok() {
+                        let mut gen =
+                            RequestGenerator::new(tenant_stream_seed(cfg.seed, ev.tenant), rate_hz)
+                                .with_lengths(MAX_PROMPT, MAX_GEN);
+                        let pending = gen.next_request();
+                        let next_arrival_ns = t + pending.inter_arrival_ns.max(1.0) as u64;
+                        ever.insert(ev.tenant);
+                        active.insert(
+                            ev.tenant,
+                            Tenant {
+                                gen,
+                                quota_cfg: tc,
+                                base_rate_hz: rate_hz,
+                                burst_until_ns: None,
+                                pending,
+                                next_arrival_ns,
+                                ring: VecDeque::new(),
+                                held_bytes: 0,
+                            },
+                        );
+                    }
+                }
+                EventKind::Depart => {
+                    if active.remove(&ev.tenant).is_some() {
+                        api.dev.clock.advance_to(t);
+                        let _ = api.ctx_destroy(ev.tenant);
+                    }
+                }
+                EventKind::Burst { factor, until_ms } => {
+                    if let Some(s) = active.get_mut(&ev.tenant) {
+                        s.gen.rate_hz = s.base_rate_hz * factor;
+                        s.burst_until_ns = Some(until_ms * 1_000_000);
+                    }
+                }
+                EventKind::Fail => {
+                    api.dev.clock.advance_to(t);
+                    api.inject_fault(ev.tenant, GpuFault::IllegalAddress);
+                    fault = Some((ev.tenant, t));
+                }
+            }
+            continue;
+        }
+        // Request arrival: service in arrival order on the shared device.
+        let (_, tenant) = next_arrival.expect("an arrival chose t");
+        let state = active.get_mut(&tenant).expect("arrival of an active tenant");
+        let req = state.pending.clone();
+        api.dev.clock.advance_to(t);
+        let served = service_request(
+            &mut api, tenant, &req, state, &mut busy, window_ns, duration_ns, n_windows,
+        );
+        match served {
+            Ok(()) => samples.push((tenant, t, api.now_ns())),
+            Err(_) => {
+                // Fault path: the ERR-002 recovery cycle (destroy +
+                // recreate clears the poison and every held block), then
+                // one retry of the request.
+                let tc = state.quota_cfg;
+                state.ring.clear();
+                state.held_bytes = 0;
+                let _ = api.ctx_destroy(tenant);
+                let recovered = api.ctx_create(tenant, tc).is_ok()
+                    && service_request(
+                        &mut api, tenant, &req, state, &mut busy, window_ns, duration_ns,
+                        n_windows,
+                    )
+                    .is_ok();
+                if recovered {
+                    let completion = api.now_ns();
+                    samples.push((tenant, t, completion));
+                    if recovery.is_none() {
+                        if let Some((ft, fns)) = fault {
+                            if ft == tenant {
+                                recovery =
+                                    Some(Recovery { tenant, fault_ns: fns, recovered_ns: completion });
+                                fault = None;
+                            }
+                        }
+                    }
+                } else {
+                    failed += 1;
+                }
+            }
+        }
+        // Burst expiry is checked lazily at the next draw.
+        if let Some(until) = state.burst_until_ns {
+            if t >= until {
+                state.gen.rate_hz = state.base_rate_hz;
+                state.burst_until_ns = None;
+            }
+        }
+        state.pending = state.gen.next_request();
+        state.next_arrival_ns = t + state.pending.inter_arrival_ns.max(1.0) as u64;
+    }
+    // Trailing windows (no further occurrences): the final state holds.
+    while snap_mem.len() < n_windows {
+        snap_mem.push(api.dev.memory.used() as f64 / dev_mem as f64);
+        snap_frag.push(api.dev.memory.frag_stats().fragmentation_index * 100.0);
+        snap_tenant_mem.push(
+            active
+                .iter()
+                .map(|(tid, s)| (*tid, s.held_bytes as f64 / dev_mem as f64))
+                .collect(),
+        );
+    }
+
+    // ---- reduce to windowed series --------------------------------------
+    let tenants: Vec<TenantId> = ever.iter().copied().collect();
+    let mut window_lats: Vec<Vec<f64>> = vec![Vec::new(); n_windows];
+    for &(_, arrival, completion) in &samples {
+        let w = window_of(completion, window_ns, n_windows);
+        window_lats[w].push((completion.saturating_sub(arrival)) as f64 / 1e6);
+    }
+    let recovery_window = recovery.map(|r| window_of(r.recovered_ns, window_ns, n_windows));
+    let mut series: Vec<SeriesPoint> = Vec::new();
+    let mut window_p99: Vec<f64> = Vec::with_capacity(n_windows);
+    for w in 0..n_windows {
+        let win_len_ns = (boundary_ns(w) - (w as u64) * window_ns).max(1) as f64;
+        let lats = &window_lats[w];
+        let (p50, p99) = if lats.is_empty() {
+            (f64::NAN, f64::NAN)
+        } else {
+            (crate::stats::percentile(lats, 50.0), crate::stats::percentile(lats, 99.0))
+        };
+        window_p99.push(p99);
+        let thr = lats.len() as f64 / (win_len_ns / 1e9);
+        let agg_busy: f64 =
+            tenants.iter().map(|t| busy.get(&(w, *t)).copied().unwrap_or(0.0)).sum();
+        series.push(SeriesPoint { window: w, tenant: None, id: "DYN-LAT-P50", value: p50 });
+        series.push(SeriesPoint { window: w, tenant: None, id: "DYN-LAT-P99", value: p99 });
+        series.push(SeriesPoint { window: w, tenant: None, id: "DYN-THR", value: thr });
+        series.push(SeriesPoint {
+            window: w,
+            tenant: None,
+            id: "DYN-SM",
+            value: agg_busy / win_len_ns,
+        });
+        series.push(SeriesPoint { window: w, tenant: None, id: "DYN-MEM", value: snap_mem[w] });
+        series.push(SeriesPoint { window: w, tenant: None, id: "DYN-FRAG", value: snap_frag[w] });
+        for &t in &tenants {
+            series.push(SeriesPoint {
+                window: w,
+                tenant: Some(t),
+                id: "DYN-SM",
+                value: busy.get(&(w, t)).copied().unwrap_or(0.0) / win_len_ns,
+            });
+            series.push(SeriesPoint {
+                window: w,
+                tenant: Some(t),
+                id: "DYN-MEM",
+                value: snap_tenant_mem[w].get(&t).copied().unwrap_or(0.0),
+            });
+        }
+        if recovery_window == Some(w) {
+            let r = recovery.expect("recovery window implies recovery");
+            series.push(SeriesPoint {
+                window: w,
+                tenant: Some(r.tenant),
+                id: "DYN-RECOVERY",
+                value: r.recovery_ms(),
+            });
+        }
+    }
+
+    // ---- per-scenario summary (the regress-gateable surface) ------------
+    let p99s: Vec<f64> = window_p99.iter().copied().filter(|v| v.is_finite()).collect();
+    let steady = if p99s.is_empty() { 0.0 } else { crate::stats::percentile(&p99s, 50.0) };
+    let worst = p99s.iter().copied().fold(0.0f64, f64::max);
+    let worst_win = if steady > 0.0 { (worst / steady - 1.0) * 100.0 } else { 0.0 };
+    let thr_mean = samples.len() as f64 / (spec.duration_ms.max(1) as f64 / 1e3);
+    // 0 = no fault injected. A fault that never recovered inside the
+    // horizon must not read as 0 too (lower-better would score total
+    // recovery failure as perfection): report the full horizon instead.
+    let recovery_ms = match (recovery, fault) {
+        (Some(r), _) => r.recovery_ms(),
+        (None, Some(_)) => spec.duration_ms as f64,
+        (None, None) => 0.0,
+    };
+    let summary = vec![
+        ("DYN-P99-STEADY", steady),
+        ("DYN-WORST-WIN", worst_win),
+        ("DYN-THR-MEAN", thr_mean),
+        ("DYN-RECOVERY", recovery_ms),
+    ];
+
+    ScenarioRun {
+        system: cfg.system.clone(),
+        scenario: spec.name,
+        duration_ms: spec.duration_ms,
+        window_ms: spec.window_ms,
+        windows: n_windows,
+        tenants,
+        series,
+        summary,
+        completed: samples.len(),
+        failed,
+        recovery,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{dynamics_seed, task_seed};
+
+    fn cfg_for(system: &str, scenario: &str, duration_ms: u64, window_ms: u64) -> RunConfig {
+        let mut cfg = RunConfig::quick(system);
+        cfg.seed = task_seed(dynamics_seed(42, scenario, duration_ms, window_ms), system, scenario);
+        cfg
+    }
+
+    fn run(system: &str, scenario: &str, duration_ms: u64, window_ms: u64) -> ScenarioRun {
+        let spec = ScenarioSpec::preset(scenario, duration_ms, window_ms).unwrap();
+        run_scenario(&cfg_for(system, scenario, duration_ms, window_ms), &spec)
+    }
+
+    #[test]
+    fn steady_timeline_completes_requests_and_fills_windows() {
+        let r = run("native", "steady", 300, 50);
+        assert_eq!(r.windows, 6);
+        assert_eq!(r.tenants, vec![1, 2, 3, 4]);
+        // 4 tenants × 40 Hz × 0.3 s ≈ 48 expected arrivals.
+        assert!(r.completed > 20, "completed={}", r.completed);
+        assert_eq!(r.failed, 0);
+        assert!(r.recovery.is_none());
+        // Aggregate series present for every window.
+        assert_eq!(r.points("DYN-LAT-P99").iter().filter(|p| p.tenant.is_none()).count(), 6);
+        assert_eq!(r.points("DYN-THR").len(), 6);
+        // Throughput is positive in the bulk of the run.
+        let thr: Vec<f64> = r.points("DYN-THR").iter().map(|p| p.value).collect();
+        assert!(thr.iter().sum::<f64>() > 0.0);
+        // Memory is actually held (KV rings) and fragmentation is a
+        // finite percentage.
+        let mem = r.points("DYN-MEM");
+        assert!(mem.iter().any(|p| p.tenant.is_none() && p.value > 0.0), "{mem:?}");
+        assert!(r.points("DYN-FRAG").iter().all(|p| p.value.is_finite()));
+        // Summary stats all finite (the regress surface requires it).
+        for (id, v) in &r.summary {
+            assert!(v.is_finite(), "{id}={v}");
+        }
+        assert!(r.summary_value("DYN-THR-MEAN").unwrap() > 50.0);
+        assert_eq!(r.summary_value("DYN-RECOVERY"), Some(0.0));
+    }
+
+    #[test]
+    fn bit_identical_across_repeat_runs() {
+        let a = run("hami", "churn", 300, 50);
+        let b = run("hami", "churn", 300, 50);
+        assert_eq!(a.series.len(), b.series.len());
+        for (x, y) in a.series.iter().zip(&b.series) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.window, y.window);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.value.to_bits(), y.value.to_bits(), "{}/{}", x.id, x.window);
+        }
+        assert_eq!(a.summary, b.summary);
+    }
+
+    #[test]
+    fn seed_changes_the_timeline() {
+        let spec = ScenarioSpec::preset("steady", 300, 50).unwrap();
+        let a = run_scenario(&cfg_for("hami", "steady", 300, 50), &spec);
+        let mut cfg = cfg_for("hami", "steady", 300, 50);
+        cfg.seed = cfg.seed.wrapping_add(1);
+        let b = run_scenario(&cfg, &spec);
+        assert!(
+            a.series
+                .iter()
+                .zip(&b.series)
+                .any(|(x, y)| x.value.to_bits() != y.value.to_bits()),
+            "seed change did not affect the timeline"
+        );
+    }
+
+    #[test]
+    fn failover_records_recovery_for_the_failing_tenant() {
+        let r = run("hami", "failover", 400, 50);
+        let rec = r.recovery.expect("failover must recover");
+        // The preset faults tenant 2 at 40% of the horizon.
+        assert_eq!(rec.tenant, 2);
+        assert!(rec.fault_ns == 160 * 1_000_000, "fault at {}", rec.fault_ns);
+        assert!(rec.recovered_ns > rec.fault_ns);
+        assert!(rec.recovery_ms() > 0.0);
+        assert_eq!(r.summary_value("DYN-RECOVERY"), Some(rec.recovery_ms()));
+        // The marker lands in the recovery window, attributed to tenant 2.
+        let markers = r.points("DYN-RECOVERY");
+        assert_eq!(markers.len(), 1);
+        assert_eq!(markers[0].tenant, Some(2));
+        assert_eq!(markers[0].window, r.window_of(rec.recovered_ns));
+        assert!(markers[0].window >= 3, "window={}", markers[0].window);
+    }
+
+    #[test]
+    fn churn_departures_change_population_and_free_memory() {
+        let r = run("native", "churn", 400, 50);
+        assert_eq!(r.tenants, vec![1, 2, 3, 4, 5]);
+        // Tenant 2 departs at 60%: its per-tenant memory series must drop
+        // back to zero in the tail windows.
+        let t2_mem: Vec<f64> = r
+            .series
+            .iter()
+            .filter(|p| p.id == "DYN-MEM" && p.tenant == Some(2))
+            .map(|p| p.value)
+            .collect();
+        assert_eq!(t2_mem.len(), r.windows);
+        assert!(t2_mem.iter().any(|v| *v > 0.0), "t2 never held memory: {t2_mem:?}");
+        assert_eq!(*t2_mem.last().unwrap(), 0.0, "t2 still resident after departing");
+    }
+
+    #[test]
+    fn spike_raises_tail_latency_mid_run() {
+        let r = run("hami", "spike", 500, 50);
+        let p99: Vec<f64> = r.points("DYN-LAT-P99").iter().map(|p| p.value).collect();
+        let worst = r.summary_value("DYN-WORST-WIN").unwrap();
+        // The 4x burst through the middle must make some window visibly
+        // worse than the steady state.
+        assert!(worst > 0.0, "worst-window degradation {worst}% (p99s {p99:?})");
+    }
+}

@@ -1,0 +1,192 @@
+//! Virtual-time dynamic-scenario engine (`gvbench dynamics`).
+//!
+//! Every sweep cell is a *static point*: a fixed tenant population at a
+//! fixed quota, measured at steady state. The deployment-critical
+//! behaviours of multi-tenant GPU sharing — serving-tail latency,
+//! scheduling under churn, fragmentation evolution, fault recovery — are
+//! *temporal*: MISO (arXiv 2207.11428) and fragmentation-aware
+//! scheduling (arXiv 2511.18906) both show they are dominated by
+//! arrival/departure dynamics, not steady state. This subsystem makes
+//! the timeline itself the unit of measurement:
+//!
+//! - [`scenario`] declares a timeline ([`ScenarioSpec`]): tenant
+//!   arrive/depart/burst/fail events on a `duration_ms` horizon, with
+//!   four named presets (`steady`, `churn`, `spike`, `failover`).
+//! - [`engine`] replays one timeline against one virtualization backend:
+//!   per-tenant Poisson request streams
+//!   ([`crate::coordinator::workload::RequestGenerator`]) drive
+//!   prefill/decode-phased LLM traffic through the full `cudalite`
+//!   driver path, and the run reduces to **windowed time series**
+//!   (latency p50/p99, throughput, per-tenant SM/memory occupancy,
+//!   fragmentation ratio, fault recovery time) plus per-scenario summary
+//!   statistics.
+//! - [`run_dynamics`] expands a [`DynSpec`] — systems × scenarios on one
+//!   (duration, window) geometry — into one flat task list sharded
+//!   through the parallel executor
+//!   ([`crate::coordinator::executor::execute_indexed_with`]).
+//!
+//! **Determinism:** each (system, scenario) task derives its seed as
+//! `task_seed(dynamics_seed(run_seed, scenario, duration_ms, window_ms),
+//! system, scenario)` ([`crate::util::rng::dynamics_seed`]) — a pure
+//! function of the task coordinates — so a dynamics grid is
+//! bit-identical at any `--jobs` count (`rust/tests/
+//! dynamics_determinism.rs`) and the regression engine can re-run a
+//! summary baseline exactly ([`crate::regress`], `dynamics` schema).
+//! Reporting lives in [`crate::report::dynamics`]; the operator guide in
+//! `docs/dynamics.md`.
+
+pub mod engine;
+pub mod scenario;
+
+pub use engine::{Recovery, ScenarioRun, SeriesPoint};
+pub use scenario::{ScenarioSpec, PRESETS};
+
+use crate::coordinator::executor::{self, ExecutionStats, Task};
+use crate::metrics::RunConfig;
+use crate::util::rng::{dynamics_seed, task_seed};
+
+/// Default timeline horizon, ms.
+pub const DEFAULT_DURATION_MS: u64 = 1000;
+/// Default reporting window, ms.
+pub const DEFAULT_WINDOW_MS: u64 = 100;
+
+/// A dynamics grid: which systems replay which scenario timelines, on
+/// one (duration, window) reporting geometry.
+#[derive(Clone, Debug)]
+pub struct DynSpec {
+    /// Backend keys (`native` / `hami` / `fcsp` / `mig` / `timeslice`).
+    pub systems: Vec<String>,
+    /// Canonical scenario preset keys (see [`scenario::PRESETS`]).
+    pub scenarios: Vec<&'static str>,
+    pub duration_ms: u64,
+    pub window_ms: u64,
+}
+
+impl DynSpec {
+    /// Derived per-task seed for one (system, scenario) run of this grid.
+    pub fn run_seed(&self, base_seed: u64, system: &str, scenario: &str) -> u64 {
+        task_seed(
+            dynamics_seed(base_seed, scenario, self.duration_ms, self.window_ms),
+            system,
+            scenario,
+        )
+    }
+}
+
+/// A completed dynamics grid: every (system, scenario) timeline plus the
+/// executor's timings.
+pub struct DynSurface {
+    /// The run seed the per-task dynamics seeds were derived from.
+    pub seed: u64,
+    pub duration_ms: u64,
+    pub window_ms: u64,
+    /// Runs in deterministic order: spec's system order (outer) ×
+    /// scenario order (inner).
+    pub runs: Vec<ScenarioRun>,
+    pub stats: ExecutionStats,
+}
+
+/// Expand `spec` into one (system × scenario) task list, execute it on
+/// `jobs` executor workers (0 = available parallelism), and collect the
+/// timelines. `base` supplies the run seed and the backend-independent
+/// config; system, scenario and per-task seeds are derived per task.
+pub fn run_dynamics(base: &RunConfig, spec: &DynSpec, jobs: usize) -> DynSurface {
+    let mut tasks: Vec<Task> = Vec::with_capacity(spec.systems.len() * spec.scenarios.len());
+    let mut cfgs: Vec<RunConfig> = Vec::with_capacity(tasks.capacity());
+    for system in &spec.systems {
+        for &sc in &spec.scenarios {
+            let mut cfg = base.clone();
+            cfg.system = system.clone();
+            cfg.seed = spec.run_seed(base.seed, system, sc);
+            tasks.push(Task { system: system.clone(), metric_id: sc });
+            cfgs.push(cfg);
+        }
+    }
+    let (slots, stats) = executor::execute_indexed_with(&tasks, jobs, |i, task| {
+        let sc = ScenarioSpec::preset(task.metric_id, spec.duration_ms, spec.window_ms)?;
+        Some(engine::run_scenario(&cfgs[i], &sc))
+    });
+    let runs: Vec<ScenarioRun> = slots
+        .into_iter()
+        .zip(&tasks)
+        .map(|(slot, task)| {
+            slot.unwrap_or_else(|| {
+                panic!("dynamics scenario `{}` is not a known preset", task.metric_id)
+            })
+        })
+        .collect();
+    DynSurface {
+        seed: base.seed,
+        duration_ms: spec.duration_ms,
+        window_ms: spec.window_ms,
+        runs,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> DynSpec {
+        DynSpec {
+            systems: vec!["native".into(), "hami".into()],
+            scenarios: vec!["steady", "failover"],
+            duration_ms: 250,
+            window_ms: 50,
+        }
+    }
+
+    #[test]
+    fn grid_expands_system_major() {
+        let base = RunConfig::quick("native");
+        let surface = run_dynamics(&base, &small_spec(), 2);
+        assert_eq!(surface.runs.len(), 4);
+        assert_eq!(surface.stats.tasks.len(), 4);
+        let coords: Vec<(&str, &str)> =
+            surface.runs.iter().map(|r| (r.system.as_str(), r.scenario)).collect();
+        assert_eq!(
+            coords,
+            vec![
+                ("native", "steady"),
+                ("native", "failover"),
+                ("hami", "steady"),
+                ("hami", "failover"),
+            ]
+        );
+        for r in &surface.runs {
+            assert_eq!(r.windows, 5);
+            assert!(r.completed > 0, "{}/{} completed nothing", r.system, r.scenario);
+        }
+    }
+
+    #[test]
+    fn per_task_seeds_are_distinct_and_pure() {
+        let spec = small_spec();
+        let a = spec.run_seed(42, "hami", "steady");
+        assert_eq!(a, spec.run_seed(42, "hami", "steady"));
+        assert_ne!(a, spec.run_seed(42, "hami", "failover"));
+        assert_ne!(a, spec.run_seed(42, "native", "steady"));
+        assert_ne!(a, spec.run_seed(43, "hami", "steady"));
+        let mut wider = spec.clone();
+        wider.duration_ms += 250;
+        assert_ne!(a, wider.run_seed(42, "hami", "steady"));
+    }
+
+    #[test]
+    fn job_counts_agree_bitwise() {
+        let base = RunConfig::quick("native");
+        let s1 = run_dynamics(&base, &small_spec(), 1);
+        let s4 = run_dynamics(&base, &small_spec(), 4);
+        assert_eq!(s1.stats.jobs, 1);
+        assert_eq!(s4.stats.jobs, 4);
+        for (a, b) in s1.runs.iter().zip(&s4.runs) {
+            assert_eq!(a.system, b.system);
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.series.len(), b.series.len());
+            for (x, y) in a.series.iter().zip(&b.series) {
+                assert_eq!(x.value.to_bits(), y.value.to_bits(), "{}/{}", a.system, x.id);
+            }
+        }
+    }
+}

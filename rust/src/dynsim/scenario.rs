@@ -1,0 +1,215 @@
+//! Scenario declarations for the virtual-time dynamic-scenario engine.
+//!
+//! A [`ScenarioSpec`] is a *timeline*: a list of [`TenantEvent`]s placed
+//! on a `duration_ms` horizon, reduced into `window_ms` reporting
+//! windows by the engine. Events model the tenant dynamics MISO
+//! (arXiv 2207.11428) and fragmentation-aware scheduling work
+//! (arXiv 2511.18906) identify as the dominant regime of multi-tenant
+//! GPU behaviour: arrivals, departures, load bursts and injected faults.
+//!
+//! Four named presets cover the deployment-critical shapes; events are
+//! placed at fixed *fractions* of the horizon so the same preset scales
+//! to any `--duration-ms` without re-tuning.
+
+use crate::simgpu::TenantId;
+
+/// The named scenario presets, in CLI/reporting order.
+pub const PRESETS: [&str; 4] = ["steady", "churn", "spike", "failover"];
+
+/// Resolve a user-supplied scenario name to its canonical `'static` key
+/// (`None` for unknown names). The executor's task labels and the seed
+/// derivation both use the canonical key.
+pub fn canonical(name: &str) -> Option<&'static str> {
+    PRESETS.iter().copied().find(|p| *p == name)
+}
+
+/// What happens to a tenant at one point of the timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// The tenant's container starts: context creation, quota
+    /// registration, and an open-loop Poisson request stream at
+    /// `rate_hz`.
+    Arrive {
+        rate_hz: f64,
+        /// Per-tenant quota in percent of the whole device (memory and
+        /// SM alike, mirroring the sweep's quota axis).
+        quota_pct: u32,
+    },
+    /// The tenant's container stops: context destruction releases every
+    /// allocation it holds (carving holes into the heap).
+    Depart,
+    /// The tenant's request rate is multiplied by `factor` until
+    /// `until_ms` on the scenario timeline.
+    Burst { factor: f64, until_ms: u64 },
+    /// A GPU fault is injected and attributed to the tenant; the engine
+    /// recovers it (context destroy + recreate) at the first failing call
+    /// and records the recovery time.
+    Fail,
+}
+
+/// One scheduled event of a scenario timeline.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantEvent {
+    /// Offset from scenario start, ms.
+    pub at_ms: u64,
+    pub tenant: TenantId,
+    pub kind: EventKind,
+}
+
+/// A declared dynamic scenario: named timeline + reporting geometry.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Canonical preset key (`steady` / `churn` / `spike` / `failover`).
+    pub name: &'static str,
+    /// Timeline horizon, ms.
+    pub duration_ms: u64,
+    /// Reporting window length, ms.
+    pub window_ms: u64,
+    /// Events in timeline order (ties broken by tenant id).
+    pub events: Vec<TenantEvent>,
+}
+
+impl ScenarioSpec {
+    /// Build a named preset on a `duration_ms` horizon with `window_ms`
+    /// reporting windows. Returns `None` for unknown names.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use gvb::dynsim::scenario::ScenarioSpec;
+    ///
+    /// let sc = ScenarioSpec::preset("failover", 1000, 100).unwrap();
+    /// assert_eq!(sc.name, "failover");
+    /// assert_eq!(sc.windows(), 10);
+    /// // The fault lands at 40% of the horizon.
+    /// assert!(sc.events.iter().any(|e| e.at_ms == 400));
+    /// assert!(ScenarioSpec::preset("meltdown", 1000, 100).is_none());
+    /// ```
+    pub fn preset(name: &str, duration_ms: u64, window_ms: u64) -> Option<ScenarioSpec> {
+        let name = canonical(name)?;
+        let at = |pct: u64| duration_ms * pct / 100;
+        let arrive = |at_ms: u64, tenant: TenantId, rate_hz: f64, quota_pct: u32| TenantEvent {
+            at_ms,
+            tenant,
+            kind: EventKind::Arrive { rate_hz, quota_pct },
+        };
+        let events = match name {
+            // Fixed population at the paper's default equal-share-of-four
+            // operating point: the control every dynamic shape is read
+            // against.
+            "steady" => vec![
+                arrive(0, 1, 40.0, 25),
+                arrive(0, 2, 40.0, 25),
+                arrive(0, 3, 40.0, 25),
+                arrive(0, 4, 40.0, 25),
+            ],
+            // MISO-style arrival/departure churn: population 2 → 4 → 3 →
+            // 4 → 3 over the horizon, so fragmentation and scheduling
+            // state evolve instead of reaching steady state.
+            "churn" => vec![
+                arrive(0, 1, 40.0, 25),
+                arrive(0, 2, 40.0, 25),
+                arrive(at(25), 3, 40.0, 25),
+                arrive(at(40), 4, 40.0, 25),
+                TenantEvent { at_ms: at(60), tenant: 2, kind: EventKind::Depart },
+                arrive(at(70), 5, 40.0, 25),
+                TenantEvent { at_ms: at(85), tenant: 3, kind: EventKind::Depart },
+            ],
+            // One tenant turns noisy: a 4x rate burst through the middle
+            // of the horizon, then back off — the transient-overload shape
+            // QoS consistency is about.
+            "spike" => vec![
+                arrive(0, 1, 30.0, 30),
+                arrive(0, 2, 30.0, 30),
+                arrive(0, 3, 30.0, 30),
+                TenantEvent {
+                    at_ms: at(40),
+                    tenant: 2,
+                    kind: EventKind::Burst { factor: 4.0, until_ms: at(70) },
+                },
+            ],
+            // A mid-run fault on the busiest tenant; the engine recovers
+            // it and the time series shows the outage + recovery window.
+            // The fault lands at 40% and the faulted tenant runs hot
+            // (60 Hz) so recovery completes well inside any reasonable
+            // horizon.
+            "failover" => vec![
+                arrive(0, 1, 40.0, 30),
+                arrive(0, 2, 60.0, 30),
+                arrive(0, 3, 40.0, 30),
+                TenantEvent { at_ms: at(40), tenant: 2, kind: EventKind::Fail },
+            ],
+            _ => unreachable!("canonical() returned an unknown preset"),
+        };
+        Some(ScenarioSpec { name, duration_ms, window_ms, events })
+    }
+
+    /// Number of reporting windows (the last window is truncated when
+    /// `window_ms` does not divide `duration_ms`; see
+    /// [`crate::dynsim::ScenarioRun::window_end_ms`] for window ends).
+    pub fn windows(&self) -> usize {
+        if self.window_ms == 0 {
+            return 0;
+        }
+        (self.duration_ms.div_ceil(self.window_ms)) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_unknowns_do_not() {
+        for p in PRESETS {
+            let sc = ScenarioSpec::preset(p, 1000, 100).unwrap();
+            assert_eq!(sc.name, p);
+            assert!(!sc.events.is_empty());
+            assert!(sc.events.iter().all(|e| e.at_ms < 1000));
+        }
+        assert!(ScenarioSpec::preset("bogus", 1000, 100).is_none());
+        assert_eq!(canonical("churn"), Some("churn"));
+        assert_eq!(canonical("Churn"), None);
+    }
+
+    #[test]
+    fn window_geometry() {
+        let sc = ScenarioSpec::preset("steady", 1000, 100).unwrap();
+        assert_eq!(sc.windows(), 10);
+        // Non-dividing horizon: the last window is truncated.
+        let sc = ScenarioSpec::preset("steady", 250, 100).unwrap();
+        assert_eq!(sc.windows(), 3);
+    }
+
+    #[test]
+    fn events_scale_with_the_horizon() {
+        let short = ScenarioSpec::preset("failover", 400, 50).unwrap();
+        let long = ScenarioSpec::preset("failover", 4000, 500).unwrap();
+        let fail_at = |sc: &ScenarioSpec| {
+            sc.events
+                .iter()
+                .find(|e| e.kind == EventKind::Fail)
+                .map(|e| e.at_ms)
+                .unwrap()
+        };
+        assert_eq!(fail_at(&short), 160);
+        assert_eq!(fail_at(&long), 1600);
+    }
+
+    #[test]
+    fn churn_population_peaks_at_four() {
+        let sc = ScenarioSpec::preset("churn", 1000, 100).unwrap();
+        let mut pop = 0i32;
+        let mut max_pop = 0i32;
+        for e in &sc.events {
+            match e.kind {
+                EventKind::Arrive { .. } => pop += 1,
+                EventKind::Depart => pop -= 1,
+                _ => {}
+            }
+            max_pop = max_pop.max(pop);
+        }
+        assert_eq!(max_pop, 4);
+        assert_eq!(pop, 3); // final population
+    }
+}

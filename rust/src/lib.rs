@@ -31,6 +31,12 @@
 //!   **scenario-matrix sweep subsystem** ([`coordinator::sweep`]) that
 //!   expands (systems × tenant counts × quota levels × metrics) grids into
 //!   flat executor task lists.
+//! - [`dynsim`] — the **virtual-time dynamic-scenario engine**
+//!   (`gvbench dynamics`): tenant arrive/depart/burst/fail timelines
+//!   replayed against the virtualized driver path with per-tenant
+//!   LLM-serving request streams, reduced to windowed time series
+//!   (latency tails, throughput, occupancy, fragmentation, fault
+//!   recovery) and regress-gateable per-scenario summaries.
 //! - [`runtime`] — PJRT wrapper that loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and executes them from the Rust request path (used by the
 //!   LLM metric category and the examples).
@@ -95,9 +101,23 @@
 //! `rust/tests/regress_engine.rs` proves the sweep→CSV→regress
 //! round-trip clean at any job count for all three baseline schemas.
 //!
+//! ## Dynamic scenarios
+//!
+//! `gvbench dynamics` leaves the static-point regime entirely:
+//! [`dynsim`] replays declared tenant timelines (named presets `steady`,
+//! `churn`, `spike`, `failover`) against each system, sharding the
+//! (system × scenario) grid through
+//! [`coordinator::executor::execute_indexed_with`] with per-task seeds
+//! `task_seed(dynamics_seed(run_seed, scenario, duration, window),
+//! system, scenario)`, and emits windowed time series plus per-scenario
+//! summary statistics. The summary CSV (`--summary-out`) is a third
+//! [`regress`] baseline schema (`dynamics`), gated by CI's blocking
+//! **dynamics-smoke** job. `rust/tests/dynamics_determinism.rs` proves
+//! the surface bit-identical at any job count.
+//!
 //! Operator-facing guides live under `docs/` (`architecture.md`,
-//! `sweeps.md`, `regression-gating.md`), with the quickstart in the
-//! top-level `README.md`.
+//! `sweeps.md`, `regression-gating.md`, `dynamics.md`), with the
+//! quickstart in the top-level `README.md`.
 
 pub mod anyhow;
 pub mod benchkit;
@@ -105,6 +125,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod cudalite;
+pub mod dynsim;
 pub mod metrics;
 pub mod regress;
 pub mod report;

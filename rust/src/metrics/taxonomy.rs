@@ -154,9 +154,43 @@ pub fn mig_baseline(id: &str) -> f64 {
     }
 }
 
+/// Windowed time-series ids emitted by the `dynsim` dynamic-scenario
+/// engine (one value per scenario window; see `docs/dynamics.md`). These
+/// are *series*, not Table-8 metrics: they never enter the 56-metric
+/// runnable registry or the scoring pipeline, so [`ALL`] stays exactly
+/// the paper's taxonomy.
+pub const DYN_SERIES: [Descriptor; 6] = [
+    Descriptor { id: "DYN-LAT-P50", name: "Windowed Latency P50", description: "Median request latency within the window", unit: "ms", category: C::Llm, direction: D::LowerBetter },
+    Descriptor { id: "DYN-LAT-P99", name: "Windowed Latency P99", description: "Tail request latency within the window", unit: "ms", category: C::Llm, direction: D::LowerBetter },
+    Descriptor { id: "DYN-THR", name: "Windowed Throughput", description: "Completed requests per second within the window", unit: "req/s", category: C::Llm, direction: D::HigherBetter },
+    Descriptor { id: "DYN-SM", name: "Windowed SM Occupancy", description: "Kernel-busy fraction of the window (per tenant or aggregate)", unit: "0-1", category: C::Scheduling, direction: D::HigherBetter },
+    Descriptor { id: "DYN-MEM", name: "Windowed Memory Occupancy", description: "Device memory held at window end (per tenant or aggregate)", unit: "0-1", category: C::Fragmentation, direction: D::HigherBetter },
+    Descriptor { id: "DYN-FRAG", name: "Windowed Fragmentation Ratio", description: "Allocator fragmentation index at window end", unit: "%", category: C::Fragmentation, direction: D::LowerBetter },
+];
+
+/// Per-scenario summary statistics the dynsim engine reduces each
+/// timeline to — the regress-compatible surface (`gvbench dynamics
+/// --summary-out`) the regression engine gates like sweep cells.
+pub const DYN_SUMMARY: [Descriptor; 4] = [
+    Descriptor { id: "DYN-P99-STEADY", name: "Steady-State P99 Latency", description: "Median across windows of the per-window P99 latency", unit: "ms", category: C::Llm, direction: D::LowerBetter },
+    Descriptor { id: "DYN-WORST-WIN", name: "Worst-Window Degradation", description: "Worst window P99 vs the steady-state P99", unit: "%", category: C::Scheduling, direction: D::LowerBetter },
+    Descriptor { id: "DYN-THR-MEAN", name: "Mean Throughput", description: "Completed requests per second over the whole timeline", unit: "req/s", category: C::Llm, direction: D::HigherBetter },
+    Descriptor { id: "DYN-RECOVERY", name: "Fault Recovery Time", description: "Injected fault to first successful request of the faulted tenant (0 = no fault; the full horizon = never recovered)", unit: "ms", category: C::ErrorRecovery, direction: D::LowerBetter },
+];
+
 /// Look up a descriptor by id.
 pub fn by_id(id: &str) -> Option<&'static Descriptor> {
     ALL.iter().find(|d| d.id == id)
+}
+
+/// Look up a dynsim windowed-series descriptor by id.
+pub fn dyn_series_by_id(id: &str) -> Option<&'static Descriptor> {
+    DYN_SERIES.iter().find(|d| d.id == id)
+}
+
+/// Look up a dynsim per-scenario summary descriptor by id.
+pub fn dyn_summary_by_id(id: &str) -> Option<&'static Descriptor> {
+    DYN_SUMMARY.iter().find(|d| d.id == id)
 }
 
 /// All descriptors of a category, in Table 8 order.
@@ -205,6 +239,28 @@ mod tests {
                 assert!(b > 0.0 || d.id == "LLM-005", "{} baseline={b}", d.id);
             }
         }
+    }
+
+    #[test]
+    fn dyn_series_ids_distinct_from_table8() {
+        // DYN ids are a separate namespace: unique among themselves and
+        // never resolvable through the Table-8 lookup (so point/sweep
+        // regress baselines keep rejecting them).
+        let mut ids: HashSet<&str> = HashSet::new();
+        for d in DYN_SERIES.iter().chain(&DYN_SUMMARY) {
+            assert!(d.id.starts_with("DYN-"), "{}", d.id);
+            assert!(by_id(d.id).is_none(), "{} leaked into Table 8", d.id);
+        }
+        // Ids are unique within each table (DYN-RECOVERY lives in the
+        // summary table only; the engine reuses it as a windowed marker).
+        ids.extend(DYN_SERIES.iter().map(|d| d.id));
+        assert_eq!(ids.len(), DYN_SERIES.len());
+        let sids: HashSet<&str> = DYN_SUMMARY.iter().map(|d| d.id).collect();
+        assert_eq!(sids.len(), DYN_SUMMARY.len());
+        assert_eq!(dyn_summary_by_id("DYN-RECOVERY").unwrap().unit, "ms");
+        assert_eq!(dyn_series_by_id("DYN-LAT-P99").unwrap().category, Category::Llm);
+        assert!(dyn_series_by_id("OH-001").is_none());
+        assert!(dyn_summary_by_id("DYN-LAT-P99").is_none());
     }
 
     #[test]

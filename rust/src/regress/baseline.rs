@@ -13,10 +13,17 @@
 //!   scenario-layer seed derivation their producing sweep used
 //!   ([`crate::coordinator::sweep::legacy_cell_cfg`]).
 //!
+//! A third schema, **dynamics**, is the per-scenario summary surface
+//! `gvbench dynamics --summary-out` writes: rows keyed by
+//! `(system, scenario, duration_ms, window_ms, id)` with ids from
+//! [`crate::metrics::taxonomy::DYN_SUMMARY`], re-run by replaying the
+//! whole scenario timeline (see `crate::regress::engine`).
+//!
 //! The schema is auto-detected from the header; generations must not be
-//! mixed — a header carrying only one of `tenants`/`quota_pct`, or only
-//! one of `gpu_count`/`link`, is rejected, as is any data row that does
-//! not fit the detected schema. Every rejection names the offending row.
+//! mixed — a header carrying only one of `tenants`/`quota_pct`, only
+//! one of `gpu_count`/`link`, or `scenario` together with sweep columns,
+//! is rejected, as is any data row that does not fit the detected
+//! schema. Every rejection names the offending row.
 
 use std::collections::BTreeSet;
 
@@ -33,6 +40,12 @@ pub enum BaselineSchema {
     /// Long-format sweep surface (`gvbench sweep --format csv`); rows
     /// carry a full (tenants, quota[, gpu_count, link]) cell coordinate.
     Sweep,
+    /// Dynamic-scenario summary surface (`gvbench dynamics
+    /// --summary-out`); rows carry a `(scenario, duration_ms, window_ms)`
+    /// coordinate and a [`crate::metrics::taxonomy::DYN_SUMMARY`] id, and
+    /// re-run by replaying the whole scenario timeline through
+    /// [`crate::dynsim`] with the producing run's exact seed derivation.
+    Dynamics,
 }
 
 impl BaselineSchema {
@@ -40,8 +53,23 @@ impl BaselineSchema {
         match self {
             BaselineSchema::Point => "point",
             BaselineSchema::Sweep => "sweep",
+            BaselineSchema::Dynamics => "dynamics",
         }
     }
+}
+
+/// Dynamics-cell coordinate of one summary baseline row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct DynCoord {
+    /// Canonical scenario preset key.
+    pub scenario: &'static str,
+    pub duration_ms: u64,
+    pub window_ms: u64,
+}
+
+/// Render a dynamics coordinate as `churn@1000ms/100ms`.
+pub fn dyn_label(d: DynCoord) -> String {
+    format!("{}@{}ms/{}ms", d.scenario, d.duration_ms, d.window_ms)
 }
 
 /// Full sweep-cell coordinate of one baseline row.
@@ -63,6 +91,8 @@ pub struct BaselineRow {
     /// Sweep cell coordinate; `None` for point rows, which re-run at the
     /// invocation's configured operating point.
     pub cell: Option<CellCoord>,
+    /// Dynamics cell coordinate; `Some` exactly for dynamics-schema rows.
+    pub dyn_cell: Option<DynCoord>,
     pub id: String,
     pub value: f64,
     /// 1-based CSV line number, for error messages.
@@ -72,7 +102,10 @@ pub struct BaselineRow {
 impl BaselineRow {
     /// Short human label for the row's cell coordinate.
     pub fn cell_label(&self) -> String {
-        cell_label(self.cell)
+        match self.dyn_cell {
+            Some(d) => dyn_label(d),
+            None => cell_label(self.cell),
+        }
     }
 }
 
@@ -146,12 +179,35 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
     let gpus_col = col("gpu_count");
     let link_col = col("link");
     let feasible_col = col("feasible");
-    let schema = match (tenants_col, quota_col) {
-        (Some(_), Some(_)) => BaselineSchema::Sweep,
-        (None, None) => BaselineSchema::Point,
-        _ => bail!(
-            "mixed-schema baseline header: `tenants` and `quota_pct` must appear together"
-        ),
+    let scenario_col = col("scenario");
+    let duration_col = col("duration_ms");
+    let window_col = col("window_ms");
+    let schema = if scenario_col.is_some() {
+        if tenants_col.is_some() || quota_col.is_some() || gpus_col.is_some() || link_col.is_some()
+        {
+            bail!(
+                "mixed-schema baseline header: `scenario` cannot be combined with sweep \
+                 columns (`tenants`/`quota_pct`/`gpu_count`/`link`)"
+            );
+        }
+        if duration_col.is_none() || window_col.is_none() {
+            bail!(
+                "dynamics-schema baseline requires `duration_ms` and `window_ms` columns \
+                 alongside `scenario`"
+            );
+        }
+        if system_col.is_none() {
+            bail!("dynamics-schema baseline requires a `system` column");
+        }
+        BaselineSchema::Dynamics
+    } else {
+        match (tenants_col, quota_col) {
+            (Some(_), Some(_)) => BaselineSchema::Sweep,
+            (None, None) => BaselineSchema::Point,
+            _ => bail!(
+                "mixed-schema baseline header: `tenants` and `quota_pct` must appear together"
+            ),
+        }
     };
     if gpus_col.is_some() != link_col.is_some() {
         bail!("mixed-schema baseline header: `gpu_count` and `link` must appear together");
@@ -173,7 +229,8 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
 
     let mut rows: Vec<BaselineRow> = Vec::new();
     let mut infeasible: Vec<(String, CellCoord)> = Vec::new();
-    let mut seen: BTreeSet<(String, Option<CellCoord>, String)> = BTreeSet::new();
+    let mut seen: BTreeSet<(String, Option<CellCoord>, Option<DynCoord>, String)> =
+        BTreeSet::new();
     for (i, line) in lines.enumerate() {
         let lineno = i + 2;
         if line.trim().is_empty() {
@@ -189,8 +246,37 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
                 "row {lineno}: unknown system `{system}` (expected: native, hami, fcsp, mig, timeslice)"
             );
         }
+        let dyn_cell = match schema {
+            BaselineSchema::Dynamics => {
+                let name = get_field(&fields, scenario_col.expect("dynamics schema"), lineno, "scenario")?;
+                let scenario = crate::dynsim::scenario::canonical(name).with_context(|| {
+                    format!(
+                        "row {lineno}: unknown scenario `{name}` (expected: steady, churn, \
+                         spike, failover)"
+                    )
+                })?;
+                let duration_ms: u64 =
+                    get_field(&fields, duration_col.expect("dynamics schema"), lineno, "duration_ms")?
+                        .parse()
+                        .with_context(|| format!("row {lineno}: bad duration_ms value"))?;
+                let window_ms: u64 =
+                    get_field(&fields, window_col.expect("dynamics schema"), lineno, "window_ms")?
+                        .parse()
+                        .with_context(|| format!("row {lineno}: bad window_ms value"))?;
+                if !(1..=3_600_000).contains(&duration_ms) {
+                    bail!("row {lineno}: duration_ms value {duration_ms} out of range (1..=3600000)");
+                }
+                if window_ms == 0 || window_ms > duration_ms {
+                    bail!(
+                        "row {lineno}: window_ms value {window_ms} out of range (1..=duration_ms)"
+                    );
+                }
+                Some(DynCoord { scenario, duration_ms, window_ms })
+            }
+            _ => None,
+        };
         let cell = match schema {
-            BaselineSchema::Point => None,
+            BaselineSchema::Point | BaselineSchema::Dynamics => None,
             BaselineSchema::Sweep => {
                 let tenants: u32 = get_field(&fields, tenants_col.expect("sweep schema"), lineno, "tenants")?
                     .parse()
@@ -242,7 +328,12 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
             }
         }
         let id = get_field(&fields, id_col, lineno, "id")?.clone();
-        if taxonomy::by_id(&id).is_none() {
+        if schema == BaselineSchema::Dynamics {
+            // Dynamics summaries live in their own id namespace.
+            if taxonomy::dyn_summary_by_id(&id).is_none() {
+                bail!("row {lineno}: unknown dynamics summary id `{id}` (system `{system}`)");
+            }
+        } else if taxonomy::by_id(&id).is_none() {
             bail!("row {lineno}: unknown metric id `{id}` (system `{system}`)");
         }
         let value: f64 = get_field(&fields, value_col, lineno, "value")?
@@ -251,13 +342,14 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
         if !value.is_finite() {
             bail!("row {lineno}: non-finite value for {system}/{id} in a feasible row");
         }
-        if !seen.insert((system.clone(), cell, id.clone())) {
-            bail!(
-                "row {lineno}: duplicate baseline entry for {system}/{}/{id}",
-                cell_label(cell)
-            );
+        if !seen.insert((system.clone(), cell, dyn_cell, id.clone())) {
+            let label = match dyn_cell {
+                Some(d) => dyn_label(d),
+                None => cell_label(cell),
+            };
+            bail!("row {lineno}: duplicate baseline entry for {system}/{label}/{id}");
         }
-        rows.push(BaselineRow { system, cell, id, value, line: lineno });
+        rows.push(BaselineRow { system, cell, dyn_cell, id, value, line: lineno });
     }
     if rows.is_empty() && infeasible.is_empty() {
         bail!("baseline contains no metrics");
@@ -371,6 +463,74 @@ mod tests {
         assert_eq!(b.rows[1].cell, Some(cct(4, 25, 8, LinkKind::NvLink)));
         assert_eq!(b.rows[1].cell_label(), "4t@25%/8g/nvlink");
         assert_eq!(b.infeasible, vec![("mig".to_string(), cct(8, 25, 8, LinkKind::NvLink))]);
+    }
+
+    #[test]
+    fn parses_dynamics_summary_baseline() {
+        let csv = "system,scenario,duration_ms,window_ms,id,value\n\
+                   hami,churn,1000,100,DYN-P99-STEADY,2.125000\n\
+                   hami,churn,1000,100,DYN-RECOVERY,0.000000\n\
+                   native,failover,1000,100,DYN-RECOVERY,18.500000\n";
+        let b = parse_baseline_csv(csv, "native").unwrap();
+        assert_eq!(b.schema, BaselineSchema::Dynamics);
+        assert_eq!(b.rows.len(), 3);
+        assert!(b.infeasible.is_empty());
+        let d = b.rows[0].dyn_cell.unwrap();
+        assert_eq!(d.scenario, "churn");
+        assert_eq!((d.duration_ms, d.window_ms), (1000, 100));
+        assert_eq!(b.rows[0].cell, None);
+        assert_eq!(b.rows[0].cell_label(), "churn@1000ms/100ms");
+        assert_eq!(b.rows[2].system, "native");
+        assert_eq!(b.rows[2].value, 18.5);
+    }
+
+    #[test]
+    fn rejects_malformed_dynamics_rows_naming_the_row() {
+        let hdr = "system,scenario,duration_ms,window_ms,id,value\n";
+        // Unknown scenario.
+        let e = parse_baseline_csv(&format!("{hdr}hami,meltdown,1000,100,DYN-RECOVERY,1\n"), "hami")
+            .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("row 2") && msg.contains("meltdown"), "{msg}");
+        // Table-8 ids are not dynamics summaries.
+        let e = parse_baseline_csv(&format!("{hdr}hami,churn,1000,100,OH-001,1\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("unknown dynamics summary id"), "{e:#}");
+        // Window must divide into the horizon's range.
+        let e = parse_baseline_csv(&format!("{hdr}hami,churn,1000,2000,DYN-RECOVERY,1\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("window_ms"), "{e:#}");
+        let e = parse_baseline_csv(&format!("{hdr}hami,churn,0,0,DYN-RECOVERY,1\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("duration_ms"), "{e:#}");
+        // Duplicate full coordinate.
+        let two = format!(
+            "{hdr}hami,churn,1000,100,DYN-RECOVERY,1\nhami,churn,1000,100,DYN-RECOVERY,2\n"
+        );
+        let e = parse_baseline_csv(&two, "hami").unwrap_err();
+        assert!(format!("{e:#}").contains("churn@1000ms/100ms"), "{e:#}");
+        // Same id on a *different* geometry is not a duplicate.
+        let ok = format!(
+            "{hdr}hami,churn,1000,100,DYN-RECOVERY,1\nhami,churn,1000,50,DYN-RECOVERY,2\n"
+        );
+        assert_eq!(parse_baseline_csv(&ok, "hami").unwrap().rows.len(), 2);
+        // Dynamics columns cannot mix with sweep columns, and the schema
+        // requires system/duration/window.
+        let e = parse_baseline_csv(
+            "system,scenario,tenants,quota_pct,feasible,id,value\nhami,churn,2,50,true,DYN-RECOVERY,1\n",
+            "hami",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("mixed-schema"), "{e:#}");
+        let e = parse_baseline_csv("system,scenario,id,value\nhami,churn,DYN-RECOVERY,1\n", "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("duration_ms"), "{e:#}");
+        let e = parse_baseline_csv(
+            "scenario,duration_ms,window_ms,id,value\nchurn,1000,100,DYN-RECOVERY,1\n",
+            "hami",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("`system` column"), "{e:#}");
     }
 
     #[test]

@@ -20,9 +20,11 @@
 use crate::anyhow::{bail, Result};
 use crate::coordinator::executor::{self, ExecutionStats, Task};
 use crate::coordinator::sweep;
+use crate::dynsim::{self, ScenarioSpec};
 use crate::metrics::{taxonomy, Direction, RunConfig};
+use crate::util::rng::{dynamics_seed, task_seed};
 
-use super::baseline::{cell_label, Baseline, BaselineSchema, CellCoord};
+use super::baseline::{cell_label, dyn_label, Baseline, BaselineSchema, CellCoord, DynCoord};
 
 /// Percent by which `cur` is worse than `base` in the metric's own
 /// direction (positive = regressed; 0 = unchanged or improved).
@@ -70,6 +72,8 @@ pub struct CellDelta {
     pub system: String,
     /// Sweep cell coordinate; `None` for point rows.
     pub cell: Option<CellCoord>,
+    /// Dynamics cell coordinate; `Some` exactly for dynamics-schema rows.
+    pub dyn_cell: Option<DynCoord>,
     pub id: String,
     pub baseline: f64,
     pub current: f64,
@@ -82,9 +86,12 @@ pub struct CellDelta {
 
 impl CellDelta {
     /// Short human label for the cell coordinate (`4t@25%` /
-    /// `4t@25%/8g/nvlink` / `point`).
+    /// `4t@25%/8g/nvlink` / `churn@1000ms/100ms` / `point`).
     pub fn cell_label(&self) -> String {
-        cell_label(self.cell)
+        match self.dyn_cell {
+            Some(d) => dyn_label(d),
+            None => cell_label(self.cell),
+        }
     }
 }
 
@@ -152,6 +159,12 @@ pub fn run_regression(
     baseline: &Baseline,
     threshold_percent: f64,
 ) -> Result<RegressOutcome> {
+    if baseline.schema == BaselineSchema::Dynamics {
+        // Dynamics summaries are not registry metrics: each distinct
+        // (system, scenario, geometry) coordinate replays its whole
+        // timeline once, then every row compares against that run.
+        return run_dynamics_regression(cfg, baseline, threshold_percent);
+    }
     let mut pairs: Vec<(Task, RunConfig)> = Vec::with_capacity(baseline.rows.len());
     for row in &baseline.rows {
         // Parse validated these; re-check so an engine caller constructing
@@ -224,6 +237,7 @@ pub fn run_regression(
         cells.push(CellDelta {
             system: row.system.clone(),
             cell: row.cell,
+            dyn_cell: None,
             id: row.id.clone(),
             baseline: row.value,
             current: result.value,
@@ -236,6 +250,110 @@ pub fn run_regression(
         seed: cfg.seed,
         schema: baseline.schema,
         skipped_infeasible: baseline.infeasible.len(),
+        cells,
+        stats,
+    })
+}
+
+/// The dynamics-schema re-run: replay each distinct baseline timeline
+/// once — sharded as (system, scenario) tasks across `cfg.jobs` executor
+/// workers, with the producing run's exact seed derivation
+/// (`task_seed(dynamics_seed(seed, scenario, duration, window), system,
+/// scenario)`, see [`crate::dynsim::DynSpec::run_seed`]) — and compare
+/// every summary row direction-aware against its recorded value.
+fn run_dynamics_regression(
+    cfg: &RunConfig,
+    baseline: &Baseline,
+    threshold_percent: f64,
+) -> Result<RegressOutcome> {
+    // Distinct (system, coordinate) timelines, first-appearance order.
+    let mut groups: Vec<(String, DynCoord)> = Vec::new();
+    for row in &baseline.rows {
+        // Parse validated these; re-check so hand-built rows error with
+        // the row named instead of panicking mid-replay.
+        if taxonomy::dyn_summary_by_id(&row.id).is_none() {
+            bail!(
+                "row {}: unknown dynamics summary id `{}` (system `{}`)",
+                row.line,
+                row.id,
+                row.system
+            );
+        }
+        if crate::virt::by_name(&row.system).is_none() {
+            bail!("row {}: unknown system `{}`", row.line, row.system);
+        }
+        let coord = match row.dyn_cell {
+            Some(c) => c,
+            None => bail!(
+                "row {}: dynamics-schema row for {}/{} has no scenario coordinate",
+                row.line,
+                row.system,
+                row.id
+            ),
+        };
+        let key = (row.system.clone(), coord);
+        if !groups.contains(&key) {
+            groups.push(key);
+        }
+    }
+    let tasks: Vec<Task> = groups
+        .iter()
+        .map(|(system, coord)| Task { system: system.clone(), metric_id: coord.scenario })
+        .collect();
+    let (slots, stats) = executor::execute_indexed_with(&tasks, cfg.jobs, |i, _task| {
+        let (system, coord) = &groups[i];
+        let spec = ScenarioSpec::preset(coord.scenario, coord.duration_ms, coord.window_ms)?;
+        let mut run_cfg = cfg.clone();
+        run_cfg.system = system.clone();
+        run_cfg.seed = task_seed(
+            dynamics_seed(cfg.seed, coord.scenario, coord.duration_ms, coord.window_ms),
+            system,
+            coord.scenario,
+        );
+        Some(dynsim::engine::run_scenario(&run_cfg, &spec))
+    });
+    let mut runs = Vec::with_capacity(groups.len());
+    for (slot, (system, coord)) in slots.into_iter().zip(&groups) {
+        match slot {
+            Some(run) => runs.push(run),
+            None => bail!("scenario `{}` on `{system}` produced no timeline on re-run", coord.scenario),
+        }
+    }
+    let mut cells: Vec<CellDelta> = Vec::with_capacity(baseline.rows.len());
+    for row in &baseline.rows {
+        let coord = row.dyn_cell.expect("validated above");
+        let idx = groups
+            .iter()
+            .position(|(s, c)| *s == row.system && *c == coord)
+            .expect("every row belongs to a group");
+        let current = match runs[idx].summary_value(&row.id) {
+            Some(v) => v,
+            None => bail!(
+                "row {}: summary `{}` missing from the re-run of {}/{}",
+                row.line,
+                row.id,
+                row.system,
+                dyn_label(coord)
+            ),
+        };
+        let d = taxonomy::dyn_summary_by_id(&row.id).expect("validated above");
+        let worse = worse_percent(d.direction, row.value, current);
+        cells.push(CellDelta {
+            system: row.system.clone(),
+            cell: None,
+            dyn_cell: Some(coord),
+            id: row.id.clone(),
+            baseline: row.value,
+            current,
+            worse_percent: worse,
+            regressed: worse > threshold_percent,
+        });
+    }
+    Ok(RegressOutcome {
+        threshold_percent,
+        seed: cfg.seed,
+        schema: BaselineSchema::Dynamics,
+        skipped_infeasible: 0,
         cells,
         stats,
     })
@@ -254,6 +372,7 @@ mod tests {
         BaselineRow {
             system: system.to_string(),
             cell: None,
+            dyn_cell: None,
             id: id.to_string(),
             value,
             line: 2,
@@ -342,10 +461,69 @@ mod tests {
     }
 
     #[test]
+    fn dynamics_baseline_round_trips_clean_and_detects_injection() {
+        use crate::dynsim::{run_dynamics, DynSpec};
+        use crate::report::dynamics::render_summary_csv;
+
+        // Produce a small dynamics summary exactly as `gvbench dynamics
+        // --summary-out` would…
+        let cfg = RunConfig::quick("native");
+        let spec = DynSpec {
+            systems: vec!["native".into()],
+            scenarios: vec!["steady"],
+            duration_ms: 200,
+            window_ms: 50,
+        };
+        let surface = run_dynamics(&cfg, &spec, 1);
+        let csv = render_summary_csv(&surface);
+        let baseline = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
+        assert_eq!(baseline.schema, BaselineSchema::Dynamics);
+        // …then the re-run (at a different job count) compares clean.
+        let mut cfg8 = cfg.clone();
+        cfg8.jobs = 8;
+        let out = run_regression(&cfg8, &baseline, 0.0001).unwrap();
+        assert_eq!(out.schema, BaselineSchema::Dynamics);
+        assert_eq!(out.checked(), 4);
+        assert!(out.passed(), "{:?}", out.regressions());
+        // An injected per-summary regression is detected and named with
+        // its full dynamics coordinate.
+        let mut rows = baseline.rows.clone();
+        let idx = rows.iter().position(|r| r.id == "DYN-THR-MEAN").unwrap();
+        rows[idx].value *= 2.0; // higher-better: halving current = regression
+        let perturbed = Baseline { schema: BaselineSchema::Dynamics, rows, infeasible: Vec::new() };
+        let out = run_regression(&cfg8, &perturbed, 5.0).unwrap();
+        let regs = out.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].id, "DYN-THR-MEAN");
+        assert_eq!(regs[0].cell_label(), "steady@200ms/50ms");
+    }
+
+    #[test]
+    fn hand_built_dynamics_rows_error_cleanly() {
+        let cfg = RunConfig::quick("native");
+        let mut r = row("hami", "DYN-RECOVERY", 1.0);
+        // Dynamics id without a scenario coordinate.
+        let b = Baseline {
+            schema: BaselineSchema::Dynamics,
+            rows: vec![r.clone()],
+            infeasible: Vec::new(),
+        };
+        let e = run_regression(&cfg, &b, 5.0).unwrap_err();
+        assert!(format!("{e:#}").contains("no scenario coordinate"), "{e:#}");
+        // Table-8 id under the dynamics schema.
+        r.id = "OH-001".into();
+        r.dyn_cell = Some(DynCoord { scenario: "steady", duration_ms: 100, window_ms: 50 });
+        let b = Baseline { schema: BaselineSchema::Dynamics, rows: vec![r], infeasible: Vec::new() };
+        let e = run_regression(&cfg, &b, 5.0).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown dynamics summary id"), "{e:#}");
+    }
+
+    #[test]
     fn worst_per_system_picks_the_largest_regression() {
         let delta = |system: &str, id: &str, worse: f64| CellDelta {
             system: system.to_string(),
             cell: Some(CellCoord { tenants: 4, quota_pct: 25, topo: None }),
+            dyn_cell: None,
             id: id.to_string(),
             baseline: 1.0,
             current: 2.0,

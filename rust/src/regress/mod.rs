@@ -23,7 +23,14 @@
 //!   `gpu_count`/`link` columns, auto-detected and re-run through
 //!   [`crate::coordinator::sweep::legacy_cell_cfg`]: the default 4-GPU
 //!   PCIe node *and* the scenario-layer seed derivation their producing
-//!   sweep hardcoded, so genuinely old surfaces stay bit-identical.
+//!   sweep hardcoded, so genuinely old surfaces stay bit-identical, and
+//! - **dynamics summaries** — the per-scenario surface `gvbench
+//!   dynamics --summary-out` writes (rows keyed by `(system, scenario,
+//!   duration_ms, window_ms, id)` with
+//!   [`crate::metrics::taxonomy::DYN_SUMMARY`] ids); each distinct
+//!   timeline replays once through [`crate::dynsim`] with the producing
+//!   run's exact `task_seed(dynamics_seed(..), system, scenario)`
+//!   derivation, then every summary row compares direction-aware.
 //!
 //! Layout:
 //!
@@ -52,6 +59,6 @@ pub mod baseline;
 pub mod engine;
 pub mod report;
 
-pub use baseline::{parse_baseline_csv, Baseline, BaselineRow, BaselineSchema, CellCoord};
+pub use baseline::{parse_baseline_csv, Baseline, BaselineRow, BaselineSchema, CellCoord, DynCoord};
 pub use engine::{run_regression, worse_percent, CellDelta, RegressOutcome};
 pub use report::{render_json, render_markdown};

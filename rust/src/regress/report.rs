@@ -29,6 +29,14 @@ fn delta_obj(c: &CellDelta) -> Obj {
             .field("gpu_count", null())
             .field("link", null()),
     };
+    // Dynamics rows carry the scenario coordinate instead of a sweep cell.
+    o = match c.dyn_cell {
+        Some(d) => o
+            .str("scenario", d.scenario)
+            .field("duration_ms", d.duration_ms.to_string())
+            .field("window_ms", d.window_ms.to_string()),
+        None => o.field("scenario", null()),
+    };
     o.str("id", &c.id)
         .num("baseline", c.baseline)
         .num("current", c.current)
@@ -38,8 +46,12 @@ fn delta_obj(c: &CellDelta) -> Obj {
 
 /// Grouping label for the per-link-kind breakdown: the cell's link kind
 /// for extended sweep rows, `default-node` for PR-3-era rows (which
-/// re-ran on the default 4-GPU PCIe node) and `point` for point rows.
+/// re-ran on the default 4-GPU PCIe node), `dynamics` for
+/// scenario-timeline rows and `point` for point rows.
 fn link_group(c: &CellDelta) -> &'static str {
+    if c.dyn_cell.is_some() {
+        return "dynamics";
+    }
     match c.cell {
         Some(coord) => match coord.topo {
             Some((_, link)) => link.key(),
@@ -220,6 +232,7 @@ mod tests {
         CellDelta {
             system: system.to_string(),
             cell: cell.map(|(tenants, quota_pct)| CellCoord { tenants, quota_pct, topo: None }),
+            dyn_cell: None,
             id: id.to_string(),
             baseline: 10.0,
             current: 10.0 * (1.0 + worse / 100.0),
@@ -298,6 +311,26 @@ mod tests {
         assert!(j[idx..].contains("\"link\": \"pcie\""), "{j}");
         assert!(j[idx..].contains("\"link\": \"default-node\""), "{j}");
         assert!(j[idx..].contains("\"worst\""), "{j}");
+    }
+
+    #[test]
+    fn dynamics_rows_carry_scenario_coordinates() {
+        use crate::regress::baseline::DynCoord;
+        let mut d = delta("hami", None, "DYN-P99-STEADY", 22.0);
+        d.dyn_cell = Some(DynCoord { scenario: "churn", duration_ms: 1000, window_ms: 100 });
+        let mut out = outcome(vec![d, delta("hami", Some((4, 25)), "OH-001", 0.0)]);
+        out.schema = BaselineSchema::Dynamics;
+        let j = render_json(&out, "dyn_summary.csv");
+        assert!(j.contains("\"schema\": \"dynamics\""), "{j}");
+        assert!(j.contains("\"scenario\": \"churn\""), "{j}");
+        assert!(j.contains("\"duration_ms\": 1000"), "{j}");
+        assert!(j.contains("\"window_ms\": 100"), "{j}");
+        assert!(j.contains("\"scenario\": null"), "{j}");
+        // The by-link breakdown groups timeline rows under `dynamics`.
+        let idx = j.find("\"by_link\"").unwrap();
+        assert!(j[idx..].contains("\"link\": \"dynamics\""), "{j}");
+        let m = render_markdown(&out, "dyn_summary.csv");
+        assert!(m.contains("| hami | churn@1000ms/100ms | DYN-P99-STEADY |"), "{m}");
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Dynamics-surface reporting: the windowed time series from
+//! [`crate::dynsim`], rendered as long-format CSV, JSON or a TXT summary
+//! of the worst windows per system, plus the **summary CSV** — the
+//! regress-compatible per-scenario surface (`gvbench dynamics
+//! --summary-out`) the regression engine gates like sweep cells.
+//!
+//! The time-series CSV is long format: one row per (system × scenario ×
+//! window × series), with per-tenant series keyed by the `tenant` column
+//! (`all` = aggregate). It carries no host timings, so identical grids
+//! render byte-identical CSV at any `--jobs` count
+//! (`rust/tests/dynamics_determinism.rs`). The JSON adds the executor
+//! timing object as metadata.
+
+use crate::dynsim::{DynSurface, ScenarioRun};
+
+use super::json::{array, num, render_execution, Obj};
+use super::Format;
+
+/// Column header of the long-format time-series CSV.
+pub const CSV_HEADER: &str = "system,scenario,duration_ms,window_ms,window,t_ms,tenant,id,value";
+
+/// Column header of the regress-compatible summary CSV (one row per
+/// system × scenario × summary statistic; the `dynamics` baseline schema
+/// of [`crate::regress`]).
+pub const SUMMARY_CSV_HEADER: &str = "system,scenario,duration_ms,window_ms,id,value";
+
+/// Render the time-series surface in the requested format.
+pub fn render(surface: &DynSurface, format: Format) -> String {
+    match format {
+        Format::Json => render_json(surface),
+        Format::Csv => render_csv(surface),
+        Format::Txt => render_txt(surface),
+    }
+}
+
+/// Long-format time-series CSV. Windows with no completed request render
+/// `NaN` latency percentiles (documented in `docs/dynamics.md`); every
+/// other value is finite.
+pub fn render_csv(surface: &DynSurface) -> String {
+    let mut out = String::from(CSV_HEADER);
+    out.push('\n');
+    for run in &surface.runs {
+        let prefix = format!(
+            "{},{},{},{}",
+            run.system, run.scenario, run.duration_ms, run.window_ms
+        );
+        for p in &run.series {
+            let tenant = match p.tenant {
+                None => "all".to_string(),
+                Some(t) => t.to_string(),
+            };
+            let t_ms = run.window_end_ms(p.window);
+            out.push_str(&format!(
+                "{prefix},{},{},{},{},{:.6}\n",
+                p.window, t_ms, tenant, p.id, p.value
+            ));
+        }
+    }
+    out
+}
+
+/// The regress-compatible summary CSV: every value finite, keyed by the
+/// full `(system, scenario, duration_ms, window_ms, id)` coordinate.
+pub fn render_summary_csv(surface: &DynSurface) -> String {
+    let mut out = String::from(SUMMARY_CSV_HEADER);
+    out.push('\n');
+    for run in &surface.runs {
+        for (id, value) in &run.summary {
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.6}\n",
+                run.system, run.scenario, run.duration_ms, run.window_ms, id, value
+            ));
+        }
+    }
+    out
+}
+
+fn run_obj(run: &ScenarioRun) -> Obj {
+    let summary: Vec<String> = run
+        .summary
+        .iter()
+        .map(|(id, v)| Obj::new().str("id", id).num("value", *v).build())
+        .collect();
+    let series: Vec<String> = run
+        .series
+        .iter()
+        .map(|p| {
+            let mut o = Obj::new().field("window", p.window.to_string());
+            o = match p.tenant {
+                None => o.str("tenant", "all"),
+                Some(t) => o.field("tenant", t.to_string()),
+            };
+            o.str("id", p.id).num("value", p.value).build()
+        })
+        .collect();
+    let tenants: Vec<String> = run.tenants.iter().map(|t| t.to_string()).collect();
+    let mut o = Obj::new()
+        .str("system", &run.system)
+        .str("scenario", run.scenario)
+        .field("duration_ms", run.duration_ms.to_string())
+        .field("window_ms", run.window_ms.to_string())
+        .field("windows", run.windows.to_string())
+        .field("tenants", array(tenants))
+        .field("completed", run.completed.to_string())
+        .field("failed", run.failed.to_string());
+    if let Some(r) = run.recovery {
+        o = o.field(
+            "recovery",
+            Obj::new()
+                .field("tenant", r.tenant.to_string())
+                .num("fault_ms", r.fault_ns as f64 / 1e6)
+                .num("recovered_ms", r.recovered_ns as f64 / 1e6)
+                .num("recovery_ms", r.recovery_ms())
+                .build(),
+        );
+    } else {
+        o = o.field("recovery", "null".to_string());
+    }
+    o.field("summary", array(summary)).field("series", array(series))
+}
+
+/// The full surface plus executor timings, in the Listing-7 JSON style.
+pub fn render_json(surface: &DynSurface) -> String {
+    let runs: Vec<String> = surface.runs.iter().map(|r| run_obj(r).build()).collect();
+    Obj::new()
+        .str("benchmark_version", crate::VERSION)
+        .field("seed", surface.seed.to_string())
+        .field("duration_ms", surface.duration_ms.to_string())
+        .field("window_ms", surface.window_ms.to_string())
+        .field("runs", array(runs))
+        .field("execution", render_execution(&surface.stats))
+        .build()
+}
+
+/// Human-readable summary: per (system, scenario) the summary statistics
+/// and the worst window.
+pub fn render_txt(surface: &DynSurface) -> String {
+    let mut out = String::new();
+    out.push_str("GPU-Virt-Bench — dynamic-scenario surface\n");
+    out.push_str(&format!(
+        "  seed {}, horizon {} ms, window {} ms, {} timeline(s)\n\n",
+        surface.seed,
+        surface.duration_ms,
+        surface.window_ms,
+        surface.runs.len()
+    ));
+    out.push_str(&format!(
+        "{:<12} {:<10} {:>9} {:>12} {:>12} {:>11} {:>10}\n",
+        "System", "Scenario", "Requests", "P99 steady", "Worst win", "Thr (req/s)", "Recovery"
+    ));
+    out.push_str(&format!("{}\n", "-".repeat(82)));
+    for run in &surface.runs {
+        let get = |id: &str| run.summary_value(id).unwrap_or(f64::NAN);
+        let recovery = get("DYN-RECOVERY");
+        out.push_str(&format!(
+            "{:<12} {:<10} {:>9} {:>9.2} ms {:>11.1}% {:>11.1} {}\n",
+            run.system,
+            run.scenario,
+            run.completed,
+            get("DYN-P99-STEADY"),
+            get("DYN-WORST-WIN"),
+            get("DYN-THR-MEAN"),
+            if recovery > 0.0 { format!("{recovery:>7.2} ms") } else { "      n/a".to_string() },
+        ));
+    }
+    out.push('\n');
+    out.push_str("Worst window per timeline (highest P99):\n");
+    for run in &surface.runs {
+        let worst = run
+            .series
+            .iter()
+            .filter(|p| p.id == "DYN-LAT-P99" && p.tenant.is_none() && p.value.is_finite())
+            .max_by(|a, b| a.value.partial_cmp(&b.value).expect("finite"));
+        match worst {
+            Some(p) => out.push_str(&format!(
+                "  {:<10} {:<10} window {:>3} (t={} ms): p99 {} ms\n",
+                run.system,
+                run.scenario,
+                p.window,
+                run.window_end_ms(p.window),
+                num(p.value)
+            )),
+            None => out.push_str(&format!(
+                "  {:<10} {:<10} (no completed requests)\n",
+                run.system, run.scenario
+            )),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::ExecutionStats;
+    use crate::dynsim::{Recovery, SeriesPoint};
+
+    fn run(system: &str, scenario: &'static str) -> ScenarioRun {
+        ScenarioRun {
+            system: system.to_string(),
+            scenario,
+            duration_ms: 200,
+            window_ms: 100,
+            windows: 2,
+            tenants: vec![1, 2],
+            series: vec![
+                SeriesPoint { window: 0, tenant: None, id: "DYN-LAT-P99", value: 2.5 },
+                SeriesPoint { window: 0, tenant: None, id: "DYN-THR", value: 120.0 },
+                SeriesPoint { window: 0, tenant: Some(1), id: "DYN-SM", value: 0.25 },
+                SeriesPoint { window: 1, tenant: None, id: "DYN-LAT-P99", value: f64::NAN },
+                SeriesPoint { window: 1, tenant: Some(2), id: "DYN-RECOVERY", value: 31.25 },
+            ],
+            summary: vec![
+                ("DYN-P99-STEADY", 2.5),
+                ("DYN-WORST-WIN", 12.0),
+                ("DYN-THR-MEAN", 110.0),
+                ("DYN-RECOVERY", 31.25),
+            ],
+            completed: 24,
+            failed: 0,
+            recovery: Some(Recovery {
+                tenant: 2,
+                fault_ns: 100_000_000,
+                recovered_ns: 131_250_000,
+            }),
+        }
+    }
+
+    fn surface() -> DynSurface {
+        DynSurface {
+            seed: 42,
+            duration_ms: 200,
+            window_ms: 100,
+            runs: vec![run("native", "steady"), run("hami", "failover")],
+            stats: ExecutionStats::default(),
+        }
+    }
+
+    #[test]
+    fn csv_long_format_rows() {
+        let csv = render_csv(&surface());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], CSV_HEADER);
+        // 2 runs × 5 points.
+        assert_eq!(lines.len(), 11);
+        assert_eq!(lines[1], "native,steady,200,100,0,100,all,DYN-LAT-P99,2.500000");
+        assert_eq!(lines[3], "native,steady,200,100,0,100,1,DYN-SM,0.250000");
+        // Empty windows carry NaN latency; recovery rows name the tenant.
+        assert!(lines[4].ends_with("DYN-LAT-P99,NaN"), "{}", lines[4]);
+        assert_eq!(lines[5], "native,steady,200,100,1,200,2,DYN-RECOVERY,31.250000");
+    }
+
+    #[test]
+    fn summary_csv_is_regress_parseable() {
+        let csv = render_summary_csv(&surface());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], SUMMARY_CSV_HEADER);
+        assert_eq!(lines.len(), 9); // 2 runs × 4 summary stats
+        assert_eq!(lines[1], "native,steady,200,100,DYN-P99-STEADY,2.500000");
+        let b = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
+        assert_eq!(b.schema, crate::regress::BaselineSchema::Dynamics);
+        assert_eq!(b.rows.len(), 8);
+        let d = b.rows[0].dyn_cell.as_ref().unwrap();
+        assert_eq!(d.scenario, "steady");
+        assert_eq!((d.duration_ms, d.window_ms), (200, 100));
+        assert_eq!(b.rows[0].cell_label(), "steady@200ms/100ms");
+    }
+
+    #[test]
+    fn json_carries_runs_series_and_recovery() {
+        let j = render_json(&surface());
+        assert!(j.contains("\"runs\""), "{j}");
+        assert!(j.contains("\"scenario\": \"failover\""), "{j}");
+        assert!(j.contains("\"summary\""), "{j}");
+        assert!(j.contains("\"id\": \"DYN-P99-STEADY\""), "{j}");
+        assert!(j.contains("\"recovery_ms\": 31.25"), "{j}");
+        assert!(j.contains("\"tenant\": \"all\""), "{j}");
+        assert!(j.contains("\"execution\""), "{j}");
+        // NaN series values render as null.
+        assert!(j.contains("\"value\": null"), "{j}");
+    }
+
+    #[test]
+    fn txt_summarises_worst_windows() {
+        let t = render_txt(&surface());
+        assert!(t.contains("dynamic-scenario surface"), "{t}");
+        assert!(t.contains("steady"), "{t}");
+        assert!(t.contains("Worst window per timeline"), "{t}");
+        assert!(t.contains("31.25 ms"), "{t}");
+        assert!(t.contains("window   0"), "{t}");
+    }
+}

@@ -6,6 +6,7 @@
 //! output schema.
 
 pub mod csv;
+pub mod dynamics;
 pub mod json;
 pub mod sweep;
 pub mod txt;

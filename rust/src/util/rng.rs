@@ -99,6 +99,43 @@ pub fn topology_seed(seed: u64, gpu_count: u32, link_key: &str) -> u64 {
     splitmix64(&mut state)
 }
 
+/// Derive the dynamics-level seed for one `(scenario, duration_ms,
+/// window_ms)` coordinate of a dynamic-scenario grid — the seed layer the
+/// `dynsim` virtual-time engine folds under [`task_seed`]. The per-run
+/// seed of one (system, scenario) dynamics task is
+///
+/// ```text
+/// task_seed(dynamics_seed(run_seed, scenario, duration_ms, window_ms),
+///           system, scenario)
+/// ```
+///
+/// — a pure function of the run seed and the task's coordinates, so a
+/// `gvbench dynamics` grid is bit-identical at any `--jobs` count and a
+/// timeline re-runs exactly when the regression engine reconstructs it
+/// from a summary baseline.
+///
+/// Construction mirrors [`topology_seed`]: FNV-1a over the scenario key,
+/// a `0xFD` separator (distinct from `scenario_seed`'s `0xFF` and
+/// `topology_seed`'s `0xFE`, so no two layers can alias even on equal
+/// byte streams), and the fixed-width little-endian duration/window
+/// encodings, folded into the run seed and finalized with one SplitMix64
+/// step. `prop_invariants` checks the composed seeds stay collision-free
+/// across a (systems × scenarios × durations × windows) grid.
+pub fn dynamics_seed(seed: u64, scenario: &str, duration_ms: u64, window_ms: u64) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325; // FNV-1a offset basis
+    for b in scenario
+        .bytes()
+        .chain(std::iter::once(0xFDu8))
+        .chain(duration_ms.to_le_bytes())
+        .chain(window_ms.to_le_bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3); // FNV-1a prime
+    }
+    let mut state = seed.wrapping_add(h);
+    splitmix64(&mut state)
+}
+
 /// xoshiro256** — fast, high-quality, 256-bit state PRNG.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -331,6 +368,21 @@ mod tests {
         // The 0xFE separator keeps this layer distinct from scenario_seed
         // even on coordinate values that encode to similar byte streams.
         assert_ne!(topology_seed(42, 4, ""), scenario_seed(42, 4, 0));
+    }
+
+    #[test]
+    fn dynamics_seed_pure_and_sensitive() {
+        // Stable across calls.
+        assert_eq!(dynamics_seed(42, "churn", 1000, 100), dynamics_seed(42, "churn", 1000, 100));
+        // Sensitive to every coordinate.
+        assert_ne!(dynamics_seed(42, "churn", 1000, 100), dynamics_seed(43, "churn", 1000, 100));
+        assert_ne!(dynamics_seed(42, "churn", 1000, 100), dynamics_seed(42, "spike", 1000, 100));
+        assert_ne!(dynamics_seed(42, "churn", 1000, 100), dynamics_seed(42, "churn", 2000, 100));
+        assert_ne!(dynamics_seed(42, "churn", 1000, 100), dynamics_seed(42, "churn", 1000, 50));
+        // The 0xFD separator keeps this layer distinct from the sweep
+        // layers even on byte streams that would otherwise coincide.
+        assert_ne!(dynamics_seed(42, "", 4, 0), topology_seed(42, 4, ""));
+        assert_ne!(dynamics_seed(42, "", 4, 0), scenario_seed(42, 4, 0));
     }
 
     #[test]

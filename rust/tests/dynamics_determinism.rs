@@ -1,0 +1,179 @@
+//! The dynsim subsystem's determinism guarantee, proven end-to-end: the
+//! same dynamics grid and seed produce a **bit-identical** time-series
+//! surface at `--jobs 1` and `--jobs 8` (per-task seeds are pure
+//! functions of the run seed and the (system, scenario, duration,
+//! window) coordinates), the rendered CSV surfaces — which carry no host
+//! timings — match byte-for-byte, and the summary CSV round-trips
+//! through the regression engine with a clean pass against itself.
+
+use gvb::dynsim::{run_dynamics, DynSpec, DynSurface};
+use gvb::metrics::RunConfig;
+use gvb::report::dynamics::{render_csv, render_summary_csv};
+
+fn spec() -> DynSpec {
+    DynSpec {
+        systems: vec!["native".into(), "hami".into()],
+        scenarios: vec!["churn", "failover"],
+        duration_ms: 300,
+        window_ms: 50,
+    }
+}
+
+fn base() -> RunConfig {
+    let mut cfg = RunConfig::quick("native");
+    cfg.seed = 42;
+    cfg
+}
+
+fn assert_surfaces_bit_identical(a: &DynSurface, b: &DynSurface) {
+    assert_eq!(a.seed, b.seed);
+    assert_eq!(a.runs.len(), b.runs.len());
+    for (x, y) in a.runs.iter().zip(&b.runs) {
+        let ctx = format!("{}/{}", x.system, x.scenario);
+        assert_eq!(x.system, y.system, "{ctx}: run order diverged");
+        assert_eq!(x.scenario, y.scenario, "{ctx}: run order diverged");
+        assert_eq!(x.windows, y.windows, "{ctx}");
+        assert_eq!(x.tenants, y.tenants, "{ctx}");
+        assert_eq!(x.completed, y.completed, "{ctx}");
+        assert_eq!(x.failed, y.failed, "{ctx}");
+        assert_eq!(x.recovery, y.recovery, "{ctx}");
+        assert_eq!(x.series.len(), y.series.len(), "{ctx}");
+        for (p, q) in x.series.iter().zip(&y.series) {
+            assert_eq!(p.id, q.id, "{ctx}: series order diverged");
+            assert_eq!(p.window, q.window, "{ctx}/{}", p.id);
+            assert_eq!(p.tenant, q.tenant, "{ctx}/{}", p.id);
+            assert_eq!(
+                p.value.to_bits(),
+                q.value.to_bits(),
+                "{ctx}/{} window {}: {} vs {}",
+                p.id,
+                p.window,
+                p.value,
+                q.value
+            );
+        }
+        assert_eq!(x.summary.len(), y.summary.len(), "{ctx}");
+        for ((ia, va), (ib, vb)) in x.summary.iter().zip(&y.summary) {
+            assert_eq!(ia, ib, "{ctx}: summary order");
+            assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}/{ia}");
+        }
+    }
+}
+
+#[test]
+fn dynamics_surface_bit_identical_at_any_job_count() {
+    let base = base();
+    let serial = run_dynamics(&base, &spec(), 1);
+    let sharded = run_dynamics(&base, &spec(), 8);
+    assert_eq!(serial.stats.jobs, 1);
+    assert_eq!(sharded.stats.jobs, 8);
+    // 2 systems × 2 scenarios.
+    assert_eq!(serial.runs.len(), 4);
+    assert_eq!(serial.stats.tasks.len(), 4);
+    assert_surfaces_bit_identical(&serial, &sharded);
+    // The rendered surfaces (no host timings) match byte-for-byte.
+    assert_eq!(render_csv(&serial), render_csv(&sharded));
+    assert_eq!(render_summary_csv(&serial), render_summary_csv(&sharded));
+}
+
+#[test]
+fn dynamics_is_a_pure_function_of_the_seed() {
+    let a = run_dynamics(&base(), &spec(), 4);
+    let b = run_dynamics(&base(), &spec(), 4);
+    assert_surfaces_bit_identical(&a, &b);
+    let mut other = base();
+    other.seed = 43;
+    let c = run_dynamics(&other, &spec(), 4);
+    assert!(
+        a.runs.iter().zip(&c.runs).any(|(x, y)| {
+            x.series
+                .iter()
+                .zip(&y.series)
+                .any(|(p, q)| p.value.to_bits() != q.value.to_bits())
+        }),
+        "seed change did not affect the surface"
+    );
+}
+
+#[test]
+fn timelines_actually_diverge_across_systems_and_scenarios() {
+    // Sanity against a degenerate pass: the interception system must not
+    // produce the same timeline as native, and churn must not equal
+    // failover on the same system.
+    let surface = run_dynamics(&base(), &spec(), 0);
+    let run_of = |system: &str, scenario: &str| {
+        surface
+            .runs
+            .iter()
+            .find(|r| r.system == system && r.scenario == scenario)
+            .unwrap()
+    };
+    let native = run_of("native", "churn");
+    let hami = run_of("hami", "churn");
+    assert!(
+        native
+            .series
+            .iter()
+            .zip(&hami.series)
+            .any(|(p, q)| p.value.to_bits() != q.value.to_bits()),
+        "hami timeline identical to native"
+    );
+    let failover = run_of("hami", "failover");
+    assert!(failover.recovery.is_some());
+    assert!(hami.recovery.is_none());
+}
+
+#[test]
+fn injected_fault_recovery_is_attributed_to_the_right_tenant_and_window() {
+    let surface = run_dynamics(&base(), &spec(), 2);
+    for system in ["native", "hami"] {
+        let run = surface
+            .runs
+            .iter()
+            .find(|r| r.system == system && r.scenario == "failover")
+            .unwrap();
+        let rec = run
+            .recovery
+            .unwrap_or_else(|| panic!("{system}/failover recorded no recovery"));
+        // The failover preset faults tenant 2 at 40% of the 300 ms
+        // horizon.
+        assert_eq!(rec.tenant, 2, "{system}");
+        assert_eq!(rec.fault_ns, 120_000_000, "{system}");
+        assert!(rec.recovered_ns > rec.fault_ns, "{system}");
+        // The summary carries the same recovery time…
+        assert_eq!(
+            run.summary_value("DYN-RECOVERY"),
+            Some(rec.recovery_ms()),
+            "{system}"
+        );
+        // …and the windowed marker lands in the recovery window, on the
+        // faulted tenant (window 2 of 6 is the fault window; recovery can
+        // only complete there or later).
+        let markers: Vec<_> = run.series.iter().filter(|p| p.id == "DYN-RECOVERY").collect();
+        assert_eq!(markers.len(), 1, "{system}");
+        assert_eq!(markers[0].tenant, Some(2), "{system}");
+        assert_eq!(markers[0].window, run.window_of(rec.recovered_ns), "{system}");
+        assert!(markers[0].window >= 2, "{system}: window {}", markers[0].window);
+        assert!((markers[0].value - rec.recovery_ms()).abs() < 1e-12, "{system}");
+    }
+}
+
+#[test]
+fn summary_round_trips_through_the_regression_engine() {
+    let base = base();
+    let surface = run_dynamics(&base, &spec(), 4);
+    let summary = render_summary_csv(&surface);
+    let baseline = gvb::regress::parse_baseline_csv(&summary, "native").unwrap();
+    assert_eq!(baseline.schema, gvb::regress::BaselineSchema::Dynamics);
+    // 4 timelines × 4 summary statistics.
+    assert_eq!(baseline.rows.len(), 16);
+    // Re-run at both job counts: clean pass with a tight threshold.
+    for jobs in [1usize, 8] {
+        let mut cfg = base.clone();
+        cfg.jobs = jobs;
+        let out = gvb::regress::run_regression(&cfg, &baseline, 0.0001).unwrap();
+        assert_eq!(out.checked(), 16);
+        assert!(out.passed(), "jobs={jobs}: {:?}", out.regressions());
+        assert_eq!(out.schema, gvb::regress::BaselineSchema::Dynamics);
+    }
+}

@@ -9,7 +9,7 @@ use gvb::metrics::{taxonomy, RunConfig};
 use gvb::simgpu::memory::HbmAllocator;
 use gvb::stats::jain_fairness;
 use gvb::testkit::{check, gens};
-use gvb::util::rng::{scenario_seed, task_seed, topology_seed};
+use gvb::util::rng::{dynamics_seed, scenario_seed, task_seed, topology_seed};
 use gvb::util::Rng;
 use gvb::virt::wfq::WfqScheduler;
 use gvb::virt::{TenantConfig, ALL_SYSTEMS};
@@ -207,6 +207,51 @@ fn prop_sweep_cell_seeds_collision_free() {
                 }
             }
             seen.len() == expanded
+        },
+    );
+}
+
+/// Dynamics-seed invariant: composed dynamics+task seeds — the per-task
+/// derivation used by `dynsim::run_dynamics` — are collision-free across
+/// a (systems × scenarios × durations × windows) grid for any base seed,
+/// and never collide with the sweep-layer derivations for the same base
+/// seed (the 0xFD separator keeps the layers apart). A collision would
+/// make two timelines draw identical request/jitter streams and silently
+/// correlate their series.
+#[test]
+fn prop_dynamics_seeds_collision_free_and_layer_distinct() {
+    let scenarios = gvb::dynsim::PRESETS;
+    let durations = [250u64, 1000, 2000];
+    let windows = [50u64, 100, 250];
+    let expanded = ALL_SYSTEMS.len() * scenarios.len() * durations.len() * windows.len();
+    check(
+        "dynamics-seeds-collision-free",
+        0x5EED7,
+        8,
+        |rng: &mut Rng| rng.next_u64(),
+        |&base| {
+            let mut seen = HashSet::new();
+            for &sc in &scenarios {
+                for &d in &durations {
+                    for &w in &windows {
+                        let layer = dynamics_seed(base, sc, d, w);
+                        for system in ALL_SYSTEMS {
+                            if !seen.insert(task_seed(layer, system, sc)) {
+                                return false; // collision across the grid
+                            }
+                        }
+                    }
+                }
+            }
+            if seen.len() != expanded {
+                return false;
+            }
+            // Layer separation: a dynamics task seed never equals the
+            // sweep-layer task seed of matching numeric coordinates.
+            let dynv = task_seed(dynamics_seed(base, "steady", 4, 50), "hami", "OH-001");
+            let sweep = task_seed(scenario_seed(base, 4, 50), "hami", "OH-001");
+            let topo = task_seed(topology_seed(scenario_seed(base, 4, 50), 4, "pcie"), "hami", "OH-001");
+            dynv != sweep && dynv != topo
         },
     );
 }
