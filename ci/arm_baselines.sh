@@ -14,6 +14,7 @@
 #
 #   artifacts/regression-baseline/fresh_quick.csv
 #   artifacts/sweep-baseline/fresh_sweep.csv
+#   artifacts/cluster-surface/fresh_cluster.csv
 #
 # (bare fresh_*.csv files directly inside <artifacts-dir> are accepted
 # too). The script validates each snapshot — non-empty, expected header,
@@ -89,7 +90,8 @@ arm() {
 }
 
 arm regression-baseline fresh_quick.csv ci/baseline_quick.csv "id,"
-arm sweep-baseline fresh_sweep.csv ci/baseline_sweep.csv "system,"
+arm sweep-baseline fresh_sweep.csv ci/baseline_sweep.csv "system,tenants,"
+arm cluster-surface fresh_cluster.csv ci/baseline_cluster.csv "system,policy,"
 
 if [ "$armed" -eq 0 ]; then
   echo "error: no baseline artifacts found under $artifacts" >&2

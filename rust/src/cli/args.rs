@@ -22,6 +22,13 @@ USAGE:
               [--duration-ms N] [--window-ms N] [--seed N] [--jobs N]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
               [--summary-out <file>]
+  gvbench cluster [--policies first-fit,best-fit,frag-gradient]
+              [--nodes N,N,...] [--arrivals N]
+              [--scenario steady,churn,spike,failover]
+              [--system S | --systems S,S,...|all | --all-systems]
+              [--seed N] [--jobs N]
+              [--config <file>] [--format <txt|json|csv>] [--out <file>]
+              [--summary-out <file>]
   gvbench list [--full | --systems | --categories]
   gvbench compare [--quick] [--jobs N]  # Table 7: overall scores, all systems
   gvbench regress --baseline <csv> [--system S] [--threshold PCT] [--quick]
@@ -37,6 +44,8 @@ EXAMPLES:
   gvbench sweep --category isolation,fragmentation --quick
   gvbench dynamics --scenario churn,failover --systems hami,fcsp --jobs 8
   gvbench dynamics --duration-ms 2000 --window-ms 200 --format csv --out dyn.csv
+  gvbench cluster --policies first-fit,frag-gradient --nodes 8,16 --jobs 8
+  gvbench cluster --scenario churn --arrivals 5000 --format csv --out fleet.csv
   gvbench compare --quick
 
 Scenario sweeps: `sweep` expands (systems x tenants x quota x gpus x
@@ -66,6 +75,20 @@ regress-gateable baseline. A config file `[dynsim]` section
 (scenarios/duration_ms/window_ms/systems keys) sets the grid; CLI
 flags override it.
 
+Cluster placement: `cluster` raises the unit of measurement to an
+N-node fleet. Each (system x policy x nodes x scenario) cell replays a
+churn timeline of --arrivals tenant arrivals (default 1000), placing
+every arrival through the named policy (first-fit, best-fit,
+frag-gradient; default: all three) on --nodes fleet sizes (default 8),
+and reports allocation success rate, fleet fragmentation, utilization
+imbalance and migration/eviction counts. --out writes the long-format
+per-node CSV in --format; --summary-out writes the per-cell summary
+CSV — a regress-gateable baseline keyed by (system, policy, nodes,
+scenario, id). Regress replays always use the default arrival count,
+so write summary baselines at it. A config file `[cluster]` section
+(policies/nodes/scenarios/arrivals/systems keys) sets the grid; CLI
+flags override it.
+
 Regression gate: `regress` re-runs every cell in the baseline CSV (all
 systems in the file, or just --system S) sharded across --jobs workers,
 and exits 1 if any metric moved against its direction by more than
@@ -75,9 +98,11 @@ a `gvbench sweep --format csv` surface re-runs every
 (system, tenants, quota, gpus, link) cell with the sweep's own quota
 mapping, node topology and seed derivation (`feasible=false` cells are
 skipped; PR-3-era baselines without gpu_count/link columns re-run on
-the default 4-GPU PCIe node), and a `gvbench dynamics --summary-out`
+the default 4-GPU PCIe node), a `gvbench dynamics --summary-out`
 summary replays each (system, scenario) timeline with the producing
-run's seed derivation. --report-json and --report-md write
+run's seed derivation, and a `gvbench cluster --summary-out` summary
+replays each (system, policy, nodes, scenario) fleet cell at the
+default arrival count. --report-json and --report-md write
 machine-readable reports (per-cell deltas / a GitHub-flavored summary
 of the worst regressions per system and per link kind).
 
@@ -92,6 +117,7 @@ pub enum Command {
     Run,
     Sweep,
     Dynamics,
+    Cluster,
     List,
     Compare,
     Regress,
@@ -139,14 +165,20 @@ pub struct Args {
     pub sweep_systems: Option<Vec<String>>,
     /// Sweep grid: category keys (`--category isolation,fragmentation`).
     pub sweep_categories: Option<Vec<String>>,
-    /// Dynamics grid: scenario preset keys (`--scenario churn,spike`).
+    /// Dynamics/cluster grid: scenario preset keys (`--scenario churn,spike`).
     pub dyn_scenarios: Option<Vec<String>>,
     /// Dynamics grid: timeline horizon (`--duration-ms 2000`).
     pub duration_ms: Option<u64>,
     /// Dynamics grid: reporting window (`--window-ms 200`).
     pub window_ms: Option<u64>,
-    /// `dynamics`: write the regress-compatible summary CSV here.
+    /// `dynamics`/`cluster`: write the regress-compatible summary CSV here.
     pub summary_out: Option<String>,
+    /// Cluster grid: placement policy keys (`--policies first-fit,best-fit`).
+    pub cluster_policies: Option<Vec<String>>,
+    /// Cluster grid: fleet sizes in nodes (`--nodes 8,16`).
+    pub cluster_nodes: Option<Vec<u32>>,
+    /// Cluster grid: tenant arrivals per replay (`--arrivals 5000`).
+    pub arrivals: Option<u32>,
 }
 
 impl Default for Args {
@@ -184,6 +216,9 @@ impl Default for Args {
             duration_ms: None,
             window_ms: None,
             summary_out: None,
+            cluster_policies: None,
+            cluster_nodes: None,
+            arrivals: None,
         }
     }
 }
@@ -257,6 +292,45 @@ pub fn validate_sweep_links(links: Option<&[String]>) -> Result<(), String> {
     Ok(())
 }
 
+/// Range/name checks shared by the `cluster` CLI flags and config-file
+/// `[cluster]` grids: policy names must be known placement policies,
+/// node counts fit 1..=1024 (matching the cluster baseline parser's
+/// acceptance range), and the arrival count fits 1..=100000.
+pub fn validate_cluster_grid(
+    policies: Option<&[String]>,
+    nodes: Option<&[u32]>,
+    arrivals: Option<u32>,
+) -> Result<(), String> {
+    if let Some(ps) = policies {
+        if ps.is_empty() {
+            return Err("--policies list is empty".to_string());
+        }
+        for p in ps {
+            if crate::cluster::canonical_policy(p).is_none() {
+                return Err(format!(
+                    "unknown placement policy `{p}` (expected: first-fit, best-fit, frag-gradient)"
+                ));
+            }
+        }
+    }
+    if let Some(ns) = nodes {
+        if ns.is_empty() {
+            return Err("--nodes list is empty".to_string());
+        }
+        for &n in ns {
+            if !(1..=1024).contains(&n) {
+                return Err(format!("--nodes value {n} out of range (1..=1024)"));
+            }
+        }
+    }
+    if let Some(a) = arrivals {
+        if !(1..=100_000).contains(&a) {
+            return Err(format!("--arrivals value {a} out of range (1..=100000)"));
+        }
+    }
+    Ok(())
+}
+
 /// Range/name checks shared by the `dynamics` CLI flags and config-file
 /// `[dynsim]` grids: scenario names must be known presets, the horizon
 /// fits 1 ms..=1 h, and the window fits inside the horizon (matching the
@@ -307,6 +381,7 @@ impl Args {
             Some("run") => Command::Run,
             Some("sweep") => Command::Sweep,
             Some("dynamics") => Command::Dynamics,
+            Some("cluster") => Command::Cluster,
             Some("list") => Command::List,
             Some("compare") => Command::Compare,
             Some("regress") => Command::Regress,
@@ -337,12 +412,37 @@ impl Args {
                 }
                 "--metric" => args.metric = Some(next_value(&mut it, flag)?),
                 "--scenario" => {
-                    if args.command != Command::Dynamics {
-                        return Err(err("--scenario is only valid for `gvbench dynamics`"));
+                    if !matches!(args.command, Command::Dynamics | Command::Cluster) {
+                        return Err(err(
+                            "--scenario is only valid for `gvbench dynamics` or `gvbench cluster`",
+                        ));
                     }
                     let v = next_value(&mut it, flag)?;
                     args.dyn_scenarios =
                         Some(v.split(',').map(|s| s.trim().to_string()).collect());
+                }
+                "--policies" => {
+                    if args.command != Command::Cluster {
+                        return Err(err("--policies is only valid for `gvbench cluster`"));
+                    }
+                    let v = next_value(&mut it, flag)?;
+                    args.cluster_policies =
+                        Some(v.split(',').map(|s| s.trim().to_string()).collect());
+                }
+                "--nodes" => {
+                    if args.command != Command::Cluster {
+                        return Err(err("--nodes is only valid for `gvbench cluster`"));
+                    }
+                    let v = next_value(&mut it, flag)?;
+                    args.cluster_nodes = Some(parse_u32_list(flag, &v)?);
+                }
+                "--arrivals" => {
+                    if args.command != Command::Cluster {
+                        return Err(err("--arrivals is only valid for `gvbench cluster`"));
+                    }
+                    args.arrivals = Some(
+                        next_value(&mut it, flag)?.parse().map_err(|_| err("bad --arrivals"))?,
+                    );
                 }
                 "--duration-ms" => {
                     if args.command != Command::Dynamics {
@@ -361,8 +461,10 @@ impl Args {
                     );
                 }
                 "--summary-out" => {
-                    if args.command != Command::Dynamics {
-                        return Err(err("--summary-out is only valid for `gvbench dynamics`"));
+                    if !matches!(args.command, Command::Dynamics | Command::Cluster) {
+                        return Err(err(
+                            "--summary-out is only valid for `gvbench dynamics` or `gvbench cluster`",
+                        ));
                     }
                     args.summary_out = Some(next_value(&mut it, flag)?);
                 }
@@ -437,8 +539,9 @@ impl Args {
                 }
                 "--full" => args.list_full = true,
                 "--systems" => {
-                    if matches!(args.command, Command::Sweep | Command::Dynamics) {
-                        // Sweeps/dynamics take a system list (`all` = every system).
+                    if matches!(args.command, Command::Sweep | Command::Dynamics | Command::Cluster)
+                    {
+                        // Sweeps/dynamics/cluster take a system list (`all` = every system).
                         let v = next_value(&mut it, flag)?;
                         if v.trim() == "all" {
                             args.all_systems = true;
@@ -460,7 +563,7 @@ impl Args {
         }
         let takes_suite_flags = matches!(
             args.command,
-            Command::Run | Command::Regress | Command::Sweep | Command::Dynamics
+            Command::Run | Command::Regress | Command::Sweep | Command::Dynamics | Command::Cluster
         );
         if takes_suite_flags {
             if crate::virt::by_name(&args.system).is_none() {
@@ -536,6 +639,38 @@ impl Args {
                 args.dyn_scenarios.as_deref(),
                 args.duration_ms,
                 args.window_ms,
+            )
+            .map_err(err)?;
+        }
+        if args.command == Command::Cluster {
+            if args.metric.is_some() || args.category.is_some() {
+                return Err(err(
+                    "--metric/--category are not supported by `gvbench cluster`; use \
+                     --policies/--nodes/--scenario",
+                ));
+            }
+            if args.tenants.is_some() {
+                return Err(err(
+                    "--tenants is not supported by `gvbench cluster`; the tenant population \
+                     comes from the --arrivals timeline",
+                ));
+            }
+            if let Some(ss) = &args.sweep_systems {
+                for s in ss {
+                    if crate::virt::by_name(s).is_none() {
+                        return Err(err(format!(
+                            "unknown system `{s}` (expected: native, hami, fcsp, mig, timeslice, or `all`)"
+                        )));
+                    }
+                }
+            }
+            // Scenario names share the dynamics presets; geometry flags
+            // (--duration-ms/--window-ms) are rejected at the flag site.
+            validate_dynamics_grid(args.dyn_scenarios.as_deref(), None, None).map_err(err)?;
+            validate_cluster_grid(
+                args.cluster_policies.as_deref(),
+                args.cluster_nodes.as_deref(),
+                args.arrivals,
             )
             .map_err(err)?;
         }
@@ -696,6 +831,65 @@ mod tests {
         assert!(parse("run --system hami --scenario churn").is_err());
         assert!(parse("sweep --duration-ms 100").is_err());
         assert!(parse("run --system hami --summary-out s.csv").is_err());
+    }
+
+    #[test]
+    fn cluster_parses_grid_and_outputs() {
+        let a = parse(
+            "cluster --policies first-fit,frag-gradient --nodes 8,16 --arrivals 5000 \
+             --scenario churn,failover --systems hami,fcsp --jobs 8 --seed 7 \
+             --format csv --out fleet.csv --summary-out s.csv",
+        )
+        .unwrap();
+        assert_eq!(a.command, Command::Cluster);
+        assert_eq!(
+            a.cluster_policies,
+            Some(vec!["first-fit".to_string(), "frag-gradient".to_string()])
+        );
+        assert_eq!(a.cluster_nodes, Some(vec![8, 16]));
+        assert_eq!(a.arrivals, Some(5000));
+        assert_eq!(
+            a.dyn_scenarios,
+            Some(vec!["churn".to_string(), "failover".to_string()])
+        );
+        assert_eq!(a.sweep_systems, Some(vec!["hami".to_string(), "fcsp".to_string()]));
+        assert_eq!(a.jobs, Some(8));
+        assert_eq!(a.seed, Some(7));
+        assert_eq!(a.summary_out.as_deref(), Some("s.csv"));
+        // Defaults: everything optional.
+        let a = parse("cluster").unwrap();
+        assert_eq!(a.cluster_policies, None);
+        assert_eq!(a.cluster_nodes, None);
+        assert_eq!(a.arrivals, None);
+        // `--systems all` works like the sweep shorthand.
+        let a = parse("cluster --systems all").unwrap();
+        assert!(a.all_systems);
+    }
+
+    #[test]
+    fn cluster_rejects_bad_grids() {
+        assert!(parse("cluster --policies random").is_err());
+        assert!(parse("cluster --nodes 0").is_err());
+        assert!(parse("cluster --nodes 4096").is_err());
+        assert!(parse("cluster --nodes 8,lots").is_err());
+        assert!(parse("cluster --arrivals 0").is_err());
+        assert!(parse("cluster --arrivals 200000").is_err());
+        assert!(parse("cluster --scenario meltdown").is_err());
+        assert!(parse("cluster --systems hami,mps").is_err());
+        assert!(parse("cluster --metric OH-001").is_err());
+        assert!(parse("cluster --category overhead").is_err());
+        assert!(parse("cluster --tenants 8").is_err());
+        assert!(parse("cluster --duration-ms 1000").is_err());
+        assert!(parse("cluster --window-ms 100").is_err());
+        assert!(parse("cluster --format xml").is_err());
+        // Cluster flags belong to cluster only.
+        assert!(parse("run --system hami --policies first-fit").is_err());
+        assert!(parse("sweep --nodes 8").is_err());
+        assert!(parse("dynamics --arrivals 1000").is_err());
+        // --scenario/--summary-out are shared with dynamics, nothing else.
+        let a = parse("cluster --scenario churn --summary-out s.csv").unwrap();
+        assert_eq!(a.dyn_scenarios, Some(vec!["churn".to_string()]));
+        assert_eq!(a.summary_out.as_deref(), Some("s.csv"));
     }
 
     #[test]

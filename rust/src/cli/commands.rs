@@ -2,7 +2,8 @@
 
 use crate::anyhow::{bail, Context, Result};
 
-use crate::config::{DynOverlay, FileConfig, SweepOverlay};
+use crate::cluster::{self, ClusterSpec};
+use crate::config::{ClusterOverlay, DynOverlay, FileConfig, SweepOverlay};
 use crate::coordinator::sweep::{self, SweepSpec};
 use crate::coordinator::SuiteRunner;
 use crate::dynsim::{self, DynSpec};
@@ -24,6 +25,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Command::Run => cmd_run(args),
         Command::Sweep => cmd_sweep(args),
         Command::Dynamics => cmd_dynamics(args),
+        Command::Cluster => cmd_cluster(args),
         Command::Compare => cmd_compare(args),
         Command::Regress => cmd_regress(args),
     }
@@ -75,9 +77,11 @@ fn cmd_regress(args: &Args) -> Result<()> {
     }
     println!("{} regressions / {} cells:", regressions.len(), outcome.checked());
     for r in &regressions {
-        // Dynamics summary ids live outside the Table-8 taxonomy.
+        // Dynamics and cluster summary ids live outside the Table-8
+        // taxonomy.
         let d = taxonomy::by_id(&r.id)
             .or_else(|| taxonomy::dyn_summary_by_id(&r.id))
+            .or_else(|| taxonomy::cluster_summary_by_id(&r.id))
             .expect("engine validated the id");
         println!(
             "  {:<10} {:<9} {:<10} {:<32} {:.3} -> {:.3} {}  ({:+.1}% worse)",
@@ -298,6 +302,87 @@ fn cmd_dynamics(args: &Args) -> Result<()> {
     }
     if let Some(path) = &args.summary_out {
         std::fs::write(path, crate::report::dynamics::render_summary_csv(&surface))
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path} (regress-compatible summary)");
+    }
+    Ok(())
+}
+
+/// Build the cluster placement grid (CLI flags > config-file `[cluster]`
+/// section > defaults) and replay the fleet through the executor.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let file = load_file_config(args)?;
+    let cfg = build_config_with(args, file.as_ref())?;
+    let overlay = match file.as_ref() {
+        Some(fc) => fc.cluster()?,
+        None => ClusterOverlay::default(),
+    };
+    let policy_keys = args.cluster_policies.clone().or(overlay.policies);
+    let node_counts = args
+        .cluster_nodes
+        .clone()
+        .or(overlay.nodes)
+        .unwrap_or_else(|| cluster::DEFAULT_NODE_COUNTS.to_vec());
+    let scenario_keys = args.dyn_scenarios.clone().or(overlay.scenarios);
+    let arrivals = args.arrivals.or(overlay.arrivals).unwrap_or(cluster::DEFAULT_ARRIVALS);
+    // One validation path for CLI flags and config-file keys alike.
+    if let Err(e) = super::args::validate_cluster_grid(
+        policy_keys.as_deref(),
+        Some(&node_counts),
+        Some(arrivals),
+    ) {
+        bail!("{e} in cluster grid");
+    }
+    if let Err(e) = super::args::validate_dynamics_grid(scenario_keys.as_deref(), None, None) {
+        bail!("{e} in cluster grid");
+    }
+    let policies: Vec<&'static str> = match policy_keys {
+        None => cluster::POLICIES.to_vec(),
+        Some(keys) => keys
+            .iter()
+            .map(|k| cluster::canonical_policy(k).expect("validated above"))
+            .collect(),
+    };
+    let scenarios: Vec<&'static str> = match scenario_keys {
+        None => dynsim::PRESETS.to_vec(),
+        Some(keys) => keys
+            .iter()
+            .map(|k| dynsim::scenario::canonical(k).expect("validated above"))
+            .collect(),
+    };
+    let systems = resolve_grid_systems(args, overlay.systems, "cluster")?;
+    let spec = ClusterSpec { systems, policies, node_counts, scenarios, arrivals };
+    let surface = cluster::run_cluster(&cfg, &spec, cfg.jobs);
+    eprintln!(
+        "[gvbench] cluster: {} fleet cell(s) x {} arrival(s) on {} workers in {:.2}s (busy/wall {:.2}x)",
+        surface.runs.len(),
+        surface.arrivals,
+        surface.stats.jobs,
+        surface.stats.wall_ns as f64 / 1e9,
+        surface.stats.speedup_estimate(),
+    );
+    let format = Format::from_key(&args.format).expect("validated");
+    let rendered = crate::report::cluster::render(&surface, format);
+    match &args.out {
+        Some(path) => {
+            std::fs::write(path, &rendered).with_context(|| format!("writing {path}"))?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{rendered}"),
+    }
+    if let Some(path) = &args.summary_out {
+        if arrivals != cluster::DEFAULT_ARRIVALS {
+            // The summary schema keys rows by (system, policy, nodes,
+            // scenario, id) — no arrivals column — and regress replays
+            // always use the default count, so a summary recorded at a
+            // different count would never round-trip clean.
+            eprintln!(
+                "[gvbench] warning: --summary-out recorded at --arrivals {arrivals}; \
+                 `gvbench regress` replays cluster baselines at the default {} arrivals",
+                cluster::DEFAULT_ARRIVALS
+            );
+        }
+        std::fs::write(path, crate::report::cluster::render_summary_csv(&surface))
             .with_context(|| format!("writing {path}"))?;
         eprintln!("wrote {path} (regress-compatible summary)");
     }
@@ -563,6 +648,55 @@ mod tests {
         assert!(out.passed(), "{:?}", out.regressions());
         std::fs::remove_file(&series_path).ok();
         std::fs::remove_file(&summary_path).ok();
+    }
+
+    #[test]
+    fn cluster_writes_fleet_and_summary_and_summary_regresses_clean() {
+        let dir = std::env::temp_dir();
+        let fleet_path = dir.join("gvb_test_cluster_fleet.csv");
+        let summary_path = dir.join("gvb_test_cluster_summary.csv");
+        let mut a = Args::default();
+        a.command = Command::Cluster;
+        a.system = "native".into();
+        a.system_set = true;
+        a.quick = true;
+        a.cluster_policies = Some(vec!["first-fit".into()]);
+        a.cluster_nodes = Some(vec![2]);
+        a.dyn_scenarios = Some(vec!["churn".into()]);
+        a.format = "csv".into();
+        a.out = Some(fleet_path.to_str().unwrap().to_string());
+        a.summary_out = Some(summary_path.to_str().unwrap().to_string());
+        dispatch(&a).unwrap();
+        let fleet = std::fs::read_to_string(&fleet_path).unwrap();
+        let lines: Vec<&str> = fleet.lines().collect();
+        assert_eq!(lines[0], crate::report::cluster::CSV_HEADER);
+        // Header + one row per node of the single fleet cell.
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with("native,first-fit,2,churn,0,"), "{fleet}");
+        // The summary CSV is directly consumable by `gvbench regress`
+        // and passes against itself.
+        let summary = std::fs::read_to_string(&summary_path).unwrap();
+        let b = crate::regress::parse_baseline_csv(&summary, "native").unwrap();
+        assert_eq!(b.schema, crate::regress::BaselineSchema::Cluster);
+        assert_eq!(b.rows.len(), 5);
+        assert_eq!(b.rows[0].cell_label(), "first-fit@2n/churn");
+        let cfg = RunConfig::quick("native");
+        let out = crate::regress::run_regression(&cfg, &b, 0.0001).unwrap();
+        assert!(out.passed(), "{:?}", out.regressions());
+        std::fs::remove_file(&fleet_path).ok();
+        std::fs::remove_file(&summary_path).ok();
+    }
+
+    #[test]
+    fn cluster_rejects_bad_grid_values_from_config_path() {
+        let mut a = Args::default();
+        a.command = Command::Cluster;
+        a.quick = true;
+        a.cluster_nodes = Some(vec![0]);
+        assert!(dispatch(&a).is_err());
+        a.cluster_nodes = None;
+        a.cluster_policies = Some(vec!["worst-fit".into()]);
+        assert!(dispatch(&a).is_err());
     }
 
     #[test]

@@ -1,0 +1,606 @@
+//! Cluster-scale placement simulator (`gvbench cluster`).
+//!
+//! Everything below this layer measures one node. Production GPU
+//! virtualization is a *fleet* problem: the paper's "actionable insights
+//! for practitioners deploying GPU resources in multi-tenant
+//! environments" at scale hinge on **placement** — which node hosts
+//! which tenant — not just per-GPU quotas. MISO (arXiv 2207.11428) and
+//! the online fragmentation-aware scheduler of arXiv 2511.18906 both
+//! show placement policy dominates achievable utilization under churn.
+//! This subsystem makes the fleet the unit of measurement:
+//!
+//! - [`policy`] defines the pluggable [`PlacementPolicy`] trait with
+//!   three in-tree policies (`first-fit`, `best-fit`, `frag-gradient`).
+//! - A [`Fleet`] of N nodes — each sized from the run's
+//!   [`RunConfig::node_topology`] (per-node memory = `gpu_count` ×
+//!   device HBM; per-node compute = `gpu_count` whole-GPU SM units) —
+//!   replays a dynsim-style churn timeline of 10³–10⁴ tenant arrivals
+//!   ([`arrival_stream`], reusing the `steady`/`churn`/`spike`/
+//!   `failover` preset names) and places each arrival through the
+//!   policy. Node failures re-place their tenants (migrations) or drop
+//!   them (evictions).
+//! - [`run_cluster`] expands a [`ClusterSpec`] — systems × policies ×
+//!   node counts × scenarios — into one flat task list sharded through
+//!   the parallel executor
+//!   ([`crate::coordinator::executor::execute_indexed_with`]), reducing
+//!   each cell to the `CL-*` summary metrics (allocation success rate,
+//!   fleet fragmentation, utilization imbalance, migration/eviction
+//!   counts; see [`crate::metrics::taxonomy::CLUSTER_SUMMARY`]).
+//!
+//! **Determinism:** each (system, policy, nodes, scenario) cell derives
+//! its seed as `task_seed(cluster_seed(run_seed, policy, nodes,
+//! scenario), system, scenario)` ([`crate::util::rng::cluster_seed`],
+//! the `0xFC` layer) — a pure function of the cell coordinates — so a
+//! cluster grid is bit-identical at any `--jobs` count
+//! (`rust/tests/cluster_determinism.rs`) and the regression engine can
+//! re-run a summary baseline exactly ([`crate::regress`], `cluster`
+//! schema). Reporting lives in [`crate::report::cluster`]; the operator
+//! guide in `docs/cluster.md`.
+
+pub mod policy;
+
+pub use policy::{canonical as canonical_policy, PlacementPolicy, POLICIES};
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::executor::{self, ExecutionStats, Task};
+use crate::metrics::RunConfig;
+use crate::simgpu::spec::GpuSpec;
+use crate::util::rng::{cluster_seed, task_seed};
+use crate::util::Rng;
+
+/// Default tenant-arrival count per fleet replay (the 10³ end of the
+/// 10³–10⁴ design range; `--arrivals` raises it). Regression replays of
+/// `cluster` summary baselines always use this count — the schema key
+/// `(system, policy, nodes, scenario, id)` does not carry it, exactly
+/// like the run seed.
+pub const DEFAULT_ARRIVALS: u32 = 1000;
+/// Default node-count axis.
+pub const DEFAULT_NODE_COUNTS: [u32; 1] = [8];
+
+/// One tenant's resource demand: device memory plus SM share in
+/// whole-GPU units (1.0 = one full GPU's worth of SMs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Demand {
+    pub mem: u64,
+    pub sm: f64,
+}
+
+/// Live resource state of one fleet node.
+#[derive(Clone, Debug)]
+pub struct NodeState {
+    pub mem_capacity: u64,
+    /// SM capacity in whole-GPU units (= the node's GPU count).
+    pub sm_capacity: f64,
+    pub mem_used: u64,
+    pub sm_used: f64,
+    /// Live tenant count.
+    pub tenants: u32,
+    pub alive: bool,
+}
+
+impl NodeState {
+    pub fn new(mem_capacity: u64, sm_capacity: f64) -> NodeState {
+        NodeState { mem_capacity, sm_capacity, mem_used: 0, sm_used: 0.0, tenants: 0, alive: true }
+    }
+
+    /// Whether this node can host `d` (dead nodes host nothing).
+    pub fn fits(&self, d: &Demand) -> bool {
+        self.alive
+            && self.mem_used + d.mem <= self.mem_capacity
+            && self.sm_used + d.sm <= self.sm_capacity + 1e-9
+    }
+
+    pub fn free_mem(&self) -> u64 {
+        self.mem_capacity - self.mem_used
+    }
+
+    pub fn mem_util(&self) -> f64 {
+        self.mem_used as f64 / self.mem_capacity as f64
+    }
+
+    pub fn sm_util(&self) -> f64 {
+        self.sm_used / self.sm_capacity
+    }
+
+    /// Stranding score: mismatch between the free fractions of the two
+    /// resource dimensions. A node whose memory is drained far ahead of
+    /// its SMs (or vice versa) strands the slower-draining resource —
+    /// the fragmentation measure `frag-gradient` descends (arXiv
+    /// 2511.18906).
+    pub fn frag_score(&self) -> f64 {
+        let free_mem = self.free_mem() as f64 / self.mem_capacity as f64;
+        let free_sm = (self.sm_capacity - self.sm_used) / self.sm_capacity;
+        (free_mem - free_sm).abs()
+    }
+
+    /// A copy of this node as if it hosted `d` (for gradient probes).
+    pub fn hosting(&self, d: &Demand) -> NodeState {
+        let mut n = self.clone();
+        n.mem_used += d.mem;
+        n.sm_used += d.sm;
+        n.tenants += 1;
+        n
+    }
+}
+
+/// An N-node fleet with tenant placements. All mutation goes through
+/// [`Fleet::place`] / [`Fleet::remove`] / [`Fleet::fail_node`], which
+/// maintain the two placement invariants the property suite checks: a
+/// tenant is on at most one node, and node usage equals the sum of its
+/// live tenants' demands (so capacity can never be exceeded).
+pub struct Fleet {
+    nodes: Vec<NodeState>,
+    placements: BTreeMap<u64, (usize, Demand)>,
+}
+
+impl Fleet {
+    pub fn new(node_count: u32, mem_capacity: u64, sm_capacity: f64) -> Fleet {
+        Fleet {
+            nodes: vec![NodeState::new(mem_capacity, sm_capacity); node_count as usize],
+            placements: BTreeMap::new(),
+        }
+    }
+
+    pub fn nodes(&self) -> &[NodeState] {
+        &self.nodes
+    }
+
+    /// tenant → (node index, demand) for every live placement.
+    pub fn placements(&self) -> &BTreeMap<u64, (usize, Demand)> {
+        &self.placements
+    }
+
+    /// Place `tenant` through `policy`. Returns the chosen node index,
+    /// or `None` when no node fits. Panics if the tenant is already
+    /// placed or the policy returns an infeasible node — both are
+    /// simulator bugs, not workload conditions.
+    pub fn place(
+        &mut self,
+        policy: &dyn PlacementPolicy,
+        tenant: u64,
+        d: Demand,
+    ) -> Option<usize> {
+        assert!(
+            !self.placements.contains_key(&tenant),
+            "tenant {tenant} is already placed"
+        );
+        let node = policy.place(&self.nodes, &d)?;
+        assert!(self.nodes[node].fits(&d), "policy {} chose an infeasible node", policy.name());
+        self.nodes[node].mem_used += d.mem;
+        self.nodes[node].sm_used += d.sm;
+        self.nodes[node].tenants += 1;
+        self.placements.insert(tenant, (node, d));
+        Some(node)
+    }
+
+    /// Remove a tenant (departure), freeing its node's resources.
+    pub fn remove(&mut self, tenant: u64) -> Option<usize> {
+        let (node, d) = self.placements.remove(&tenant)?;
+        self.nodes[node].mem_used -= d.mem;
+        self.nodes[node].sm_used = (self.nodes[node].sm_used - d.sm).max(0.0);
+        self.nodes[node].tenants -= 1;
+        Some(node)
+    }
+
+    /// Kill a node: mark it dead, clear its usage, and return its former
+    /// tenants (ascending id order) for the caller to re-place.
+    pub fn fail_node(&mut self, node: usize) -> Vec<(u64, Demand)> {
+        let displaced: Vec<(u64, Demand)> = self
+            .placements
+            .iter()
+            .filter(|(_, (n, _))| *n == node)
+            .map(|(t, (_, d))| (*t, *d))
+            .collect();
+        for (t, _) in &displaced {
+            self.placements.remove(t);
+        }
+        let n = &mut self.nodes[node];
+        n.alive = false;
+        n.mem_used = 0;
+        n.sm_used = 0.0;
+        n.tenants = 0;
+        displaced
+    }
+
+    /// Fleet fragmentation %: the share of free fleet memory stranded on
+    /// nodes that can no longer fit `reference` (the workload's typical
+    /// request). 0 on an empty or fully usable fleet.
+    pub fn fragmentation(&self, reference: &Demand) -> f64 {
+        let (mut stranded, mut free) = (0u64, 0u64);
+        for n in &self.nodes {
+            if !n.alive {
+                continue;
+            }
+            free += n.free_mem();
+            if !n.fits(reference) {
+                stranded += n.free_mem();
+            }
+        }
+        if free == 0 {
+            0.0
+        } else {
+            100.0 * stranded as f64 / free as f64
+        }
+    }
+
+    /// Per-node utilization imbalance %: the coefficient of variation of
+    /// memory utilization across alive nodes. 0 on an idle fleet.
+    pub fn imbalance(&self) -> f64 {
+        let utils: Vec<f64> =
+            self.nodes.iter().filter(|n| n.alive).map(|n| n.mem_util()).collect();
+        if utils.is_empty() {
+            return 0.0;
+        }
+        let mean = utils.iter().sum::<f64>() / utils.len() as f64;
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        let var = utils.iter().map(|u| (u - mean).powi(2)).sum::<f64>() / utils.len() as f64;
+        100.0 * var.sqrt() / mean
+    }
+}
+
+/// One event of a fleet timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetEvent {
+    Arrive { tenant: u64, demand: Demand },
+    Depart { tenant: u64 },
+    Fail { node: usize },
+}
+
+/// Sample one tenant demand: memory log-uniform across 1–16 GiB, SM
+/// share uniform in 0.05–0.25 of a GPU.
+pub fn sample_demand(rng: &mut Rng) -> Demand {
+    let exp = rng.f64_range(30.0, 34.0);
+    Demand { mem: (2f64).powf(exp) as u64, sm: rng.f64_range(0.05, 0.25) }
+}
+
+/// The distribution's typical request (geometric-mean memory, mean SM
+/// share) — the reference [`Fleet::fragmentation`] measures stranding
+/// against.
+pub fn reference_demand() -> Demand {
+    Demand { mem: 4 << 30, sm: 0.15 }
+}
+
+/// Generate a fleet timeline of `arrivals` tenant arrivals shaped by the
+/// dynsim scenario preset names:
+///
+/// - `steady` — arrivals only.
+/// - `churn` — past the first quarter, each arrival is preceded with
+///   p=0.45 by the departure of a random live tenant.
+/// - `spike` — the middle third of arrivals demand double resources.
+/// - `failover` — one node fails after 15% of arrivals; the replay
+///   re-places its tenants (migrations) or drops them (evictions).
+pub fn arrival_stream(
+    scenario: &str,
+    arrivals: u32,
+    nodes: u32,
+    rng: &mut Rng,
+) -> Vec<FleetEvent> {
+    let mut events = Vec::with_capacity(arrivals as usize + arrivals as usize / 2);
+    let mut live: Vec<u64> = Vec::new();
+    let fail_at = arrivals as u64 * 15 / 100;
+    for t in 0..arrivals as u64 {
+        if scenario == "failover" && t == fail_at && nodes > 0 {
+            events.push(FleetEvent::Fail { node: rng.below(nodes as u64) as usize });
+        }
+        if scenario == "churn" && t > arrivals as u64 / 4 && !live.is_empty() && rng.chance(0.45)
+        {
+            let idx = rng.range(0, live.len());
+            events.push(FleetEvent::Depart { tenant: live.swap_remove(idx) });
+        }
+        let mut d = sample_demand(rng);
+        if scenario == "spike"
+            && t >= arrivals as u64 / 3
+            && t < arrivals as u64 * 2 / 3
+        {
+            d.mem *= 2;
+            d.sm = (d.sm * 2.0).min(1.0);
+        }
+        events.push(FleetEvent::Arrive { tenant: t, demand: d });
+        live.push(t);
+    }
+    events
+}
+
+/// Shape one raw demand through a virtualization backend's placement
+/// footprint: HAMi/FCSP pay small per-tenant tracking overheads, MIG
+/// rounds both dimensions up to 1/7-of-a-GPU slice granularity, and
+/// time slicing enforces no SM partition at all (memory is the only
+/// binding dimension — at the cost of interference this layer does not
+/// model).
+pub fn system_demand(system: &str, d: Demand, spec: &GpuSpec) -> Demand {
+    match system {
+        "hami" => Demand { mem: d.mem + d.mem / 50, sm: d.sm },
+        "fcsp" => Demand { mem: d.mem + d.mem / 100, sm: d.sm },
+        "mig" => {
+            let slice = spec.hbm_bytes / 7;
+            Demand { mem: d.mem.div_ceil(slice) * slice, sm: (d.sm * 7.0).ceil() / 7.0 }
+        }
+        "timeslice" => Demand { mem: d.mem, sm: 0.0 },
+        _ => d,
+    }
+}
+
+/// One completed fleet replay: final per-node state plus the `CL-*`
+/// summary metrics.
+#[derive(Clone, Debug)]
+pub struct FleetRun {
+    pub system: String,
+    pub policy: &'static str,
+    pub nodes: u32,
+    pub scenario: &'static str,
+    /// Arrival attempts replayed.
+    pub arrivals: u32,
+    /// Arrivals placed successfully.
+    pub placed: u32,
+    /// Tenants re-placed onto another node after a failure.
+    pub migrations: u32,
+    /// Tenants dropped because no node could host them after a failure.
+    pub evictions: u32,
+    /// Final per-node state, in node-index order.
+    pub node_stats: Vec<NodeState>,
+    /// `(id, value)` pairs in [`crate::metrics::taxonomy::CLUSTER_SUMMARY`] order.
+    pub summary: Vec<(&'static str, f64)>,
+}
+
+impl FleetRun {
+    /// Look up one summary value by `CL-*` id.
+    pub fn summary_value(&self, id: &str) -> Option<f64> {
+        self.summary.iter().find(|(i, _)| *i == id).map(|(_, v)| *v)
+    }
+}
+
+/// Replay one (system, policy, nodes, scenario) fleet cell. `cfg.seed`
+/// must already be the composed per-cell seed (see [`ClusterSpec::run_seed`]);
+/// `cfg.gpu_count`/`cfg.link` size each node via [`RunConfig::node_topology`].
+pub fn replay_fleet(
+    cfg: &RunConfig,
+    policy: &dyn PlacementPolicy,
+    nodes: u32,
+    scenario: &'static str,
+    arrivals: u32,
+) -> FleetRun {
+    let spec = GpuSpec::a100_40gb();
+    let topo = cfg.node_topology(&spec);
+    let mem_capacity = topo.device_count as u64 * spec.hbm_bytes;
+    let sm_capacity = topo.device_count as f64;
+    let mut fleet = Fleet::new(nodes, mem_capacity, sm_capacity);
+    let mut rng = Rng::new(cfg.seed);
+    let stream = arrival_stream(scenario, arrivals, nodes, &mut rng);
+    let (mut attempts, mut placed, mut migrations, mut evictions) = (0u32, 0u32, 0u32, 0u32);
+    for ev in &stream {
+        match ev {
+            FleetEvent::Arrive { tenant, demand } => {
+                let d = system_demand(&cfg.system, *demand, &spec);
+                attempts += 1;
+                if fleet.place(policy, *tenant, d).is_some() {
+                    placed += 1;
+                }
+            }
+            FleetEvent::Depart { tenant } => {
+                // Departures of never-placed tenants are no-ops.
+                fleet.remove(*tenant);
+            }
+            FleetEvent::Fail { node } => {
+                for (tenant, d) in fleet.fail_node(*node) {
+                    if fleet.place(policy, tenant, d).is_some() {
+                        migrations += 1;
+                    } else {
+                        evictions += 1;
+                    }
+                }
+            }
+        }
+    }
+    let success =
+        if attempts == 0 { 100.0 } else { 100.0 * placed as f64 / attempts as f64 };
+    let reference = system_demand(&cfg.system, reference_demand(), &spec);
+    let summary = vec![
+        ("CL-SUCCESS", success),
+        ("CL-FRAG", fleet.fragmentation(&reference)),
+        ("CL-IMBAL", fleet.imbalance()),
+        ("CL-MIGRATE", migrations as f64),
+        ("CL-EVICT", evictions as f64),
+    ];
+    FleetRun {
+        system: cfg.system.clone(),
+        policy: policy::canonical(policy.name()).unwrap_or("first-fit"),
+        nodes,
+        scenario,
+        arrivals,
+        placed,
+        migrations,
+        evictions,
+        node_stats: fleet.nodes().to_vec(),
+        summary,
+    }
+}
+
+/// A cluster grid: which systems replay which placement policies on
+/// which fleet sizes and scenario shapes, at one arrival count.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// Backend keys (`native` / `hami` / `fcsp` / `mig` / `timeslice`).
+    pub systems: Vec<String>,
+    /// Canonical policy keys (see [`policy::POLICIES`]).
+    pub policies: Vec<&'static str>,
+    /// Node counts (the fleet-size axis).
+    pub node_counts: Vec<u32>,
+    /// Canonical scenario preset keys (see [`crate::dynsim::PRESETS`]).
+    pub scenarios: Vec<&'static str>,
+    /// Tenant arrivals per replay.
+    pub arrivals: u32,
+}
+
+impl ClusterSpec {
+    /// Derived per-cell seed for one (system, policy, nodes, scenario)
+    /// replay of this grid.
+    pub fn run_seed(
+        &self,
+        base_seed: u64,
+        system: &str,
+        policy: &str,
+        nodes: u32,
+        scenario: &str,
+    ) -> u64 {
+        task_seed(cluster_seed(base_seed, policy, nodes, scenario), system, scenario)
+    }
+}
+
+/// A completed cluster grid: every (system, policy, nodes, scenario)
+/// fleet replay plus the executor's timings.
+pub struct ClusterSurface {
+    /// The run seed the per-cell cluster seeds were derived from.
+    pub seed: u64,
+    pub arrivals: u32,
+    /// Runs in deterministic order: spec's system order (outer) ×
+    /// policy × node count × scenario order (inner).
+    pub runs: Vec<FleetRun>,
+    pub stats: ExecutionStats,
+}
+
+/// Expand `spec` into one (system × policy × nodes × scenario) task
+/// list, execute it on `jobs` executor workers (0 = available
+/// parallelism), and collect the fleet replays. `base` supplies the run
+/// seed and node topology; per-cell seeds are derived per task.
+pub fn run_cluster(base: &RunConfig, spec: &ClusterSpec, jobs: usize) -> ClusterSurface {
+    let cells = spec.systems.len()
+        * spec.policies.len()
+        * spec.node_counts.len()
+        * spec.scenarios.len();
+    let mut tasks: Vec<Task> = Vec::with_capacity(cells);
+    let mut cfgs: Vec<RunConfig> = Vec::with_capacity(cells);
+    let mut coords: Vec<(&'static str, u32, &'static str)> = Vec::with_capacity(cells);
+    for system in &spec.systems {
+        for &p in &spec.policies {
+            for &n in &spec.node_counts {
+                for &sc in &spec.scenarios {
+                    let mut cfg = base.clone();
+                    cfg.system = system.clone();
+                    cfg.seed = spec.run_seed(base.seed, system, p, n, sc);
+                    tasks.push(Task { system: system.clone(), metric_id: sc });
+                    cfgs.push(cfg);
+                    coords.push((p, n, sc));
+                }
+            }
+        }
+    }
+    let (slots, stats) = executor::execute_indexed_with(&tasks, jobs, |i, _task| {
+        let (p, n, sc) = coords[i];
+        let policy = policy::by_name(p)?;
+        Some(replay_fleet(&cfgs[i], policy, n, sc, spec.arrivals))
+    });
+    let runs: Vec<FleetRun> = slots
+        .into_iter()
+        .zip(&coords)
+        .map(|(slot, (p, _, _))| {
+            slot.unwrap_or_else(|| panic!("cluster policy `{p}` is not a known policy"))
+        })
+        .collect();
+    ClusterSurface { seed: base.seed, arrivals: spec.arrivals, runs, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> ClusterSpec {
+        ClusterSpec {
+            systems: vec!["native".into(), "hami".into()],
+            policies: vec!["first-fit", "frag-gradient"],
+            node_counts: vec![4],
+            scenarios: vec!["steady", "failover"],
+            arrivals: 200,
+        }
+    }
+
+    #[test]
+    fn grid_expands_system_major() {
+        let base = RunConfig::quick("native");
+        let surface = run_cluster(&base, &small_spec(), 2);
+        assert_eq!(surface.runs.len(), 8);
+        assert_eq!(surface.stats.tasks.len(), 8);
+        let coords: Vec<(&str, &str, u32, &str)> = surface
+            .runs
+            .iter()
+            .map(|r| (r.system.as_str(), r.policy, r.nodes, r.scenario))
+            .collect();
+        assert_eq!(coords[0], ("native", "first-fit", 4, "steady"));
+        assert_eq!(coords[1], ("native", "first-fit", 4, "failover"));
+        assert_eq!(coords[2], ("native", "frag-gradient", 4, "steady"));
+        assert_eq!(coords[7], ("hami", "frag-gradient", 4, "failover"));
+        for r in &surface.runs {
+            assert_eq!(r.arrivals, 200);
+            assert!(r.placed > 0, "{}/{} placed nothing", r.system, r.policy);
+            assert_eq!(r.summary.len(), 5);
+        }
+    }
+
+    #[test]
+    fn per_cell_seeds_are_distinct_and_pure() {
+        let spec = small_spec();
+        let a = spec.run_seed(42, "hami", "first-fit", 4, "steady");
+        assert_eq!(a, spec.run_seed(42, "hami", "first-fit", 4, "steady"));
+        assert_ne!(a, spec.run_seed(42, "hami", "best-fit", 4, "steady"));
+        assert_ne!(a, spec.run_seed(42, "hami", "first-fit", 8, "steady"));
+        assert_ne!(a, spec.run_seed(42, "hami", "first-fit", 4, "churn"));
+        assert_ne!(a, spec.run_seed(42, "native", "first-fit", 4, "steady"));
+        assert_ne!(a, spec.run_seed(43, "hami", "first-fit", 4, "steady"));
+    }
+
+    #[test]
+    fn job_counts_agree_bitwise() {
+        let base = RunConfig::quick("native");
+        let s1 = run_cluster(&base, &small_spec(), 1);
+        let s4 = run_cluster(&base, &small_spec(), 4);
+        assert_eq!(s1.stats.jobs, 1);
+        assert_eq!(s4.stats.jobs, 4);
+        for (a, b) in s1.runs.iter().zip(&s4.runs) {
+            assert_eq!(a.system, b.system);
+            assert_eq!((a.policy, a.nodes, a.scenario), (b.policy, b.nodes, b.scenario));
+            assert_eq!((a.placed, a.migrations, a.evictions), (b.placed, b.migrations, b.evictions));
+            for ((ia, va), (ib, vb)) in a.summary.iter().zip(&b.summary) {
+                assert_eq!(ia, ib);
+                assert_eq!(va.to_bits(), vb.to_bits(), "{}/{}/{}", a.system, a.policy, ia);
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_is_never_exceeded_and_usage_balances() {
+        let cfg = RunConfig::quick("native");
+        let policy = policy::by_name("best-fit").unwrap();
+        let run = replay_fleet(&cfg, policy, 3, "churn", 300);
+        for n in &run.node_stats {
+            assert!(n.mem_used <= n.mem_capacity);
+            assert!(n.sm_used <= n.sm_capacity + 1e-9);
+        }
+    }
+
+    #[test]
+    fn failover_displaces_tenants() {
+        let cfg = RunConfig::quick("native");
+        let policy = policy::by_name("first-fit").unwrap();
+        let run = replay_fleet(&cfg, policy, 4, "failover", 400);
+        assert_eq!(run.node_stats.iter().filter(|n| !n.alive).count(), 1);
+        assert!(
+            run.migrations + run.evictions > 0,
+            "failover produced no displacement at all"
+        );
+    }
+
+    #[test]
+    fn mig_granularity_rounds_demands_up() {
+        let spec = GpuSpec::a100_40gb();
+        let slice = spec.hbm_bytes / 7;
+        let d = system_demand("mig", Demand { mem: 1, sm: 0.01 }, &spec);
+        assert_eq!(d.mem, slice);
+        assert!((d.sm - 1.0 / 7.0).abs() < 1e-12);
+        // Native is untouched; timeslice drops the SM dimension.
+        let raw = Demand { mem: 123, sm: 0.5 };
+        assert_eq!(system_demand("native", raw, &spec), raw);
+        assert_eq!(system_demand("timeslice", raw, &spec).sm, 0.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Pluggable placement policies for the fleet simulator.
+//!
+//! A [`PlacementPolicy`] maps one arriving tenant demand onto a node of
+//! the fleet (or rejects it). Three classic policies ship in-tree:
+//!
+//! - **first-fit** — the lowest-index node with room. The baseline every
+//!   scheduler paper compares against; fast and oblivious.
+//! - **best-fit** — the feasible node left with the least free memory
+//!   after placement (tightest fit). Packs tightly but concentrates
+//!   residual slivers.
+//! - **frag-gradient** — fragmentation-gradient descent per the online
+//!   fragmentation-aware scheduler of arXiv 2511.18906: place where the
+//!   fleet's *stranding* measure (mismatch between a node's free memory
+//!   and free SM fractions) increases the least, keeping both resource
+//!   dimensions drained evenly so late arrivals still find usable nodes.
+//!
+//! Policies are stateless and deterministic: ties always break toward
+//! the lowest node index, so a fleet replay is a pure function of
+//! `(seed, policy, arrival order)` (`prop_invariants` checks this).
+
+use super::{Demand, NodeState};
+
+/// Canonical placement-policy keys, in presentation order.
+pub const POLICIES: [&str; 3] = ["first-fit", "best-fit", "frag-gradient"];
+
+/// Resolve a user-supplied policy key to its canonical static name.
+pub fn canonical(name: &str) -> Option<&'static str> {
+    POLICIES.iter().find(|p| **p == name).copied()
+}
+
+/// A placement decision procedure: pick a node for `req`, or `None` when
+/// no alive node can host it.
+pub trait PlacementPolicy: Sync {
+    fn name(&self) -> &'static str;
+    fn place(&self, nodes: &[NodeState], req: &Demand) -> Option<usize>;
+}
+
+/// Look up a policy implementation by canonical key.
+pub fn by_name(name: &str) -> Option<&'static dyn PlacementPolicy> {
+    match name {
+        "first-fit" => Some(&FirstFit),
+        "best-fit" => Some(&BestFit),
+        "frag-gradient" => Some(&FragGradient),
+        _ => None,
+    }
+}
+
+/// Lowest-index node with room.
+pub struct FirstFit;
+
+impl PlacementPolicy for FirstFit {
+    fn name(&self) -> &'static str {
+        "first-fit"
+    }
+    fn place(&self, nodes: &[NodeState], req: &Demand) -> Option<usize> {
+        nodes.iter().position(|n| n.fits(req))
+    }
+}
+
+/// Feasible node with the least free memory after placement.
+pub struct BestFit;
+
+impl PlacementPolicy for BestFit {
+    fn name(&self) -> &'static str {
+        "best-fit"
+    }
+    fn place(&self, nodes: &[NodeState], req: &Demand) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (i, n) in nodes.iter().enumerate() {
+            if !n.fits(req) {
+                continue;
+            }
+            let left = n.free_mem() - req.mem;
+            // Strict `<` keeps ties on the lowest index.
+            if best.map_or(true, |(b, _)| left < b) {
+                best = Some((left, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+}
+
+/// Fragmentation-gradient descent (arXiv 2511.18906): feasible node whose
+/// stranding score grows the least if it hosts the request.
+pub struct FragGradient;
+
+impl PlacementPolicy for FragGradient {
+    fn name(&self) -> &'static str {
+        "frag-gradient"
+    }
+    fn place(&self, nodes: &[NodeState], req: &Demand) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, n) in nodes.iter().enumerate() {
+            if !n.fits(req) {
+                continue;
+            }
+            let gradient = n.hosting(req).frag_score() - n.frag_score();
+            // Strict `<` keeps ties on the lowest index.
+            if best.map_or(true, |(b, _)| gradient < b) {
+                best = Some((gradient, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet3() -> Vec<NodeState> {
+        // Three 100-GiB / 4-SM nodes at different fill levels.
+        let gib = 1u64 << 30;
+        let mut nodes = vec![NodeState::new(100 * gib, 4.0); 3];
+        nodes[0].mem_used = 90 * gib; // nearly full
+        nodes[0].sm_used = 1.0;
+        nodes[1].mem_used = 40 * gib;
+        nodes[1].sm_used = 2.0;
+        nodes
+    }
+
+    #[test]
+    fn registry_resolves_all_canonical_keys() {
+        for key in POLICIES {
+            assert_eq!(canonical(key), Some(key));
+            assert_eq!(by_name(key).unwrap().name(), key);
+        }
+        assert_eq!(canonical("worst-fit"), None);
+        assert!(by_name("worst-fit").is_none());
+    }
+
+    #[test]
+    fn first_fit_takes_lowest_index_that_fits() {
+        let nodes = fleet3();
+        let small = Demand { mem: 1 << 30, sm: 0.5 };
+        assert_eq!(FirstFit.place(&nodes, &small), Some(0));
+        let large = Demand { mem: 50 << 30, sm: 0.5 };
+        assert_eq!(FirstFit.place(&nodes, &large), Some(2));
+        let giant = Demand { mem: 200 << 30, sm: 0.5 };
+        assert_eq!(FirstFit.place(&nodes, &giant), None);
+    }
+
+    #[test]
+    fn best_fit_picks_tightest_node() {
+        let nodes = fleet3();
+        // Fits everywhere; node 0 leaves the least free memory.
+        let small = Demand { mem: 1 << 30, sm: 0.5 };
+        assert_eq!(BestFit.place(&nodes, &small), Some(0));
+        // Too big for node 0; node 1 is tighter than node 2.
+        let mid = Demand { mem: 20 << 30, sm: 0.5 };
+        assert_eq!(BestFit.place(&nodes, &mid), Some(1));
+    }
+
+    #[test]
+    fn frag_gradient_prefers_the_balanced_host() {
+        let gib = 1u64 << 30;
+        // Node 0 has memory drained far ahead of SM (a memory-heavy
+        // request would balance it); node 1 is even.
+        let mut nodes = vec![NodeState::new(100 * gib, 4.0); 2];
+        nodes[0].mem_used = 60 * gib;
+        nodes[0].sm_used = 0.4;
+        let mem_heavy = Demand { mem: 30 * gib, sm: 2.0 };
+        // Hosting on node 0 shrinks its stranding score; on node 1 it
+        // creates a mismatch from zero.
+        assert_eq!(FragGradient.place(&nodes, &mem_heavy), Some(0));
+    }
+
+    #[test]
+    fn dead_nodes_are_never_chosen() {
+        let mut nodes = fleet3();
+        nodes[2].alive = false;
+        let large = Demand { mem: 50 << 30, sm: 0.5 };
+        for key in POLICIES {
+            assert_eq!(by_name(key).unwrap().place(&nodes, &large), None, "{key}");
+        }
+    }
+}

@@ -2,8 +2,9 @@
 //! (INI-like, with `#` comments and `[section]` headers) that configures
 //! iterations, tenants, quotas, custom category weights — the paper's
 //! "users can customize weights via configuration files" (§6.3) — the
-//! `[sweep]` scenario grid consumed by `gvbench sweep`, and the
-//! `[dynsim]` dynamics grid consumed by `gvbench dynamics`.
+//! `[sweep]` scenario grid consumed by `gvbench sweep`, the `[dynsim]`
+//! dynamics grid consumed by `gvbench dynamics`, and the `[cluster]`
+//! fleet grid consumed by `gvbench cluster`.
 //!
 //! A `[section]` header prefixes subsequent keys with `section.`, so
 //!
@@ -56,6 +57,23 @@ pub struct DynOverlay {
     pub systems: Option<Vec<String>>,
 }
 
+/// Values from a config file's `[cluster]` section (`None` = key absent;
+/// `gvbench cluster` overlays its own flags on top and falls back to
+/// the default grid). Policy/scenario names and ranges are validated by
+/// the CLI layer against the policy/preset registries.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterOverlay {
+    /// Placement policy keys (`policies = first-fit, frag-gradient`).
+    pub policies: Option<Vec<String>>,
+    /// Fleet sizes in nodes (`nodes = 8, 16`).
+    pub nodes: Option<Vec<u32>>,
+    /// Scenario preset keys (`scenarios = churn, failover`).
+    pub scenarios: Option<Vec<String>>,
+    /// Tenant arrivals per replay (`arrivals = 5000`).
+    pub arrivals: Option<u32>,
+    pub systems: Option<Vec<String>>,
+}
+
 /// Parse error with line number.
 #[derive(Debug, PartialEq)]
 pub enum ConfigError {
@@ -77,7 +95,7 @@ impl std::fmt::Display for ConfigError {
                 f,
                 "unrecognized key `{key}` (known [sweep] keys: tenants, quota, gpus, link, \
                  systems, categories; known [dynsim] keys: scenarios, duration_ms, window_ms, \
-                 systems)"
+                 systems; known [cluster] keys: policies, nodes, scenarios, arrivals, systems)"
             ),
         }
     }
@@ -240,6 +258,34 @@ impl FileConfig {
         })
     }
 
+    /// The `[cluster]` section's fleet grid, if any keys are present.
+    /// Recognized keys: `cluster.policies`, `cluster.scenarios`,
+    /// `cluster.systems` (string lists), `cluster.nodes` (u32 list),
+    /// `cluster.arrivals` (u32). Like the other section namespaces,
+    /// `cluster.*` is closed: unknown keys are an error rather than
+    /// silently ignored settings.
+    pub fn cluster(&self) -> Result<ClusterOverlay, ConfigError> {
+        const KNOWN: [&str; 5] = [
+            "cluster.policies",
+            "cluster.nodes",
+            "cluster.scenarios",
+            "cluster.arrivals",
+            "cluster.systems",
+        ];
+        for key in self.values.keys() {
+            if key.starts_with("cluster.") && !KNOWN.contains(&key.as_str()) {
+                return Err(ConfigError::UnknownKey(key.clone()));
+            }
+        }
+        Ok(ClusterOverlay {
+            policies: self.get_str_list("cluster.policies"),
+            nodes: self.get_list::<u32>("cluster.nodes")?,
+            scenarios: self.get_str_list("cluster.scenarios"),
+            arrivals: self.get_num::<u32>("cluster.arrivals")?,
+            systems: self.get_str_list("cluster.systems"),
+        })
+    }
+
     /// Custom category weights: keys `weight.<category-key>`. Returns the
     /// default weights overlaid with any file-provided ones; validates the
     /// sum is 1.0 (±1e-6).
@@ -357,6 +403,35 @@ mod tests {
         assert!(matches!(typo.dynsim(), Err(ConfigError::UnknownKey(_))));
         let bad = FileConfig::parse("[dynsim]\nduration_ms = lots\n").unwrap();
         assert!(matches!(bad.dynsim(), Err(ConfigError::Value(_, _))));
+    }
+
+    #[test]
+    fn cluster_section_parses_and_is_closed() {
+        let fc = FileConfig::parse(
+            "[cluster]\npolicies = first-fit, frag-gradient\nnodes = 8, 16\n\
+             scenarios = churn\narrivals = 5000\nsystems = hami\n",
+        )
+        .unwrap();
+        let c = fc.cluster().unwrap();
+        assert_eq!(
+            c.policies,
+            Some(vec!["first-fit".to_string(), "frag-gradient".to_string()])
+        );
+        assert_eq!(c.nodes, Some(vec![8, 16]));
+        assert_eq!(c.scenarios, Some(vec!["churn".to_string()]));
+        assert_eq!(c.arrivals, Some(5000));
+        assert_eq!(c.systems, Some(vec!["hami".to_string()]));
+        // Absent section: all-None overlay.
+        let empty = FileConfig::parse("jobs = 4\n").unwrap();
+        assert_eq!(empty.cluster().unwrap(), ClusterOverlay::default());
+        // Typos and stray keys are errors, not silently ignored settings.
+        let typo = FileConfig::parse("[cluster]\npolicy = first-fit\n").unwrap();
+        assert_eq!(
+            typo.cluster(),
+            Err(ConfigError::UnknownKey("cluster.policy".to_string()))
+        );
+        let bad = FileConfig::parse("[cluster]\nnodes = 8,lots\n").unwrap();
+        assert!(matches!(bad.cluster(), Err(ConfigError::Value(_, _))));
     }
 
     #[test]

@@ -37,6 +37,11 @@
 //!   LLM-serving request streams, reduced to windowed time series
 //!   (latency tails, throughput, occupancy, fragmentation, fault
 //!   recovery) and regress-gateable per-scenario summaries.
+//! - [`cluster`] — the **fleet placement simulator** (`gvbench cluster`):
+//!   N-node fleets replaying churn timelines of 10³–10⁴ tenant arrivals
+//!   through pluggable placement policies (first-fit, best-fit,
+//!   fragmentation-gradient), reduced to allocation success rate, fleet
+//!   fragmentation, utilization imbalance and migration/eviction counts.
 //! - [`runtime`] — PJRT wrapper that loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and executes them from the Rust request path (used by the
 //!   LLM metric category and the examples).
@@ -115,13 +120,31 @@
 //! **dynamics-smoke** job. `rust/tests/dynamics_determinism.rs` proves
 //! the surface bit-identical at any job count.
 //!
+//! ## Cluster placement
+//!
+//! `gvbench cluster` raises the unit of measurement from one node to a
+//! fleet: [`cluster`] replays churn timelines of 10³–10⁴ tenant
+//! arrivals against N-node fleets (each node sized via
+//! [`metrics::RunConfig::node_topology`]), placing every arrival through
+//! a pluggable [`cluster::PlacementPolicy`] (`first-fit`, `best-fit`,
+//! `frag-gradient` per arXiv 2511.18906) and sharding the (system ×
+//! policy × nodes × scenario) grid through
+//! [`coordinator::executor::execute_indexed_with`] with per-cell seeds
+//! `task_seed(cluster_seed(run_seed, policy, nodes, scenario), system,
+//! scenario)`. The summary CSV (`--summary-out`) is a fourth [`regress`]
+//! baseline schema (`cluster`), keyed by `(system, policy, nodes,
+//! scenario, id)` and gated by CI's blocking **cluster-smoke** job.
+//! `rust/tests/cluster_determinism.rs` proves the fleet surface
+//! bit-identical at any job count.
+//!
 //! Operator-facing guides live under `docs/` (`architecture.md`,
-//! `sweeps.md`, `regression-gating.md`, `dynamics.md`), with the
-//! quickstart in the top-level `README.md`.
+//! `sweeps.md`, `regression-gating.md`, `dynamics.md`, `cluster.md`),
+//! with the quickstart in the top-level `README.md`.
 
 pub mod anyhow;
 pub mod benchkit;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod cudalite;

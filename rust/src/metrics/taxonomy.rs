@@ -178,6 +178,19 @@ pub const DYN_SUMMARY: [Descriptor; 4] = [
     Descriptor { id: "DYN-RECOVERY", name: "Fault Recovery Time", description: "Injected fault to first successful request of the faulted tenant (0 = no fault; the full horizon = never recovered)", unit: "ms", category: C::ErrorRecovery, direction: D::LowerBetter },
 ];
 
+/// Per-cell summary statistics the cluster placement simulator reduces
+/// each fleet replay to — the regress-compatible surface (`gvbench
+/// cluster --summary-out`) the regression engine gates like sweep
+/// cells. Like the `DYN-*` tables these are *not* Table-8 metrics: they
+/// never enter the 56-metric runnable registry or the scoring pipeline.
+pub const CLUSTER_SUMMARY: [Descriptor; 5] = [
+    Descriptor { id: "CL-SUCCESS", name: "Allocation Success Rate", description: "Tenant arrivals placed successfully over all arrival attempts", unit: "%", category: C::Scheduling, direction: D::HigherBetter },
+    Descriptor { id: "CL-FRAG", name: "Fleet Fragmentation", description: "Free fleet memory stranded on nodes that cannot fit a reference request", unit: "%", category: C::Fragmentation, direction: D::LowerBetter },
+    Descriptor { id: "CL-IMBAL", name: "Utilization Imbalance", description: "Coefficient of variation of per-node memory utilization", unit: "%", category: C::Scheduling, direction: D::LowerBetter },
+    Descriptor { id: "CL-MIGRATE", name: "Migration Count", description: "Tenants re-placed onto another node after a node failure", unit: "count", category: C::ErrorRecovery, direction: D::LowerBetter },
+    Descriptor { id: "CL-EVICT", name: "Eviction Count", description: "Tenants dropped because no node could host them after a failure", unit: "count", category: C::ErrorRecovery, direction: D::LowerBetter },
+];
+
 /// Look up a descriptor by id.
 pub fn by_id(id: &str) -> Option<&'static Descriptor> {
     ALL.iter().find(|d| d.id == id)
@@ -191,6 +204,11 @@ pub fn dyn_series_by_id(id: &str) -> Option<&'static Descriptor> {
 /// Look up a dynsim per-scenario summary descriptor by id.
 pub fn dyn_summary_by_id(id: &str) -> Option<&'static Descriptor> {
     DYN_SUMMARY.iter().find(|d| d.id == id)
+}
+
+/// Look up a cluster per-cell summary descriptor by id.
+pub fn cluster_summary_by_id(id: &str) -> Option<&'static Descriptor> {
+    CLUSTER_SUMMARY.iter().find(|d| d.id == id)
 }
 
 /// All descriptors of a category, in Table 8 order.
@@ -261,6 +279,25 @@ mod tests {
         assert_eq!(dyn_series_by_id("DYN-LAT-P99").unwrap().category, Category::Llm);
         assert!(dyn_series_by_id("OH-001").is_none());
         assert!(dyn_summary_by_id("DYN-LAT-P99").is_none());
+    }
+
+    #[test]
+    fn cluster_summary_ids_distinct_from_other_namespaces() {
+        // CL ids are a separate namespace: unique among themselves and
+        // never resolvable through the Table-8 or DYN lookups (so
+        // point/sweep/dynamics regress baselines keep rejecting them).
+        let ids: HashSet<&str> = CLUSTER_SUMMARY.iter().map(|d| d.id).collect();
+        assert_eq!(ids.len(), CLUSTER_SUMMARY.len());
+        for d in &CLUSTER_SUMMARY {
+            assert!(d.id.starts_with("CL-"), "{}", d.id);
+            assert!(by_id(d.id).is_none(), "{} leaked into Table 8", d.id);
+            assert!(dyn_series_by_id(d.id).is_none(), "{} leaked into DYN series", d.id);
+            assert!(dyn_summary_by_id(d.id).is_none(), "{} leaked into DYN summary", d.id);
+        }
+        assert_eq!(cluster_summary_by_id("CL-SUCCESS").unwrap().direction, Direction::HigherBetter);
+        assert_eq!(cluster_summary_by_id("CL-FRAG").unwrap().unit, "%");
+        assert!(cluster_summary_by_id("DYN-THR-MEAN").is_none());
+        assert!(cluster_summary_by_id("OH-001").is_none());
     }
 
     #[test]

@@ -19,11 +19,19 @@
 //! [`crate::metrics::taxonomy::DYN_SUMMARY`], re-run by replaying the
 //! whole scenario timeline (see `crate::regress::engine`).
 //!
+//! A fourth schema, **cluster**, is the fleet placement summary surface
+//! `gvbench cluster --summary-out` writes: rows keyed by
+//! `(system, policy, nodes, scenario, id)` with ids from
+//! [`crate::metrics::taxonomy::CLUSTER_SUMMARY`], re-run by replaying the
+//! whole fleet timeline through [`crate::cluster`]. Because both cluster
+//! and dynamics surfaces carry a `scenario` column, the cluster columns
+//! (`policy`/`nodes`) are checked first during detection.
+//!
 //! The schema is auto-detected from the header; generations must not be
 //! mixed — a header carrying only one of `tenants`/`quota_pct`, only
-//! one of `gpu_count`/`link`, or `scenario` together with sweep columns,
-//! is rejected, as is any data row that does not fit the detected
-//! schema. Every rejection names the offending row.
+//! one of `gpu_count`/`link`, only one of `policy`/`nodes`, or `scenario`
+//! together with sweep columns, is rejected, as is any data row that does
+//! not fit the detected schema. Every rejection names the offending row.
 
 use std::collections::BTreeSet;
 
@@ -46,6 +54,12 @@ pub enum BaselineSchema {
     /// re-run by replaying the whole scenario timeline through
     /// [`crate::dynsim`] with the producing run's exact seed derivation.
     Dynamics,
+    /// Cluster placement summary surface (`gvbench cluster
+    /// --summary-out`); rows carry a `(policy, nodes, scenario)`
+    /// coordinate and a [`crate::metrics::taxonomy::CLUSTER_SUMMARY`] id,
+    /// and re-run by replaying the whole fleet timeline through
+    /// [`crate::cluster`] with the producing run's exact seed derivation.
+    Cluster,
 }
 
 impl BaselineSchema {
@@ -54,6 +68,7 @@ impl BaselineSchema {
             BaselineSchema::Point => "point",
             BaselineSchema::Sweep => "sweep",
             BaselineSchema::Dynamics => "dynamics",
+            BaselineSchema::Cluster => "cluster",
         }
     }
 }
@@ -70,6 +85,22 @@ pub struct DynCoord {
 /// Render a dynamics coordinate as `churn@1000ms/100ms`.
 pub fn dyn_label(d: DynCoord) -> String {
     format!("{}@{}ms/{}ms", d.scenario, d.duration_ms, d.window_ms)
+}
+
+/// Cluster-cell coordinate of one fleet summary baseline row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ClusterCoord {
+    /// Canonical placement-policy key ([`crate::cluster::POLICIES`]).
+    pub policy: &'static str,
+    /// Fleet size in nodes.
+    pub nodes: u32,
+    /// Canonical scenario preset key.
+    pub scenario: &'static str,
+}
+
+/// Render a cluster coordinate as `first-fit@2n/churn`.
+pub fn cluster_label(c: ClusterCoord) -> String {
+    format!("{}@{}n/{}", c.policy, c.nodes, c.scenario)
 }
 
 /// Full sweep-cell coordinate of one baseline row.
@@ -93,6 +124,8 @@ pub struct BaselineRow {
     pub cell: Option<CellCoord>,
     /// Dynamics cell coordinate; `Some` exactly for dynamics-schema rows.
     pub dyn_cell: Option<DynCoord>,
+    /// Cluster cell coordinate; `Some` exactly for cluster-schema rows.
+    pub cluster_cell: Option<ClusterCoord>,
     pub id: String,
     pub value: f64,
     /// 1-based CSV line number, for error messages.
@@ -102,6 +135,9 @@ pub struct BaselineRow {
 impl BaselineRow {
     /// Short human label for the row's cell coordinate.
     pub fn cell_label(&self) -> String {
+        if let Some(c) = self.cluster_cell {
+            return cluster_label(c);
+        }
         match self.dyn_cell {
             Some(d) => dyn_label(d),
             None => cell_label(self.cell),
@@ -155,6 +191,13 @@ impl Baseline {
     ///                 hami,2,50,8,nvlink,true,OH-001,15.3\n";
     /// let b = Baseline::parse(extended, "native").unwrap();
     /// assert_eq!(b.rows[0].cell_label(), "2t@50%/8g/nvlink");
+    ///
+    /// // Cluster summaries carry a (policy, nodes, scenario) coordinate.
+    /// let cluster = "system,policy,nodes,scenario,id,value\n\
+    ///                hami,first-fit,8,churn,CL-SUCCESS,97.2\n";
+    /// let b = Baseline::parse(cluster, "native").unwrap();
+    /// assert_eq!(b.schema, BaselineSchema::Cluster);
+    /// assert_eq!(b.rows[0].cell_label(), "first-fit@8n/churn");
     /// ```
     pub fn parse(text: &str, default_system: &str) -> Result<Baseline> {
         parse_baseline_csv(text, default_system)
@@ -182,7 +225,35 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
     let scenario_col = col("scenario");
     let duration_col = col("duration_ms");
     let window_col = col("window_ms");
-    let schema = if scenario_col.is_some() {
+    let policy_col = col("policy");
+    let nodes_col = col("nodes");
+    // Cluster detection runs first: cluster summaries share the
+    // `scenario` column with the dynamics schema.
+    let schema = if policy_col.is_some() || nodes_col.is_some() {
+        if policy_col.is_none() || nodes_col.is_none() {
+            bail!("mixed-schema baseline header: `policy` and `nodes` must appear together");
+        }
+        if tenants_col.is_some() || quota_col.is_some() || gpus_col.is_some() || link_col.is_some()
+        {
+            bail!(
+                "mixed-schema baseline header: cluster columns (`policy`/`nodes`) cannot be \
+                 combined with sweep columns (`tenants`/`quota_pct`/`gpu_count`/`link`)"
+            );
+        }
+        if duration_col.is_some() || window_col.is_some() {
+            bail!(
+                "mixed-schema baseline header: cluster columns (`policy`/`nodes`) cannot be \
+                 combined with dynamics columns (`duration_ms`/`window_ms`)"
+            );
+        }
+        if scenario_col.is_none() {
+            bail!("cluster-schema baseline requires a `scenario` column alongside `policy`/`nodes`");
+        }
+        if system_col.is_none() {
+            bail!("cluster-schema baseline requires a `system` column");
+        }
+        BaselineSchema::Cluster
+    } else if scenario_col.is_some() {
         if tenants_col.is_some() || quota_col.is_some() || gpus_col.is_some() || link_col.is_some()
         {
             bail!(
@@ -229,7 +300,8 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
 
     let mut rows: Vec<BaselineRow> = Vec::new();
     let mut infeasible: Vec<(String, CellCoord)> = Vec::new();
-    let mut seen: BTreeSet<(String, Option<CellCoord>, Option<DynCoord>, String)> =
+    #[allow(clippy::type_complexity)]
+    let mut seen: BTreeSet<(String, Option<CellCoord>, Option<DynCoord>, Option<ClusterCoord>, String)> =
         BTreeSet::new();
     for (i, line) in lines.enumerate() {
         let lineno = i + 2;
@@ -246,6 +318,33 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
                 "row {lineno}: unknown system `{system}` (expected: native, hami, fcsp, mig, timeslice)"
             );
         }
+        let cluster_cell = match schema {
+            BaselineSchema::Cluster => {
+                let name = get_field(&fields, policy_col.expect("cluster schema"), lineno, "policy")?;
+                let policy = crate::cluster::canonical_policy(name).with_context(|| {
+                    format!(
+                        "row {lineno}: unknown placement policy `{name}` (expected: first-fit, \
+                         best-fit, frag-gradient)"
+                    )
+                })?;
+                let nodes: u32 =
+                    get_field(&fields, nodes_col.expect("cluster schema"), lineno, "nodes")?
+                        .parse()
+                        .with_context(|| format!("row {lineno}: bad nodes value"))?;
+                if !(1..=1024).contains(&nodes) {
+                    bail!("row {lineno}: nodes value {nodes} out of range (1..=1024)");
+                }
+                let name = get_field(&fields, scenario_col.expect("cluster schema"), lineno, "scenario")?;
+                let scenario = crate::dynsim::scenario::canonical(name).with_context(|| {
+                    format!(
+                        "row {lineno}: unknown scenario `{name}` (expected: steady, churn, \
+                         spike, failover)"
+                    )
+                })?;
+                Some(ClusterCoord { policy, nodes, scenario })
+            }
+            _ => None,
+        };
         let dyn_cell = match schema {
             BaselineSchema::Dynamics => {
                 let name = get_field(&fields, scenario_col.expect("dynamics schema"), lineno, "scenario")?;
@@ -276,7 +375,7 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
             _ => None,
         };
         let cell = match schema {
-            BaselineSchema::Point | BaselineSchema::Dynamics => None,
+            BaselineSchema::Point | BaselineSchema::Dynamics | BaselineSchema::Cluster => None,
             BaselineSchema::Sweep => {
                 let tenants: u32 = get_field(&fields, tenants_col.expect("sweep schema"), lineno, "tenants")?
                     .parse()
@@ -328,7 +427,12 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
             }
         }
         let id = get_field(&fields, id_col, lineno, "id")?.clone();
-        if schema == BaselineSchema::Dynamics {
+        if schema == BaselineSchema::Cluster {
+            // Cluster summaries live in their own id namespace.
+            if taxonomy::cluster_summary_by_id(&id).is_none() {
+                bail!("row {lineno}: unknown cluster summary id `{id}` (system `{system}`)");
+            }
+        } else if schema == BaselineSchema::Dynamics {
             // Dynamics summaries live in their own id namespace.
             if taxonomy::dyn_summary_by_id(&id).is_none() {
                 bail!("row {lineno}: unknown dynamics summary id `{id}` (system `{system}`)");
@@ -342,14 +446,18 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
         if !value.is_finite() {
             bail!("row {lineno}: non-finite value for {system}/{id} in a feasible row");
         }
-        if !seen.insert((system.clone(), cell, dyn_cell, id.clone())) {
-            let label = match dyn_cell {
-                Some(d) => dyn_label(d),
-                None => cell_label(cell),
+        if !seen.insert((system.clone(), cell, dyn_cell, cluster_cell, id.clone())) {
+            let label = if let Some(c) = cluster_cell {
+                cluster_label(c)
+            } else {
+                match dyn_cell {
+                    Some(d) => dyn_label(d),
+                    None => cell_label(cell),
+                }
             };
             bail!("row {lineno}: duplicate baseline entry for {system}/{label}/{id}");
         }
-        rows.push(BaselineRow { system, cell, dyn_cell, id, value, line: lineno });
+        rows.push(BaselineRow { system, cell, dyn_cell, cluster_cell, id, value, line: lineno });
     }
     if rows.is_empty() && infeasible.is_empty() {
         bail!("baseline contains no metrics");
@@ -527,6 +635,111 @@ mod tests {
         assert!(format!("{e:#}").contains("duration_ms"), "{e:#}");
         let e = parse_baseline_csv(
             "scenario,duration_ms,window_ms,id,value\nchurn,1000,100,DYN-RECOVERY,1\n",
+            "hami",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("`system` column"), "{e:#}");
+    }
+
+    #[test]
+    fn parses_cluster_summary_baseline() {
+        let csv = "system,policy,nodes,scenario,id,value\n\
+                   hami,first-fit,8,churn,CL-SUCCESS,97.200000\n\
+                   hami,first-fit,8,churn,CL-FRAG,4.100000\n\
+                   native,frag-gradient,16,failover,CL-EVICT,12.000000\n";
+        let b = parse_baseline_csv(csv, "native").unwrap();
+        assert_eq!(b.schema, BaselineSchema::Cluster);
+        assert_eq!(b.rows.len(), 3);
+        assert!(b.infeasible.is_empty());
+        let c = b.rows[0].cluster_cell.unwrap();
+        assert_eq!(c.policy, "first-fit");
+        assert_eq!((c.nodes, c.scenario), (8, "churn"));
+        assert_eq!(b.rows[0].cell, None);
+        assert_eq!(b.rows[0].dyn_cell, None);
+        assert_eq!(b.rows[0].cell_label(), "first-fit@8n/churn");
+        assert_eq!(b.rows[2].system, "native");
+        assert_eq!(b.rows[2].cell_label(), "frag-gradient@16n/failover");
+        assert_eq!(b.rows[2].value, 12.0);
+    }
+
+    #[test]
+    fn rejects_malformed_cluster_rows_naming_the_row() {
+        let hdr = "system,policy,nodes,scenario,id,value\n";
+        // Unknown policy.
+        let e = parse_baseline_csv(&format!("{hdr}hami,random,8,churn,CL-SUCCESS,1\n"), "hami")
+            .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("row 2") && msg.contains("random"), "{msg}");
+        // Bad / out-of-range node counts.
+        let e = parse_baseline_csv(&format!("{hdr}hami,first-fit,many,churn,CL-SUCCESS,1\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("bad nodes"), "{e:#}");
+        let e = parse_baseline_csv(&format!("{hdr}hami,first-fit,0,churn,CL-SUCCESS,1\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("out of range (1..=1024)"), "{e:#}");
+        let e = parse_baseline_csv(&format!("{hdr}hami,first-fit,4096,churn,CL-SUCCESS,1\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("out of range (1..=1024)"), "{e:#}");
+        // Unknown scenario.
+        let e = parse_baseline_csv(&format!("{hdr}hami,first-fit,8,meltdown,CL-SUCCESS,1\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("meltdown"), "{e:#}");
+        // Dynamics and Table-8 ids are not cluster summaries.
+        let e = parse_baseline_csv(&format!("{hdr}hami,first-fit,8,churn,DYN-RECOVERY,1\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("unknown cluster summary id"), "{e:#}");
+        let e = parse_baseline_csv(&format!("{hdr}hami,first-fit,8,churn,OH-001,1\n"), "hami")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("unknown cluster summary id"), "{e:#}");
+        // Duplicate full coordinate names the cluster cell label.
+        let two = format!(
+            "{hdr}hami,first-fit,8,churn,CL-FRAG,1\nhami,first-fit,8,churn,CL-FRAG,2\n"
+        );
+        let e = parse_baseline_csv(&two, "hami").unwrap_err();
+        assert!(format!("{e:#}").contains("first-fit@8n/churn"), "{e:#}");
+        // Same id at a *different* coordinate is not a duplicate.
+        let ok = format!(
+            "{hdr}hami,first-fit,8,churn,CL-FRAG,1\nhami,best-fit,8,churn,CL-FRAG,2\n\
+             hami,first-fit,16,churn,CL-FRAG,3\nhami,first-fit,8,spike,CL-FRAG,4\n"
+        );
+        assert_eq!(parse_baseline_csv(&ok, "hami").unwrap().rows.len(), 4);
+    }
+
+    #[test]
+    fn rejects_mixed_cluster_headers() {
+        // Half a cluster coordinate is no schema at all.
+        let e = parse_baseline_csv(
+            "system,policy,scenario,id,value\nhami,first-fit,churn,CL-SUCCESS,1\n",
+            "hami",
+        )
+        .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("policy") && msg.contains("nodes"), "{msg}");
+        // Cluster columns cannot mix with sweep columns…
+        let e = parse_baseline_csv(
+            "system,policy,nodes,scenario,tenants,quota_pct,id,value\n\
+             hami,first-fit,8,churn,2,50,CL-SUCCESS,1\n",
+            "hami",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("mixed-schema"), "{e:#}");
+        // …nor with dynamics columns.
+        let e = parse_baseline_csv(
+            "system,policy,nodes,scenario,duration_ms,window_ms,id,value\n\
+             hami,first-fit,8,churn,1000,100,CL-SUCCESS,1\n",
+            "hami",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("mixed-schema"), "{e:#}");
+        // The schema requires scenario and system columns.
+        let e = parse_baseline_csv(
+            "system,policy,nodes,id,value\nhami,first-fit,8,CL-SUCCESS,1\n",
+            "hami",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("`scenario` column"), "{e:#}");
+        let e = parse_baseline_csv(
+            "policy,nodes,scenario,id,value\nfirst-fit,8,churn,CL-SUCCESS,1\n",
             "hami",
         )
         .unwrap_err();

@@ -18,13 +18,17 @@
 //! tree compare clean against its own fresh baseline at any job count.
 
 use crate::anyhow::{bail, Result};
+use crate::cluster;
 use crate::coordinator::executor::{self, ExecutionStats, Task};
 use crate::coordinator::sweep;
 use crate::dynsim::{self, ScenarioSpec};
 use crate::metrics::{taxonomy, Direction, RunConfig};
-use crate::util::rng::{dynamics_seed, task_seed};
+use crate::util::rng::{cluster_seed, dynamics_seed, task_seed};
 
-use super::baseline::{cell_label, dyn_label, Baseline, BaselineSchema, CellCoord, DynCoord};
+use super::baseline::{
+    cell_label, cluster_label, dyn_label, Baseline, BaselineSchema, CellCoord, ClusterCoord,
+    DynCoord,
+};
 
 /// Percent by which `cur` is worse than `base` in the metric's own
 /// direction (positive = regressed; 0 = unchanged or improved).
@@ -74,6 +78,8 @@ pub struct CellDelta {
     pub cell: Option<CellCoord>,
     /// Dynamics cell coordinate; `Some` exactly for dynamics-schema rows.
     pub dyn_cell: Option<DynCoord>,
+    /// Cluster cell coordinate; `Some` exactly for cluster-schema rows.
+    pub cluster_cell: Option<ClusterCoord>,
     pub id: String,
     pub baseline: f64,
     pub current: f64,
@@ -86,8 +92,12 @@ pub struct CellDelta {
 
 impl CellDelta {
     /// Short human label for the cell coordinate (`4t@25%` /
-    /// `4t@25%/8g/nvlink` / `churn@1000ms/100ms` / `point`).
+    /// `4t@25%/8g/nvlink` / `churn@1000ms/100ms` / `first-fit@8n/churn` /
+    /// `point`).
     pub fn cell_label(&self) -> String {
+        if let Some(c) = self.cluster_cell {
+            return cluster_label(c);
+        }
         match self.dyn_cell {
             Some(d) => dyn_label(d),
             None => cell_label(self.cell),
@@ -165,6 +175,11 @@ pub fn run_regression(
         // timeline once, then every row compares against that run.
         return run_dynamics_regression(cfg, baseline, threshold_percent);
     }
+    if baseline.schema == BaselineSchema::Cluster {
+        // Likewise for cluster summaries: one fleet replay per distinct
+        // (system, policy, nodes, scenario) coordinate.
+        return run_cluster_regression(cfg, baseline, threshold_percent);
+    }
     let mut pairs: Vec<(Task, RunConfig)> = Vec::with_capacity(baseline.rows.len());
     for row in &baseline.rows {
         // Parse validated these; re-check so an engine caller constructing
@@ -238,6 +253,7 @@ pub fn run_regression(
             system: row.system.clone(),
             cell: row.cell,
             dyn_cell: None,
+            cluster_cell: None,
             id: row.id.clone(),
             baseline: row.value,
             current: result.value,
@@ -342,6 +358,7 @@ fn run_dynamics_regression(
             system: row.system.clone(),
             cell: None,
             dyn_cell: Some(coord),
+            cluster_cell: None,
             id: row.id.clone(),
             baseline: row.value,
             current,
@@ -353,6 +370,134 @@ fn run_dynamics_regression(
         threshold_percent,
         seed: cfg.seed,
         schema: BaselineSchema::Dynamics,
+        skipped_infeasible: 0,
+        cells,
+        stats,
+    })
+}
+
+/// The cluster-schema re-run: replay each distinct baseline fleet cell
+/// once — sharded as (system, coordinate) tasks across `cfg.jobs`
+/// executor workers, with the producing run's exact seed derivation
+/// (`task_seed(cluster_seed(seed, policy, nodes, scenario), system,
+/// scenario)`, see [`crate::cluster::ClusterSpec::run_seed`]) — and
+/// compare every summary row direction-aware against its recorded value.
+///
+/// The schema key carries no arrival count: replays always run at
+/// [`cluster::DEFAULT_ARRIVALS`], which — like the run seed — is a
+/// replay parameter, not a cell coordinate. Baselines produced with a
+/// non-default `--arrivals` will not compare clean (`gvbench cluster`
+/// warns when writing one).
+fn run_cluster_regression(
+    cfg: &RunConfig,
+    baseline: &Baseline,
+    threshold_percent: f64,
+) -> Result<RegressOutcome> {
+    // Distinct (system, coordinate) fleet cells, first-appearance order.
+    let mut groups: Vec<(String, ClusterCoord)> = Vec::new();
+    for row in &baseline.rows {
+        // Parse validated these; re-check so hand-built rows error with
+        // the row named instead of panicking mid-replay.
+        if taxonomy::cluster_summary_by_id(&row.id).is_none() {
+            bail!(
+                "row {}: unknown cluster summary id `{}` (system `{}`)",
+                row.line,
+                row.id,
+                row.system
+            );
+        }
+        if crate::virt::by_name(&row.system).is_none() {
+            bail!("row {}: unknown system `{}`", row.line, row.system);
+        }
+        let coord = match row.cluster_cell {
+            Some(c) => c,
+            None => bail!(
+                "row {}: cluster-schema row for {}/{} has no cell coordinate",
+                row.line,
+                row.system,
+                row.id
+            ),
+        };
+        if cluster::policy::by_name(coord.policy).is_none() {
+            bail!(
+                "row {}: unknown placement policy `{}` (system `{}`)",
+                row.line,
+                coord.policy,
+                row.system
+            );
+        }
+        let key = (row.system.clone(), coord);
+        if !groups.contains(&key) {
+            groups.push(key);
+        }
+    }
+    let tasks: Vec<Task> = groups
+        .iter()
+        .map(|(system, coord)| Task { system: system.clone(), metric_id: coord.scenario })
+        .collect();
+    let (slots, stats) = executor::execute_indexed_with(&tasks, cfg.jobs, |i, _task| {
+        let (system, coord) = &groups[i];
+        let policy = cluster::policy::by_name(coord.policy)?;
+        let mut run_cfg = cfg.clone();
+        run_cfg.system = system.clone();
+        run_cfg.seed = task_seed(
+            cluster_seed(cfg.seed, coord.policy, coord.nodes, coord.scenario),
+            system,
+            coord.scenario,
+        );
+        Some(cluster::replay_fleet(
+            &run_cfg,
+            policy,
+            coord.nodes,
+            coord.scenario,
+            cluster::DEFAULT_ARRIVALS,
+        ))
+    });
+    let mut runs = Vec::with_capacity(groups.len());
+    for (slot, (system, coord)) in slots.into_iter().zip(&groups) {
+        match slot {
+            Some(run) => runs.push(run),
+            None => bail!(
+                "fleet cell `{}` on `{system}` produced no replay on re-run",
+                cluster_label(*coord)
+            ),
+        }
+    }
+    let mut cells: Vec<CellDelta> = Vec::with_capacity(baseline.rows.len());
+    for row in &baseline.rows {
+        let coord = row.cluster_cell.expect("validated above");
+        let idx = groups
+            .iter()
+            .position(|(s, c)| *s == row.system && *c == coord)
+            .expect("every row belongs to a group");
+        let current = match runs[idx].summary_value(&row.id) {
+            Some(v) => v,
+            None => bail!(
+                "row {}: summary `{}` missing from the re-run of {}/{}",
+                row.line,
+                row.id,
+                row.system,
+                cluster_label(coord)
+            ),
+        };
+        let d = taxonomy::cluster_summary_by_id(&row.id).expect("validated above");
+        let worse = worse_percent(d.direction, row.value, current);
+        cells.push(CellDelta {
+            system: row.system.clone(),
+            cell: None,
+            dyn_cell: None,
+            cluster_cell: Some(coord),
+            id: row.id.clone(),
+            baseline: row.value,
+            current,
+            worse_percent: worse,
+            regressed: worse > threshold_percent,
+        });
+    }
+    Ok(RegressOutcome {
+        threshold_percent,
+        seed: cfg.seed,
+        schema: BaselineSchema::Cluster,
         skipped_infeasible: 0,
         cells,
         stats,
@@ -373,6 +518,7 @@ mod tests {
             system: system.to_string(),
             cell: None,
             dyn_cell: None,
+            cluster_cell: None,
             id: id.to_string(),
             value,
             line: 2,
@@ -519,11 +665,79 @@ mod tests {
     }
 
     #[test]
+    fn cluster_baseline_round_trips_clean_and_detects_injection() {
+        use crate::cluster::{run_cluster, ClusterSpec, DEFAULT_ARRIVALS};
+        use crate::report::cluster::render_summary_csv;
+
+        // Produce a small cluster summary exactly as `gvbench cluster
+        // --summary-out` would (regress replays pin the arrival count to
+        // DEFAULT_ARRIVALS, so the surface must be produced at it too)…
+        let cfg = RunConfig::quick("native");
+        let spec = ClusterSpec {
+            systems: vec!["native".into()],
+            policies: vec!["first-fit", "frag-gradient"],
+            node_counts: vec![2],
+            scenarios: vec!["churn"],
+            arrivals: DEFAULT_ARRIVALS,
+        };
+        let surface = run_cluster(&cfg, &spec, 1);
+        let csv = render_summary_csv(&surface);
+        let baseline = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
+        assert_eq!(baseline.schema, BaselineSchema::Cluster);
+        // …then the re-run (at a different job count) compares clean.
+        let mut cfg8 = cfg.clone();
+        cfg8.jobs = 8;
+        let out = run_regression(&cfg8, &baseline, 0.0001).unwrap();
+        assert_eq!(out.schema, BaselineSchema::Cluster);
+        assert_eq!(out.checked(), 10); // 2 cells × 5 summaries
+        assert!(out.passed(), "{:?}", out.regressions());
+        // An injected per-summary regression is detected and named with
+        // its full (system, policy, nodes, scenario) coordinate.
+        let mut rows = baseline.rows.clone();
+        let idx = rows
+            .iter()
+            .position(|r| {
+                r.id == "CL-SUCCESS" && r.cluster_cell.unwrap().policy == "first-fit"
+            })
+            .unwrap();
+        rows[idx].value *= 2.0; // higher-better: a doubled baseline = regression
+        let perturbed =
+            Baseline { schema: BaselineSchema::Cluster, rows, infeasible: Vec::new() };
+        let out = run_regression(&cfg8, &perturbed, 5.0).unwrap();
+        let regs = out.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].system, "native");
+        assert_eq!(regs[0].id, "CL-SUCCESS");
+        assert_eq!(regs[0].cell_label(), "first-fit@2n/churn");
+    }
+
+    #[test]
+    fn hand_built_cluster_rows_error_cleanly() {
+        let cfg = RunConfig::quick("native");
+        let mut r = row("hami", "CL-SUCCESS", 1.0);
+        // Cluster id without a cell coordinate.
+        let b = Baseline {
+            schema: BaselineSchema::Cluster,
+            rows: vec![r.clone()],
+            infeasible: Vec::new(),
+        };
+        let e = run_regression(&cfg, &b, 5.0).unwrap_err();
+        assert!(format!("{e:#}").contains("no cell coordinate"), "{e:#}");
+        // Table-8 id under the cluster schema.
+        r.id = "OH-001".into();
+        r.cluster_cell = Some(ClusterCoord { policy: "first-fit", nodes: 2, scenario: "steady" });
+        let b = Baseline { schema: BaselineSchema::Cluster, rows: vec![r], infeasible: Vec::new() };
+        let e = run_regression(&cfg, &b, 5.0).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown cluster summary id"), "{e:#}");
+    }
+
+    #[test]
     fn worst_per_system_picks_the_largest_regression() {
         let delta = |system: &str, id: &str, worse: f64| CellDelta {
             system: system.to_string(),
             cell: Some(CellCoord { tenants: 4, quota_pct: 25, topo: None }),
             dyn_cell: None,
+            cluster_cell: None,
             id: id.to_string(),
             baseline: 1.0,
             current: 2.0,

@@ -30,7 +30,15 @@
 //!   [`crate::metrics::taxonomy::DYN_SUMMARY`] ids); each distinct
 //!   timeline replays once through [`crate::dynsim`] with the producing
 //!   run's exact `task_seed(dynamics_seed(..), system, scenario)`
-//!   derivation, then every summary row compares direction-aware.
+//!   derivation, then every summary row compares direction-aware, and
+//! - **cluster summaries** — the fleet-placement surface `gvbench
+//!   cluster --summary-out` writes (rows keyed by `(system, policy,
+//!   nodes, scenario, id)` with
+//!   [`crate::metrics::taxonomy::CLUSTER_SUMMARY`] ids); each distinct
+//!   fleet cell replays once through [`crate::cluster`] at
+//!   [`crate::cluster::DEFAULT_ARRIVALS`] with the producing run's exact
+//!   `task_seed(cluster_seed(..), system, scenario)` derivation, then
+//!   every summary row compares direction-aware.
 //!
 //! Layout:
 //!
@@ -59,6 +67,8 @@ pub mod baseline;
 pub mod engine;
 pub mod report;
 
-pub use baseline::{parse_baseline_csv, Baseline, BaselineRow, BaselineSchema, CellCoord, DynCoord};
+pub use baseline::{
+    parse_baseline_csv, Baseline, BaselineRow, BaselineSchema, CellCoord, ClusterCoord, DynCoord,
+};
 pub use engine::{run_regression, worse_percent, CellDelta, RegressOutcome};
 pub use report::{render_json, render_markdown};

@@ -29,13 +29,22 @@ fn delta_obj(c: &CellDelta) -> Obj {
             .field("gpu_count", null())
             .field("link", null()),
     };
-    // Dynamics rows carry the scenario coordinate instead of a sweep cell.
+    // Dynamics rows carry the scenario coordinate instead of a sweep
+    // cell; cluster rows share the scenario axis and add the fleet
+    // coordinate (policy, nodes).
     o = match c.dyn_cell {
         Some(d) => o
             .str("scenario", d.scenario)
             .field("duration_ms", d.duration_ms.to_string())
             .field("window_ms", d.window_ms.to_string()),
-        None => o.field("scenario", null()),
+        None => match c.cluster_cell {
+            Some(cl) => o.str("scenario", cl.scenario),
+            None => o.field("scenario", null()),
+        },
+    };
+    o = match c.cluster_cell {
+        Some(cl) => o.str("policy", cl.policy).field("nodes", cl.nodes.to_string()),
+        None => o.field("policy", null()).field("nodes", null()),
     };
     o.str("id", &c.id)
         .num("baseline", c.baseline)
@@ -47,8 +56,12 @@ fn delta_obj(c: &CellDelta) -> Obj {
 /// Grouping label for the per-link-kind breakdown: the cell's link kind
 /// for extended sweep rows, `default-node` for PR-3-era rows (which
 /// re-ran on the default 4-GPU PCIe node), `dynamics` for
-/// scenario-timeline rows and `point` for point rows.
+/// scenario-timeline rows, `cluster` for fleet-placement rows and
+/// `point` for point rows.
 fn link_group(c: &CellDelta) -> &'static str {
+    if c.cluster_cell.is_some() {
+        return "cluster";
+    }
     if c.dyn_cell.is_some() {
         return "dynamics";
     }
@@ -233,6 +246,7 @@ mod tests {
             system: system.to_string(),
             cell: cell.map(|(tenants, quota_pct)| CellCoord { tenants, quota_pct, topo: None }),
             dyn_cell: None,
+            cluster_cell: None,
             id: id.to_string(),
             baseline: 10.0,
             current: 10.0 * (1.0 + worse / 100.0),
@@ -331,6 +345,27 @@ mod tests {
         assert!(j[idx..].contains("\"link\": \"dynamics\""), "{j}");
         let m = render_markdown(&out, "dyn_summary.csv");
         assert!(m.contains("| hami | churn@1000ms/100ms | DYN-P99-STEADY |"), "{m}");
+    }
+
+    #[test]
+    fn cluster_rows_carry_fleet_coordinates() {
+        use crate::regress::baseline::ClusterCoord;
+        let mut d = delta("hami", None, "CL-SUCCESS", 22.0);
+        d.cluster_cell = Some(ClusterCoord { policy: "frag-gradient", nodes: 8, scenario: "churn" });
+        let mut out = outcome(vec![d, delta("hami", Some((4, 25)), "OH-001", 0.0)]);
+        out.schema = BaselineSchema::Cluster;
+        let j = render_json(&out, "cluster_summary.csv");
+        assert!(j.contains("\"schema\": \"cluster\""), "{j}");
+        assert!(j.contains("\"policy\": \"frag-gradient\""), "{j}");
+        assert!(j.contains("\"nodes\": 8"), "{j}");
+        assert!(j.contains("\"scenario\": \"churn\""), "{j}");
+        assert!(j.contains("\"policy\": null"), "{j}");
+        assert!(j.contains("\"nodes\": null"), "{j}");
+        // The by-link breakdown groups fleet rows under `cluster`.
+        let idx = j.find("\"by_link\"").unwrap();
+        assert!(j[idx..].contains("\"link\": \"cluster\""), "{j}");
+        let m = render_markdown(&out, "cluster_summary.csv");
+        assert!(m.contains("| hami | frag-gradient@8n/churn | CL-SUCCESS |"), "{m}");
     }
 
     #[test]

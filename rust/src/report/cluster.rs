@@ -1,0 +1,238 @@
+//! Cluster-surface reporting: the fleet replays from [`crate::cluster`],
+//! rendered as long-format CSV, JSON or a TXT summary per cell, plus the
+//! **summary CSV** — the regress-compatible per-cell surface (`gvbench
+//! cluster --summary-out`) the regression engine gates like sweep cells.
+//!
+//! The fleet CSV is long format: one row per (system × policy × nodes ×
+//! scenario × node), carrying each node's final utilization. It carries
+//! no host timings, so identical grids render byte-identical CSV at any
+//! `--jobs` count (`rust/tests/cluster_determinism.rs`). The JSON adds
+//! the executor timing object as metadata.
+
+use crate::cluster::{ClusterSurface, FleetRun};
+
+use super::json::{array, render_execution, Obj};
+use super::Format;
+
+/// Column header of the long-format per-node fleet CSV.
+pub const CSV_HEADER: &str = "system,policy,nodes,scenario,node,alive,mem_util,sm_util,tenants";
+
+/// Column header of the regress-compatible summary CSV (one row per
+/// system × policy × nodes × scenario × summary statistic; the `cluster`
+/// baseline schema of [`crate::regress`]).
+pub const SUMMARY_CSV_HEADER: &str = "system,policy,nodes,scenario,id,value";
+
+/// Render the fleet surface in the requested format.
+pub fn render(surface: &ClusterSurface, format: Format) -> String {
+    match format {
+        Format::Json => render_json(surface),
+        Format::Csv => render_csv(surface),
+        Format::Txt => render_txt(surface),
+    }
+}
+
+/// Long-format per-node fleet CSV: every value finite and pure in the
+/// cell coordinates.
+pub fn render_csv(surface: &ClusterSurface) -> String {
+    let mut out = String::from(CSV_HEADER);
+    out.push('\n');
+    for run in &surface.runs {
+        let prefix = format!("{},{},{},{}", run.system, run.policy, run.nodes, run.scenario);
+        for (i, n) in run.node_stats.iter().enumerate() {
+            out.push_str(&format!(
+                "{prefix},{i},{},{:.6},{:.6},{}\n",
+                n.alive,
+                n.mem_util(),
+                n.sm_util(),
+                n.tenants
+            ));
+        }
+    }
+    out
+}
+
+/// The regress-compatible summary CSV: every value finite, keyed by the
+/// full `(system, policy, nodes, scenario, id)` coordinate.
+pub fn render_summary_csv(surface: &ClusterSurface) -> String {
+    let mut out = String::from(SUMMARY_CSV_HEADER);
+    out.push('\n');
+    for run in &surface.runs {
+        for (id, value) in &run.summary {
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.6}\n",
+                run.system, run.policy, run.nodes, run.scenario, id, value
+            ));
+        }
+    }
+    out
+}
+
+fn run_obj(run: &FleetRun) -> Obj {
+    let summary: Vec<String> = run
+        .summary
+        .iter()
+        .map(|(id, v)| Obj::new().str("id", id).num("value", *v).build())
+        .collect();
+    let nodes: Vec<String> = run
+        .node_stats
+        .iter()
+        .enumerate()
+        .map(|(i, n)| {
+            Obj::new()
+                .field("node", i.to_string())
+                .bool("alive", n.alive)
+                .num("mem_util", n.mem_util())
+                .num("sm_util", n.sm_util())
+                .field("tenants", n.tenants.to_string())
+                .build()
+        })
+        .collect();
+    Obj::new()
+        .str("system", &run.system)
+        .str("policy", run.policy)
+        .field("nodes", run.nodes.to_string())
+        .str("scenario", run.scenario)
+        .field("arrivals", run.arrivals.to_string())
+        .field("placed", run.placed.to_string())
+        .field("migrations", run.migrations.to_string())
+        .field("evictions", run.evictions.to_string())
+        .field("summary", array(summary))
+        .field("node_stats", array(nodes))
+}
+
+/// The full surface plus executor timings, in the Listing-7 JSON style.
+pub fn render_json(surface: &ClusterSurface) -> String {
+    let runs: Vec<String> = surface.runs.iter().map(|r| run_obj(r).build()).collect();
+    Obj::new()
+        .str("benchmark_version", crate::VERSION)
+        .field("seed", surface.seed.to_string())
+        .field("arrivals", surface.arrivals.to_string())
+        .field("runs", array(runs))
+        .field("execution", render_execution(&surface.stats))
+        .build()
+}
+
+/// Human-readable summary: one line per (system, policy, nodes,
+/// scenario) cell with the `CL-*` statistics.
+pub fn render_txt(surface: &ClusterSurface) -> String {
+    let mut out = String::new();
+    out.push_str("GPU-Virt-Bench — cluster placement surface\n");
+    out.push_str(&format!(
+        "  seed {}, {} arrivals per replay, {} fleet cell(s)\n\n",
+        surface.seed,
+        surface.arrivals,
+        surface.runs.len()
+    ));
+    out.push_str(&format!(
+        "{:<12} {:<14} {:>5} {:<10} {:>9} {:>8} {:>8} {:>9} {:>8}\n",
+        "System", "Policy", "Nodes", "Scenario", "Success", "Frag", "Imbal", "Migrate", "Evict"
+    ));
+    out.push_str(&format!("{}\n", "-".repeat(92)));
+    for run in &surface.runs {
+        let get = |id: &str| run.summary_value(id).unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "{:<12} {:<14} {:>5} {:<10} {:>8.1}% {:>7.1}% {:>7.1}% {:>9.0} {:>8.0}\n",
+            run.system,
+            run.policy,
+            run.nodes,
+            run.scenario,
+            get("CL-SUCCESS"),
+            get("CL-FRAG"),
+            get("CL-IMBAL"),
+            get("CL-MIGRATE"),
+            get("CL-EVICT"),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeState;
+    use crate::coordinator::executor::ExecutionStats;
+
+    fn run(system: &str, policy: &'static str) -> FleetRun {
+        let gib = 1u64 << 30;
+        let mut dead = NodeState::new(160 * gib, 4.0);
+        dead.alive = false;
+        let mut busy = NodeState::new(160 * gib, 4.0);
+        busy.mem_used = 80 * gib;
+        busy.sm_used = 2.0;
+        busy.tenants = 10;
+        FleetRun {
+            system: system.to_string(),
+            policy,
+            nodes: 2,
+            scenario: "churn",
+            arrivals: 100,
+            placed: 88,
+            migrations: 3,
+            evictions: 1,
+            node_stats: vec![busy, dead],
+            summary: vec![
+                ("CL-SUCCESS", 88.0),
+                ("CL-FRAG", 12.5),
+                ("CL-IMBAL", 40.0),
+                ("CL-MIGRATE", 3.0),
+                ("CL-EVICT", 1.0),
+            ],
+        }
+    }
+
+    fn surface() -> ClusterSurface {
+        ClusterSurface {
+            seed: 42,
+            arrivals: 100,
+            runs: vec![run("native", "first-fit"), run("hami", "frag-gradient")],
+            stats: ExecutionStats::default(),
+        }
+    }
+
+    #[test]
+    fn csv_long_format_rows() {
+        let csv = render_csv(&surface());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], CSV_HEADER);
+        // 2 runs × 2 nodes.
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[1], "native,first-fit,2,churn,0,true,0.500000,0.500000,10");
+        assert_eq!(lines[2], "native,first-fit,2,churn,1,false,0.000000,0.000000,0");
+        assert!(lines[3].starts_with("hami,frag-gradient,2,churn,0,"));
+    }
+
+    #[test]
+    fn summary_csv_is_regress_parseable() {
+        let csv = render_summary_csv(&surface());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], SUMMARY_CSV_HEADER);
+        assert_eq!(lines.len(), 11); // 2 runs × 5 summary stats
+        assert_eq!(lines[1], "native,first-fit,2,churn,CL-SUCCESS,88.000000");
+        let b = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
+        assert_eq!(b.schema, crate::regress::BaselineSchema::Cluster);
+        assert_eq!(b.rows.len(), 10);
+        let c = b.rows[0].cluster_cell.as_ref().unwrap();
+        assert_eq!(c.policy, "first-fit");
+        assert_eq!((c.nodes, c.scenario), (2, "churn"));
+        assert_eq!(b.rows[0].cell_label(), "first-fit@2n/churn");
+    }
+
+    #[test]
+    fn json_carries_runs_nodes_and_summary() {
+        let j = render_json(&surface());
+        assert!(j.contains("\"runs\""), "{j}");
+        assert!(j.contains("\"policy\": \"frag-gradient\""), "{j}");
+        assert!(j.contains("\"id\": \"CL-SUCCESS\""), "{j}");
+        assert!(j.contains("\"alive\": false"), "{j}");
+        assert!(j.contains("\"mem_util\": 0.5"), "{j}");
+        assert!(j.contains("\"execution\""), "{j}");
+    }
+
+    #[test]
+    fn txt_summarises_cells() {
+        let t = render_txt(&surface());
+        assert!(t.contains("cluster placement surface"), "{t}");
+        assert!(t.contains("first-fit"), "{t}");
+        assert!(t.contains("88.0%"), "{t}");
+    }
+}

@@ -5,6 +5,7 @@
 //! encoder (string escaping, finite-number handling) sufficient for the
 //! output schema.
 
+pub mod cluster;
 pub mod csv;
 pub mod dynamics;
 pub mod json;

@@ -1,8 +1,19 @@
 //! Property-testing mini-framework (proptest substitute for the offline
-//! build): seeded generators + a runner that reports the failing seed and
-//! attempts input shrinking for integer-vector cases.
+//! build): seeded generators + runners that report the failing seed and
+//! shrink failing inputs toward a minimal counterexample.
 //!
-//! Used by `rust/tests/prop_*.rs` to check coordinator/substrate
+//! Layout:
+//!
+//! - [`check`] / [`check_with_shrink`] — the runners; the latter takes a
+//!   candidate generator (see [`shrink`]) and greedily walks the failing
+//!   input down before panicking.
+//! - [`shrink`] — reusable candidate generators: sub-sequence drops for
+//!   vectors, halvings for counters, axis drops for cluster grid specs.
+//! - [`gens`] — value generators: scalar helpers plus the cluster-domain
+//!   generators (tenant demands, fleet churn timelines, whole
+//!   [`crate::cluster::ClusterSpec`] grids).
+//!
+//! Used by `rust/tests/prop_*.rs` to check coordinator/substrate/fleet
 //! invariants across randomized inputs.
 
 use crate::util::Rng;
@@ -41,6 +52,52 @@ pub fn check<T: std::fmt::Debug, G: Gen<T>, P: Fn(&T) -> bool>(
     }
 }
 
+/// Like [`check`] but, on failure, greedily shrinks the failing input
+/// through `candidates` — a generator of strictly simpler variants (see
+/// [`shrink`]) — so the panic message carries a minimal counterexample.
+pub fn check_with_shrink<T, G, P, S>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: G,
+    candidates: S,
+    prop: P,
+) where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> bool,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_with(&input, &candidates, &prop);
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed})\n  shrunk input: {minimal:?}"
+            );
+        }
+    }
+}
+
+/// Greedy candidate-driven shrink: repeatedly move to the first proposed
+/// candidate that still fails `prop`. Step-bounded, so candidate
+/// generators need not be strictly decreasing.
+pub fn shrink_with<T: Clone, P: Fn(&T) -> bool, S: Fn(&T) -> Vec<T>>(
+    input: &T,
+    candidates: &S,
+    prop: &P,
+) -> T {
+    let mut cur = input.clone();
+    for _ in 0..1000 {
+        match candidates(&cur).into_iter().find(|c| !prop(c)) {
+            Some(next) => cur = next,
+            None => break,
+        }
+    }
+    cur
+}
+
 /// Like [`check`] but shrinks a failing `Vec<u64>` input by halving and
 /// element dropping before reporting.
 pub fn check_vec_u64<P: Fn(&[u64]) -> bool>(
@@ -68,7 +125,7 @@ pub fn check_vec_u64<P: Fn(&[u64]) -> bool>(
 
 /// Greedy shrink: repeatedly try removing chunks while the property still
 /// fails; return the smallest failing input found.
-pub fn shrink_vec<P: Fn(&[u64]) -> bool>(input: &[u64], prop: &P) -> Vec<u64> {
+pub fn shrink_vec<T: Clone, P: Fn(&[T]) -> bool>(input: &[T], prop: &P) -> Vec<T> {
     let mut cur = input.to_vec();
     let mut chunk = (cur.len() / 2).max(1);
     while chunk >= 1 && !cur.is_empty() {
@@ -94,9 +151,95 @@ pub fn shrink_vec<P: Fn(&[u64]) -> bool>(input: &[u64], prop: &P) -> Vec<u64> {
     cur
 }
 
+/// Candidate generators for [`check_with_shrink`]: each proposes
+/// strictly simpler variants of a failing input, tried in order.
+pub mod shrink {
+    use crate::cluster::ClusterSpec;
+
+    /// Sub-sequence candidates for a vector: the back half, the front
+    /// half, then every single-element drop.
+    pub fn vec_drops<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[v.len() / 2..].to_vec());
+            out.push(v[..v.len() / 2].to_vec());
+        }
+        for i in 0..v.len() {
+            let mut c = v.to_vec();
+            c.remove(i);
+            out.push(c);
+        }
+        out
+    }
+
+    /// Integer candidates: 1, then repeated halvings toward 1 (counters
+    /// like node/arrival counts stay in their valid >= 1 ranges).
+    pub fn halves(n: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        if n > 1 {
+            out.push(1);
+        }
+        let mut h = n / 2;
+        while h > 1 {
+            out.push(h);
+            h /= 2;
+        }
+        out
+    }
+
+    /// Cluster-grid candidates: drop one axis value at a time (keeping
+    /// every axis non-empty) and halve the node/arrival counters — the
+    /// shrinker paired with [`super::gens::cluster_spec`].
+    pub fn cluster_spec(spec: &ClusterSpec) -> Vec<ClusterSpec> {
+        let mut out = Vec::new();
+        for a in halves(spec.arrivals) {
+            let mut c = spec.clone();
+            c.arrivals = a;
+            out.push(c);
+        }
+        if spec.systems.len() > 1 {
+            for i in 0..spec.systems.len() {
+                let mut c = spec.clone();
+                c.systems.remove(i);
+                out.push(c);
+            }
+        }
+        if spec.policies.len() > 1 {
+            for i in 0..spec.policies.len() {
+                let mut c = spec.clone();
+                c.policies.remove(i);
+                out.push(c);
+            }
+        }
+        if spec.scenarios.len() > 1 {
+            for i in 0..spec.scenarios.len() {
+                let mut c = spec.clone();
+                c.scenarios.remove(i);
+                out.push(c);
+            }
+        }
+        if spec.node_counts.len() > 1 {
+            for i in 0..spec.node_counts.len() {
+                let mut c = spec.clone();
+                c.node_counts.remove(i);
+                out.push(c);
+            }
+        } else if let Some(&n) = spec.node_counts.first() {
+            for h in halves(n) {
+                let mut c = spec.clone();
+                c.node_counts = vec![h];
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
 /// Common generators.
 pub mod gens {
+    use crate::cluster::{self, ClusterSpec, Demand, FleetEvent};
     use crate::util::Rng;
+    use crate::virt::ALL_SYSTEMS;
 
     /// Allocation sizes: log-uniform across bytes..GiB.
     pub fn alloc_size(rng: &mut Rng) -> u64 {
@@ -112,6 +255,52 @@ pub mod gens {
     /// A small tenant count 1..=8.
     pub fn tenants(rng: &mut Rng) -> u32 {
         rng.range(1, 9) as u32
+    }
+
+    /// A canonical dynsim scenario preset key.
+    pub fn scenario(rng: &mut Rng) -> &'static str {
+        *rng.choose(&crate::dynsim::PRESETS)
+    }
+
+    /// A canonical placement-policy key.
+    pub fn policy(rng: &mut Rng) -> &'static str {
+        *rng.choose(&cluster::POLICIES)
+    }
+
+    /// One tenant fleet demand: the cluster layer's own arrival
+    /// distribution (1–16 GiB memory, 0.05–0.25 GPU SM share).
+    pub fn demand(rng: &mut Rng) -> Demand {
+        cluster::sample_demand(rng)
+    }
+
+    /// A fleet churn timeline: a random scenario preset shaped through
+    /// the cluster layer's arrival model, up to `max_arrivals` arrivals
+    /// on a random 1..=16-node fleet.
+    pub fn fleet_timeline(rng: &mut Rng, max_arrivals: u32) -> Vec<FleetEvent> {
+        let sc = scenario(rng);
+        let nodes = rng.range(1, 17) as u32;
+        let arrivals = rng.range(1, max_arrivals.max(1) as usize + 1) as u32;
+        cluster::arrival_stream(sc, arrivals, nodes, rng)
+    }
+
+    /// A valid random cluster grid: non-empty subsets of every axis,
+    /// 1..=16 nodes, `1..=max_arrivals` arrivals. Shrinks through
+    /// [`super::shrink::cluster_spec`].
+    pub fn cluster_spec(rng: &mut Rng, max_arrivals: u32) -> ClusterSpec {
+        fn subset<T: Copy>(rng: &mut Rng, pool: &[T]) -> Vec<T> {
+            let mut picked: Vec<T> = pool.iter().copied().filter(|_| rng.chance(0.5)).collect();
+            if picked.is_empty() {
+                picked.push(*rng.choose(pool));
+            }
+            picked
+        }
+        ClusterSpec {
+            systems: subset(rng, &ALL_SYSTEMS).into_iter().map(str::to_string).collect(),
+            policies: subset(rng, &cluster::POLICIES),
+            node_counts: subset(rng, &[1u32, 2, 4, 8, 16]),
+            scenarios: subset(rng, &crate::dynsim::PRESETS),
+            arrivals: rng.range(1, max_arrivals.max(1) as usize + 1) as u32,
+        }
     }
 }
 
@@ -147,6 +336,95 @@ mod tests {
         let shrunk = shrink_vec(&input, &prop);
         assert!(!prop(&shrunk));
         assert!(shrunk.len() <= input.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input: [7]")]
+    fn check_with_shrink_reports_minimal_vector() {
+        check_with_shrink(
+            "no-sevens",
+            3,
+            16,
+            |r: &mut Rng| {
+                // Exactly one 7 amid 0..=6 noise, at a random position.
+                let mut v: Vec<u64> = (0..r.range(0, 19)).map(|_| r.below(7)).collect();
+                let at = r.range(0, v.len() + 1);
+                v.insert(at, 7);
+                v
+            },
+            |v| shrink::vec_drops(v),
+            |v| !v.contains(&7),
+        );
+    }
+
+    #[test]
+    fn shrink_with_walks_candidates_to_a_fixpoint() {
+        // Property: "n < 3" — fails for large n; halvings bottom out at
+        // the smallest still-failing value reachable through /2 steps.
+        let min = shrink_with(&1000u32, &|&n: &u32| shrink::halves(n), &|&n: &u32| n < 3);
+        assert!(min < 1000 && min >= 3, "{min}");
+        assert!(shrink::halves(min).iter().all(|&c| c < 3), "{min} not minimal");
+    }
+
+    #[test]
+    fn halves_stay_in_valid_counter_range() {
+        assert!(shrink::halves(1).is_empty());
+        for n in [2u32, 7, 1000] {
+            let cs = shrink::halves(n);
+            assert!(!cs.is_empty());
+            assert!(cs.iter().all(|&c| c >= 1 && c < n), "{cs:?}");
+        }
+    }
+
+    #[test]
+    fn cluster_spec_gen_and_shrinker_stay_valid() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let spec = gens::cluster_spec(&mut rng, 64);
+            assert!(!spec.systems.is_empty() && !spec.policies.is_empty());
+            assert!(!spec.node_counts.is_empty() && !spec.scenarios.is_empty());
+            assert!((1..=64).contains(&spec.arrivals));
+            for c in shrink::cluster_spec(&spec) {
+                // Every candidate is itself a valid, strictly simpler grid.
+                assert!(!c.systems.is_empty() && !c.policies.is_empty());
+                assert!(!c.node_counts.is_empty() && !c.scenarios.is_empty());
+                assert!(c.arrivals >= 1);
+                let size = |s: &crate::cluster::ClusterSpec| {
+                    s.systems.len() * s.policies.len() * s.node_counts.len() * s.scenarios.len()
+                };
+                assert!(
+                    size(&c) < size(&spec)
+                        || c.arrivals < spec.arrivals
+                        || c.node_counts < spec.node_counts,
+                    "candidate {c:?} no simpler than {spec:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_timeline_gen_arrivals_bounded_and_well_formed() {
+        use crate::cluster::FleetEvent;
+        let mut rng = Rng::new(12);
+        for _ in 0..50 {
+            let tl = gens::fleet_timeline(&mut rng, 40);
+            let arrivals =
+                tl.iter().filter(|e| matches!(e, FleetEvent::Arrive { .. })).count();
+            assert!((1..=40).contains(&arrivals));
+            // Departures only reference tenants that already arrived.
+            let mut seen = std::collections::HashSet::new();
+            for ev in &tl {
+                match ev {
+                    FleetEvent::Arrive { tenant, .. } => {
+                        assert!(seen.insert(*tenant), "duplicate arrival {tenant}");
+                    }
+                    FleetEvent::Depart { tenant } => {
+                        assert!(seen.contains(tenant), "departure before arrival");
+                    }
+                    FleetEvent::Fail { .. } => {}
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! The cluster subsystem's determinism guarantee, proven end-to-end: the
+//! same fleet grid and seed produce a **bit-identical** placement surface
+//! at `--jobs 1` and `--jobs 8` (per-cell seeds are pure functions of the
+//! run seed and the (system, policy, nodes, scenario) coordinates), the
+//! rendered CSV surfaces — which carry no host timings — match
+//! byte-for-byte, and the summary CSV round-trips through the regression
+//! engine with a clean pass against itself at both job counts. A crafted
+//! workload also separates first-fit from frag-gradient, so the policy
+//! axis is provably not a no-op.
+
+use gvb::cluster::{self, run_cluster, ClusterSpec, ClusterSurface, Demand, Fleet};
+use gvb::metrics::RunConfig;
+use gvb::report::cluster::{render_csv, render_summary_csv};
+
+fn spec() -> ClusterSpec {
+    ClusterSpec {
+        systems: vec!["native".into(), "hami".into()],
+        policies: vec!["first-fit", "frag-gradient"],
+        node_counts: vec![2],
+        scenarios: vec!["churn", "failover"],
+        // The regression engine replays cluster baselines at the default
+        // arrival count, so the round-trip test below needs it too.
+        arrivals: cluster::DEFAULT_ARRIVALS,
+    }
+}
+
+fn base() -> RunConfig {
+    let mut cfg = RunConfig::quick("native");
+    cfg.seed = 42;
+    cfg
+}
+
+fn assert_surfaces_bit_identical(a: &ClusterSurface, b: &ClusterSurface) {
+    assert_eq!(a.seed, b.seed);
+    assert_eq!(a.arrivals, b.arrivals);
+    assert_eq!(a.runs.len(), b.runs.len());
+    for (x, y) in a.runs.iter().zip(&b.runs) {
+        let ctx = format!("{}/{}@{}n/{}", x.system, x.policy, x.nodes, x.scenario);
+        assert_eq!(x.system, y.system, "{ctx}: run order diverged");
+        assert_eq!(x.policy, y.policy, "{ctx}: run order diverged");
+        assert_eq!(x.nodes, y.nodes, "{ctx}: run order diverged");
+        assert_eq!(x.scenario, y.scenario, "{ctx}: run order diverged");
+        assert_eq!(x.arrivals, y.arrivals, "{ctx}");
+        assert_eq!(x.placed, y.placed, "{ctx}");
+        assert_eq!(x.migrations, y.migrations, "{ctx}");
+        assert_eq!(x.evictions, y.evictions, "{ctx}");
+        assert_eq!(x.node_stats.len(), y.node_stats.len(), "{ctx}");
+        for (i, (p, q)) in x.node_stats.iter().zip(&y.node_stats).enumerate() {
+            assert_eq!(p.mem_used, q.mem_used, "{ctx} node {i}");
+            assert_eq!(p.sm_used.to_bits(), q.sm_used.to_bits(), "{ctx} node {i}");
+            assert_eq!(p.tenants, q.tenants, "{ctx} node {i}");
+            assert_eq!(p.alive, q.alive, "{ctx} node {i}");
+        }
+        assert_eq!(x.summary.len(), y.summary.len(), "{ctx}");
+        for ((ia, va), (ib, vb)) in x.summary.iter().zip(&y.summary) {
+            assert_eq!(ia, ib, "{ctx}: summary order");
+            assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}/{ia}: {va} vs {vb}");
+        }
+    }
+}
+
+#[test]
+fn cluster_surface_bit_identical_at_any_job_count() {
+    let base = base();
+    let serial = run_cluster(&base, &spec(), 1);
+    let sharded = run_cluster(&base, &spec(), 8);
+    assert_eq!(serial.stats.jobs, 1);
+    assert_eq!(sharded.stats.jobs, 8);
+    // 2 systems × 2 policies × 1 node count × 2 scenarios.
+    assert_eq!(serial.runs.len(), 8);
+    assert_eq!(serial.stats.tasks.len(), 8);
+    assert_surfaces_bit_identical(&serial, &sharded);
+    // The rendered surfaces (no host timings) match byte-for-byte.
+    assert_eq!(render_csv(&serial), render_csv(&sharded));
+    assert_eq!(render_summary_csv(&serial), render_summary_csv(&sharded));
+}
+
+#[test]
+fn cluster_is_a_pure_function_of_the_seed() {
+    let a = run_cluster(&base(), &spec(), 4);
+    let b = run_cluster(&base(), &spec(), 4);
+    assert_surfaces_bit_identical(&a, &b);
+    let mut other = base();
+    other.seed = 43;
+    let c = run_cluster(&other, &spec(), 4);
+    assert!(
+        a.runs.iter().zip(&c.runs).any(|(x, y)| {
+            x.summary
+                .iter()
+                .zip(&y.summary)
+                .any(|((_, va), (_, vb))| va.to_bits() != vb.to_bits())
+        }),
+        "seed change did not affect the surface"
+    );
+}
+
+/// Policy-disagreement smoke: on a hand-built two-node fleet, first-fit
+/// greedily co-locates a small SM-light request onto the SM-drained node
+/// 0, stranding its memory — the follow-up 6 GiB request then fits
+/// nowhere. Frag-gradient steers the small request to node 1 (strictly
+/// lower stranding gradient), keeping node 0 open. The two policies are
+/// provably different procedures, not renamings of one another.
+#[test]
+fn crafted_workload_separates_first_fit_from_frag_gradient() {
+    let gib = 1u64 << 30;
+    let demands = [
+        Demand { mem: 4 * gib, sm: 0.8 },  // SM-heavy: drains node 0's SMs
+        Demand { mem: 8 * gib, sm: 0.2 },  // mem-heavy: only node 1 fits
+        Demand { mem: gib, sm: 0.15 },     // the placement the policies dispute
+        Demand { mem: 6 * gib, sm: 0.05 }, // fits only if node 0 was kept open
+    ];
+    let replay = |policy_key: &str| {
+        let policy = cluster::policy::by_name(policy_key).unwrap();
+        let mut fleet = Fleet::new(2, 10 * gib, 1.0);
+        demands
+            .iter()
+            .enumerate()
+            .map(|(t, d)| fleet.place(policy, t as u64, *d))
+            .collect::<Vec<_>>()
+    };
+    let ff = replay("first-fit");
+    let fg = replay("frag-gradient");
+    assert_eq!(ff, vec![Some(0), Some(1), Some(0), None]);
+    assert_eq!(fg, vec![Some(0), Some(1), Some(1), Some(0)]);
+}
+
+#[test]
+fn summary_round_trips_through_the_regression_engine() {
+    let base = base();
+    let surface = run_cluster(&base, &spec(), 4);
+    let summary = render_summary_csv(&surface);
+    let baseline = gvb::regress::parse_baseline_csv(&summary, "native").unwrap();
+    assert_eq!(baseline.schema, gvb::regress::BaselineSchema::Cluster);
+    // 8 fleet cells × 5 summary statistics.
+    assert_eq!(baseline.rows.len(), 40);
+    // Re-run at both job counts: clean pass with a tight threshold.
+    for jobs in [1usize, 8] {
+        let mut cfg = base.clone();
+        cfg.jobs = jobs;
+        let out = gvb::regress::run_regression(&cfg, &baseline, 0.0001).unwrap();
+        assert_eq!(out.checked(), 40);
+        assert!(out.passed(), "jobs={jobs}: {:?}", out.regressions());
+        assert_eq!(out.schema, gvb::regress::BaselineSchema::Cluster);
+    }
+}

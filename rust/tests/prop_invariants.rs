@@ -1,25 +1,27 @@
-//! Property-based tests (via the in-tree `testkit`) on substrate and
-//! coordinator invariants.
+//! Property-based tests (via the in-tree `testkit`) on substrate,
+//! coordinator and fleet-placement invariants.
 
 use std::collections::HashSet;
 
+use gvb::cluster::{self, Fleet, FleetEvent};
 use gvb::coordinator::executor::{self, Task};
 use gvb::cudalite::Api;
 use gvb::metrics::{taxonomy, RunConfig};
 use gvb::simgpu::memory::HbmAllocator;
 use gvb::stats::jain_fairness;
-use gvb::testkit::{check, gens};
-use gvb::util::rng::{dynamics_seed, scenario_seed, task_seed, topology_seed};
+use gvb::testkit::{check, check_with_shrink, gens, shrink};
+use gvb::util::rng::{cluster_seed, dynamics_seed, scenario_seed, task_seed, topology_seed};
 use gvb::util::Rng;
 use gvb::virt::wfq::WfqScheduler;
 use gvb::virt::{TenantConfig, ALL_SYSTEMS};
 
 /// Allocator invariant: after any interleaving of allocs and frees,
 /// used + total_free == capacity and the free list stays coalesced
-/// (no two adjacent free blocks).
+/// (no two adjacent free blocks). Runs on the shrinking runner, so a
+/// failure reports the minimal op subsequence that still breaks it.
 #[test]
 fn prop_allocator_conserves_memory() {
-    check(
+    check_with_shrink(
         "allocator-conservation",
         0xA110C,
         64,
@@ -29,6 +31,7 @@ fn prop_allocator_conserves_memory() {
                 .collect();
             ops
         },
+        |ops| shrink::vec_drops(ops),
         |ops| {
             let cap = 1u64 << 32;
             let mut a = HbmAllocator::new(cap);
@@ -51,11 +54,12 @@ fn prop_allocator_conserves_memory() {
 }
 
 /// Quota invariant: under any sequence of allocations, a HAMi/FCSP tenant
-/// can never hold more device memory than its configured limit.
+/// can never hold more device memory than its configured limit. Shrinks
+/// the allocation sequence (quota held fixed) on failure.
 #[test]
 fn prop_quota_never_exceeded() {
     for backend in ["hami", "fcsp"] {
-        check(
+        check_with_shrink(
             "quota-never-exceeded",
             0x900A + backend.len() as u64,
             24,
@@ -64,6 +68,9 @@ fn prop_quota_never_exceeded() {
                 let sizes: Vec<u64> =
                     (0..rng.range(1, 60)).map(|_| gens::alloc_size(rng)).collect();
                 (quota, sizes)
+            },
+            |(quota, sizes)| {
+                shrink::vec_drops(sizes).into_iter().map(|s| (*quota, s)).collect()
             },
             |(quota, sizes)| {
                 let mut api = Api::with_backend(backend, 7);
@@ -295,6 +302,162 @@ fn prop_executor_preserves_table8_order() {
                 && stats.tasks.len() == ids.len()
                 && results.iter().zip(ids).all(|(r, id)| r.id == *id)
                 && stats.tasks.iter().zip(ids).all(|(t, id)| t.metric_id == *id)
+        },
+    );
+}
+
+/// Recompute a fleet's per-node usage from its placement map and compare
+/// against the incrementally maintained node state: every tenant sits on
+/// exactly one *alive* node (the map admits at most one entry per tenant,
+/// so a second placement could only hide as a usage mismatch), and no
+/// node exceeds its memory or SM capacity.
+fn fleet_consistent(fleet: &Fleet) -> bool {
+    let nodes = fleet.nodes();
+    let mut mem = vec![0u64; nodes.len()];
+    let mut sm = vec![0f64; nodes.len()];
+    let mut count = vec![0u32; nodes.len()];
+    for (_, &(n, d)) in fleet.placements() {
+        if !nodes[n].alive {
+            return false; // tenant placed on a dead node
+        }
+        mem[n] += d.mem;
+        sm[n] += d.sm;
+        count[n] += 1;
+    }
+    nodes.iter().enumerate().all(|(i, n)| {
+        n.mem_used == mem[i]
+            && (n.sm_used - sm[i]).abs() < 1e-6
+            && n.tenants == count[i]
+            && n.mem_used <= n.mem_capacity
+            && n.sm_used <= n.sm_capacity + 1e-6
+    })
+}
+
+/// Placement invariant: across any generated churn timeline and any
+/// policy, after every event the fleet's placement map and node usage
+/// agree (one node per tenant, usage = sum of live demands, capacity
+/// never exceeded). Failures shrink to a minimal event subsequence.
+#[test]
+fn prop_fleet_placement_invariants() {
+    for policy_name in cluster::POLICIES {
+        let policy = cluster::policy::by_name(policy_name).unwrap();
+        check_with_shrink(
+            "fleet-placement-invariants",
+            0xF1EE7 + policy_name.len() as u64,
+            16,
+            |rng: &mut Rng| gens::fleet_timeline(rng, 300),
+            |tl| shrink::vec_drops(tl),
+            |timeline| {
+                // 16 nodes covers every Fail index the generator emits;
+                // 40 GiB / 4-SM nodes saturate under ~300 arrivals, so
+                // both the placed and rejected paths are exercised.
+                let mut fleet = Fleet::new(16, 40 << 30, 4.0);
+                for ev in timeline {
+                    match ev {
+                        FleetEvent::Arrive { tenant, demand } => {
+                            fleet.place(policy, *tenant, *demand);
+                        }
+                        FleetEvent::Depart { tenant } => {
+                            fleet.remove(*tenant);
+                        }
+                        FleetEvent::Fail { node } => {
+                            for (t, d) in fleet.fail_node(*node) {
+                                fleet.place(policy, t, d);
+                            }
+                        }
+                    }
+                    if !fleet_consistent(&fleet) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+}
+
+/// Purity invariant: a fleet replay is a pure function of (seed, policy,
+/// scenario, nodes, arrivals) — replaying the same cell twice yields
+/// identical summaries, counters and final node states, bit for bit.
+#[test]
+fn prop_fleet_replay_pure() {
+    check(
+        "fleet-replay-pure",
+        0xF1EE8,
+        12,
+        |rng: &mut Rng| {
+            let system = *rng.choose(&ALL_SYSTEMS);
+            (
+                rng.next_u64(),
+                system.to_string(),
+                gens::policy(rng),
+                gens::scenario(rng),
+                rng.range(1, 9) as u32,
+                rng.range(20, 120) as u32,
+            )
+        },
+        |(seed, system, policy_name, scenario, nodes, arrivals)| {
+            let policy = cluster::policy::by_name(policy_name).unwrap();
+            let mut cfg = RunConfig::quick(system);
+            cfg.seed = *seed;
+            let a = cluster::replay_fleet(&cfg, policy, *nodes, *scenario, *arrivals);
+            let b = cluster::replay_fleet(&cfg, policy, *nodes, *scenario, *arrivals);
+            a.summary == b.summary
+                && (a.placed, a.migrations, a.evictions) == (b.placed, b.migrations, b.evictions)
+                && a.node_stats.len() == b.node_stats.len()
+                && a.node_stats.iter().zip(&b.node_stats).all(|(x, y)| {
+                    x.mem_used == y.mem_used
+                        && x.sm_used == y.sm_used
+                        && x.tenants == y.tenants
+                        && x.alive == y.alive
+                })
+        },
+    );
+}
+
+/// Cluster-seed invariant: composed cluster+task seeds — the per-cell
+/// derivation used by `cluster::run_cluster` — are collision-free across
+/// the full (systems × policies × node counts × scenarios) matrix for
+/// any base seed, and never collide with the sweep-, topology- or
+/// dynamics-layer derivations of matching coordinates (the 0xFC
+/// separator keeps the layers apart). A collision would make two fleet
+/// cells draw identical arrival streams and silently correlate.
+#[test]
+fn prop_cluster_seeds_collision_free_and_layer_distinct() {
+    let node_counts = [1u32, 2, 4, 8, 16, 64, 1024];
+    let scenarios = gvb::dynsim::PRESETS;
+    let expanded =
+        ALL_SYSTEMS.len() * cluster::POLICIES.len() * node_counts.len() * scenarios.len();
+    check(
+        "cluster-seeds-collision-free",
+        0x5EED8,
+        8,
+        |rng: &mut Rng| rng.next_u64(),
+        |&base| {
+            let mut seen = HashSet::new();
+            for &p in &cluster::POLICIES {
+                for &n in &node_counts {
+                    for &sc in &scenarios {
+                        let layer = cluster_seed(base, p, n, sc);
+                        for system in ALL_SYSTEMS {
+                            if !seen.insert(task_seed(layer, system, sc)) {
+                                return false; // collision across the matrix
+                            }
+                        }
+                    }
+                }
+            }
+            if seen.len() != expanded {
+                return false;
+            }
+            // Layer separation: a cluster task seed never equals the
+            // sweep/topology/dynamics task seeds of matching coordinates.
+            let cl = task_seed(cluster_seed(base, "first-fit", 4, "steady"), "hami", "steady");
+            let dy = task_seed(dynamics_seed(base, "steady", 4, 50), "hami", "steady");
+            let sw = task_seed(scenario_seed(base, 4, 50), "hami", "steady");
+            let tp =
+                task_seed(topology_seed(scenario_seed(base, 4, 50), 4, "pcie"), "hami", "steady");
+            cl != dy && cl != sw && cl != tp
         },
     );
 }

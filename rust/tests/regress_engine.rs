@@ -2,11 +2,15 @@
 //! sweep surface — topology axes included — rendered to the long-format
 //! CSV and parsed back, must regress clean against itself at any job
 //! count; a PR-3-era 4-tuple baseline (no `gpu_count`/`link` columns)
-//! still parses and gates; infeasible cells are skipped; a single
-//! perturbed cell is flagged with its exact full coordinate; malformed
-//! and mixed-schema baselines are rejected with named rows.
+//! still parses and gates; a cluster summary surface is auto-detected as
+//! the fourth baseline schema and replays clean; infeasible cells are
+//! skipped; a single perturbed cell is flagged with its exact full
+//! coordinate (fleet coordinates included); malformed and mixed-schema
+//! baselines are rejected with named rows.
 
+use gvb::cluster::{run_cluster, ClusterSpec, DEFAULT_ARRIVALS};
 use gvb::coordinator::executor;
+use gvb::report::cluster::render_summary_csv;
 use gvb::coordinator::sweep::{run_sweep, SweepSpec, DEFAULT_GPU_COUNT, DEFAULT_LINK};
 use gvb::metrics::{taxonomy, Category, Direction, RunConfig};
 use gvb::regress::{parse_baseline_csv, render_json, render_markdown, run_regression, BaselineSchema};
@@ -274,6 +278,129 @@ fn injected_regression_in_a_topology_cell_names_the_full_coordinate() {
     let j = render_json(&outcome, "b.csv");
     let idx = j.find("\"by_link\"").unwrap();
     assert!(j[idx..].contains("\"link\": \"nvlink\""), "{j}");
+}
+
+/// A small fleet grid at the default arrival count (the count the
+/// regression engine pins when replaying cluster baselines).
+fn cluster_spec() -> ClusterSpec {
+    ClusterSpec {
+        systems: vec!["hami".into()],
+        policies: vec!["first-fit", "frag-gradient"],
+        node_counts: vec![2],
+        scenarios: vec!["churn"],
+        arrivals: DEFAULT_ARRIVALS,
+    }
+}
+
+#[test]
+fn cluster_summary_baseline_is_auto_detected_and_roundtrips() {
+    let surface = run_cluster(&base(), &cluster_spec(), 2);
+    let csv = render_summary_csv(&surface);
+    let baseline = parse_baseline_csv(&csv, "native").unwrap();
+    // The `policy`/`nodes` columns select the fourth schema, even though
+    // the header also carries `scenario` (which alone means dynamics).
+    assert_eq!(baseline.schema, BaselineSchema::Cluster);
+    // 2 fleet cells × 5 summary statistics.
+    assert_eq!(baseline.rows.len(), 10);
+    let c = baseline.rows[0].cluster_cell.unwrap();
+    assert_eq!((c.policy, c.nodes, c.scenario), ("first-fit", 2, "churn"));
+    for jobs in [1, 8] {
+        let mut cfg = base();
+        cfg.jobs = jobs;
+        let outcome = run_regression(&cfg, &baseline, 0.0001).unwrap();
+        assert_eq!(outcome.checked(), 10);
+        assert_eq!(outcome.schema, BaselineSchema::Cluster);
+        assert!(
+            outcome.passed(),
+            "jobs={jobs}: {:?}",
+            outcome
+                .regressions()
+                .iter()
+                .map(|r| format!("{}/{}/{}", r.system, r.cell_label(), r.id))
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn injected_cluster_regression_names_the_full_fleet_coordinate() {
+    let surface = run_cluster(&base(), &cluster_spec(), 2);
+    let csv = render_summary_csv(&surface);
+    let mut baseline = parse_baseline_csv(&csv, "native").unwrap();
+    // Direction-aware perturbation: CL-SUCCESS is higher-better, so
+    // doubling the recorded baseline makes the unchanged re-run read as
+    // a 50% regression on exactly that cell.
+    let idx = baseline
+        .rows
+        .iter()
+        .position(|r| {
+            r.cluster_cell.unwrap().policy == "frag-gradient" && r.id == "CL-SUCCESS"
+        })
+        .expect("the frag-gradient CL-SUCCESS row");
+    assert!(baseline.rows[idx].value > 0.0, "success rate must be non-zero to perturb");
+    baseline.rows[idx].value *= 2.0;
+    let outcome = run_regression(&base(), &baseline, 5.0).unwrap();
+    assert!(!outcome.passed());
+    let regressions = outcome.regressions();
+    assert_eq!(regressions.len(), 1, "{regressions:?}");
+    assert_eq!(regressions[0].system, "hami");
+    assert_eq!(regressions[0].cell_label(), "frag-gradient@2n/churn");
+    assert_eq!(regressions[0].id, "CL-SUCCESS");
+    assert!(regressions[0].worse_percent > 5.0);
+    // Both reports name the offending fleet cell by its full coordinate.
+    let m = render_markdown(&outcome, "b.csv");
+    assert!(m.contains("❌ FAIL"), "{m}");
+    assert!(m.contains("| hami | frag-gradient@2n/churn | CL-SUCCESS |"), "{m}");
+    let j = render_json(&outcome, "b.csv");
+    assert!(j.contains("\"schema\": \"cluster\""), "{j}");
+    assert!(j.contains("\"policy\": \"frag-gradient\""), "{j}");
+    assert!(j.contains("\"passed\": false"), "{j}");
+    // The per-link breakdown groups fleet cells under the `cluster` key.
+    let at = j.find("\"by_link\"").unwrap();
+    assert!(j[at..].contains("\"link\": \"cluster\""), "{j}");
+}
+
+#[test]
+fn malformed_cluster_rows_are_named_errors() {
+    let hdr = "system,policy,nodes,scenario,id,value\n";
+    // Unknown placement policy, naming the offending row.
+    let e = parse_baseline_csv(
+        &format!("{hdr}hami,worst-fit,2,churn,CL-SUCCESS,50.0\n"),
+        "native",
+    )
+    .unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("row 2") && msg.contains("worst-fit"), "{msg}");
+    // Out-of-range node count.
+    let e = parse_baseline_csv(
+        &format!("{hdr}hami,first-fit,0,churn,CL-SUCCESS,50.0\n"),
+        "native",
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("out of range (1..=1024)"), "{e:#}");
+    // Unknown summary id under the cluster schema.
+    let e = parse_baseline_csv(
+        &format!("{hdr}hami,first-fit,2,churn,ZZ-999,50.0\n"),
+        "native",
+    )
+    .unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("row 2") && msg.contains("ZZ-999"), "{msg}");
+    // Half a cluster coordinate (`policy` without `nodes`) is neither
+    // schema generation.
+    let e = parse_baseline_csv(
+        "system,policy,scenario,id,value\nhami,first-fit,churn,CL-SUCCESS,50.0\n",
+        "native",
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("mixed-schema"), "{e:#}");
+    // Cluster columns glued onto a sweep coordinate are rejected too.
+    let e = parse_baseline_csv(
+        "system,policy,nodes,tenants,quota_pct,scenario,id,value\n",
+        "native",
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("mixed-schema"), "{e:#}");
 }
 
 #[test]
