@@ -6,13 +6,20 @@
 //! one whole scenario replay), so this also exercises the executor's
 //! load balance on small task counts: with 16 timelines and N ≤ 16
 //! workers the speedup floor is the longest single timeline.
+//!
+//! The second section is the **large-horizon stress** the event-queue
+//! rewrite targets: a single uniform-load timeline with 10³ tenants and
+//! ≥10⁶ occurrences. The pre-rewrite min-scan loop was
+//! O(occurrences × tenants) here (~10⁹ scans); the event core is
+//! O(occurrences × log tenants) and must finish in single-digit seconds.
 
 use std::time::Instant;
 
 use gvb::benchkit::print_table;
-use gvb::dynsim::{run_dynamics, DynSpec, PRESETS};
+use gvb::dynsim::{engine, run_dynamics, DynSpec, ScenarioSpec, PRESETS};
 use gvb::metrics::RunConfig;
 use gvb::report::dynamics::render_summary_csv;
+use gvb::util::rng::{dynamics_seed, task_seed};
 use gvb::virt::ALL_SYSTEMS;
 
 fn main() {
@@ -69,4 +76,44 @@ fn main() {
         &rows,
     );
     println!("\n(host parallelism: {hw}; summary CSV verified byte-identical across job counts)");
+
+    // ---- large-horizon stress: 10³ tenants, ≥10⁶ occurrences ----------
+    // 1000 tenants × 10 Hz × 100 s ≈ 10⁶ request arrivals, plus 1000
+    // arrival events and 100 window boundaries, on one timeline. Low
+    // per-tenant quota keeps the device oversubscribed the way a dense
+    // churn fleet is. Target: single-digit seconds.
+    println!("\nLarge-horizon stress (event-queue core):");
+    let mut stress_rows = Vec::new();
+    for (tenants, rate_hz, duration_ms) in [(1000u32, 10.0f64, 100_000u64), (2000, 10.0, 100_000)]
+    {
+        let spec = ScenarioSpec::uniform_load("bench-uniform", tenants, rate_hz, 1, duration_ms, 1_000);
+        let mut cfg = RunConfig::quick("native");
+        cfg.seed = task_seed(
+            dynamics_seed(42, spec.name, duration_ms, 1_000),
+            "native",
+            spec.name,
+        );
+        let t0 = Instant::now();
+        let run = engine::run_scenario(&cfg, &spec);
+        let dt = t0.elapsed().as_secs_f64();
+        let eps = run.occurrences as f64 / dt.max(1e-9);
+        stress_rows.push(vec![
+            tenants.to_string(),
+            format!("{:.0}s @ {} Hz", duration_ms as f64 / 1e3, rate_hz),
+            run.occurrences.to_string(),
+            run.completed.to_string(),
+            format!("{dt:.2}"),
+            format!("{eps:.0}"),
+        ]);
+        assert!(
+            run.occurrences >= 1_000_000 || tenants < 1000,
+            "stress run processed only {} occurrences",
+            run.occurrences
+        );
+    }
+    print_table(
+        "Large-horizon stress — uniform load, single timeline",
+        &["tenants", "horizon", "occurrences", "completed", "wall s", "events/s"],
+        &stress_rows,
+    );
 }

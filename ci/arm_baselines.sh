@@ -1,12 +1,22 @@
 #!/usr/bin/env bash
-# Arm (or re-arm) the CI regression gates from the gate jobs' uploaded
-# artifacts — the scripted version of the manual flow in ci/README.md.
+# Arm (or re-arm) the CI regression gates — the scripted version of the
+# flows in ci/README.md.
 #
 # Usage:
-#   ci/arm_baselines.sh <artifacts-dir>
+#   ci/arm_baselines.sh --generate [jobs]    # primary: regenerate locally
+#   ci/arm_baselines.sh <artifacts-dir>      # fallback: from CI artifacts
 #
-# <artifacts-dir> is a directory containing the downloaded artifacts of
-# one CI run, e.g. as laid out by
+# --generate builds the crate in release mode and runs the three exact
+# deterministic grids the gate jobs re-run (pinned default seed 42,
+# quick iteration counts), writing fresh snapshots into a temp dir; the
+# optional [jobs] argument (default 4) only changes wall-clock, never
+# the values — metric values are virtual-time simulation outputs,
+# bit-identical across machines and job counts. This is the primary
+# arming path: no CI round-trip needed.
+#
+# The artifacts-dir form covers the case where no local toolchain is
+# available: point it at the downloaded artifacts of one CI run, e.g. as
+# laid out by
 #
 #   gh run download <run-id> --dir artifacts
 #
@@ -17,25 +27,56 @@
 #   artifacts/cluster-surface/fresh_cluster.csv
 #
 # (bare fresh_*.csv files directly inside <artifacts-dir> are accepted
-# too). The script validates each snapshot — non-empty, expected header,
-# data rows present — copies it over the committed ci/baseline_*.csv,
-# and stages the result with `git add`; committing stays a human action
-# so the accepted movement lands in the same commit as its explanation.
+# too). Either way the script validates each snapshot — non-empty,
+# expected header, data rows present — copies it over the committed
+# ci/baseline_*.csv, and stages the result with `git add`; committing
+# stays a human action so the accepted movement lands in the same commit
+# as its explanation.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-if [ $# -ne 1 ]; then
-  echo "usage: ci/arm_baselines.sh <artifacts-dir>" >&2
+usage() {
+  echo "usage: ci/arm_baselines.sh --generate [jobs] | ci/arm_baselines.sh <artifacts-dir>" >&2
   exit 2
-fi
-artifacts=$1
-if [ ! -d "$artifacts" ]; then
-  echo "error: $artifacts is not a directory" >&2
-  exit 2
+}
+
+[ $# -ge 1 ] || usage
+
+artifacts=
+if [ "$1" = "--generate" ]; then
+  jobs=${2:-4}
+  case "$jobs" in
+    '' | *[!0-9]*) usage ;;
+  esac
+  if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: --generate needs a Rust toolchain (cargo not found); use the artifacts-dir form instead" >&2
+    exit 1
+  fi
+  artifacts=$(mktemp -d)
+  trap 'rm -rf "$artifacts"' EXIT
+  echo "building gvbench (release)..."
+  cargo build --release
+  echo "regenerating the three gate snapshots (jobs=$jobs)..."
+  # Exactly the gates' grids — see .github/workflows/ci.yml.
+  ./target/release/gvbench run --all-systems --quick --jobs "$jobs" \
+    --format csv --out "$artifacts/fresh_quick.csv"
+  rm -f "$artifacts/fresh_quick.csv.timings.csv" # host timings; never committed
+  ./target/release/gvbench sweep --quick --tenants 1,2 --quota 50,100 \
+    --link nvlink,pcie --jobs "$jobs" --format csv --out "$artifacts/fresh_sweep.csv"
+  ./target/release/gvbench cluster --policies first-fit,frag-gradient --nodes 2 \
+    --scenario churn,failover --systems native,hami --jobs "$jobs" \
+    --format csv --out /dev/null --summary-out "$artifacts/fresh_cluster.csv"
+else
+  [ $# -eq 1 ] || usage
+  artifacts=$1
+  if [ ! -d "$artifacts" ]; then
+    echo "error: $artifacts is not a directory" >&2
+    exit 2
+  fi
 fi
 
-# Locate an artifact file: prefer the per-artifact subdirectory layout,
-# fall back to a bare file in the artifacts dir.
+# Locate a snapshot: prefer the per-artifact subdirectory layout, fall
+# back to a bare file in the artifacts dir (also the --generate layout).
 find_artifact() {
   local artifact_dir=$1 file=$2
   for candidate in "$artifacts/$artifact_dir/$file" "$artifacts/$file"; do
@@ -94,7 +135,7 @@ arm sweep-baseline fresh_sweep.csv ci/baseline_sweep.csv "system,tenants,"
 arm cluster-surface fresh_cluster.csv ci/baseline_cluster.csv "system,policy,"
 
 if [ "$armed" -eq 0 ]; then
-  echo "error: no baseline artifacts found under $artifacts" >&2
+  echo "error: no baseline snapshots found under $artifacts" >&2
   exit 1
 fi
 echo

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Fail with a ::error annotation when a committed gate baseline has no
+# data rows yet — the shared "Require a committed baseline" step of the
+# regress/sweep/cluster gate jobs (arming flow in ci/README.md).
+#
+# Usage: ci/require_baseline.sh <baseline-csv> <artifact-name> <fresh-name>
+#
+#   <baseline-csv>   committed baseline, e.g. ci/baseline_quick.csv
+#   <artifact-name>  the gate's artifact carrying the fresh snapshot
+#   <fresh-name>     the snapshot file inside that artifact
+set -euo pipefail
+
+if [ $# -ne 3 ]; then
+  echo "usage: ci/require_baseline.sh <baseline-csv> <artifact-name> <fresh-name>" >&2
+  exit 2
+fi
+baseline=$1
+artifact=$2
+fresh=$3
+
+if [ ! -f "$baseline" ]; then
+  echo "::error::$baseline does not exist"
+  exit 1
+fi
+if [ "$(tail -n +2 "$baseline" | grep -c .)" -eq 0 ]; then
+  echo "::error::$baseline has no data rows yet. Arm it locally with ci/arm_baselines.sh --generate (or download this run's $artifact artifact and commit its $fresh as $baseline). See ci/README.md."
+  exit 1
+fi
+echo "$baseline is armed ($(tail -n +2 "$baseline" | grep -c .) data rows)"

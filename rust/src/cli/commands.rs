@@ -642,7 +642,7 @@ mod tests {
         let summary = std::fs::read_to_string(&summary_path).unwrap();
         let b = crate::regress::parse_baseline_csv(&summary, "native").unwrap();
         assert_eq!(b.schema, crate::regress::BaselineSchema::Dynamics);
-        assert_eq!(b.rows.len(), 4);
+        assert_eq!(b.rows.len(), 5);
         let cfg = RunConfig::quick("native");
         let out = crate::regress::run_regression(&cfg, &b, 0.0001).unwrap();
         assert!(out.passed(), "{:?}", out.regressions());

@@ -49,6 +49,23 @@ impl Request {
     }
 }
 
+/// A rate-independent request drawn ahead of time: everything
+/// [`RequestGenerator::next_request`] samples except the arrival-rate
+/// scaling. The dynsim engine draws these in batches per tenant and
+/// realizes each against the rate current at consumption
+/// ([`RequestGenerator::realize`]), which is bit-identical to a direct
+/// `next_request` call at the same point — the unit-rate exponential
+/// divides by the rate at realization, and `x / 1.0` is exact — while
+/// amortizing generator-call overhead across the batch.
+#[derive(Clone, Copy, Debug)]
+pub struct ProtoRequest {
+    /// Unit-rate exponential inter-arrival draw (seconds at 1 Hz).
+    pub exp_unit: f64,
+    pub prompt_len: u64,
+    pub gen_len: u64,
+    pub batchable: bool,
+}
+
 /// Poisson request generator with LLM-serving-shaped length distributions.
 #[derive(Clone, Debug)]
 pub struct RequestGenerator {
@@ -82,15 +99,38 @@ impl RequestGenerator {
     }
 
     pub fn next_request(&mut self) -> Request {
-        let inter = self.rng.exponential(self.rate_hz) * 1e9;
+        let proto = self.next_proto();
+        self.realize(proto)
+    }
+
+    /// Draw the stream's next request with the arrival-rate scaling left
+    /// out. Consumes exactly the draws `next_request` would (in the same
+    /// order), so interleaving proto and direct draws keeps the stream
+    /// aligned.
+    pub fn next_proto(&mut self) -> ProtoRequest {
+        let exp_unit = self.rng.exponential(1.0);
         // Prompt lengths are long-tailed; use a simple log-uniform.
         let prompt = log_uniform_len(&mut self.rng, 5.0, self.max_prompt);
         let gen = log_uniform_len(&mut self.rng, 3.0, self.max_gen);
-        Request {
-            inter_arrival_ns: inter,
+        ProtoRequest {
+            exp_unit,
             prompt_len: prompt,
             gen_len: gen,
             batchable: self.rng.chance(0.8),
+        }
+    }
+
+    /// Realize a proto-request against the *current* `rate_hz`.
+    /// Bit-identical to the request `next_request` would have produced
+    /// from the same draws at this rate: `exponential(r)` divides the
+    /// unit-rate draw by `r`, so `(exp_unit / r) * 1e9` reproduces
+    /// `exponential(r) * 1e9` exactly.
+    pub fn realize(&self, proto: ProtoRequest) -> Request {
+        Request {
+            inter_arrival_ns: proto.exp_unit / self.rate_hz * 1e9,
+            prompt_len: proto.prompt_len,
+            gen_len: proto.gen_len,
+            batchable: proto.batchable,
         }
     }
 
@@ -197,6 +237,35 @@ mod tests {
         );
         assert!((decode.bytes - 50e6 * r.gen_len as f64).abs() < 1.0);
         assert!(decode.intensity() < 5.0, "decode must be memory-bound");
+    }
+
+    #[test]
+    fn batched_protos_realize_bit_identically() {
+        // The dynsim engine pre-draws protos in blocks and realizes them
+        // at consumption, possibly after a burst rescaled `rate_hz`.
+        // Replay the same stream both ways — direct draws with the rate
+        // changing mid-stream vs. protos drawn up front and realized at
+        // the same per-request rates — and require bit-equality.
+        let rates = [40.0, 40.0, 160.0, 160.0, 160.0, 40.0, 40.0, 40.0];
+        let mut direct = RequestGenerator::new(99, rates[0]).with_lengths(512, 64);
+        let mut batched = RequestGenerator::new(99, rates[0]).with_lengths(512, 64);
+        let protos: Vec<ProtoRequest> = (0..rates.len()).map(|_| batched.next_proto()).collect();
+        for (i, &rate) in rates.iter().enumerate() {
+            direct.rate_hz = rate;
+            batched.rate_hz = rate;
+            let a = direct.next_request();
+            let b = batched.realize(protos[i]);
+            assert_eq!(
+                a.inter_arrival_ns.to_bits(),
+                b.inter_arrival_ns.to_bits(),
+                "request {i} at {rate} Hz: {} vs {}",
+                a.inter_arrival_ns,
+                b.inter_arrival_ns
+            );
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.gen_len, b.gen_len);
+            assert_eq!(a.batchable, b.batchable);
+        }
     }
 
     #[test]

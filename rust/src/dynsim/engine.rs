@@ -2,7 +2,16 @@
 //! against one simulated GPU node and reduce it to windowed time series.
 //!
 //! The engine is a discrete-event simulation over the `cudalite` API's
-//! single virtual clock:
+//! single virtual clock, driven by one [`super::queue::EventQueue`] of
+//! timestamped occurrences — window-boundary snapshots, scenario events
+//! and tenant request arrivals — popped in the deterministic
+//! `(t, kind rank, key)` order. Popping the next occurrence is
+//! O(log n); the pre-rewrite loop rescanned every active tenant per
+//! occurrence (O(occurrences × tenants)), which is the difference
+//! between minutes and seconds at 10³-tenant / 10⁶-occurrence horizons.
+//! The frozen pre-rewrite loop survives as [`super::reference`], and
+//! `rust/tests/dynamics_determinism.rs` proves both produce
+//! bit-identical surfaces.
 //!
 //! - **Arrivals are open-loop**: each active tenant owns a
 //!   [`RequestGenerator`] whose Poisson process schedules request arrival
@@ -10,6 +19,11 @@
 //!   an LLM serving front door. Requests are serviced in arrival order;
 //!   when the device (clock) is behind the arrival backlog, queueing
 //!   delay emerges naturally and shows up in the windowed latency tails.
+//!   Generation is batched: tenants draw [`ProtoRequest`]s from their
+//!   stream in blocks and realize them against the current arrival rate,
+//!   which is bit-identical to per-request draws (the unit-rate
+//!   exponential divides by the rate at realization) but amortizes the
+//!   generator call overhead across the block.
 //! - **Service is the virtualized driver path**: each request allocates
 //!   its KV block through `cuMemAlloc` (held in a bounded per-tenant
 //!   ring, so the heap churns like a real serving node), launches its
@@ -27,11 +41,15 @@
 //! composed `task_seed(dynamics_seed(..), system, scenario)` — see
 //! [`crate::util::rng::dynamics_seed`]); per-tenant request streams are
 //! keyed by tenant id, so timelines are bit-identical at any `--jobs`
-//! count and any completion order.
+//! count and any completion order. The engine also counts every
+//! occurrence it processes — the `DYN-EVENTS` summary statistic — which
+//! is itself deterministic and therefore gateable; wall-clock events/sec
+//! lives in the JSON `execution` stats instead, since host timings can
+//! never be value-gated.
 
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::collections::VecDeque;
 
-use crate::coordinator::workload::{Request, RequestGenerator};
+use crate::coordinator::workload::{ProtoRequest, Request, RequestGenerator};
 use crate::cudalite::Api;
 use crate::metrics::RunConfig;
 use crate::simgpu::error::{GpuError, GpuFault};
@@ -40,17 +58,21 @@ use crate::simgpu::TenantId;
 use crate::util::rng::splitmix64;
 use crate::virt::TenantConfig;
 
+use super::queue::{EventQueue, Occ, OccKind};
 use super::scenario::{EventKind, ScenarioSpec};
 
 /// KV-cache bytes per (prompt + generated) token held by a request.
-const KV_BYTES_PER_TOKEN: u64 = 128 << 10;
+pub(crate) const KV_BYTES_PER_TOKEN: u64 = 128 << 10;
 /// Recent request KV blocks each tenant keeps resident (a serving
 /// engine's prefix/session cache) — old blocks free as new ones land,
 /// which is what keeps the allocator churning.
-const KV_RING: usize = 12;
+pub(crate) const KV_RING: usize = 12;
 /// Prompt/generation caps for the serving-scaled request shapes.
-const MAX_PROMPT: u64 = 512;
-const MAX_GEN: u64 = 64;
+pub(crate) const MAX_PROMPT: u64 = 512;
+pub(crate) const MAX_GEN: u64 = 64;
+/// Proto-requests drawn per generator call: one block refills a tenant's
+/// arena and is realized request-by-request at the then-current rate.
+const PROTO_BATCH: usize = 64;
 
 /// One value of one windowed series.
 #[derive(Clone, Debug, PartialEq)]
@@ -112,6 +134,11 @@ pub struct ScenarioRun {
     /// First injected-fault recovery, when the scenario injected one and
     /// the tenant recovered within the horizon.
     pub recovery: Option<Recovery>,
+    /// Occurrences the event core processed: window-boundary snapshots +
+    /// scenario events inside the horizon + serviced request arrivals.
+    /// Deterministic (virtual-time), so it is also the `DYN-EVENTS`
+    /// summary statistic and gateable like any other summary value.
+    pub occurrences: u64,
 }
 
 impl ScenarioRun {
@@ -138,29 +165,89 @@ impl ScenarioRun {
     }
 }
 
-fn window_of(t_ns: u64, window_ns: u64, n_windows: usize) -> usize {
+pub(crate) fn window_of(t_ns: u64, window_ns: u64, n_windows: usize) -> usize {
     ((t_ns / window_ns.max(1)) as usize).min(n_windows.saturating_sub(1))
 }
 
 /// Deterministic per-tenant stream seed: pure in (run seed, tenant id),
 /// so a tenant's request trace is independent of arrival interleaving.
-fn tenant_stream_seed(seed: u64, tenant: TenantId) -> u64 {
+pub(crate) fn tenant_stream_seed(seed: u64, tenant: TenantId) -> u64 {
     let mut s = seed ^ 0xD1B54A32D192ED03u64.wrapping_mul(tenant as u64 + 1);
     splitmix64(&mut s)
 }
 
-/// Live per-tenant state.
+/// Live per-tenant state. Arrival *times* live in the event queue, not
+/// here: a queued [`OccKind::Arrival`] carries the tenant's `epoch` so
+/// that occurrences scheduled by a departed (or replaced) incarnation
+/// pop as stale and are skipped.
 struct Tenant {
     gen: RequestGenerator,
+    /// Arena of pre-drawn proto-requests, refilled [`PROTO_BATCH`] at a
+    /// time and realized against the current rate at consumption.
+    protos: VecDeque<ProtoRequest>,
     quota_cfg: TenantConfig,
     base_rate_hz: f64,
     burst_until_ns: Option<u64>,
     /// The next request, drawn ahead so its arrival time is known.
     pending: Request,
-    next_arrival_ns: u64,
+    /// Incarnation counter value at this tenant's last (re-)arrival.
+    epoch: u64,
     /// Resident KV blocks `(ptr, bytes)`, oldest first.
     ring: VecDeque<(DevicePtr, u64)>,
     held_bytes: u64,
+}
+
+/// Draw the tenant's next request, refilling the proto arena from the
+/// generator when it runs dry. Bit-identical to calling
+/// [`RequestGenerator::next_request`] at the same point: the stream
+/// consumes the same draws in the same order, and realization divides
+/// the unit-rate exponential by the same rate the direct call would
+/// have used.
+fn draw_request(gen: &mut RequestGenerator, protos: &mut VecDeque<ProtoRequest>) -> Request {
+    if protos.is_empty() {
+        for _ in 0..PROTO_BATCH {
+            protos.push_back(gen.next_proto());
+        }
+    }
+    gen.realize(protos.pop_front().expect("arena just refilled"))
+}
+
+/// Dense `(window × tenant-slot)` busy-time ledger. Replaces the old
+/// `BTreeMap<(window, tenant), f64>`: one flat allocation sized up front
+/// from `spec.windows()` and the tenant universe, O(1) accumulate.
+/// Accumulation order per cell is chronological in both engines, so the
+/// f64 sums are bit-identical.
+struct BusyLedger {
+    window_ns: u64,
+    duration_ns: u64,
+    n_windows: usize,
+    n_slots: usize,
+    cells: Vec<f64>,
+}
+
+impl BusyLedger {
+    fn new(window_ns: u64, duration_ns: u64, n_windows: usize, n_slots: usize) -> BusyLedger {
+        BusyLedger { window_ns, duration_ns, n_windows, n_slots, cells: vec![0.0; n_windows * n_slots] }
+    }
+
+    /// Distribute a kernel's `[start, end)` busy span over the windows it
+    /// overlaps (clipped at the horizon; spans past it fold into the last
+    /// window's accounting only up to the horizon).
+    fn record(&mut self, slot: usize, start: u64, end: u64) {
+        let end = end.min(self.duration_ns);
+        let mut s = start.min(end);
+        while s < end {
+            let w = window_of(s, self.window_ns, self.n_windows);
+            let w_end = ((w as u64 + 1) * self.window_ns).min(self.duration_ns).max(s + 1);
+            let e = end.min(w_end);
+            self.cells[w * self.n_slots + slot] += (e - s) as f64;
+            s = e;
+        }
+    }
+
+    fn cell(&self, w: usize, slot: usize) -> f64 {
+        self.cells[w * self.n_slots + slot]
+    }
 }
 
 /// Drive one request through the virtualized driver path. Quota/OOM
@@ -169,12 +256,10 @@ struct Tenant {
 fn service_request(
     api: &mut Api,
     tenant: TenantId,
+    slot: usize,
     req: &Request,
     state: &mut Tenant,
-    busy: &mut BTreeMap<(usize, TenantId), f64>,
-    window_ns: u64,
-    duration_ns: u64,
-    n_windows: usize,
+    busy: &mut BusyLedger,
 ) -> Result<(), GpuError> {
     let kv_bytes = (req.prompt_len + req.gen_len).max(1) * KV_BYTES_PER_TOKEN;
     match api.mem_alloc(tenant, kv_bytes) {
@@ -201,32 +286,9 @@ fn service_request(
     let decode = api.launch_kernel(tenant, 0, &req.decode_kernel())?;
     api.sync_device(tenant)?;
     for (s, e) in [prefill, decode] {
-        record_busy(busy, tenant, s, e, window_ns, duration_ns, n_windows);
+        busy.record(slot, s, e);
     }
     Ok(())
-}
-
-/// Distribute a kernel's `[start, end)` busy span over the windows it
-/// overlaps (clipped at the horizon; spans past it fold into the last
-/// window's accounting only up to the horizon).
-fn record_busy(
-    busy: &mut BTreeMap<(usize, TenantId), f64>,
-    tenant: TenantId,
-    start: u64,
-    end: u64,
-    window_ns: u64,
-    duration_ns: u64,
-    n_windows: usize,
-) {
-    let end = end.min(duration_ns);
-    let mut s = start.min(end);
-    while s < end {
-        let w = window_of(s, window_ns, n_windows);
-        let w_end = ((w as u64 + 1) * window_ns).min(duration_ns).max(s + 1);
-        let e = end.min(w_end);
-        *busy.entry((w, tenant)).or_insert(0.0) += (e - s) as f64;
-        s = e;
-    }
 }
 
 /// Execute one scenario timeline on one system. `cfg.system` selects the
@@ -241,178 +303,245 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
 
     let mut events = spec.events.clone();
     events.sort_by_key(|e| (e.at_ms, e.tenant));
-    let mut ev_idx = 0usize;
 
-    let mut active: BTreeMap<TenantId, Tenant> = BTreeMap::new();
-    let mut ever: BTreeSet<TenantId> = BTreeSet::new();
-    // (tenant, arrival_ns, completion_ns) of successful requests.
-    let mut samples: Vec<(TenantId, u64, u64)> = Vec::new();
+    // Dense tenant universe: every tenant the timeline can ever touch is
+    // named by a scenario event, so per-tenant state lives in flat slots
+    // addressed by rank instead of tree maps keyed by id.
+    let mut universe: Vec<TenantId> = events.iter().map(|e| e.tenant).collect();
+    universe.sort_unstable();
+    universe.dedup();
+    let n_slots = universe.len();
+    let slot_of =
+        |tenant: TenantId| universe.binary_search(&tenant).expect("tenant in universe");
+
+    let mut slots: Vec<Option<Tenant>> = (0..n_slots).map(|_| None).collect();
+    let mut ever: Vec<bool> = vec![false; n_slots];
+    // (tenant, arrival_ns, completion_ns) of successful requests, sized
+    // from the scenario's aggregate Poisson rate.
+    let expected_arrivals = events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::Arrive { rate_hz, .. } => Some(rate_hz),
+            _ => None,
+        })
+        .sum::<f64>()
+        * (spec.duration_ms as f64 / 1e3);
+    let mut samples: Vec<(TenantId, u64, u64)> =
+        Vec::with_capacity((expected_arrivals as usize).min(1 << 22) + 16);
     let mut failed = 0usize;
-    let mut busy: BTreeMap<(usize, TenantId), f64> = BTreeMap::new();
+    let mut busy = BusyLedger::new(window_ns, duration_ns, n_windows, n_slots);
     let mut snap_mem: Vec<f64> = Vec::with_capacity(n_windows);
     let mut snap_frag: Vec<f64> = Vec::with_capacity(n_windows);
-    let mut snap_tenant_mem: Vec<BTreeMap<TenantId, f64>> = Vec::with_capacity(n_windows);
+    // SoA (window × slot) tenant-memory snapshots; 0.0 = not resident.
+    let mut snap_tenant_mem: Vec<f64> = vec![0.0; n_windows * n_slots];
     let mut fault: Option<(TenantId, u64)> = None;
     let mut recovery: Option<Recovery> = None;
+    let mut occurrences = 0u64;
+    // Tenant incarnation counter: bumped on every successful Arrive so
+    // arrival occurrences scheduled by superseded incarnations pop stale.
+    let mut epoch_counter = 0u64;
 
-    let boundary_ns =
-        |w: usize| ((w as u64 + 1) * window_ns).min(duration_ns);
+    let boundary_ns = |w: usize| ((w as u64 + 1) * window_ns).min(duration_ns);
 
-    loop {
-        let next_event_ns = events.get(ev_idx).map(|e| e.at_ms * 1_000_000);
-        let next_arrival: Option<(u64, TenantId)> =
-            active.iter().map(|(t, s)| (s.next_arrival_ns, *t)).min();
-        let t = match (next_event_ns, next_arrival) {
-            (None, None) => break,
-            (Some(te), None) => te,
-            (None, Some((ta, _))) => ta,
-            (Some(te), Some((ta, _))) => te.min(ta),
-        };
-        if t >= duration_ns {
-            break;
+    // Seed the queue: all boundaries (snapshots happen even on an empty
+    // timeline) and every scenario event inside the horizon. The old
+    // loop broke at the first occurrence >= duration and back-filled
+    // trailing windows; filtering here plus letting boundaries drain is
+    // the same schedule, since state only changes on API-touching
+    // occurrences and those all sit strictly inside the horizon.
+    let mut queue = EventQueue::with_capacity(n_windows + events.len() + n_slots + 1);
+    for w in 0..n_windows {
+        queue.push(Occ { t_ns: boundary_ns(w), kind: OccKind::Boundary(w) });
+    }
+    for (i, ev) in events.iter().enumerate() {
+        let t = ev.at_ms * 1_000_000;
+        if t < duration_ns {
+            queue.push(Occ { t_ns: t, kind: OccKind::Event(i) });
         }
-        // Snapshot every window boundary reached before this occurrence:
-        // nothing changes between consecutive occurrences, so the current
-        // state *is* the boundary state.
-        while snap_mem.len() < n_windows && boundary_ns(snap_mem.len()) <= t {
-            snap_mem.push(api.dev.memory.used() as f64 / dev_mem as f64);
-            snap_frag.push(api.dev.memory.frag_stats().fragmentation_index * 100.0);
-            snap_tenant_mem.push(
-                active
-                    .iter()
-                    .map(|(tid, s)| (*tid, s.held_bytes as f64 / dev_mem as f64))
-                    .collect(),
-            );
-        }
-        // Scenario events take precedence over request arrivals on ties.
-        if next_event_ns == Some(t) {
-            let ev = events[ev_idx];
-            ev_idx += 1;
-            match ev.kind {
-                EventKind::Arrive { rate_hz, quota_pct } => {
-                    let quota = dev_mem.saturating_mul(quota_pct as u64) / 100;
-                    let tc = TenantConfig::unlimited()
-                        .with_mem_limit(quota)
-                        .with_sm_limit(quota_pct as f64 / 100.0);
-                    api.dev.clock.advance_to(t);
-                    if api.ctx_create(ev.tenant, tc).is_ok() {
-                        let mut gen =
-                            RequestGenerator::new(tenant_stream_seed(cfg.seed, ev.tenant), rate_hz)
-                                .with_lengths(MAX_PROMPT, MAX_GEN);
-                        let pending = gen.next_request();
-                        let next_arrival_ns = t + pending.inter_arrival_ns.max(1.0) as u64;
-                        ever.insert(ev.tenant);
-                        active.insert(
-                            ev.tenant,
-                            Tenant {
+    }
+
+    while let Some(occ) = queue.pop() {
+        let t = occ.t_ns;
+        match occ.kind {
+            // Boundary pops rank first at equal t: the snapshot observes
+            // the state *before* any same-instant occurrence mutates it,
+            // exactly like the old loop's snapshot-before-process scan.
+            OccKind::Boundary(w) => {
+                occurrences += 1;
+                snap_mem.push(api.dev.memory.used() as f64 / dev_mem as f64);
+                snap_frag.push(api.dev.memory.frag_stats().fragmentation_index * 100.0);
+                for (slot, s) in slots.iter().enumerate() {
+                    if let Some(s) = s {
+                        snap_tenant_mem[w * n_slots + slot] =
+                            s.held_bytes as f64 / dev_mem as f64;
+                    }
+                }
+            }
+            // Scenario events take precedence over request arrivals on
+            // ties; equal-time events keep `(at_ms, tenant)` list order
+            // via the index.
+            OccKind::Event(i) => {
+                occurrences += 1;
+                let ev = events[i];
+                match ev.kind {
+                    EventKind::Arrive { rate_hz, quota_pct } => {
+                        let quota = dev_mem.saturating_mul(quota_pct as u64) / 100;
+                        let tc = TenantConfig::unlimited()
+                            .with_mem_limit(quota)
+                            .with_sm_limit(quota_pct as f64 / 100.0);
+                        api.dev.clock.advance_to(t);
+                        if api.ctx_create(ev.tenant, tc).is_ok() {
+                            let mut gen = RequestGenerator::new(
+                                tenant_stream_seed(cfg.seed, ev.tenant),
+                                rate_hz,
+                            )
+                            .with_lengths(MAX_PROMPT, MAX_GEN);
+                            let mut protos = VecDeque::with_capacity(PROTO_BATCH);
+                            let pending = draw_request(&mut gen, &mut protos);
+                            let next_arrival_ns = t + pending.inter_arrival_ns.max(1.0) as u64;
+                            epoch_counter += 1;
+                            let epoch = epoch_counter;
+                            let slot = slot_of(ev.tenant);
+                            ever[slot] = true;
+                            slots[slot] = Some(Tenant {
                                 gen,
+                                protos,
                                 quota_cfg: tc,
                                 base_rate_hz: rate_hz,
                                 burst_until_ns: None,
                                 pending,
-                                next_arrival_ns,
-                                ring: VecDeque::new(),
+                                epoch,
+                                ring: VecDeque::with_capacity(KV_RING + 1),
                                 held_bytes: 0,
-                            },
-                        );
-                    }
-                }
-                EventKind::Depart => {
-                    if active.remove(&ev.tenant).is_some() {
-                        api.dev.clock.advance_to(t);
-                        let _ = api.ctx_destroy(ev.tenant);
-                    }
-                }
-                EventKind::Burst { factor, until_ms } => {
-                    if let Some(s) = active.get_mut(&ev.tenant) {
-                        s.gen.rate_hz = s.base_rate_hz * factor;
-                        s.burst_until_ns = Some(until_ms * 1_000_000);
-                    }
-                }
-                EventKind::Fail => {
-                    api.dev.clock.advance_to(t);
-                    api.inject_fault(ev.tenant, GpuFault::IllegalAddress);
-                    fault = Some((ev.tenant, t));
-                }
-            }
-            continue;
-        }
-        // Request arrival: service in arrival order on the shared device.
-        let (_, tenant) = next_arrival.expect("an arrival chose t");
-        let state = active.get_mut(&tenant).expect("arrival of an active tenant");
-        let req = state.pending.clone();
-        api.dev.clock.advance_to(t);
-        let served = service_request(
-            &mut api, tenant, &req, state, &mut busy, window_ns, duration_ns, n_windows,
-        );
-        match served {
-            Ok(()) => samples.push((tenant, t, api.now_ns())),
-            Err(_) => {
-                // Fault path: the ERR-002 recovery cycle (destroy +
-                // recreate clears the poison and every held block), then
-                // one retry of the request.
-                let tc = state.quota_cfg;
-                state.ring.clear();
-                state.held_bytes = 0;
-                let _ = api.ctx_destroy(tenant);
-                let recovered = api.ctx_create(tenant, tc).is_ok()
-                    && service_request(
-                        &mut api, tenant, &req, state, &mut busy, window_ns, duration_ns,
-                        n_windows,
-                    )
-                    .is_ok();
-                if recovered {
-                    let completion = api.now_ns();
-                    samples.push((tenant, t, completion));
-                    if recovery.is_none() {
-                        if let Some((ft, fns)) = fault {
-                            if ft == tenant {
-                                recovery =
-                                    Some(Recovery { tenant, fault_ns: fns, recovered_ns: completion });
-                                fault = None;
+                            });
+                            if next_arrival_ns < duration_ns {
+                                queue.push(Occ {
+                                    t_ns: next_arrival_ns,
+                                    kind: OccKind::Arrival { tenant: ev.tenant, epoch },
+                                });
                             }
                         }
                     }
-                } else {
-                    failed += 1;
+                    EventKind::Depart => {
+                        if slots[slot_of(ev.tenant)].take().is_some() {
+                            api.dev.clock.advance_to(t);
+                            let _ = api.ctx_destroy(ev.tenant);
+                        }
+                    }
+                    EventKind::Burst { factor, until_ms } => {
+                        if let Some(s) = slots[slot_of(ev.tenant)].as_mut() {
+                            s.gen.rate_hz = s.base_rate_hz * factor;
+                            s.burst_until_ns = Some(until_ms * 1_000_000);
+                        }
+                    }
+                    EventKind::Fail => {
+                        api.dev.clock.advance_to(t);
+                        api.inject_fault(ev.tenant, GpuFault::IllegalAddress);
+                        fault = Some((ev.tenant, t));
+                    }
+                }
+            }
+            // Request arrival: service in arrival order on the shared
+            // device. Equal-time arrivals pop tenant-ascending.
+            OccKind::Arrival { tenant, epoch } => {
+                let slot = slot_of(tenant);
+                let Some(state) = slots[slot].as_mut() else {
+                    continue; // stale: scheduled by a departed incarnation
+                };
+                if state.epoch != epoch {
+                    continue; // stale: the tenant re-arrived since
+                }
+                occurrences += 1;
+                let req = state.pending.clone();
+                api.dev.clock.advance_to(t);
+                let served = service_request(&mut api, tenant, slot, &req, state, &mut busy);
+                match served {
+                    Ok(()) => samples.push((tenant, t, api.now_ns())),
+                    Err(_) => {
+                        // Fault path: the ERR-002 recovery cycle (destroy +
+                        // recreate clears the poison and every held block),
+                        // then one retry of the request.
+                        let tc = state.quota_cfg;
+                        state.ring.clear();
+                        state.held_bytes = 0;
+                        let _ = api.ctx_destroy(tenant);
+                        let recovered = api.ctx_create(tenant, tc).is_ok()
+                            && service_request(&mut api, tenant, slot, &req, state, &mut busy)
+                                .is_ok();
+                        if recovered {
+                            let completion = api.now_ns();
+                            samples.push((tenant, t, completion));
+                            if recovery.is_none() {
+                                if let Some((ft, fns)) = fault {
+                                    if ft == tenant {
+                                        recovery = Some(Recovery {
+                                            tenant,
+                                            fault_ns: fns,
+                                            recovered_ns: completion,
+                                        });
+                                        fault = None;
+                                    }
+                                }
+                            }
+                        } else {
+                            failed += 1;
+                        }
+                    }
+                }
+                // Burst expiry is checked lazily at the next draw.
+                if let Some(until) = state.burst_until_ns {
+                    if t >= until {
+                        state.gen.rate_hz = state.base_rate_hz;
+                        state.burst_until_ns = None;
+                    }
+                }
+                state.pending = draw_request(&mut state.gen, &mut state.protos);
+                let next_arrival_ns = t + state.pending.inter_arrival_ns.max(1.0) as u64;
+                if next_arrival_ns < duration_ns {
+                    queue.push(Occ {
+                        t_ns: next_arrival_ns,
+                        kind: OccKind::Arrival { tenant, epoch },
+                    });
                 }
             }
         }
-        // Burst expiry is checked lazily at the next draw.
-        if let Some(until) = state.burst_until_ns {
-            if t >= until {
-                state.gen.rate_hz = state.base_rate_hz;
-                state.burst_until_ns = None;
-            }
-        }
-        state.pending = state.gen.next_request();
-        state.next_arrival_ns = t + state.pending.inter_arrival_ns.max(1.0) as u64;
     }
-    // Trailing windows (no further occurrences): the final state holds.
-    while snap_mem.len() < n_windows {
-        snap_mem.push(api.dev.memory.used() as f64 / dev_mem as f64);
-        snap_frag.push(api.dev.memory.frag_stats().fragmentation_index * 100.0);
-        snap_tenant_mem.push(
-            active
-                .iter()
-                .map(|(tid, s)| (*tid, s.held_bytes as f64 / dev_mem as f64))
-                .collect(),
-        );
-    }
+    debug_assert_eq!(snap_mem.len(), n_windows, "every boundary popped exactly once");
 
     // ---- reduce to windowed series --------------------------------------
-    let tenants: Vec<TenantId> = ever.iter().copied().collect();
-    let mut window_lats: Vec<Vec<f64>> = vec![Vec::new(); n_windows];
+    let tenant_slots: Vec<(usize, TenantId)> = universe
+        .iter()
+        .enumerate()
+        .filter(|(slot, _)| ever[*slot])
+        .map(|(slot, t)| (slot, *t))
+        .collect();
+    let tenants: Vec<TenantId> = tenant_slots.iter().map(|&(_, t)| t).collect();
+    // SoA latency buckets: counts → prefix offsets → one flat fill, no
+    // per-window Vec allocations. Within-window order is completion
+    // order, same as the old per-window pushes (and `stats::percentile`
+    // sorts a copy, so only the multiset matters anyway).
+    let mut lat_counts = vec![0usize; n_windows];
+    for &(_, _, completion) in &samples {
+        lat_counts[window_of(completion, window_ns, n_windows)] += 1;
+    }
+    let mut lat_starts = vec![0usize; n_windows + 1];
+    for w in 0..n_windows {
+        lat_starts[w + 1] = lat_starts[w] + lat_counts[w];
+    }
+    let mut lats_flat = vec![0.0f64; samples.len()];
+    let mut fill = lat_starts.clone();
     for &(_, arrival, completion) in &samples {
         let w = window_of(completion, window_ns, n_windows);
-        window_lats[w].push((completion.saturating_sub(arrival)) as f64 / 1e6);
+        lats_flat[fill[w]] = (completion.saturating_sub(arrival)) as f64 / 1e6;
+        fill[w] += 1;
     }
     let recovery_window = recovery.map(|r| window_of(r.recovered_ns, window_ns, n_windows));
-    let mut series: Vec<SeriesPoint> = Vec::new();
+    let mut series: Vec<SeriesPoint> =
+        Vec::with_capacity(n_windows * (6 + 2 * tenants.len()) + 1);
     let mut window_p99: Vec<f64> = Vec::with_capacity(n_windows);
     for w in 0..n_windows {
         let win_len_ns = (boundary_ns(w) - (w as u64) * window_ns).max(1) as f64;
-        let lats = &window_lats[w];
+        let lats = &lats_flat[lat_starts[w]..lat_starts[w + 1]];
         let (p50, p99) = if lats.is_empty() {
             (f64::NAN, f64::NAN)
         } else {
@@ -420,8 +549,7 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
         };
         window_p99.push(p99);
         let thr = lats.len() as f64 / (win_len_ns / 1e9);
-        let agg_busy: f64 =
-            tenants.iter().map(|t| busy.get(&(w, *t)).copied().unwrap_or(0.0)).sum();
+        let agg_busy: f64 = tenant_slots.iter().map(|&(slot, _)| busy.cell(w, slot)).sum();
         series.push(SeriesPoint { window: w, tenant: None, id: "DYN-LAT-P50", value: p50 });
         series.push(SeriesPoint { window: w, tenant: None, id: "DYN-LAT-P99", value: p99 });
         series.push(SeriesPoint { window: w, tenant: None, id: "DYN-THR", value: thr });
@@ -433,18 +561,18 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
         });
         series.push(SeriesPoint { window: w, tenant: None, id: "DYN-MEM", value: snap_mem[w] });
         series.push(SeriesPoint { window: w, tenant: None, id: "DYN-FRAG", value: snap_frag[w] });
-        for &t in &tenants {
+        for &(slot, t) in &tenant_slots {
             series.push(SeriesPoint {
                 window: w,
                 tenant: Some(t),
                 id: "DYN-SM",
-                value: busy.get(&(w, t)).copied().unwrap_or(0.0) / win_len_ns,
+                value: busy.cell(w, slot) / win_len_ns,
             });
             series.push(SeriesPoint {
                 window: w,
                 tenant: Some(t),
                 id: "DYN-MEM",
-                value: snap_tenant_mem[w].get(&t).copied().unwrap_or(0.0),
+                value: snap_tenant_mem[w * n_slots + slot],
             });
         }
         if recovery_window == Some(w) {
@@ -477,6 +605,7 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
         ("DYN-WORST-WIN", worst_win),
         ("DYN-THR-MEAN", thr_mean),
         ("DYN-RECOVERY", recovery_ms),
+        ("DYN-EVENTS", occurrences as f64),
     ];
 
     ScenarioRun {
@@ -491,6 +620,7 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
         completed: samples.len(),
         failed,
         recovery,
+        occurrences,
     }
 }
 
@@ -536,6 +666,11 @@ mod tests {
         }
         assert!(r.summary_value("DYN-THR-MEAN").unwrap() > 50.0);
         assert_eq!(r.summary_value("DYN-RECOVERY"), Some(0.0));
+        // DYN-EVENTS is the exact occurrence count: every window boundary,
+        // every scenario event (steady's 4 arrivals at t=0), and every
+        // serviced request arrival (completed or abandoned).
+        assert_eq!(r.summary_value("DYN-EVENTS"), Some(r.occurrences as f64));
+        assert_eq!(r.occurrences as usize, r.windows + 4 + r.completed + r.failed);
     }
 
     #[test]
@@ -550,6 +685,7 @@ mod tests {
             assert_eq!(x.value.to_bits(), y.value.to_bits(), "{}/{}", x.id, x.window);
         }
         assert_eq!(a.summary, b.summary);
+        assert_eq!(a.occurrences, b.occurrences);
     }
 
     #[test]
@@ -611,5 +747,45 @@ mod tests {
         // The 4x burst through the middle must make some window visibly
         // worse than the steady state.
         assert!(worst > 0.0, "worst-window degradation {worst}% (p99s {p99:?})");
+    }
+
+    #[test]
+    fn matches_the_frozen_reference_engine_bitwise() {
+        // One cell of the full old-vs-new proof (the 2×2 grid at both job
+        // counts lives in `rust/tests/dynamics_determinism.rs`): the
+        // event-queue core and the frozen pre-rewrite min-scan loop must
+        // agree bit-for-bit on every surface field.
+        for (system, scenario) in [("hami", "churn"), ("native", "failover")] {
+            let spec = ScenarioSpec::preset(scenario, 400, 50).unwrap();
+            let cfg = cfg_for(system, scenario, 400, 50);
+            let new = run_scenario(&cfg, &spec);
+            let old = crate::dynsim::reference::run_scenario_reference(&cfg, &spec);
+            assert_eq!(new.tenants, old.tenants, "{system}/{scenario}");
+            assert_eq!(new.series.len(), old.series.len(), "{system}/{scenario}");
+            for (x, y) in new.series.iter().zip(&old.series) {
+                assert_eq!(x.window, y.window, "{system}/{scenario}");
+                assert_eq!(x.tenant, y.tenant, "{system}/{scenario}/{}", x.id);
+                assert_eq!(x.id, y.id, "{system}/{scenario}/w{}", x.window);
+                assert_eq!(
+                    x.value.to_bits(),
+                    y.value.to_bits(),
+                    "{system}/{scenario}: {} w{} t{:?}: {} vs {}",
+                    x.id,
+                    x.window,
+                    x.tenant,
+                    x.value,
+                    y.value
+                );
+            }
+            assert_eq!(new.summary.len(), old.summary.len());
+            for ((xi, xv), (yi, yv)) in new.summary.iter().zip(&old.summary) {
+                assert_eq!(xi, yi);
+                assert_eq!(xv.to_bits(), yv.to_bits(), "{system}/{scenario}: {xi}");
+            }
+            assert_eq!(new.completed, old.completed, "{system}/{scenario}");
+            assert_eq!(new.failed, old.failed, "{system}/{scenario}");
+            assert_eq!(new.recovery, old.recovery, "{system}/{scenario}");
+            assert_eq!(new.occurrences, old.occurrences, "{system}/{scenario}");
+        }
     }
 }

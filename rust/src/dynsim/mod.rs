@@ -12,14 +12,18 @@
 //! - [`scenario`] declares a timeline ([`ScenarioSpec`]): tenant
 //!   arrive/depart/burst/fail events on a `duration_ms` horizon, with
 //!   four named presets (`steady`, `churn`, `spike`, `failover`).
-//! - [`engine`] replays one timeline against one virtualization backend:
-//!   per-tenant Poisson request streams
+//! - [`engine`] replays one timeline against one virtualization backend
+//!   on a discrete-event core: [`queue`]'s deterministic min-queue pops
+//!   every occurrence (window boundary, scenario event, request arrival)
+//!   in `(t, kind rank, key)` order, per-tenant Poisson request streams
 //!   ([`crate::coordinator::workload::RequestGenerator`]) drive
 //!   prefill/decode-phased LLM traffic through the full `cudalite`
 //!   driver path, and the run reduces to **windowed time series**
 //!   (latency p50/p99, throughput, per-tenant SM/memory occupancy,
 //!   fragmentation ratio, fault recovery time) plus per-scenario summary
-//!   statistics.
+//!   statistics, including the gateable `DYN-EVENTS` occurrence count.
+//!   The pre-rewrite min-scan loop is frozen in [`reference`] as the
+//!   executable specification the event core is proven bit-identical to.
 //! - [`run_dynamics`] expands a [`DynSpec`] — systems × scenarios on one
 //!   (duration, window) geometry — into one flat task list sharded
 //!   through the parallel executor
@@ -36,6 +40,8 @@
 //! `docs/dynamics.md`.
 
 pub mod engine;
+pub mod queue;
+pub mod reference;
 pub mod scenario;
 
 pub use engine::{Recovery, ScenarioRun, SeriesPoint};

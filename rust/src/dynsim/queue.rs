@@ -1,0 +1,146 @@
+//! Deterministic discrete-event queue for the dynsim replay loop.
+//!
+//! The engine schedules every timeline occurrence — window boundaries,
+//! scenario events, tenant request arrivals — on one min-queue over
+//! virtual time, popping the next occurrence in O(log n) instead of the
+//! pre-rewrite O(tenants) min-scan. Determinism at any `--jobs` count
+//! requires a *total* order, so ties at equal timestamps break on
+//! `(kind rank, key)`:
+//!
+//! 1. **Boundary** — window-boundary snapshots observe the state *before*
+//!    any same-instant occurrence mutates it (the old loop snapshotted
+//!    every boundary `<= t` before processing the occurrence at `t`);
+//! 2. **Event** — scenario events take precedence over request arrivals
+//!    on ties (the old loop's `continue` semantics), equal-time events
+//!    keeping their `(at_ms, tenant)`-sorted list order via the index;
+//! 3. **Arrival** — equal-time arrivals of different tenants pop
+//!    tenant-ascending, matching the old min-scan over
+//!    `(next_arrival_ns, tenant)` tuples.
+//!
+//! The order is pure data (no hash state, no insertion order), so a heap
+//! rebuilt from any permutation of the same occurrences drains
+//! identically — the property `rust/tests/prop_invariants.rs` checks.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::simgpu::TenantId;
+
+/// What a queued occurrence is. Variant declaration order *is* the
+/// tie-break rank at equal timestamps (the derived [`Ord`] compares
+/// discriminants first, then fields lexicographically).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OccKind {
+    /// Snapshot boundary of window `w`.
+    Boundary(usize),
+    /// Scenario event, as an index into the spec's `(at_ms, tenant)`-
+    /// sorted event list.
+    Event(usize),
+    /// Next request arrival of a tenant. `epoch` identifies the tenant
+    /// incarnation that scheduled it: a pop whose epoch no longer matches
+    /// the live state (the tenant departed, or departed and re-arrived)
+    /// is stale and must be skipped.
+    Arrival { tenant: TenantId, epoch: u64 },
+}
+
+/// One timestamped occurrence. Ordered by `(t_ns, kind)` — virtual time
+/// first, then the [`OccKind`] tie-break.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Occ {
+    /// Virtual time of the occurrence, ns.
+    pub t_ns: u64,
+    pub kind: OccKind,
+}
+
+/// Min-queue over [`Occ`] in the deterministic `(t, kind rank, key)`
+/// total order.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Occ>>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Preallocate for `cap` occurrences (the engine sizes the queue from
+    /// the window count, event count and tenant universe up front).
+    pub fn with_capacity(cap: usize) -> EventQueue {
+        EventQueue { heap: BinaryHeap::with_capacity(cap) }
+    }
+
+    pub fn push(&mut self, occ: Occ) {
+        self.heap.push(Reverse(occ));
+    }
+
+    /// Pop the earliest occurrence (ties broken by kind rank, then key).
+    pub fn pop(&mut self) -> Option<Occ> {
+        self.heap.pop().map(|Reverse(o)| o)
+    }
+
+    /// The earliest occurrence without removing it.
+    pub fn peek(&self) -> Option<&Occ> {
+        self.heap.peek().map(|Reverse(o)| o)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(Occ { t_ns: 30, kind: OccKind::Event(0) });
+        q.push(Occ { t_ns: 10, kind: OccKind::Arrival { tenant: 5, epoch: 1 } });
+        q.push(Occ { t_ns: 20, kind: OccKind::Boundary(0) });
+        let times: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|o| o.t_ns).collect();
+        assert_eq!(times, vec![10, 20, 30]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_time_ties_break_boundary_event_arrival() {
+        let mut q = EventQueue::with_capacity(4);
+        q.push(Occ { t_ns: 100, kind: OccKind::Arrival { tenant: 1, epoch: 3 } });
+        q.push(Occ { t_ns: 100, kind: OccKind::Event(2) });
+        q.push(Occ { t_ns: 100, kind: OccKind::Boundary(1) });
+        q.push(Occ { t_ns: 100, kind: OccKind::Event(1) });
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.peek().unwrap().kind, OccKind::Boundary(1));
+        let kinds: Vec<OccKind> = std::iter::from_fn(|| q.pop()).map(|o| o.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                OccKind::Boundary(1),
+                OccKind::Event(1),
+                OccKind::Event(2),
+                OccKind::Arrival { tenant: 1, epoch: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn equal_time_arrivals_pop_tenant_ascending() {
+        let mut q = EventQueue::new();
+        for tenant in [4u32, 1, 3, 2] {
+            q.push(Occ { t_ns: 7, kind: OccKind::Arrival { tenant, epoch: tenant as u64 } });
+        }
+        let tenants: Vec<TenantId> = std::iter::from_fn(|| q.pop())
+            .map(|o| match o.kind {
+                OccKind::Arrival { tenant, .. } => tenant,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(tenants, vec![1, 2, 3, 4]);
+    }
+}

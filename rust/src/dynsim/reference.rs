@@ -1,0 +1,386 @@
+//! The **frozen pre-rewrite replay loop**, kept verbatim as the
+//! executable specification of [`super::engine::run_scenario`]'s output.
+//!
+//! This is the O(occurrences × tenants) min-scan engine the event-queue
+//! core replaced. It must never be optimized or otherwise diverge: the
+//! byte-identity contract of the rewrite ("same CSV/JSON surfaces at any
+//! `--jobs` count") is proven by `rust/tests/dynamics_determinism.rs`
+//! replaying grids through both engines and asserting bit-identical
+//! [`ScenarioRun`]s, and by the committed golden surfaces in
+//! `rust/tests/goldens/`. Production paths (CLI, regress, benches'
+//! scaling sections) call the event-queue core; only the equivalence
+//! test and the old-vs-new bench comparison call this.
+//!
+//! The only additions over the historical loop are the occurrence
+//! counter feeding the `DYN-EVENTS` summary statistic and the
+//! [`ScenarioRun::occurrences`] field, which the event core must
+//! reproduce exactly: one count per window-boundary snapshot, processed
+//! scenario event, and serviced request arrival.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::coordinator::workload::{Request, RequestGenerator};
+use crate::cudalite::Api;
+use crate::metrics::RunConfig;
+use crate::simgpu::error::{GpuError, GpuFault};
+use crate::simgpu::memory::DevicePtr;
+use crate::simgpu::TenantId;
+use crate::virt::TenantConfig;
+
+use super::engine::{
+    tenant_stream_seed, window_of, Recovery, ScenarioRun, SeriesPoint, KV_BYTES_PER_TOKEN,
+    KV_RING, MAX_GEN, MAX_PROMPT,
+};
+use super::scenario::{EventKind, ScenarioSpec};
+
+/// Live per-tenant state of the reference loop.
+struct Tenant {
+    gen: RequestGenerator,
+    quota_cfg: TenantConfig,
+    base_rate_hz: f64,
+    burst_until_ns: Option<u64>,
+    /// The next request, drawn ahead so its arrival time is known.
+    pending: Request,
+    next_arrival_ns: u64,
+    /// Resident KV blocks `(ptr, bytes)`, oldest first.
+    ring: VecDeque<(DevicePtr, u64)>,
+    held_bytes: u64,
+}
+
+/// Drive one request through the virtualized driver path (frozen copy;
+/// the live engine's version routes busy spans through its dense
+/// ledger instead of a `BTreeMap`).
+#[allow(clippy::too_many_arguments)]
+fn service_request(
+    api: &mut Api,
+    tenant: TenantId,
+    req: &Request,
+    state: &mut Tenant,
+    busy: &mut BTreeMap<(usize, TenantId), f64>,
+    window_ns: u64,
+    duration_ns: u64,
+    n_windows: usize,
+) -> Result<(), GpuError> {
+    let kv_bytes = (req.prompt_len + req.gen_len).max(1) * KV_BYTES_PER_TOKEN;
+    match api.mem_alloc(tenant, kv_bytes) {
+        Ok(p) => {
+            state.ring.push_back((p, kv_bytes));
+            state.held_bytes += kv_bytes;
+            if state.ring.len() > KV_RING {
+                let (old, sz) = state.ring.pop_front().expect("ring non-empty");
+                state.held_bytes = state.held_bytes.saturating_sub(sz);
+                api.mem_free(tenant, old)?;
+            }
+        }
+        Err(GpuError::QuotaExceeded) | Err(GpuError::OutOfMemory) => {
+            // Quota pressure: evict the oldest cached block and serve the
+            // request without caching this one.
+            if let Some((old, sz)) = state.ring.pop_front() {
+                state.held_bytes = state.held_bytes.saturating_sub(sz);
+                api.mem_free(tenant, old)?;
+            }
+        }
+        Err(e) => return Err(e),
+    }
+    let prefill = api.launch_kernel(tenant, 0, &req.prefill_kernel())?;
+    let decode = api.launch_kernel(tenant, 0, &req.decode_kernel())?;
+    api.sync_device(tenant)?;
+    for (s, e) in [prefill, decode] {
+        record_busy(busy, tenant, s, e, window_ns, duration_ns, n_windows);
+    }
+    Ok(())
+}
+
+/// Distribute a kernel's `[start, end)` busy span over the windows it
+/// overlaps (clipped at the horizon).
+#[allow(clippy::too_many_arguments)]
+fn record_busy(
+    busy: &mut BTreeMap<(usize, TenantId), f64>,
+    tenant: TenantId,
+    start: u64,
+    end: u64,
+    window_ns: u64,
+    duration_ns: u64,
+    n_windows: usize,
+) {
+    let end = end.min(duration_ns);
+    let mut s = start.min(end);
+    while s < end {
+        let w = window_of(s, window_ns, n_windows);
+        let w_end = ((w as u64 + 1) * window_ns).min(duration_ns).max(s + 1);
+        let e = end.min(w_end);
+        *busy.entry((w, tenant)).or_insert(0.0) += (e - s) as f64;
+        s = e;
+    }
+}
+
+/// Execute one scenario timeline with the pre-rewrite min-scan loop.
+/// Same contract as [`super::engine::run_scenario`]; used only to prove
+/// the event-queue core bit-identical.
+pub fn run_scenario_reference(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
+    let mut api = Api::with_backend(&cfg.system, cfg.seed);
+    let dev_mem = api.dev.spec.hbm_bytes;
+    let duration_ns = spec.duration_ms.max(1) * 1_000_000;
+    let window_ns = spec.window_ms.max(1) * 1_000_000;
+    let n_windows = spec.windows().max(1);
+
+    let mut events = spec.events.clone();
+    events.sort_by_key(|e| (e.at_ms, e.tenant));
+    let mut ev_idx = 0usize;
+
+    let mut active: BTreeMap<TenantId, Tenant> = BTreeMap::new();
+    let mut ever: BTreeSet<TenantId> = BTreeSet::new();
+    // (tenant, arrival_ns, completion_ns) of successful requests.
+    let mut samples: Vec<(TenantId, u64, u64)> = Vec::new();
+    let mut failed = 0usize;
+    let mut busy: BTreeMap<(usize, TenantId), f64> = BTreeMap::new();
+    let mut snap_mem: Vec<f64> = Vec::with_capacity(n_windows);
+    let mut snap_frag: Vec<f64> = Vec::with_capacity(n_windows);
+    let mut snap_tenant_mem: Vec<BTreeMap<TenantId, f64>> = Vec::with_capacity(n_windows);
+    let mut fault: Option<(TenantId, u64)> = None;
+    let mut recovery: Option<Recovery> = None;
+    let mut occurrences = 0u64;
+
+    let boundary_ns = |w: usize| ((w as u64 + 1) * window_ns).min(duration_ns);
+
+    loop {
+        let next_event_ns = events.get(ev_idx).map(|e| e.at_ms * 1_000_000);
+        let next_arrival: Option<(u64, TenantId)> =
+            active.iter().map(|(t, s)| (s.next_arrival_ns, *t)).min();
+        let t = match (next_event_ns, next_arrival) {
+            (None, None) => break,
+            (Some(te), None) => te,
+            (None, Some((ta, _))) => ta,
+            (Some(te), Some((ta, _))) => te.min(ta),
+        };
+        if t >= duration_ns {
+            break;
+        }
+        // Snapshot every window boundary reached before this occurrence:
+        // nothing changes between consecutive occurrences, so the current
+        // state *is* the boundary state.
+        while snap_mem.len() < n_windows && boundary_ns(snap_mem.len()) <= t {
+            occurrences += 1;
+            snap_mem.push(api.dev.memory.used() as f64 / dev_mem as f64);
+            snap_frag.push(api.dev.memory.frag_stats().fragmentation_index * 100.0);
+            snap_tenant_mem.push(
+                active
+                    .iter()
+                    .map(|(tid, s)| (*tid, s.held_bytes as f64 / dev_mem as f64))
+                    .collect(),
+            );
+        }
+        // Scenario events take precedence over request arrivals on ties.
+        if next_event_ns == Some(t) {
+            let ev = events[ev_idx];
+            ev_idx += 1;
+            occurrences += 1;
+            match ev.kind {
+                EventKind::Arrive { rate_hz, quota_pct } => {
+                    let quota = dev_mem.saturating_mul(quota_pct as u64) / 100;
+                    let tc = TenantConfig::unlimited()
+                        .with_mem_limit(quota)
+                        .with_sm_limit(quota_pct as f64 / 100.0);
+                    api.dev.clock.advance_to(t);
+                    if api.ctx_create(ev.tenant, tc).is_ok() {
+                        let mut gen =
+                            RequestGenerator::new(tenant_stream_seed(cfg.seed, ev.tenant), rate_hz)
+                                .with_lengths(MAX_PROMPT, MAX_GEN);
+                        let pending = gen.next_request();
+                        let next_arrival_ns = t + pending.inter_arrival_ns.max(1.0) as u64;
+                        ever.insert(ev.tenant);
+                        active.insert(
+                            ev.tenant,
+                            Tenant {
+                                gen,
+                                quota_cfg: tc,
+                                base_rate_hz: rate_hz,
+                                burst_until_ns: None,
+                                pending,
+                                next_arrival_ns,
+                                ring: VecDeque::new(),
+                                held_bytes: 0,
+                            },
+                        );
+                    }
+                }
+                EventKind::Depart => {
+                    if active.remove(&ev.tenant).is_some() {
+                        api.dev.clock.advance_to(t);
+                        let _ = api.ctx_destroy(ev.tenant);
+                    }
+                }
+                EventKind::Burst { factor, until_ms } => {
+                    if let Some(s) = active.get_mut(&ev.tenant) {
+                        s.gen.rate_hz = s.base_rate_hz * factor;
+                        s.burst_until_ns = Some(until_ms * 1_000_000);
+                    }
+                }
+                EventKind::Fail => {
+                    api.dev.clock.advance_to(t);
+                    api.inject_fault(ev.tenant, GpuFault::IllegalAddress);
+                    fault = Some((ev.tenant, t));
+                }
+            }
+            continue;
+        }
+        // Request arrival: service in arrival order on the shared device.
+        let (_, tenant) = next_arrival.expect("an arrival chose t");
+        let state = active.get_mut(&tenant).expect("arrival of an active tenant");
+        let req = state.pending.clone();
+        occurrences += 1;
+        api.dev.clock.advance_to(t);
+        let served = service_request(
+            &mut api, tenant, &req, state, &mut busy, window_ns, duration_ns, n_windows,
+        );
+        match served {
+            Ok(()) => samples.push((tenant, t, api.now_ns())),
+            Err(_) => {
+                // Fault path: the ERR-002 recovery cycle (destroy +
+                // recreate clears the poison and every held block), then
+                // one retry of the request.
+                let tc = state.quota_cfg;
+                state.ring.clear();
+                state.held_bytes = 0;
+                let _ = api.ctx_destroy(tenant);
+                let recovered = api.ctx_create(tenant, tc).is_ok()
+                    && service_request(
+                        &mut api, tenant, &req, state, &mut busy, window_ns, duration_ns,
+                        n_windows,
+                    )
+                    .is_ok();
+                if recovered {
+                    let completion = api.now_ns();
+                    samples.push((tenant, t, completion));
+                    if recovery.is_none() {
+                        if let Some((ft, fns)) = fault {
+                            if ft == tenant {
+                                recovery =
+                                    Some(Recovery { tenant, fault_ns: fns, recovered_ns: completion });
+                                fault = None;
+                            }
+                        }
+                    }
+                } else {
+                    failed += 1;
+                }
+            }
+        }
+        // Burst expiry is checked lazily at the next draw.
+        if let Some(until) = state.burst_until_ns {
+            if t >= until {
+                state.gen.rate_hz = state.base_rate_hz;
+                state.burst_until_ns = None;
+            }
+        }
+        state.pending = state.gen.next_request();
+        state.next_arrival_ns = t + state.pending.inter_arrival_ns.max(1.0) as u64;
+    }
+    // Trailing windows (no further occurrences): the final state holds.
+    while snap_mem.len() < n_windows {
+        occurrences += 1;
+        snap_mem.push(api.dev.memory.used() as f64 / dev_mem as f64);
+        snap_frag.push(api.dev.memory.frag_stats().fragmentation_index * 100.0);
+        snap_tenant_mem.push(
+            active
+                .iter()
+                .map(|(tid, s)| (*tid, s.held_bytes as f64 / dev_mem as f64))
+                .collect(),
+        );
+    }
+
+    // ---- reduce to windowed series --------------------------------------
+    let tenants: Vec<TenantId> = ever.iter().copied().collect();
+    let mut window_lats: Vec<Vec<f64>> = vec![Vec::new(); n_windows];
+    for &(_, arrival, completion) in &samples {
+        let w = window_of(completion, window_ns, n_windows);
+        window_lats[w].push((completion.saturating_sub(arrival)) as f64 / 1e6);
+    }
+    let recovery_window = recovery.map(|r| window_of(r.recovered_ns, window_ns, n_windows));
+    let mut series: Vec<SeriesPoint> = Vec::new();
+    let mut window_p99: Vec<f64> = Vec::with_capacity(n_windows);
+    for w in 0..n_windows {
+        let win_len_ns = (boundary_ns(w) - (w as u64) * window_ns).max(1) as f64;
+        let lats = &window_lats[w];
+        let (p50, p99) = if lats.is_empty() {
+            (f64::NAN, f64::NAN)
+        } else {
+            (crate::stats::percentile(lats, 50.0), crate::stats::percentile(lats, 99.0))
+        };
+        window_p99.push(p99);
+        let thr = lats.len() as f64 / (win_len_ns / 1e9);
+        let agg_busy: f64 =
+            tenants.iter().map(|t| busy.get(&(w, *t)).copied().unwrap_or(0.0)).sum();
+        series.push(SeriesPoint { window: w, tenant: None, id: "DYN-LAT-P50", value: p50 });
+        series.push(SeriesPoint { window: w, tenant: None, id: "DYN-LAT-P99", value: p99 });
+        series.push(SeriesPoint { window: w, tenant: None, id: "DYN-THR", value: thr });
+        series.push(SeriesPoint {
+            window: w,
+            tenant: None,
+            id: "DYN-SM",
+            value: agg_busy / win_len_ns,
+        });
+        series.push(SeriesPoint { window: w, tenant: None, id: "DYN-MEM", value: snap_mem[w] });
+        series.push(SeriesPoint { window: w, tenant: None, id: "DYN-FRAG", value: snap_frag[w] });
+        for &t in &tenants {
+            series.push(SeriesPoint {
+                window: w,
+                tenant: Some(t),
+                id: "DYN-SM",
+                value: busy.get(&(w, t)).copied().unwrap_or(0.0) / win_len_ns,
+            });
+            series.push(SeriesPoint {
+                window: w,
+                tenant: Some(t),
+                id: "DYN-MEM",
+                value: snap_tenant_mem[w].get(&t).copied().unwrap_or(0.0),
+            });
+        }
+        if recovery_window == Some(w) {
+            let r = recovery.expect("recovery window implies recovery");
+            series.push(SeriesPoint {
+                window: w,
+                tenant: Some(r.tenant),
+                id: "DYN-RECOVERY",
+                value: r.recovery_ms(),
+            });
+        }
+    }
+
+    // ---- per-scenario summary (the regress-gateable surface) ------------
+    let p99s: Vec<f64> = window_p99.iter().copied().filter(|v| v.is_finite()).collect();
+    let steady = if p99s.is_empty() { 0.0 } else { crate::stats::percentile(&p99s, 50.0) };
+    let worst = p99s.iter().copied().fold(0.0f64, f64::max);
+    let worst_win = if steady > 0.0 { (worst / steady - 1.0) * 100.0 } else { 0.0 };
+    let thr_mean = samples.len() as f64 / (spec.duration_ms.max(1) as f64 / 1e3);
+    // 0 = no fault injected. A fault that never recovered inside the
+    // horizon must not read as 0 too (lower-better would score total
+    // recovery failure as perfection): report the full horizon instead.
+    let recovery_ms = match (recovery, fault) {
+        (Some(r), _) => r.recovery_ms(),
+        (None, Some(_)) => spec.duration_ms as f64,
+        (None, None) => 0.0,
+    };
+    let summary = vec![
+        ("DYN-P99-STEADY", steady),
+        ("DYN-WORST-WIN", worst_win),
+        ("DYN-THR-MEAN", thr_mean),
+        ("DYN-RECOVERY", recovery_ms),
+        ("DYN-EVENTS", occurrences as f64),
+    ];
+
+    ScenarioRun {
+        system: cfg.system.clone(),
+        scenario: spec.name,
+        duration_ms: spec.duration_ms,
+        window_ms: spec.window_ms,
+        windows: n_windows,
+        tenants,
+        series,
+        summary,
+        completed: samples.len(),
+        failed,
+        recovery,
+        occurrences,
+    }
+}

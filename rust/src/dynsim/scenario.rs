@@ -144,6 +144,40 @@ impl ScenarioSpec {
         Some(ScenarioSpec { name, duration_ms, window_ms, events })
     }
 
+    /// Build an ad-hoc uniform-load timeline: `tenants` tenants all
+    /// arriving at `t = 0` with the same rate and quota. Not a named
+    /// preset — the CLI only exposes [`ScenarioSpec::preset`] — but the
+    /// scale harness (`benches/dynamics_scaling.rs`) uses it to push the
+    /// event core to 10³-tenant / 10⁶-occurrence horizons that no preset
+    /// reaches.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use gvb::dynsim::scenario::ScenarioSpec;
+    ///
+    /// let sc = ScenarioSpec::uniform_load("bench-uniform", 1000, 10.0, 1, 100_000, 1_000);
+    /// assert_eq!(sc.events.len(), 1000);
+    /// assert_eq!(sc.windows(), 100);
+    /// ```
+    pub fn uniform_load(
+        name: &'static str,
+        tenants: u32,
+        rate_hz: f64,
+        quota_pct: u32,
+        duration_ms: u64,
+        window_ms: u64,
+    ) -> ScenarioSpec {
+        let events = (1..=tenants)
+            .map(|tenant| TenantEvent {
+                at_ms: 0,
+                tenant,
+                kind: EventKind::Arrive { rate_hz, quota_pct },
+            })
+            .collect();
+        ScenarioSpec { name, duration_ms, window_ms, events }
+    }
+
     /// Number of reporting windows (the last window is truncated when
     /// `window_ms` does not divide `duration_ms`; see
     /// [`crate::dynsim::ScenarioRun::window_end_ms`] for window ends).

@@ -171,11 +171,12 @@ pub const DYN_SERIES: [Descriptor; 6] = [
 /// Per-scenario summary statistics the dynsim engine reduces each
 /// timeline to — the regress-compatible surface (`gvbench dynamics
 /// --summary-out`) the regression engine gates like sweep cells.
-pub const DYN_SUMMARY: [Descriptor; 4] = [
+pub const DYN_SUMMARY: [Descriptor; 5] = [
     Descriptor { id: "DYN-P99-STEADY", name: "Steady-State P99 Latency", description: "Median across windows of the per-window P99 latency", unit: "ms", category: C::Llm, direction: D::LowerBetter },
     Descriptor { id: "DYN-WORST-WIN", name: "Worst-Window Degradation", description: "Worst window P99 vs the steady-state P99", unit: "%", category: C::Scheduling, direction: D::LowerBetter },
     Descriptor { id: "DYN-THR-MEAN", name: "Mean Throughput", description: "Completed requests per second over the whole timeline", unit: "req/s", category: C::Llm, direction: D::HigherBetter },
     Descriptor { id: "DYN-RECOVERY", name: "Fault Recovery Time", description: "Injected fault to first successful request of the faulted tenant (0 = no fault; the full horizon = never recovered)", unit: "ms", category: C::ErrorRecovery, direction: D::LowerBetter },
+    Descriptor { id: "DYN-EVENTS", name: "Occurrences Processed", description: "Event-core occurrences replayed: window boundaries + scenario events + serviced request arrivals (virtual-time-deterministic, so gateable)", unit: "count", category: C::Scheduling, direction: D::HigherBetter },
 ];
 
 /// Per-cell summary statistics the cluster placement simulator reduces
@@ -276,6 +277,11 @@ mod tests {
         let sids: HashSet<&str> = DYN_SUMMARY.iter().map(|d| d.id).collect();
         assert_eq!(sids.len(), DYN_SUMMARY.len());
         assert_eq!(dyn_summary_by_id("DYN-RECOVERY").unwrap().unit, "ms");
+        assert_eq!(dyn_summary_by_id("DYN-EVENTS").unwrap().unit, "count");
+        assert_eq!(
+            dyn_summary_by_id("DYN-EVENTS").unwrap().direction,
+            Direction::HigherBetter
+        );
         assert_eq!(dyn_series_by_id("DYN-LAT-P99").unwrap().category, Category::Llm);
         assert!(dyn_series_by_id("OH-001").is_none());
         assert!(dyn_summary_by_id("DYN-LAT-P99").is_none());

@@ -629,7 +629,7 @@ mod tests {
         cfg8.jobs = 8;
         let out = run_regression(&cfg8, &baseline, 0.0001).unwrap();
         assert_eq!(out.schema, BaselineSchema::Dynamics);
-        assert_eq!(out.checked(), 4);
+        assert_eq!(out.checked(), 5);
         assert!(out.passed(), "{:?}", out.regressions());
         // An injected per-summary regression is detected and named with
         // its full dynamics coordinate.

@@ -13,7 +13,7 @@
 
 use crate::dynsim::{DynSurface, ScenarioRun};
 
-use super::json::{array, num, render_execution, Obj};
+use super::json::{array, execution_obj, num, Obj};
 use super::Format;
 
 /// Column header of the long-format time-series CSV.
@@ -120,15 +120,30 @@ fn run_obj(run: &ScenarioRun) -> Obj {
 }
 
 /// The full surface plus executor timings, in the Listing-7 JSON style.
+/// The `execution` object carries the event core's replay throughput —
+/// total occurrences processed across runs and wall-clock events/sec.
+/// Occurrence counts are virtual-time-deterministic (they equal the sum
+/// of the per-run `DYN-EVENTS` summary values); events/sec is a host
+/// timing like the rest of `execution`, reported but never gated.
 pub fn render_json(surface: &DynSurface) -> String {
     let runs: Vec<String> = surface.runs.iter().map(|r| run_obj(r).build()).collect();
+    let events: u64 = surface.runs.iter().map(|r| r.occurrences).sum();
+    let events_per_sec = if surface.stats.wall_ns > 0 {
+        events as f64 / (surface.stats.wall_ns as f64 / 1e9)
+    } else {
+        0.0
+    };
+    let execution = execution_obj(&surface.stats)
+        .field("events_processed", events.to_string())
+        .num("events_per_sec", events_per_sec)
+        .build();
     Obj::new()
         .str("benchmark_version", crate::VERSION)
         .field("seed", surface.seed.to_string())
         .field("duration_ms", surface.duration_ms.to_string())
         .field("window_ms", surface.window_ms.to_string())
         .field("runs", array(runs))
-        .field("execution", render_execution(&surface.stats))
+        .field("execution", execution)
         .build()
 }
 
@@ -215,6 +230,7 @@ mod tests {
                 ("DYN-WORST-WIN", 12.0),
                 ("DYN-THR-MEAN", 110.0),
                 ("DYN-RECOVERY", 31.25),
+                ("DYN-EVENTS", 30.0),
             ],
             completed: 24,
             failed: 0,
@@ -223,6 +239,7 @@ mod tests {
                 fault_ns: 100_000_000,
                 recovered_ns: 131_250_000,
             }),
+            occurrences: 30,
         }
     }
 
@@ -255,11 +272,12 @@ mod tests {
         let csv = render_summary_csv(&surface());
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines[0], SUMMARY_CSV_HEADER);
-        assert_eq!(lines.len(), 9); // 2 runs × 4 summary stats
+        assert_eq!(lines.len(), 11); // 2 runs × 5 summary stats
         assert_eq!(lines[1], "native,steady,200,100,DYN-P99-STEADY,2.500000");
+        assert_eq!(lines[5], "native,steady,200,100,DYN-EVENTS,30.000000");
         let b = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
         assert_eq!(b.schema, crate::regress::BaselineSchema::Dynamics);
-        assert_eq!(b.rows.len(), 8);
+        assert_eq!(b.rows.len(), 10);
         let d = b.rows[0].dyn_cell.as_ref().unwrap();
         assert_eq!(d.scenario, "steady");
         assert_eq!((d.duration_ms, d.window_ms), (200, 100));
@@ -276,6 +294,11 @@ mod tests {
         assert!(j.contains("\"recovery_ms\": 31.25"), "{j}");
         assert!(j.contains("\"tenant\": \"all\""), "{j}");
         assert!(j.contains("\"execution\""), "{j}");
+        // The event core's replay throughput rides the execution object:
+        // the deterministic total (2 fixture runs × 30 occurrences) plus
+        // wall-clock events/sec (0 here — the default stats have no wall).
+        assert!(j.contains("\"events_processed\": 60"), "{j}");
+        assert!(j.contains("\"events_per_sec\": 0.0"), "{j}");
         // NaN series values render as null.
         assert!(j.contains("\"value\": null"), "{j}");
     }

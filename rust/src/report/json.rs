@@ -148,6 +148,13 @@ pub fn render(rep: &Report) -> String {
 /// Encode [`crate::coordinator::executor::ExecutionStats`] (wall-clock +
 /// per-task timings) as JSON.
 pub fn render_execution(stats: &crate::coordinator::executor::ExecutionStats) -> String {
+    execution_obj(stats).build()
+}
+
+/// The execution-stats object as an open [`Obj`], so surface-specific
+/// renderers (e.g. dynamics' events/sec throughput) can append their own
+/// reporting-only fields before building.
+pub fn execution_obj(stats: &crate::coordinator::executor::ExecutionStats) -> Obj {
     let tasks: Vec<String> = stats
         .tasks
         .iter()
@@ -166,7 +173,6 @@ pub fn render_execution(stats: &crate::coordinator::executor::ExecutionStats) ->
         .num("busy_ms", stats.total_task_ns() as f64 / 1e6)
         .num("speedup_estimate", stats.speedup_estimate())
         .field("tasks", array(tasks))
-        .build()
 }
 
 #[cfg(test)]

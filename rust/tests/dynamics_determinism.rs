@@ -5,8 +5,14 @@
 //! window) coordinates), the rendered CSV surfaces — which carry no host
 //! timings — match byte-for-byte, and the summary CSV round-trips
 //! through the regression engine with a clean pass against itself.
+//!
+//! Since the event-queue rewrite the guarantee is also proven *across
+//! engines*: every run must be bit-identical to the frozen pre-rewrite
+//! min-scan loop ([`gvb::dynsim::reference`]), and the rendered surfaces
+//! must match the committed goldens under `tests/goldens/` byte-for-byte
+//! at both job counts.
 
-use gvb::dynsim::{run_dynamics, DynSpec, DynSurface};
+use gvb::dynsim::{run_dynamics, DynSpec, DynSurface, ScenarioRun, ScenarioSpec};
 use gvb::metrics::RunConfig;
 use gvb::report::dynamics::{render_csv, render_summary_csv};
 
@@ -25,38 +31,43 @@ fn base() -> RunConfig {
     cfg
 }
 
+fn assert_runs_bit_identical(x: &ScenarioRun, y: &ScenarioRun) {
+    let ctx = format!("{}/{}", x.system, x.scenario);
+    assert_eq!(x.system, y.system, "{ctx}: run order diverged");
+    assert_eq!(x.scenario, y.scenario, "{ctx}: run order diverged");
+    assert_eq!(x.windows, y.windows, "{ctx}");
+    assert_eq!(x.tenants, y.tenants, "{ctx}");
+    assert_eq!(x.completed, y.completed, "{ctx}");
+    assert_eq!(x.failed, y.failed, "{ctx}");
+    assert_eq!(x.recovery, y.recovery, "{ctx}");
+    assert_eq!(x.occurrences, y.occurrences, "{ctx}");
+    assert_eq!(x.series.len(), y.series.len(), "{ctx}");
+    for (p, q) in x.series.iter().zip(&y.series) {
+        assert_eq!(p.id, q.id, "{ctx}: series order diverged");
+        assert_eq!(p.window, q.window, "{ctx}/{}", p.id);
+        assert_eq!(p.tenant, q.tenant, "{ctx}/{}", p.id);
+        assert_eq!(
+            p.value.to_bits(),
+            q.value.to_bits(),
+            "{ctx}/{} window {}: {} vs {}",
+            p.id,
+            p.window,
+            p.value,
+            q.value
+        );
+    }
+    assert_eq!(x.summary.len(), y.summary.len(), "{ctx}");
+    for ((ia, va), (ib, vb)) in x.summary.iter().zip(&y.summary) {
+        assert_eq!(ia, ib, "{ctx}: summary order");
+        assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}/{ia}");
+    }
+}
+
 fn assert_surfaces_bit_identical(a: &DynSurface, b: &DynSurface) {
     assert_eq!(a.seed, b.seed);
     assert_eq!(a.runs.len(), b.runs.len());
     for (x, y) in a.runs.iter().zip(&b.runs) {
-        let ctx = format!("{}/{}", x.system, x.scenario);
-        assert_eq!(x.system, y.system, "{ctx}: run order diverged");
-        assert_eq!(x.scenario, y.scenario, "{ctx}: run order diverged");
-        assert_eq!(x.windows, y.windows, "{ctx}");
-        assert_eq!(x.tenants, y.tenants, "{ctx}");
-        assert_eq!(x.completed, y.completed, "{ctx}");
-        assert_eq!(x.failed, y.failed, "{ctx}");
-        assert_eq!(x.recovery, y.recovery, "{ctx}");
-        assert_eq!(x.series.len(), y.series.len(), "{ctx}");
-        for (p, q) in x.series.iter().zip(&y.series) {
-            assert_eq!(p.id, q.id, "{ctx}: series order diverged");
-            assert_eq!(p.window, q.window, "{ctx}/{}", p.id);
-            assert_eq!(p.tenant, q.tenant, "{ctx}/{}", p.id);
-            assert_eq!(
-                p.value.to_bits(),
-                q.value.to_bits(),
-                "{ctx}/{} window {}: {} vs {}",
-                p.id,
-                p.window,
-                p.value,
-                q.value
-            );
-        }
-        assert_eq!(x.summary.len(), y.summary.len(), "{ctx}");
-        for ((ia, va), (ib, vb)) in x.summary.iter().zip(&y.summary) {
-            assert_eq!(ia, ib, "{ctx}: summary order");
-            assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}/{ia}");
-        }
+        assert_runs_bit_identical(x, y);
     }
 }
 
@@ -93,6 +104,76 @@ fn dynamics_is_a_pure_function_of_the_seed() {
         }),
         "seed change did not affect the surface"
     );
+}
+
+#[test]
+fn event_core_matches_the_pre_rewrite_reference_engine() {
+    // The hard contract of the event-queue rewrite: at every job count,
+    // every (system, scenario) run of the grid is bit-identical — series
+    // values, summary statistics, occurrence counts, recovery records —
+    // to the frozen pre-rewrite min-scan loop replaying the same task
+    // seed. The reference engine is the executable specification; this
+    // is the old-vs-new equivalence proof.
+    let base = base();
+    let grid = spec();
+    for jobs in [1usize, 8] {
+        let surface = run_dynamics(&base, &grid, jobs);
+        assert_eq!(surface.runs.len(), 4);
+        for run in &surface.runs {
+            let mut cfg = base.clone();
+            cfg.system = run.system.clone();
+            cfg.seed = grid.run_seed(base.seed, &run.system, run.scenario);
+            let sc = ScenarioSpec::preset(run.scenario, grid.duration_ms, grid.window_ms)
+                .expect("grid scenarios are presets");
+            let reference = gvb::dynsim::reference::run_scenario_reference(&cfg, &sc);
+            assert_runs_bit_identical(run, &reference);
+        }
+    }
+}
+
+/// Compare `rendered` against the committed golden `tests/goldens/<name>`.
+/// `GVB_BLESS=1` rewrites the golden; a *missing* golden is written and
+/// loudly noted instead of failing, so the first toolchain-equipped run
+/// pins the bytes every later run (and CI) is held to.
+fn check_committed_golden(name: &str, rendered: &str) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/goldens")
+        .join(name);
+    let body = format!("{}\n", rendered.trim_end());
+    let bless = std::env::var("GVB_BLESS").is_ok();
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().expect("goldens dir")).expect("mkdir goldens");
+        std::fs::write(&path, &body).expect("write golden");
+        if !bless {
+            eprintln!(
+                "note: golden {} was missing and has been blessed from this run; \
+                 commit it so future runs are pinned to these bytes",
+                path.display()
+            );
+        }
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read golden");
+    assert_eq!(
+        expected,
+        body,
+        "{name} diverged from the committed golden (GVB_BLESS=1 regenerates after an \
+         intended surface change)"
+    );
+}
+
+#[test]
+fn rendered_surfaces_match_the_committed_golden() {
+    // Byte-level pin of the dynamics CSV surfaces (the goldens were
+    // blessed from the pre-rewrite engine's output, so this holds the
+    // event core to the old loop's exact bytes), checked at both job
+    // counts — the committed artifact the ISSUE-7 equivalence contract
+    // names, complementing the in-process reference-engine test above.
+    for jobs in [1usize, 8] {
+        let surface = run_dynamics(&base(), &spec(), jobs);
+        check_committed_golden("dynamics_series.csv", &render_csv(&surface));
+        check_committed_golden("dynamics_summary.csv", &render_summary_csv(&surface));
+    }
 }
 
 #[test]
@@ -165,14 +246,16 @@ fn summary_round_trips_through_the_regression_engine() {
     let summary = render_summary_csv(&surface);
     let baseline = gvb::regress::parse_baseline_csv(&summary, "native").unwrap();
     assert_eq!(baseline.schema, gvb::regress::BaselineSchema::Dynamics);
-    // 4 timelines × 4 summary statistics.
-    assert_eq!(baseline.rows.len(), 16);
+    // 4 timelines × 5 summary statistics (DYN-EVENTS included, so the
+    // occurrence count is value-gated like any other summary cell).
+    assert_eq!(baseline.rows.len(), 20);
+    assert!(baseline.rows.iter().any(|r| r.id == "DYN-EVENTS"));
     // Re-run at both job counts: clean pass with a tight threshold.
     for jobs in [1usize, 8] {
         let mut cfg = base.clone();
         cfg.jobs = jobs;
         let out = gvb::regress::run_regression(&cfg, &baseline, 0.0001).unwrap();
-        assert_eq!(out.checked(), 16);
+        assert_eq!(out.checked(), 20);
         assert!(out.passed(), "jobs={jobs}: {:?}", out.regressions());
         assert_eq!(out.schema, gvb::regress::BaselineSchema::Dynamics);
     }
