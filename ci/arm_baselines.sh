@@ -66,6 +66,18 @@ if [ "$1" = "--generate" ]; then
   ./target/release/gvbench cluster --policies first-fit,frag-gradient --nodes 2 \
     --scenario churn,failover --systems native,hami --jobs "$jobs" \
     --format csv --out /dev/null --summary-out "$artifacts/fresh_cluster.csv"
+  # The dynamics goldens ride along: GVB_BLESS=1 rewrites
+  # rust/tests/goldens/dynamics_{series,summary}.csv from the same
+  # deterministic grid the test pins, so arming and blessing land in
+  # one commit.
+  echo "blessing dynamics goldens (GVB_BLESS=1)..."
+  GVB_BLESS=1 cargo test -q --test dynamics_determinism
+  for golden in rust/tests/goldens/dynamics_series.csv rust/tests/goldens/dynamics_summary.csv; do
+    if [ -f "$golden" ]; then
+      git add "$golden"
+      echo "staged golden: $golden"
+    fi
+  done
 else
   [ $# -eq 1 ] || usage
   artifacts=$1
@@ -88,12 +100,22 @@ find_artifact() {
   return 1
 }
 
+# Baselines may open with `#` comment lines (cluster summaries record
+# `# arrivals=N`); the header is the first non-comment line and data
+# rows are everything after it.
+header_line() {
+  grep -v '^#' "$1" | head -n 1
+}
+data_rows() {
+  grep -v '^#' "$1" | tail -n +2 | grep -c . || true
+}
+
 # validate <file> <expected-first-header-field> — non-empty, sane header,
 # at least one data row.
 validate() {
   local file=$1 head_field=$2
   local header
-  header=$(head -n 1 "$file")
+  header=$(header_line "$file")
   case "$header" in
     "$head_field"*) ;;
     *)
@@ -101,7 +123,7 @@ validate() {
       return 1
       ;;
   esac
-  if [ "$(tail -n +2 "$file" | grep -c .)" -eq 0 ]; then
+  if [ "$(data_rows "$file")" -eq 0 ]; then
     echo "error: $file has no data rows" >&2
     return 1
   fi
@@ -119,14 +141,14 @@ arm() {
   # The committed header must match the snapshot's: a mismatch means the
   # schema moved and the snapshot came from a stale build.
   if [ -f "$dest" ] && [ -s "$dest" ]; then
-    if [ "$(head -n 1 "$src")" != "$(head -n 1 "$dest")" ]; then
+    if [ "$(header_line "$src")" != "$(header_line "$dest")" ]; then
       echo "error: $src header does not match committed $dest header (schema drift?)" >&2
       return 1
     fi
   fi
   cp "$src" "$dest"
   git add "$dest"
-  echo "armed: $dest <- $src ($(tail -n +2 "$dest" | grep -c .) data rows)"
+  echo "armed: $dest <- $src ($(data_rows "$dest") data rows)"
   armed=$((armed + 1))
 }
 

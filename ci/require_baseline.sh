@@ -22,8 +22,15 @@ if [ ! -f "$baseline" ]; then
   echo "::error::$baseline does not exist"
   exit 1
 fi
-if [ "$(tail -n +2 "$baseline" | grep -c .)" -eq 0 ]; then
+
+# Data rows = everything after the header, excluding `#` comment lines
+# (cluster summaries open with a `# arrivals=N` recording comment).
+data_rows() {
+  grep -v '^#' "$1" | tail -n +2 | grep -c . || true
+}
+
+if [ "$(data_rows "$baseline")" -eq 0 ]; then
   echo "::error::$baseline has no data rows yet. Arm it locally with ci/arm_baselines.sh --generate (or download this run's $artifact artifact and commit its $fresh as $baseline). See ci/README.md."
   exit 1
 fi
-echo "$baseline is armed ($(tail -n +2 "$baseline" | grep -c .) data rows)"
+echo "$baseline is armed ($(data_rows "$baseline") data rows)"

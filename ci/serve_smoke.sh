@@ -1,0 +1,154 @@
+#!/usr/bin/env bash
+# Serve-smoke gate: end-to-end check of the benchmark service against a
+# real daemon process (the in-process half lives in
+# rust/tests/serve_determinism.rs).
+#
+#   1. Renders one-shot CLI references for all four grid schemas (CSV —
+#      the render with no host timings).
+#   2. Boots `gvbench serve` in the background and submits one job per
+#      schema through `gvbench submit`; every served report must be
+#      byte-identical to its one-shot reference.
+#   3. Submits a serve-backed regress gate against the fresh run CSV —
+#      a warm-daemon replay of the same cells must pass against itself.
+#   4. Asserts the streamed NDJSON lifecycle is well-formed (queued →
+#      scheduled → … → report → finished, no failed events) and carries
+#      the idle-time accounting fields.
+#   5. Drains the daemon with `gvbench jobs --shutdown` and verifies a
+#      clean exit: status 0, socket file removed, no orphaned process.
+#
+# The full event trace is left in serve_trace.log (plus jobs_list.txt
+# and serve_regress_report.json) for the `serve-trace` CI artifact.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+GVB=./target/release/gvbench
+if [ ! -x "$GVB" ]; then
+  echo "error: $GVB not found; run 'cargo build --release' first" >&2
+  exit 1
+fi
+
+work=$(mktemp -d)
+sock="$work/gvbench.sock"
+trace=serve_trace.log
+: >"$trace"
+
+serve_pid=
+cleanup() {
+  if [ -n "$serve_pid" ] && kill -0 "$serve_pid" 2>/dev/null; then
+    kill "$serve_pid" 2>/dev/null || true
+    wait "$serve_pid" 2>/dev/null || true
+  fi
+  rm -rf "$work"
+}
+trap cleanup EXIT
+
+fail() {
+  echo "::error::$1"
+  exit 1
+}
+
+echo "== one-shot references (jobs flag only changes wall-clock) =="
+$GVB run --all-systems --quick --jobs 2 --format csv --out "$work/oneshot_run.csv"
+rm -f "$work/oneshot_run.csv.timings.csv" # host timings; not part of the report
+$GVB sweep --quick --tenants 1,2 --quota 50,100 --jobs 2 \
+  --format csv --out "$work/oneshot_sweep.csv"
+$GVB dynamics --scenario steady,failover --systems native,hami \
+  --duration-ms 400 --window-ms 50 --jobs 2 --format csv --out "$work/oneshot_dynamics.csv"
+$GVB cluster --policies first-fit --nodes 2 --scenario churn --systems native,hami \
+  --jobs 2 --format csv --out "$work/oneshot_cluster.csv"
+
+echo "== boot daemon =="
+$GVB serve --socket "$sock" --jobs 2 2>>"$trace" &
+serve_pid=$!
+for _ in $(seq 1 100); do
+  [ -S "$sock" ] && break
+  kill -0 "$serve_pid" 2>/dev/null || fail "daemon exited before binding its socket"
+  sleep 0.1
+done
+[ -S "$sock" ] || fail "daemon socket never appeared at $sock"
+
+echo "== served jobs: one per schema, byte-compared to one-shot =="
+$GVB submit --socket "$sock" --out "$work/served_run.csv" \
+  -- run --all-systems --quick --format csv 2>>"$trace"
+$GVB submit --socket "$sock" --out "$work/served_sweep.csv" \
+  -- sweep --quick --tenants 1,2 --quota 50,100 --format csv 2>>"$trace"
+$GVB submit --socket "$sock" --out "$work/served_dynamics.csv" \
+  -- dynamics --scenario steady,failover --systems native,hami \
+  --duration-ms 400 --window-ms 50 --format csv 2>>"$trace"
+$GVB submit --socket "$sock" --out "$work/served_cluster.csv" \
+  -- cluster --policies first-fit --nodes 2 --scenario churn --systems native,hami \
+  --format csv 2>>"$trace"
+for schema in run sweep dynamics cluster; do
+  cmp "$work/oneshot_$schema.csv" "$work/served_$schema.csv" ||
+    fail "served $schema report is not byte-identical to the one-shot CLI output"
+  echo "served $schema == one-shot $schema"
+done
+
+echo "== serve-backed regress gate (warm pool, against the fresh run CSV) =="
+$GVB submit --socket "$sock" --out serve_regress_report.json \
+  -- regress --baseline "$work/oneshot_run.csv" --quick --threshold 5 2>>"$trace"
+grep -q '"passed": true' serve_regress_report.json ||
+  fail "serve-backed regress did not pass against its own baseline"
+
+echo "== lifecycle stream well-formedness =="
+for marker in '"event": "queued"' '"event": "scheduled"' '"event": "task_completed"' \
+  '"event": "report"' '"event": "finished"'; do
+  grep -qF "$marker" "$trace" || fail "trace has no $marker event"
+done
+for field in '"queue_wait_ms"' '"scheduler_idle_ms"' '"worker_idle_ms"' '"busy_ms"'; do
+  grep -qF "$field" "$trace" || fail "trace lacks the $field idle-accounting field"
+done
+if grep -qF '"event": "failed"' "$trace"; then
+  fail "a served job failed (see serve_trace.log)"
+fi
+finished=$(grep -cF '"event": "finished"' "$trace")
+[ "$finished" -eq 5 ] || fail "expected 5 finished events, found $finished"
+# Per-job ordering: job 1's stream must read queued, scheduled, ...,
+# report, finished (task completions in between may land in any order).
+sequence=$(grep -F '"job": 1,' "$trace" | grep -oE '"event": "[a-z_]+"' |
+  sed 's/"event": "\([a-z_]*\)"/\1/' | tr '\n' ' ')
+case "$sequence" in
+"queued scheduled "*"report finished ") echo "job 1 lifecycle: $sequence" ;;
+*) fail "job 1 lifecycle out of order: $sequence" ;;
+esac
+
+echo "== jobs listing =="
+$GVB jobs --socket "$sock" | tee jobs_list.txt
+listed=$(grep -c 'finished' jobs_list.txt || true)
+[ "$listed" -eq 5 ] || fail "jobs listing shows $listed finished jobs, expected 5"
+
+echo "== clean shutdown =="
+$GVB jobs --socket "$sock" --shutdown 2>>"$trace"
+for _ in $(seq 1 100); do
+  kill -0 "$serve_pid" 2>/dev/null || break
+  sleep 0.1
+done
+if kill -0 "$serve_pid" 2>/dev/null; then
+  fail "daemon still running after shutdown request"
+fi
+wait "$serve_pid" || fail "daemon exited non-zero"
+serve_pid=
+[ ! -e "$sock" ] || fail "socket file survived shutdown"
+if command -v pgrep >/dev/null 2>&1; then
+  if pgrep -f "gvbench serve" >/dev/null 2>&1; then
+    fail "orphaned gvbench serve process after shutdown"
+  fi
+fi
+
+# Markdown summary for the gate-report step-summary publishing.
+{
+  echo "## Serve smoke — benchmark service round-trip"
+  echo ""
+  echo "| check | result |"
+  echo "| --- | --- |"
+  echo "| served run/sweep/dynamics/cluster vs one-shot CLI | byte-identical |"
+  echo "| serve-backed regress vs fresh run CSV | passed |"
+  echo "| lifecycle stream (queued → scheduled → … → finished) | well-formed, idle fields present |"
+  echo "| drain + shutdown | exit 0, socket removed |"
+  echo ""
+  echo '```'
+  cat jobs_list.txt
+  echo '```'
+} >serve_summary.md
+
+echo "serve smoke passed: 5 served jobs, all byte-identical / gated, clean shutdown"

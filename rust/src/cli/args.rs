@@ -33,6 +33,10 @@ USAGE:
   gvbench compare [--quick] [--jobs N]  # Table 7: overall scores, all systems
   gvbench regress --baseline <csv> [--system S] [--threshold PCT] [--quick]
               [--jobs N] [--report-json <file>] [--report-md <file>]
+  gvbench serve [--socket <path>] [--jobs N]
+  gvbench submit [--socket <path>] [--priority N] [--out <file>]
+              (--spec-file <file> | -- <run|sweep|dynamics|cluster|regress> ...)
+  gvbench jobs [--socket <path>] [--shutdown]
   gvbench help
 
 EXAMPLES:
@@ -47,6 +51,9 @@ EXAMPLES:
   gvbench cluster --policies first-fit,frag-gradient --nodes 8,16 --jobs 8
   gvbench cluster --scenario churn --arrivals 5000 --format csv --out fleet.csv
   gvbench compare --quick
+  gvbench serve --socket /tmp/gvb.sock --jobs 8     # warm benchmark daemon
+  gvbench submit --socket /tmp/gvb.sock -- sweep --tenants 1,2 --format csv
+  gvbench jobs --socket /tmp/gvb.sock --shutdown
 
 Scenario sweeps: `sweep` expands (systems x tenants x quota x gpus x
 link x metrics) into one executor task list; quota is the percent of the
@@ -106,9 +113,25 @@ default arrival count. --report-json and --report-md write
 machine-readable reports (per-cell deltas / a GitHub-flavored summary
 of the worst regressions per system and per link kind).
 
+Benchmark service: `serve` runs the framework as a daemon owning one
+persistent executor worker pool (--jobs, fixed for the daemon's
+lifetime) and a FIFO-with-priorities job queue, listening on a local
+Unix socket (default: <temp-dir>/gvbench.sock). `submit` sends the argv
+of any one-shot invocation (run/sweep/dynamics/cluster/regress; file
+outputs, --config and --jobs are refused) as one job — inline after
+`--`, or one token per line via --spec-file (# comments and blank lines
+skipped) — streams its NDJSON lifecycle events (queued / scheduled /
+task_completed / report / finished|failed, with queue-wait,
+scheduler-idle and worker-idle accounting) to stderr, and writes the
+report to --out or stdout. Exit status follows the job, including the
+gate verdict of served regress jobs. `jobs` lists the daemon's jobs;
+`jobs --shutdown` drains already-accepted jobs and stops the daemon.
+A served report is byte-identical to its one-shot CLI equivalent.
+
 Parallelism: --jobs N shards the task matrix across N worker threads
 (0 or unset = all cores). Same --seed => bit-identical numbers at any job
-count, for `run` and `sweep` alike.
+count, for `run` and `sweep` alike — and under `serve`, at any daemon
+pool size and in any queue order.
 ";
 
 /// Parsed command line.
@@ -121,6 +144,9 @@ pub enum Command {
     List,
     Compare,
     Regress,
+    Serve,
+    Submit,
+    Jobs,
     Help,
 }
 
@@ -179,6 +205,19 @@ pub struct Args {
     pub cluster_nodes: Option<Vec<u32>>,
     /// Cluster grid: tenant arrivals per replay (`--arrivals 5000`).
     pub arrivals: Option<u32>,
+    /// `serve`/`submit`/`jobs`: daemon socket path (`--socket`; default
+    /// `<temp-dir>/gvbench.sock`).
+    pub socket: Option<String>,
+    /// `submit`: queue priority, higher runs first (`--priority`,
+    /// -1000..=1000, default 0; FIFO within a level).
+    pub priority: i64,
+    /// `submit`: file holding the job argv, one token per line
+    /// (`--spec-file`; `#` comments and blank lines skipped).
+    pub spec_file: Option<String>,
+    /// `jobs --shutdown`: ask the daemon to drain and exit.
+    pub shutdown: bool,
+    /// `submit`: inline job argv captured after `--`.
+    pub job_argv: Option<Vec<String>>,
 }
 
 impl Default for Args {
@@ -219,6 +258,11 @@ impl Default for Args {
             cluster_policies: None,
             cluster_nodes: None,
             arrivals: None,
+            socket: None,
+            priority: 0,
+            spec_file: None,
+            shutdown: false,
+            job_argv: None,
         }
     }
 }
@@ -385,6 +429,9 @@ impl Args {
             Some("list") => Command::List,
             Some("compare") => Command::Compare,
             Some("regress") => Command::Regress,
+            Some("serve") => Command::Serve,
+            Some("submit") => Command::Submit,
+            Some("jobs") => Command::Jobs,
             Some("help") | Some("--help") | Some("-h") | None => Command::Help,
             Some(other) => return Err(err(format!("unknown command `{other}`"))),
         };
@@ -395,6 +442,46 @@ impl Args {
         };
         while let Some(flag) = it.next() {
             match flag.as_str() {
+                "--" => {
+                    if args.command != Command::Submit {
+                        return Err(err("a `--` job argv is only valid for `gvbench submit`"));
+                    }
+                    args.job_argv = Some(it.by_ref().cloned().collect());
+                }
+                "--socket" => {
+                    if !matches!(args.command, Command::Serve | Command::Submit | Command::Jobs) {
+                        return Err(err(
+                            "--socket is only valid for `gvbench serve`, `gvbench submit` or \
+                             `gvbench jobs`",
+                        ));
+                    }
+                    args.socket = Some(next_value(&mut it, flag)?);
+                }
+                "--priority" => {
+                    if args.command != Command::Submit {
+                        return Err(err("--priority is only valid for `gvbench submit`"));
+                    }
+                    let p: i64 =
+                        next_value(&mut it, flag)?.parse().map_err(|_| err("bad --priority"))?;
+                    if !(-1000..=1000).contains(&p) {
+                        return Err(err(format!(
+                            "--priority value {p} out of range (-1000..=1000)"
+                        )));
+                    }
+                    args.priority = p;
+                }
+                "--spec-file" => {
+                    if args.command != Command::Submit {
+                        return Err(err("--spec-file is only valid for `gvbench submit`"));
+                    }
+                    args.spec_file = Some(next_value(&mut it, flag)?);
+                }
+                "--shutdown" => {
+                    if args.command != Command::Jobs {
+                        return Err(err("--shutdown is only valid for `gvbench jobs`"));
+                    }
+                    args.shutdown = true;
+                }
                 "--system" => {
                     args.system = next_value(&mut it, flag)?;
                     args.system_set = true;
@@ -560,6 +647,20 @@ impl Args {
         // Validation.
         if args.command == Command::Regress && args.baseline.is_none() {
             return Err(err("regress requires --baseline <csv>"));
+        }
+        if args.command == Command::Submit {
+            let has_argv = matches!(&args.job_argv, Some(v) if !v.is_empty());
+            if args.spec_file.is_some() && has_argv {
+                return Err(err(
+                    "--spec-file and an inline `--` job argv are mutually exclusive",
+                ));
+            }
+            if args.spec_file.is_none() && !has_argv {
+                return Err(err(
+                    "submit requires a job: `gvbench submit -- <run|sweep|dynamics|cluster|\
+                     regress> ...` or --spec-file <file>",
+                ));
+            }
         }
         let takes_suite_flags = matches!(
             args.command,
@@ -940,5 +1041,69 @@ mod tests {
     fn help_default() {
         let a = parse("").unwrap();
         assert_eq!(a.command, Command::Help);
+    }
+
+    #[test]
+    fn serve_parses_socket_and_jobs() {
+        let a = parse("serve --socket /tmp/s.sock --jobs 4").unwrap();
+        assert_eq!(a.command, Command::Serve);
+        assert_eq!(a.socket.as_deref(), Some("/tmp/s.sock"));
+        assert_eq!(a.jobs, Some(4));
+        // Default socket is resolved later (commands layer), not here.
+        assert_eq!(parse("serve").unwrap().socket, None);
+        // --socket belongs to the service commands only.
+        assert!(parse("run --system hami --socket /tmp/s.sock").is_err());
+    }
+
+    #[test]
+    fn submit_captures_inline_argv_after_double_dash() {
+        let a = parse("submit --socket /tmp/s.sock --priority 5 -- sweep --tenants 1,2 --quick")
+            .unwrap();
+        assert_eq!(a.command, Command::Submit);
+        assert_eq!(a.priority, 5);
+        assert_eq!(
+            a.job_argv,
+            Some(vec![
+                "sweep".to_string(),
+                "--tenants".to_string(),
+                "1,2".to_string(),
+                "--quick".to_string(),
+            ])
+        );
+        // The job argv is opaque at submit-parse time: flags the submit
+        // command itself does not know stay untouched behind `--`.
+        let a = parse("submit -- regress --baseline b.csv --threshold 5").unwrap();
+        assert_eq!(a.job_argv.as_ref().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn submit_requires_exactly_one_job_source() {
+        assert!(parse("submit").is_err());
+        assert!(parse("submit --").is_err(), "empty inline argv is no job");
+        assert!(parse("submit --spec-file job.txt -- run --quick").is_err());
+        let a = parse("submit --spec-file job.txt").unwrap();
+        assert_eq!(a.spec_file.as_deref(), Some("job.txt"));
+        assert_eq!(a.job_argv, None);
+    }
+
+    #[test]
+    fn submit_priority_is_range_checked() {
+        assert_eq!(parse("submit --priority -3 -- run").unwrap().priority, -3);
+        assert_eq!(parse("submit -- run").unwrap().priority, 0);
+        assert!(parse("submit --priority 1001 -- run").is_err());
+        assert!(parse("submit --priority -1001 -- run").is_err());
+        assert!(parse("submit --priority lots -- run").is_err());
+        assert!(parse("run --system hami --priority 1").is_err());
+    }
+
+    #[test]
+    fn jobs_command_and_shutdown_flag() {
+        let a = parse("jobs --socket /tmp/s.sock").unwrap();
+        assert_eq!(a.command, Command::Jobs);
+        assert!(!a.shutdown);
+        assert!(parse("jobs --shutdown").unwrap().shutdown);
+        assert!(parse("run --system hami --shutdown").is_err());
+        // `--` stays submit-only.
+        assert!(parse("jobs -- run").is_err());
     }
 }

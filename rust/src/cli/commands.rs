@@ -1,9 +1,16 @@
 //! Command implementations for `gvbench`.
+//!
+//! The spec-building halves of the grid commands (`sweep_inputs`,
+//! `dynamics_inputs`, `cluster_inputs`, `run_report_on`,
+//! `load_baseline`) are public: the serve daemon executes submitted
+//! jobs through the *same* helpers the one-shot commands use, which is
+//! what makes a served report bit-identical to its CLI equivalent.
 
 use crate::anyhow::{bail, Context, Result};
 
 use crate::cluster::{self, ClusterSpec};
 use crate::config::{ClusterOverlay, DynOverlay, FileConfig, SweepOverlay};
+use crate::coordinator::executor::{Backend, ExecutionStats, Observer};
 use crate::coordinator::sweep::{self, SweepSpec};
 use crate::coordinator::SuiteRunner;
 use crate::dynsim::{self, DynSpec};
@@ -28,11 +35,17 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Command::Cluster => cmd_cluster(args),
         Command::Compare => cmd_compare(args),
         Command::Regress => cmd_regress(args),
+        Command::Serve => cmd_serve(args),
+        Command::Submit => cmd_submit(args),
+        Command::Jobs => cmd_jobs(args),
     }
 }
 
-fn cmd_regress(args: &Args) -> Result<()> {
-    let path = args.baseline.as_ref().expect("validated");
+/// Read and parse `--baseline`, restricted to `--system` when one was
+/// given explicitly. Returns the path alongside the parsed baseline —
+/// shared by [`cmd_regress`] and the serve daemon's regress jobs.
+pub fn load_baseline(args: &Args) -> Result<(String, crate::regress::Baseline)> {
+    let path = args.baseline.as_ref().context("regress requires --baseline <csv>")?;
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let mut baseline = crate::regress::parse_baseline_csv(&text, &args.system)?;
     if args.system_set {
@@ -43,6 +56,12 @@ fn cmd_regress(args: &Args) -> Result<()> {
             bail!("baseline {path} has no rows for system `{}`", args.system);
         }
     }
+    Ok((path.clone(), baseline))
+}
+
+fn cmd_regress(args: &Args) -> Result<()> {
+    let (path, baseline) = load_baseline(args)?;
+    let path = &path;
     let cfg = build_config(args)?;
     let systems: std::collections::BTreeSet<&str> =
         baseline.rows.iter().map(|r| r.system.as_str()).collect();
@@ -110,7 +129,9 @@ fn load_file_config(args: &Args) -> Result<Option<FileConfig>> {
     }
 }
 
-fn build_config(args: &Args) -> Result<RunConfig> {
+/// The single config path for one-shot commands and served jobs alike:
+/// base config ← `--config` file ← CLI flag overrides.
+pub fn build_config(args: &Args) -> Result<RunConfig> {
     let file = load_file_config(args)?;
     build_config_with(args, file.as_ref())
 }
@@ -143,9 +164,17 @@ fn build_config_with(args: &Args, file: Option<&FileConfig>) -> Result<RunConfig
     Ok(cfg)
 }
 
+/// The resolved inputs of a sweep invocation: the run config and the
+/// fully validated grid spec. Built identically for `gvbench sweep` and
+/// for served sweep jobs.
+pub struct SweepInputs {
+    pub cfg: RunConfig,
+    pub spec: SweepSpec,
+}
+
 /// Build the sweep grid (CLI flags > config-file `[sweep]` section >
-/// default grid) and run it through the executor.
-fn cmd_sweep(args: &Args) -> Result<()> {
+/// default grid).
+pub fn sweep_inputs(args: &Args) -> Result<SweepInputs> {
     let file = load_file_config(args)?;
     let cfg = build_config_with(args, file.as_ref())?;
     let overlay = match file.as_ref() {
@@ -199,6 +228,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
     };
     let spec = SweepSpec { systems, tenants, quotas, gpu_counts: gpus, links, categories };
+    Ok(SweepInputs { cfg, spec })
+}
+
+/// Run the sweep grid through the executor and emit the surface.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let SweepInputs { cfg, spec } = sweep_inputs(args)?;
     let surface = sweep::run_sweep(&cfg, &spec, cfg.jobs);
     eprintln!(
         "[gvbench] sweep: {} cells x {} metrics on {} workers in {:.2}s (busy/wall {:.2}x)",
@@ -247,9 +282,16 @@ fn resolve_grid_systems(
     Ok(ALL_SYSTEMS.iter().map(|s| s.to_string()).collect())
 }
 
+/// The resolved inputs of a dynamics invocation — shared by
+/// `gvbench dynamics` and served dynamics jobs.
+pub struct DynInputs {
+    pub cfg: RunConfig,
+    pub spec: DynSpec,
+}
+
 /// Build the dynamics grid (CLI flags > config-file `[dynsim]` section >
-/// defaults) and replay it through the executor.
-fn cmd_dynamics(args: &Args) -> Result<()> {
+/// defaults).
+pub fn dynamics_inputs(args: &Args) -> Result<DynInputs> {
     let file = load_file_config(args)?;
     let cfg = build_config_with(args, file.as_ref())?;
     let overlay = match file.as_ref() {
@@ -282,6 +324,12 @@ fn cmd_dynamics(args: &Args) -> Result<()> {
     };
     let systems = resolve_grid_systems(args, overlay.systems, "dynsim")?;
     let spec = DynSpec { systems, scenarios, duration_ms, window_ms };
+    Ok(DynInputs { cfg, spec })
+}
+
+/// Replay the dynamics grid through the executor and emit the surface.
+fn cmd_dynamics(args: &Args) -> Result<()> {
+    let DynInputs { cfg, spec } = dynamics_inputs(args)?;
     let surface = dynsim::run_dynamics(&cfg, &spec, cfg.jobs);
     eprintln!(
         "[gvbench] dynamics: {} timeline(s) x {} window(s) on {} workers in {:.2}s (busy/wall {:.2}x)",
@@ -308,9 +356,17 @@ fn cmd_dynamics(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The resolved inputs of a cluster invocation — shared by
+/// `gvbench cluster` and served cluster jobs. The spec carries the
+/// arrivals count, so served fleets replay exactly what the CLI would.
+pub struct ClusterInputs {
+    pub cfg: RunConfig,
+    pub spec: ClusterSpec,
+}
+
 /// Build the cluster placement grid (CLI flags > config-file `[cluster]`
-/// section > defaults) and replay the fleet through the executor.
-fn cmd_cluster(args: &Args) -> Result<()> {
+/// section > defaults).
+pub fn cluster_inputs(args: &Args) -> Result<ClusterInputs> {
     let file = load_file_config(args)?;
     let cfg = build_config_with(args, file.as_ref())?;
     let overlay = match file.as_ref() {
@@ -352,6 +408,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     };
     let systems = resolve_grid_systems(args, overlay.systems, "cluster")?;
     let spec = ClusterSpec { systems, policies, node_counts, scenarios, arrivals };
+    Ok(ClusterInputs { cfg, spec })
+}
+
+/// Replay the fleet grid through the executor and emit the surface.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let ClusterInputs { cfg, spec } = cluster_inputs(args)?;
+    let arrivals = spec.arrivals;
     let surface = cluster::run_cluster(&cfg, &spec, cfg.jobs);
     eprintln!(
         "[gvbench] cluster: {} fleet cell(s) x {} arrival(s) on {} workers in {:.2}s (busy/wall {:.2}x)",
@@ -400,17 +463,26 @@ fn build_runner(args: &Args, cfg: RunConfig) -> SuiteRunner {
     runner
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
+/// Run the suite for every requested system on `exec` and render the
+/// combined report — the shared core of `gvbench run` and served run
+/// jobs. Returns the rendered text plus the combined execution stats
+/// (tasks from every system; worker count and summed wall time).
+pub fn run_report_on(
+    args: &Args,
+    exec: &Backend<'_>,
+    observer: Option<Observer>,
+) -> Result<(String, ExecutionStats)> {
     let cfg = build_config(args)?;
     let mut runner = build_runner(args, cfg);
     let systems: Vec<&str> =
         if args.all_systems { ALL_SYSTEMS.to_vec() } else { vec![args.system.as_str()] };
-    let format = Format::from_key(&args.format).expect("validated");
+    let format = Format::from_key(&args.format)
+        .with_context(|| format!("unknown format `{}`", args.format))?;
     let mut rendered = String::new();
-    let mut all_stats = crate::coordinator::executor::ExecutionStats::default();
+    let mut all_stats = ExecutionStats::default();
     for (i, system) in systems.iter().enumerate() {
         let system: &str = system;
-        let suite = runner.run(system);
+        let suite = runner.run_on(system, exec, observer.clone());
         let baseline = runner.baseline().to_vec();
         let report =
             Report::new(system, &suite.results, &baseline, &suite.card).with_stats(&suite.stats);
@@ -434,8 +506,19 @@ fn cmd_run(args: &Args) -> Result<()> {
             suite.stats.wall_ns as f64 / 1e9,
             suite.stats.speedup_estimate(),
         );
+        all_stats.jobs = suite.stats.jobs;
+        all_stats.wall_ns += suite.stats.wall_ns;
         all_stats.tasks.extend(suite.stats.tasks.iter().cloned());
     }
+    Ok((rendered, all_stats))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    // Same scoped-thread backend `runner.run` would pick; the daemon
+    // calls `run_report_on` with its persistent pool instead.
+    let jobs = build_config(args)?.jobs;
+    let (rendered, all_stats) = run_report_on(args, &Backend::Scoped(jobs), None)?;
+    let format = Format::from_key(&args.format).expect("validated");
     match &args.out {
         Some(path) => {
             std::fs::write(path, &rendered).with_context(|| format!("writing {path}"))?;
@@ -512,6 +595,103 @@ fn cmd_compare(args: &Args) -> Result<()> {
             suite.card.mig_parity_percent(),
             suite.card.grade().letter()
         );
+    }
+    Ok(())
+}
+
+/// Socket path for the serve daemon and its clients
+/// (`--socket` > `<temp-dir>/gvbench.sock`).
+fn resolve_socket(args: &Args) -> std::path::PathBuf {
+    match &args.socket {
+        Some(s) => std::path::PathBuf::from(s),
+        None => std::env::temp_dir().join("gvbench.sock"),
+    }
+}
+
+/// Resolve the job argv of a `submit`: the inline `--` tail, or one
+/// token per line from `--spec-file` (blank lines and `#` comments
+/// skipped).
+fn job_argv(args: &Args) -> Result<Vec<String>> {
+    if let Some(path) = &args.spec_file {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let argv: Vec<String> = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .map(String::from)
+            .collect();
+        if argv.is_empty() {
+            bail!("spec file {path} contains no job arguments");
+        }
+        return Ok(argv);
+    }
+    Ok(args.job_argv.clone().expect("validated"))
+}
+
+/// `gvbench serve`: run the benchmark daemon in the foreground until a
+/// client sends the shutdown op.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let socket = resolve_socket(args);
+    let daemon = crate::serve::Daemon::start(crate::serve::ServeConfig {
+        socket: socket.clone(),
+        jobs: args.jobs.unwrap_or(0),
+    })?;
+    eprintln!(
+        "[gvbench] serve: listening on {} with {} pool worker(s); \
+         stop with `gvbench jobs --socket {} --shutdown`",
+        socket.display(),
+        daemon.workers(),
+        socket.display(),
+    );
+    daemon.wait()
+}
+
+/// `gvbench submit`: submit one job, mirror its lifecycle events to
+/// stderr, and deliver the report to `--out` or stdout. The exit status
+/// follows the job: a failed job — or a served regress gate that found
+/// regressions — exits non-zero, like its one-shot equivalent.
+fn cmd_submit(args: &Args) -> Result<()> {
+    let socket = resolve_socket(args);
+    let argv = job_argv(args)?;
+    let outcome = crate::serve::client::submit_and_wait(
+        &socket,
+        &argv,
+        args.priority,
+        &mut |line: &str| eprintln!("{line}"),
+    )?;
+    if let Some(e) = outcome.error {
+        bail!("job {} failed: {e}", outcome.job);
+    }
+    let report = outcome.report.unwrap_or_default();
+    match &args.out {
+        Some(path) => {
+            std::fs::write(path, &report).with_context(|| format!("writing {path}"))?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{report}"),
+    }
+    if outcome.passed == Some(false) {
+        bail!("job {} reported regressions (gate failed)", outcome.job);
+    }
+    Ok(())
+}
+
+/// `gvbench jobs`: list the daemon's jobs, or drain and stop it with
+/// `--shutdown`.
+fn cmd_jobs(args: &Args) -> Result<()> {
+    let socket = resolve_socket(args);
+    if args.shutdown {
+        crate::serve::client::shutdown(&socket)?;
+        eprintln!(
+            "[gvbench] daemon on {} acknowledged shutdown (draining accepted jobs)",
+            socket.display()
+        );
+        return Ok(());
+    }
+    let rows = crate::serve::client::jobs(&socket)?;
+    println!("{:<6} {:<10} {:<10} {:>8}", "JOB", "COMMAND", "STATE", "PRIORITY");
+    for r in rows {
+        println!("{:<6} {:<10} {:<10} {:>8}", r.job, r.command, r.state, r.priority);
     }
     Ok(())
 }
@@ -752,6 +932,52 @@ mod tests {
         for p in [&bpath, &jpath, &mpath] {
             std::fs::remove_file(p).ok();
         }
+    }
+
+    #[test]
+    fn spec_file_yields_one_token_per_line_skipping_comments() {
+        let path = std::env::temp_dir().join("gvb_test_specfile.txt");
+        std::fs::write(&path, "# a served quick run\nrun\n--system\nnative\n\n--quick\n")
+            .unwrap();
+        let mut a = Args::default();
+        a.spec_file = Some(path.to_str().unwrap().to_string());
+        let argv = job_argv(&a).unwrap();
+        assert_eq!(argv, vec!["run", "--system", "native", "--quick"]);
+        // An all-comment file is an error, not an empty job.
+        std::fs::write(&path, "# nothing here\n\n").unwrap();
+        assert!(job_argv(&a).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn grid_input_builders_resolve_defaults() {
+        let mut a = Args::default();
+        a.quick = true;
+        let s = sweep_inputs(&a).unwrap();
+        assert_eq!(s.spec.tenants, vec![1, 2, 4, 8]);
+        assert_eq!(s.spec.quotas, vec![25, 50, 100]);
+        assert_eq!(s.spec.systems.len(), ALL_SYSTEMS.len());
+        let d = dynamics_inputs(&a).unwrap();
+        assert_eq!(d.spec.scenarios, dynsim::PRESETS.to_vec());
+        let c = cluster_inputs(&a).unwrap();
+        assert_eq!(c.spec.arrivals, cluster::DEFAULT_ARRIVALS);
+        assert_eq!(c.spec.node_counts, cluster::DEFAULT_NODE_COUNTS.to_vec());
+    }
+
+    #[test]
+    fn run_report_on_scoped_matches_cmd_run_rendering() {
+        // The serve daemon's run path and the CLI's must agree byte-for-
+        // byte; CSV avoids the host-timing execution object JSON embeds.
+        let mut a = Args::default();
+        a.command = Command::Run;
+        a.system = "native".into();
+        a.metric = Some("OH-009".into());
+        a.quick = true;
+        a.format = "csv".into();
+        let (one, _) = run_report_on(&a, &Backend::Scoped(1), None).unwrap();
+        let (eight, _) = run_report_on(&a, &Backend::Scoped(8), None).unwrap();
+        assert_eq!(one, eight);
+        assert!(one.starts_with("id,"));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! `gvbench` command-line front end (clap substitute for the offline
-//! build): subcommands `run`, `sweep`, `list`, `compare`, `regress`, plus
-//! `--help`.
+//! build): subcommands `run`, `sweep`, `dynamics`, `cluster`, `list`,
+//! `compare`, `regress`, the benchmark service (`serve`, `submit`,
+//! `jobs`), plus `--help`.
 
 pub mod args;
 pub mod commands;

@@ -42,8 +42,9 @@ pub mod policy;
 pub use policy::{canonical as canonical_policy, PlacementPolicy, POLICIES};
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use crate::coordinator::executor::{self, ExecutionStats, Task};
+use crate::coordinator::executor::{self, Backend, ExecutionStats, Observer, Task, TaskDone};
 use crate::metrics::RunConfig;
 use crate::simgpu::spec::GpuSpec;
 use crate::util::rng::{cluster_seed, task_seed};
@@ -466,6 +467,20 @@ pub struct ClusterSurface {
 /// parallelism), and collect the fleet replays. `base` supplies the run
 /// seed and node topology; per-cell seeds are derived per task.
 pub fn run_cluster(base: &RunConfig, spec: &ClusterSpec, jobs: usize) -> ClusterSurface {
+    run_cluster_on(&Backend::Scoped(jobs), base, spec, None)
+}
+
+/// [`run_cluster`] generalized over the pool shape: the same task list
+/// and seed derivation, executed on `exec` (scoped threads or a
+/// persistent serve-daemon pool), with an optional per-task completion
+/// observer (observed values are the cell's `CL-SUCCESS` rate).
+/// Bit-identical to [`run_cluster`] at any worker count.
+pub fn run_cluster_on(
+    exec: &Backend<'_>,
+    base: &RunConfig,
+    spec: &ClusterSpec,
+    observer: Option<Observer>,
+) -> ClusterSurface {
     let cells = spec.systems.len()
         * spec.policies.len()
         * spec.node_counts.len()
@@ -487,14 +502,34 @@ pub fn run_cluster(base: &RunConfig, spec: &ClusterSpec, jobs: usize) -> Cluster
             }
         }
     }
-    let (slots, stats) = executor::execute_indexed_with(&tasks, jobs, |i, _task| {
-        let (p, n, sc) = coords[i];
-        let policy = policy::by_name(p)?;
-        Some(replay_fleet(&cfgs[i], policy, n, sc, spec.arrivals))
-    });
+    let tasks = Arc::new(tasks);
+    let total = tasks.len();
+    let cfgs = Arc::new(cfgs);
+    let coords = Arc::new(coords);
+    let arrivals = spec.arrivals;
+    let run = {
+        let cfgs = Arc::clone(&cfgs);
+        let coords = Arc::clone(&coords);
+        move |i: usize, task: &Task| {
+            let (p, n, sc) = coords[i];
+            let policy = policy::by_name(p)?;
+            let replay = replay_fleet(&cfgs[i], policy, n, sc, arrivals);
+            if let Some(obs) = observer.as_ref() {
+                obs(TaskDone {
+                    index: i,
+                    total,
+                    system: task.system.clone(),
+                    label: format!("{p}@{n}n/{sc}"),
+                    value: replay.summary_value("CL-SUCCESS").unwrap_or(f64::NAN),
+                });
+            }
+            Some(replay)
+        }
+    };
+    let (slots, stats) = executor::execute_indexed_on(exec, Arc::clone(&tasks), run);
     let runs: Vec<FleetRun> = slots
         .into_iter()
-        .zip(&coords)
+        .zip(coords.iter())
         .map(|(slot, (p, _, _))| {
             slot.unwrap_or_else(|| panic!("cluster policy `{p}` is not a known policy"))
         })

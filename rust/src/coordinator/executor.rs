@@ -17,9 +17,19 @@
 //! 4. Results land in per-index slots and are re-assembled in input order;
 //!    wall-clock and per-task timings are recorded in [`ExecutionStats`]
 //!    and surfaced by the JSON/CSV reporters.
+//!
+//! Two pool shapes share that contract. The free functions above spin up
+//! a *scoped* pool per call — workers live exactly as long as one task
+//! matrix, which is all a one-shot CLI invocation needs. [`WorkerPool`]
+//! keeps the same workers alive across many matrices: the `gvbench
+//! serve` daemon owns one pool for its whole lifetime and runs every
+//! queued job's matrix on it ([`Backend`] selects the shape per call).
+//! Within a batch the claiming discipline is identical — an atomic
+//! cursor over input indices — so results are bit-identical between the
+//! two shapes at any worker count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::metrics::{registry, MetricResult, RunConfig};
@@ -74,6 +84,16 @@ impl ExecutionStats {
             return 1.0;
         }
         self.total_task_ns() as f64 / self.wall_ns as f64
+    }
+
+    /// Worker capacity the matrix left idle, ns: `jobs × wall − busy`.
+    /// Nonzero whenever stragglers at the batch tail (or a matrix smaller
+    /// than the pool) starve some workers — the per-job worker-side idle
+    /// figure the serve daemon reports next to its scheduler idle time.
+    pub fn worker_idle_ns(&self) -> u64 {
+        (self.jobs as u64)
+            .saturating_mul(self.wall_ns)
+            .saturating_sub(self.total_task_ns())
     }
 }
 
@@ -216,6 +236,250 @@ where
     let stats =
         ExecutionStats { jobs, tasks: timings, wall_ns: t_start.elapsed().as_nanos() as u64 };
     (results, stats)
+}
+
+/// One completed task's progress note, as seen by an [`Observer`]:
+/// which input slot finished, out of how many, plus a representative
+/// value for incremental-result streaming (NaN when the task's result is
+/// not a single scalar, e.g. a whole dynamics timeline).
+#[derive(Clone, Debug)]
+pub struct TaskDone {
+    /// Input index of the completed task.
+    pub index: usize,
+    /// Total tasks in the matrix.
+    pub total: usize,
+    pub system: String,
+    /// Metric id / scenario key / fleet-cell label of the task.
+    pub label: String,
+    pub value: f64,
+}
+
+/// Per-task completion callback. Called from worker threads in
+/// *completion* order (not input order) — the serve daemon turns these
+/// into `task_completed` lifecycle events on a job's stream. Observers
+/// must not assume any ordering and must never influence results (the
+/// determinism contract is on the task functions, not the observer).
+pub type Observer = Arc<dyn Fn(TaskDone) + Send + Sync>;
+
+/// Where a task matrix executes: a scoped per-call pool of N workers
+/// (0 = available parallelism; the one-shot CLI path) or a persistent
+/// [`WorkerPool`] shared across jobs (the serve-daemon path). Results
+/// are bit-identical between the two at any worker count.
+pub enum Backend<'a> {
+    Scoped(usize),
+    Pool(&'a WorkerPool),
+}
+
+/// [`execute_indexed_with`] generalized over the pool shape: run the
+/// matrix on `exec`, scoped threads or a persistent pool alike. The
+/// `'static` bounds exist because persistent workers outlive the call —
+/// callers hand the task list over as an `Arc` and move owned state into
+/// `run`.
+pub fn execute_indexed_on<R, F>(
+    exec: &Backend<'_>,
+    tasks: Arc<Vec<Task>>,
+    run: F,
+) -> (Vec<Option<R>>, ExecutionStats)
+where
+    R: Send + 'static,
+    F: Fn(usize, &Task) -> Option<R> + Send + Sync + 'static,
+{
+    match exec {
+        Backend::Scoped(jobs) => execute_indexed_with(&tasks, *jobs, run),
+        Backend::Pool(pool) => pool.execute_indexed(tasks, run),
+    }
+}
+
+/// One type-erased task matrix queued on a [`WorkerPool`].
+struct PoolBatch {
+    len: usize,
+    cursor: AtomicUsize,
+    /// Tasks claimed but not yet finished; the last finisher clears the
+    /// batch slot and wakes the submitter.
+    pending: AtomicUsize,
+    run: Box<dyn Fn(usize, usize) + Send + Sync>,
+}
+
+struct PoolState {
+    batch: Option<Arc<PoolBatch>>,
+    /// Bumped per batch so a worker that drained the cursor does not
+    /// re-claim the same (still-posted) batch while stragglers finish.
+    generation: u64,
+    shutdown: bool,
+}
+
+/// A persistent worker pool: the same OS threads execute many task
+/// matrices over the pool's lifetime. One matrix runs at a time
+/// (submissions serialize); within a matrix, workers claim input indices
+/// from an atomic cursor exactly like the scoped pool, so the
+/// determinism contract — and the bit-identical-at-any-worker-count
+/// guarantee — is unchanged. Dropping the pool (or calling
+/// [`WorkerPool::shutdown`]) joins every worker, so no threads outlive
+/// the owner.
+pub struct WorkerPool {
+    jobs: usize,
+    state: Arc<(Mutex<PoolState>, Condvar)>,
+    /// Serializes concurrent submitters (the daemon has one scheduler,
+    /// but the pool does not rely on that).
+    submit: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `jobs` workers (0 = available parallelism).
+    pub fn new(jobs: usize) -> WorkerPool {
+        let jobs = resolve_jobs(jobs);
+        let state = Arc::new((
+            Mutex::new(PoolState { batch: None, generation: 0, shutdown: false }),
+            Condvar::new(),
+        ));
+        let handles = (0..jobs)
+            .map(|worker| {
+                let state = Arc::clone(&state);
+                std::thread::spawn(move || Self::worker_loop(&state, worker))
+            })
+            .collect();
+        WorkerPool { jobs, state, submit: Mutex::new(()), handles }
+    }
+
+    /// Worker count of the pool.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    fn worker_loop(state: &(Mutex<PoolState>, Condvar), worker: usize) {
+        let (lock, cv) = state;
+        let mut seen_generation = 0u64;
+        loop {
+            let batch = {
+                let mut st = lock.lock().unwrap();
+                loop {
+                    if let Some(b) = &st.batch {
+                        if st.generation != seen_generation {
+                            seen_generation = st.generation;
+                            break Arc::clone(b);
+                        }
+                    }
+                    if st.shutdown {
+                        return;
+                    }
+                    st = cv.wait(st).unwrap();
+                }
+            };
+            loop {
+                let i = batch.cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= batch.len {
+                    break;
+                }
+                (batch.run)(i, worker);
+                if batch.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let mut st = lock.lock().unwrap();
+                    st.batch = None;
+                    cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Run one type-erased matrix to completion: `run(i, worker)` is
+    /// called exactly once for every `i < len`, from pool workers.
+    /// Blocks until every task finished.
+    fn run_batch(&self, len: usize, run: Box<dyn Fn(usize, usize) + Send + Sync>) {
+        if len == 0 {
+            return;
+        }
+        let _serialize = self.submit.lock().unwrap();
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        debug_assert!(st.batch.is_none(), "submissions are serialized");
+        st.generation += 1;
+        st.batch = Some(Arc::new(PoolBatch {
+            len,
+            cursor: AtomicUsize::new(0),
+            pending: AtomicUsize::new(len),
+            run,
+        }));
+        cv.notify_all();
+        while st.batch.is_some() {
+            st = cv.wait(st).unwrap();
+        }
+    }
+
+    /// [`execute_indexed_with`] on the persistent pool: results aligned
+    /// with input indices, `None` slots record no timing, bit-identical
+    /// to the scoped path.
+    pub fn execute_indexed<R, F>(
+        &self,
+        tasks: Arc<Vec<Task>>,
+        run: F,
+    ) -> (Vec<Option<R>>, ExecutionStats)
+    where
+        R: Send + 'static,
+        F: Fn(usize, &Task) -> Option<R> + Send + Sync + 'static,
+    {
+        let t_start = Instant::now();
+        let slots: Arc<Vec<Mutex<Option<(R, TaskTiming)>>>> =
+            Arc::new(tasks.iter().map(|_| Mutex::new(None)).collect());
+        {
+            let slots = Arc::clone(&slots);
+            let batch_tasks = Arc::clone(&tasks);
+            self.run_batch(
+                tasks.len(),
+                Box::new(move |i, worker| {
+                    let task = &batch_tasks[i];
+                    let t0 = Instant::now();
+                    if let Some(result) = run(i, task) {
+                        let timing = TaskTiming {
+                            system: task.system.clone(),
+                            metric_id: task.metric_id,
+                            wall_ns: t0.elapsed().as_nanos() as u64,
+                            worker,
+                        };
+                        *slots[i].lock().unwrap() = Some((result, timing));
+                    }
+                }),
+            );
+        }
+        // Straggler workers may hold their batch Arc (and thus the slot
+        // Arc) a beat longer than run_batch; drain through the shared
+        // handle instead of unwrapping it.
+        let mut results: Vec<Option<R>> = Vec::with_capacity(tasks.len());
+        let mut timings = Vec::with_capacity(tasks.len());
+        for slot in slots.iter() {
+            match slot.lock().unwrap().take() {
+                Some((result, timing)) => {
+                    results.push(Some(result));
+                    timings.push(timing);
+                }
+                None => results.push(None),
+            }
+        }
+        let stats = ExecutionStats {
+            jobs: self.jobs,
+            tasks: timings,
+            wall_ns: t_start.elapsed().as_nanos() as u64,
+        };
+        (results, stats)
+    }
+
+    /// Stop accepting batches and join every worker. Idempotent; also
+    /// runs on drop.
+    pub fn shutdown(&mut self) {
+        {
+            let (lock, cv) = &*self.state;
+            lock.lock().unwrap().shutdown = true;
+            cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
 }
 
 #[cfg(test)]
@@ -370,5 +634,86 @@ mod tests {
         let (results, stats) = execute(&base, &[], 4);
         assert!(results.is_empty());
         assert!(stats.tasks.is_empty());
+    }
+
+    #[test]
+    fn pool_matches_scoped_path_bitwise() {
+        let base = RunConfig::quick("hami");
+        let pairs: Vec<(Task, RunConfig)> = task_matrix(&["hami", "fcsp"], &cheap_ids())
+            .into_iter()
+            .map(|t| {
+                let cfg = derive_cfg(&base, &t.system, t.metric_id);
+                (t, cfg)
+            })
+            .collect();
+        let (scoped, _) = execute_prepared_indexed(&pairs, 2);
+        let pool = WorkerPool::new(3);
+        let tasks: Arc<Vec<Task>> = Arc::new(pairs.iter().map(|(t, _)| t.clone()).collect());
+        let shared = Arc::new(pairs);
+        let run = {
+            let shared = Arc::clone(&shared);
+            move |i: usize, task: &Task| registry::run_metric(task.metric_id, &shared[i].1)
+        };
+        let (pooled, stats) = execute_indexed_on(&Backend::Pool(&pool), tasks, run);
+        assert_eq!(stats.jobs, 3);
+        assert_eq!(stats.tasks.len(), pooled.len());
+        assert_eq!(scoped.len(), pooled.len());
+        for (a, b) in scoped.iter().zip(&pooled) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "{}", a.id);
+        }
+    }
+
+    #[test]
+    fn pool_survives_many_batches_and_joins_cleanly() {
+        let mut pool = WorkerPool::new(2);
+        for round in 0..5u64 {
+            let tasks: Arc<Vec<Task>> = Arc::new(
+                (0..7).map(|i| Task { system: format!("s{i}"), metric_id: "X-1" }).collect(),
+            );
+            let run = move |i: usize, task: &Task| {
+                if i == 3 {
+                    None
+                } else {
+                    Some(format!("{}#{round}", task.system))
+                }
+            };
+            let (slots, stats) = pool.execute_indexed(tasks, run);
+            assert_eq!(slots.len(), 7);
+            assert!(slots[3].is_none());
+            assert_eq!(slots[2].as_deref(), Some(format!("s2#{round}").as_str()));
+            assert_eq!(stats.tasks.len(), 6);
+            assert_eq!(stats.jobs, 2);
+        }
+        pool.shutdown();
+        pool.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn pool_empty_batch_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        let (slots, stats) =
+            pool.execute_indexed(Arc::new(Vec::new()), |_i, _t: &Task| Some(1u8));
+        assert!(slots.is_empty());
+        assert!(stats.tasks.is_empty());
+    }
+
+    #[test]
+    fn worker_idle_accounts_capacity() {
+        let stats = ExecutionStats {
+            jobs: 4,
+            tasks: vec![TaskTiming {
+                system: "native".into(),
+                metric_id: "OH-009",
+                wall_ns: 100,
+                worker: 0,
+            }],
+            wall_ns: 50,
+        };
+        assert_eq!(stats.worker_idle_ns(), 4 * 50 - 100);
+        // Saturates instead of underflowing on timer jitter.
+        let tight = ExecutionStats { jobs: 1, tasks: stats.tasks.clone(), wall_ns: 50 };
+        assert_eq!(tight.worker_idle_ns(), 0);
     }
 }

@@ -9,11 +9,12 @@
 //! order and the run's [`ExecutionStats`] ride along on [`SuiteResult`].
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use crate::metrics::{taxonomy, Category, MetricResult, RunConfig};
+use crate::metrics::{registry, taxonomy, Category, MetricResult, RunConfig};
 use crate::scoring::ScoreCard;
 
-use super::executor::{self, ExecutionStats, Task};
+use super::executor::{self, Backend, ExecutionStats, Observer, Task, TaskDone};
 
 /// Results for one system plus its scorecard and execution timings.
 pub struct SuiteResult {
@@ -70,10 +71,51 @@ impl SuiteRunner {
     }
 
     fn run_suite(&self, system: &str) -> (Vec<MetricResult>, ExecutionStats) {
+        self.run_suite_on(system, &Backend::Scoped(self.base_cfg.jobs), None)
+    }
+
+    /// [`Self::run_suite`] generalized over the pool shape: same task
+    /// list, same [`executor::derive_cfg`] seed derivation, executed on
+    /// `exec` (scoped threads or a persistent serve-daemon pool), with an
+    /// optional per-task completion observer. Bit-identical to the scoped
+    /// path at any worker count.
+    fn run_suite_on(
+        &self,
+        system: &str,
+        exec: &Backend<'_>,
+        observer: Option<Observer>,
+    ) -> (Vec<MetricResult>, ExecutionStats) {
         let ids = self.metric_id_list();
-        let tasks: Vec<Task> =
-            ids.iter().map(|id| Task { system: system.to_string(), metric_id: *id }).collect();
-        executor::execute(&self.base_cfg, &tasks, self.base_cfg.jobs)
+        let pairs: Vec<(Task, RunConfig)> = ids
+            .iter()
+            .map(|id| {
+                (
+                    Task { system: system.to_string(), metric_id: *id },
+                    executor::derive_cfg(&self.base_cfg, system, id),
+                )
+            })
+            .collect();
+        let tasks: Arc<Vec<Task>> = Arc::new(pairs.iter().map(|(t, _)| t.clone()).collect());
+        let total = tasks.len();
+        let pairs = Arc::new(pairs);
+        let run = {
+            let pairs = Arc::clone(&pairs);
+            move |i: usize, task: &Task| {
+                let result = registry::run_metric(task.metric_id, &pairs[i].1);
+                if let (Some(obs), Some(r)) = (observer.as_ref(), result.as_ref()) {
+                    obs(TaskDone {
+                        index: i,
+                        total,
+                        system: task.system.clone(),
+                        label: task.metric_id.to_string(),
+                        value: r.value,
+                    });
+                }
+                result
+            }
+        };
+        let (slots, stats) = executor::execute_indexed_on(exec, tasks, run);
+        (slots.into_iter().flatten().collect(), stats)
     }
 
     /// The MIG-Ideal baseline: spec-derived expected values (paper §4.5),
@@ -103,8 +145,20 @@ impl SuiteRunner {
 
     /// Run one system and score it against the MIG baseline.
     pub fn run(&mut self, system: &str) -> SuiteResult {
+        self.run_on(system, &Backend::Scoped(self.base_cfg.jobs), None)
+    }
+
+    /// [`Self::run`] on an explicit pool shape with an optional per-task
+    /// observer — the serve daemon runs suites on its persistent pool
+    /// through this; results are bit-identical to [`Self::run`].
+    pub fn run_on(
+        &mut self,
+        system: &str,
+        exec: &Backend<'_>,
+        observer: Option<Observer>,
+    ) -> SuiteResult {
         self.baseline();
-        let (results, stats) = self.run_suite(system);
+        let (results, stats) = self.run_suite_on(system, exec, observer);
         let card = ScoreCard::build(system, &results, self.baseline.as_ref().unwrap());
         SuiteResult { system: system.to_string(), results, card, stats }
     }

@@ -31,6 +31,7 @@
 //!    `report::sweep` renders as JSON / CSV / TXT.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 use crate::metrics::{registry, taxonomy, Category, MetricResult, RunConfig};
 use crate::scoring::{Grade, ScoreCard};
@@ -39,7 +40,7 @@ use crate::simgpu::GpuSpec;
 use crate::util::rng::{scenario_seed, topology_seed};
 use crate::virt::ALL_SYSTEMS;
 
-use super::executor::{self, ExecutionStats, Task};
+use super::executor::{self, Backend, ExecutionStats, Observer, Task, TaskDone};
 
 /// Tenant count of the baseline cell every delta is computed against.
 pub const BASELINE_TENANTS: u32 = 1;
@@ -319,6 +320,19 @@ impl SweepSurface {
 /// cell. `base` supplies iterations/warmup/seed; system, tenants, quota,
 /// topology and per-task seeds are derived per cell.
 pub fn run_sweep(base: &RunConfig, spec: &SweepSpec, jobs: usize) -> SweepSurface {
+    run_sweep_on(&Backend::Scoped(jobs), base, spec, None)
+}
+
+/// [`run_sweep`] generalized over the pool shape: the same task list and
+/// seed derivation, executed on `exec` (scoped threads or a persistent
+/// serve-daemon pool), with an optional per-task completion observer.
+/// Bit-identical to [`run_sweep`] at any worker count.
+pub fn run_sweep_on(
+    exec: &Backend<'_>,
+    base: &RunConfig,
+    spec: &SweepSpec,
+    observer: Option<Observer>,
+) -> SweepSurface {
     let ids = spec.metric_ids();
     let scenarios = spec.scenarios();
     let topologies = spec.topologies();
@@ -348,7 +362,26 @@ pub fn run_sweep(base: &RunConfig, spec: &SweepSpec, jobs: usize) -> SweepSurfac
     // slot must be filled — a `None` (a taxonomy/registry divergence)
     // panics loudly below instead of silently shifting later cells'
     // results onto the wrong coordinates.
-    let (slots, stats) = executor::execute_prepared_indexed(&pairs, jobs);
+    let tasks: Arc<Vec<Task>> = Arc::new(pairs.iter().map(|(t, _)| t.clone()).collect());
+    let total = tasks.len();
+    let pairs = Arc::new(pairs);
+    let run = {
+        let pairs = Arc::clone(&pairs);
+        move |i: usize, task: &Task| {
+            let result = registry::run_metric(task.metric_id, &pairs[i].1);
+            if let (Some(obs), Some(r)) = (observer.as_ref(), result.as_ref()) {
+                obs(TaskDone {
+                    index: i,
+                    total,
+                    system: task.system.clone(),
+                    label: task.metric_id.to_string(),
+                    value: r.value,
+                });
+            }
+            result
+        }
+    };
+    let (slots, stats) = executor::execute_indexed_on(exec, tasks, run);
 
     // Spec baseline (MIG-Ideal expected values), shared by every cell.
     let spec_baseline: Vec<MetricResult> = ids
@@ -641,6 +674,29 @@ mod tests {
         }
         // The plain per-system summary still collapses to one cell.
         assert_eq!(surface.worst_cells().len(), 1);
+    }
+
+    #[test]
+    fn pool_backend_matches_scoped_sweep_bitwise() {
+        let base = RunConfig::quick("native");
+        let scoped = run_sweep(&base, &small_spec(), 2);
+        let pool = executor::WorkerPool::new(3);
+        let seen = Arc::new(std::sync::Mutex::new(0usize));
+        let observer: Observer = {
+            let seen = Arc::clone(&seen);
+            Arc::new(move |_done| *seen.lock().unwrap() += 1)
+        };
+        let pooled = run_sweep_on(&Backend::Pool(&pool), &base, &small_spec(), Some(observer));
+        assert_eq!(scoped.cells.len(), pooled.cells.len());
+        for (a, b) in scoped.cells.iter().zip(&pooled.cells) {
+            assert_eq!((a.system.as_str(), a.tenants, a.quota_pct), (b.system.as_str(), b.tenants, b.quota_pct));
+            assert_eq!(a.overall.to_bits(), b.overall.to_bits(), "{}", a.system);
+            for (x, y) in a.results.iter().zip(&b.results) {
+                assert_eq!(x.value.to_bits(), y.value.to_bits(), "{}", x.id);
+            }
+        }
+        // The observer saw every executed task exactly once.
+        assert_eq!(*seen.lock().unwrap(), pooled.stats.tasks.len());
     }
 
     #[test]

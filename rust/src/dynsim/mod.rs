@@ -47,7 +47,9 @@ pub mod scenario;
 pub use engine::{Recovery, ScenarioRun, SeriesPoint};
 pub use scenario::{ScenarioSpec, PRESETS};
 
-use crate::coordinator::executor::{self, ExecutionStats, Task};
+use std::sync::Arc;
+
+use crate::coordinator::executor::{self, Backend, ExecutionStats, Observer, Task, TaskDone};
 use crate::metrics::RunConfig;
 use crate::util::rng::{dynamics_seed, task_seed};
 
@@ -97,6 +99,20 @@ pub struct DynSurface {
 /// timelines. `base` supplies the run seed and the backend-independent
 /// config; system, scenario and per-task seeds are derived per task.
 pub fn run_dynamics(base: &RunConfig, spec: &DynSpec, jobs: usize) -> DynSurface {
+    run_dynamics_on(&Backend::Scoped(jobs), base, spec, None)
+}
+
+/// [`run_dynamics`] generalized over the pool shape: the same task list
+/// and seed derivation, executed on `exec` (scoped threads or a
+/// persistent serve-daemon pool), with an optional per-task completion
+/// observer (timelines are not single scalars, so observed values are
+/// NaN). Bit-identical to [`run_dynamics`] at any worker count.
+pub fn run_dynamics_on(
+    exec: &Backend<'_>,
+    base: &RunConfig,
+    spec: &DynSpec,
+    observer: Option<Observer>,
+) -> DynSurface {
     let mut tasks: Vec<Task> = Vec::with_capacity(spec.systems.len() * spec.scenarios.len());
     let mut cfgs: Vec<RunConfig> = Vec::with_capacity(tasks.capacity());
     for system in &spec.systems {
@@ -108,13 +124,31 @@ pub fn run_dynamics(base: &RunConfig, spec: &DynSpec, jobs: usize) -> DynSurface
             cfgs.push(cfg);
         }
     }
-    let (slots, stats) = executor::execute_indexed_with(&tasks, jobs, |i, task| {
-        let sc = ScenarioSpec::preset(task.metric_id, spec.duration_ms, spec.window_ms)?;
-        Some(engine::run_scenario(&cfgs[i], &sc))
-    });
+    let tasks = Arc::new(tasks);
+    let total = tasks.len();
+    let cfgs = Arc::new(cfgs);
+    let (duration_ms, window_ms) = (spec.duration_ms, spec.window_ms);
+    let run = {
+        let cfgs = Arc::clone(&cfgs);
+        move |i: usize, task: &Task| {
+            let sc = ScenarioSpec::preset(task.metric_id, duration_ms, window_ms)?;
+            let replay = engine::run_scenario(&cfgs[i], &sc);
+            if let Some(obs) = observer.as_ref() {
+                obs(TaskDone {
+                    index: i,
+                    total,
+                    system: task.system.clone(),
+                    label: task.metric_id.to_string(),
+                    value: f64::NAN,
+                });
+            }
+            Some(replay)
+        }
+    };
+    let (slots, stats) = executor::execute_indexed_on(exec, Arc::clone(&tasks), run);
     let runs: Vec<ScenarioRun> = slots
         .into_iter()
-        .zip(&tasks)
+        .zip(tasks.iter())
         .map(|(slot, task)| {
             slot.unwrap_or_else(|| {
                 panic!("dynamics scenario `{}` is not a known preset", task.metric_id)

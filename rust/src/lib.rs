@@ -137,9 +137,25 @@
 //! `rust/tests/cluster_determinism.rs` proves the fleet surface
 //! bit-identical at any job count.
 //!
+//! ## Benchmark service
+//!
+//! `gvbench serve` runs the whole framework as a daemon: [`serve`] owns
+//! one persistent [`coordinator::executor::WorkerPool`] and a
+//! FIFO-with-priorities job queue, accepts the argv of any one-shot
+//! invocation (`run` / `sweep` / `dynamics` / `cluster` / `regress`) as
+//! a job over a local Unix socket, and streams newline-delimited JSON
+//! lifecycle events (`queued` → `scheduled` → `task_completed` × N →
+//! `report` → `finished`/`failed`) with explicit idle-time accounting
+//! (`queue_wait_ms`, `scheduler_idle_ms`, `worker_idle_ms`). Jobs run
+//! through the same spec-building helpers and `*_on` executor entry
+//! points as the CLI, so a served report is bit-identical to its
+//! one-shot equivalent — pinned by `rust/tests/serve_determinism.rs`
+//! and CI's blocking **serve-smoke** job. `gvbench submit` and
+//! `gvbench jobs` are the client side (see `docs/serve.md`).
+//!
 //! Operator-facing guides live under `docs/` (`architecture.md`,
-//! `sweeps.md`, `regression-gating.md`, `dynamics.md`, `cluster.md`),
-//! with the quickstart in the top-level `README.md`.
+//! `sweeps.md`, `regression-gating.md`, `dynamics.md`, `cluster.md`,
+//! `serve.md`), with the quickstart in the top-level `README.md`.
 
 pub mod anyhow;
 pub mod benchkit;
@@ -154,6 +170,7 @@ pub mod regress;
 pub mod report;
 pub mod runtime;
 pub mod scoring;
+pub mod serve;
 pub mod simgpu;
 pub mod stats;
 pub mod testkit;

@@ -167,6 +167,13 @@ pub struct Baseline {
     /// Distinct `(system, cell)` coordinates marked `feasible: false` in
     /// the file.
     pub infeasible: Vec<(String, CellCoord)>,
+    /// Arrival count recorded in the surface's `# arrivals=N` header
+    /// comment (`gvbench cluster --summary-out` embeds it); `None` when
+    /// the file carries no such comment. The engine surfaces a mismatch
+    /// against [`crate::cluster::DEFAULT_ARRIVALS`] so a baseline armed
+    /// from a non-default recording is never silently gated against
+    /// default-arrival re-runs.
+    pub recorded_arrivals: Option<u32>,
 }
 
 impl Baseline {
@@ -210,8 +217,27 @@ impl Baseline {
 /// and duplicate `(system, cell, id)` keys are rejected with the
 /// offending row named.
 pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> {
-    let mut lines = text.lines();
-    let header = lines.next().context("empty baseline file")?;
+    // `#` comment lines may appear anywhere (the cluster summary CSV
+    // prepends a `# arrivals=N` provenance comment). They never count as
+    // header or data, but physical line numbers are preserved so `row N`
+    // in an error always names the line an editor shows.
+    let mut recorded_arrivals: Option<u32> = None;
+    let mut data: Vec<(usize, &str)> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        if let Some(rest) = line.trim().strip_prefix('#') {
+            if let Some(v) = rest.trim().strip_prefix("arrivals=") {
+                let n: u32 = v.trim().parse().with_context(|| {
+                    format!("line {lineno}: bad `# arrivals=` comment value `{}`", v.trim())
+                })?;
+                recorded_arrivals = Some(n);
+            }
+            continue;
+        }
+        data.push((lineno, line));
+    }
+    let mut lines = data.into_iter();
+    let (_, header) = lines.next().context("empty baseline file")?;
     let cols = split_csv(header);
     let col = |name: &str| cols.iter().position(|c| c == name);
     let id_col = col("id").context("no `id` column in baseline header")?;
@@ -303,8 +329,7 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
     #[allow(clippy::type_complexity)]
     let mut seen: BTreeSet<(String, Option<CellCoord>, Option<DynCoord>, Option<ClusterCoord>, String)> =
         BTreeSet::new();
-    for (i, line) in lines.enumerate() {
-        let lineno = i + 2;
+    for (lineno, line) in lines {
         if line.trim().is_empty() {
             continue;
         }
@@ -462,7 +487,7 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
     if rows.is_empty() && infeasible.is_empty() {
         bail!("baseline contains no metrics");
     }
-    Ok(Baseline { schema, rows, infeasible })
+    Ok(Baseline { schema, rows, infeasible, recorded_arrivals })
 }
 
 /// Fetch column `c` of a split row, naming the row and column on absence.
@@ -660,6 +685,40 @@ mod tests {
         assert_eq!(b.rows[2].system, "native");
         assert_eq!(b.rows[2].cell_label(), "frag-gradient@16n/failover");
         assert_eq!(b.rows[2].value, 12.0);
+    }
+
+    #[test]
+    fn comment_lines_are_skipped_and_arrivals_captured() {
+        // The cluster summary CSV prepends its recording arrival count as
+        // a provenance comment; the parser must skip it, capture it, and
+        // keep physical line numbers in row errors.
+        let csv = "# arrivals=5\n\
+                   system,policy,nodes,scenario,id,value\n\
+                   hami,first-fit,8,churn,CL-SUCCESS,97.200000\n";
+        let b = parse_baseline_csv(csv, "native").unwrap();
+        assert_eq!(b.schema, BaselineSchema::Cluster);
+        assert_eq!(b.recorded_arrivals, Some(5));
+        assert_eq!(b.rows.len(), 1);
+        assert_eq!(b.rows[0].line, 3);
+        // Files without the comment record no arrival count…
+        let plain = "system,policy,nodes,scenario,id,value\n\
+                     hami,first-fit,8,churn,CL-SUCCESS,97.2\n";
+        assert_eq!(parse_baseline_csv(plain, "native").unwrap().recorded_arrivals, None);
+        // …and other comments are ignored wherever they appear.
+        let noisy = "# produced by gvbench\nid,value\n# mid-file note\nOH-001,15.3\n";
+        let b = parse_baseline_csv(noisy, "hami").unwrap();
+        assert_eq!(b.recorded_arrivals, None);
+        assert_eq!(b.rows[0].line, 4);
+        // Row errors still name the physical line.
+        let bad = "# arrivals=5\nid,value\nOH-001,15.3\nXX-1,3\n";
+        let e = parse_baseline_csv(bad, "hami").unwrap_err();
+        assert!(format!("{e:#}").contains("row 4"), "{e:#}");
+        // A mangled arrivals comment is rejected, naming its line.
+        let e = parse_baseline_csv("# arrivals=lots\nid,value\nOH-001,1\n", "hami").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("line 1") && msg.contains("arrivals"), "{msg}");
+        // A comment-only file still reads as empty.
+        assert!(parse_baseline_csv("# arrivals=5\n", "hami").is_err());
     }
 
     #[test]

@@ -17,10 +17,13 @@
 //! baselines stay bit-identical too. Seed parity makes an unchanged
 //! tree compare clean against its own fresh baseline at any job count.
 
+use std::sync::Arc;
+
 use crate::anyhow::{bail, Result};
 use crate::cluster;
-use crate::coordinator::executor::{self, ExecutionStats, Task};
+use crate::coordinator::executor::{self, Backend, ExecutionStats, Observer, Task, TaskDone};
 use crate::coordinator::sweep;
+use crate::metrics::registry;
 use crate::dynsim::{self, ScenarioSpec};
 use crate::metrics::{taxonomy, Direction, RunConfig};
 use crate::util::rng::{cluster_seed, dynamics_seed, task_seed};
@@ -114,6 +117,11 @@ pub struct RegressOutcome {
     pub schema: BaselineSchema,
     /// `feasible: false` cells present in the baseline, skipped unrun.
     pub skipped_infeasible: usize,
+    /// Arrival count the baseline CSV says it was recorded at (its
+    /// `# arrivals=N` header comment), when present. Cluster replays pin
+    /// [`cluster::DEFAULT_ARRIVALS`]; the reporters flag a mismatch so a
+    /// baseline recorded at a non-default count is self-describing.
+    pub recorded_arrivals: Option<u32>,
     /// Per-cell deltas, in baseline row order.
     pub cells: Vec<CellDelta>,
     /// Executor timings of the re-run.
@@ -133,6 +141,16 @@ impl RegressOutcome {
 
     pub fn passed(&self) -> bool {
         self.cells.iter().all(|c| !c.regressed)
+    }
+
+    /// The baseline's recorded arrival count when it differs from the
+    /// pinned cluster replay count — i.e. when the baseline can never
+    /// round-trip clean and every cluster delta is suspect.
+    pub fn arrivals_mismatch(&self) -> Option<u32> {
+        match (self.schema, self.recorded_arrivals) {
+            (BaselineSchema::Cluster, Some(n)) if n != cluster::DEFAULT_ARRIVALS => Some(n),
+            _ => None,
+        }
     }
 
     /// The worst regression (largest `worse_percent`) per system, in
@@ -169,16 +187,31 @@ pub fn run_regression(
     baseline: &Baseline,
     threshold_percent: f64,
 ) -> Result<RegressOutcome> {
+    run_regression_on(&Backend::Scoped(cfg.jobs), cfg, baseline, threshold_percent, None)
+}
+
+/// [`run_regression`] generalized over the pool shape: the same per-row
+/// reconstruction and seed derivation, executed on `exec` (scoped
+/// threads or a persistent serve-daemon pool — the serve-backed gate
+/// path), with an optional per-task completion observer. Bit-identical
+/// to [`run_regression`] at any worker count.
+pub fn run_regression_on(
+    exec: &Backend<'_>,
+    cfg: &RunConfig,
+    baseline: &Baseline,
+    threshold_percent: f64,
+    observer: Option<Observer>,
+) -> Result<RegressOutcome> {
     if baseline.schema == BaselineSchema::Dynamics {
         // Dynamics summaries are not registry metrics: each distinct
         // (system, scenario, geometry) coordinate replays its whole
         // timeline once, then every row compares against that run.
-        return run_dynamics_regression(cfg, baseline, threshold_percent);
+        return run_dynamics_regression(exec, cfg, baseline, threshold_percent, observer);
     }
     if baseline.schema == BaselineSchema::Cluster {
         // Likewise for cluster summaries: one fleet replay per distinct
         // (system, policy, nodes, scenario) coordinate.
-        return run_cluster_regression(cfg, baseline, threshold_percent);
+        return run_cluster_regression(exec, cfg, baseline, threshold_percent, observer);
     }
     let mut pairs: Vec<(Task, RunConfig)> = Vec::with_capacity(baseline.rows.len());
     for row in &baseline.rows {
@@ -235,7 +268,26 @@ pub fn run_regression(
         };
         pairs.push((Task { system: row.system.clone(), metric_id: d.id }, task_cfg));
     }
-    let (slots, stats) = executor::execute_prepared_indexed(&pairs, cfg.jobs);
+    let tasks: Arc<Vec<Task>> = Arc::new(pairs.iter().map(|(t, _)| t.clone()).collect());
+    let total = tasks.len();
+    let pairs = Arc::new(pairs);
+    let run = {
+        let pairs = Arc::clone(&pairs);
+        move |i: usize, task: &Task| {
+            let result = registry::run_metric(task.metric_id, &pairs[i].1);
+            if let (Some(obs), Some(r)) = (observer.as_ref(), result.as_ref()) {
+                obs(TaskDone {
+                    index: i,
+                    total,
+                    system: task.system.clone(),
+                    label: task.metric_id.to_string(),
+                    value: r.value,
+                });
+            }
+            result
+        }
+    };
+    let (slots, stats) = executor::execute_indexed_on(exec, tasks, run);
     let mut cells: Vec<CellDelta> = Vec::with_capacity(baseline.rows.len());
     for (row, slot) in baseline.rows.iter().zip(slots) {
         let result = match slot {
@@ -266,6 +318,7 @@ pub fn run_regression(
         seed: cfg.seed,
         schema: baseline.schema,
         skipped_infeasible: baseline.infeasible.len(),
+        recorded_arrivals: baseline.recorded_arrivals,
         cells,
         stats,
     })
@@ -278,9 +331,11 @@ pub fn run_regression(
 /// scenario)`, see [`crate::dynsim::DynSpec::run_seed`]) — and compare
 /// every summary row direction-aware against its recorded value.
 fn run_dynamics_regression(
+    exec: &Backend<'_>,
     cfg: &RunConfig,
     baseline: &Baseline,
     threshold_percent: f64,
+    observer: Option<Observer>,
 ) -> Result<RegressOutcome> {
     // Distinct (system, coordinate) timelines, first-appearance order.
     let mut groups: Vec<(String, DynCoord)> = Vec::new();
@@ -312,24 +367,44 @@ fn run_dynamics_regression(
             groups.push(key);
         }
     }
-    let tasks: Vec<Task> = groups
-        .iter()
-        .map(|(system, coord)| Task { system: system.clone(), metric_id: coord.scenario })
-        .collect();
-    let (slots, stats) = executor::execute_indexed_with(&tasks, cfg.jobs, |i, _task| {
-        let (system, coord) = &groups[i];
-        let spec = ScenarioSpec::preset(coord.scenario, coord.duration_ms, coord.window_ms)?;
-        let mut run_cfg = cfg.clone();
-        run_cfg.system = system.clone();
-        run_cfg.seed = task_seed(
-            dynamics_seed(cfg.seed, coord.scenario, coord.duration_ms, coord.window_ms),
-            system,
-            coord.scenario,
-        );
-        Some(dynsim::engine::run_scenario(&run_cfg, &spec))
-    });
+    let tasks: Arc<Vec<Task>> = Arc::new(
+        groups
+            .iter()
+            .map(|(system, coord)| Task { system: system.clone(), metric_id: coord.scenario })
+            .collect(),
+    );
+    let total = tasks.len();
+    let groups = Arc::new(groups);
+    let run = {
+        let groups = Arc::clone(&groups);
+        let base_cfg = cfg.clone();
+        move |i: usize, task: &Task| {
+            let (system, coord) = &groups[i];
+            let spec =
+                ScenarioSpec::preset(coord.scenario, coord.duration_ms, coord.window_ms)?;
+            let mut run_cfg = base_cfg.clone();
+            run_cfg.system = system.clone();
+            run_cfg.seed = task_seed(
+                dynamics_seed(base_cfg.seed, coord.scenario, coord.duration_ms, coord.window_ms),
+                system,
+                coord.scenario,
+            );
+            let replay = dynsim::engine::run_scenario(&run_cfg, &spec);
+            if let Some(obs) = observer.as_ref() {
+                obs(TaskDone {
+                    index: i,
+                    total,
+                    system: task.system.clone(),
+                    label: coord.scenario.to_string(),
+                    value: f64::NAN,
+                });
+            }
+            Some(replay)
+        }
+    };
+    let (slots, stats) = executor::execute_indexed_on(exec, tasks, run);
     let mut runs = Vec::with_capacity(groups.len());
-    for (slot, (system, coord)) in slots.into_iter().zip(&groups) {
+    for (slot, (system, coord)) in slots.into_iter().zip(groups.iter()) {
         match slot {
             Some(run) => runs.push(run),
             None => bail!("scenario `{}` on `{system}` produced no timeline on re-run", coord.scenario),
@@ -371,6 +446,7 @@ fn run_dynamics_regression(
         seed: cfg.seed,
         schema: BaselineSchema::Dynamics,
         skipped_infeasible: 0,
+        recorded_arrivals: baseline.recorded_arrivals,
         cells,
         stats,
     })
@@ -389,9 +465,11 @@ fn run_dynamics_regression(
 /// non-default `--arrivals` will not compare clean (`gvbench cluster`
 /// warns when writing one).
 fn run_cluster_regression(
+    exec: &Backend<'_>,
     cfg: &RunConfig,
     baseline: &Baseline,
     threshold_percent: f64,
+    observer: Option<Observer>,
 ) -> Result<RegressOutcome> {
     // Distinct (system, coordinate) fleet cells, first-appearance order.
     let mut groups: Vec<(String, ClusterCoord)> = Vec::new();
@@ -431,30 +509,49 @@ fn run_cluster_regression(
             groups.push(key);
         }
     }
-    let tasks: Vec<Task> = groups
-        .iter()
-        .map(|(system, coord)| Task { system: system.clone(), metric_id: coord.scenario })
-        .collect();
-    let (slots, stats) = executor::execute_indexed_with(&tasks, cfg.jobs, |i, _task| {
-        let (system, coord) = &groups[i];
-        let policy = cluster::policy::by_name(coord.policy)?;
-        let mut run_cfg = cfg.clone();
-        run_cfg.system = system.clone();
-        run_cfg.seed = task_seed(
-            cluster_seed(cfg.seed, coord.policy, coord.nodes, coord.scenario),
-            system,
-            coord.scenario,
-        );
-        Some(cluster::replay_fleet(
-            &run_cfg,
-            policy,
-            coord.nodes,
-            coord.scenario,
-            cluster::DEFAULT_ARRIVALS,
-        ))
-    });
+    let tasks: Arc<Vec<Task>> = Arc::new(
+        groups
+            .iter()
+            .map(|(system, coord)| Task { system: system.clone(), metric_id: coord.scenario })
+            .collect(),
+    );
+    let total = tasks.len();
+    let groups = Arc::new(groups);
+    let run = {
+        let groups = Arc::clone(&groups);
+        let base_cfg = cfg.clone();
+        move |i: usize, task: &Task| {
+            let (system, coord) = &groups[i];
+            let policy = cluster::policy::by_name(coord.policy)?;
+            let mut run_cfg = base_cfg.clone();
+            run_cfg.system = system.clone();
+            run_cfg.seed = task_seed(
+                cluster_seed(base_cfg.seed, coord.policy, coord.nodes, coord.scenario),
+                system,
+                coord.scenario,
+            );
+            let replay = cluster::replay_fleet(
+                &run_cfg,
+                policy,
+                coord.nodes,
+                coord.scenario,
+                cluster::DEFAULT_ARRIVALS,
+            );
+            if let Some(obs) = observer.as_ref() {
+                obs(TaskDone {
+                    index: i,
+                    total,
+                    system: task.system.clone(),
+                    label: cluster_label(*coord),
+                    value: replay.summary_value("CL-SUCCESS").unwrap_or(f64::NAN),
+                });
+            }
+            Some(replay)
+        }
+    };
+    let (slots, stats) = executor::execute_indexed_on(exec, tasks, run);
     let mut runs = Vec::with_capacity(groups.len());
-    for (slot, (system, coord)) in slots.into_iter().zip(&groups) {
+    for (slot, (system, coord)) in slots.into_iter().zip(groups.iter()) {
         match slot {
             Some(run) => runs.push(run),
             None => bail!(
@@ -499,6 +596,7 @@ fn run_cluster_regression(
         seed: cfg.seed,
         schema: BaselineSchema::Cluster,
         skipped_infeasible: 0,
+        recorded_arrivals: baseline.recorded_arrivals,
         cells,
         stats,
     })
@@ -510,7 +608,7 @@ mod tests {
     use crate::regress::baseline::BaselineRow;
 
     fn point_baseline(rows: Vec<BaselineRow>) -> Baseline {
-        Baseline { schema: BaselineSchema::Point, rows, infeasible: Vec::new() }
+        Baseline { schema: BaselineSchema::Point, rows, infeasible: Vec::new(), recorded_arrivals: None }
     }
 
     fn row(system: &str, id: &str, value: f64) -> BaselineRow {
@@ -599,7 +697,7 @@ mod tests {
         let b = Baseline {
             schema: BaselineSchema::Sweep,
             rows: vec![r],
-            infeasible: Vec::new(),
+            infeasible: Vec::new(), recorded_arrivals: None,
         };
         let e = run_regression(&cfg, &b, 5.0).unwrap_err();
         let msg = format!("{e:#}");
@@ -636,7 +734,7 @@ mod tests {
         let mut rows = baseline.rows.clone();
         let idx = rows.iter().position(|r| r.id == "DYN-THR-MEAN").unwrap();
         rows[idx].value *= 2.0; // higher-better: halving current = regression
-        let perturbed = Baseline { schema: BaselineSchema::Dynamics, rows, infeasible: Vec::new() };
+        let perturbed = Baseline { schema: BaselineSchema::Dynamics, rows, infeasible: Vec::new(), recorded_arrivals: None };
         let out = run_regression(&cfg8, &perturbed, 5.0).unwrap();
         let regs = out.regressions();
         assert_eq!(regs.len(), 1);
@@ -652,14 +750,14 @@ mod tests {
         let b = Baseline {
             schema: BaselineSchema::Dynamics,
             rows: vec![r.clone()],
-            infeasible: Vec::new(),
+            infeasible: Vec::new(), recorded_arrivals: None,
         };
         let e = run_regression(&cfg, &b, 5.0).unwrap_err();
         assert!(format!("{e:#}").contains("no scenario coordinate"), "{e:#}");
         // Table-8 id under the dynamics schema.
         r.id = "OH-001".into();
         r.dyn_cell = Some(DynCoord { scenario: "steady", duration_ms: 100, window_ms: 50 });
-        let b = Baseline { schema: BaselineSchema::Dynamics, rows: vec![r], infeasible: Vec::new() };
+        let b = Baseline { schema: BaselineSchema::Dynamics, rows: vec![r], infeasible: Vec::new(), recorded_arrivals: None };
         let e = run_regression(&cfg, &b, 5.0).unwrap_err();
         assert!(format!("{e:#}").contains("unknown dynamics summary id"), "{e:#}");
     }
@@ -702,7 +800,7 @@ mod tests {
             .unwrap();
         rows[idx].value *= 2.0; // higher-better: a doubled baseline = regression
         let perturbed =
-            Baseline { schema: BaselineSchema::Cluster, rows, infeasible: Vec::new() };
+            Baseline { schema: BaselineSchema::Cluster, rows, infeasible: Vec::new(), recorded_arrivals: None };
         let out = run_regression(&cfg8, &perturbed, 5.0).unwrap();
         let regs = out.regressions();
         assert_eq!(regs.len(), 1);
@@ -719,16 +817,40 @@ mod tests {
         let b = Baseline {
             schema: BaselineSchema::Cluster,
             rows: vec![r.clone()],
-            infeasible: Vec::new(),
+            infeasible: Vec::new(), recorded_arrivals: None,
         };
         let e = run_regression(&cfg, &b, 5.0).unwrap_err();
         assert!(format!("{e:#}").contains("no cell coordinate"), "{e:#}");
         // Table-8 id under the cluster schema.
         r.id = "OH-001".into();
         r.cluster_cell = Some(ClusterCoord { policy: "first-fit", nodes: 2, scenario: "steady" });
-        let b = Baseline { schema: BaselineSchema::Cluster, rows: vec![r], infeasible: Vec::new() };
+        let b = Baseline { schema: BaselineSchema::Cluster, rows: vec![r], infeasible: Vec::new(), recorded_arrivals: None };
         let e = run_regression(&cfg, &b, 5.0).unwrap_err();
         assert!(format!("{e:#}").contains("unknown cluster summary id"), "{e:#}");
+    }
+
+    #[test]
+    fn recorded_arrivals_mismatch_is_surfaced() {
+        // A cluster baseline whose `# arrivals=N` comment differs from the
+        // pinned replay count flags itself; matching or absent counts and
+        // non-cluster schemas stay quiet.
+        let mut out = RegressOutcome {
+            threshold_percent: 5.0,
+            seed: 42,
+            schema: BaselineSchema::Cluster,
+            skipped_infeasible: 0,
+            recorded_arrivals: Some(250),
+            cells: Vec::new(),
+            stats: ExecutionStats::default(),
+        };
+        assert_eq!(out.arrivals_mismatch(), Some(250));
+        out.recorded_arrivals = Some(cluster::DEFAULT_ARRIVALS);
+        assert_eq!(out.arrivals_mismatch(), None);
+        out.recorded_arrivals = None;
+        assert_eq!(out.arrivals_mismatch(), None);
+        out.schema = BaselineSchema::Point;
+        out.recorded_arrivals = Some(250);
+        assert_eq!(out.arrivals_mismatch(), None);
     }
 
     #[test]
@@ -749,6 +871,7 @@ mod tests {
             seed: 42,
             schema: BaselineSchema::Sweep,
             skipped_infeasible: 0,
+            recorded_arrivals: None,
             cells: vec![
                 delta("hami", "OH-001", 12.0),
                 delta("hami", "OH-002", 40.0),

@@ -70,5 +70,5 @@ pub mod report;
 pub use baseline::{
     parse_baseline_csv, Baseline, BaselineRow, BaselineSchema, CellCoord, ClusterCoord, DynCoord,
 };
-pub use engine::{run_regression, worse_percent, CellDelta, RegressOutcome};
+pub use engine::{run_regression, run_regression_on, worse_percent, CellDelta, RegressOutcome};
 pub use report::{render_json, render_markdown};

@@ -136,6 +136,13 @@ pub fn render_json(outcome: &RegressOutcome, baseline_label: &str) -> String {
         .field("checked", outcome.checked().to_string())
         .field("regression_count", regressions.len().to_string())
         .field("skipped_infeasible", outcome.skipped_infeasible.to_string())
+        .field(
+            "recorded_arrivals",
+            match outcome.recorded_arrivals {
+                Some(n) => n.to_string(),
+                None => "null".to_string(),
+            },
+        )
         .field("cells", array(cells))
         .field("regressions", array(regressions))
         .field("by_link", array(by_link))
@@ -177,6 +184,14 @@ pub fn render_markdown(outcome: &RegressOutcome, baseline_label: &str) -> String
         regressions.len(),
         outcome.skipped_infeasible
     ));
+    if let Some(n) = outcome.arrivals_mismatch() {
+        out.push_str(&format!(
+            "> ⚠️ The baseline records **{n} arrivals** per replay but the gate re-ran it at \
+             the default {} — deltas compare different workloads. Re-arm the baseline at the \
+             default arrival count.\n\n",
+            crate::cluster::DEFAULT_ARRIVALS
+        ));
+    }
     if regressions.is_empty() {
         out.push_str("All cells within threshold.\n\n");
     } else {
@@ -275,6 +290,7 @@ mod tests {
             skipped_infeasible: 1,
             cells,
             stats: ExecutionStats::default(),
+            recorded_arrivals: None,
         }
     }
 
@@ -366,6 +382,35 @@ mod tests {
         assert!(j[idx..].contains("\"link\": \"cluster\""), "{j}");
         let m = render_markdown(&out, "cluster_summary.csv");
         assert!(m.contains("| hami | frag-gradient@8n/churn | CL-SUCCESS |"), "{m}");
+    }
+
+    #[test]
+    fn arrivals_provenance_is_reported_and_mismatches_warn() {
+        use crate::regress::baseline::ClusterCoord;
+        let mut d = delta("hami", None, "CL-SUCCESS", 0.0);
+        d.cluster_cell = Some(ClusterCoord { policy: "first-fit", nodes: 2, scenario: "churn" });
+        let mut out = outcome(vec![d]);
+        out.schema = BaselineSchema::Cluster;
+        // Without a recorded count the JSON field is null and the
+        // markdown stays silent.
+        let j = render_json(&out, "cluster_summary.csv");
+        assert!(j.contains("\"recorded_arrivals\": null"), "{j}");
+        assert!(!render_markdown(&out, "b.csv").contains("⚠️"));
+        // A matching recorded count is surfaced without a warning…
+        out.recorded_arrivals = Some(crate::cluster::DEFAULT_ARRIVALS);
+        let j = render_json(&out, "b.csv");
+        assert!(
+            j.contains(&format!("\"recorded_arrivals\": {}", crate::cluster::DEFAULT_ARRIVALS)),
+            "{j}"
+        );
+        assert!(!render_markdown(&out, "b.csv").contains("⚠️"));
+        // …while a non-default one warns in the markdown.
+        out.recorded_arrivals = Some(5);
+        let j = render_json(&out, "b.csv");
+        assert!(j.contains("\"recorded_arrivals\": 5"), "{j}");
+        let m = render_markdown(&out, "b.csv");
+        assert!(m.contains("**5 arrivals**"), "{m}");
+        assert!(m.contains("Re-arm the baseline"), "{m}");
     }
 
     #[test]

@@ -52,9 +52,13 @@ pub fn render_csv(surface: &ClusterSurface) -> String {
 }
 
 /// The regress-compatible summary CSV: every value finite, keyed by the
-/// full `(system, policy, nodes, scenario, id)` coordinate.
+/// full `(system, policy, nodes, scenario, id)` coordinate. The first
+/// line is a `# arrivals=N` provenance comment recording the arrival
+/// count the surface was replayed with; [`crate::regress`] parses it
+/// back and warns when a gate re-runs the baseline at a different count.
 pub fn render_summary_csv(surface: &ClusterSurface) -> String {
-    let mut out = String::from(SUMMARY_CSV_HEADER);
+    let mut out = format!("# arrivals={}\n", surface.arrivals);
+    out.push_str(SUMMARY_CSV_HEADER);
     out.push('\n');
     for run in &surface.runs {
         for (id, value) in &run.summary {
@@ -205,11 +209,13 @@ mod tests {
     fn summary_csv_is_regress_parseable() {
         let csv = render_summary_csv(&surface());
         let lines: Vec<&str> = csv.lines().collect();
-        assert_eq!(lines[0], SUMMARY_CSV_HEADER);
-        assert_eq!(lines.len(), 11); // 2 runs × 5 summary stats
-        assert_eq!(lines[1], "native,first-fit,2,churn,CL-SUCCESS,88.000000");
+        assert_eq!(lines[0], "# arrivals=100");
+        assert_eq!(lines[1], SUMMARY_CSV_HEADER);
+        assert_eq!(lines.len(), 12); // comment + header + 2 runs × 5 stats
+        assert_eq!(lines[2], "native,first-fit,2,churn,CL-SUCCESS,88.000000");
         let b = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
         assert_eq!(b.schema, crate::regress::BaselineSchema::Cluster);
+        assert_eq!(b.recorded_arrivals, Some(100));
         assert_eq!(b.rows.len(), 10);
         let c = b.rows[0].cluster_cell.as_ref().unwrap();
         assert_eq!(c.policy, "first-fit");

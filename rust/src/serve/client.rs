@@ -1,0 +1,198 @@
+//! Client side of the serve protocol: connect to a daemon socket,
+//! submit jobs, stream lifecycle events, fetch reports, list jobs,
+//! request shutdown. Used by `gvbench submit` / `gvbench jobs` and by
+//! the in-process round-trip tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+use crate::anyhow::{Context, Result};
+use crate::bail;
+
+use super::jsonl::{self, Value};
+use super::proto;
+
+/// One row of the daemon's `jobs` listing.
+#[derive(Clone, Debug)]
+pub struct JobRow {
+    pub job: u64,
+    pub command: String,
+    pub state: String,
+    pub priority: i64,
+}
+
+/// Terminal outcome of one job as seen by a client: exactly one of
+/// `report` (the job finished; `passed` carries the regress verdict
+/// when the job was a gate) or `error` (the job failed) is set.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub job: u64,
+    pub report: Option<String>,
+    pub passed: Option<bool>,
+    pub error: Option<String>,
+}
+
+struct Conn {
+    reader: BufReader<UnixStream>,
+    writer: UnixStream,
+}
+
+impl Conn {
+    fn open(socket: &Path) -> Result<Conn> {
+        let stream = UnixStream::connect(socket)
+            .with_context(|| format!("connecting to daemon socket {}", socket.display()))?;
+        let reader = BufReader::new(stream.try_clone().context("cloning socket stream")?);
+        Ok(Conn { reader, writer: stream })
+    }
+
+    fn send(&mut self, line: &str) -> Result<()> {
+        writeln!(self.writer, "{line}").context("writing to daemon socket")
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("reading from daemon socket")?;
+        if n == 0 {
+            bail!("daemon closed the connection unexpectedly");
+        }
+        Ok(line.trim_end_matches('\n').to_string())
+    }
+
+    /// Read one response line and fail with the daemon's error message
+    /// when `ok` is false.
+    fn read_ok(&mut self) -> Result<Value> {
+        let line = self.read_line()?;
+        let v = jsonl::parse(&line).with_context(|| format!("malformed daemon response `{line}`"))?;
+        match v.get("ok").and_then(Value::as_bool) {
+            Some(true) => Ok(v),
+            Some(false) => {
+                let msg = v.get("error").and_then(Value::as_str).unwrap_or("unspecified error");
+                bail!("daemon refused the request: {msg}")
+            }
+            None => bail!("daemon response carries no `ok` field: {line}"),
+        }
+    }
+}
+
+/// Submit a job without waiting for it; returns the job id.
+pub fn submit(socket: &Path, argv: &[String], priority: i64) -> Result<u64> {
+    let mut conn = Conn::open(socket)?;
+    conn.send(&proto::submit_request(argv, priority))?;
+    let v = conn.read_ok()?;
+    v.get("job").and_then(Value::as_u64).context("submit response carries no job id")
+}
+
+/// Watch an already-submitted job to its terminal state. `on_event`
+/// receives every raw lifecycle event line, including the terminal one.
+pub fn watch(
+    socket: &Path,
+    job: u64,
+    on_event: &mut dyn FnMut(&str),
+) -> Result<JobOutcome> {
+    let mut conn = Conn::open(socket)?;
+    watch_on(&mut conn, job, on_event)
+}
+
+/// Submit and stream to completion over a single connection.
+pub fn submit_and_wait(
+    socket: &Path,
+    argv: &[String],
+    priority: i64,
+    on_event: &mut dyn FnMut(&str),
+) -> Result<JobOutcome> {
+    let mut conn = Conn::open(socket)?;
+    conn.send(&proto::submit_request(argv, priority))?;
+    let v = conn.read_ok()?;
+    let job = v.get("job").and_then(Value::as_u64).context("submit response carries no job id")?;
+    watch_on(&mut conn, job, on_event)
+}
+
+fn watch_on(conn: &mut Conn, job: u64, on_event: &mut dyn FnMut(&str)) -> Result<JobOutcome> {
+    conn.send(&proto::watch_request(job))?;
+    conn.read_ok()?;
+    let mut outcome = JobOutcome { job, report: None, passed: None, error: None };
+    loop {
+        let line = conn.read_line().context("event stream ended before the job finished")?;
+        let v = jsonl::parse(&line)
+            .with_context(|| format!("malformed lifecycle event `{line}`"))?;
+        on_event(&line);
+        match v.get("event").and_then(Value::as_str) {
+            Some("report") => {
+                outcome.report =
+                    Some(v.get("report").and_then(Value::as_str).unwrap_or("").to_string());
+            }
+            Some("finished") => {
+                outcome.passed = v.get("passed").and_then(Value::as_bool);
+                return Ok(outcome);
+            }
+            Some("failed") => {
+                outcome.error = Some(
+                    v.get("error")
+                        .and_then(Value::as_str)
+                        .unwrap_or("unspecified failure")
+                        .to_string(),
+                );
+                return Ok(outcome);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Fetch a job's terminal report, blocking until the job completes.
+/// A failed job comes back as `Ok` with `error` set — transport
+/// problems are the only `Err` path.
+pub fn report(socket: &Path, job: u64) -> Result<JobOutcome> {
+    let mut conn = Conn::open(socket)?;
+    conn.send(&proto::report_request(job))?;
+    let line = conn.read_line()?;
+    let v = jsonl::parse(&line).with_context(|| format!("malformed daemon response `{line}`"))?;
+    match v.get("ok").and_then(Value::as_bool) {
+        Some(true) => Ok(JobOutcome {
+            job,
+            report: Some(v.get("report").and_then(Value::as_str).unwrap_or("").to_string()),
+            passed: v.get("passed").and_then(Value::as_bool),
+            error: None,
+        }),
+        Some(false) => Ok(JobOutcome {
+            job,
+            report: None,
+            passed: None,
+            error: Some(
+                v.get("error").and_then(Value::as_str).unwrap_or("unspecified error").to_string(),
+            ),
+        }),
+        None => bail!("daemon response carries no `ok` field: {line}"),
+    }
+}
+
+/// List every job the daemon knows about.
+pub fn jobs(socket: &Path) -> Result<Vec<JobRow>> {
+    let mut conn = Conn::open(socket)?;
+    conn.send(&proto::jobs_request())?;
+    let v = conn.read_ok()?;
+    let items = v.get("jobs").and_then(Value::as_array).context("jobs response has no list")?;
+    let mut rows = Vec::with_capacity(items.len());
+    for item in items {
+        rows.push(JobRow {
+            job: item.get("job").and_then(Value::as_u64).context("job row has no id")?,
+            command: item
+                .get("command")
+                .and_then(Value::as_str)
+                .unwrap_or("?")
+                .to_string(),
+            state: item.get("state").and_then(Value::as_str).unwrap_or("?").to_string(),
+            priority: item.get("priority").and_then(Value::as_i64).unwrap_or(0),
+        });
+    }
+    Ok(rows)
+}
+
+/// Ask the daemon to shut down (it drains already-accepted jobs first).
+pub fn shutdown(socket: &Path) -> Result<()> {
+    let mut conn = Conn::open(socket)?;
+    conn.send(&proto::shutdown_request())?;
+    conn.read_ok()?;
+    Ok(())
+}

@@ -1,0 +1,519 @@
+//! The serve daemon: one persistent executor worker pool, a
+//! FIFO-with-priorities job queue, and an NDJSON lifecycle stream per
+//! job over a local Unix socket.
+//!
+//! Thread structure:
+//!
+//! - **scheduler** (one thread) — owns the
+//!   [`crate::coordinator::executor::WorkerPool`]; pops jobs from the
+//!   queue and executes them one at a time on the shared pool via the
+//!   same [`Backend`] entry points the one-shot CLI uses, so a served
+//!   job's report is bit-identical to its CLI equivalent. Tracks its own
+//!   idle time between jobs (`scheduler_idle_ms`).
+//! - **acceptor** (one thread) — accepts connections and spawns one
+//!   handler thread per connection.
+//! - **handlers** — parse request lines and answer; `watch` streams a
+//!   job's pre-rendered event lines, blocking on the daemon condvar
+//!   until new events (or the terminal state) appear.
+//!
+//! All shared state lives behind one `Mutex<DaemonState>` + `Condvar`;
+//! event lines are rendered *before* insertion so watchers only copy
+//! strings out under the lock, never format under it.
+//!
+//! Shutdown (the `shutdown` op): new submissions are refused, the
+//! acceptor is poked awake and exits, the scheduler drains every job
+//! already accepted and then joins the pool workers — no orphaned
+//! threads, and the socket file is removed.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::anyhow::{Context, Error, Result};
+use crate::bail;
+use crate::cli::args::{Args, Command};
+use crate::cli::commands;
+use crate::coordinator::executor::{
+    resolve_jobs, Backend, ExecutionStats, Observer, TaskDone, WorkerPool,
+};
+use crate::report::Format;
+
+use super::proto::{self, ExecSummary, Request};
+use super::queue::JobQueue;
+
+/// Idle connections are dropped after this long so a client that
+/// connects and never speaks (or never disconnects) cannot wedge
+/// shutdown. Handlers only read between requests — a long-running
+/// `watch` is writing, not reading, and is unaffected.
+const IDLE_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Daemon configuration: socket path plus persistent pool size
+/// (0 = available parallelism).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub socket: PathBuf,
+    pub jobs: usize,
+}
+
+/// Lifecycle state of one job, as shown in the `jobs` listing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Finished,
+    Failed,
+}
+
+impl JobState {
+    pub fn key(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Finished => "finished",
+            JobState::Failed => "failed",
+        }
+    }
+
+    fn terminal(self) -> bool {
+        matches!(self, JobState::Finished | JobState::Failed)
+    }
+}
+
+struct JobRecord {
+    argv: Vec<String>,
+    command: String,
+    priority: i64,
+    state: JobState,
+    /// Pre-rendered NDJSON event lines, in emission order. Watchers
+    /// stream slices of this under the state lock.
+    events: Vec<String>,
+    report: Option<String>,
+    passed: Option<bool>,
+    error: Option<String>,
+    queued_at: Instant,
+}
+
+struct DaemonState {
+    jobs: BTreeMap<u64, JobRecord>,
+    queue: JobQueue,
+    next_id: u64,
+    stop: bool,
+}
+
+struct Shared {
+    state: Mutex<DaemonState>,
+    cv: Condvar,
+    socket: PathBuf,
+}
+
+impl Shared {
+    /// Append an event line to a job and wake every waiter.
+    fn push_event(&self, job: u64, line: String) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(j) = st.jobs.get_mut(&job) {
+            j.events.push(line);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Flip the stop flag and poke the acceptor awake with a throwaway
+    /// self-connection so it can observe the flag.
+    fn request_stop(&self) {
+        self.state.lock().unwrap().stop = true;
+        self.cv.notify_all();
+        let _ = UnixStream::connect(&self.socket);
+    }
+}
+
+/// A running serve daemon. [`Daemon::wait`] blocks until a client sends
+/// the `shutdown` op; dropping an un-waited daemon shuts it down too
+/// (the in-process path `rust/tests/serve_determinism.rs` leans on).
+pub struct Daemon {
+    shared: Arc<Shared>,
+    workers: usize,
+    acceptor: Option<JoinHandle<()>>,
+    scheduler: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Daemon {
+    /// Bind the socket and start the scheduler + acceptor threads. A
+    /// stale socket file left by a crashed daemon is removed; a *live*
+    /// daemon on the same path is an error.
+    pub fn start(cfg: ServeConfig) -> Result<Daemon> {
+        if cfg.socket.exists() {
+            if UnixStream::connect(&cfg.socket).is_ok() {
+                bail!("a daemon is already listening on {}", cfg.socket.display());
+            }
+            std::fs::remove_file(&cfg.socket)
+                .with_context(|| format!("removing stale socket {}", cfg.socket.display()))?;
+        }
+        if let Some(dir) = cfg.socket.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating socket directory {}", dir.display()))?;
+            }
+        }
+        let listener = UnixListener::bind(&cfg.socket)
+            .with_context(|| format!("binding {}", cfg.socket.display()))?;
+        let workers = resolve_jobs(cfg.jobs);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(DaemonState {
+                jobs: BTreeMap::new(),
+                queue: JobQueue::new(),
+                next_id: 1,
+                stop: false,
+            }),
+            cv: Condvar::new(),
+            socket: cfg.socket,
+        });
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let scheduler = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || scheduler_loop(&shared, workers))
+        };
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            let handlers = Arc::clone(&handlers);
+            std::thread::spawn(move || accept_loop(&listener, &shared, &handlers))
+        };
+        Ok(Daemon {
+            shared,
+            workers,
+            acceptor: Some(acceptor),
+            scheduler: Some(scheduler),
+            handlers,
+        })
+    }
+
+    /// Resolved worker count of the persistent pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Block until the daemon shuts down (a client's `shutdown` op),
+    /// then join every thread and remove the socket file.
+    pub fn wait(mut self) -> Result<()> {
+        self.join();
+        Ok(())
+    }
+
+    fn join(&mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        let pending: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handlers.lock().unwrap());
+        for h in pending {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&self.shared.socket);
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        if self.acceptor.is_some() || self.scheduler.is_some() {
+            self.shared.request_stop();
+            self.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &UnixListener,
+    shared: &Arc<Shared>,
+    handlers: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    for stream in listener.incoming() {
+        if shared.state.lock().unwrap().stop {
+            break;
+        }
+        let Ok(stream) = stream else { break };
+        let shared = Arc::clone(shared);
+        let handle = std::thread::spawn(move || {
+            let _ = handle_connection(stream, &shared);
+        });
+        handlers.lock().unwrap().push(handle);
+    }
+}
+
+fn handle_connection(stream: UnixStream, shared: &Shared) -> std::io::Result<()> {
+    let _ = stream.set_read_timeout(Some(IDLE_READ_TIMEOUT));
+    let reader = std::io::BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    use std::io::BufRead;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match proto::parse_request(&line) {
+            Err(e) => writeln!(writer, "{}", proto::error_response(&format!("{e}")))?,
+            Ok(Request::Submit { argv, priority }) => {
+                writeln!(writer, "{}", submit_job(shared, argv, priority))?;
+            }
+            Ok(Request::Jobs) => writeln!(writer, "{}", jobs_listing(shared))?,
+            Ok(Request::Watch { job }) => watch_job(shared, &mut writer, job)?,
+            Ok(Request::Report { job }) => writeln!(writer, "{}", report_when_done(shared, job))?,
+            Ok(Request::Shutdown) => {
+                writeln!(writer, "{}", proto::ok_response())?;
+                shared.request_stop();
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Accept a job: allowlist the command, refuse file/pool flags, record
+/// it, enqueue it. Returns the response line.
+fn submit_job(shared: &Shared, argv: Vec<String>, priority: i64) -> String {
+    let command = match proto::validate_job_argv(&argv) {
+        Ok(c) => c.to_string(),
+        Err(e) => return proto::error_response(&format!("{e}")),
+    };
+    let mut st = shared.state.lock().unwrap();
+    if st.stop {
+        return proto::error_response("daemon is shutting down; job refused");
+    }
+    let id = st.next_id;
+    st.next_id += 1;
+    let queued = proto::event_queued(id, &command, priority);
+    st.jobs.insert(
+        id,
+        JobRecord {
+            argv,
+            command,
+            priority,
+            state: JobState::Queued,
+            events: vec![queued],
+            report: None,
+            passed: None,
+            error: None,
+            queued_at: Instant::now(),
+        },
+    );
+    st.queue.push(id, priority);
+    drop(st);
+    shared.cv.notify_all();
+    proto::submit_response(id)
+}
+
+fn jobs_listing(shared: &Shared) -> String {
+    let st = shared.state.lock().unwrap();
+    let rows: Vec<(u64, String, &'static str, i64)> = st
+        .jobs
+        .iter()
+        .map(|(id, j)| (*id, j.command.clone(), j.state.key(), j.priority))
+        .collect();
+    proto::jobs_response(&rows)
+}
+
+/// Stream a job's event lines from the beginning; returns after the
+/// terminal event has been written.
+fn watch_job(shared: &Shared, writer: &mut UnixStream, job: u64) -> std::io::Result<()> {
+    {
+        let st = shared.state.lock().unwrap();
+        if !st.jobs.contains_key(&job) {
+            return writeln!(writer, "{}", proto::error_response(&format!("unknown job {job}")));
+        }
+    }
+    writeln!(writer, "{}", proto::ok_response())?;
+    let mut sent = 0usize;
+    loop {
+        let (batch, terminal) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                let j = st.jobs.get(&job).expect("existence checked above");
+                let terminal = j.state.terminal();
+                if j.events.len() > sent || terminal {
+                    break (j.events[sent..].to_vec(), terminal);
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        for line in &batch {
+            writeln!(writer, "{line}")?;
+        }
+        sent += batch.len();
+        if terminal {
+            return Ok(());
+        }
+    }
+}
+
+/// Block until the job is terminal, then answer with its report (or the
+/// failure) in one response line.
+fn report_when_done(shared: &Shared, job: u64) -> String {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        let Some(j) = st.jobs.get(&job) else {
+            return proto::error_response(&format!("unknown job {job}"));
+        };
+        match j.state {
+            JobState::Finished => {
+                return proto::report_response_ok(
+                    job,
+                    j.report.as_deref().unwrap_or(""),
+                    j.passed,
+                );
+            }
+            JobState::Failed => {
+                return proto::error_response(j.error.as_deref().unwrap_or("job failed"));
+            }
+            JobState::Queued | JobState::Running => {}
+        }
+        st = shared.cv.wait(st).unwrap();
+    }
+}
+
+/// The scheduler: pop → mark running (emitting `scheduled` with the
+/// queue-wait and scheduler-idle split) → execute on the shared pool →
+/// mark terminal. On stop it drains everything already accepted, then
+/// joins the pool workers.
+fn scheduler_loop(shared: &Arc<Shared>, workers: usize) {
+    let mut pool = WorkerPool::new(workers);
+    let mut idle_since = Instant::now();
+    loop {
+        let popped = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(id) = st.queue.pop() {
+                    let scheduler_idle_ms = idle_since.elapsed().as_secs_f64() * 1e3;
+                    let j = st.jobs.get_mut(&id).expect("queued jobs have records");
+                    j.state = JobState::Running;
+                    let queue_wait_ms = j.queued_at.elapsed().as_secs_f64() * 1e3;
+                    j.events.push(proto::event_scheduled(id, queue_wait_ms, scheduler_idle_ms));
+                    break Some((id, j.argv.clone(), queue_wait_ms, scheduler_idle_ms));
+                }
+                if st.stop {
+                    break None;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        shared.cv.notify_all();
+        let Some((id, argv, queue_wait_ms, scheduler_idle_ms)) = popped else {
+            pool.shutdown();
+            return;
+        };
+        run_job(shared, &pool, id, &argv, queue_wait_ms, scheduler_idle_ms);
+        idle_since = Instant::now();
+    }
+}
+
+struct JobOutput {
+    report: String,
+    stats: ExecutionStats,
+    /// The gate verdict for regress jobs; `None` for the other schemas.
+    passed: Option<bool>,
+}
+
+fn run_job(
+    shared: &Arc<Shared>,
+    pool: &WorkerPool,
+    id: u64,
+    argv: &[String],
+    queue_wait_ms: f64,
+    scheduler_idle_ms: f64,
+) {
+    let observer: Observer = {
+        let shared = Arc::clone(shared);
+        Arc::new(move |done: TaskDone| {
+            shared.push_event(id, proto::event_task_completed(id, &done));
+        })
+    };
+    let result = parse_job_args(argv).and_then(|args| execute_job(&args, pool, observer));
+    let mut st = shared.state.lock().unwrap();
+    let j = st.jobs.get_mut(&id).expect("running job has a record");
+    match result {
+        Ok(out) => {
+            let summary = ExecSummary {
+                tasks: out.stats.tasks.len(),
+                workers: out.stats.jobs,
+                wall_ms: out.stats.wall_ns as f64 / 1e6,
+                busy_ms: out.stats.total_task_ns() as f64 / 1e6,
+                queue_wait_ms,
+                scheduler_idle_ms,
+                worker_idle_ms: out.stats.worker_idle_ns() as f64 / 1e6,
+            };
+            j.events.push(proto::event_report(id, &out.report));
+            j.events.push(proto::event_finished(id, out.passed, &summary));
+            j.report = Some(out.report);
+            j.passed = out.passed;
+            j.state = JobState::Finished;
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            j.events.push(proto::event_failed(id, &msg));
+            j.error = Some(msg);
+            j.state = JobState::Failed;
+        }
+    }
+    drop(st);
+    shared.cv.notify_all();
+}
+
+/// Parse a served argv through the same [`Args::parse`] the binary's
+/// `main` uses, so a served job accepts exactly the flags its CLI
+/// equivalent does and fails with the same messages.
+fn parse_job_args(argv: &[String]) -> Result<Args> {
+    Args::parse(argv).map_err(|e| Error::msg(e.0))
+}
+
+/// Execute one job on the shared pool via the exact spec-building and
+/// `*_on` entry points the one-shot CLI paths use — this is what makes a
+/// served report bit-identical to its CLI equivalent.
+fn execute_job(args: &Args, pool: &WorkerPool, observer: Observer) -> Result<JobOutput> {
+    let exec = Backend::Pool(pool);
+    let format = Format::from_key(&args.format)
+        .with_context(|| format!("unknown format `{}`", args.format))?;
+    match args.command {
+        Command::Run => {
+            let (report, stats) = commands::run_report_on(args, &exec, Some(observer))?;
+            Ok(JobOutput { report, stats, passed: None })
+        }
+        Command::Sweep => {
+            let inputs = commands::sweep_inputs(args)?;
+            let surface =
+                crate::coordinator::sweep::run_sweep_on(&exec, &inputs.cfg, &inputs.spec, Some(observer));
+            let report = crate::report::sweep::render(&surface, format);
+            Ok(JobOutput { report, stats: surface.stats, passed: None })
+        }
+        Command::Dynamics => {
+            let inputs = commands::dynamics_inputs(args)?;
+            let surface = crate::dynsim::run_dynamics_on(&exec, &inputs.cfg, &inputs.spec, Some(observer));
+            let report = crate::report::dynamics::render(&surface, format);
+            Ok(JobOutput { report, stats: surface.stats, passed: None })
+        }
+        Command::Cluster => {
+            let inputs = commands::cluster_inputs(args)?;
+            let surface = crate::cluster::run_cluster_on(&exec, &inputs.cfg, &inputs.spec, Some(observer));
+            let report = crate::report::cluster::render(&surface, format);
+            Ok(JobOutput { report, stats: surface.stats, passed: None })
+        }
+        Command::Regress => {
+            let (path, baseline) = commands::load_baseline(args)?;
+            let cfg = commands::build_config(args)?;
+            let outcome = crate::regress::run_regression_on(
+                &exec,
+                &cfg,
+                &baseline,
+                args.threshold,
+                Some(observer),
+            )?;
+            let report = crate::regress::render_json(&outcome, &path);
+            let passed = outcome.passed();
+            Ok(JobOutput { report, stats: outcome.stats, passed: Some(passed) })
+        }
+        _ => bail!("command is not servable"),
+    }
+}

@@ -1,0 +1,367 @@
+//! Minimal JSON parser for the serve wire protocol.
+//!
+//! The crate renders JSON by hand ([`crate::report::json`]) but until the
+//! serve layer it never had to *read* any — baselines are CSV. The
+//! newline-delimited protocol needs a real parser on both ends: the
+//! daemon parses request lines, the client parses responses and
+//! lifecycle events. This is a small recursive-descent parser over the
+//! full JSON grammar (objects, arrays, strings with escapes incl.
+//! `\uXXXX` surrogate pairs, numbers, literals) — no external crates,
+//! mirroring the offline-build constraint the rest of the crate lives
+//! under. Errors name the byte offset so protocol bugs are debuggable
+//! from one log line.
+
+use crate::anyhow::{Context, Result};
+use crate::bail;
+
+/// A parsed JSON value. Numbers are kept as `f64` — the protocol's
+/// integers (job ids, task indices) are far below 2^53 so the round-trip
+/// is exact.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Look up a key in an object; `None` for missing keys and
+    /// non-objects alike.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The value as a non-negative integer, `None` when it is not a
+    /// number or not integral.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Num(n) if n.fract() == 0.0 && *n >= i64::MIN as f64 && *n <= i64::MAX as f64 => {
+                Some(*n as i64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one complete JSON document; trailing content (other than
+/// whitespace) is an error, so a protocol line is exactly one value.
+pub fn parse(text: &str) -> Result<Value> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing content at byte {} of JSON document", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.bytes.get(self.pos) {
+            match b {
+                b' ' | b'\t' | b'\n' | b'\r' => self.pos += 1,
+                _ => break,
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        match self.peek() {
+            Some(got) if got == b => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(got) => bail!(
+                "expected `{}` at byte {}, found `{}`",
+                b as char,
+                self.pos,
+                got as char
+            ),
+            None => bail!("expected `{}` at byte {}, found end of input", b as char, self.pos),
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek().context("unexpected end of JSON document")? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.literal("true", Value::Bool(true)),
+            b'f' => self.literal("false", Value::Bool(false)),
+            b'n' => self.literal("null", Value::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            other => bail!("unexpected byte `{}` at offset {}", other as char, self.pos),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Value) -> Result<Value> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            bail!("invalid literal at byte {} (expected `{word}`)", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii digits");
+        let n: f64 = text
+            .parse()
+            .with_context(|| format!("invalid number `{text}` at byte {start}"))?;
+        Ok(Value::Num(n))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek().context("unterminated string")? {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let esc = self.peek().context("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        other => bail!("invalid escape `\\{}` at byte {}", other as char, self.pos),
+                    }
+                }
+                _ => {
+                    // Consume one UTF-8 scalar (protocol strings carry
+                    // arbitrary report text, not just ASCII).
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .context("invalid UTF-8 in string")?;
+                    let c = rest.chars().next().context("unterminated string")?;
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let start = self.pos;
+        if self.bytes.len() < start + 4 {
+            bail!("truncated \\u escape at byte {start}");
+        }
+        let text = std::str::from_utf8(&self.bytes[start..start + 4])
+            .context("invalid \\u escape")?;
+        let n = u32::from_str_radix(text, 16)
+            .with_context(|| format!("invalid \\u escape `{text}` at byte {start}"))?;
+        self.pos += 4;
+        Ok(n)
+    }
+
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        let code = if (0xD800..=0xDBFF).contains(&hi) {
+            // Surrogate pair: a second `\uXXXX` must follow.
+            if self.peek() != Some(b'\\') || self.bytes.get(self.pos + 1) != Some(&b'u') {
+                bail!("unpaired high surrogate at byte {}", self.pos);
+            }
+            self.pos += 2;
+            let lo = self.hex4()?;
+            if !(0xDC00..=0xDFFF).contains(&lo) {
+                bail!("invalid low surrogate at byte {}", self.pos);
+            }
+            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+        } else {
+            hi
+        };
+        char::from_u32(code).with_context(|| format!("invalid scalar value U+{code:04X}"))
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Obj(fields));
+                }
+                _ => bail!("expected `,` or `}}` at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Arr(items));
+                }
+                _ => bail!("expected `,` or `]` at byte {}", self.pos),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("false").unwrap(), Value::Bool(false));
+        assert_eq!(parse("42").unwrap(), Value::Num(42.0));
+        assert_eq!(parse("-1.5e3").unwrap(), Value::Num(-1500.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Value::Str("hi".to_string()));
+    }
+
+    #[test]
+    fn parses_nested_structures() {
+        let v = parse(r#"{"op": "submit", "argv": ["run", "--quick"], "priority": -2}"#).unwrap();
+        assert_eq!(v.get("op").and_then(Value::as_str), Some("submit"));
+        assert_eq!(v.get("priority").and_then(Value::as_i64), Some(-2));
+        let argv = v.get("argv").and_then(Value::as_array).unwrap();
+        assert_eq!(argv.len(), 2);
+        assert_eq!(argv[1].as_str(), Some("--quick"));
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let rendered = crate::report::json::quote("line1\nline2\t\"quoted\" \\slash");
+        let v = parse(&rendered).unwrap();
+        assert_eq!(v.as_str(), Some("line1\nline2\t\"quoted\" \\slash"));
+        // Surrogate pair: U+1F600.
+        assert_eq!(parse(r#""😀""#).unwrap().as_str(), Some("😀"));
+        assert_eq!(parse(r#""é""#).unwrap().as_str(), Some("é"));
+    }
+
+    #[test]
+    fn round_trips_obj_builder_output() {
+        // The daemon renders with report::json::Obj; the client must
+        // parse exactly that dialect.
+        let line = crate::report::json::Obj::new()
+            .str("event", "task_completed")
+            .field("index", "3".to_string())
+            .num("value", 1.25)
+            .bool("ok", true)
+            .field("none", "null".to_string())
+            .build();
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("event").and_then(Value::as_str), Some("task_completed"));
+        assert_eq!(v.get("index").and_then(Value::as_u64), Some(3));
+        assert_eq!(v.get("value").and_then(Value::as_f64), Some(1.25));
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+        assert_eq!(v.get("none"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("{\"a\": }").is_err());
+        assert!(parse("[1, 2").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("nul").is_err());
+        assert!(parse("{} trailing").is_err());
+        assert!(parse(r#""\ud83d""#).is_err(), "unpaired surrogate");
+    }
+
+    #[test]
+    fn whitespace_is_tolerated() {
+        let v = parse(" { \"a\" : [ 1 , 2 ] } \n").unwrap();
+        assert_eq!(v.get("a").and_then(Value::as_array).map(<[Value]>::len), Some(2));
+    }
+}

@@ -1,0 +1,39 @@
+//! The serve subsystem: a benchmark daemon with one persistent executor
+//! worker pool and a FIFO-with-priorities job queue — the paper's
+//! "benchmark service" deployment mode, where a warm daemon amortizes
+//! pool spin-up across many submissions and CI gates re-run baselines
+//! against it instead of cold one-shot processes.
+//!
+//! A job is the argv of a one-shot CLI invocation (`run`, `sweep`,
+//! `dynamics`, `cluster` or `regress`, minus file-output/pool flags).
+//! The daemon parses it with the same [`crate::cli::args::Args::parse`]
+//! the binary uses and executes it through the same spec-building
+//! helpers and `*_on` executor entry points, so a served report is
+//! **bit-identical** to the one-shot CLI's — at any daemon worker
+//! count, in any queue order, warm or cold. That is a structural
+//! guarantee (per-task seeds are pure functions of task coordinates;
+//! see [`crate::coordinator::executor`]) and is pinned by
+//! `rust/tests/serve_determinism.rs` and CI's `serve-smoke` job.
+//!
+//! Per job, the daemon streams newline-delimited JSON lifecycle events
+//! (`queued` → `scheduled` → `task_completed` × N → `report` →
+//! `finished`, or `failed`) carrying explicit idle-time accounting:
+//! `queue_wait_ms` (submission → scheduling), `scheduler_idle_ms` (how
+//! long the scheduler sat idle before picking the job up) and
+//! `worker_idle_ms` (pool-worker starvation inside the job) — modeled
+//! on prover-service job results that report scheduler idle waits as
+//! first-class outcomes. See `docs/serve.md` for the operator guide.
+//!
+//! Layout: [`jsonl`] (minimal JSON parser — the crate's first, since
+//! every other surface only *renders* JSON), [`proto`] (request/event
+//! wire format), [`queue`] (priority-then-FIFO ordering), [`daemon`]
+//! (socket + scheduler + pool ownership), [`client`] (the `gvbench
+//! submit` / `gvbench jobs` side).
+
+pub mod client;
+pub mod daemon;
+pub mod jsonl;
+pub mod proto;
+pub mod queue;
+
+pub use daemon::{Daemon, JobState, ServeConfig};

@@ -1,0 +1,367 @@
+//! Wire protocol of the serve daemon: newline-delimited JSON over a
+//! local Unix socket.
+//!
+//! Every request and response is exactly one line. Requests are parsed
+//! with [`super::jsonl`]; responses and lifecycle events are rendered
+//! with [`crate::report::json::Obj`] so the daemon speaks the same JSON
+//! dialect as every other report surface in the crate.
+//!
+//! Requests (`op` selects the verb):
+//!
+//! - `{"op": "submit", "argv": [...], "priority": N}` →
+//!   `{"ok": true, "job": N}` or `{"ok": false, "error": "..."}`
+//! - `{"op": "jobs"}` → `{"ok": true, "jobs": [...]}`
+//! - `{"op": "watch", "job": N}` → `{"ok": true}` then the job's event
+//!   lines from the beginning, ending with the terminal event
+//! - `{"op": "report", "job": N}` → blocks until the job is terminal,
+//!   then one `{"ok": true, "job": N, "report": "...", ...}` line
+//! - `{"op": "shutdown"}` → `{"ok": true}`; the daemon drains its queue
+//!   and exits
+//!
+//! Lifecycle events, in emission order per job: `queued` → `scheduled`
+//! → `task_completed` (× tasks) → `report` → `finished`, or `failed`
+//! terminally at any point after `queued`. The `scheduled` and
+//! `finished` events carry the explicit idle-time accounting
+//! (`queue_wait_ms`, `scheduler_idle_ms`, `worker_idle_ms`) described in
+//! `docs/serve.md`.
+
+use crate::anyhow::{Context, Result};
+use crate::bail;
+use crate::coordinator::executor::TaskDone;
+use crate::report::json::{array, num, quote, Obj};
+
+use super::jsonl::{self, Value};
+
+/// Commands a served job may run. Everything else — `list`, `compare`,
+/// `serve` itself — is rejected at submit time.
+pub const JOB_COMMANDS: &[&str] = &["run", "sweep", "dynamics", "cluster", "regress"];
+
+/// Flags that make no sense (or are trapdoors) inside a served job:
+/// file outputs are replaced by the report stream, config files would
+/// make results depend on daemon-host state the submitter can't see,
+/// and the worker count is the daemon's, fixed at `gvbench serve` time.
+pub const FORBIDDEN_FLAGS: &[&str] =
+    &["--out", "--summary-out", "--config", "--report-json", "--report-md", "--jobs"];
+
+/// One parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Submit { argv: Vec<String>, priority: i64 },
+    Jobs,
+    Watch { job: u64 },
+    Report { job: u64 },
+    Shutdown,
+}
+
+/// Parse one NDJSON request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = jsonl::parse(line).context("malformed request line")?;
+    let op = v
+        .get("op")
+        .and_then(Value::as_str)
+        .context("request is missing the string `op` field")?;
+    match op {
+        "submit" => {
+            let argv_val = v
+                .get("argv")
+                .and_then(Value::as_array)
+                .context("submit request is missing the `argv` array")?;
+            let mut argv = Vec::with_capacity(argv_val.len());
+            for item in argv_val {
+                argv.push(
+                    item.as_str()
+                        .context("submit `argv` entries must all be strings")?
+                        .to_string(),
+                );
+            }
+            let priority = match v.get("priority") {
+                None => 0,
+                Some(p) => p.as_i64().context("submit `priority` must be an integer")?,
+            };
+            Ok(Request::Submit { argv, priority })
+        }
+        "jobs" => Ok(Request::Jobs),
+        "watch" => Ok(Request::Watch { job: job_field(&v)? }),
+        "report" => Ok(Request::Report { job: job_field(&v)? }),
+        "shutdown" => Ok(Request::Shutdown),
+        other => bail!("unknown op `{other}` (expected submit, jobs, watch, report or shutdown)"),
+    }
+}
+
+fn job_field(v: &Value) -> Result<u64> {
+    v.get("job")
+        .and_then(Value::as_u64)
+        .context("request is missing the integer `job` field")
+}
+
+/// Check a job argv at submit time; returns the (allowlisted) command
+/// key. Semantic flag errors are deliberately *not* caught here — they
+/// surface at schedule time as a `failed` lifecycle event, proving a bad
+/// job cannot poison the worker pool.
+pub fn validate_job_argv(argv: &[String]) -> Result<&'static str> {
+    let first = argv.first().context("job argv is empty")?;
+    let cmd = JOB_COMMANDS
+        .iter()
+        .copied()
+        .find(|c| *c == first.as_str())
+        .with_context(|| {
+            format!(
+                "`{first}` is not a servable command (expected one of: {})",
+                JOB_COMMANDS.join(", ")
+            )
+        })?;
+    for flag in FORBIDDEN_FLAGS {
+        if argv.iter().any(|a| a == flag) {
+            bail!(
+                "flag {flag} is not allowed in a served job (outputs stream over the socket; \
+                 the worker count is fixed by the daemon's --jobs)"
+            );
+        }
+    }
+    Ok(cmd)
+}
+
+// ---- client-side request builders -----------------------------------
+
+pub fn submit_request(argv: &[String], priority: i64) -> String {
+    let items: Vec<String> = argv.iter().map(|a| quote(a)).collect();
+    Obj::new()
+        .str("op", "submit")
+        .field("argv", array(items))
+        .field("priority", priority.to_string())
+        .build()
+}
+
+pub fn jobs_request() -> String {
+    Obj::new().str("op", "jobs").build()
+}
+
+pub fn watch_request(job: u64) -> String {
+    Obj::new().str("op", "watch").field("job", job.to_string()).build()
+}
+
+pub fn report_request(job: u64) -> String {
+    Obj::new().str("op", "report").field("job", job.to_string()).build()
+}
+
+pub fn shutdown_request() -> String {
+    Obj::new().str("op", "shutdown").build()
+}
+
+// ---- daemon-side response / event renderers -------------------------
+
+pub fn ok_response() -> String {
+    Obj::new().bool("ok", true).build()
+}
+
+pub fn error_response(msg: &str) -> String {
+    Obj::new().bool("ok", false).str("error", msg).build()
+}
+
+pub fn submit_response(job: u64) -> String {
+    Obj::new().bool("ok", true).field("job", job.to_string()).build()
+}
+
+/// Terminal-report response: the rendered report plus the gate verdict
+/// for regress jobs (`passed` is absent for the other schemas).
+pub fn report_response_ok(job: u64, report: &str, passed: Option<bool>) -> String {
+    let mut o = Obj::new().bool("ok", true).field("job", job.to_string());
+    if let Some(p) = passed {
+        o = o.bool("passed", p);
+    }
+    o.str("report", report).build()
+}
+
+/// One row of the `jobs` listing.
+pub fn jobs_response(rows: &[(u64, String, &'static str, i64)]) -> String {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|(id, command, state, priority)| {
+            Obj::new()
+                .field("job", id.to_string())
+                .str("command", command)
+                .str("state", state)
+                .field("priority", priority.to_string())
+                .build()
+        })
+        .collect();
+    Obj::new().bool("ok", true).field("jobs", array(items)).build()
+}
+
+/// Host-timing summary attached to a job's `finished` event: the
+/// executor's per-job wall/busy split plus the daemon-level idle
+/// accounting (time the job waited in queue, time the scheduler sat
+/// idle before picking it up, time pool workers starved within it).
+#[derive(Clone, Debug)]
+pub struct ExecSummary {
+    pub tasks: usize,
+    pub workers: usize,
+    pub wall_ms: f64,
+    pub busy_ms: f64,
+    pub queue_wait_ms: f64,
+    pub scheduler_idle_ms: f64,
+    pub worker_idle_ms: f64,
+}
+
+pub fn event_queued(job: u64, command: &str, priority: i64) -> String {
+    Obj::new()
+        .str("event", "queued")
+        .field("job", job.to_string())
+        .str("command", command)
+        .field("priority", priority.to_string())
+        .build()
+}
+
+pub fn event_scheduled(job: u64, queue_wait_ms: f64, scheduler_idle_ms: f64) -> String {
+    Obj::new()
+        .str("event", "scheduled")
+        .field("job", job.to_string())
+        .num("queue_wait_ms", queue_wait_ms)
+        .num("scheduler_idle_ms", scheduler_idle_ms)
+        .build()
+}
+
+pub fn event_task_completed(job: u64, done: &TaskDone) -> String {
+    Obj::new()
+        .str("event", "task_completed")
+        .field("job", job.to_string())
+        .field("index", done.index.to_string())
+        .field("total", done.total.to_string())
+        .str("system", &done.system)
+        .str("label", &done.label)
+        .field("value", num(done.value))
+        .build()
+}
+
+pub fn event_report(job: u64, report: &str) -> String {
+    Obj::new()
+        .str("event", "report")
+        .field("job", job.to_string())
+        .str("report", report)
+        .build()
+}
+
+pub fn event_finished(job: u64, passed: Option<bool>, x: &ExecSummary) -> String {
+    let execution = Obj::new()
+        .field("tasks", x.tasks.to_string())
+        .field("workers", x.workers.to_string())
+        .num("wall_ms", x.wall_ms)
+        .num("busy_ms", x.busy_ms)
+        .num("queue_wait_ms", x.queue_wait_ms)
+        .num("scheduler_idle_ms", x.scheduler_idle_ms)
+        .num("worker_idle_ms", x.worker_idle_ms)
+        .build();
+    let mut o = Obj::new().str("event", "finished").field("job", job.to_string());
+    if let Some(p) = passed {
+        o = o.bool("passed", p);
+    }
+    o.field("execution", execution).build()
+}
+
+pub fn event_failed(job: u64, error: &str) -> String {
+    Obj::new()
+        .str("event", "failed")
+        .field("job", job.to_string())
+        .str("error", error)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn requests_round_trip_through_the_builders() {
+        let argv = s(&["sweep", "--quick", "--tenants", "1,2"]);
+        let line = submit_request(&argv, -3);
+        assert_eq!(parse_request(&line).unwrap(), Request::Submit { argv, priority: -3 });
+        assert_eq!(parse_request(&jobs_request()).unwrap(), Request::Jobs);
+        assert_eq!(parse_request(&watch_request(7)).unwrap(), Request::Watch { job: 7 });
+        assert_eq!(parse_request(&report_request(9)).unwrap(), Request::Report { job: 9 });
+        assert_eq!(parse_request(&shutdown_request()).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn submit_priority_defaults_to_zero() {
+        let req = parse_request(r#"{"op": "submit", "argv": ["run"]}"#).unwrap();
+        assert_eq!(req, Request::Submit { argv: s(&["run"]), priority: 0 });
+    }
+
+    #[test]
+    fn malformed_requests_name_the_problem() {
+        let e = parse_request("not json").unwrap_err().to_string();
+        assert!(e.contains("malformed request line"), "{e}");
+        let e = parse_request(r#"{"nope": 1}"#).unwrap_err().to_string();
+        assert!(e.contains("missing the string `op`"), "{e}");
+        let e = parse_request(r#"{"op": "teleport"}"#).unwrap_err().to_string();
+        assert!(e.contains("unknown op `teleport`"), "{e}");
+        let e = parse_request(r#"{"op": "watch"}"#).unwrap_err().to_string();
+        assert!(e.contains("integer `job`"), "{e}");
+        let e = parse_request(r#"{"op": "submit", "argv": [1]}"#).unwrap_err().to_string();
+        assert!(e.contains("must all be strings"), "{e}");
+    }
+
+    #[test]
+    fn job_argv_validation_allowlists_commands_and_blocks_file_flags() {
+        assert_eq!(validate_job_argv(&s(&["run", "--quick"])).unwrap(), "run");
+        assert_eq!(validate_job_argv(&s(&["regress", "--baseline", "b.csv"])).unwrap(), "regress");
+        let e = validate_job_argv(&s(&[])).unwrap_err().to_string();
+        assert!(e.contains("empty"), "{e}");
+        let e = validate_job_argv(&s(&["list"])).unwrap_err().to_string();
+        assert!(e.contains("not a servable command"), "{e}");
+        for flag in FORBIDDEN_FLAGS {
+            let e = validate_job_argv(&s(&["run", flag, "x"])).unwrap_err().to_string();
+            assert!(e.contains(flag), "{e}");
+        }
+        // Semantic errors pass submit-time validation: they are the
+        // daemon's schedule-time `failed` path.
+        assert!(validate_job_argv(&s(&["run", "--system", "not-a-system"])).is_ok());
+    }
+
+    #[test]
+    fn events_are_single_parseable_lines() {
+        let done = TaskDone {
+            index: 2,
+            total: 8,
+            system: "hami".to_string(),
+            label: "PCIE-001".to_string(),
+            value: f64::NAN,
+        };
+        let summary = ExecSummary {
+            tasks: 8,
+            workers: 4,
+            wall_ms: 12.5,
+            busy_ms: 40.0,
+            queue_wait_ms: 1.25,
+            scheduler_idle_ms: 0.5,
+            worker_idle_ms: 10.0,
+        };
+        for line in [
+            event_queued(1, "sweep", 2),
+            event_scheduled(1, 1.25, 0.5),
+            event_task_completed(1, &done),
+            event_report(1, "a,b\n1,2\n"),
+            event_finished(1, Some(true), &summary),
+            event_failed(2, "unknown system `mps2`"),
+        ] {
+            assert!(!line.contains('\n'), "event must be one line: {line}");
+            let v = super::super::jsonl::parse(&line).unwrap();
+            assert!(v.get("event").is_some(), "{line}");
+            assert!(v.get("job").is_some(), "{line}");
+        }
+        // NaN task values render as null, not as invalid JSON.
+        let v = super::super::jsonl::parse(&event_task_completed(1, &done)).unwrap();
+        assert_eq!(v.get("value"), Some(&super::super::jsonl::Value::Null));
+        // The finished event carries the full idle-time accounting.
+        let v = super::super::jsonl::parse(&event_finished(1, None, &summary)).unwrap();
+        let exec = v.get("execution").unwrap();
+        for key in ["queue_wait_ms", "scheduler_idle_ms", "worker_idle_ms", "busy_ms"] {
+            assert!(exec.get(key).is_some(), "missing {key}");
+        }
+        assert!(v.get("passed").is_none());
+    }
+}

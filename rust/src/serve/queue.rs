@@ -1,0 +1,98 @@
+//! FIFO-with-priorities job queue for the serve daemon.
+//!
+//! Jobs dequeue by highest priority first; within one priority level
+//! strictly in submission order (job ids are monotonically increasing,
+//! so FIFO-within-priority is "smallest id among the maximum-priority
+//! entries"). The queue holds only `(id, priority)` pairs — job payloads
+//! live in the daemon's job table — so push/pop stay trivially cheap
+//! under the daemon's state lock.
+
+/// Pending job ids ordered by (priority desc, id asc) on pop.
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    /// Kept in push (= id) order; pop scans for the first entry with the
+    /// maximum priority, which is the FIFO head of that priority level.
+    entries: Vec<(u64, i64)>,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    /// Enqueue a job. Ids must be pushed in increasing order (the daemon
+    /// allocates them from a counter), which is what makes pop's
+    /// first-match scan FIFO within a priority level.
+    pub fn push(&mut self, id: u64, priority: i64) {
+        self.entries.push((id, priority));
+    }
+
+    /// Dequeue the next job: highest priority, then oldest submission.
+    pub fn pop(&mut self) -> Option<u64> {
+        // In a max_by over (priority, then earlier-index-wins), the
+        // earlier entry compares Greater on priority ties, so the first
+        // job pushed at the winning priority level is the one removed.
+        let best = self
+            .entries
+            .iter()
+            .enumerate()
+            .max_by(|(ai, a), (bi, b)| a.1.cmp(&b.1).then(bi.cmp(ai)))
+            .map(|(i, _)| i)?;
+        Some(self.entries.remove(best).0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_one_priority_level() {
+        let mut q = JobQueue::new();
+        q.push(1, 0);
+        q.push(2, 0);
+        q.push(3, 0);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn higher_priority_jumps_the_queue() {
+        let mut q = JobQueue::new();
+        q.push(1, 0);
+        q.push(2, 5);
+        q.push(3, 0);
+        q.push(4, 5);
+        q.push(5, -3);
+        assert_eq!(q.pop(), Some(2), "highest priority first");
+        assert_eq!(q.pop(), Some(4), "FIFO among equal priorities");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(5), "negative priority runs last");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order() {
+        let mut q = JobQueue::new();
+        q.push(1, 0);
+        q.push(2, 1);
+        assert_eq!(q.pop(), Some(2));
+        q.push(3, 1);
+        q.push(4, 2);
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.len(), 0);
+    }
+}

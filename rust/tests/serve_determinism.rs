@@ -1,0 +1,273 @@
+//! The serve subsystem's core contract, proven end-to-end against an
+//! in-process daemon: a job submitted to a **warm** daemon produces a
+//! report **bit-identical** to its one-shot CLI equivalent — for all
+//! four grid schemas, at pool sizes 1 and 8, regardless of queue order
+//! and of other jobs having run first on the same pool. The comparisons
+//! use CSV renders, which carry no host timings (JSON embeds the
+//! execution object, whose wall-clock fields legitimately differ).
+//!
+//! Also pinned here: the NDJSON lifecycle stream is well-formed
+//! (`queued` → `scheduled` → `task_completed` × N → `report` →
+//! `finished`) with the idle-time accounting fields present; a
+//! malformed job yields a *named* `failed` event without poisoning the
+//! shared worker pool; forbidden flags and protocol garbage are refused
+//! at the socket; and shutdown drains accepted jobs, joins every
+//! thread and removes the socket file.
+
+use std::path::PathBuf;
+
+use gvb::cli::args::Command;
+use gvb::cli::commands;
+use gvb::cli::Args;
+use gvb::coordinator::executor::Backend;
+use gvb::report::Format;
+use gvb::serve::jsonl::{self, Value};
+use gvb::serve::{client, Daemon, ServeConfig};
+
+/// One small, fast job per servable grid schema (all CSV + `--quick`).
+const RUN_JOB: &[&str] = &["run", "--all-systems", "--metric", "OH-009", "--quick", "--format", "csv"];
+const SWEEP_JOB: &[&str] = &[
+    "sweep", "--system", "native", "--tenants", "1,2", "--quota", "50,100", "--category", "pcie",
+    "--quick", "--format", "csv",
+];
+const DYN_JOB: &[&str] = &[
+    "dynamics", "--system", "native", "--scenario", "steady", "--duration-ms", "200",
+    "--window-ms", "50", "--quick", "--format", "csv",
+];
+const CLUSTER_JOB: &[&str] = &[
+    "cluster", "--system", "native", "--policies", "first-fit", "--nodes", "2", "--scenario",
+    "churn", "--quick", "--format", "csv",
+];
+
+fn sock(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gvb_serve_{name}_{}.sock", std::process::id()))
+}
+
+fn argv(tokens: &[&str]) -> Vec<String> {
+    tokens.iter().map(|s| (*s).to_string()).collect()
+}
+
+/// Render the job the way its one-shot CLI command would: same
+/// `Args::parse`, same spec builders, serial scoped execution.
+fn one_shot(tokens: &[&str]) -> String {
+    let args = Args::parse(&argv(tokens)).expect("job argv parses");
+    let fmt = Format::from_key(&args.format).expect("known format");
+    match args.command {
+        Command::Run => {
+            commands::run_report_on(&args, &Backend::Scoped(1), None).expect("run succeeds").0
+        }
+        Command::Sweep => {
+            let i = commands::sweep_inputs(&args).expect("sweep inputs");
+            gvb::report::sweep::render(&gvb::coordinator::sweep::run_sweep(&i.cfg, &i.spec, 1), fmt)
+        }
+        Command::Dynamics => {
+            let i = commands::dynamics_inputs(&args).expect("dynamics inputs");
+            gvb::report::dynamics::render(&gvb::dynsim::run_dynamics(&i.cfg, &i.spec, 1), fmt)
+        }
+        Command::Cluster => {
+            let i = commands::cluster_inputs(&args).expect("cluster inputs");
+            gvb::report::cluster::render(&gvb::cluster::run_cluster(&i.cfg, &i.spec, 1), fmt)
+        }
+        _ => unreachable!("only grid schemas are exercised here"),
+    }
+}
+
+#[test]
+fn served_reports_bit_identical_to_one_shot_at_any_pool_size() {
+    let jobs: [&[&str]; 4] = [RUN_JOB, SWEEP_JOB, DYN_JOB, CLUSTER_JOB];
+    let references: Vec<String> = jobs.iter().map(|j| one_shot(j)).collect();
+    for pool in [1usize, 8] {
+        let socket = sock(&format!("pool{pool}"));
+        let daemon =
+            Daemon::start(ServeConfig { socket: socket.clone(), jobs: pool }).expect("daemon");
+        assert_eq!(daemon.workers(), pool);
+        for (tokens, want) in jobs.iter().zip(&references) {
+            let out = client::submit_and_wait(&socket, &argv(tokens), 0, &mut |_| {})
+                .unwrap_or_else(|e| panic!("{}: {e}", tokens[0]));
+            assert!(out.error.is_none(), "{}: {:?}", tokens[0], out.error);
+            assert_eq!(
+                out.report.as_deref(),
+                Some(want.as_str()),
+                "served {} diverged from its one-shot render at pool={pool}",
+                tokens[0]
+            );
+        }
+        // Dropping an un-waited daemon shuts it down and removes the
+        // socket — the in-process equivalent of `jobs --shutdown`.
+        drop(daemon);
+        assert!(!socket.exists(), "socket file survived shutdown");
+    }
+}
+
+#[test]
+fn results_independent_of_queue_order_and_prior_jobs() {
+    let want = one_shot(RUN_JOB);
+    let socket = sock("order");
+    let _daemon = Daemon::start(ServeConfig { socket: socket.clone(), jobs: 2 }).expect("daemon");
+    // Same run job twice, with an unrelated high-priority job between
+    // them warming (and reordering around) the shared pool.
+    let a = client::submit(&socket, &argv(RUN_JOB), 0).expect("submit a");
+    let mid = client::submit(&socket, &argv(DYN_JOB), 10).expect("submit mid");
+    let b = client::submit(&socket, &argv(RUN_JOB), -5).expect("submit b");
+    for id in [a, mid, b] {
+        let out = client::report(&socket, id).expect("report");
+        assert!(out.error.is_none(), "job {id}: {:?}", out.error);
+    }
+    let ra = client::report(&socket, a).unwrap().report.unwrap();
+    let rb = client::report(&socket, b).unwrap().report.unwrap();
+    assert_eq!(ra, want, "first served run diverged from one-shot");
+    assert_eq!(rb, want, "warm-pool rerun diverged after other jobs ran");
+    let rows = client::jobs(&socket).expect("jobs listing");
+    assert_eq!(rows.len(), 3);
+    assert!(rows.iter().all(|r| r.state == "finished"), "{rows:?}");
+}
+
+#[test]
+fn lifecycle_stream_is_well_formed_with_idle_accounting() {
+    let socket = sock("lifecycle");
+    let _daemon = Daemon::start(ServeConfig { socket: socket.clone(), jobs: 2 }).expect("daemon");
+    let mut lines: Vec<String> = Vec::new();
+    let out = client::submit_and_wait(&socket, &argv(RUN_JOB), 7, &mut |l| {
+        lines.push(l.to_string());
+    })
+    .expect("submit");
+    assert!(out.error.is_none(), "{:?}", out.error);
+    let events: Vec<Value> = lines
+        .iter()
+        .map(|l| jsonl::parse(l).unwrap_or_else(|e| panic!("unparseable event `{l}`: {e}")))
+        .collect();
+    let kind = |v: &Value| v.get("event").and_then(Value::as_str).unwrap().to_string();
+    // Exact shape: queued, scheduled, 4 task completions (one per
+    // system on OH-009), report, finished.
+    assert_eq!(kind(&events[0]), "queued");
+    assert_eq!(events[0].get("command").and_then(Value::as_str), Some("run"));
+    assert_eq!(events[0].get("priority").and_then(Value::as_i64), Some(7));
+    assert_eq!(kind(&events[1]), "scheduled");
+    for f in ["queue_wait_ms", "scheduler_idle_ms"] {
+        assert!(events[1].get(f).and_then(Value::as_f64).is_some(), "scheduled lacks {f}");
+    }
+    let done: Vec<&Value> = events.iter().filter(|v| kind(v) == "task_completed").collect();
+    assert_eq!(done.len(), 4, "{lines:#?}");
+    let mut indices: Vec<u64> =
+        done.iter().map(|v| v.get("index").and_then(Value::as_u64).unwrap()).collect();
+    indices.sort_unstable();
+    assert_eq!(indices, vec![0, 1, 2, 3]);
+    for v in &done {
+        assert_eq!(v.get("total").and_then(Value::as_u64), Some(4));
+        assert_eq!(v.get("label").and_then(Value::as_str), Some("OH-009"));
+        assert!(v.get("system").and_then(Value::as_str).is_some());
+    }
+    let n = events.len();
+    assert_eq!(kind(&events[n - 2]), "report");
+    assert_eq!(kind(&events[n - 1]), "finished");
+    let execution = events[n - 1].get("execution");
+    for f in
+        ["tasks", "workers", "wall_ms", "busy_ms", "queue_wait_ms", "scheduler_idle_ms", "worker_idle_ms"]
+    {
+        assert!(execution.and_then(|e| e.get(f)).is_some(), "finished execution lacks {f}");
+    }
+    assert_eq!(execution.and_then(|e| e.get("tasks")).and_then(Value::as_u64), Some(4));
+    assert_eq!(execution.and_then(|e| e.get("workers")).and_then(Value::as_u64), Some(2));
+    // The streamed report event carries the exact report text.
+    assert_eq!(
+        events[n - 2].get("report").and_then(Value::as_str),
+        out.report.as_deref(),
+        "report event and terminal report diverged"
+    );
+}
+
+#[test]
+fn bad_jobs_fail_named_without_poisoning_the_pool() {
+    let socket = sock("poison");
+    let _daemon = Daemon::start(ServeConfig { socket: socket.clone(), jobs: 1 }).expect("daemon");
+    // Semantic errors surface at schedule time as a `failed` lifecycle
+    // event naming the problem...
+    let bad = &["run", "--system", "mps", "--quick"];
+    let mut saw_failed = false;
+    let out = client::submit_and_wait(&socket, &argv(bad), 0, &mut |l| {
+        saw_failed |= l.contains("\"event\": \"failed\"");
+    })
+    .expect("transport stays healthy");
+    let err = out.error.expect("bad system must fail the job");
+    assert!(err.contains("mps"), "error does not name the bad system: {err}");
+    assert!(saw_failed, "no failed lifecycle event streamed");
+    // ...file-output and pool flags are refused at submit time...
+    for forbidden in [
+        vec!["run", "--quick", "--out", "/tmp/x"],
+        vec!["run", "--quick", "--jobs", "4"],
+        vec!["compare"],
+    ] {
+        let e = client::submit(&socket, &argv(&forbidden), 0)
+            .expect_err("forbidden argv must be refused");
+        assert!(e.to_string().contains("daemon refused"), "{e}");
+    }
+    // ...protocol garbage gets a structured refusal...
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::os::unix::net::UnixStream::connect(&socket).expect("connect");
+        writeln!(s, "this is not json").unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        let v = jsonl::parse(line.trim_end()).expect("refusal parses");
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+    }
+    // ...and the pool is not poisoned: the next job runs clean.
+    let good = client::submit_and_wait(&socket, &argv(RUN_JOB), 0, &mut |_| {}).expect("submit");
+    assert!(good.error.is_none(), "{:?}", good.error);
+    assert_eq!(good.report.unwrap(), one_shot(RUN_JOB));
+}
+
+#[test]
+fn served_regress_gate_passes_on_its_own_baseline() {
+    let baseline = one_shot(RUN_JOB);
+    let bpath = std::env::temp_dir().join(format!("gvb_serve_regress_{}.csv", std::process::id()));
+    std::fs::write(&bpath, &baseline).expect("write baseline");
+    let socket = sock("regress");
+    let _daemon = Daemon::start(ServeConfig { socket: socket.clone(), jobs: 2 }).expect("daemon");
+    let job = vec![
+        "regress".to_string(),
+        "--baseline".to_string(),
+        bpath.to_str().unwrap().to_string(),
+        "--quick".to_string(),
+        "--threshold".to_string(),
+        "5".to_string(),
+    ];
+    let out = client::submit_and_wait(&socket, &job, 0, &mut |_| {}).expect("submit");
+    assert!(out.error.is_none(), "{:?}", out.error);
+    // The gate verdict rides the finished event and the report JSON.
+    assert_eq!(out.passed, Some(true));
+    let report = out.report.unwrap();
+    assert!(report.contains("\"passed\": true"), "{report}");
+    assert!(report.contains("\"schema\": \"point\""), "{report}");
+    std::fs::remove_file(&bpath).ok();
+}
+
+#[test]
+fn shutdown_drains_accepted_jobs_and_removes_the_socket() {
+    let socket = sock("shutdown");
+    let daemon = Daemon::start(ServeConfig { socket: socket.clone(), jobs: 2 }).expect("daemon");
+    let id = client::submit(&socket, &argv(DYN_JOB), 0).expect("submit");
+    // A watcher opened before shutdown must still see the job through
+    // to a terminal state — shutdown drains, it does not drop. The
+    // channel blocks until the watcher has streamed its first event, so
+    // its connection is in place before shutdown is requested.
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let watcher = {
+        let socket = socket.clone();
+        std::thread::spawn(move || {
+            client::watch(&socket, id, &mut |_| {
+                let _ = tx.send(());
+            })
+        })
+    };
+    rx.recv().expect("watcher streamed no event");
+    client::shutdown(&socket).expect("shutdown ack");
+    let out = watcher.join().expect("watcher thread").expect("watch");
+    assert!(out.error.is_none(), "drained job failed: {:?}", out.error);
+    assert!(out.report.is_some(), "drained job produced no report");
+    daemon.wait().expect("daemon joins all threads");
+    assert!(!socket.exists(), "socket file survived shutdown");
+    // A second daemon can bind the same path immediately.
+    let again = Daemon::start(ServeConfig { socket: socket.clone(), jobs: 1 }).expect("rebind");
+    drop(again);
+}
