@@ -29,6 +29,7 @@ fn main() {
         scenarios: PRESETS.to_vec(),
         duration_ms: 600,
         window_ms: 100,
+        trace: None,
     };
     println!(
         "Dynamics grid: {} systems x {} scenarios = {} timelines ({} ms horizon, {} ms windows)",

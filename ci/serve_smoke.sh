@@ -6,8 +6,9 @@
 #   1. Renders one-shot CLI references for all four grid schemas (CSV —
 #      the render with no host timings).
 #   2. Boots `gvbench serve` in the background and submits one job per
-#      schema through `gvbench submit`; every served report must be
-#      byte-identical to its one-shot reference.
+#      schema through `gvbench submit` (plus a `--trace` replay of the
+#      committed ci/trace_mixed.txt fixture); every served report must
+#      be byte-identical to its one-shot reference.
 #   3. Submits a serve-backed regress gate against the fresh run CSV —
 #      a warm-daemon replay of the same cells must pass against itself.
 #   4. Asserts the streamed NDJSON lifecycle is well-formed (queued →
@@ -56,6 +57,8 @@ $GVB dynamics --scenario steady,failover --systems native,hami \
   --duration-ms 400 --window-ms 50 --jobs 2 --format csv --out "$work/oneshot_dynamics.csv"
 $GVB cluster --policies first-fit --nodes 2 --scenario churn --systems native,hami \
   --jobs 2 --format csv --out "$work/oneshot_cluster.csv"
+$GVB dynamics --trace ci/trace_mixed.txt --systems native,hami \
+  --jobs 2 --format csv --out "$work/oneshot_trace.csv"
 
 echo "== boot daemon =="
 $GVB serve --socket "$sock" --jobs 2 2>>"$trace" &
@@ -78,7 +81,12 @@ $GVB submit --socket "$sock" --out "$work/served_dynamics.csv" \
 $GVB submit --socket "$sock" --out "$work/served_cluster.csv" \
   -- cluster --policies first-fit --nodes 2 --scenario churn --systems native,hami \
   --format csv 2>>"$trace"
-for schema in run sweep dynamics cluster; do
+# Trace replay through the daemon: the file is read daemon-side (like
+# --baseline), so the served report must match the one-shot replay.
+$GVB submit --socket "$sock" --out "$work/served_trace.csv" \
+  -- dynamics --trace ci/trace_mixed.txt --systems native,hami \
+  --format csv 2>>"$trace"
+for schema in run sweep dynamics cluster trace; do
   cmp "$work/oneshot_$schema.csv" "$work/served_$schema.csv" ||
     fail "served $schema report is not byte-identical to the one-shot CLI output"
   echo "served $schema == one-shot $schema"
@@ -102,7 +110,7 @@ if grep -qF '"event": "failed"' "$trace"; then
   fail "a served job failed (see serve_trace.log)"
 fi
 finished=$(grep -cF '"event": "finished"' "$trace")
-[ "$finished" -eq 5 ] || fail "expected 5 finished events, found $finished"
+[ "$finished" -eq 6 ] || fail "expected 6 finished events, found $finished"
 # Per-job ordering: job 1's stream must read queued, scheduled, ...,
 # report, finished (task completions in between may land in any order).
 sequence=$(grep -F '"job": 1,' "$trace" | grep -oE '"event": "[a-z_]+"' |
@@ -115,7 +123,7 @@ esac
 echo "== jobs listing =="
 $GVB jobs --socket "$sock" | tee jobs_list.txt
 listed=$(grep -c 'finished' jobs_list.txt || true)
-[ "$listed" -eq 5 ] || fail "jobs listing shows $listed finished jobs, expected 5"
+[ "$listed" -eq 6 ] || fail "jobs listing shows $listed finished jobs, expected 6"
 
 echo "== clean shutdown =="
 $GVB jobs --socket "$sock" --shutdown 2>>"$trace"
@@ -142,6 +150,7 @@ fi
   echo "| check | result |"
   echo "| --- | --- |"
   echo "| served run/sweep/dynamics/cluster vs one-shot CLI | byte-identical |"
+  echo "| served trace replay (ci/trace_mixed.txt) vs one-shot | byte-identical |"
   echo "| serve-backed regress vs fresh run CSV | passed |"
   echo "| lifecycle stream (queued → scheduled → … → finished) | well-formed, idle fields present |"
   echo "| drain + shutdown | exit 0, socket removed |"
@@ -151,4 +160,4 @@ fi
   echo '```'
 } >serve_summary.md
 
-echo "serve smoke passed: 5 served jobs, all byte-identical / gated, clean shutdown"
+echo "serve smoke passed: 6 served jobs, all byte-identical / gated, clean shutdown"

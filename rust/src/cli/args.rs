@@ -17,7 +17,8 @@ USAGE:
               [--category key,key,...]
               [--iterations N] [--warmup N] [--seed N] [--jobs N] [--quick]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
-  gvbench dynamics [--scenario steady,churn,spike,failover]
+  gvbench dynamics [--scenario steady,churn,spike,failover,train-steady,mixed-churn]
+              [--trace <file>]
               [--system S | --systems S,S,...|all | --all-systems]
               [--duration-ms N] [--window-ms N] [--seed N] [--jobs N]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
@@ -32,7 +33,8 @@ USAGE:
   gvbench list [--full | --systems | --categories]
   gvbench compare [--quick] [--jobs N]  # Table 7: overall scores, all systems
   gvbench regress --baseline <csv> [--system S] [--threshold PCT] [--quick]
-              [--jobs N] [--report-json <file>] [--report-md <file>]
+              [--trace <file>] [--jobs N]
+              [--report-json <file>] [--report-md <file>]
   gvbench serve [--socket <path>] [--jobs N]
   gvbench submit [--socket <path>] [--priority N] [--out <file>]
               (--spec-file <file> | -- <run|sweep|dynamics|cluster|regress> ...)
@@ -47,6 +49,8 @@ EXAMPLES:
   gvbench sweep --gpus 2,4,8 --link nvlink,pcie --category nccl --quick
   gvbench sweep --category isolation,fragmentation --quick
   gvbench dynamics --scenario churn,failover --systems hami,fcsp --jobs 8
+  gvbench dynamics --scenario train-steady,mixed-churn --summary-out s.csv
+  gvbench dynamics --trace ci/trace_mixed.txt --systems hami,fcsp --jobs 8
   gvbench dynamics --duration-ms 2000 --window-ms 200 --format csv --out dyn.csv
   gvbench cluster --policies first-fit,frag-gradient --nodes 8,16 --jobs 8
   gvbench cluster --scenario churn --arrivals 5000 --format csv --out fleet.csv
@@ -70,17 +74,24 @@ flags override it.
 
 Dynamic scenarios: `dynamics` replays virtual-time tenant timelines
 (arrive / depart / burst / fail events driving per-tenant LLM request
-streams) against each system and reports *windowed time series*:
-latency p50/p99, throughput, per-tenant SM/memory occupancy,
-fragmentation ratio and fault recovery time. Scenarios are named
-presets (steady, churn, spike, failover; default: all four) on a
---duration-ms horizon (default 1000) cut into --window-ms windows
-(default 100). --out writes the long-format time series in --format;
+streams or paced training jobs) against each system and reports
+*windowed time series*: latency p50/p99, throughput, per-tenant SM/
+memory occupancy, fragmentation ratio and fault recovery time.
+Scenarios are named presets (steady, churn, spike, failover,
+train-steady, mixed-churn; default: all six) on a --duration-ms
+horizon (default 1000) cut into --window-ms windows (default 100) —
+or one external trace file (--trace FILE): line-oriented
+`at <ms> <arrive|depart|burst|fail|request> <tenant> ...` events under
+`duration-ms`/`window-ms` headers (see docs/dynamics.md), replayed
+bit-identically at any --jobs count. The trace carries its own
+timeline and geometry, so --trace excludes --scenario, --duration-ms
+and --window-ms. --out writes the long-format time series in --format;
 --summary-out writes the per-scenario summary CSV (steady-state p99,
-worst-window degradation, mean throughput, recovery time) — a
-regress-gateable baseline. A config file `[dynsim]` section
-(scenarios/duration_ms/window_ms/systems keys) sets the grid; CLI
-flags override it.
+worst-window degradation, mean throughput, recovery time — plus
+train-step p99, allreduce latency and train/infer interference on
+timelines with training tenants) — a regress-gateable baseline. A
+config file `[dynsim]` section (scenarios/duration_ms/window_ms/
+systems keys) sets the grid; CLI flags override it.
 
 Cluster placement: `cluster` raises the unit of measurement to an
 N-node fleet. Each (system x policy x nodes x scenario) cell replays a
@@ -107,7 +118,9 @@ mapping, node topology and seed derivation (`feasible=false` cells are
 skipped; PR-3-era baselines without gpu_count/link columns re-run on
 the default 4-GPU PCIe node), a `gvbench dynamics --summary-out`
 summary replays each (system, scenario) timeline with the producing
-run's seed derivation, and a `gvbench cluster --summary-out` summary
+run's seed derivation (rows recorded from a `--trace` replay need the
+same trace file re-supplied via `regress --trace FILE`), and a
+`gvbench cluster --summary-out` summary
 replays each (system, policy, nodes, scenario) fleet cell at the
 default arrival count. --report-json and --report-md write
 machine-readable reports (per-cell deltas / a GitHub-flavored summary
@@ -197,6 +210,10 @@ pub struct Args {
     pub duration_ms: Option<u64>,
     /// Dynamics grid: reporting window (`--window-ms 200`).
     pub window_ms: Option<u64>,
+    /// `dynamics`/`regress`: external trace timeline file (`--trace
+    /// FILE`). The file's headers carry the geometry, so it excludes
+    /// `--scenario`/`--duration-ms`/`--window-ms` under `dynamics`.
+    pub trace: Option<String>,
     /// `dynamics`/`cluster`: write the regress-compatible summary CSV here.
     pub summary_out: Option<String>,
     /// Cluster grid: placement policy keys (`--policies first-fit,best-fit`).
@@ -254,6 +271,7 @@ impl Default for Args {
             dyn_scenarios: None,
             duration_ms: None,
             window_ms: None,
+            trace: None,
             summary_out: None,
             cluster_policies: None,
             cluster_nodes: None,
@@ -391,7 +409,8 @@ pub fn validate_dynamics_grid(
         for s in ss {
             if crate::dynsim::scenario::canonical(s).is_none() {
                 return Err(format!(
-                    "unknown scenario `{s}` (expected: steady, churn, spike, failover)"
+                    "unknown scenario `{s}` (expected: steady, churn, spike, failover, \
+                     train-steady, mixed-churn)"
                 ));
             }
         }
@@ -546,6 +565,14 @@ impl Args {
                     args.window_ms = Some(
                         next_value(&mut it, flag)?.parse().map_err(|_| err("bad --window-ms"))?,
                     );
+                }
+                "--trace" => {
+                    if !matches!(args.command, Command::Dynamics | Command::Regress) {
+                        return Err(err(
+                            "--trace is only valid for `gvbench dynamics` or `gvbench regress`",
+                        ));
+                    }
+                    args.trace = Some(next_value(&mut it, flag)?);
                 }
                 "--summary-out" => {
                     if !matches!(args.command, Command::Dynamics | Command::Cluster) {
@@ -734,6 +761,20 @@ impl Args {
                             "unknown system `{s}` (expected: native, hami, fcsp, mig, timeslice, or `all`)"
                         )));
                     }
+                }
+            }
+            if args.trace.is_some() {
+                if args.dyn_scenarios.is_some() {
+                    return Err(err(
+                        "--trace and --scenario are mutually exclusive; the trace file is \
+                         the timeline",
+                    ));
+                }
+                if args.duration_ms.is_some() || args.window_ms.is_some() {
+                    return Err(err(
+                        "--duration-ms/--window-ms are not supported with --trace; the \
+                         trace's `duration-ms`/`window-ms` headers set the geometry",
+                    ));
                 }
             }
             validate_dynamics_grid(
@@ -932,6 +973,38 @@ mod tests {
         assert!(parse("run --system hami --scenario churn").is_err());
         assert!(parse("sweep --duration-ms 100").is_err());
         assert!(parse("run --system hami --summary-out s.csv").is_err());
+    }
+
+    #[test]
+    fn dynamics_accepts_the_training_presets() {
+        let a = parse("dynamics --scenario train-steady,mixed-churn").unwrap();
+        assert_eq!(
+            a.dyn_scenarios,
+            Some(vec!["train-steady".to_string(), "mixed-churn".to_string()])
+        );
+        // `trace` is a reserved timeline coordinate, not a preset name:
+        // trace timelines come in through --trace, never --scenario.
+        assert!(parse("dynamics --scenario trace").is_err());
+        assert!(parse("cluster --scenario trace").is_err());
+    }
+
+    #[test]
+    fn trace_flag_excludes_the_grid_flags() {
+        let a = parse("dynamics --trace t.txt --systems hami,fcsp --jobs 4").unwrap();
+        assert_eq!(a.trace.as_deref(), Some("t.txt"));
+        assert_eq!(a.dyn_scenarios, None);
+        // The trace supplies timeline and geometry itself.
+        assert!(parse("dynamics --trace t.txt --scenario steady").is_err());
+        assert!(parse("dynamics --scenario steady --trace t.txt").is_err());
+        assert!(parse("dynamics --trace t.txt --duration-ms 500").is_err());
+        assert!(parse("dynamics --trace t.txt --window-ms 50").is_err());
+        assert!(parse("dynamics --trace").is_err());
+        // --trace belongs to dynamics and regress only.
+        assert!(parse("run --system hami --trace t.txt").is_err());
+        assert!(parse("sweep --trace t.txt").is_err());
+        assert!(parse("cluster --trace t.txt").is_err());
+        let a = parse("regress --baseline b.csv --trace t.txt").unwrap();
+        assert_eq!(a.trace.as_deref(), Some("t.txt"));
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::config::{ClusterOverlay, DynOverlay, FileConfig, SweepOverlay};
 use crate::coordinator::executor::{Backend, ExecutionStats, Observer};
 use crate::coordinator::sweep::{self, SweepSpec};
 use crate::coordinator::SuiteRunner;
-use crate::dynsim::{self, DynSpec};
+use crate::dynsim::{self, DynSpec, ScenarioSpec};
 use crate::metrics::{taxonomy, Category, RunConfig};
 use crate::report::{Format, Report};
 use crate::simgpu::nvlink::LinkKind;
@@ -59,9 +59,25 @@ pub fn load_baseline(args: &Args) -> Result<(String, crate::regress::Baseline)> 
     Ok((path.clone(), baseline))
 }
 
+/// Read and parse `--trace FILE` when one was given — shared by the
+/// dynamics grid builder, `cmd_regress` and the serve daemon's jobs.
+pub fn load_trace_spec(args: &Args) -> Result<Option<ScenarioSpec>> {
+    match &args.trace {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            let spec =
+                dynsim::parse_trace(&text).with_context(|| format!("parsing trace {path}"))?;
+            Ok(Some(spec))
+        }
+        None => Ok(None),
+    }
+}
+
 fn cmd_regress(args: &Args) -> Result<()> {
     let (path, baseline) = load_baseline(args)?;
     let path = &path;
+    let trace = load_trace_spec(args)?;
     let cfg = build_config(args)?;
     let systems: std::collections::BTreeSet<&str> =
         baseline.rows.iter().map(|r| r.system.as_str()).collect();
@@ -73,7 +89,14 @@ fn cmd_regress(args: &Args) -> Result<()> {
         args.threshold,
         crate::coordinator::executor::resolve_jobs(cfg.jobs),
     );
-    let outcome = crate::regress::run_regression(&cfg, &baseline, args.threshold)?;
+    let outcome = crate::regress::run_regression_with_trace(
+        &Backend::Scoped(cfg.jobs),
+        &cfg,
+        &baseline,
+        args.threshold,
+        None,
+        trace.as_ref(),
+    )?;
     // Reports are written before the pass/fail verdict so CI can publish
     // them from failed gate runs.
     if let Some(p) = &args.report_json {
@@ -298,6 +321,20 @@ pub fn dynamics_inputs(args: &Args) -> Result<DynInputs> {
         Some(fc) => fc.dynsim()?,
         None => DynOverlay::default(),
     };
+    if let Some(tr) = load_trace_spec(args)? {
+        // The trace file is the whole grid: its headers carry the
+        // geometry, and the arg parser already rejected
+        // --scenario/--duration-ms/--window-ms alongside --trace.
+        let systems = resolve_grid_systems(args, overlay.systems, "dynsim")?;
+        let spec = DynSpec {
+            systems,
+            scenarios: vec![dynsim::TRACE_SCENARIO],
+            duration_ms: tr.duration_ms,
+            window_ms: tr.window_ms,
+            trace: Some(tr),
+        };
+        return Ok(DynInputs { cfg, spec });
+    }
     let scenario_keys = args.dyn_scenarios.clone().or(overlay.scenarios);
     let duration_ms = args
         .duration_ms
@@ -323,7 +360,7 @@ pub fn dynamics_inputs(args: &Args) -> Result<DynInputs> {
             .collect(),
     };
     let systems = resolve_grid_systems(args, overlay.systems, "dynsim")?;
-    let spec = DynSpec { systems, scenarios, duration_ms, window_ms };
+    let spec = DynSpec { systems, scenarios, duration_ms, window_ms, trace: None };
     Ok(DynInputs { cfg, spec })
 }
 
@@ -827,6 +864,48 @@ mod tests {
         let out = crate::regress::run_regression(&cfg, &b, 0.0001).unwrap();
         assert!(out.passed(), "{:?}", out.regressions());
         std::fs::remove_file(&series_path).ok();
+        std::fs::remove_file(&summary_path).ok();
+    }
+
+    #[test]
+    fn dynamics_trace_run_writes_summary_that_regresses_with_the_trace() {
+        let dir = std::env::temp_dir();
+        let trace_path = dir.join("gvb_test_cmd_trace.txt");
+        let summary_path = dir.join("gvb_test_cmd_trace_summary.csv");
+        std::fs::write(
+            &trace_path,
+            "duration-ms 200\nwindow-ms 50\n\
+             at 0 arrive 1 infer rate=30 quota=40\n\
+             at 50 arrive 2 train rate=10 quota=40\n",
+        )
+        .unwrap();
+        let mut a = Args::default();
+        a.command = Command::Dynamics;
+        a.system = "native".into();
+        a.system_set = true;
+        a.quick = true;
+        a.trace = Some(trace_path.to_str().unwrap().to_string());
+        a.summary_out = Some(summary_path.to_str().unwrap().to_string());
+        dispatch(&a).unwrap();
+        // The replay rode the reserved `trace` scenario coordinate and —
+        // because the trace carries a training tenant — emitted the
+        // training statistics alongside the classic five.
+        let summary = std::fs::read_to_string(&summary_path).unwrap();
+        assert!(summary.contains(",trace,"), "{summary}");
+        assert!(summary.contains("DYN-TRAIN-STEP-P99"), "{summary}");
+        // The summary round-trips through `gvbench regress --trace`…
+        let mut r = Args::default();
+        r.command = Command::Regress;
+        r.quick = true;
+        r.threshold = 0.0001;
+        r.baseline = Some(summary_path.to_str().unwrap().to_string());
+        r.trace = Some(trace_path.to_str().unwrap().to_string());
+        dispatch(&r).unwrap();
+        // …and without the trace the gate fails up front, naming the flag.
+        r.trace = None;
+        let e = dispatch(&r).unwrap_err();
+        assert!(format!("{e:#}").contains("--trace"), "{e:#}");
+        std::fs::remove_file(&trace_path).ok();
         std::fs::remove_file(&summary_path).ok();
     }
 

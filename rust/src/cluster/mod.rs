@@ -15,8 +15,9 @@
 //!   [`RunConfig::node_topology`] (per-node memory = `gpu_count` ×
 //!   device HBM; per-node compute = `gpu_count` whole-GPU SM units) —
 //!   replays a dynsim-style churn timeline of 10³–10⁴ tenant arrivals
-//!   ([`arrival_stream`], reusing the `steady`/`churn`/`spike`/
-//!   `failover` preset names) and places each arrival through the
+//!   ([`arrival_stream`], reusing the dynsim preset names — the
+//!   training-bearing presets replay as arrivals-only) and places each
+//!   arrival through the
 //!   policy. Node failures re-place their tenants (migrations) or drop
 //!   them (evictions).
 //! - [`run_cluster`] expands a [`ClusterSpec`] — systems × policies ×
@@ -273,6 +274,10 @@ pub fn reference_demand() -> Demand {
 /// - `spike` — the middle third of arrivals demand double resources.
 /// - `failover` — one node fails after 15% of arrivals; the replay
 ///   re-places its tenants (migrations) or drops them (evictions).
+/// - any other preset (the training-bearing `train-steady` /
+///   `mixed-churn`) — arrivals only, like `steady`: placement sees a
+///   tenant's resource footprint, not its workload kind, but the cell
+///   still draws its own seed so the scenario axis stays collision-free.
 pub fn arrival_stream(
     scenario: &str,
     arrivals: u32,

@@ -9,6 +9,15 @@
 //! ([`Request::prefill_kernel`] / [`Request::decode_kernel`]). The
 //! examples and the end-to-end OH-010-style runs use the same generators
 //! for open-loop load.
+//!
+//! [`TrainingGenerator`] is the training-side counterpart: paced (not
+//! Poisson) optimizer steps, each a forward/backward/optimizer kernel
+//! triple ([`TrainStep::forward_kernel`] / [`TrainStep::backward_kernel`]
+//! / [`TrainStep::optimizer_kernel`]) with a gradient allreduce every
+//! `accum_steps` micro-batches ([`TrainStep::grad_sync`]) routed through
+//! the collective model the NCCL tasks use. The dynsim engine schedules
+//! train steps on the same event queue as inference arrivals, which is
+//! what makes mixed train+infer populations replayable.
 
 use crate::simgpu::kernel::KernelDesc;
 use crate::util::Rng;
@@ -137,6 +146,117 @@ impl RequestGenerator {
     /// Generate a trace of `n` requests.
     pub fn trace(&mut self, n: usize) -> Vec<Request> {
         (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+/// Parameter count of the simulated training model's resident layer
+/// group — matched to the ~25M-param group the decode model streams, so
+/// train and infer tenants contend for the same device at comparable
+/// per-op scales.
+const TRAIN_PARAMS: f64 = 25_000_000.0;
+
+/// One training optimizer step: a forward/backward/optimizer kernel
+/// triple over `batch_tokens`, with a gradient allreduce when the
+/// accumulation boundary is reached.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainStep {
+    /// Offset from the previous step, ns (paced, lightly jittered — a
+    /// training loop is a closed loop, not a Poisson process).
+    pub inter_arrival_ns: f64,
+    /// Tokens in this micro-batch.
+    pub batch_tokens: u64,
+    /// Whether this step closes a gradient-accumulation round and
+    /// therefore performs the allreduce + optimizer update.
+    pub grad_sync: bool,
+}
+
+impl TrainStep {
+    /// Forward pass: compute-bound bf16 GEMM work, 2 FLOPs per
+    /// parameter per token, activations written once.
+    pub fn forward_kernel(&self) -> KernelDesc {
+        let tokens = self.batch_tokens.max(1) as f64;
+        KernelDesc {
+            flops: 2.0 * TRAIN_PARAMS * tokens,
+            bytes: TRAIN_PARAMS * 2.0,
+            half_precision: true,
+            occupancy: 1.0,
+        }
+    }
+
+    /// Backward pass: the classic 2x-forward FLOP count (grad w.r.t.
+    /// activations + grad w.r.t. weights).
+    pub fn backward_kernel(&self) -> KernelDesc {
+        let tokens = self.batch_tokens.max(1) as f64;
+        KernelDesc {
+            flops: 4.0 * TRAIN_PARAMS * tokens,
+            bytes: TRAIN_PARAMS * 2.0,
+            half_precision: true,
+            occupancy: 1.0,
+        }
+    }
+
+    /// Optimizer update: memory-bound fp32 streaming over params +
+    /// gradients + moment state (Adam-style ~12 bytes/param), trivial
+    /// compute.
+    pub fn optimizer_kernel(&self) -> KernelDesc {
+        KernelDesc {
+            flops: 4.0 * TRAIN_PARAMS,
+            bytes: TRAIN_PARAMS * 12.0,
+            half_precision: false,
+            occupancy: 1.0,
+        }
+    }
+
+    /// Gradient payload of the allreduce on `grad_sync` steps: one bf16
+    /// gradient per parameter.
+    pub fn allreduce_bytes(&self) -> u64 {
+        (TRAIN_PARAMS * 2.0) as u64
+    }
+}
+
+/// Paced training-step generator: the closed-loop counterpart of
+/// [`RequestGenerator`]. `rate_hz` is optimizer steps per second; steps
+/// arrive near-periodically with ±10% jitter, batch sizes are
+/// log-uniform, and every `accum_steps`-th step is a gradient-sync step
+/// (deterministic counter, so replay is independent of the rate).
+#[derive(Clone, Debug)]
+pub struct TrainingGenerator {
+    rng: Rng,
+    /// Mean step rate, optimizer steps/second. Burst events rescale this
+    /// exactly like an inference tenant's request rate.
+    pub rate_hz: f64,
+    /// Micro-batches per gradient accumulation round.
+    pub accum_steps: u32,
+    /// Upper bound on tokens per micro-batch.
+    pub max_batch_tokens: u64,
+    step: u64,
+}
+
+impl TrainingGenerator {
+    pub fn new(seed: u64, rate_hz: f64) -> TrainingGenerator {
+        TrainingGenerator { rng: Rng::new(seed), rate_hz, accum_steps: 4, max_batch_tokens: 8192, step: 0 }
+    }
+
+    /// Builder: override the gradient-accumulation length (clamped to at
+    /// least 1 so every stream eventually syncs).
+    pub fn with_accum(mut self, accum_steps: u32) -> TrainingGenerator {
+        self.accum_steps = accum_steps.max(1);
+        self
+    }
+
+    /// Draw the stream's next step. The sync flag comes from the step
+    /// counter alone; only pacing jitter and batch size consume RNG
+    /// draws, so rescaling `rate_hz` mid-stream (bursts) never perturbs
+    /// which steps sync.
+    pub fn next_step(&mut self) -> TrainStep {
+        self.step += 1;
+        let jitter = self.rng.f64_range(0.9, 1.1);
+        let batch = log_uniform_len(&mut self.rng, 8.0, self.max_batch_tokens);
+        TrainStep {
+            inter_arrival_ns: jitter / self.rate_hz * 1e9,
+            batch_tokens: batch,
+            grad_sync: self.step % self.accum_steps as u64 == 0,
+        }
     }
 }
 
@@ -274,6 +394,68 @@ mod tests {
         let t2 = RequestGenerator::new(7, 50.0).trace(10);
         for (a, b) in t1.iter().zip(&t2) {
             assert_eq!(a.prompt_len, b.prompt_len);
+        }
+    }
+
+    #[test]
+    fn training_steps_are_paced_not_poisson() {
+        let mut g = TrainingGenerator::new(11, 20.0);
+        // 20 steps/s → 50 ms mean pacing; jitter keeps every draw within
+        // ±10% instead of an exponential's long tail.
+        for _ in 0..500 {
+            let s = g.next_step();
+            let ms = s.inter_arrival_ns / 1e6;
+            assert!((45.0..=55.0).contains(&ms), "pacing {ms} ms outside jitter band");
+            assert!(s.batch_tokens >= 256 && s.batch_tokens <= 8192);
+        }
+    }
+
+    #[test]
+    fn grad_sync_follows_the_accum_counter_regardless_of_rate() {
+        let mut g = TrainingGenerator::new(12, 10.0).with_accum(4);
+        let mut syncs = Vec::new();
+        for i in 1..=16u64 {
+            if i == 7 {
+                g.rate_hz = 80.0; // burst mid-stream
+            }
+            if g.next_step().grad_sync {
+                syncs.push(i);
+            }
+        }
+        assert_eq!(syncs, vec![4, 8, 12, 16]);
+        // Degenerate accumulation clamps to 1: every step syncs.
+        let mut g = TrainingGenerator::new(13, 10.0).with_accum(0);
+        assert!(g.next_step().grad_sync);
+    }
+
+    #[test]
+    fn training_kernels_are_phase_shaped() {
+        let mut g = TrainingGenerator::new(14, 20.0);
+        let s = g.next_step();
+        let fwd = s.forward_kernel();
+        let bwd = s.backward_kernel();
+        let opt = s.optimizer_kernel();
+        // Backward is exactly 2x forward compute; both are bf16
+        // compute-bound at training batch sizes.
+        assert!((bwd.flops - 2.0 * fwd.flops).abs() < 1.0);
+        assert!(fwd.half_precision && bwd.half_precision);
+        assert!(fwd.intensity() > 50.0, "forward must be compute-bound");
+        // The optimizer streams fp32 state and is memory-bound.
+        assert!(!opt.half_precision);
+        assert!(opt.intensity() < 1.0, "optimizer must be memory-bound");
+        // bf16 gradients: 2 bytes/param.
+        assert_eq!(s.allreduce_bytes(), 50_000_000);
+    }
+
+    #[test]
+    fn training_streams_are_deterministic() {
+        let mut a = TrainingGenerator::new(21, 15.0);
+        let mut b = TrainingGenerator::new(21, 15.0);
+        for _ in 0..100 {
+            let (x, y) = (a.next_step(), b.next_step());
+            assert_eq!(x.inter_arrival_ns.to_bits(), y.inter_arrival_ns.to_bits());
+            assert_eq!(x.batch_tokens, y.batch_tokens);
+            assert_eq!(x.grad_sync, y.grad_sync);
         }
     }
 }

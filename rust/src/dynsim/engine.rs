@@ -36,6 +36,18 @@
 //!   the tenant's first failing call; the engine performs the
 //!   destroy+recreate recovery the ERR-002 metric measures and records
 //!   the fault→first-successful-request recovery time.
+//! - **Training tenants are closed-loop**: a tenant arriving with
+//!   [`WorkloadKind::Train`] owns a [`TrainingGenerator`] whose paced
+//!   optimizer steps ride the same arrival queue and epoch rules. Each
+//!   step allocates its activation block, launches the fwd/bwd kernel
+//!   pair, and on gradient-sync steps performs an allreduce over the
+//!   node's interconnect (the NCCL-001 collective model) that busies the
+//!   *shared* device clock — which is exactly the train/infer
+//!   interference the `DYN-MIX-INTERFERENCE` statistic measures — before
+//!   the optimizer update. Training step completions feed their own
+//!   summary statistics (`DYN-TRAIN-STEP-P99`, `DYN-ALLREDUCE`), emitted
+//!   only for timelines that start a training tenant so inference-only
+//!   scenarios keep their frozen 5-statistic surface.
 //!
 //! Determinism: everything derives from `cfg.seed` (the caller passes the
 //! composed `task_seed(dynamics_seed(..), system, scenario)` — see
@@ -49,17 +61,19 @@
 
 use std::collections::VecDeque;
 
-use crate::coordinator::workload::{ProtoRequest, Request, RequestGenerator};
-use crate::cudalite::Api;
+use crate::coordinator::workload::{
+    ProtoRequest, Request, RequestGenerator, TrainStep, TrainingGenerator,
+};
+use crate::cudalite::{Api, CollectiveCtx};
 use crate::metrics::RunConfig;
 use crate::simgpu::error::{GpuError, GpuFault};
 use crate::simgpu::memory::DevicePtr;
-use crate::simgpu::TenantId;
+use crate::simgpu::{TenantId, VirtualClock};
 use crate::util::rng::splitmix64;
 use crate::virt::TenantConfig;
 
 use super::queue::{EventQueue, Occ, OccKind};
-use super::scenario::{EventKind, ScenarioSpec};
+use super::scenario::{EventKind, ScenarioSpec, WorkloadKind};
 
 /// KV-cache bytes per (prompt + generated) token held by a request.
 pub(crate) const KV_BYTES_PER_TOKEN: u64 = 128 << 10;
@@ -73,6 +87,13 @@ pub(crate) const MAX_GEN: u64 = 64;
 /// Proto-requests drawn per generator call: one block refills a tenant's
 /// arena and is realized request-by-request at the then-current rate.
 const PROTO_BATCH: usize = 64;
+/// Activation bytes per micro-batch token held by a training step.
+pub(crate) const ACT_BYTES_PER_TOKEN: u64 = 64 << 10;
+/// Recent activation blocks a training tenant keeps resident (double
+/// buffering: the in-flight step plus the previous one's recompute
+/// stash) — far fewer than a serving tenant's KV ring, but each block is
+/// batch-sized, so the allocator churn is comparable.
+pub(crate) const TRAIN_RING: usize = 2;
 
 /// One value of one windowed series.
 #[derive(Clone, Debug, PartialEq)]
@@ -127,9 +148,14 @@ pub struct ScenarioRun {
     /// Per-scenario summary statistics, in
     /// [`crate::metrics::taxonomy::DYN_SUMMARY`] order.
     pub summary: Vec<(&'static str, f64)>,
-    /// Requests completed successfully.
+    /// Inference requests completed successfully.
     pub completed: usize,
-    /// Requests abandoned (service failed even after recovery).
+    /// Training steps completed successfully (0 on inference-only
+    /// timelines). Training completions feed the `DYN-TRAIN-STEP-P99`
+    /// statistic, not the request latency/throughput series.
+    pub train_steps: usize,
+    /// Work items abandoned (service failed even after recovery),
+    /// requests and training steps alike.
     pub failed: usize,
     /// First injected-fault recovery, when the scenario injected one and
     /// the tenant recovered within the horizon.
@@ -176,23 +202,95 @@ pub(crate) fn tenant_stream_seed(seed: u64, tenant: TenantId) -> u64 {
     splitmix64(&mut s)
 }
 
+/// Training-stream counterpart of [`tenant_stream_seed`]: a distinct
+/// mixing constant keeps a tenant's training stream decorrelated from
+/// the request stream the same `(seed, tenant)` pair would draw.
+pub(crate) fn train_stream_seed(seed: u64, tenant: TenantId) -> u64 {
+    let mut s = seed ^ 0xA0761D6478BD642Fu64.wrapping_mul(tenant as u64 + 1);
+    splitmix64(&mut s)
+}
+
+/// The workload a tenant incarnation runs: an open-loop inference
+/// request stream or a closed-loop training job. Everything
+/// workload-shaped (generator, pending work, per-job communicator)
+/// lives here; the shared lifecycle state (quota, bursts, epoch, the
+/// resident-block ring) stays on [`Tenant`].
+enum Driver {
+    Infer {
+        gen: RequestGenerator,
+        /// Arena of pre-drawn proto-requests, refilled [`PROTO_BATCH`]
+        /// at a time and realized against the current rate at
+        /// consumption.
+        protos: VecDeque<ProtoRequest>,
+        /// The next request, drawn ahead so its arrival time is known.
+        pending: Request,
+    },
+    Train {
+        gen: TrainingGenerator,
+        /// The next optimizer step, drawn ahead so its time is known.
+        pending: TrainStep,
+        /// Per-job gradient communicator over the node's interconnect.
+        /// Built on a *detached* clock: the engine applies each
+        /// allreduce's returned latency to the shared device clock
+        /// itself, so collective time serializes with every tenant's
+        /// kernel work instead of advancing a private timeline.
+        comms: CollectiveCtx,
+    },
+}
+
+impl Driver {
+    /// One pending unit of work, detached from the borrow of `self`.
+    fn pending_work(&self) -> Work {
+        match self {
+            Driver::Infer { pending, .. } => Work::Req(pending.clone()),
+            Driver::Train { pending, .. } => Work::Step(*pending),
+        }
+    }
+
+    /// Set the effective rate (burst scaling / expiry).
+    fn set_rate(&mut self, rate_hz: f64) {
+        match self {
+            Driver::Infer { gen, .. } => gen.rate_hz = rate_hz,
+            Driver::Train { gen, .. } => gen.rate_hz = rate_hz,
+        }
+    }
+
+    /// Draw the next pending work item; returns its inter-arrival ns.
+    fn redraw(&mut self) -> f64 {
+        match self {
+            Driver::Infer { gen, protos, pending } => {
+                *pending = draw_request(gen, protos);
+                pending.inter_arrival_ns
+            }
+            Driver::Train { gen, pending, .. } => {
+                *pending = gen.next_step();
+                pending.inter_arrival_ns
+            }
+        }
+    }
+}
+
+/// One unit of tenant work pulled off the arrival queue (or injected by
+/// a trace `request` event), cloned out of the driver so servicing can
+/// borrow the tenant mutably.
+enum Work {
+    Req(Request),
+    Step(TrainStep),
+}
+
 /// Live per-tenant state. Arrival *times* live in the event queue, not
 /// here: a queued [`OccKind::Arrival`] carries the tenant's `epoch` so
 /// that occurrences scheduled by a departed (or replaced) incarnation
 /// pop as stale and are skipped.
 struct Tenant {
-    gen: RequestGenerator,
-    /// Arena of pre-drawn proto-requests, refilled [`PROTO_BATCH`] at a
-    /// time and realized against the current rate at consumption.
-    protos: VecDeque<ProtoRequest>,
+    driver: Driver,
     quota_cfg: TenantConfig,
     base_rate_hz: f64,
     burst_until_ns: Option<u64>,
-    /// The next request, drawn ahead so its arrival time is known.
-    pending: Request,
     /// Incarnation counter value at this tenant's last (re-)arrival.
     epoch: u64,
-    /// Resident KV blocks `(ptr, bytes)`, oldest first.
+    /// Resident blocks `(ptr, bytes)`, oldest first: KV cache for
+    /// inference tenants, activation stash for training tenants.
     ring: VecDeque<(DevicePtr, u64)>,
     held_bytes: u64,
 }
@@ -291,6 +389,148 @@ fn service_request(
     Ok(())
 }
 
+/// Drive one training step through the virtualized driver path:
+/// activation alloc (bounded ring, same quota/OOM evict-oldest semantics
+/// as the KV ring), forward + backward launch, sync; on gradient-sync
+/// steps an allreduce whose latency busies the *shared* device clock
+/// (serializing against every tenant's kernels — the interference the
+/// mixed-workload statistics measure), then the optimizer update.
+fn service_train_step(
+    api: &mut Api,
+    tenant: TenantId,
+    slot: usize,
+    step: &TrainStep,
+    state: &mut Tenant,
+    busy: &mut BusyLedger,
+    allreduce_lats_ms: &mut Vec<f64>,
+) -> Result<(), GpuError> {
+    let act_bytes = step.batch_tokens.max(1) * ACT_BYTES_PER_TOKEN;
+    match api.mem_alloc(tenant, act_bytes) {
+        Ok(p) => {
+            state.ring.push_back((p, act_bytes));
+            state.held_bytes += act_bytes;
+            if state.ring.len() > TRAIN_RING {
+                let (old, sz) = state.ring.pop_front().expect("ring non-empty");
+                state.held_bytes = state.held_bytes.saturating_sub(sz);
+                api.mem_free(tenant, old)?;
+            }
+        }
+        Err(GpuError::QuotaExceeded) | Err(GpuError::OutOfMemory) => {
+            // Quota pressure: drop the oldest activation stash and run
+            // this step without caching its activations.
+            if let Some((old, sz)) = state.ring.pop_front() {
+                state.held_bytes = state.held_bytes.saturating_sub(sz);
+                api.mem_free(tenant, old)?;
+            }
+        }
+        Err(e) => return Err(e),
+    }
+    let fwd = api.launch_kernel(tenant, 0, &step.forward_kernel())?;
+    let bwd = api.launch_kernel(tenant, 0, &step.backward_kernel())?;
+    api.sync_device(tenant)?;
+    for (s, e) in [fwd, bwd] {
+        busy.record(slot, s, e);
+    }
+    if step.grad_sync {
+        let Driver::Train { comms, .. } = &mut state.driver else {
+            unreachable!("train steps only run on train drivers");
+        };
+        let us = comms.allreduce(step.allreduce_bytes());
+        // The communicator's own clock is detached; occupy the shared
+        // device timeline for the collective's duration instead.
+        api.dev.clock.advance_f(us * 1e3);
+        allreduce_lats_ms.push(us / 1e3);
+        let opt = api.launch_kernel(tenant, 0, &step.optimizer_kernel())?;
+        api.sync_device(tenant)?;
+        busy.record(slot, opt.0, opt.1);
+    }
+    Ok(())
+}
+
+/// Dispatch one unit of work to its service path.
+fn service_work(
+    api: &mut Api,
+    tenant: TenantId,
+    slot: usize,
+    work: &Work,
+    state: &mut Tenant,
+    busy: &mut BusyLedger,
+    allreduce_lats_ms: &mut Vec<f64>,
+) -> Result<(), GpuError> {
+    match work {
+        Work::Req(req) => service_request(api, tenant, slot, req, state, busy),
+        Work::Step(step) => {
+            service_train_step(api, tenant, slot, step, state, busy, allreduce_lats_ms)
+        }
+    }
+}
+
+/// Everything a serviced work item can produce: completion samples (per
+/// workload kind), allreduce latencies, abandonment counts and the
+/// fault/recovery bookkeeping. Bundled so the service-and-recover path
+/// is shared between queue arrivals and trace-injected `request` events.
+struct Outcomes {
+    /// `(tenant, arrival_ns, completion_ns)` of successful requests.
+    samples: Vec<(TenantId, u64, u64)>,
+    /// `(tenant, step_start_ns, completion_ns)` of successful train steps.
+    train_samples: Vec<(TenantId, u64, u64)>,
+    /// Allreduce latencies, ms, in execution order.
+    allreduce_lats_ms: Vec<f64>,
+    failed: usize,
+    fault: Option<(TenantId, u64)>,
+    recovery: Option<Recovery>,
+}
+
+/// Service one work item at virtual time `t`, running the ERR-002
+/// destroy+recreate recovery cycle (plus one retry) on failure, and
+/// record the outcome. The caller has already advanced the clock to `t`.
+#[allow(clippy::too_many_arguments)]
+fn serve_and_recover(
+    api: &mut Api,
+    tenant: TenantId,
+    slot: usize,
+    t: u64,
+    work: &Work,
+    state: &mut Tenant,
+    busy: &mut BusyLedger,
+    out: &mut Outcomes,
+) {
+    let record = |out: &mut Outcomes, completion: u64| match work {
+        Work::Req(_) => out.samples.push((tenant, t, completion)),
+        Work::Step(_) => out.train_samples.push((tenant, t, completion)),
+    };
+    let served = service_work(api, tenant, slot, work, state, busy, &mut out.allreduce_lats_ms);
+    match served {
+        Ok(()) => record(out, api.now_ns()),
+        Err(_) => {
+            // Fault path: the ERR-002 recovery cycle (destroy + recreate
+            // clears the poison and every held block), then one retry.
+            let tc = state.quota_cfg;
+            state.ring.clear();
+            state.held_bytes = 0;
+            let _ = api.ctx_destroy(tenant);
+            let recovered = api.ctx_create(tenant, tc).is_ok()
+                && service_work(api, tenant, slot, work, state, busy, &mut out.allreduce_lats_ms)
+                    .is_ok();
+            if recovered {
+                let completion = api.now_ns();
+                record(out, completion);
+                if out.recovery.is_none() {
+                    if let Some((ft, fns)) = out.fault {
+                        if ft == tenant {
+                            out.recovery =
+                                Some(Recovery { tenant, fault_ns: fns, recovered_ns: completion });
+                            out.fault = None;
+                        }
+                    }
+                }
+            } else {
+                out.failed += 1;
+            }
+        }
+    }
+}
+
 /// Execute one scenario timeline on one system. `cfg.system` selects the
 /// backend and `cfg.seed` must already be the composed per-task dynamics
 /// seed (see [`super::run_dynamics`], which derives it per task).
@@ -326,16 +566,19 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
         })
         .sum::<f64>()
         * (spec.duration_ms as f64 / 1e3);
-    let mut samples: Vec<(TenantId, u64, u64)> =
-        Vec::with_capacity((expected_arrivals as usize).min(1 << 22) + 16);
-    let mut failed = 0usize;
+    let mut out = Outcomes {
+        samples: Vec::with_capacity((expected_arrivals as usize).min(1 << 22) + 16),
+        train_samples: Vec::new(),
+        allreduce_lats_ms: Vec::new(),
+        failed: 0,
+        fault: None,
+        recovery: None,
+    };
     let mut busy = BusyLedger::new(window_ns, duration_ns, n_windows, n_slots);
     let mut snap_mem: Vec<f64> = Vec::with_capacity(n_windows);
     let mut snap_frag: Vec<f64> = Vec::with_capacity(n_windows);
     // SoA (window × slot) tenant-memory snapshots; 0.0 = not resident.
     let mut snap_tenant_mem: Vec<f64> = vec![0.0; n_windows * n_slots];
-    let mut fault: Option<(TenantId, u64)> = None;
-    let mut recovery: Option<Recovery> = None;
     let mut occurrences = 0u64;
     // Tenant incarnation counter: bumped on every successful Arrive so
     // arrival occurrences scheduled by superseded incarnations pop stale.
@@ -384,32 +627,60 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
                 occurrences += 1;
                 let ev = events[i];
                 match ev.kind {
-                    EventKind::Arrive { rate_hz, quota_pct } => {
+                    EventKind::Arrive { rate_hz, quota_pct, workload } => {
                         let quota = dev_mem.saturating_mul(quota_pct as u64) / 100;
                         let tc = TenantConfig::unlimited()
                             .with_mem_limit(quota)
                             .with_sm_limit(quota_pct as f64 / 100.0);
                         api.dev.clock.advance_to(t);
                         if api.ctx_create(ev.tenant, tc).is_ok() {
-                            let mut gen = RequestGenerator::new(
-                                tenant_stream_seed(cfg.seed, ev.tenant),
-                                rate_hz,
-                            )
-                            .with_lengths(MAX_PROMPT, MAX_GEN);
-                            let mut protos = VecDeque::with_capacity(PROTO_BATCH);
-                            let pending = draw_request(&mut gen, &mut protos);
-                            let next_arrival_ns = t + pending.inter_arrival_ns.max(1.0) as u64;
+                            let (driver, first_ia_ns) = match workload {
+                                WorkloadKind::Infer => {
+                                    let mut gen = RequestGenerator::new(
+                                        tenant_stream_seed(cfg.seed, ev.tenant),
+                                        rate_hz,
+                                    )
+                                    .with_lengths(MAX_PROMPT, MAX_GEN);
+                                    let mut protos = VecDeque::with_capacity(PROTO_BATCH);
+                                    let pending = draw_request(&mut gen, &mut protos);
+                                    let ia = pending.inter_arrival_ns;
+                                    (Driver::Infer { gen, protos, pending }, ia)
+                                }
+                                WorkloadKind::Train => {
+                                    let mut gen = TrainingGenerator::new(
+                                        train_stream_seed(cfg.seed, ev.tenant),
+                                        rate_hz,
+                                    );
+                                    let pending = gen.next_step();
+                                    let ia = pending.inter_arrival_ns;
+                                    // Per-job communicator over the cell's
+                                    // node topology, mirroring the NCCL-001
+                                    // construction (warm the hook cache,
+                                    // then read it; ring collectives launch
+                                    // ~2 intercepted kernels per rank). The
+                                    // detached clock makes the collective's
+                                    // internal advance a no-op; the engine
+                                    // bills the returned latency to the
+                                    // shared device clock itself.
+                                    let topo = cfg.node_topology(&api.dev.spec);
+                                    api.virt.hook_overhead_ns(&mut api.dev);
+                                    let hook = api.virt.hook_overhead_ns(&mut api.dev);
+                                    let ranks = cfg.gpu_count.max(2);
+                                    let comms = CollectiveCtx::new(topo, VirtualClock::new())
+                                        .with_virt_overhead(hook, 2 * ranks);
+                                    (Driver::Train { gen, pending, comms }, ia)
+                                }
+                            };
+                            let next_arrival_ns = t + first_ia_ns.max(1.0) as u64;
                             epoch_counter += 1;
                             let epoch = epoch_counter;
                             let slot = slot_of(ev.tenant);
                             ever[slot] = true;
                             slots[slot] = Some(Tenant {
-                                gen,
-                                protos,
+                                driver,
                                 quota_cfg: tc,
                                 base_rate_hz: rate_hz,
                                 burst_until_ns: None,
-                                pending,
                                 epoch,
                                 ring: VecDeque::with_capacity(KV_RING + 1),
                                 held_bytes: 0,
@@ -430,19 +701,36 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
                     }
                     EventKind::Burst { factor, until_ms } => {
                         if let Some(s) = slots[slot_of(ev.tenant)].as_mut() {
-                            s.gen.rate_hz = s.base_rate_hz * factor;
+                            let rate = s.base_rate_hz * factor;
+                            s.driver.set_rate(rate);
                             s.burst_until_ns = Some(until_ms * 1_000_000);
                         }
                     }
                     EventKind::Fail => {
                         api.dev.clock.advance_to(t);
                         api.inject_fault(ev.tenant, GpuFault::IllegalAddress);
-                        fault = Some((ev.tenant, t));
+                        out.fault = Some((ev.tenant, t));
+                    }
+                    // Trace-injected one-shot: service one extra unit of
+                    // the tenant's pending work immediately, without
+                    // consuming the stream or rescheduling its arrivals
+                    // (a recorded out-of-band request/step in a replayed
+                    // production trace).
+                    EventKind::Request => {
+                        let slot = slot_of(ev.tenant);
+                        if let Some(state) = slots[slot].as_mut() {
+                            let work = state.driver.pending_work();
+                            api.dev.clock.advance_to(t);
+                            serve_and_recover(
+                                &mut api, ev.tenant, slot, t, &work, state, &mut busy, &mut out,
+                            );
+                        }
                     }
                 }
             }
-            // Request arrival: service in arrival order on the shared
-            // device. Equal-time arrivals pop tenant-ascending.
+            // Work arrival (request or training step): service in
+            // arrival order on the shared device. Equal-time arrivals
+            // pop tenant-ascending.
             OccKind::Arrival { tenant, epoch } => {
                 let slot = slot_of(tenant);
                 let Some(state) = slots[slot].as_mut() else {
@@ -452,51 +740,19 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
                     continue; // stale: the tenant re-arrived since
                 }
                 occurrences += 1;
-                let req = state.pending.clone();
+                let work = state.driver.pending_work();
                 api.dev.clock.advance_to(t);
-                let served = service_request(&mut api, tenant, slot, &req, state, &mut busy);
-                match served {
-                    Ok(()) => samples.push((tenant, t, api.now_ns())),
-                    Err(_) => {
-                        // Fault path: the ERR-002 recovery cycle (destroy +
-                        // recreate clears the poison and every held block),
-                        // then one retry of the request.
-                        let tc = state.quota_cfg;
-                        state.ring.clear();
-                        state.held_bytes = 0;
-                        let _ = api.ctx_destroy(tenant);
-                        let recovered = api.ctx_create(tenant, tc).is_ok()
-                            && service_request(&mut api, tenant, slot, &req, state, &mut busy)
-                                .is_ok();
-                        if recovered {
-                            let completion = api.now_ns();
-                            samples.push((tenant, t, completion));
-                            if recovery.is_none() {
-                                if let Some((ft, fns)) = fault {
-                                    if ft == tenant {
-                                        recovery = Some(Recovery {
-                                            tenant,
-                                            fault_ns: fns,
-                                            recovered_ns: completion,
-                                        });
-                                        fault = None;
-                                    }
-                                }
-                            }
-                        } else {
-                            failed += 1;
-                        }
-                    }
-                }
+                serve_and_recover(&mut api, tenant, slot, t, &work, state, &mut busy, &mut out);
                 // Burst expiry is checked lazily at the next draw.
                 if let Some(until) = state.burst_until_ns {
                     if t >= until {
-                        state.gen.rate_hz = state.base_rate_hz;
+                        let rate = state.base_rate_hz;
+                        state.driver.set_rate(rate);
                         state.burst_until_ns = None;
                     }
                 }
-                state.pending = draw_request(&mut state.gen, &mut state.protos);
-                let next_arrival_ns = t + state.pending.inter_arrival_ns.max(1.0) as u64;
+                let next_ia_ns = state.driver.redraw();
+                let next_arrival_ns = t + next_ia_ns.max(1.0) as u64;
                 if next_arrival_ns < duration_ns {
                     queue.push(Occ {
                         t_ns: next_arrival_ns,
@@ -521,21 +777,21 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
     // order, same as the old per-window pushes (and `stats::percentile`
     // sorts a copy, so only the multiset matters anyway).
     let mut lat_counts = vec![0usize; n_windows];
-    for &(_, _, completion) in &samples {
+    for &(_, _, completion) in &out.samples {
         lat_counts[window_of(completion, window_ns, n_windows)] += 1;
     }
     let mut lat_starts = vec![0usize; n_windows + 1];
     for w in 0..n_windows {
         lat_starts[w + 1] = lat_starts[w] + lat_counts[w];
     }
-    let mut lats_flat = vec![0.0f64; samples.len()];
+    let mut lats_flat = vec![0.0f64; out.samples.len()];
     let mut fill = lat_starts.clone();
-    for &(_, arrival, completion) in &samples {
+    for &(_, arrival, completion) in &out.samples {
         let w = window_of(completion, window_ns, n_windows);
         lats_flat[fill[w]] = (completion.saturating_sub(arrival)) as f64 / 1e6;
         fill[w] += 1;
     }
-    let recovery_window = recovery.map(|r| window_of(r.recovered_ns, window_ns, n_windows));
+    let recovery_window = out.recovery.map(|r| window_of(r.recovered_ns, window_ns, n_windows));
     let mut series: Vec<SeriesPoint> =
         Vec::with_capacity(n_windows * (6 + 2 * tenants.len()) + 1);
     let mut window_p99: Vec<f64> = Vec::with_capacity(n_windows);
@@ -576,7 +832,7 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
             });
         }
         if recovery_window == Some(w) {
-            let r = recovery.expect("recovery window implies recovery");
+            let r = out.recovery.expect("recovery window implies recovery");
             series.push(SeriesPoint {
                 window: w,
                 tenant: Some(r.tenant),
@@ -591,22 +847,67 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
     let steady = if p99s.is_empty() { 0.0 } else { crate::stats::percentile(&p99s, 50.0) };
     let worst = p99s.iter().copied().fold(0.0f64, f64::max);
     let worst_win = if steady > 0.0 { (worst / steady - 1.0) * 100.0 } else { 0.0 };
-    let thr_mean = samples.len() as f64 / (spec.duration_ms.max(1) as f64 / 1e3);
+    let thr_mean = out.samples.len() as f64 / (spec.duration_ms.max(1) as f64 / 1e3);
     // 0 = no fault injected. A fault that never recovered inside the
     // horizon must not read as 0 too (lower-better would score total
     // recovery failure as perfection): report the full horizon instead.
-    let recovery_ms = match (recovery, fault) {
+    let recovery_ms = match (out.recovery, out.fault) {
         (Some(r), _) => r.recovery_ms(),
         (None, Some(_)) => spec.duration_ms as f64,
         (None, None) => 0.0,
     };
-    let summary = vec![
+    let mut summary = vec![
         ("DYN-P99-STEADY", steady),
         ("DYN-WORST-WIN", worst_win),
         ("DYN-THR-MEAN", thr_mean),
         ("DYN-RECOVERY", recovery_ms),
         ("DYN-EVENTS", occurrences as f64),
     ];
+    // The training statistics are emitted only for timelines that start
+    // a training tenant (a static property of the spec): inference-only
+    // scenarios keep their frozen 5-statistic summary, so every
+    // pre-training golden and baseline stays byte-stable.
+    if spec.has_training() {
+        let train_lats: Vec<f64> = out
+            .train_samples
+            .iter()
+            .map(|&(_, start, completion)| (completion.saturating_sub(start)) as f64 / 1e6)
+            .collect();
+        let step_p99 =
+            if train_lats.is_empty() { 0.0 } else { crate::stats::percentile(&train_lats, 99.0) };
+        let allreduce_mean = if out.allreduce_lats_ms.is_empty() {
+            0.0
+        } else {
+            out.allreduce_lats_ms.iter().sum::<f64>() / out.allreduce_lats_ms.len() as f64
+        };
+        // Interference: mean inference latency in train-active windows
+        // (windows where >= 1 training step completed) over the mean in
+        // train-idle windows, as a percent degradation. 0 when either
+        // regime is empty (e.g. train-steady has no inference tenants).
+        let mut train_active = vec![false; n_windows];
+        for &(_, _, completion) in &out.train_samples {
+            train_active[window_of(completion, window_ns, n_windows)] = true;
+        }
+        let (mut act_sum, mut act_n, mut idle_sum, mut idle_n) = (0.0f64, 0usize, 0.0f64, 0usize);
+        for &(_, arrival, completion) in &out.samples {
+            let lat_ms = (completion.saturating_sub(arrival)) as f64 / 1e6;
+            if train_active[window_of(completion, window_ns, n_windows)] {
+                act_sum += lat_ms;
+                act_n += 1;
+            } else {
+                idle_sum += lat_ms;
+                idle_n += 1;
+            }
+        }
+        let interference = if act_n > 0 && idle_n > 0 {
+            ((act_sum / act_n as f64) / (idle_sum / idle_n as f64) - 1.0) * 100.0
+        } else {
+            0.0
+        };
+        summary.push(("DYN-TRAIN-STEP-P99", step_p99));
+        summary.push(("DYN-ALLREDUCE", allreduce_mean));
+        summary.push(("DYN-MIX-INTERFERENCE", interference));
+    }
 
     ScenarioRun {
         system: cfg.system.clone(),
@@ -617,9 +918,10 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
         tenants,
         series,
         summary,
-        completed: samples.len(),
-        failed,
-        recovery,
+        completed: out.samples.len(),
+        train_steps: out.train_samples.len(),
+        failed: out.failed,
+        recovery: out.recovery,
         occurrences,
     }
 }
@@ -747,6 +1049,95 @@ mod tests {
         // The 4x burst through the middle must make some window visibly
         // worse than the steady state.
         assert!(worst > 0.0, "worst-window degradation {worst}% (p99s {p99:?})");
+    }
+
+    #[test]
+    fn train_steady_produces_training_statistics() {
+        let r = run("hami", "train-steady", 300, 50);
+        assert!(r.train_steps > 0, "no training steps completed");
+        assert_eq!(r.completed, 0, "train-steady has no inference tenants");
+        assert_eq!(r.failed, 0);
+        // 5 classic statistics + the 3 training ones.
+        assert_eq!(r.summary.len(), 8);
+        assert!(r.summary_value("DYN-TRAIN-STEP-P99").unwrap() > 0.0);
+        // 20 steps/s with accum 4 syncs well inside a 300 ms horizon.
+        assert!(r.summary_value("DYN-ALLREDUCE").unwrap() > 0.0);
+        // No inference regime at all: interference reads 0 by definition.
+        assert_eq!(r.summary_value("DYN-MIX-INTERFERENCE"), Some(0.0));
+        // Training busy time and activation memory ride the existing
+        // series unchanged.
+        assert!(r.points("DYN-SM").iter().any(|p| p.value > 0.0));
+        assert!(r.points("DYN-MEM").iter().any(|p| p.tenant.is_none() && p.value > 0.0));
+        // Occurrence accounting: boundaries + the 2 arrive events +
+        // every serviced training step.
+        assert_eq!(r.occurrences as usize, r.windows + 2 + r.train_steps + r.failed);
+    }
+
+    #[test]
+    fn mixed_churn_runs_both_regimes_and_is_deterministic() {
+        let a = run("hami", "mixed-churn", 400, 50);
+        assert!(a.completed > 0, "no inference requests completed");
+        assert!(a.train_steps > 0, "no training steps completed");
+        assert_eq!(a.summary.len(), 8);
+        for (id, v) in &a.summary {
+            assert!(v.is_finite(), "{id}={v}");
+        }
+        // The training tenant joins at 30%: there are both train-idle and
+        // train-active windows, so the interference statistic compares
+        // two non-empty regimes.
+        assert!(a.summary_value("DYN-MIX-INTERFERENCE").unwrap().is_finite());
+        let b = run("hami", "mixed-churn", 400, 50);
+        for (x, y) in a.series.iter().zip(&b.series) {
+            assert_eq!(x.value.to_bits(), y.value.to_bits(), "{}/{}", x.id, x.window);
+        }
+        assert_eq!(a.summary, b.summary);
+    }
+
+    #[test]
+    fn inference_only_presets_keep_the_frozen_summary_shape() {
+        for scenario in ["steady", "churn", "spike", "failover"] {
+            let r = run("native", scenario, 300, 50);
+            assert_eq!(r.summary.len(), 5, "{scenario} summary grew");
+            assert_eq!(r.train_steps, 0, "{scenario}");
+            assert!(r.summary_value("DYN-TRAIN-STEP-P99").is_none(), "{scenario}");
+        }
+    }
+
+    #[test]
+    fn trace_request_events_inject_one_shot_work() {
+        use crate::dynsim::scenario::{TenantEvent, WorkloadKind, TRACE_SCENARIO};
+        let arrive = TenantEvent {
+            at_ms: 0,
+            tenant: 1,
+            kind: EventKind::Arrive { rate_hz: 10.0, quota_pct: 50, workload: WorkloadKind::Infer },
+        };
+        let without = ScenarioSpec {
+            name: TRACE_SCENARIO,
+            duration_ms: 300,
+            window_ms: 50,
+            events: vec![arrive],
+        };
+        let with = ScenarioSpec {
+            events: vec![
+                arrive,
+                TenantEvent { at_ms: 100, tenant: 1, kind: EventKind::Request },
+                // Tenant 2 never arrived: the injected request is a no-op.
+                TenantEvent { at_ms: 150, tenant: 2, kind: EventKind::Request },
+            ],
+            ..without.clone()
+        };
+        let cfg = cfg_for("hami", TRACE_SCENARIO, 300, 50);
+        let base = run_scenario(&cfg, &without);
+        let injected = run_scenario(&cfg, &with);
+        // The one-shot services the pending request without consuming the
+        // stream: exactly one extra completion, same arrival schedule.
+        assert_eq!(injected.completed, base.completed + 1);
+        // Both request events count as processed occurrences (the no-op
+        // one included), and the injected service is not an arrival.
+        assert_eq!(
+            injected.occurrences as usize,
+            injected.windows + 3 + (injected.completed - 1) + injected.failed
+        );
     }
 
     #[test]

@@ -11,23 +11,34 @@
 //!
 //! - [`scenario`] declares a timeline ([`ScenarioSpec`]): tenant
 //!   arrive/depart/burst/fail events on a `duration_ms` horizon, with
-//!   four named presets (`steady`, `churn`, `spike`, `failover`).
+//!   six named presets (`steady`, `churn`, `spike`, `failover`,
+//!   `train-steady`, `mixed-churn`). Tenants carry a
+//!   [`scenario::WorkloadKind`] — inference request streams or training
+//!   jobs — so mixed train+infer populations are first-class timelines.
+//! - [`trace`] parses external line-oriented trace files
+//!   (`gvbench dynamics --trace FILE`) into a [`ScenarioSpec`] under the
+//!   reserved [`scenario::TRACE_SCENARIO`] key, replaying recorded
+//!   production timelines bit-identically at any `--jobs` count.
 //! - [`engine`] replays one timeline against one virtualization backend
 //!   on a discrete-event core: [`queue`]'s deterministic min-queue pops
-//!   every occurrence (window boundary, scenario event, request arrival)
-//!   in `(t, kind rank, key)` order, per-tenant Poisson request streams
+//!   every occurrence (window boundary, scenario event, work arrival)
+//!   in `(t, kind rank, key)` order; per-tenant Poisson request streams
 //!   ([`crate::coordinator::workload::RequestGenerator`]) drive
-//!   prefill/decode-phased LLM traffic through the full `cudalite`
-//!   driver path, and the run reduces to **windowed time series**
-//!   (latency p50/p99, throughput, per-tenant SM/memory occupancy,
-//!   fragmentation ratio, fault recovery time) plus per-scenario summary
-//!   statistics, including the gateable `DYN-EVENTS` occurrence count.
+//!   prefill/decode-phased LLM traffic and paced training streams
+//!   ([`crate::coordinator::workload::TrainingGenerator`]) drive
+//!   fwd/bwd/optimizer triples with gradient allreduce through the full
+//!   `cudalite` driver path, and the run reduces to **windowed time
+//!   series** (latency p50/p99, throughput, per-tenant SM/memory
+//!   occupancy, fragmentation ratio, fault recovery time) plus
+//!   per-scenario summary statistics, including the gateable
+//!   `DYN-EVENTS` occurrence count and — on timelines with training
+//!   tenants — the train-step/allreduce/interference statistics.
 //!   The pre-rewrite min-scan loop is frozen in [`reference`] as the
 //!   executable specification the event core is proven bit-identical to.
 //! - [`run_dynamics`] expands a [`DynSpec`] — systems × scenarios on one
-//!   (duration, window) geometry — into one flat task list sharded
-//!   through the parallel executor
-//!   ([`crate::coordinator::executor::execute_indexed_with`]).
+//!   (duration, window) geometry, optionally carrying one parsed trace
+//!   timeline — into one flat task list sharded through the parallel
+//!   executor ([`crate::coordinator::executor::execute_indexed_with`]).
 //!
 //! **Determinism:** each (system, scenario) task derives its seed as
 //! `task_seed(dynamics_seed(run_seed, scenario, duration_ms, window_ms),
@@ -43,9 +54,11 @@ pub mod engine;
 pub mod queue;
 pub mod reference;
 pub mod scenario;
+pub mod trace;
 
 pub use engine::{Recovery, ScenarioRun, SeriesPoint};
-pub use scenario::{ScenarioSpec, PRESETS};
+pub use scenario::{ScenarioSpec, PRESETS, TRACE_SCENARIO};
+pub use trace::{parse_trace, render_trace};
 
 use std::sync::Arc;
 
@@ -64,10 +77,16 @@ pub const DEFAULT_WINDOW_MS: u64 = 100;
 pub struct DynSpec {
     /// Backend keys (`native` / `hami` / `fcsp` / `mig` / `timeslice`).
     pub systems: Vec<String>,
-    /// Canonical scenario preset keys (see [`scenario::PRESETS`]).
+    /// Canonical timeline keys: preset names (see [`scenario::PRESETS`])
+    /// and/or [`TRACE_SCENARIO`] when `trace` is set.
     pub scenarios: Vec<&'static str>,
     pub duration_ms: u64,
     pub window_ms: u64,
+    /// Parsed external trace timeline, replayed for every scenario entry
+    /// equal to [`TRACE_SCENARIO`]. Its geometry (already validated by
+    /// the parser/CLI) supplies `duration_ms`/`window_ms` when the grid
+    /// runs a trace.
+    pub trace: Option<ScenarioSpec>,
 }
 
 impl DynSpec {
@@ -128,10 +147,15 @@ pub fn run_dynamics_on(
     let total = tasks.len();
     let cfgs = Arc::new(cfgs);
     let (duration_ms, window_ms) = (spec.duration_ms, spec.window_ms);
+    let trace_spec = spec.trace.clone();
     let run = {
         let cfgs = Arc::clone(&cfgs);
         move |i: usize, task: &Task| {
-            let sc = ScenarioSpec::preset(task.metric_id, duration_ms, window_ms)?;
+            let sc = if task.metric_id == TRACE_SCENARIO {
+                trace_spec.clone()?
+            } else {
+                ScenarioSpec::preset(task.metric_id, duration_ms, window_ms)?
+            };
             let replay = engine::run_scenario(&cfgs[i], &sc);
             if let Some(obs) = observer.as_ref() {
                 obs(TaskDone {
@@ -151,7 +175,10 @@ pub fn run_dynamics_on(
         .zip(tasks.iter())
         .map(|(slot, task)| {
             slot.unwrap_or_else(|| {
-                panic!("dynamics scenario `{}` is not a known preset", task.metric_id)
+                panic!(
+                    "dynamics scenario `{}` is not a known preset or replayable trace",
+                    task.metric_id
+                )
             })
         })
         .collect();
@@ -174,6 +201,7 @@ mod tests {
             scenarios: vec!["steady", "failover"],
             duration_ms: 250,
             window_ms: 50,
+            trace: None,
         }
     }
 
@@ -227,6 +255,34 @@ mod tests {
             for (x, y) in a.series.iter().zip(&b.series) {
                 assert_eq!(x.value.to_bits(), y.value.to_bits(), "{}/{}", a.system, x.id);
             }
+        }
+    }
+
+    #[test]
+    fn trace_timelines_ride_the_grid() {
+        let base = RunConfig::quick("native");
+        let tr = trace::parse_trace(
+            "duration-ms 250\nwindow-ms 50\n\
+             at 0 arrive 1 infer rate=30 quota=40\n\
+             at 100 arrive 2 train rate=10 quota=40\n",
+        )
+        .unwrap();
+        let spec = DynSpec {
+            systems: vec!["native".into()],
+            scenarios: vec![TRACE_SCENARIO],
+            duration_ms: tr.duration_ms,
+            window_ms: tr.window_ms,
+            trace: Some(tr),
+        };
+        let a = run_dynamics(&base, &spec, 1);
+        let b = run_dynamics(&base, &spec, 4);
+        assert_eq!(a.runs.len(), 1);
+        assert_eq!(a.runs[0].scenario, TRACE_SCENARIO);
+        // The trace carries a training tenant: the training statistics
+        // are on the summary surface.
+        assert!(a.runs[0].summary_value("DYN-TRAIN-STEP-P99").is_some());
+        for (x, y) in a.runs[0].series.iter().zip(&b.runs[0].series) {
+            assert_eq!(x.value.to_bits(), y.value.to_bits(), "{}/{}", x.id, x.window);
         }
     }
 }

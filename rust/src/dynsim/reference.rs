@@ -31,7 +31,7 @@ use super::engine::{
     tenant_stream_seed, window_of, Recovery, ScenarioRun, SeriesPoint, KV_BYTES_PER_TOKEN,
     KV_RING, MAX_GEN, MAX_PROMPT,
 };
-use super::scenario::{EventKind, ScenarioSpec};
+use super::scenario::{EventKind, ScenarioSpec, WorkloadKind};
 
 /// Live per-tenant state of the reference loop.
 struct Tenant {
@@ -176,7 +176,7 @@ pub fn run_scenario_reference(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioR
             ev_idx += 1;
             occurrences += 1;
             match ev.kind {
-                EventKind::Arrive { rate_hz, quota_pct } => {
+                EventKind::Arrive { rate_hz, quota_pct, workload: WorkloadKind::Infer } => {
                     let quota = dev_mem.saturating_mul(quota_pct as u64) / 100;
                     let tc = TenantConfig::unlimited()
                         .with_mem_limit(quota)
@@ -221,6 +221,11 @@ pub fn run_scenario_reference(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioR
                     api.inject_fault(ev.tenant, GpuFault::IllegalAddress);
                     fault = Some((ev.tenant, t));
                 }
+                // Post-freeze timeline constructs (training tenants and
+                // trace-injected requests) are never replayed here: the
+                // equivalence suite only feeds this loop the frozen
+                // inference presets, and the loop predates both kinds.
+                EventKind::Arrive { .. } | EventKind::Request => {}
             }
             continue;
         }
@@ -379,6 +384,7 @@ pub fn run_scenario_reference(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioR
         series,
         summary,
         completed: samples.len(),
+        train_steps: 0,
         failed,
         recovery,
         occurrences,

@@ -7,14 +7,30 @@
 //! (arXiv 2511.18906) identify as the dominant regime of multi-tenant
 //! GPU behaviour: arrivals, departures, load bursts and injected faults.
 //!
-//! Four named presets cover the deployment-critical shapes; events are
+//! Tenants carry a [`WorkloadKind`]: open-loop LLM *inference* request
+//! streams, or *training* jobs stepping fwd/bwd/optimizer kernel triples
+//! with periodic gradient allreduce — MIGPerf (arXiv 2301.00407) shows
+//! the two stress GPU partitions in opposite directions, which is
+//! exactly what the `mixed-churn` preset co-locates.
+//!
+//! Six named presets cover the deployment-critical shapes; events are
 //! placed at fixed *fractions* of the horizon so the same preset scales
-//! to any `--duration-ms` without re-tuning.
+//! to any `--duration-ms` without re-tuning. A seventh timeline kind is
+//! not a preset at all: an external trace file
+//! ([`crate::dynsim::trace`]) parsed into a `ScenarioSpec` under the
+//! reserved [`TRACE_SCENARIO`] key.
 
 use crate::simgpu::TenantId;
 
 /// The named scenario presets, in CLI/reporting order.
-pub const PRESETS: [&str; 4] = ["steady", "churn", "spike", "failover"];
+pub const PRESETS: [&str; 6] =
+    ["steady", "churn", "spike", "failover", "train-steady", "mixed-churn"];
+
+/// The reserved timeline key of externally supplied trace files
+/// (`gvbench dynamics --trace FILE`). Not a preset: it never appears in
+/// [`PRESETS`], but the seed derivation, the reporting surfaces and the
+/// regress schema treat it like any other canonical scenario key.
+pub const TRACE_SCENARIO: &str = "trace";
 
 /// Resolve a user-supplied scenario name to its canonical `'static` key
 /// (`None` for unknown names). The executor's task labels and the seed
@@ -23,17 +39,60 @@ pub fn canonical(name: &str) -> Option<&'static str> {
     PRESETS.iter().copied().find(|p| *p == name)
 }
 
+/// Like [`canonical`], additionally resolving the reserved
+/// [`TRACE_SCENARIO`] key — the set of timeline names that can appear in
+/// a dynamics summary surface (and therefore a regress baseline).
+pub fn canonical_timeline(name: &str) -> Option<&'static str> {
+    if name == TRACE_SCENARIO {
+        return Some(TRACE_SCENARIO);
+    }
+    canonical(name)
+}
+
+/// What a tenant runs once arrived: an open-loop inference request
+/// stream or a paced training job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// LLM serving: Poisson request arrivals at `rate_hz`, each request a
+    /// prefill/decode kernel pair.
+    Infer,
+    /// Training: paced optimizer steps at `rate_hz` steps/second, each a
+    /// fwd/bwd/optimizer kernel triple with periodic gradient allreduce.
+    Train,
+}
+
+impl WorkloadKind {
+    /// The trace-format key (`infer` / `train`).
+    pub fn key(&self) -> &'static str {
+        match self {
+            WorkloadKind::Infer => "infer",
+            WorkloadKind::Train => "train",
+        }
+    }
+
+    /// Parse a trace-format key (`None` for unknown keys).
+    pub fn from_key(key: &str) -> Option<WorkloadKind> {
+        match key {
+            "infer" => Some(WorkloadKind::Infer),
+            "train" => Some(WorkloadKind::Train),
+            _ => None,
+        }
+    }
+}
+
 /// What happens to a tenant at one point of the timeline.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum EventKind {
     /// The tenant's container starts: context creation, quota
-    /// registration, and an open-loop Poisson request stream at
-    /// `rate_hz`.
+    /// registration, and an open-loop workload at `rate_hz` (requests/s
+    /// for inference, optimizer steps/s for training).
     Arrive {
         rate_hz: f64,
         /// Per-tenant quota in percent of the whole device (memory and
         /// SM alike, mirroring the sweep's quota axis).
         quota_pct: u32,
+        /// What the tenant runs.
+        workload: WorkloadKind,
     },
     /// The tenant's container stops: context destruction releases every
     /// allocation it holds (carving holes into the heap).
@@ -45,10 +104,14 @@ pub enum EventKind {
     /// recovers it (context destroy + recreate) at the first failing call
     /// and records the recovery time.
     Fail,
+    /// One extra unit of the tenant's pending work is injected and
+    /// serviced immediately (a recorded one-shot request). Only trace
+    /// files produce this kind; no preset does.
+    Request,
 }
 
 /// One scheduled event of a scenario timeline.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TenantEvent {
     /// Offset from scenario start, ms.
     pub at_ms: u64,
@@ -57,9 +120,9 @@ pub struct TenantEvent {
 }
 
 /// A declared dynamic scenario: named timeline + reporting geometry.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ScenarioSpec {
-    /// Canonical preset key (`steady` / `churn` / `spike` / `failover`).
+    /// Canonical preset key (see [`PRESETS`]) or [`TRACE_SCENARIO`].
     pub name: &'static str,
     /// Timeline horizon, ms.
     pub duration_ms: u64,
@@ -83,6 +146,9 @@ impl ScenarioSpec {
     /// assert_eq!(sc.windows(), 10);
     /// // The fault lands at 40% of the horizon.
     /// assert!(sc.events.iter().any(|e| e.at_ms == 400));
+    /// // Training presets carry training tenants; inference ones do not.
+    /// assert!(ScenarioSpec::preset("mixed-churn", 1000, 100).unwrap().has_training());
+    /// assert!(!sc.has_training());
     /// assert!(ScenarioSpec::preset("meltdown", 1000, 100).is_none());
     /// ```
     pub fn preset(name: &str, duration_ms: u64, window_ms: u64) -> Option<ScenarioSpec> {
@@ -91,7 +157,12 @@ impl ScenarioSpec {
         let arrive = |at_ms: u64, tenant: TenantId, rate_hz: f64, quota_pct: u32| TenantEvent {
             at_ms,
             tenant,
-            kind: EventKind::Arrive { rate_hz, quota_pct },
+            kind: EventKind::Arrive { rate_hz, quota_pct, workload: WorkloadKind::Infer },
+        };
+        let train = |at_ms: u64, tenant: TenantId, rate_hz: f64, quota_pct: u32| TenantEvent {
+            at_ms,
+            tenant,
+            kind: EventKind::Arrive { rate_hz, quota_pct, workload: WorkloadKind::Train },
         };
         let events = match name {
             // Fixed population at the paper's default equal-share-of-four
@@ -139,6 +210,23 @@ impl ScenarioSpec {
                 arrive(0, 3, 40.0, 30),
                 TenantEvent { at_ms: at(40), tenant: 2, kind: EventKind::Fail },
             ],
+            // Two co-located training jobs from t=0: the pure-training
+            // control for the step-time and allreduce statistics.
+            "train-steady" => vec![
+                train(0, 1, 20.0, 40),
+                train(0, 2, 20.0, 40),
+            ],
+            // Train/infer co-location under churn: an inference-only
+            // opening phase, a training job joining mid-run (so the
+            // interference statistic has both regimes to compare), then
+            // more serving churn around it.
+            "mixed-churn" => vec![
+                arrive(0, 1, 40.0, 25),
+                arrive(0, 2, 40.0, 25),
+                train(at(30), 3, 15.0, 40),
+                arrive(at(50), 4, 40.0, 25),
+                TenantEvent { at_ms: at(70), tenant: 2, kind: EventKind::Depart },
+            ],
             _ => unreachable!("canonical() returned an unknown preset"),
         };
         Some(ScenarioSpec { name, duration_ms, window_ms, events })
@@ -172,7 +260,7 @@ impl ScenarioSpec {
             .map(|tenant| TenantEvent {
                 at_ms: 0,
                 tenant,
-                kind: EventKind::Arrive { rate_hz, quota_pct },
+                kind: EventKind::Arrive { rate_hz, quota_pct, workload: WorkloadKind::Infer },
             })
             .collect();
         ScenarioSpec { name, duration_ms, window_ms, events }
@@ -186,6 +274,15 @@ impl ScenarioSpec {
             return 0;
         }
         (self.duration_ms.div_ceil(self.window_ms)) as usize
+    }
+
+    /// Whether the timeline ever starts a training tenant — the condition
+    /// under which the engine emits the training summary statistics
+    /// (`DYN-TRAIN-STEP-P99` / `DYN-ALLREDUCE` / `DYN-MIX-INTERFERENCE`).
+    pub fn has_training(&self) -> bool {
+        self.events.iter().any(|e| {
+            matches!(e.kind, EventKind::Arrive { workload: WorkloadKind::Train, .. })
+        })
     }
 }
 
@@ -204,6 +301,13 @@ mod tests {
         assert!(ScenarioSpec::preset("bogus", 1000, 100).is_none());
         assert_eq!(canonical("churn"), Some("churn"));
         assert_eq!(canonical("Churn"), None);
+        assert_eq!(canonical("mixed-churn"), Some("mixed-churn"));
+        // `trace` is a reserved timeline key, never a preset.
+        assert_eq!(canonical(TRACE_SCENARIO), None);
+        assert!(ScenarioSpec::preset(TRACE_SCENARIO, 1000, 100).is_none());
+        assert_eq!(canonical_timeline(TRACE_SCENARIO), Some("trace"));
+        assert_eq!(canonical_timeline("failover"), Some("failover"));
+        assert_eq!(canonical_timeline("meltdown"), None);
     }
 
     #[test]
@@ -245,5 +349,38 @@ mod tests {
         }
         assert_eq!(max_pop, 4);
         assert_eq!(pop, 3); // final population
+    }
+
+    #[test]
+    fn workload_kinds_partition_the_presets() {
+        // The four original presets are inference-only; the two new ones
+        // carry training tenants.
+        for p in ["steady", "churn", "spike", "failover"] {
+            assert!(!ScenarioSpec::preset(p, 1000, 100).unwrap().has_training(), "{p}");
+        }
+        for p in ["train-steady", "mixed-churn"] {
+            assert!(ScenarioSpec::preset(p, 1000, 100).unwrap().has_training(), "{p}");
+        }
+        // mixed-churn opens inference-only: its training tenant arrives
+        // strictly after t=0, so interference has an idle phase to
+        // compare against.
+        let mixed = ScenarioSpec::preset("mixed-churn", 1000, 100).unwrap();
+        let train_at = mixed
+            .events
+            .iter()
+            .find(|e| {
+                matches!(e.kind, EventKind::Arrive { workload: WorkloadKind::Train, .. })
+            })
+            .map(|e| e.at_ms)
+            .unwrap();
+        assert!(train_at > 0, "training must join mid-run, not at t=0");
+    }
+
+    #[test]
+    fn workload_keys_round_trip() {
+        for k in [WorkloadKind::Infer, WorkloadKind::Train] {
+            assert_eq!(WorkloadKind::from_key(k.key()), Some(k));
+        }
+        assert_eq!(WorkloadKind::from_key("batch"), None);
     }
 }

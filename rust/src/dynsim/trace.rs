@@ -1,0 +1,327 @@
+//! Line-oriented external trace format for `gvbench dynamics --trace`.
+//!
+//! A trace file is a recorded (or hand-written) tenant timeline replayed
+//! as a [`ScenarioSpec`] under the reserved [`TRACE_SCENARIO`] key —
+//! bit-identical at any `--jobs` count, because the replay rides the
+//! same `dynamics_seed` derivation as the presets.
+//!
+//! # Format
+//!
+//! ```text
+//! # comments and blank lines are skipped
+//! duration-ms 400
+//! window-ms 50
+//! at 0   arrive 1 infer rate=40 quota=25
+//! at 0   arrive 3 train rate=15 quota=40
+//! at 100 burst 1 factor=4 until-ms=200
+//! at 150 request 1
+//! at 200 depart 1
+//! at 250 fail 3
+//! ```
+//!
+//! Two headers (`duration-ms`, `window-ms`, in that order) fix the
+//! replay geometry; every following line is one event at an explicit
+//! millisecond timestamp. Timestamps must be non-decreasing and inside
+//! the horizon. `depart` / `burst` / `fail` / `request` must name a
+//! tenant that previously arrived (and has not departed); re-arrival of
+//! a departed tenant is allowed and replays as a fresh incarnation,
+//! mirroring the engine's epoch rules. Parse errors name the offending
+//! line and field, in the style of the regress baseline's row rejection.
+
+use anyhow::{bail, Result};
+
+use super::scenario::{EventKind, ScenarioSpec, TenantEvent, WorkloadKind, TRACE_SCENARIO};
+use crate::simgpu::TenantId;
+
+/// Longest replayable horizon, ms (matches the regress baseline's bound).
+const MAX_DURATION_MS: u64 = 3_600_000;
+
+fn parse_u64(lineno: usize, field: &str, tok: &str) -> Result<u64> {
+    match tok.parse::<u64>() {
+        Ok(v) => Ok(v),
+        Err(_) => bail!("line {lineno}: {field} `{tok}` is not a non-negative integer"),
+    }
+}
+
+fn parse_f64(lineno: usize, field: &str, tok: &str) -> Result<f64> {
+    match tok.parse::<f64>() {
+        Ok(v) if v.is_finite() && v > 0.0 => Ok(v),
+        _ => bail!("line {lineno}: {field} `{tok}` must be a positive finite number"),
+    }
+}
+
+/// Split a `key=value` token, insisting on the expected key.
+fn keyed<'a>(lineno: usize, expect: &str, tok: Option<&'a str>) -> Result<&'a str> {
+    let Some(tok) = tok else {
+        bail!("line {lineno}: missing `{expect}=` field");
+    };
+    match tok.split_once('=') {
+        Some((k, v)) if k == expect => Ok(v),
+        _ => bail!("line {lineno}: expected `{expect}=<value>`, found `{tok}`"),
+    }
+}
+
+/// Parse a trace file into a replayable [`ScenarioSpec`] (named
+/// [`TRACE_SCENARIO`]). Errors name the offending line and field.
+pub fn parse_trace(text: &str) -> Result<ScenarioSpec> {
+    // (lineno, content) for every non-blank, non-comment line.
+    let mut lines = text
+        .lines()
+        .enumerate()
+        .map(|(i, l)| (i + 1, l.trim()))
+        .filter(|(_, l)| !l.is_empty() && !l.starts_with('#'));
+
+    let mut header = |key: &str| -> Result<u64> {
+        let Some((lineno, line)) = lines.next() else {
+            bail!("trace ends before the `{key}` header");
+        };
+        match line.split_whitespace().collect::<Vec<_>>()[..] {
+            [k, v] if k == key => parse_u64(lineno, key, v),
+            _ => bail!("line {lineno}: expected `{key} <ms>`, found `{line}`"),
+        }
+    };
+    let duration_ms = header("duration-ms")?;
+    let window_ms = header("window-ms")?;
+    if duration_ms == 0 || duration_ms > MAX_DURATION_MS {
+        bail!("duration-ms {duration_ms} out of range 1..={MAX_DURATION_MS}");
+    }
+    if window_ms == 0 || window_ms > duration_ms {
+        bail!("window-ms {window_ms} out of range 1..={duration_ms}");
+    }
+
+    let mut events: Vec<TenantEvent> = Vec::new();
+    let mut active: std::collections::BTreeSet<TenantId> = std::collections::BTreeSet::new();
+    let mut last_at = 0u64;
+    for (lineno, line) in lines {
+        let mut toks = line.split_whitespace();
+        match toks.next() {
+            Some("at") => {}
+            Some(other) => bail!("line {lineno}: expected `at <ms> <event> ...`, found `{other}`"),
+            None => unreachable!("blank lines are filtered"),
+        }
+        let at_ms = match toks.next() {
+            Some(t) => parse_u64(lineno, "timestamp", t)?,
+            None => bail!("line {lineno}: missing timestamp after `at`"),
+        };
+        if at_ms < last_at {
+            bail!("line {lineno}: timestamp {at_ms} goes backwards (previous event at {last_at})");
+        }
+        if at_ms >= duration_ms {
+            bail!("line {lineno}: timestamp {at_ms} is outside the {duration_ms} ms horizon");
+        }
+        last_at = at_ms;
+        let Some(kind_tok) = toks.next() else {
+            bail!("line {lineno}: missing event kind after the timestamp");
+        };
+        let tenant = match toks.next() {
+            Some(t) => parse_u64(lineno, "tenant", t)? as TenantId,
+            None => bail!("line {lineno}: missing tenant id after `{kind_tok}`"),
+        };
+        let kind = match kind_tok {
+            "arrive" => {
+                let workload = match toks.next() {
+                    Some(w) => match WorkloadKind::from_key(w) {
+                        Some(k) => k,
+                        None => bail!(
+                            "line {lineno}: unknown workload `{w}` (expected: infer, train)"
+                        ),
+                    },
+                    None => bail!("line {lineno}: missing workload (infer|train) after the tenant"),
+                };
+                let rate_hz = parse_f64(lineno, "rate", keyed(lineno, "rate", toks.next())?)?;
+                let quota_tok = keyed(lineno, "quota", toks.next())?;
+                let quota_pct = parse_u64(lineno, "quota", quota_tok)?;
+                if quota_pct == 0 || quota_pct > 100 {
+                    bail!("line {lineno}: quota {quota_pct} out of range 1..=100");
+                }
+                active.insert(tenant);
+                EventKind::Arrive { rate_hz, quota_pct: quota_pct as u32, workload }
+            }
+            "depart" => {
+                if !active.remove(&tenant) {
+                    bail!("line {lineno}: depart names unknown tenant {tenant} (never arrived or already departed)");
+                }
+                EventKind::Depart
+            }
+            "burst" => {
+                if !active.contains(&tenant) {
+                    bail!("line {lineno}: burst names unknown tenant {tenant} (never arrived or already departed)");
+                }
+                let factor = parse_f64(lineno, "factor", keyed(lineno, "factor", toks.next())?)?;
+                let until_ms =
+                    parse_u64(lineno, "until-ms", keyed(lineno, "until-ms", toks.next())?)?;
+                EventKind::Burst { factor, until_ms }
+            }
+            "fail" => {
+                if !active.contains(&tenant) {
+                    bail!("line {lineno}: fail names unknown tenant {tenant} (never arrived or already departed)");
+                }
+                EventKind::Fail
+            }
+            "request" => {
+                if !active.contains(&tenant) {
+                    bail!("line {lineno}: request names unknown tenant {tenant} (never arrived or already departed)");
+                }
+                EventKind::Request
+            }
+            other => bail!(
+                "line {lineno}: unknown event kind `{other}` (expected: arrive, depart, burst, fail, request)"
+            ),
+        };
+        if let Some(extra) = toks.next() {
+            bail!("line {lineno}: trailing token `{extra}`");
+        }
+        events.push(TenantEvent { at_ms, tenant, kind });
+    }
+    Ok(ScenarioSpec { name: TRACE_SCENARIO, duration_ms, window_ms, events })
+}
+
+/// Render a timeline back to the trace format. `parse_trace ∘
+/// render_trace` is the identity on any spec whose events are in
+/// non-decreasing timestamp order with a consistent tenant population
+/// (f64 fields use Rust's shortest round-trip `Display`, so rates and
+/// burst factors survive exactly).
+pub fn render_trace(spec: &ScenarioSpec) -> String {
+    let mut out = String::new();
+    out.push_str("# gvbench dynamics trace\n");
+    out.push_str(&format!("duration-ms {}\n", spec.duration_ms));
+    out.push_str(&format!("window-ms {}\n", spec.window_ms));
+    for e in &spec.events {
+        let line = match e.kind {
+            EventKind::Arrive { rate_hz, quota_pct, workload } => format!(
+                "at {} arrive {} {} rate={} quota={}",
+                e.at_ms,
+                e.tenant,
+                workload.key(),
+                rate_hz,
+                quota_pct
+            ),
+            EventKind::Depart => format!("at {} depart {}", e.at_ms, e.tenant),
+            EventKind::Burst { factor, until_ms } => format!(
+                "at {} burst {} factor={} until-ms={}",
+                e.at_ms, e.tenant, factor, until_ms
+            ),
+            EventKind::Fail => format!("at {} fail {}", e.at_ms, e.tenant),
+            EventKind::Request => format!("at {} request {}", e.at_ms, e.tenant),
+        };
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+# a mixed train+infer trace
+duration-ms 400
+window-ms 50
+
+at 0 arrive 1 infer rate=40 quota=25
+at 0 arrive 3 train rate=15.5 quota=40
+at 100 burst 1 factor=4 until-ms=200
+at 150 request 1
+at 200 depart 1
+at 250 fail 3
+at 300 arrive 1 infer rate=20 quota=25
+";
+
+    #[test]
+    fn parses_the_full_event_vocabulary() {
+        let sc = parse_trace(GOOD).unwrap();
+        assert_eq!(sc.name, TRACE_SCENARIO);
+        assert_eq!((sc.duration_ms, sc.window_ms), (400, 50));
+        assert_eq!(sc.events.len(), 7);
+        assert!(sc.has_training());
+        assert_eq!(
+            sc.events[1].kind,
+            EventKind::Arrive { rate_hz: 15.5, quota_pct: 40, workload: WorkloadKind::Train }
+        );
+        assert_eq!(sc.events[3].kind, EventKind::Request);
+        // Tenant 1 departs and re-arrives: a fresh incarnation.
+        assert_eq!(sc.events[6].at_ms, 300);
+    }
+
+    #[test]
+    fn round_trips_through_render() {
+        let sc = parse_trace(GOOD).unwrap();
+        let again = parse_trace(&render_trace(&sc)).unwrap();
+        assert_eq!(sc, again);
+    }
+
+    #[test]
+    fn rejects_unknown_event_kind_naming_the_line() {
+        let bad = "duration-ms 400\nwindow-ms 50\nat 0 arrive 1 infer rate=40 quota=25\nat 10 evict 1\n";
+        let err = parse_trace(bad).unwrap_err().to_string();
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("unknown event kind `evict`"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_monotonic_timestamps_naming_the_line() {
+        let bad =
+            "duration-ms 400\nwindow-ms 50\nat 100 arrive 1 infer rate=40 quota=25\nat 50 depart 1\n";
+        let err = parse_trace(bad).unwrap_err().to_string();
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("goes backwards"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_tenants_naming_the_line() {
+        for (kind, suffix) in [
+            ("depart", ""),
+            ("burst", " factor=2 until-ms=100"),
+            ("fail", ""),
+            ("request", ""),
+        ] {
+            let bad = format!("duration-ms 400\nwindow-ms 50\nat 0 {kind} 9{suffix}\n");
+            let err = parse_trace(&bad).unwrap_err().to_string();
+            assert!(err.contains("line 3"), "{kind}: {err}");
+            assert!(err.contains("unknown tenant 9"), "{kind}: {err}");
+        }
+        // A departed tenant is unknown again.
+        let bad = "duration-ms 400\nwindow-ms 50\nat 0 arrive 1 infer rate=40 quota=25\nat 10 depart 1\nat 20 fail 1\n";
+        let err = parse_trace(bad).unwrap_err().to_string();
+        assert!(err.contains("line 5") && err.contains("unknown tenant 1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_headers_and_geometry() {
+        let err = parse_trace("").unwrap_err().to_string();
+        assert!(err.contains("`duration-ms` header"), "{err}");
+        let err = parse_trace("duration-ms 400\n").unwrap_err().to_string();
+        assert!(err.contains("`window-ms` header"), "{err}");
+        let err = parse_trace("window-ms 50\nduration-ms 400\n").unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("duration-ms"), "{err}");
+        let err = parse_trace("duration-ms 400\nwindow-ms 0\n").unwrap_err().to_string();
+        assert!(err.contains("window-ms 0 out of range"), "{err}");
+        let err = parse_trace("duration-ms 100\nwindow-ms 200\n").unwrap_err().to_string();
+        assert!(err.contains("window-ms 200 out of range"), "{err}");
+        let err = parse_trace("duration-ms 0\nwindow-ms 1\n").unwrap_err().to_string();
+        assert!(err.contains("duration-ms 0 out of range"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_fields_naming_line_and_field() {
+        let cases: [(&str, &str); 7] = [
+            ("at 0 arrive 1 batch rate=40 quota=25", "unknown workload `batch`"),
+            ("at 0 arrive 1 infer rate=0 quota=25", "rate `0`"),
+            ("at 0 arrive 1 infer rate=40 quota=0", "quota 0 out of range"),
+            ("at 0 arrive 1 infer rate=40 quota=250", "quota 250 out of range"),
+            ("at 0 arrive 1 infer quota=25 rate=40", "expected `rate=<value>`"),
+            ("at 500 arrive 1 infer rate=40 quota=25", "outside the 400 ms horizon"),
+            ("at 0 arrive 1 infer rate=40 quota=25 junk", "trailing token `junk`"),
+        ];
+        for (line, needle) in cases {
+            let bad = format!("duration-ms 400\nwindow-ms 50\n{line}\n");
+            let err = parse_trace(&bad).unwrap_err().to_string();
+            assert!(err.contains("line 3"), "{line}: {err}");
+            assert!(err.contains(needle), "{line}: {err}");
+        }
+        let bad = "duration-ms 400\nwindow-ms 50\nat 0 arrive 1 infer rate=40 quota=25\nat 10 burst 1 factor=-1 until-ms=100\n";
+        let err = parse_trace(bad).unwrap_err().to_string();
+        assert!(err.contains("line 4") && err.contains("factor `-1`"), "{err}");
+    }
+}

@@ -171,12 +171,15 @@ pub const DYN_SERIES: [Descriptor; 6] = [
 /// Per-scenario summary statistics the dynsim engine reduces each
 /// timeline to — the regress-compatible surface (`gvbench dynamics
 /// --summary-out`) the regression engine gates like sweep cells.
-pub const DYN_SUMMARY: [Descriptor; 5] = [
+pub const DYN_SUMMARY: [Descriptor; 8] = [
     Descriptor { id: "DYN-P99-STEADY", name: "Steady-State P99 Latency", description: "Median across windows of the per-window P99 latency", unit: "ms", category: C::Llm, direction: D::LowerBetter },
     Descriptor { id: "DYN-WORST-WIN", name: "Worst-Window Degradation", description: "Worst window P99 vs the steady-state P99", unit: "%", category: C::Scheduling, direction: D::LowerBetter },
     Descriptor { id: "DYN-THR-MEAN", name: "Mean Throughput", description: "Completed requests per second over the whole timeline", unit: "req/s", category: C::Llm, direction: D::HigherBetter },
     Descriptor { id: "DYN-RECOVERY", name: "Fault Recovery Time", description: "Injected fault to first successful request of the faulted tenant (0 = no fault; the full horizon = never recovered)", unit: "ms", category: C::ErrorRecovery, direction: D::LowerBetter },
-    Descriptor { id: "DYN-EVENTS", name: "Occurrences Processed", description: "Event-core occurrences replayed: window boundaries + scenario events + serviced request arrivals (virtual-time-deterministic, so gateable)", unit: "count", category: C::Scheduling, direction: D::HigherBetter },
+    Descriptor { id: "DYN-EVENTS", name: "Occurrences Processed", description: "Event-core occurrences replayed: window boundaries + scenario events + serviced work arrivals (virtual-time-deterministic, so gateable)", unit: "count", category: C::Scheduling, direction: D::HigherBetter },
+    Descriptor { id: "DYN-TRAIN-STEP-P99", name: "Training Step P99 Latency", description: "Tail optimizer-step latency across all training tenants (emitted only for timelines with training tenants; 0 if no step completed)", unit: "ms", category: C::Llm, direction: D::LowerBetter },
+    Descriptor { id: "DYN-ALLREDUCE", name: "Mean Allreduce Latency", description: "Mean gradient-allreduce latency over the node interconnect (emitted only for timelines with training tenants; 0 if none ran)", unit: "ms", category: C::Nccl, direction: D::LowerBetter },
+    Descriptor { id: "DYN-MIX-INTERFERENCE", name: "Train/Infer Interference", description: "Mean inference latency in train-active windows vs train-idle windows (emitted only for timelines with training tenants; 0 if either regime is empty)", unit: "%", category: C::Isolation, direction: D::LowerBetter },
 ];
 
 /// Per-cell summary statistics the cluster placement simulator reduces

@@ -363,7 +363,7 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
                 let scenario = crate::dynsim::scenario::canonical(name).with_context(|| {
                     format!(
                         "row {lineno}: unknown scenario `{name}` (expected: steady, churn, \
-                         spike, failover)"
+                         spike, failover, train-steady, mixed-churn)"
                     )
                 })?;
                 Some(ClusterCoord { policy, nodes, scenario })
@@ -373,10 +373,14 @@ pub fn parse_baseline_csv(text: &str, default_system: &str) -> Result<Baseline> 
         let dyn_cell = match schema {
             BaselineSchema::Dynamics => {
                 let name = get_field(&fields, scenario_col.expect("dynamics schema"), lineno, "scenario")?;
-                let scenario = crate::dynsim::scenario::canonical(name).with_context(|| {
+                // `canonical_timeline` additionally admits the reserved
+                // `trace` key: a summary recorded from `--trace FILE` is
+                // re-runnable as long as the regress caller supplies the
+                // same trace.
+                let scenario = crate::dynsim::scenario::canonical_timeline(name).with_context(|| {
                     format!(
                         "row {lineno}: unknown scenario `{name}` (expected: steady, churn, \
-                         spike, failover)"
+                         spike, failover, train-steady, mixed-churn, trace)"
                     )
                 })?;
                 let duration_ms: u64 =

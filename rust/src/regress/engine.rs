@@ -24,7 +24,7 @@ use crate::cluster;
 use crate::coordinator::executor::{self, Backend, ExecutionStats, Observer, Task, TaskDone};
 use crate::coordinator::sweep;
 use crate::metrics::registry;
-use crate::dynsim::{self, ScenarioSpec};
+use crate::dynsim::{self, ScenarioSpec, TRACE_SCENARIO};
 use crate::metrics::{taxonomy, Direction, RunConfig};
 use crate::util::rng::{cluster_seed, dynamics_seed, task_seed};
 
@@ -202,11 +202,28 @@ pub fn run_regression_on(
     threshold_percent: f64,
     observer: Option<Observer>,
 ) -> Result<RegressOutcome> {
+    run_regression_with_trace(exec, cfg, baseline, threshold_percent, observer, None)
+}
+
+/// [`run_regression_on`] with an optional external trace timeline: rows
+/// whose scenario coordinate is [`TRACE_SCENARIO`] replay `trace`
+/// instead of a named preset (presets are reconstructible from their
+/// name alone; a trace row needs the caller to re-supply the file it
+/// was produced from, `gvbench regress --trace FILE`). Non-dynamics
+/// baselines ignore `trace`.
+pub fn run_regression_with_trace(
+    exec: &Backend<'_>,
+    cfg: &RunConfig,
+    baseline: &Baseline,
+    threshold_percent: f64,
+    observer: Option<Observer>,
+    trace: Option<&ScenarioSpec>,
+) -> Result<RegressOutcome> {
     if baseline.schema == BaselineSchema::Dynamics {
         // Dynamics summaries are not registry metrics: each distinct
         // (system, scenario, geometry) coordinate replays its whole
         // timeline once, then every row compares against that run.
-        return run_dynamics_regression(exec, cfg, baseline, threshold_percent, observer);
+        return run_dynamics_regression(exec, cfg, baseline, threshold_percent, observer, trace);
     }
     if baseline.schema == BaselineSchema::Cluster {
         // Likewise for cluster summaries: one fleet replay per distinct
@@ -336,6 +353,7 @@ fn run_dynamics_regression(
     baseline: &Baseline,
     threshold_percent: f64,
     observer: Option<Observer>,
+    trace: Option<&ScenarioSpec>,
 ) -> Result<RegressOutcome> {
     // Distinct (system, coordinate) timelines, first-appearance order.
     let mut groups: Vec<(String, DynCoord)> = Vec::new();
@@ -362,6 +380,30 @@ fn run_dynamics_regression(
                 row.id
             ),
         };
+        // Trace rows are only re-runnable with the producing trace in
+        // hand; validate before spawning so the error names the row
+        // instead of surfacing as a generic empty-replay failure.
+        if coord.scenario == TRACE_SCENARIO {
+            let tr = match trace {
+                Some(tr) => tr,
+                None => bail!(
+                    "row {}: scenario `{}` needs the producing trace file re-supplied \
+                     (gvbench regress --trace FILE)",
+                    row.line,
+                    TRACE_SCENARIO
+                ),
+            };
+            if tr.duration_ms != coord.duration_ms || tr.window_ms != coord.window_ms {
+                bail!(
+                    "row {}: trace geometry {}ms/{}ms does not match the baseline row's {}ms/{}ms",
+                    row.line,
+                    tr.duration_ms,
+                    tr.window_ms,
+                    coord.duration_ms,
+                    coord.window_ms
+                );
+            }
+        }
         let key = (row.system.clone(), coord);
         if !groups.contains(&key) {
             groups.push(key);
@@ -378,10 +420,14 @@ fn run_dynamics_regression(
     let run = {
         let groups = Arc::clone(&groups);
         let base_cfg = cfg.clone();
+        let trace_spec = trace.cloned();
         move |i: usize, task: &Task| {
             let (system, coord) = &groups[i];
-            let spec =
-                ScenarioSpec::preset(coord.scenario, coord.duration_ms, coord.window_ms)?;
+            let spec = if coord.scenario == TRACE_SCENARIO {
+                trace_spec.clone()?
+            } else {
+                ScenarioSpec::preset(coord.scenario, coord.duration_ms, coord.window_ms)?
+            };
             let mut run_cfg = base_cfg.clone();
             run_cfg.system = system.clone();
             run_cfg.seed = task_seed(
@@ -717,6 +763,7 @@ mod tests {
             scenarios: vec!["steady"],
             duration_ms: 200,
             window_ms: 50,
+            trace: None,
         };
         let surface = run_dynamics(&cfg, &spec, 1);
         let csv = render_summary_csv(&surface);
@@ -740,6 +787,62 @@ mod tests {
         assert_eq!(regs.len(), 1);
         assert_eq!(regs[0].id, "DYN-THR-MEAN");
         assert_eq!(regs[0].cell_label(), "steady@200ms/50ms");
+    }
+
+    #[test]
+    fn trace_rows_replay_with_the_trace_and_error_without() {
+        use crate::dynsim::{parse_trace, run_dynamics, DynSpec};
+        use crate::report::dynamics::render_summary_csv;
+
+        let cfg = RunConfig::quick("native");
+        let tr = parse_trace(
+            "duration-ms 250\nwindow-ms 50\n\
+             at 0 arrive 1 infer rate=30 quota=40\n\
+             at 100 arrive 2 train rate=10 quota=40\n",
+        )
+        .unwrap();
+        let spec = DynSpec {
+            systems: vec!["native".into()],
+            scenarios: vec![TRACE_SCENARIO],
+            duration_ms: tr.duration_ms,
+            window_ms: tr.window_ms,
+            trace: Some(tr.clone()),
+        };
+        let surface = run_dynamics(&cfg, &spec, 1);
+        let csv = render_summary_csv(&surface);
+        let baseline = crate::regress::parse_baseline_csv(&csv, "native").unwrap();
+        assert_eq!(baseline.schema, BaselineSchema::Dynamics);
+        // With the producing trace re-supplied, the baseline compares
+        // clean at a different job count (training trace: the 5 classic
+        // summaries plus the 3 training statistics).
+        let out = run_regression_with_trace(
+            &Backend::Scoped(4),
+            &cfg,
+            &baseline,
+            0.0001,
+            None,
+            Some(&tr),
+        )
+        .unwrap();
+        assert_eq!(out.checked(), 8);
+        assert!(out.passed(), "{:?}", out.regressions());
+        // Without the trace the failure names the row and the flag to
+        // re-supply it, before any timeline replays.
+        let e = run_regression(&cfg, &baseline, 5.0).unwrap_err();
+        assert!(format!("{e:#}").contains("--trace"), "{e:#}");
+        // A geometry-mismatched trace is likewise rejected up front.
+        let mut wrong = tr.clone();
+        wrong.window_ms = 25;
+        let e = run_regression_with_trace(
+            &Backend::Scoped(1),
+            &cfg,
+            &baseline,
+            5.0,
+            None,
+            Some(&wrong),
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("does not match"), "{e:#}");
     }
 
     #[test]

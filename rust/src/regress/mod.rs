@@ -30,7 +30,10 @@
 //!   [`crate::metrics::taxonomy::DYN_SUMMARY`] ids); each distinct
 //!   timeline replays once through [`crate::dynsim`] with the producing
 //!   run's exact `task_seed(dynamics_seed(..), system, scenario)`
-//!   derivation, then every summary row compares direction-aware, and
+//!   derivation, then every summary row compares direction-aware —
+//!   `trace`-scenario rows replay the external trace file re-supplied
+//!   via `gvbench regress --trace FILE`
+//!   ([`engine::run_regression_with_trace`]), and
 //! - **cluster summaries** — the fleet-placement surface `gvbench
 //!   cluster --summary-out` writes (rows keyed by `(system, policy,
 //!   nodes, scenario, id)` with
@@ -70,5 +73,8 @@ pub mod report;
 pub use baseline::{
     parse_baseline_csv, Baseline, BaselineRow, BaselineSchema, CellCoord, ClusterCoord, DynCoord,
 };
-pub use engine::{run_regression, run_regression_on, worse_percent, CellDelta, RegressOutcome};
+pub use engine::{
+    run_regression, run_regression_on, run_regression_with_trace, worse_percent, CellDelta,
+    RegressOutcome,
+};
 pub use report::{render_json, render_markdown};

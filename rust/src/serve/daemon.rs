@@ -502,13 +502,15 @@ fn execute_job(args: &Args, pool: &WorkerPool, observer: Observer) -> Result<Job
         }
         Command::Regress => {
             let (path, baseline) = commands::load_baseline(args)?;
+            let trace = commands::load_trace_spec(args)?;
             let cfg = commands::build_config(args)?;
-            let outcome = crate::regress::run_regression_on(
+            let outcome = crate::regress::run_regression_with_trace(
                 &exec,
                 &cfg,
                 &baseline,
                 args.threshold,
                 Some(observer),
+                trace.as_ref(),
             )?;
             let report = crate::regress::render_json(&outcome, &path);
             let passed = outcome.passed();

@@ -309,6 +309,17 @@ mod tests {
     fn job_argv_validation_allowlists_commands_and_blocks_file_flags() {
         assert_eq!(validate_job_argv(&s(&["run", "--quick"])).unwrap(), "run");
         assert_eq!(validate_job_argv(&s(&["regress", "--baseline", "b.csv"])).unwrap(), "regress");
+        // Daemon-host file *reads* stay allowed, like --baseline: a trace
+        // job replays a file the daemon can see.
+        assert_eq!(
+            validate_job_argv(&s(&["dynamics", "--trace", "t.txt"])).unwrap(),
+            "dynamics"
+        );
+        assert_eq!(
+            validate_job_argv(&s(&["regress", "--baseline", "b.csv", "--trace", "t.txt"]))
+                .unwrap(),
+            "regress"
+        );
         let e = validate_job_argv(&s(&[])).unwrap_err().to_string();
         assert!(e.contains("empty"), "{e}");
         let e = validate_job_argv(&s(&["list"])).unwrap_err().to_string();

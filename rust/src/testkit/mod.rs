@@ -8,10 +8,12 @@
 //!   candidate generator (see [`shrink`]) and greedily walks the failing
 //!   input down before panicking.
 //! - [`shrink`] — reusable candidate generators: sub-sequence drops for
-//!   vectors, halvings for counters, axis drops for cluster grid specs.
+//!   vectors, halvings for counters, axis drops for cluster grid specs,
+//!   event-prefix truncation for trace timelines.
 //! - [`gens`] — value generators: scalar helpers plus the cluster-domain
 //!   generators (tenant demands, fleet churn timelines, whole
-//!   [`crate::cluster::ClusterSpec`] grids).
+//!   [`crate::cluster::ClusterSpec`] grids) and the dynsim timeline
+//!   generators (external traces, training-heavy scenarios).
 //!
 //! Used by `rust/tests/prop_*.rs` to check coordinator/substrate/fleet
 //! invariants across randomized inputs.
@@ -155,6 +157,7 @@ pub fn shrink_vec<T: Clone, P: Fn(&[T]) -> bool>(input: &[T], prop: &P) -> Vec<T
 /// strictly simpler variants of a failing input, tried in order.
 pub mod shrink {
     use crate::cluster::ClusterSpec;
+    use crate::dynsim::ScenarioSpec;
 
     /// Sub-sequence candidates for a vector: the back half, the front
     /// half, then every single-element drop.
@@ -233,11 +236,40 @@ pub mod shrink {
         }
         out
     }
+
+    /// Trace-timeline candidates: event-stream *prefixes* (half, then
+    /// drop-last). Every prefix of a valid trace stays valid — the
+    /// timestamp monotonicity and active-tenant rules only constrain a
+    /// line against *earlier* lines — so the shrink walk never leaves
+    /// the parseable set. Paired with [`super::gens::trace`].
+    pub fn trace_events(spec: &ScenarioSpec) -> Vec<ScenarioSpec> {
+        let n = spec.events.len();
+        let mut keeps: Vec<usize> = Vec::new();
+        if n > 1 {
+            keeps.push(n / 2);
+        }
+        if n > 0 {
+            keeps.push(n - 1);
+        }
+        keeps.dedup();
+        keeps
+            .into_iter()
+            .map(|keep| {
+                let mut c = spec.clone();
+                c.events.truncate(keep);
+                c
+            })
+            .collect()
+    }
 }
 
 /// Common generators.
 pub mod gens {
     use crate::cluster::{self, ClusterSpec, Demand, FleetEvent};
+    use crate::dynsim::scenario::{
+        EventKind, ScenarioSpec, TenantEvent, WorkloadKind, TRACE_SCENARIO,
+    };
+    use crate::simgpu::TenantId;
     use crate::util::Rng;
     use crate::virt::ALL_SYSTEMS;
 
@@ -301,6 +333,108 @@ pub mod gens {
             scenarios: subset(rng, &crate::dynsim::PRESETS),
             arrivals: rng.range(1, max_arrivals.max(1) as usize + 1) as u32,
         }
+    }
+
+    /// A random valid external-trace timeline under the reserved
+    /// [`TRACE_SCENARIO`] key: a small replayable geometry (2–5 windows
+    /// of 10–50 ms), non-decreasing timestamps inside the horizon, a
+    /// consistent tenant population (depart/burst/fail/request only
+    /// name active tenants; departed ids may re-arrive), and mixed
+    /// infer/train workloads — i.e. exactly the set
+    /// [`crate::dynsim::parse_trace`] accepts. Shrinks through
+    /// [`super::shrink::trace_events`].
+    pub fn trace(rng: &mut Rng, max_events: usize) -> ScenarioSpec {
+        let window_ms = *rng.choose(&[10u64, 20, 25, 50]);
+        let duration_ms = window_ms * rng.range(2, 6) as u64;
+        let n = rng.range(1, max_events.max(1) + 1);
+        let mut events: Vec<TenantEvent> = Vec::with_capacity(n);
+        let mut active: Vec<TenantId> = Vec::new();
+        let mut departed: Vec<TenantId> = Vec::new();
+        let mut next_tenant: TenantId = 1;
+        let mut t = 0u64;
+        for _ in 0..n {
+            if rng.chance(0.6) {
+                t = rng.range(t as usize, duration_ms as usize) as u64;
+            }
+            if active.is_empty() || rng.chance(0.4) {
+                let tenant = if !departed.is_empty() && rng.chance(0.3) {
+                    departed.swap_remove(rng.range(0, departed.len()))
+                } else {
+                    let id = next_tenant;
+                    next_tenant += 1;
+                    id
+                };
+                let workload =
+                    if rng.chance(0.5) { WorkloadKind::Train } else { WorkloadKind::Infer };
+                events.push(TenantEvent {
+                    at_ms: t,
+                    tenant,
+                    kind: EventKind::Arrive {
+                        rate_hz: rng.range(5, 61) as f64,
+                        quota_pct: rng.range(10, 51) as u32,
+                        workload,
+                    },
+                });
+                active.push(tenant);
+            } else {
+                let i = rng.range(0, active.len());
+                let tenant = active[i];
+                let kind = match rng.range(0, 4) {
+                    0 => {
+                        active.swap_remove(i);
+                        departed.push(tenant);
+                        EventKind::Depart
+                    }
+                    1 => EventKind::Burst {
+                        factor: rng.range(2, 5) as f64,
+                        until_ms: t + window_ms,
+                    },
+                    2 => EventKind::Fail,
+                    _ => EventKind::Request,
+                };
+                events.push(TenantEvent { at_ms: t, tenant, kind });
+            }
+        }
+        ScenarioSpec { name: TRACE_SCENARIO, duration_ms, window_ms, events }
+    }
+
+    /// A random training-heavy timeline: 1–3 training tenants plus 0–2
+    /// inference co-tenants, all arriving in the first half of a small
+    /// horizon, sorted into timeline order. Always `has_training()`,
+    /// and always renderable/parseable as a trace.
+    pub fn training_spec(rng: &mut Rng) -> ScenarioSpec {
+        let window_ms = *rng.choose(&[25u64, 50]);
+        let duration_ms = window_ms * rng.range(3, 7) as u64;
+        let mut events: Vec<TenantEvent> = Vec::new();
+        let mut tenant: TenantId = 1;
+        let trains = rng.range(1, 4);
+        let infers = rng.range(0, 3);
+        for _ in 0..trains {
+            events.push(TenantEvent {
+                at_ms: rng.range(0, (duration_ms / 2) as usize) as u64,
+                tenant,
+                kind: EventKind::Arrive {
+                    rate_hz: rng.range(5, 31) as f64,
+                    quota_pct: rng.range(20, 51) as u32,
+                    workload: WorkloadKind::Train,
+                },
+            });
+            tenant += 1;
+        }
+        for _ in 0..infers {
+            events.push(TenantEvent {
+                at_ms: rng.range(0, (duration_ms / 2) as usize) as u64,
+                tenant,
+                kind: EventKind::Arrive {
+                    rate_hz: rng.range(20, 61) as f64,
+                    quota_pct: rng.range(10, 31) as u32,
+                    workload: WorkloadKind::Infer,
+                },
+            });
+            tenant += 1;
+        }
+        events.sort_by_key(|e| (e.at_ms, e.tenant));
+        ScenarioSpec { name: TRACE_SCENARIO, duration_ms, window_ms, events }
     }
 }
 
@@ -424,6 +558,39 @@ mod tests {
                     FleetEvent::Fail { .. } => {}
                 }
             }
+        }
+    }
+
+    #[test]
+    fn trace_gen_emits_parseable_traces_and_prefix_shrinks_stay_valid() {
+        use crate::dynsim::{parse_trace, render_trace, TRACE_SCENARIO};
+        let mut rng = Rng::new(13);
+        for _ in 0..50 {
+            let spec = gens::trace(&mut rng, 12);
+            assert_eq!(spec.name, TRACE_SCENARIO);
+            assert!(!spec.events.is_empty());
+            assert!(spec.events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+            // Generated specs live exactly in the parser's accepted set…
+            let parsed = parse_trace(&render_trace(&spec)).unwrap();
+            assert_eq!(parsed, spec);
+            // …and so does every prefix candidate the shrinker proposes.
+            for c in shrink::trace_events(&spec) {
+                assert!(c.events.len() < spec.events.len());
+                assert_eq!(parse_trace(&render_trace(&c)).unwrap(), c);
+            }
+        }
+    }
+
+    #[test]
+    fn training_spec_gen_always_carries_training() {
+        use crate::dynsim::{parse_trace, render_trace};
+        let mut rng = Rng::new(14);
+        for _ in 0..50 {
+            let spec = gens::training_spec(&mut rng);
+            assert!(spec.has_training());
+            assert!(spec.windows() >= 3);
+            assert!(spec.events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+            assert_eq!(parse_trace(&render_trace(&spec)).unwrap(), spec);
         }
     }
 

@@ -22,7 +22,37 @@ fn spec() -> DynSpec {
         scenarios: vec!["churn", "failover"],
         duration_ms: 300,
         window_ms: 50,
+        trace: None,
     }
+}
+
+/// The training-preset grid: same geometry as `spec()`, but over the two
+/// training-bearing presets. Kept out of `spec()` so the frozen
+/// reference-engine equivalence (which predates training) still runs on
+/// exactly the grid it was blessed against.
+fn train_spec() -> DynSpec {
+    DynSpec {
+        systems: vec!["native".into(), "hami".into()],
+        scenarios: vec!["train-steady", "mixed-churn"],
+        duration_ms: 300,
+        window_ms: 50,
+        trace: None,
+    }
+}
+
+/// The committed CI fixture as a replayable grid: the trace's headers
+/// carry the geometry, exactly as `gvbench dynamics --trace` builds it.
+fn trace_spec() -> (DynSpec, ScenarioSpec) {
+    let tr = gvb::dynsim::parse_trace(include_str!("../../ci/trace_mixed.txt"))
+        .expect("ci/trace_mixed.txt parses");
+    let grid = DynSpec {
+        systems: vec!["native".into(), "hami".into()],
+        scenarios: vec![gvb::dynsim::TRACE_SCENARIO],
+        duration_ms: tr.duration_ms,
+        window_ms: tr.window_ms,
+        trace: Some(tr.clone()),
+    };
+    (grid, tr)
 }
 
 fn base() -> RunConfig {
@@ -259,4 +289,117 @@ fn summary_round_trips_through_the_regression_engine() {
         assert!(out.passed(), "jobs={jobs}: {:?}", out.regressions());
         assert_eq!(out.schema, gvb::regress::BaselineSchema::Dynamics);
     }
+}
+
+#[test]
+fn training_surface_bit_identical_at_any_job_count() {
+    // The tentpole determinism claim extended to the training presets:
+    // the gradient-allreduce path, step pacing and mixed train+infer
+    // interference all ride the same per-task seed derivation, so the
+    // surface is byte-identical at every job count.
+    let base = base();
+    let serial = run_dynamics(&base, &train_spec(), 1);
+    let sharded = run_dynamics(&base, &train_spec(), 8);
+    assert_eq!(serial.runs.len(), 4);
+    assert_surfaces_bit_identical(&serial, &sharded);
+    assert_eq!(render_csv(&serial), render_csv(&sharded));
+    assert_eq!(render_summary_csv(&serial), render_summary_csv(&sharded));
+    for run in &serial.runs {
+        assert!(run.train_steps > 0, "{}/{}: no training steps", run.system, run.scenario);
+        // Training timelines carry the three training statistics on top
+        // of the five inference ones.
+        assert_eq!(run.summary.len(), 8, "{}/{}", run.system, run.scenario);
+        assert!(
+            run.summary_value("DYN-TRAIN-STEP-P99").is_some_and(|v| v > 0.0),
+            "{}/{}: missing DYN-TRAIN-STEP-P99",
+            run.system,
+            run.scenario
+        );
+        for id in ["DYN-ALLREDUCE", "DYN-MIX-INTERFERENCE"] {
+            assert!(
+                run.summary_value(id).is_some(),
+                "{}/{}: missing {id}",
+                run.system,
+                run.scenario
+            );
+        }
+        // train-steady's 20 Hz streams cross the 4-step accumulation
+        // boundary inside the 300 ms horizon, so an allreduce must have
+        // actually happened there.
+        if run.scenario == "train-steady" {
+            assert!(
+                run.summary_value("DYN-ALLREDUCE").is_some_and(|v| v > 0.0),
+                "{}/train-steady: no allreduce landed",
+                run.system
+            );
+        }
+    }
+}
+
+#[test]
+fn training_surfaces_match_the_committed_golden() {
+    // Byte-level pin of the training-grid surfaces, checked at both job
+    // counts like the inference goldens above.
+    for jobs in [1usize, 8] {
+        let surface = run_dynamics(&base(), &train_spec(), jobs);
+        check_committed_golden("dynamics_train_series.csv", &render_csv(&surface));
+        check_committed_golden("dynamics_train_summary.csv", &render_summary_csv(&surface));
+    }
+}
+
+#[test]
+fn trace_replay_bit_identical_at_any_job_count() {
+    // Deterministic external replay: the committed CI fixture replays to
+    // a byte-identical surface at --jobs 1 and --jobs 8, and the mixed
+    // tenant population exercises both the training and inference paths.
+    let base = base();
+    let (grid, _) = trace_spec();
+    let serial = run_dynamics(&base, &grid, 1);
+    let sharded = run_dynamics(&base, &grid, 8);
+    // 2 systems × the single trace timeline.
+    assert_eq!(serial.runs.len(), 2);
+    assert_surfaces_bit_identical(&serial, &sharded);
+    assert_eq!(render_csv(&serial), render_csv(&sharded));
+    assert_eq!(render_summary_csv(&serial), render_summary_csv(&sharded));
+    for run in &serial.runs {
+        assert_eq!(run.scenario, gvb::dynsim::TRACE_SCENARIO);
+        assert_eq!((run.duration_ms, run.window_ms), (400, 50));
+        assert!(run.completed > 0, "{}: no inference requests", run.system);
+        assert!(run.train_steps > 0, "{}: no training steps", run.system);
+        assert!(run.summary_value("DYN-TRAIN-STEP-P99").is_some(), "{}", run.system);
+    }
+}
+
+#[test]
+fn trace_summary_round_trips_through_the_regression_engine() {
+    use gvb::coordinator::executor::Backend;
+
+    let base = base();
+    let (grid, tr) = trace_spec();
+    let surface = run_dynamics(&base, &grid, 4);
+    let summary = render_summary_csv(&surface);
+    let baseline = gvb::regress::parse_baseline_csv(&summary, "native").unwrap();
+    assert_eq!(baseline.schema, gvb::regress::BaselineSchema::Dynamics);
+    // 2 timelines × 8 summary statistics (training rows included).
+    assert_eq!(baseline.rows.len(), 16);
+    // Re-supplying the producing trace replays clean at both job counts.
+    for jobs in [1usize, 8] {
+        let mut cfg = base.clone();
+        cfg.jobs = jobs;
+        let out = gvb::regress::run_regression_with_trace(
+            &Backend::Scoped(jobs),
+            &cfg,
+            &baseline,
+            0.0001,
+            None,
+            Some(&tr),
+        )
+        .unwrap();
+        assert_eq!(out.checked(), 16);
+        assert!(out.passed(), "jobs={jobs}: {:?}", out.regressions());
+    }
+    // Without the trace the rows are unreplayable, and the error says
+    // how to fix it.
+    let err = gvb::regress::run_regression(&base, &baseline, 0.0001).unwrap_err();
+    assert!(format!("{err:#}").contains("--trace"), "{err:#}");
 }

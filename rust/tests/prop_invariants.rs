@@ -224,10 +224,17 @@ fn prop_sweep_cell_seeds_collision_free() {
 /// and never collide with the sweep-layer derivations for the same base
 /// seed (the 0xFD separator keeps the layers apart). A collision would
 /// make two timelines draw identical request/jitter streams and silently
-/// correlate their series.
+/// correlate their series. The scenario axis covers all six presets
+/// *plus* the `trace` replay coordinate, so an external-trace timeline
+/// can never share a jitter stream with a preset timeline of matching
+/// geometry.
 #[test]
 fn prop_dynamics_seeds_collision_free_and_layer_distinct() {
-    let scenarios = gvb::dynsim::PRESETS;
+    let scenarios: Vec<&str> = gvb::dynsim::PRESETS
+        .iter()
+        .copied()
+        .chain([gvb::dynsim::TRACE_SCENARIO])
+        .collect();
     let durations = [250u64, 1000, 2000];
     let windows = [50u64, 100, 250];
     let expanded = ALL_SYSTEMS.len() * scenarios.len() * durations.len() * windows.len();
@@ -259,6 +266,39 @@ fn prop_dynamics_seeds_collision_free_and_layer_distinct() {
             let sweep = task_seed(scenario_seed(base, 4, 50), "hami", "OH-001");
             let topo = task_seed(topology_seed(scenario_seed(base, 4, 50), 4, "pcie"), "hami", "OH-001");
             dynv != sweep && dynv != topo
+        },
+    );
+}
+
+/// Trace round-trip invariant: any generated trace timeline survives
+/// `render_trace` → `parse_trace` exactly (structural spec equality),
+/// and replaying the parsed spec is bit-identical to replaying the
+/// original — the textual trace format loses nothing the engine can
+/// observe. Failures shrink by event-prefix truncation, which never
+/// leaves the parseable set.
+#[test]
+fn prop_trace_render_parse_replay_identity() {
+    check_with_shrink(
+        "trace-render-parse-replay",
+        0x712ACE,
+        24,
+        |rng: &mut Rng| gens::trace(rng, 12),
+        shrink::trace_events,
+        |spec| {
+            let parsed = match gvb::dynsim::parse_trace(&gvb::dynsim::render_trace(spec)) {
+                Ok(p) => p,
+                Err(_) => return false,
+            };
+            if parsed != *spec {
+                return false;
+            }
+            let mut cfg = RunConfig::quick("hami");
+            cfg.seed = 0xBEEF ^ spec.events.len() as u64;
+            let a = gvb::dynsim::engine::run_scenario(&cfg, spec);
+            let b = gvb::dynsim::engine::run_scenario(&cfg, &parsed);
+            // `Debug` for f64 prints the shortest round-trip form, so
+            // equal strings here means bit-equal runs.
+            format!("{a:?}") == format!("{b:?}")
         },
     );
 }
