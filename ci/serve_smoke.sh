@@ -14,11 +14,16 @@
 #   4. Asserts the streamed NDJSON lifecycle is well-formed (queued →
 #      scheduled → … → report → finished, no failed events) and carries
 #      the idle-time accounting fields.
-#   5. Drains the daemon with `gvbench jobs --shutdown` and verifies a
+#   5. Queries the daemon's telemetry (`gvbench jobs --stats` /
+#      `--stats-format prometheus`): the counters must match the
+#      submitted batch and the Prometheus render must be well-formed
+#      text exposition format.
+#   6. Drains the daemon with `gvbench jobs --shutdown` and verifies a
 #      clean exit: status 0, socket file removed, no orphaned process.
 #
-# The full event trace is left in serve_trace.log (plus jobs_list.txt
-# and serve_regress_report.json) for the `serve-trace` CI artifact.
+# The full event trace is left in serve_trace.log (plus jobs_list.txt,
+# stats_table.txt, stats_prom.txt and serve_regress_report.json) for the
+# `serve-trace` CI artifact.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -125,6 +130,33 @@ $GVB jobs --socket "$sock" | tee jobs_list.txt
 listed=$(grep -c 'finished' jobs_list.txt || true)
 [ "$listed" -eq 6 ] || fail "jobs listing shows $listed finished jobs, expected 6"
 
+echo "== daemon telemetry (stats op) =="
+$GVB jobs --socket "$sock" --stats | tee stats_table.txt
+grep -qE '^jobs finished +6$' stats_table.txt ||
+  fail "stats table does not show 6 finished jobs"
+grep -qE '^jobs failed +0$' stats_table.txt ||
+  fail "stats table shows failed jobs"
+grep -qE '^jobs submitted +6$' stats_table.txt ||
+  fail "stats table does not show 6 submitted jobs"
+$GVB jobs --socket "$sock" --stats-format prometheus | tee stats_prom.txt
+# Exposition-format shape: counters present with the expected values,
+# histogram buckets cumulative and terminated by +Inf == _count.
+grep -qx 'gvbench_jobs_submitted_total 6' stats_prom.txt ||
+  fail "prometheus output lacks gvbench_jobs_submitted_total 6"
+grep -qx 'gvbench_jobs{state="finished"} 6' stats_prom.txt ||
+  fail "prometheus output lacks 6 finished jobs"
+grep -qx 'gvbench_queue_wait_ms_count 6' stats_prom.txt ||
+  fail "prometheus output lacks 6 queue-wait samples"
+grep -qx 'gvbench_queue_wait_ms_bucket{le="+Inf"} 6' stats_prom.txt ||
+  fail "queue-wait buckets do not end at +Inf == _count"
+grep -q '# TYPE gvbench_queue_wait_ms histogram' stats_prom.txt ||
+  fail "prometheus output lacks histogram TYPE lines"
+# Every non-comment line must be `name[{labels}] value` with a numeric value.
+if grep -vE '^(#|[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? -?[0-9.eE+-]+$)' stats_prom.txt |
+  grep -q .; then
+  fail "prometheus output has a malformed exposition line"
+fi
+
 echo "== clean shutdown =="
 $GVB jobs --socket "$sock" --shutdown 2>>"$trace"
 for _ in $(seq 1 100); do
@@ -153,6 +185,7 @@ fi
   echo "| served trace replay (ci/trace_mixed.txt) vs one-shot | byte-identical |"
   echo "| serve-backed regress vs fresh run CSV | passed |"
   echo "| lifecycle stream (queued → scheduled → … → finished) | well-formed, idle fields present |"
+  echo "| daemon telemetry (stats op, table + prometheus) | counters match the batch |"
   echo "| drain + shutdown | exit 0, socket removed |"
   echo ""
   echo '```'

@@ -11,25 +11,28 @@ USAGE:
               [--category <key>] [--metric <ID>] [--iterations N]
               [--warmup N] [--tenants N] [--seed N] [--jobs N] [--quick]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
+              [--trace-out <file>]
   gvbench sweep [--system S | --systems S,S,...|all | --all-systems]
               [--tenants N,N,...]
               [--quota PCT,PCT,...] [--gpus N,N,...] [--link nvlink,pcie]
               [--category key,key,...]
               [--iterations N] [--warmup N] [--seed N] [--jobs N] [--quick]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
+              [--trace-out <file>]
   gvbench dynamics [--scenario steady,churn,spike,failover,train-steady,mixed-churn]
               [--trace <file>]
               [--system S | --systems S,S,...|all | --all-systems]
               [--duration-ms N] [--window-ms N] [--seed N] [--jobs N]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
-              [--summary-out <file>]
+              [--summary-out <file>] [--trace-out <file>]
+              [--export-trace <file>]
   gvbench cluster [--policies first-fit,best-fit,frag-gradient]
               [--nodes N,N,...] [--arrivals N]
               [--scenario steady,churn,spike,failover]
               [--system S | --systems S,S,...|all | --all-systems]
               [--seed N] [--jobs N]
               [--config <file>] [--format <txt|json|csv>] [--out <file>]
-              [--summary-out <file>]
+              [--summary-out <file>] [--trace-out <file>]
   gvbench list [--full | --systems | --categories]
   gvbench compare [--quick] [--jobs N]  # Table 7: overall scores, all systems
   gvbench regress --baseline <csv> [--system S] [--threshold PCT] [--quick]
@@ -38,7 +41,8 @@ USAGE:
   gvbench serve [--socket <path>] [--jobs N]
   gvbench submit [--socket <path>] [--priority N] [--out <file>]
               (--spec-file <file> | -- <run|sweep|dynamics|cluster|regress> ...)
-  gvbench jobs [--socket <path>] [--shutdown]
+  gvbench jobs [--socket <path>] [--shutdown | --stats]
+              [--stats-format <table|prometheus>]
   gvbench help
 
 EXAMPLES:
@@ -57,7 +61,10 @@ EXAMPLES:
   gvbench compare --quick
   gvbench serve --socket /tmp/gvb.sock --jobs 8     # warm benchmark daemon
   gvbench submit --socket /tmp/gvb.sock -- sweep --tenants 1,2 --format csv
+  gvbench jobs --socket /tmp/gvb.sock --stats-format prometheus
   gvbench jobs --socket /tmp/gvb.sock --shutdown
+  gvbench dynamics --scenario mixed-churn --trace-out trace.json  # Perfetto
+  gvbench dynamics --scenario churn --export-trace churn.txt      # fixture
 
 Scenario sweeps: `sweep` expands (systems x tenants x quota x gpus x
 link x metrics) into one executor task list; quota is the percent of the
@@ -140,6 +147,20 @@ report to --out or stdout. Exit status follows the job, including the
 gate verdict of served regress jobs. `jobs` lists the daemon's jobs;
 `jobs --shutdown` drains already-accepted jobs and stops the daemon.
 A served report is byte-identical to its one-shot CLI equivalent.
+
+Observability: --trace-out FILE writes a Chrome trace-event JSON file
+(open in Perfetto / chrome://tracing). Under dynamics/cluster the
+trace is on the replay's virtual clock — one process per (system,
+scenario) task, one thread lane per tenant (or fleet node) — and is
+byte-identical at any --jobs count; under run/sweep it records the
+executor's wall-clock worker lanes, which (like the JSON `execution`
+object) are host timings and never byte-stable. `dynamics
+--export-trace FILE` renders one preset's timeline (exactly one
+--scenario) into the editable trace format --trace replays, without
+running anything. `jobs --stats` asks a serve daemon for its telemetry
+counters (queue depth, jobs by state, queue-wait / idle / throughput
+histograms); --stats-format prometheus emits text exposition format
+for scraping. See docs/observability.md.
 
 Parallelism: --jobs N shards the task matrix across N worker threads
 (0 or unset = all cores). Same --seed => bit-identical numbers at any job
@@ -235,6 +256,18 @@ pub struct Args {
     pub shutdown: bool,
     /// `submit`: inline job argv captured after `--`.
     pub job_argv: Option<Vec<String>>,
+    /// `run`/`sweep`/`dynamics`/`cluster`: write a Chrome trace-event
+    /// JSON file here (`--trace-out`). Virtual-time spans under
+    /// dynamics/cluster; wall-clock executor lanes under run/sweep.
+    pub trace_out: Option<String>,
+    /// `dynamics --export-trace FILE`: render the (single) selected
+    /// preset's timeline as an editable trace file and exit without
+    /// replaying anything.
+    pub export_trace: Option<String>,
+    /// `jobs --stats`: ask the daemon for its telemetry counters.
+    pub stats: bool,
+    /// `jobs --stats-format <table|prometheus>`; implies `--stats`.
+    pub stats_format: Option<String>,
 }
 
 impl Default for Args {
@@ -281,6 +314,10 @@ impl Default for Args {
             spec_file: None,
             shutdown: false,
             job_argv: None,
+            trace_out: None,
+            export_trace: None,
+            stats: false,
+            stats_format: None,
         }
     }
 }
@@ -500,6 +537,43 @@ impl Args {
                         return Err(err("--shutdown is only valid for `gvbench jobs`"));
                     }
                     args.shutdown = true;
+                }
+                "--stats" => {
+                    if args.command != Command::Jobs {
+                        return Err(err("--stats is only valid for `gvbench jobs`"));
+                    }
+                    args.stats = true;
+                }
+                "--stats-format" => {
+                    if args.command != Command::Jobs {
+                        return Err(err("--stats-format is only valid for `gvbench jobs`"));
+                    }
+                    let v = next_value(&mut it, flag)?;
+                    if !matches!(v.as_str(), "table" | "prometheus") {
+                        return Err(err(format!(
+                            "unknown stats format `{v}` (expected table, prometheus)"
+                        )));
+                    }
+                    args.stats = true;
+                    args.stats_format = Some(v);
+                }
+                "--trace-out" => {
+                    if !matches!(
+                        args.command,
+                        Command::Run | Command::Sweep | Command::Dynamics | Command::Cluster
+                    ) {
+                        return Err(err(
+                            "--trace-out is only valid for `gvbench run`, `gvbench sweep`, \
+                             `gvbench dynamics` or `gvbench cluster`",
+                        ));
+                    }
+                    args.trace_out = Some(next_value(&mut it, flag)?);
+                }
+                "--export-trace" => {
+                    if args.command != Command::Dynamics {
+                        return Err(err("--export-trace is only valid for `gvbench dynamics`"));
+                    }
+                    args.export_trace = Some(next_value(&mut it, flag)?);
                 }
                 "--system" => {
                     args.system = next_value(&mut it, flag)?;
@@ -783,6 +857,28 @@ impl Args {
                 args.window_ms,
             )
             .map_err(err)?;
+            if args.export_trace.is_some() {
+                if args.trace.is_some() {
+                    return Err(err(
+                        "--export-trace and --trace are mutually exclusive; exporting \
+                         renders a preset, replaying consumes a trace",
+                    ));
+                }
+                if args.trace_out.is_some() {
+                    return Err(err(
+                        "--export-trace and --trace-out are mutually exclusive; exporting \
+                         skips the replay, so there is no span trace to write",
+                    ));
+                }
+                if args.dyn_scenarios.as_ref().map(|s| s.len()) != Some(1) {
+                    return Err(err(
+                        "--export-trace requires exactly one --scenario preset to render",
+                    ));
+                }
+            }
+        }
+        if args.command == Command::Jobs && args.stats && args.shutdown {
+            return Err(err("--stats and --shutdown are mutually exclusive"));
         }
         if args.command == Command::Cluster {
             if args.metric.is_some() || args.category.is_some() {
@@ -1178,5 +1274,65 @@ mod tests {
         assert!(parse("run --system hami --shutdown").is_err());
         // `--` stays submit-only.
         assert!(parse("jobs -- run").is_err());
+    }
+
+    #[test]
+    fn jobs_stats_flags() {
+        let a = parse("jobs --stats").unwrap();
+        assert!(a.stats);
+        assert_eq!(a.stats_format, None);
+        // --stats-format implies --stats and validates its value.
+        let a = parse("jobs --stats-format prometheus").unwrap();
+        assert!(a.stats);
+        assert_eq!(a.stats_format.as_deref(), Some("prometheus"));
+        assert_eq!(
+            parse("jobs --stats-format table").unwrap().stats_format.as_deref(),
+            Some("table")
+        );
+        assert!(parse("jobs --stats-format xml").is_err());
+        assert!(parse("jobs --stats-format").is_err());
+        // A stats query and a shutdown request cannot share one invocation.
+        assert!(parse("jobs --stats --shutdown").is_err());
+        // The stats flags belong to `jobs` only.
+        assert!(parse("run --system hami --stats").is_err());
+        assert!(parse("serve --stats-format prometheus").is_err());
+    }
+
+    #[test]
+    fn trace_out_belongs_to_the_grid_commands() {
+        assert_eq!(
+            parse("run --system hami --trace-out t.json")
+                .unwrap()
+                .trace_out
+                .as_deref(),
+            Some("t.json")
+        );
+        assert!(parse("sweep --trace-out t.json").unwrap().trace_out.is_some());
+        assert!(parse("dynamics --trace-out t.json").unwrap().trace_out.is_some());
+        assert!(parse("cluster --trace-out t.json").unwrap().trace_out.is_some());
+        // A replayed timeline still exports its (virtual-time) spans.
+        let a = parse("dynamics --trace t.txt --trace-out t.json").unwrap();
+        assert_eq!(a.trace_out.as_deref(), Some("t.json"));
+        assert!(parse("serve --trace-out t.json").is_err());
+        assert!(parse("regress --baseline b.csv --trace-out t.json").is_err());
+        assert!(parse("dynamics --trace-out").is_err());
+    }
+
+    #[test]
+    fn export_trace_renders_exactly_one_preset() {
+        let a = parse("dynamics --scenario mixed-churn --export-trace churn.txt").unwrap();
+        assert_eq!(a.export_trace.as_deref(), Some("churn.txt"));
+        assert_eq!(a.dyn_scenarios, Some(vec!["mixed-churn".to_string()]));
+        // Exactly one preset: none or several is ambiguous.
+        assert!(parse("dynamics --export-trace churn.txt").is_err());
+        assert!(parse("dynamics --scenario churn,failover --export-trace t.txt").is_err());
+        // Export renders a preset; replay and span export make no sense with it.
+        assert!(parse("dynamics --trace t.txt --export-trace out.txt").is_err());
+        assert!(
+            parse("dynamics --scenario churn --export-trace t.txt --trace-out c.json").is_err()
+        );
+        // --export-trace belongs to dynamics only.
+        assert!(parse("cluster --scenario churn --export-trace t.txt").is_err());
+        assert!(parse("run --system hami --export-trace t.txt").is_err());
     }
 }

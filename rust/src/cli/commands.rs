@@ -275,6 +275,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         None => print!("{rendered}"),
     }
+    write_wall_trace(args, &surface.stats)?;
     Ok(())
 }
 
@@ -367,7 +368,22 @@ pub fn dynamics_inputs(args: &Args) -> Result<DynInputs> {
 /// Replay the dynamics grid through the executor and emit the surface.
 fn cmd_dynamics(args: &Args) -> Result<()> {
     let DynInputs { cfg, spec } = dynamics_inputs(args)?;
-    let surface = dynsim::run_dynamics(&cfg, &spec, cfg.jobs);
+    if let Some(path) = &args.export_trace {
+        // The parser guaranteed exactly one preset --scenario. Render its
+        // event timeline through the trace grammar so the exported file is
+        // an editable fixture that `--trace` replays without loss.
+        let name = spec.scenarios[0];
+        let sc = ScenarioSpec::preset(name, spec.duration_ms, spec.window_ms)
+            .expect("validated preset");
+        std::fs::write(path, dynsim::render_trace(&sc))
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path} (editable --trace fixture for `{name}`)");
+        return Ok(());
+    }
+    let (surface, spans) = match &args.trace_out {
+        Some(_) => dynsim::run_dynamics_traced(&cfg, &spec, cfg.jobs),
+        None => (dynsim::run_dynamics(&cfg, &spec, cfg.jobs), Vec::new()),
+    };
     eprintln!(
         "[gvbench] dynamics: {} timeline(s) x {} window(s) on {} workers in {:.2}s (busy/wall {:.2}x)",
         surface.runs.len(),
@@ -389,6 +405,12 @@ fn cmd_dynamics(args: &Args) -> Result<()> {
         std::fs::write(path, crate::report::dynamics::render_summary_csv(&surface))
             .with_context(|| format!("writing {path}"))?;
         eprintln!("wrote {path} (regress-compatible summary)");
+    }
+    if let Some(path) = &args.trace_out {
+        // Virtual-time spans only: byte-identical at any --jobs.
+        std::fs::write(path, crate::obs::chrome::render_virtual(&spans))
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path} (virtual-time Chrome trace; open in Perfetto)");
     }
     Ok(())
 }
@@ -452,7 +474,10 @@ pub fn cluster_inputs(args: &Args) -> Result<ClusterInputs> {
 fn cmd_cluster(args: &Args) -> Result<()> {
     let ClusterInputs { cfg, spec } = cluster_inputs(args)?;
     let arrivals = spec.arrivals;
-    let surface = cluster::run_cluster(&cfg, &spec, cfg.jobs);
+    let (surface, spans) = match &args.trace_out {
+        Some(_) => cluster::run_cluster_traced(&cfg, &spec, cfg.jobs),
+        None => (cluster::run_cluster(&cfg, &spec, cfg.jobs), Vec::new()),
+    };
     eprintln!(
         "[gvbench] cluster: {} fleet cell(s) x {} arrival(s) on {} workers in {:.2}s (busy/wall {:.2}x)",
         surface.runs.len(),
@@ -485,6 +510,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         std::fs::write(path, crate::report::cluster::render_summary_csv(&surface))
             .with_context(|| format!("writing {path}"))?;
         eprintln!("wrote {path} (regress-compatible summary)");
+    }
+    if let Some(path) = &args.trace_out {
+        // Virtual-time spans only: byte-identical at any --jobs.
+        std::fs::write(path, crate::obs::chrome::render_virtual(&spans))
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path} (virtual-time Chrome trace; open in Perfetto)");
     }
     Ok(())
 }
@@ -570,6 +601,19 @@ fn cmd_run(args: &Args) -> Result<()> {
             }
         }
         None => print!("{rendered}"),
+    }
+    write_wall_trace(args, &all_stats)?;
+    Ok(())
+}
+
+/// Write the wall-clock executor trace for `run`/`sweep --trace-out`.
+/// Host timings live here and nowhere else — the metric report stays
+/// deterministic, the trace is expected to differ run to run.
+fn write_wall_trace(args: &Args, stats: &ExecutionStats) -> Result<()> {
+    if let Some(path) = &args.trace_out {
+        std::fs::write(path, crate::obs::chrome::render_wall(stats))
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path} (wall-clock Chrome trace; open in Perfetto)");
     }
     Ok(())
 }
@@ -717,6 +761,14 @@ fn cmd_submit(args: &Args) -> Result<()> {
 /// `--shutdown`.
 fn cmd_jobs(args: &Args) -> Result<()> {
     let socket = resolve_socket(args);
+    if args.stats {
+        let snap = crate::serve::client::stats(&socket)?;
+        match args.stats_format.as_deref() {
+            Some("prometheus") => print!("{}", snap.render_prometheus()),
+            _ => print!("{}", snap.render_table()),
+        }
+        return Ok(());
+    }
     if args.shutdown {
         crate::serve::client::shutdown(&socket)?;
         eprintln!(

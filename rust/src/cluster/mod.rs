@@ -47,6 +47,7 @@ use std::sync::Arc;
 
 use crate::coordinator::executor::{self, Backend, ExecutionStats, Observer, Task, TaskDone};
 use crate::metrics::RunConfig;
+use crate::obs::trace::{SpanSink, TaskSpans, VSpan};
 use crate::simgpu::spec::GpuSpec;
 use crate::util::rng::{cluster_seed, task_seed};
 use crate::util::Rng;
@@ -368,6 +369,36 @@ pub fn replay_fleet(
     scenario: &'static str,
     arrivals: u32,
 ) -> FleetRun {
+    replay_fleet_inner(cfg, policy, nodes, scenario, arrivals, &mut None)
+}
+
+/// [`replay_fleet`] with placement-marker tracing: the same replay
+/// (bit-identical `FleetRun` — recording is pure observation) plus one
+/// virtual-time [`VSpan`] instant per placement decision. The virtual
+/// clock is the event sequence index (1 µs per timeline event — the
+/// fleet replay has no device clock); lanes are node indices
+/// (lane = node + 1), with rejections and evictions on the timeline
+/// lane since they land on no node.
+pub fn replay_fleet_traced(
+    cfg: &RunConfig,
+    policy: &dyn PlacementPolicy,
+    nodes: u32,
+    scenario: &'static str,
+    arrivals: u32,
+) -> (FleetRun, Vec<VSpan>) {
+    let mut spans = Some(Vec::new());
+    let run = replay_fleet_inner(cfg, policy, nodes, scenario, arrivals, &mut spans);
+    (run, spans.unwrap_or_default())
+}
+
+fn replay_fleet_inner(
+    cfg: &RunConfig,
+    policy: &dyn PlacementPolicy,
+    nodes: u32,
+    scenario: &'static str,
+    arrivals: u32,
+    spans: &mut Option<Vec<VSpan>>,
+) -> FleetRun {
     let spec = GpuSpec::a100_40gb();
     let topo = cfg.node_topology(&spec);
     let mem_capacity = topo.device_count as u64 * spec.hbm_bytes;
@@ -376,25 +407,53 @@ pub fn replay_fleet(
     let mut rng = Rng::new(cfg.seed);
     let stream = arrival_stream(scenario, arrivals, nodes, &mut rng);
     let (mut attempts, mut placed, mut migrations, mut evictions) = (0u32, 0u32, 0u32, 0u32);
-    for ev in &stream {
+    let node_lane = |node: usize| Some(node as u32 + 1);
+    for (idx, ev) in stream.iter().enumerate() {
+        let t_ns = idx as u64 * 1_000;
         match ev {
             FleetEvent::Arrive { tenant, demand } => {
                 let d = system_demand(&cfg.system, *demand, &spec);
                 attempts += 1;
-                if fleet.place(policy, *tenant, d).is_some() {
-                    placed += 1;
+                match fleet.place(policy, *tenant, d) {
+                    Some(node) => {
+                        placed += 1;
+                        if let Some(spans) = spans.as_mut() {
+                            spans.push(VSpan::instant("placement", "place", node_lane(node), t_ns));
+                        }
+                    }
+                    None => {
+                        if let Some(spans) = spans.as_mut() {
+                            spans.push(VSpan::instant("placement", "reject", None, t_ns));
+                        }
+                    }
                 }
             }
             FleetEvent::Depart { tenant } => {
                 // Departures of never-placed tenants are no-ops.
-                fleet.remove(*tenant);
+                if let Some(node) = fleet.remove(*tenant) {
+                    if let Some(spans) = spans.as_mut() {
+                        spans.push(VSpan::instant("placement", "depart", node_lane(node), t_ns));
+                    }
+                }
             }
             FleetEvent::Fail { node } => {
+                if let Some(spans) = spans.as_mut() {
+                    spans.push(VSpan::instant("fault", "fail", node_lane(*node), t_ns));
+                }
                 for (tenant, d) in fleet.fail_node(*node) {
-                    if fleet.place(policy, tenant, d).is_some() {
-                        migrations += 1;
-                    } else {
-                        evictions += 1;
+                    match fleet.place(policy, tenant, d) {
+                        Some(to) => {
+                            migrations += 1;
+                            if let Some(spans) = spans.as_mut() {
+                                spans.push(VSpan::instant("fault", "migrate", node_lane(to), t_ns));
+                            }
+                        }
+                        None => {
+                            evictions += 1;
+                            if let Some(spans) = spans.as_mut() {
+                                spans.push(VSpan::instant("fault", "evict", None, t_ns));
+                            }
+                        }
                     }
                 }
             }
@@ -475,6 +534,22 @@ pub fn run_cluster(base: &RunConfig, spec: &ClusterSpec, jobs: usize) -> Cluster
     run_cluster_on(&Backend::Scoped(jobs), base, spec, None)
 }
 
+/// [`run_cluster`] with placement-marker tracing: the same surface
+/// (bit-identical — see [`replay_fleet_traced`]) plus one [`TaskSpans`]
+/// per grid cell, merged in task-index order regardless of completion
+/// order, so the Chrome trace rendered from them (`gvbench cluster
+/// --trace-out`) is byte-identical at any `--jobs` count.
+pub fn run_cluster_traced(
+    base: &RunConfig,
+    spec: &ClusterSpec,
+    jobs: usize,
+) -> (ClusterSurface, Vec<TaskSpans>) {
+    let sink = Arc::new(SpanSink::new());
+    let surface =
+        run_cluster_inner(&Backend::Scoped(jobs), base, spec, None, Some(Arc::clone(&sink)));
+    (surface, sink.drain_sorted())
+}
+
 /// [`run_cluster`] generalized over the pool shape: the same task list
 /// and seed derivation, executed on `exec` (scoped threads or a
 /// persistent serve-daemon pool), with an optional per-task completion
@@ -485,6 +560,16 @@ pub fn run_cluster_on(
     base: &RunConfig,
     spec: &ClusterSpec,
     observer: Option<Observer>,
+) -> ClusterSurface {
+    run_cluster_inner(exec, base, spec, observer, None)
+}
+
+fn run_cluster_inner(
+    exec: &Backend<'_>,
+    base: &RunConfig,
+    spec: &ClusterSpec,
+    observer: Option<Observer>,
+    sink: Option<Arc<SpanSink>>,
 ) -> ClusterSurface {
     let cells = spec.systems.len()
         * spec.policies.len()
@@ -518,7 +603,19 @@ pub fn run_cluster_on(
         move |i: usize, task: &Task| {
             let (p, n, sc) = coords[i];
             let policy = policy::by_name(p)?;
-            let replay = replay_fleet(&cfgs[i], policy, n, sc, arrivals);
+            let replay = match sink.as_ref() {
+                Some(sink) => {
+                    let (replay, spans) = replay_fleet_traced(&cfgs[i], policy, n, sc, arrivals);
+                    sink.push(TaskSpans {
+                        index: i,
+                        system: task.system.clone(),
+                        label: format!("{p}@{n}n/{sc}"),
+                        spans,
+                    });
+                    replay
+                }
+                None => replay_fleet(&cfgs[i], policy, n, sc, arrivals),
+            };
             if let Some(obs) = observer.as_ref() {
                 obs(TaskDone {
                     index: i,
@@ -605,6 +702,46 @@ mod tests {
                 assert_eq!(ia, ib);
                 assert_eq!(va.to_bits(), vb.to_bits(), "{}/{}/{}", a.system, a.policy, ia);
             }
+        }
+    }
+
+    #[test]
+    fn traced_replay_is_pure_observation() {
+        let cfg = RunConfig::quick("hami");
+        let policy = policy::by_name("first-fit").unwrap();
+        let plain = replay_fleet(&cfg, policy, 4, "failover", 300);
+        let (traced, spans) = replay_fleet_traced(&cfg, policy, 4, "failover", 300);
+        assert_eq!(plain.placed, traced.placed);
+        assert_eq!(plain.migrations, traced.migrations);
+        assert_eq!(plain.evictions, traced.evictions);
+        for ((ia, va), (ib, vb)) in plain.summary.iter().zip(&traced.summary) {
+            assert_eq!(ia, ib);
+            assert_eq!(va.to_bits(), vb.to_bits(), "{ia}");
+        }
+        // One marker per placement, one per displacement, one node fail.
+        let places = spans.iter().filter(|s| s.name == "place").count();
+        assert_eq!(places as u32, traced.placed);
+        assert_eq!(spans.iter().filter(|s| s.name == "fail").count(), 1);
+        let moved = spans.iter().filter(|s| s.name == "migrate" || s.name == "evict").count();
+        assert_eq!(moved as u32, traced.migrations + traced.evictions);
+        // Markers are instants on the event-index clock, node lanes only.
+        for s in &spans {
+            assert!(s.dur_ns.is_none(), "{s:?}");
+            if let Some(lane) = s.tenant {
+                assert!((1..=4).contains(&lane), "{s:?}");
+            }
+        }
+        // Traced twice = identical spans, and the grid-level merge keeps
+        // task order at any job count.
+        let (_, again) = replay_fleet_traced(&cfg, policy, 4, "failover", 300);
+        assert_eq!(spans, again);
+        let base = RunConfig::quick("native");
+        let (_, t1) = run_cluster_traced(&base, &small_spec(), 1);
+        let (_, t4) = run_cluster_traced(&base, &small_spec(), 4);
+        assert_eq!(t1.len(), 8);
+        for (a, b) in t1.iter().zip(&t4) {
+            assert_eq!((a.index, &a.system, &a.label), (b.index, &b.system, &b.label));
+            assert_eq!(a.spans, b.spans, "{}/{}", a.system, a.label);
         }
     }
 

@@ -51,6 +51,10 @@ pub struct TaskTiming {
     pub metric_id: &'static str,
     /// Host wall-clock spent executing the task, ns.
     pub wall_ns: u64,
+    /// Task start, ns after the matrix started (host wall-clock offset;
+    /// the span renderer `obs::chrome` places the task on its worker's
+    /// lane with it).
+    pub start_ns: u64,
     /// Worker index (0-based) that ran the task.
     pub worker: usize,
 }
@@ -209,12 +213,14 @@ where
                     break;
                 }
                 let task = &tasks[i];
+                let start_ns = t_start.elapsed().as_nanos() as u64;
                 let t0 = Instant::now();
                 if let Some(result) = run(i, task) {
                     let timing = TaskTiming {
                         system: task.system.clone(),
                         metric_id: task.metric_id,
                         wall_ns: t0.elapsed().as_nanos() as u64,
+                        start_ns,
                         worker,
                     };
                     *slots[i].lock().unwrap() = Some((result, timing));
@@ -427,12 +433,14 @@ impl WorkerPool {
                 tasks.len(),
                 Box::new(move |i, worker| {
                     let task = &batch_tasks[i];
+                    let start_ns = t_start.elapsed().as_nanos() as u64;
                     let t0 = Instant::now();
                     if let Some(result) = run(i, task) {
                         let timing = TaskTiming {
                             system: task.system.clone(),
                             metric_id: task.metric_id,
                             wall_ns: t0.elapsed().as_nanos() as u64,
+                            start_ns,
                             worker,
                         };
                         *slots[i].lock().unwrap() = Some((result, timing));
@@ -707,6 +715,7 @@ mod tests {
                 system: "native".into(),
                 metric_id: "OH-009",
                 wall_ns: 100,
+                start_ns: 0,
                 worker: 0,
             }],
             wall_ns: 50,

@@ -9,9 +9,9 @@
 //! O(log n); the pre-rewrite loop rescanned every active tenant per
 //! occurrence (O(occurrences × tenants)), which is the difference
 //! between minutes and seconds at 10³-tenant / 10⁶-occurrence horizons.
-//! The frozen pre-rewrite loop survives as [`super::reference`], and
-//! `rust/tests/dynamics_determinism.rs` proves both produce
-//! bit-identical surfaces.
+//! The rewrite's behavior is pinned by the committed goldens under
+//! `rust/tests/goldens/` (the frozen pre-rewrite engine has been
+//! retired now that those goldens carry the bit-identity proof).
 //!
 //! - **Arrivals are open-loop**: each active tenant owns a
 //!   [`RequestGenerator`] whose Poisson process schedules request arrival
@@ -66,6 +66,7 @@ use crate::coordinator::workload::{
 };
 use crate::cudalite::{Api, CollectiveCtx};
 use crate::metrics::RunConfig;
+use crate::obs::trace::VSpan;
 use crate::simgpu::error::{GpuError, GpuFault};
 use crate::simgpu::memory::DevicePtr;
 use crate::simgpu::{TenantId, VirtualClock};
@@ -351,6 +352,10 @@ impl BusyLedger {
 /// Drive one request through the virtualized driver path. Quota/OOM
 /// rejections shrink the tenant's KV ring and carry on; fault-class
 /// errors propagate so the caller can run the recovery path.
+///
+/// When `spans` is `Some`, the prefill/decode kernel intervals are also
+/// recorded as virtual-time [`VSpan`]s — pure observation of values the
+/// engine computes anyway, so tracing never perturbs the timeline.
 fn service_request(
     api: &mut Api,
     tenant: TenantId,
@@ -358,6 +363,7 @@ fn service_request(
     req: &Request,
     state: &mut Tenant,
     busy: &mut BusyLedger,
+    spans: &mut Option<Vec<VSpan>>,
 ) -> Result<(), GpuError> {
     let kv_bytes = (req.prompt_len + req.gen_len).max(1) * KV_BYTES_PER_TOKEN;
     match api.mem_alloc(tenant, kv_bytes) {
@@ -386,6 +392,10 @@ fn service_request(
     for (s, e) in [prefill, decode] {
         busy.record(slot, s, e);
     }
+    if let Some(spans) = spans {
+        spans.push(VSpan::complete("kernel", "prefill", Some(tenant), prefill.0, prefill.1));
+        spans.push(VSpan::complete("kernel", "decode", Some(tenant), decode.0, decode.1));
+    }
     Ok(())
 }
 
@@ -395,6 +405,10 @@ fn service_request(
 /// steps an allreduce whose latency busies the *shared* device clock
 /// (serializing against every tenant's kernels — the interference the
 /// mixed-workload statistics measure), then the optimizer update.
+///
+/// When `spans` is `Some`, the fwd/bwd/allreduce/optimizer intervals
+/// are also recorded as virtual-time [`VSpan`]s (pure observation).
+#[allow(clippy::too_many_arguments)]
 fn service_train_step(
     api: &mut Api,
     tenant: TenantId,
@@ -403,6 +417,7 @@ fn service_train_step(
     state: &mut Tenant,
     busy: &mut BusyLedger,
     allreduce_lats_ms: &mut Vec<f64>,
+    spans: &mut Option<Vec<VSpan>>,
 ) -> Result<(), GpuError> {
     let act_bytes = step.batch_tokens.max(1) * ACT_BYTES_PER_TOKEN;
     match api.mem_alloc(tenant, act_bytes) {
@@ -431,6 +446,10 @@ fn service_train_step(
     for (s, e) in [fwd, bwd] {
         busy.record(slot, s, e);
     }
+    if let Some(spans) = spans.as_mut() {
+        spans.push(VSpan::complete("kernel", "fwd", Some(tenant), fwd.0, fwd.1));
+        spans.push(VSpan::complete("kernel", "bwd", Some(tenant), bwd.0, bwd.1));
+    }
     if step.grad_sync {
         let Driver::Train { comms, .. } = &mut state.driver else {
             unreachable!("train steps only run on train drivers");
@@ -438,16 +457,24 @@ fn service_train_step(
         let us = comms.allreduce(step.allreduce_bytes());
         // The communicator's own clock is detached; occupy the shared
         // device timeline for the collective's duration instead.
+        let ar_start = api.now_ns();
         api.dev.clock.advance_f(us * 1e3);
         allreduce_lats_ms.push(us / 1e3);
+        if let Some(spans) = spans.as_mut() {
+            spans.push(VSpan::complete("comm", "allreduce", Some(tenant), ar_start, api.now_ns()));
+        }
         let opt = api.launch_kernel(tenant, 0, &step.optimizer_kernel())?;
         api.sync_device(tenant)?;
         busy.record(slot, opt.0, opt.1);
+        if let Some(spans) = spans.as_mut() {
+            spans.push(VSpan::complete("kernel", "optimizer", Some(tenant), opt.0, opt.1));
+        }
     }
     Ok(())
 }
 
 /// Dispatch one unit of work to its service path.
+#[allow(clippy::too_many_arguments)]
 fn service_work(
     api: &mut Api,
     tenant: TenantId,
@@ -456,11 +483,12 @@ fn service_work(
     state: &mut Tenant,
     busy: &mut BusyLedger,
     allreduce_lats_ms: &mut Vec<f64>,
+    spans: &mut Option<Vec<VSpan>>,
 ) -> Result<(), GpuError> {
     match work {
-        Work::Req(req) => service_request(api, tenant, slot, req, state, busy),
+        Work::Req(req) => service_request(api, tenant, slot, req, state, busy, spans),
         Work::Step(step) => {
-            service_train_step(api, tenant, slot, step, state, busy, allreduce_lats_ms)
+            service_train_step(api, tenant, slot, step, state, busy, allreduce_lats_ms, spans)
         }
     }
 }
@@ -479,6 +507,9 @@ struct Outcomes {
     failed: usize,
     fault: Option<(TenantId, u64)>,
     recovery: Option<Recovery>,
+    /// Virtual-time spans recorded along the way; `None` = tracing off
+    /// (the default — recording is pure observation either way).
+    spans: Option<Vec<VSpan>>,
 }
 
 /// Service one work item at virtual time `t`, running the ERR-002
@@ -499,7 +530,8 @@ fn serve_and_recover(
         Work::Req(_) => out.samples.push((tenant, t, completion)),
         Work::Step(_) => out.train_samples.push((tenant, t, completion)),
     };
-    let served = service_work(api, tenant, slot, work, state, busy, &mut out.allreduce_lats_ms);
+    let (lats, spans) = (&mut out.allreduce_lats_ms, &mut out.spans);
+    let served = service_work(api, tenant, slot, work, state, busy, lats, spans);
     match served {
         Ok(()) => record(out, api.now_ns()),
         Err(_) => {
@@ -509,9 +541,9 @@ fn serve_and_recover(
             state.ring.clear();
             state.held_bytes = 0;
             let _ = api.ctx_destroy(tenant);
+            let (lats, spans) = (&mut out.allreduce_lats_ms, &mut out.spans);
             let recovered = api.ctx_create(tenant, tc).is_ok()
-                && service_work(api, tenant, slot, work, state, busy, &mut out.allreduce_lats_ms)
-                    .is_ok();
+                && service_work(api, tenant, slot, work, state, busy, lats, spans).is_ok();
             if recovered {
                 let completion = api.now_ns();
                 record(out, completion);
@@ -535,6 +567,25 @@ fn serve_and_recover(
 /// backend and `cfg.seed` must already be the composed per-task dynamics
 /// seed (see [`super::run_dynamics`], which derives it per task).
 pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
+    run_scenario_inner(cfg, spec, false).0
+}
+
+/// [`run_scenario`] with virtual-time span tracing enabled: the same
+/// timeline (bit-identical `ScenarioRun` — tracing is pure observation)
+/// plus the recorded [`VSpan`]s — kernel sub-spans (prefill/decode,
+/// fwd/bwd/optimizer, allreduces) captured inline, request / train-step
+/// lifecycles, the fault-recovery window and scenario-event markers
+/// synthesized from the outcome record. Everything is on the virtual
+/// clock, so the span list is as deterministic as the run itself.
+pub fn run_scenario_traced(cfg: &RunConfig, spec: &ScenarioSpec) -> (ScenarioRun, Vec<VSpan>) {
+    run_scenario_inner(cfg, spec, true)
+}
+
+fn run_scenario_inner(
+    cfg: &RunConfig,
+    spec: &ScenarioSpec,
+    traced: bool,
+) -> (ScenarioRun, Vec<VSpan>) {
     let mut api = Api::with_backend(&cfg.system, cfg.seed);
     let dev_mem = api.dev.spec.hbm_bytes;
     let duration_ns = spec.duration_ms.max(1) * 1_000_000;
@@ -573,6 +624,7 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
         failed: 0,
         fault: None,
         recovery: None,
+        spans: traced.then(Vec::new),
     };
     let mut busy = BusyLedger::new(window_ns, duration_ns, n_windows, n_slots);
     let mut snap_mem: Vec<f64> = Vec::with_capacity(n_windows);
@@ -909,7 +961,45 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
         summary.push(("DYN-MIX-INTERFERENCE", interference));
     }
 
-    ScenarioRun {
+    // ---- synthesize the lifecycle spans (tracing only) ------------------
+    // Kernel sub-spans were recorded inline; the wider request/train-step
+    // spans, the fault-recovery window and the scenario-event markers all
+    // derive from data the engine collected anyway, so they are appended
+    // here without ever touching the replay.
+    if let Some(spans) = out.spans.as_mut() {
+        for ev in &events {
+            let t = ev.at_ms * 1_000_000;
+            if t >= duration_ns {
+                continue;
+            }
+            let name = match ev.kind {
+                EventKind::Arrive { workload: WorkloadKind::Infer, .. } => "arrive",
+                EventKind::Arrive { workload: WorkloadKind::Train, .. } => "arrive-train",
+                EventKind::Depart => "depart",
+                EventKind::Burst { .. } => "burst",
+                EventKind::Fail => "fail",
+                EventKind::Request => "inject",
+            };
+            spans.push(VSpan::instant("lifecycle", name, Some(ev.tenant), t));
+        }
+        for &(tenant, arrival, completion) in &out.samples {
+            spans.push(VSpan::complete("request", "request", Some(tenant), arrival, completion));
+        }
+        for &(tenant, start, completion) in &out.train_samples {
+            spans.push(VSpan::complete("train", "train-step", Some(tenant), start, completion));
+        }
+        if let Some(r) = out.recovery {
+            spans.push(VSpan::complete(
+                "fault",
+                "recovery",
+                Some(r.tenant),
+                r.fault_ns,
+                r.recovered_ns,
+            ));
+        }
+    }
+
+    let run = ScenarioRun {
         system: cfg.system.clone(),
         scenario: spec.name,
         duration_ms: spec.duration_ms,
@@ -923,7 +1013,8 @@ pub fn run_scenario(cfg: &RunConfig, spec: &ScenarioSpec) -> ScenarioRun {
         failed: out.failed,
         recovery: out.recovery,
         occurrences,
-    }
+    };
+    (run, out.spans.unwrap_or_default())
 }
 
 #[cfg(test)]
@@ -1141,42 +1232,43 @@ mod tests {
     }
 
     #[test]
-    fn matches_the_frozen_reference_engine_bitwise() {
-        // One cell of the full old-vs-new proof (the 2×2 grid at both job
-        // counts lives in `rust/tests/dynamics_determinism.rs`): the
-        // event-queue core and the frozen pre-rewrite min-scan loop must
-        // agree bit-for-bit on every surface field.
-        for (system, scenario) in [("hami", "churn"), ("native", "failover")] {
+    fn tracing_is_pure_observation() {
+        // The traced run must produce a bit-identical `ScenarioRun`:
+        // span recording reads values the engine computes anyway and
+        // never touches the clock, the RNG streams or the allocator.
+        for (system, scenario) in [("hami", "mixed-churn"), ("native", "failover")] {
             let spec = ScenarioSpec::preset(scenario, 400, 50).unwrap();
             let cfg = cfg_for(system, scenario, 400, 50);
-            let new = run_scenario(&cfg, &spec);
-            let old = crate::dynsim::reference::run_scenario_reference(&cfg, &spec);
-            assert_eq!(new.tenants, old.tenants, "{system}/{scenario}");
-            assert_eq!(new.series.len(), old.series.len(), "{system}/{scenario}");
-            for (x, y) in new.series.iter().zip(&old.series) {
-                assert_eq!(x.window, y.window, "{system}/{scenario}");
-                assert_eq!(x.tenant, y.tenant, "{system}/{scenario}/{}", x.id);
-                assert_eq!(x.id, y.id, "{system}/{scenario}/w{}", x.window);
-                assert_eq!(
-                    x.value.to_bits(),
-                    y.value.to_bits(),
-                    "{system}/{scenario}: {} w{} t{:?}: {} vs {}",
-                    x.id,
-                    x.window,
-                    x.tenant,
-                    x.value,
-                    y.value
-                );
-            }
-            assert_eq!(new.summary.len(), old.summary.len());
-            for ((xi, xv), (yi, yv)) in new.summary.iter().zip(&old.summary) {
+            let plain = run_scenario(&cfg, &spec);
+            let (traced, spans) = run_scenario_traced(&cfg, &spec);
+            assert_eq!(plain.tenants, traced.tenants, "{system}/{scenario}");
+            assert_eq!(plain.series, traced.series, "{system}/{scenario}");
+            for ((xi, xv), (yi, yv)) in plain.summary.iter().zip(&traced.summary) {
                 assert_eq!(xi, yi);
                 assert_eq!(xv.to_bits(), yv.to_bits(), "{system}/{scenario}: {xi}");
             }
-            assert_eq!(new.completed, old.completed, "{system}/{scenario}");
-            assert_eq!(new.failed, old.failed, "{system}/{scenario}");
-            assert_eq!(new.recovery, old.recovery, "{system}/{scenario}");
-            assert_eq!(new.occurrences, old.occurrences, "{system}/{scenario}");
+            assert_eq!(plain.completed, traced.completed, "{system}/{scenario}");
+            assert_eq!(plain.failed, traced.failed, "{system}/{scenario}");
+            assert_eq!(plain.recovery, traced.recovery, "{system}/{scenario}");
+            assert_eq!(plain.occurrences, traced.occurrences, "{system}/{scenario}");
+            // And the spans actually carry the replay: every completed
+            // request has its lifecycle span, markers cover the scenario
+            // events, and no span ends before it starts (saturating dur).
+            assert!(!spans.is_empty(), "{system}/{scenario}: no spans recorded");
+            let requests = spans.iter().filter(|s| s.cat == "request").count();
+            assert_eq!(requests, traced.completed, "{system}/{scenario}");
+            let markers = spans.iter().filter(|s| s.cat == "lifecycle").count();
+            assert_eq!(markers, spec.events.len(), "{system}/{scenario}");
+            if traced.recovery.is_some() {
+                assert_eq!(spans.iter().filter(|s| s.cat == "fault").count(), 1);
+            }
+            for s in &spans {
+                assert!(s.end_ns() >= s.start_ns, "{system}/{scenario}: {s:?}");
+                assert!(s.tenant.is_some(), "dynsim spans are all tenant-laned");
+            }
+            // Traced twice = byte-identical spans (the export contract).
+            let (_, again) = run_scenario_traced(&cfg, &spec);
+            assert_eq!(spans, again, "{system}/{scenario}: spans not deterministic");
         }
     }
 }

@@ -33,8 +33,11 @@
 //!   per-scenario summary statistics, including the gateable
 //!   `DYN-EVENTS` occurrence count and — on timelines with training
 //!   tenants — the train-step/allreduce/interference statistics.
-//!   The pre-rewrite min-scan loop is frozen in [`reference`] as the
-//!   executable specification the event core is proven bit-identical to.
+//!   The committed goldens under `rust/tests/goldens/` pin the event
+//!   core's behavior (the frozen pre-rewrite engine has been retired).
+//!   [`engine::run_scenario_traced`] additionally records virtual-time
+//!   [`crate::obs::trace::VSpan`]s for Chrome trace export
+//!   (`--trace-out`, see [`crate::obs`]).
 //! - [`run_dynamics`] expands a [`DynSpec`] — systems × scenarios on one
 //!   (duration, window) geometry, optionally carrying one parsed trace
 //!   timeline — into one flat task list sharded through the parallel
@@ -52,7 +55,6 @@
 
 pub mod engine;
 pub mod queue;
-pub mod reference;
 pub mod scenario;
 pub mod trace;
 
@@ -64,6 +66,7 @@ use std::sync::Arc;
 
 use crate::coordinator::executor::{self, Backend, ExecutionStats, Observer, Task, TaskDone};
 use crate::metrics::RunConfig;
+use crate::obs::trace::{SpanSink, TaskSpans};
 use crate::util::rng::{dynamics_seed, task_seed};
 
 /// Default timeline horizon, ms.
@@ -121,6 +124,23 @@ pub fn run_dynamics(base: &RunConfig, spec: &DynSpec, jobs: usize) -> DynSurface
     run_dynamics_on(&Backend::Scoped(jobs), base, spec, None)
 }
 
+/// [`run_dynamics`] with virtual-time span tracing: the same surface
+/// (bit-identical — see [`engine::run_scenario_traced`]) plus one
+/// [`TaskSpans`] per (system, scenario) task, merged in task-index
+/// order regardless of completion order, so the Chrome trace rendered
+/// from them (`gvbench dynamics --trace-out`) is byte-identical at any
+/// `--jobs` count.
+pub fn run_dynamics_traced(
+    base: &RunConfig,
+    spec: &DynSpec,
+    jobs: usize,
+) -> (DynSurface, Vec<TaskSpans>) {
+    let sink = Arc::new(SpanSink::new());
+    let surface =
+        run_dynamics_inner(&Backend::Scoped(jobs), base, spec, None, Some(Arc::clone(&sink)));
+    (surface, sink.drain_sorted())
+}
+
 /// [`run_dynamics`] generalized over the pool shape: the same task list
 /// and seed derivation, executed on `exec` (scoped threads or a
 /// persistent serve-daemon pool), with an optional per-task completion
@@ -131,6 +151,16 @@ pub fn run_dynamics_on(
     base: &RunConfig,
     spec: &DynSpec,
     observer: Option<Observer>,
+) -> DynSurface {
+    run_dynamics_inner(exec, base, spec, observer, None)
+}
+
+fn run_dynamics_inner(
+    exec: &Backend<'_>,
+    base: &RunConfig,
+    spec: &DynSpec,
+    observer: Option<Observer>,
+    sink: Option<Arc<SpanSink>>,
 ) -> DynSurface {
     let mut tasks: Vec<Task> = Vec::with_capacity(spec.systems.len() * spec.scenarios.len());
     let mut cfgs: Vec<RunConfig> = Vec::with_capacity(tasks.capacity());
@@ -156,7 +186,19 @@ pub fn run_dynamics_on(
             } else {
                 ScenarioSpec::preset(task.metric_id, duration_ms, window_ms)?
             };
-            let replay = engine::run_scenario(&cfgs[i], &sc);
+            let replay = match sink.as_ref() {
+                Some(sink) => {
+                    let (replay, spans) = engine::run_scenario_traced(&cfgs[i], &sc);
+                    sink.push(TaskSpans {
+                        index: i,
+                        system: task.system.clone(),
+                        label: task.metric_id.to_string(),
+                        spans,
+                    });
+                    replay
+                }
+                None => engine::run_scenario(&cfgs[i], &sc),
+            };
             if let Some(obs) = observer.as_ref() {
                 obs(TaskDone {
                     index: i,
@@ -256,6 +298,31 @@ mod tests {
                 assert_eq!(x.value.to_bits(), y.value.to_bits(), "{}/{}", a.system, x.id);
             }
         }
+    }
+
+    #[test]
+    fn traced_grid_merges_spans_in_task_order() {
+        let base = RunConfig::quick("native");
+        let (s1, t1) = run_dynamics_traced(&base, &small_spec(), 1);
+        let (s4, t4) = run_dynamics_traced(&base, &small_spec(), 4);
+        assert_eq!(t1.len(), 4);
+        for (i, t) in t1.iter().enumerate() {
+            assert_eq!(t.index, i);
+            assert!(!t.spans.is_empty(), "{}/{}", t.system, t.label);
+        }
+        // Identical spans at any job count (the --trace-out contract) …
+        for (a, b) in t1.iter().zip(&t4) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.system, b.system);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.spans, b.spans, "{}/{}", a.system, a.label);
+        }
+        // … and the surface matches the untraced grid bitwise.
+        let plain = run_dynamics(&base, &small_spec(), 2);
+        for (x, y) in plain.runs.iter().zip(&s1.runs) {
+            assert_eq!(x.series, y.series, "{}/{}", x.system, x.scenario);
+        }
+        assert_eq!(s1.runs.len(), s4.runs.len());
     }
 
     #[test]

@@ -42,6 +42,11 @@
 //!   through pluggable placement policies (first-fit, best-fit,
 //!   fragmentation-gradient), reduced to allocation success rate, fleet
 //!   fragmentation, utilization imbalance and migration/eviction counts.
+//! - [`obs`] — the **observability layer**: span tracing over the replay
+//!   engines and the executor (Chrome trace-event JSON for Perfetto /
+//!   `chrome://tracing`, exposed as `--trace-out`), plus the counters and
+//!   bucketed histograms behind the serve daemon's `stats` telemetry
+//!   endpoint (`gvbench jobs --stats` / `--stats-format prometheus`).
 //! - [`runtime`] — PJRT wrapper that loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and executes them from the Rust request path (used by the
 //!   LLM metric category and the examples).
@@ -153,9 +158,25 @@
 //! and CI's blocking **serve-smoke** job. `gvbench submit` and
 //! `gvbench jobs` are the client side (see `docs/serve.md`).
 //!
+//! ## Observability
+//!
+//! [`obs`] keeps the un-reduced story behind those surfaces: replay
+//! engines record virtual-time spans (request lifecycles, train
+//! fwd/bwd/optimizer kernels, allreduces, fault-recovery windows,
+//! tenant and placement markers) that [`obs::chrome`] renders as Chrome
+//! trace-event JSON (`--trace-out FILE` on `run`/`sweep`/`dynamics`/
+//! `cluster`). Virtual-time traces are byte-identical at any `--jobs`;
+//! wall-clock executor lanes stay quarantined like the JSON `execution`
+//! objects. The serve daemon aggregates [`obs::counters`] telemetry and
+//! answers a `stats` request, rendered by `gvbench jobs --stats` or
+//! scraped as Prometheus text via `--stats-format prometheus`
+//! (`rust/tests/trace_export.rs` pins trace determinism; see
+//! `docs/observability.md`).
+//!
 //! Operator-facing guides live under `docs/` (`architecture.md`,
 //! `sweeps.md`, `regression-gating.md`, `dynamics.md`, `cluster.md`,
-//! `serve.md`), with the quickstart in the top-level `README.md`.
+//! `serve.md`, `observability.md`), with the quickstart in the top-level
+//! `README.md`.
 
 pub mod anyhow;
 pub mod benchkit;
@@ -166,6 +187,7 @@ pub mod coordinator;
 pub mod cudalite;
 pub mod dynsim;
 pub mod metrics;
+pub mod obs;
 pub mod regress;
 pub mod report;
 pub mod runtime;

@@ -1,0 +1,218 @@
+//! Chrome trace-event JSON rendering (Perfetto / `chrome://tracing`).
+//!
+//! Emits the JSON-object flavour of the trace-event format: a
+//! `traceEvents` array of complete (`ph: "X"`), instant (`ph: "i"`) and
+//! metadata (`ph: "M"`) events. Two renderers, one per clock domain —
+//! never mixed in one file:
+//!
+//! - [`render_virtual`]: one *process* per replayed timeline, one
+//!   *thread* per tenant lane, timestamps on the replay's deterministic
+//!   virtual-time axis. Byte-identical at any `--jobs`.
+//! - [`render_wall`]: one process for the executor, one thread per
+//!   worker, one complete span per executed task on the host clock.
+//!   Wall-clock data — quarantined like the JSON `execution` objects,
+//!   reported but never gated or byte-compared.
+//!
+//! Timestamps (`ts` / `dur`) are microseconds; spans carry nanoseconds,
+//! so values are formatted as fixed-point `µs.nnn` strings — integer
+//! arithmetic only, no float formatting in the deterministic path.
+
+use crate::coordinator::executor::ExecutionStats;
+use crate::report::json::{array, quote, Obj};
+
+use super::trace::TaskSpans;
+
+/// Fixed-point microseconds with nanosecond resolution (`1234.567`).
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+/// One `ph: "M"` metadata event (`process_name` / `thread_name` / …).
+fn meta(name: &str, pid: usize, tid: u64, arg_name: &str) -> String {
+    Obj::new()
+        .str("ph", "M")
+        .str("name", name)
+        .field("pid", pid.to_string())
+        .field("tid", tid.to_string())
+        .field("args", Obj::new().str("name", arg_name).build())
+        .build()
+}
+
+/// Wrap rendered events in the trace-event JSON object envelope.
+fn envelope(events: Vec<String>) -> String {
+    format!(
+        "{{{}: {}, {}: {}}}\n",
+        quote("displayTimeUnit"),
+        quote("ms"),
+        quote("traceEvents"),
+        array(events)
+    )
+}
+
+/// Render virtual-time replay spans: one Chrome process per task (pid =
+/// input index + 1), one thread per tenant lane (tid = tenant id; lane 0
+/// carries timeline-level markers). Purely a function of the recorded
+/// spans — byte-identical whenever the replay is.
+pub fn render_virtual(tasks: &[TaskSpans]) -> String {
+    let mut events = Vec::new();
+    for t in tasks {
+        let pid = t.index + 1;
+        events.push(meta(
+            "process_name",
+            pid,
+            0,
+            &format!("{}/{} (virtual time)", t.system, t.label),
+        ));
+        // One thread_name per lane, in ascending tid order.
+        let mut lanes: Vec<u64> = t.spans.iter().map(|s| lane(s.tenant)).collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        for l in lanes {
+            let name =
+                if l == 0 { "timeline".to_string() } else { format!("tenant {l}") };
+            events.push(meta("thread_name", pid, l, &name));
+        }
+        for s in &t.spans {
+            let tid = lane(s.tenant);
+            let mut o = Obj::new();
+            o = match s.dur_ns {
+                Some(dur) => o
+                    .str("ph", "X")
+                    .str("name", s.name)
+                    .str("cat", s.cat)
+                    .field("pid", pid.to_string())
+                    .field("tid", tid.to_string())
+                    .field("ts", us(s.start_ns))
+                    .field("dur", us(dur)),
+                None => o
+                    .str("ph", "i")
+                    .str("name", s.name)
+                    .str("cat", s.cat)
+                    .field("pid", pid.to_string())
+                    .field("tid", tid.to_string())
+                    .field("ts", us(s.start_ns))
+                    .str("s", "t"),
+            };
+            events.push(o.build());
+        }
+    }
+    envelope(events)
+}
+
+fn lane(tenant: Option<crate::simgpu::TenantId>) -> u64 {
+    tenant.map(u64::from).unwrap_or(0)
+}
+
+/// Render executor wall-clock task lanes: one process (pid 1), one
+/// thread per worker, one complete span per executed task. Host-timing
+/// data — every `ts`/`dur` differs run to run by construction.
+pub fn render_wall(stats: &ExecutionStats) -> String {
+    let mut events = Vec::new();
+    events.push(meta("process_name", 1, 0, "executor (wall clock)"));
+    let mut workers: Vec<usize> = stats.tasks.iter().map(|t| t.worker).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    for w in workers {
+        events.push(meta("thread_name", 1, w as u64, &format!("worker {w}")));
+    }
+    for t in &stats.tasks {
+        events.push(
+            Obj::new()
+                .str("ph", "X")
+                .str("name", t.metric_id)
+                .str("cat", "task")
+                .field("pid", "1".to_string())
+                .field("tid", t.worker.to_string())
+                .field("ts", us(t.start_ns))
+                .field("dur", us(t.wall_ns))
+                .field("args", Obj::new().str("system", &t.system).build())
+                .build(),
+        );
+    }
+    envelope(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::TaskTiming;
+    use crate::obs::trace::VSpan;
+    use crate::serve::jsonl::{self, Value};
+
+    fn sample_tasks() -> Vec<TaskSpans> {
+        vec![TaskSpans {
+            index: 0,
+            system: "hami".to_string(),
+            label: "churn".to_string(),
+            spans: vec![
+                VSpan::instant("lifecycle", "arrive", Some(1), 0),
+                VSpan::complete("request", "request", Some(1), 1_500, 2_750_250),
+            ],
+        }]
+    }
+
+    #[test]
+    fn virtual_trace_parses_with_the_expected_keys() {
+        let text = render_virtual(&sample_tasks());
+        let v = jsonl::parse(text.trim_end()).expect("valid JSON");
+        assert_eq!(v.get("displayTimeUnit").and_then(Value::as_str), Some("ms"));
+        let events = v.get("traceEvents").and_then(Value::as_array).unwrap();
+        // process_name + thread_name(tenant 1) + 2 spans.
+        assert_eq!(events.len(), 4);
+        for e in events {
+            for key in ["ph", "name", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "event lacks {key}");
+            }
+        }
+        let span = events.last().unwrap();
+        assert_eq!(span.get("ph").and_then(Value::as_str), Some("X"));
+        // 1_500 ns = 1.5 µs; 2_750_250 − 1_500 ns = 2748.75 µs.
+        assert_eq!(span.get("ts").and_then(Value::as_f64), Some(1.5));
+        assert_eq!(span.get("dur").and_then(Value::as_f64), Some(2748.75));
+        let marker = &events[2];
+        assert_eq!(marker.get("ph").and_then(Value::as_str), Some("i"));
+        assert_eq!(marker.get("s").and_then(Value::as_str), Some("t"));
+    }
+
+    #[test]
+    fn virtual_trace_is_a_pure_function_of_the_spans() {
+        assert_eq!(render_virtual(&sample_tasks()), render_virtual(&sample_tasks()));
+    }
+
+    #[test]
+    fn wall_trace_renders_one_lane_per_worker() {
+        let stats = ExecutionStats {
+            jobs: 2,
+            tasks: vec![
+                TaskTiming {
+                    system: "hami".into(),
+                    metric_id: "OH-001",
+                    wall_ns: 2_500_000,
+                    start_ns: 1_000,
+                    worker: 1,
+                },
+                TaskTiming {
+                    system: "fcsp".into(),
+                    metric_id: "OH-002",
+                    wall_ns: 1_000_000,
+                    start_ns: 0,
+                    worker: 0,
+                },
+            ],
+            wall_ns: 3_000_000,
+        };
+        let text = render_wall(&stats);
+        let v = jsonl::parse(text.trim_end()).expect("valid JSON");
+        let events = v.get("traceEvents").and_then(Value::as_array).unwrap();
+        // process_name + 2 thread_names + 2 task spans.
+        assert_eq!(events.len(), 5);
+        let span = &events[3];
+        assert_eq!(span.get("name").and_then(Value::as_str), Some("OH-001"));
+        assert_eq!(span.get("tid").and_then(Value::as_u64), Some(1));
+        assert_eq!(span.get("dur").and_then(Value::as_f64), Some(2500.0));
+        assert_eq!(
+            span.get("args").and_then(|a| a.get("system")).and_then(Value::as_str),
+            Some("hami")
+        );
+    }
+}

@@ -1,0 +1,485 @@
+//! Daemon telemetry: counters, bucketed histograms, and their renders.
+//!
+//! The serve daemon owns one [`Telemetry`] for its whole lifetime (no
+//! process-global state — tests run many daemons in one process) and
+//! folds every job lifecycle transition into it. A `stats` protocol
+//! request snapshots it together with the instantaneous queue picture
+//! into a [`StatsSnapshot`], which travels as one NDJSON object and
+//! renders client-side as a human table or Prometheus text exposition
+//! format (`gvbench jobs --stats` / `--stats-format prometheus`).
+//!
+//! All values here are **host-side operational telemetry** — wall-clock
+//! waits, throughputs, queue depths. Like the JSON `execution` objects,
+//! they are reported and scraped, never gated or byte-compared.
+
+use crate::anyhow::{Context, Result};
+use crate::report::json::{array, num, Obj};
+use crate::serve::jsonl::Value;
+
+/// Bucket upper bounds (ms) for the queue-wait / idle-time histograms.
+pub const LATENCY_BOUNDS_MS: &[f64] = &[1.0, 5.0, 25.0, 100.0, 500.0, 2500.0];
+
+/// Bucket upper bounds (tasks/s) for the per-job throughput histogram.
+pub const THROUGHPUT_BOUNDS: &[f64] = &[1.0, 10.0, 100.0, 1000.0, 10000.0];
+
+/// A fixed-bound bucketed histogram (cumulative-bucket semantics are
+/// applied at render time, Prometheus-style).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    /// Per-bucket counts; one extra slot for the `+Inf` overflow bucket.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &'static [f64]) -> Histogram {
+        Histogram { bounds, counts: vec![0; bounds.len() + 1], sum: 0.0, count: 0 }
+    }
+
+    /// Record one observation (NaN observations are dropped).
+    pub fn record(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        let slot = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.counts[slot] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            bounds: self.bounds.to_vec(),
+            counts: self.counts.clone(),
+            sum: self.sum,
+            count: self.count,
+        }
+    }
+}
+
+/// A histogram frozen for the wire: per-bucket counts aligned with
+/// `bounds` plus one overflow slot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    fn empty() -> HistSnapshot {
+        HistSnapshot { bounds: Vec::new(), counts: vec![0], sum: 0.0, count: 0 }
+    }
+
+    fn to_json(&self) -> String {
+        Obj::new()
+            .field("bounds", array(self.bounds.iter().map(|b| num(*b)).collect()))
+            .field("counts", array(self.counts.iter().map(u64::to_string).collect()))
+            .num("sum", self.sum)
+            .field("count", self.count.to_string())
+            .build()
+    }
+
+    fn from_value(v: &Value) -> Result<HistSnapshot> {
+        let bounds = v
+            .get("bounds")
+            .and_then(Value::as_array)
+            .context("histogram lacks bounds")?
+            .iter()
+            .map(|b| b.as_f64().context("non-numeric histogram bound"))
+            .collect::<Result<Vec<f64>>>()?;
+        let counts = v
+            .get("counts")
+            .and_then(Value::as_array)
+            .context("histogram lacks counts")?
+            .iter()
+            .map(|c| c.as_u64().context("non-integral histogram count"))
+            .collect::<Result<Vec<u64>>>()?;
+        Ok(HistSnapshot {
+            bounds,
+            counts,
+            sum: v.get("sum").and_then(Value::as_f64).unwrap_or(0.0),
+            count: v.get("count").and_then(Value::as_u64).context("histogram lacks count")?,
+        })
+    }
+}
+
+/// The daemon's lifetime accumulators. Owned by the daemon's shared
+/// state, mutated under its lock at each lifecycle transition.
+pub struct Telemetry {
+    /// Jobs accepted since daemon start (monotonic).
+    pub jobs_submitted: u64,
+    /// Jobs that reached `finished` (monotonic).
+    pub jobs_finished: u64,
+    /// Jobs that reached `failed` (monotonic).
+    pub jobs_failed: u64,
+    /// Executor tasks completed across all jobs (monotonic).
+    pub tasks_completed: u64,
+    /// Submit→schedule latency per job, ms.
+    pub queue_wait_ms: Histogram,
+    /// Scheduler idle gap before each job, ms.
+    pub scheduler_idle_ms: Histogram,
+    /// Worker-side idle capacity per job, ms.
+    pub worker_idle_ms: Histogram,
+    /// Per-job task throughput, tasks/s of job wall-clock.
+    pub job_tasks_per_sec: Histogram,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry {
+            jobs_submitted: 0,
+            jobs_finished: 0,
+            jobs_failed: 0,
+            tasks_completed: 0,
+            queue_wait_ms: Histogram::new(LATENCY_BOUNDS_MS),
+            scheduler_idle_ms: Histogram::new(LATENCY_BOUNDS_MS),
+            worker_idle_ms: Histogram::new(LATENCY_BOUNDS_MS),
+            job_tasks_per_sec: Histogram::new(THROUGHPUT_BOUNDS),
+        }
+    }
+
+    /// Fold in one job's schedule-time accounting.
+    pub fn record_scheduled(&mut self, queue_wait_ms: f64, scheduler_idle_ms: f64) {
+        self.queue_wait_ms.record(queue_wait_ms);
+        self.scheduler_idle_ms.record(scheduler_idle_ms);
+    }
+
+    /// Fold in one job's terminal accounting.
+    pub fn record_done(&mut self, ok: bool, tasks: u64, wall_ms: f64, worker_idle_ms: f64) {
+        if ok {
+            self.jobs_finished += 1;
+        } else {
+            self.jobs_failed += 1;
+        }
+        self.tasks_completed += tasks;
+        self.worker_idle_ms.record(worker_idle_ms);
+        if wall_ms > 0.0 {
+            self.job_tasks_per_sec.record(tasks as f64 / (wall_ms / 1e3));
+        }
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Telemetry {
+        Telemetry::new()
+    }
+}
+
+/// The `stats` answer: lifetime accumulators plus the instantaneous
+/// queue/state picture at snapshot time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsSnapshot {
+    /// Worker threads in the daemon's pool.
+    pub workers: u64,
+    /// Jobs accepted but not yet claimed by the scheduler.
+    pub queue_depth: u64,
+    /// Current job counts per state (`queued`/`running`/`finished`/`failed`).
+    pub jobs_queued: u64,
+    pub jobs_running: u64,
+    pub jobs_finished: u64,
+    pub jobs_failed: u64,
+    /// Jobs accepted since daemon start.
+    pub jobs_submitted: u64,
+    /// Executor tasks completed across all jobs.
+    pub tasks_completed: u64,
+    pub queue_wait_ms: HistSnapshot,
+    pub scheduler_idle_ms: HistSnapshot,
+    pub worker_idle_ms: HistSnapshot,
+    pub job_tasks_per_sec: HistSnapshot,
+}
+
+impl StatsSnapshot {
+    /// Freeze the lifetime accumulators together with the daemon's
+    /// instantaneous queue picture.
+    pub fn capture(
+        t: &Telemetry,
+        workers: u64,
+        queue_depth: u64,
+        jobs_queued: u64,
+        jobs_running: u64,
+    ) -> StatsSnapshot {
+        StatsSnapshot {
+            workers,
+            queue_depth,
+            jobs_queued,
+            jobs_running,
+            jobs_finished: t.jobs_finished,
+            jobs_failed: t.jobs_failed,
+            jobs_submitted: t.jobs_submitted,
+            tasks_completed: t.tasks_completed,
+            queue_wait_ms: t.queue_wait_ms.snapshot(),
+            scheduler_idle_ms: t.scheduler_idle_ms.snapshot(),
+            worker_idle_ms: t.worker_idle_ms.snapshot(),
+            job_tasks_per_sec: t.job_tasks_per_sec.snapshot(),
+        }
+    }
+
+    /// Encode as the JSON payload of a `stats` response (one line).
+    pub fn to_json(&self) -> String {
+        Obj::new()
+            .field("workers", self.workers.to_string())
+            .field("queue_depth", self.queue_depth.to_string())
+            .field(
+                "jobs",
+                Obj::new()
+                    .field("queued", self.jobs_queued.to_string())
+                    .field("running", self.jobs_running.to_string())
+                    .field("finished", self.jobs_finished.to_string())
+                    .field("failed", self.jobs_failed.to_string())
+                    .build(),
+            )
+            .field("jobs_submitted", self.jobs_submitted.to_string())
+            .field("tasks_completed", self.tasks_completed.to_string())
+            .field("queue_wait_ms", self.queue_wait_ms.to_json())
+            .field("scheduler_idle_ms", self.scheduler_idle_ms.to_json())
+            .field("worker_idle_ms", self.worker_idle_ms.to_json())
+            .field("job_tasks_per_sec", self.job_tasks_per_sec.to_json())
+            .build()
+    }
+
+    /// Decode a parsed `stats` response payload.
+    pub fn from_value(v: &Value) -> Result<StatsSnapshot> {
+        let u = |key: &str| -> Result<u64> {
+            v.get(key).and_then(Value::as_u64).with_context(|| format!("stats lacks {key}"))
+        };
+        let jobs = v.get("jobs").context("stats lacks jobs")?;
+        let state = |key: &str| -> Result<u64> {
+            jobs.get(key)
+                .and_then(Value::as_u64)
+                .with_context(|| format!("stats jobs lacks {key}"))
+        };
+        let hist = |key: &str| -> Result<HistSnapshot> {
+            match v.get(key) {
+                Some(h) => HistSnapshot::from_value(h)
+                    .with_context(|| format!("bad {key} histogram")),
+                None => Ok(HistSnapshot::empty()),
+            }
+        };
+        Ok(StatsSnapshot {
+            workers: u("workers")?,
+            queue_depth: u("queue_depth")?,
+            jobs_queued: state("queued")?,
+            jobs_running: state("running")?,
+            jobs_finished: state("finished")?,
+            jobs_failed: state("failed")?,
+            jobs_submitted: u("jobs_submitted")?,
+            tasks_completed: u("tasks_completed")?,
+            queue_wait_ms: hist("queue_wait_ms")?,
+            scheduler_idle_ms: hist("scheduler_idle_ms")?,
+            worker_idle_ms: hist("worker_idle_ms")?,
+            job_tasks_per_sec: hist("job_tasks_per_sec")?,
+        })
+    }
+
+    /// Human-readable table (`gvbench jobs --stats`).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("counter                value\n");
+        out.push_str("---------------------  -----\n");
+        let mut row = |name: &str, value: String| {
+            out.push_str(&format!("{name:<21}  {value}\n"));
+        };
+        row("workers", self.workers.to_string());
+        row("queue depth", self.queue_depth.to_string());
+        row("jobs queued", self.jobs_queued.to_string());
+        row("jobs running", self.jobs_running.to_string());
+        row("jobs finished", self.jobs_finished.to_string());
+        row("jobs failed", self.jobs_failed.to_string());
+        row("jobs submitted", self.jobs_submitted.to_string());
+        row("tasks completed", self.tasks_completed.to_string());
+        let mut hist = |name: &str, h: &HistSnapshot| {
+            let mean = if h.count > 0 { h.sum / h.count as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "{name:<21}  n={} mean={mean:.3}\n",
+                h.count
+            ));
+        };
+        hist("queue wait (ms)", &self.queue_wait_ms);
+        hist("scheduler idle (ms)", &self.scheduler_idle_ms);
+        hist("worker idle (ms)", &self.worker_idle_ms);
+        hist("job tasks/sec", &self.job_tasks_per_sec);
+        out
+    }
+
+    /// Prometheus text exposition format (`--stats-format prometheus`).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut gauge = |name: &str, help: &str, v: u64| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+        };
+        gauge("gvbench_workers", "Worker threads in the daemon pool.", self.workers);
+        gauge("gvbench_queue_depth", "Jobs accepted but not yet scheduled.", self.queue_depth);
+        out.push_str("# HELP gvbench_jobs Current jobs per lifecycle state.\n");
+        out.push_str("# TYPE gvbench_jobs gauge\n");
+        for (state, v) in [
+            ("queued", self.jobs_queued),
+            ("running", self.jobs_running),
+            ("finished", self.jobs_finished),
+            ("failed", self.jobs_failed),
+        ] {
+            out.push_str(&format!("gvbench_jobs{{state=\"{state}\"}} {v}\n"));
+        }
+        let mut counter = |name: &str, help: &str, v: u64| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+        };
+        counter(
+            "gvbench_jobs_submitted_total",
+            "Jobs accepted since daemon start.",
+            self.jobs_submitted,
+        );
+        counter(
+            "gvbench_tasks_completed_total",
+            "Executor tasks completed across all jobs.",
+            self.tasks_completed,
+        );
+        let mut hist = |name: &str, help: &str, h: &HistSnapshot| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+            let mut cumulative = 0u64;
+            for (i, c) in h.counts.iter().enumerate() {
+                cumulative += c;
+                let le = match h.bounds.get(i) {
+                    Some(b) => prom_bound(*b),
+                    None => "+Inf".to_string(),
+                };
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cumulative}\n"));
+            }
+            out.push_str(&format!("{name}_sum {}\n", prom_float(h.sum)));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        };
+        hist(
+            "gvbench_queue_wait_ms",
+            "Submit-to-schedule latency per job, ms.",
+            &self.queue_wait_ms,
+        );
+        hist(
+            "gvbench_scheduler_idle_ms",
+            "Scheduler idle gap before each job, ms.",
+            &self.scheduler_idle_ms,
+        );
+        hist(
+            "gvbench_worker_idle_ms",
+            "Worker-side idle capacity per job, ms.",
+            &self.worker_idle_ms,
+        );
+        hist(
+            "gvbench_job_tasks_per_sec",
+            "Per-job task throughput, tasks per second.",
+            &self.job_tasks_per_sec,
+        );
+        out
+    }
+}
+
+/// A bucket bound for a `le` label: integral bounds print without a
+/// fraction (`le="25"`), matching common exposition style.
+fn prom_bound(b: f64) -> String {
+    if b == b.trunc() {
+        (b as i64).to_string()
+    } else {
+        b.to_string()
+    }
+}
+
+/// A float sample value; exposition format wants a plain decimal.
+fn prom_float(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        (v as i64).to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::jsonl;
+
+    fn sample() -> StatsSnapshot {
+        let mut t = Telemetry::new();
+        t.jobs_submitted = 3;
+        t.record_scheduled(0.5, 12.0);
+        t.record_scheduled(30.0, 0.25);
+        t.record_done(true, 4, 2000.0, 3.0);
+        t.record_done(false, 0, 1.0, 0.0);
+        StatsSnapshot {
+            workers: 2,
+            queue_depth: 1,
+            jobs_queued: 1,
+            jobs_running: 0,
+            jobs_finished: 1,
+            jobs_failed: 1,
+            jobs_submitted: t.jobs_submitted,
+            tasks_completed: t.tasks_completed,
+            queue_wait_ms: t.queue_wait_ms.snapshot(),
+            scheduler_idle_ms: t.scheduler_idle_ms.snapshot(),
+            worker_idle_ms: t.worker_idle_ms.snapshot(),
+            job_tasks_per_sec: t.job_tasks_per_sec.snapshot(),
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(LATENCY_BOUNDS_MS);
+        h.record(0.5); // le=1
+        h.record(1.0); // le=1 (inclusive bound)
+        h.record(80.0); // le=100
+        h.record(1e6); // +Inf overflow
+        h.record(f64::NAN); // dropped
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.counts[0], 2);
+        assert_eq!(s.counts[3], 1);
+        assert_eq!(*s.counts.last().unwrap(), 1);
+        assert_eq!(s.sum, 0.5 + 1.0 + 80.0 + 1e6);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_jsonl() {
+        let snap = sample();
+        let wire = snap.to_json();
+        let back = StatsSnapshot::from_value(&jsonl::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.workers, 2);
+        assert_eq!(back.queue_depth, 1);
+        assert_eq!(back.jobs_finished, 1);
+        assert_eq!(back.jobs_failed, 1);
+        assert_eq!(back.jobs_submitted, 3);
+        assert_eq!(back.tasks_completed, 4);
+        assert_eq!(back.queue_wait_ms.count, 2);
+        assert_eq!(back.queue_wait_ms.counts, snap.queue_wait_ms.counts);
+        assert_eq!(back.job_tasks_per_sec.count, 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let text = sample().render_prometheus();
+        assert!(text.contains("# TYPE gvbench_workers gauge\ngvbench_workers 2\n"));
+        assert!(text.contains("gvbench_jobs{state=\"finished\"} 1\n"));
+        assert!(text.contains("# TYPE gvbench_jobs_submitted_total counter\n"));
+        assert!(text.contains("# TYPE gvbench_queue_wait_ms histogram\n"));
+        // Buckets are cumulative and end at +Inf == _count.
+        assert!(text.contains("gvbench_queue_wait_ms_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("gvbench_queue_wait_ms_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("gvbench_queue_wait_ms_count 2\n"));
+        // Every non-comment line is `name{labels} value` or `name value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad sample value in `{line}`");
+            assert!(parts.next().is_some(), "no metric name in `{line}`");
+        }
+    }
+
+    #[test]
+    fn table_lists_every_counter() {
+        let text = sample().render_table();
+        for needle in
+            ["workers", "queue depth", "jobs finished", "tasks completed", "queue wait (ms)"]
+        {
+            assert!(text.contains(needle), "table lacks {needle}:\n{text}");
+        }
+    }
+}

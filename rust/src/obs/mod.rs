@@ -1,0 +1,31 @@
+//! Observability: span tracing and daemon telemetry.
+//!
+//! The benchmark's reporting surfaces are *reductions* — windowed series,
+//! summary rows, scorecards. This module keeps the un-reduced story: what
+//! happened, when, on which lane. It has two halves, both zero-dependency
+//! like the rest of the crate:
+//!
+//! - **Span tracing** ([`trace`] + [`chrome`]): replay engines record
+//!   [`trace::VSpan`]s (complete spans and instant markers) into
+//!   per-task buffers, the executor seam merges them deterministically
+//!   by input index ([`trace::SpanSink`]), and [`chrome`] renders Chrome
+//!   trace-event JSON viewable in Perfetto / `chrome://tracing`. Two
+//!   clock domains never mix in one file: *virtual-time* traces
+//!   (dynsim / cluster replays) derive purely from the deterministic
+//!   replay and are byte-identical at any `--jobs`, while *wall-clock*
+//!   traces (executor task lanes for `run` / `sweep`) carry host
+//!   timings and are quarantined exactly like the JSON `execution`
+//!   objects — reported, never gated.
+//! - **Telemetry** ([`counters`]): plain counters and bucketed
+//!   histograms the serve daemon aggregates over its lifetime (jobs per
+//!   state, queue depth, queue-wait / scheduler-idle / worker-idle,
+//!   task throughput), snapshotted over the NDJSON `stats` request and
+//!   rendered as a table or Prometheus text exposition format for
+//!   scraping a warm daemon.
+//!
+//! See `docs/observability.md` for the span model, the clock-domain
+//! quarantine rule, and viewer/scrape walkthroughs.
+
+pub mod chrome;
+pub mod counters;
+pub mod trace;

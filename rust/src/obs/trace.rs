@@ -1,0 +1,142 @@
+//! Span records and their deterministic collection across worker threads.
+//!
+//! A [`VSpan`] is one event on a replay's **virtual-time** axis: a
+//! complete span (known start and duration) or an instant marker. The
+//! replay engines (`dynsim::engine`, `cluster`) record them as pure
+//! observations — recording must never perturb the replay's numbers,
+//! which stay byte-identical with tracing on or off.
+//!
+//! One replay task's spans travel as a [`TaskSpans`] bundle. Worker
+//! threads push bundles into a shared [`SpanSink`] in *completion*
+//! order; [`SpanSink::drain_sorted`] re-orders them by input index, so
+//! the merged trace is a pure function of the task list — bit-identical
+//! at any worker count, mirroring the executor's result-slot contract.
+
+use std::sync::Mutex;
+
+use crate::simgpu::TenantId;
+
+/// One virtual-time event: a complete span or an instant marker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VSpan {
+    /// Event category (Chrome `cat`): `request`, `train`, `lifecycle`,
+    /// `fault`, `placement`, …
+    pub cat: &'static str,
+    /// Event name (Chrome `name`): `request`, `prefill`, `fwd`,
+    /// `allreduce`, `arrive`, …
+    pub name: &'static str,
+    /// Tenant lane the event belongs to; `None` renders on the
+    /// timeline-level lane 0.
+    pub tenant: Option<TenantId>,
+    /// Start offset on the virtual-time axis, ns.
+    pub start_ns: u64,
+    /// Duration, ns; `None` marks an instant event.
+    pub dur_ns: Option<u64>,
+}
+
+impl VSpan {
+    /// A complete span from `start_ns` to `end_ns` (duration saturates
+    /// at zero, so a degenerate span never renders end-before-start).
+    pub fn complete(
+        cat: &'static str,
+        name: &'static str,
+        tenant: Option<TenantId>,
+        start_ns: u64,
+        end_ns: u64,
+    ) -> VSpan {
+        VSpan { cat, name, tenant, start_ns, dur_ns: Some(end_ns.saturating_sub(start_ns)) }
+    }
+
+    /// An instant marker at `at_ns`.
+    pub fn instant(
+        cat: &'static str,
+        name: &'static str,
+        tenant: Option<TenantId>,
+        at_ns: u64,
+    ) -> VSpan {
+        VSpan { cat, name, tenant, start_ns: at_ns, dur_ns: None }
+    }
+
+    /// End offset, ns (the start itself for instant events).
+    pub fn end_ns(&self) -> u64 {
+        self.start_ns + self.dur_ns.unwrap_or(0)
+    }
+}
+
+/// The spans of one executor task (one replayed timeline / fleet cell),
+/// tagged with its input coordinates for deterministic merging.
+#[derive(Clone, Debug)]
+pub struct TaskSpans {
+    /// Input index in the executor's task list.
+    pub index: usize,
+    /// System key of the task (`native` / `hami` / …).
+    pub system: String,
+    /// Timeline label (scenario key or fleet-cell label).
+    pub label: String,
+    /// Spans in the order the replay recorded them.
+    pub spans: Vec<VSpan>,
+}
+
+/// Shared collection point for [`TaskSpans`] pushed from worker threads.
+///
+/// Completion order is nondeterministic; [`SpanSink::drain_sorted`]
+/// restores input order, which is all the determinism the trace needs —
+/// within one task the replay records spans deterministically.
+#[derive(Default)]
+pub struct SpanSink {
+    tasks: Mutex<Vec<TaskSpans>>,
+}
+
+impl SpanSink {
+    pub fn new() -> SpanSink {
+        SpanSink::default()
+    }
+
+    /// Record one task's spans (called from worker threads).
+    pub fn push(&self, t: TaskSpans) {
+        self.tasks.lock().unwrap().push(t);
+    }
+
+    /// Take every recorded bundle, re-ordered by input index.
+    pub fn drain_sorted(&self) -> Vec<TaskSpans> {
+        let mut tasks = std::mem::take(&mut *self.tasks.lock().unwrap());
+        tasks.sort_by_key(|t| t.index);
+        tasks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_spans_saturate_and_report_their_end() {
+        let s = VSpan::complete("request", "request", Some(1), 100, 350);
+        assert_eq!(s.dur_ns, Some(250));
+        assert_eq!(s.end_ns(), 350);
+        // A clock hiccup must not produce end-before-start.
+        let s = VSpan::complete("request", "request", Some(1), 400, 350);
+        assert_eq!(s.dur_ns, Some(0));
+        let i = VSpan::instant("lifecycle", "arrive", None, 42);
+        assert_eq!(i.dur_ns, None);
+        assert_eq!(i.end_ns(), 42);
+    }
+
+    #[test]
+    fn sink_merges_by_input_index_regardless_of_push_order() {
+        let sink = SpanSink::new();
+        for index in [2usize, 0, 1] {
+            sink.push(TaskSpans {
+                index,
+                system: "hami".to_string(),
+                label: format!("sc{index}"),
+                spans: vec![VSpan::instant("lifecycle", "arrive", Some(1), index as u64)],
+            });
+        }
+        let tasks = sink.drain_sorted();
+        assert_eq!(tasks.iter().map(|t| t.index).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(tasks[1].label, "sc1");
+        // Draining empties the sink.
+        assert!(sink.drain_sorted().is_empty());
+    }
+}

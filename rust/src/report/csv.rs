@@ -81,8 +81,8 @@ mod tests {
         let stats = ExecutionStats {
             jobs: 2,
             tasks: vec![
-                TaskTiming { system: "hami".into(), metric_id: "OH-001", wall_ns: 2_500_000, worker: 0 },
-                TaskTiming { system: "hami".into(), metric_id: "OH-002", wall_ns: 1_000_000, worker: 1 },
+                TaskTiming { system: "hami".into(), metric_id: "OH-001", wall_ns: 2_500_000, start_ns: 0, worker: 0 },
+                TaskTiming { system: "hami".into(), metric_id: "OH-002", wall_ns: 1_000_000, start_ns: 500_000, worker: 1 },
             ],
             wall_ns: 3_000_000,
         };

@@ -189,6 +189,15 @@ pub fn jobs(socket: &Path) -> Result<Vec<JobRow>> {
     Ok(rows)
 }
 
+/// Fetch the daemon's telemetry snapshot (`gvbench jobs --stats`).
+pub fn stats(socket: &Path) -> Result<crate::obs::counters::StatsSnapshot> {
+    let mut conn = Conn::open(socket)?;
+    conn.send(&proto::stats_request())?;
+    let v = conn.read_ok()?;
+    let payload = v.get("stats").context("stats response has no payload")?;
+    crate::obs::counters::StatsSnapshot::from_value(payload)
+}
+
 /// Ask the daemon to shut down (it drains already-accepted jobs first).
 pub fn shutdown(socket: &Path) -> Result<()> {
     let mut conn = Conn::open(socket)?;

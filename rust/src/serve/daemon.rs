@@ -40,6 +40,7 @@ use crate::cli::commands;
 use crate::coordinator::executor::{
     resolve_jobs, Backend, ExecutionStats, Observer, TaskDone, WorkerPool,
 };
+use crate::obs::counters::{StatsSnapshot, Telemetry};
 use crate::report::Format;
 
 use super::proto::{self, ExecSummary, Request};
@@ -102,12 +103,17 @@ struct DaemonState {
     queue: JobQueue,
     next_id: u64,
     stop: bool,
+    /// Lifetime counters and histograms, folded in at each lifecycle
+    /// transition and answered whole by the `stats` op.
+    telemetry: Telemetry,
 }
 
 struct Shared {
     state: Mutex<DaemonState>,
     cv: Condvar,
     socket: PathBuf,
+    /// Resolved pool size, reported by the `stats` op.
+    workers: usize,
 }
 
 impl Shared {
@@ -168,9 +174,11 @@ impl Daemon {
                 queue: JobQueue::new(),
                 next_id: 1,
                 stop: false,
+                telemetry: Telemetry::new(),
             }),
             cv: Condvar::new(),
             socket: cfg.socket,
+            workers,
         });
         let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let scheduler = {
@@ -261,6 +269,7 @@ fn handle_connection(stream: UnixStream, shared: &Shared) -> std::io::Result<()>
                 writeln!(writer, "{}", submit_job(shared, argv, priority))?;
             }
             Ok(Request::Jobs) => writeln!(writer, "{}", jobs_listing(shared))?,
+            Ok(Request::Stats) => writeln!(writer, "{}", stats_answer(shared))?,
             Ok(Request::Watch { job }) => watch_job(shared, &mut writer, job)?,
             Ok(Request::Report { job }) => writeln!(writer, "{}", report_when_done(shared, job))?,
             Ok(Request::Shutdown) => {
@@ -302,9 +311,26 @@ fn submit_job(shared: &Shared, argv: Vec<String>, priority: i64) -> String {
         },
     );
     st.queue.push(id, priority);
+    st.telemetry.jobs_submitted += 1;
     drop(st);
     shared.cv.notify_all();
     proto::submit_response(id)
+}
+
+/// Answer the `stats` op: freeze the lifetime telemetry together with
+/// the instantaneous queue picture under one lock acquisition, so the
+/// snapshot is internally consistent.
+fn stats_answer(shared: &Shared) -> String {
+    let st = shared.state.lock().unwrap();
+    let count = |s: JobState| st.jobs.values().filter(|j| j.state == s).count() as u64;
+    let snap = StatsSnapshot::capture(
+        &st.telemetry,
+        shared.workers as u64,
+        st.queue.len() as u64,
+        count(JobState::Queued),
+        count(JobState::Running),
+    );
+    proto::stats_response(&snap)
 }
 
 fn jobs_listing(shared: &Shared) -> String {
@@ -392,7 +418,9 @@ fn scheduler_loop(shared: &Arc<Shared>, workers: usize) {
                     j.state = JobState::Running;
                     let queue_wait_ms = j.queued_at.elapsed().as_secs_f64() * 1e3;
                     j.events.push(proto::event_scheduled(id, queue_wait_ms, scheduler_idle_ms));
-                    break Some((id, j.argv.clone(), queue_wait_ms, scheduler_idle_ms));
+                    let argv = j.argv.clone();
+                    st.telemetry.record_scheduled(queue_wait_ms, scheduler_idle_ms);
+                    break Some((id, argv, queue_wait_ms, scheduler_idle_ms));
                 }
                 if st.stop {
                     break None;
@@ -432,7 +460,10 @@ fn run_job(
         })
     };
     let result = parse_job_args(argv).and_then(|args| execute_job(&args, pool, observer));
-    let mut st = shared.state.lock().unwrap();
+    let mut guard = shared.state.lock().unwrap();
+    // Split the guard so the job record and the telemetry accumulators
+    // can be updated in one critical section.
+    let st = &mut *guard;
     let j = st.jobs.get_mut(&id).expect("running job has a record");
     match result {
         Ok(out) => {
@@ -450,15 +481,22 @@ fn run_job(
             j.report = Some(out.report);
             j.passed = out.passed;
             j.state = JobState::Finished;
+            st.telemetry.record_done(
+                true,
+                summary.tasks as u64,
+                summary.wall_ms,
+                summary.worker_idle_ms,
+            );
         }
         Err(e) => {
             let msg = e.to_string();
             j.events.push(proto::event_failed(id, &msg));
             j.error = Some(msg);
             j.state = JobState::Failed;
+            st.telemetry.record_done(false, 0, 0.0, 0.0);
         }
     }
-    drop(st);
+    drop(guard);
     shared.cv.notify_all();
 }
 

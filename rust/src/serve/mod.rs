@@ -24,6 +24,12 @@
 //! on prover-service job results that report scheduler idle waits as
 //! first-class outcomes. See `docs/serve.md` for the operator guide.
 //!
+//! The same accounting feeds the daemon's lifetime telemetry
+//! ([`crate::obs::counters::Telemetry`]): counters and bucketed
+//! histograms answered whole by the `stats` op and rendered client-side
+//! as a table (`gvbench jobs --stats`) or Prometheus text exposition
+//! format (`--stats-format prometheus`).
+//!
 //! Layout: [`jsonl`] (minimal JSON parser — the crate's first, since
 //! every other surface only *renders* JSON), [`proto`] (request/event
 //! wire format), [`queue`] (priority-then-FIFO ordering), [`daemon`]

@@ -15,6 +15,9 @@
 //!   lines from the beginning, ending with the terminal event
 //! - `{"op": "report", "job": N}` → blocks until the job is terminal,
 //!   then one `{"ok": true, "job": N, "report": "...", ...}` line
+//! - `{"op": "stats"}` → `{"ok": true, "stats": {...}}` with the
+//!   daemon's telemetry counters and histograms (see
+//!   [`crate::obs::counters::StatsSnapshot`])
 //! - `{"op": "shutdown"}` → `{"ok": true}`; the daemon drains its queue
 //!   and exits
 //!
@@ -40,8 +43,16 @@ pub const JOB_COMMANDS: &[&str] = &["run", "sweep", "dynamics", "cluster", "regr
 /// file outputs are replaced by the report stream, config files would
 /// make results depend on daemon-host state the submitter can't see,
 /// and the worker count is the daemon's, fixed at `gvbench serve` time.
-pub const FORBIDDEN_FLAGS: &[&str] =
-    &["--out", "--summary-out", "--config", "--report-json", "--report-md", "--jobs"];
+pub const FORBIDDEN_FLAGS: &[&str] = &[
+    "--out",
+    "--summary-out",
+    "--config",
+    "--report-json",
+    "--report-md",
+    "--jobs",
+    "--trace-out",
+    "--export-trace",
+];
 
 /// One parsed request line.
 #[derive(Clone, Debug, PartialEq)]
@@ -50,6 +61,7 @@ pub enum Request {
     Jobs,
     Watch { job: u64 },
     Report { job: u64 },
+    Stats,
     Shutdown,
 }
 
@@ -83,8 +95,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
         "jobs" => Ok(Request::Jobs),
         "watch" => Ok(Request::Watch { job: job_field(&v)? }),
         "report" => Ok(Request::Report { job: job_field(&v)? }),
+        "stats" => Ok(Request::Stats),
         "shutdown" => Ok(Request::Shutdown),
-        other => bail!("unknown op `{other}` (expected submit, jobs, watch, report or shutdown)"),
+        other => {
+            bail!("unknown op `{other}` (expected submit, jobs, watch, report, stats or shutdown)")
+        }
     }
 }
 
@@ -144,6 +159,10 @@ pub fn report_request(job: u64) -> String {
     Obj::new().str("op", "report").field("job", job.to_string()).build()
 }
 
+pub fn stats_request() -> String {
+    Obj::new().str("op", "stats").build()
+}
+
 pub fn shutdown_request() -> String {
     Obj::new().str("op", "shutdown").build()
 }
@@ -170,6 +189,12 @@ pub fn report_response_ok(job: u64, report: &str, passed: Option<bool>) -> Strin
         o = o.bool("passed", p);
     }
     o.str("report", report).build()
+}
+
+/// The daemon's telemetry snapshot, nested under `stats` so the
+/// envelope stays uniform with every other `ok` response.
+pub fn stats_response(snap: &crate::obs::counters::StatsSnapshot) -> String {
+    Obj::new().bool("ok", true).field("stats", snap.to_json()).build()
 }
 
 /// One row of the `jobs` listing.
@@ -282,6 +307,7 @@ mod tests {
         assert_eq!(parse_request(&jobs_request()).unwrap(), Request::Jobs);
         assert_eq!(parse_request(&watch_request(7)).unwrap(), Request::Watch { job: 7 });
         assert_eq!(parse_request(&report_request(9)).unwrap(), Request::Report { job: 9 });
+        assert_eq!(parse_request(&stats_request()).unwrap(), Request::Stats);
         assert_eq!(parse_request(&shutdown_request()).unwrap(), Request::Shutdown);
     }
 
@@ -299,6 +325,7 @@ mod tests {
         assert!(e.contains("missing the string `op`"), "{e}");
         let e = parse_request(r#"{"op": "teleport"}"#).unwrap_err().to_string();
         assert!(e.contains("unknown op `teleport`"), "{e}");
+        assert!(e.contains("stats"), "the op listing names every verb: {e}");
         let e = parse_request(r#"{"op": "watch"}"#).unwrap_err().to_string();
         assert!(e.contains("integer `job`"), "{e}");
         let e = parse_request(r#"{"op": "submit", "argv": [1]}"#).unwrap_err().to_string();
@@ -331,6 +358,26 @@ mod tests {
         // Semantic errors pass submit-time validation: they are the
         // daemon's schedule-time `failed` path.
         assert!(validate_job_argv(&s(&["run", "--system", "not-a-system"])).is_ok());
+    }
+
+    #[test]
+    fn stats_response_round_trips_through_the_snapshot_parser() {
+        use crate::obs::counters::{StatsSnapshot, Telemetry};
+        let mut t = Telemetry::default();
+        t.jobs_submitted = 3;
+        t.record_scheduled(1.5, 0.25);
+        t.record_done(true, 8, 12.0, 2.0);
+        t.record_done(false, 0, 0.5, 0.0);
+        let snap = StatsSnapshot::capture(&t, 4, 0, 1, 0);
+        let line = stats_response(&snap);
+        assert!(!line.contains('\n'), "response must be one line: {line}");
+        let v = super::super::jsonl::parse(&line).unwrap();
+        assert_eq!(v.get("ok"), Some(&super::super::jsonl::Value::Bool(true)));
+        let parsed = StatsSnapshot::from_value(v.get("stats").unwrap()).unwrap();
+        assert_eq!(parsed, snap);
+        assert_eq!(parsed.jobs_finished, 1);
+        assert_eq!(parsed.jobs_failed, 1);
+        assert_eq!(parsed.queue_wait_ms.count, 1);
     }
 
     #[test]

@@ -6,11 +6,11 @@
 //! timings — match byte-for-byte, and the summary CSV round-trips
 //! through the regression engine with a clean pass against itself.
 //!
-//! Since the event-queue rewrite the guarantee is also proven *across
-//! engines*: every run must be bit-identical to the frozen pre-rewrite
-//! min-scan loop ([`gvb::dynsim::reference`]), and the rendered surfaces
-//! must match the committed goldens under `tests/goldens/` byte-for-byte
-//! at both job counts.
+//! Since the event-queue rewrite the rendered surfaces must also match
+//! the committed goldens under `tests/goldens/` byte-for-byte at both
+//! job counts — the goldens were blessed from the pre-rewrite engine's
+//! output, so they carry the old-vs-new equivalence proof (the frozen
+//! in-tree reference engine has been retired in favour of these pins).
 
 use gvb::dynsim::{run_dynamics, DynSpec, DynSurface, ScenarioRun, ScenarioSpec};
 use gvb::metrics::RunConfig;
@@ -27,9 +27,9 @@ fn spec() -> DynSpec {
 }
 
 /// The training-preset grid: same geometry as `spec()`, but over the two
-/// training-bearing presets. Kept out of `spec()` so the frozen
-/// reference-engine equivalence (which predates training) still runs on
-/// exactly the grid it was blessed against.
+/// training-bearing presets. Kept out of `spec()` so the inference-only
+/// goldens (which predate training) keep pinning exactly the grid they
+/// were blessed against.
 fn train_spec() -> DynSpec {
     DynSpec {
         systems: vec!["native".into(), "hami".into()],
@@ -136,31 +136,6 @@ fn dynamics_is_a_pure_function_of_the_seed() {
     );
 }
 
-#[test]
-fn event_core_matches_the_pre_rewrite_reference_engine() {
-    // The hard contract of the event-queue rewrite: at every job count,
-    // every (system, scenario) run of the grid is bit-identical — series
-    // values, summary statistics, occurrence counts, recovery records —
-    // to the frozen pre-rewrite min-scan loop replaying the same task
-    // seed. The reference engine is the executable specification; this
-    // is the old-vs-new equivalence proof.
-    let base = base();
-    let grid = spec();
-    for jobs in [1usize, 8] {
-        let surface = run_dynamics(&base, &grid, jobs);
-        assert_eq!(surface.runs.len(), 4);
-        for run in &surface.runs {
-            let mut cfg = base.clone();
-            cfg.system = run.system.clone();
-            cfg.seed = grid.run_seed(base.seed, &run.system, run.scenario);
-            let sc = ScenarioSpec::preset(run.scenario, grid.duration_ms, grid.window_ms)
-                .expect("grid scenarios are presets");
-            let reference = gvb::dynsim::reference::run_scenario_reference(&cfg, &sc);
-            assert_runs_bit_identical(run, &reference);
-        }
-    }
-}
-
 /// Compare `rendered` against the committed golden `tests/goldens/<name>`.
 /// `GVB_BLESS=1` rewrites the golden; a *missing* golden is written and
 /// loudly noted instead of failing, so the first toolchain-equipped run
@@ -197,8 +172,9 @@ fn rendered_surfaces_match_the_committed_golden() {
     // Byte-level pin of the dynamics CSV surfaces (the goldens were
     // blessed from the pre-rewrite engine's output, so this holds the
     // event core to the old loop's exact bytes), checked at both job
-    // counts — the committed artifact the ISSUE-7 equivalence contract
-    // names, complementing the in-process reference-engine test above.
+    // counts — the committed artifact that carries the ISSUE-7
+    // equivalence contract now that the in-tree reference engine is
+    // retired.
     for jobs in [1usize, 8] {
         let surface = run_dynamics(&base(), &spec(), jobs);
         check_committed_golden("dynamics_series.csv", &render_csv(&surface));

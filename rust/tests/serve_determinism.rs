@@ -11,8 +11,9 @@
 //! `finished`) with the idle-time accounting fields present; a
 //! malformed job yields a *named* `failed` event without poisoning the
 //! shared worker pool; forbidden flags and protocol garbage are refused
-//! at the socket; and shutdown drains accepted jobs, joins every
-//! thread and removes the socket file.
+//! at the socket; the `stats` op answers telemetry counters consistent
+//! with the lifecycle events that produced them; and shutdown drains
+//! accepted jobs, joins every thread and removes the socket file.
 
 use std::path::PathBuf;
 
@@ -240,6 +241,67 @@ fn served_regress_gate_passes_on_its_own_baseline() {
     assert!(report.contains("\"passed\": true"), "{report}");
     assert!(report.contains("\"schema\": \"point\""), "{report}");
     std::fs::remove_file(&bpath).ok();
+}
+
+#[test]
+fn stats_op_tracks_the_job_lifecycle() {
+    let socket = sock("stats");
+    let _daemon = Daemon::start(ServeConfig { socket: socket.clone(), jobs: 2 }).expect("daemon");
+    // A fresh daemon reports its pool size and all-zero counters.
+    let snap = client::stats(&socket).expect("stats");
+    assert_eq!(snap.workers, 2);
+    assert_eq!(snap.queue_depth, 0);
+    assert_eq!(snap.jobs_submitted, 0);
+    assert_eq!(snap.jobs_finished + snap.jobs_failed, 0);
+    assert_eq!(snap.queue_wait_ms.count, 0);
+    // Two jobs that finish, one that fails at schedule time.
+    for job in [RUN_JOB, DYN_JOB] {
+        let out = client::submit_and_wait(&socket, &argv(job), 0, &mut |_| {}).expect("submit");
+        assert!(out.error.is_none(), "{:?}", out.error);
+    }
+    let bad = &["run", "--system", "mps", "--quick"];
+    let out = client::submit_and_wait(&socket, &argv(bad), 0, &mut |_| {}).expect("transport");
+    assert!(out.error.is_some(), "bad system must fail the job");
+    // Counters are consistent with the lifecycle events that fed them.
+    let snap = client::stats(&socket).expect("stats");
+    assert_eq!(snap.jobs_submitted, 3);
+    assert_eq!(snap.jobs_finished, 2);
+    assert_eq!(snap.jobs_failed, 1);
+    assert_eq!(snap.jobs_queued, 0);
+    assert_eq!(snap.jobs_running, 0);
+    assert_eq!(snap.queue_depth, 0);
+    // RUN_JOB executes one OH-009 task per system (4); DYN_JOB one
+    // timeline cell; the failed job never reached the executor.
+    assert_eq!(snap.tasks_completed, 5);
+    // One schedule-time sample per job that left the queue, one
+    // terminal worker-idle sample per job that ended.
+    assert_eq!(snap.queue_wait_ms.count, 3);
+    assert_eq!(snap.scheduler_idle_ms.count, 3);
+    assert_eq!(snap.worker_idle_ms.count, 3);
+    assert_eq!(snap.job_tasks_per_sec.count, 2, "throughput samples come from finished jobs");
+    // The snapshot agrees with the jobs listing the same daemon serves.
+    let rows = client::jobs(&socket).expect("jobs listing");
+    assert_eq!(
+        rows.iter().filter(|r| r.state == "finished").count() as u64,
+        snap.jobs_finished
+    );
+    assert_eq!(
+        rows.iter().filter(|r| r.state == "failed").count() as u64,
+        snap.jobs_failed
+    );
+    // Both client-side renders expose the same numbers.
+    let table = snap.render_table();
+    assert!(table.contains("jobs finished"), "{table}");
+    assert!(table.contains("jobs submitted         3"), "{table}");
+    let prom = snap.render_prometheus();
+    assert!(prom.contains("gvbench_jobs{state=\"finished\"} 2\n"), "{prom}");
+    assert!(prom.contains("gvbench_jobs_submitted_total 3\n"), "{prom}");
+    assert!(prom.contains("gvbench_workers 2\n"), "{prom}");
+    assert!(
+        prom.contains("gvbench_queue_wait_ms_bucket{le=\"+Inf\"} 3\n"),
+        "cumulative buckets must end at +Inf == _count: {prom}"
+    );
+    assert!(prom.contains("gvbench_queue_wait_ms_count 3\n"), "{prom}");
 }
 
 #[test]
